@@ -1,0 +1,75 @@
+//! Figure 2 reproduction: TTFT (prefill) and generation throughput on
+//! "edge" hardware across precisions {FP16/32, 4-bit, 2-bit}.
+//!
+//! The paper measures Apple M4 / Dimensity 9500 GGUF inference; we measure
+//! the packed-GEMM hot path on the host CPU in the same memory-bandwidth-
+//! bound regime (see DESIGN.md §Hardware-Adaptation). Expected shape:
+//! lower bits => higher decode throughput and lower TTFT, super-linear in
+//! the bandwidth-bound regime.
+
+use angelslim::quant::packing::{gemv_f32, PackFormat, Packed2Bit, PackedInt4};
+use angelslim::quant::{AffineQuantizer, Seq2Quantizer};
+use angelslim::util::table::{f1, f2, Table};
+use angelslim::util::{bench, Rng};
+
+fn main() {
+    // a decode step = GEMV through a d x 4d FFN-ish matrix; prefill(T) =
+    // T GEMVs (no KV-cache reuse in this microcosm)
+    let (n, k) = (2048, 512);
+    let mut rng = Rng::new(0);
+    let w: Vec<f32> = rng.normal_vec(n * k, 0.05);
+    let x: Vec<f32> = rng.normal_vec(k, 1.0);
+    let mut y = vec![0.0f32; n];
+
+    let q4 = AffineQuantizer::int4_group32();
+    let (codes4, scales4) = q4.quantize_codes(&w, n, k);
+    let packed4 = PackedInt4::from_codes(&codes4, &scales4, n, k, 32);
+
+    let q2 = Seq2Quantizer::new(32);
+    let (codes2, _scales2) = q2.quantize_codes(&w, n, k);
+    // 2-bit decode path: ternary-style expansion with per-row alpha
+    let alphas = vec![0.05f32; n];
+    let packed2 = Packed2Bit::from_codes(&codes2, &alphas, n, k);
+
+    let iters = 40;
+    let r_f32 = bench("f32", 3, iters, || gemv_f32(&w, n, k, &x, &mut y));
+    let r_i4_base = bench("int4-base", 3, iters, || packed4.gemv(&x, &mut y));
+    let mut lut4 = Vec::new();
+    let r_i4 = bench("int4-lut", 3, iters, || packed4.gemv_lut(&x, &mut y, &mut lut4));
+    let r_2b_base = bench("2bit-base", 3, iters, || packed2.gemv(&x, &mut y));
+    let mut lut = Vec::new();
+    let r_2b = bench("2bit-lut", 3, iters, || packed2.gemv_lut(&x, &mut y, &mut lut));
+    println!(
+        "perf: 2-bit inline-unpack {:.1}/s -> T-MAC LUT {:.1}/s ({:.2}x); \
+         int4 {:.1}/s -> {:.1}/s ({:.2}x)",
+        r_2b_base.per_sec(), r_2b.per_sec(), r_2b.per_sec() / r_2b_base.per_sec(),
+        r_i4_base.per_sec(), r_i4.per_sec(), r_i4.per_sec() / r_i4_base.per_sec()
+    );
+
+    let mut t = Table::new(
+        "Figure 2 analogue: decode throughput + prefill TTFT by precision",
+        &["precision", "bytes/layer", "decode t/s", "speedup", "TTFT@256 ms", "TTFT@512 ms", "TTFT@1024 ms"],
+    );
+    let base_tps = r_f32.per_sec();
+    for (name, fmt, r) in [
+        ("FP16/32", PackFormat::F32, &r_f32),
+        ("4-bit (Q4)", PackFormat::Int4, &r_i4),
+        ("2-bit (SEQ)", PackFormat::TwoBit, &r_2b),
+    ] {
+        let step = r.median_s;
+        t.row_strs(&[
+            name,
+            &fmt.matrix_bytes(n, k).to_string(),
+            &f1(r.per_sec()),
+            &format!("{:.2}x", r.per_sec() / base_tps),
+            &f2(step * 256.0 * 1e3),
+            &f2(step * 512.0 * 1e3),
+            &f2(step * 1024.0 * 1e3),
+        ]);
+    }
+    t.print();
+    println!(
+        "paper shape: 2-bit gives 3-8x TTFT gain and >2x decode over FP16; \
+         4-bit sits between."
+    );
+}

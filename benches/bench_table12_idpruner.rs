@@ -1,0 +1,61 @@
+//! Table 12 reproduction: visual token pruning — IDPruner vs 8 baselines
+//! at 25% and 10% retention on the VQA-proxy scenes.
+//!
+//! Expected shape: IDPruner best (or tied-best) average at both ratios;
+//! importance-only (FastV) and diversity-only (DivPrune) both trail the
+//! importance+diversity hybrid — the paper's MMR argument.
+
+use angelslim::data::VisionSceneGen;
+use angelslim::eval::{eval_pruner_accuracy, vqa::baseline_accuracy};
+use angelslim::token_prune::visual::all_visual_pruners;
+use angelslim::util::table::{pct, Table};
+
+fn main() {
+    // three "benchmarks" = scene generators with different stats
+    let gens = [
+        ("docvqa-s", VisionSceneGen::new(96, 24, 6, 1)),
+        ("mme-s", VisionSceneGen::new(144, 32, 8, 2)),
+        ("textvqa-s", VisionSceneGen::new(96, 16, 4, 3)),
+    ];
+    let n = 50;
+
+    let mut base_row = vec!["Baseline (100%)".to_string()];
+    for (_, gen) in &gens {
+        let b = baseline_accuracy(gen, n);
+        base_row.push(pct(b));
+        base_row.push(pct(b));
+    }
+    base_row.push("100.0%".into());
+
+    let headers: Vec<String> = std::iter::once("method".to_string())
+        .chain(gens.iter().flat_map(|(name, _)| {
+            [format!("{name}@25%"), format!("{name}@10%")]
+        }))
+        .chain(["avg".to_string()])
+        .collect();
+    let hrefs: Vec<&str> = headers.iter().map(String::as_str).collect();
+    let mut t = Table::new("Table 12 analogue: visual token pruning", &hrefs);
+    t.row(&base_row);
+
+    let mut results: Vec<(String, f64)> = Vec::new();
+    for p in all_visual_pruners() {
+        let mut row = vec![p.name().to_string()];
+        let mut sum = 0.0;
+        for (_, gen) in &gens {
+            let a25 = eval_pruner_accuracy(gen, p.as_ref(), 0.25, n);
+            let a10 = eval_pruner_accuracy(gen, p.as_ref(), 0.10, n);
+            row.push(pct(a25));
+            row.push(pct(a10));
+            sum += a25 + a10;
+        }
+        let avg = sum / (gens.len() * 2) as f64;
+        row.push(pct(avg));
+        results.push((p.name().to_string(), avg));
+        t.row(&row);
+    }
+    t.print();
+
+    results.sort_by(|a, b| b.1.total_cmp(&a.1));
+    println!("ranking by avg: {:?}", results.iter().map(|(n, a)| format!("{n}={a:.3}")).collect::<Vec<_>>());
+    println!("paper shape: IDPruner top-ranked, importance-only and diversity-only both behind.");
+}

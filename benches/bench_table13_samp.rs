@@ -1,0 +1,50 @@
+//! Table 13 reproduction: audio token reduction WER — Samp vs merging /
+//! pruning / hybrid baselines on three ASR model profiles.
+//!
+//! Expected shape: Samp lowest WER at both compression ratios; pure
+//! pruning (VisionZip/VisPruner on audio) worst — dropping frames deletes
+//! phonemes; merge-aware methods (A-ToMe, FastAdaSP) in between.
+
+use angelslim::data::AudioSceneGen;
+use angelslim::eval::{asr::baseline_wer, eval_wer};
+use angelslim::token_prune::audio::all_audio_reducers;
+use angelslim::util::table::{f2, Table};
+
+fn main() {
+    // three model rows of Table 13 = three noise/segment profiles
+    let profiles = [
+        ("qwen2audio-s", AudioSceneGen::new(16, 40, 0.3, 1)),
+        ("kimiaudio-s", AudioSceneGen::new(16, 48, 0.25, 2)),
+        ("glmasr-s", AudioSceneGen::new(12, 40, 0.35, 3)),
+    ];
+    let scenes = 20;
+    let frames = 150;
+
+    for (name, gen) in &profiles {
+        let base = baseline_wer(gen, scenes, frames);
+        let mut t = Table::new(
+            &format!("Table 13 analogue [{name}]: WER% (full-token baseline {:.2})", base),
+            &["method", "retain 30%", "retain 45%"],
+        );
+        let mut best = ("", f64::INFINITY);
+        let mut rows = Vec::new();
+        for r in all_audio_reducers() {
+            let w60 = eval_wer(gen, r.as_ref(), 0.3, scenes, frames);
+            let w70 = eval_wer(gen, r.as_ref(), 0.45, scenes, frames);
+            let avg = (w60 + w70) / 2.0;
+            rows.push((r.name(), w60, w70));
+            if avg < best.1 {
+                best = (r.name(), avg);
+            }
+        }
+        for (name, w60, w70) in rows {
+            t.row_strs(&[name, &f2(w60), &f2(w70)]);
+        }
+        t.print();
+        println!("  best avg on {name}: {} ({:.2})", best.0, best.1);
+    }
+    println!(
+        "paper shape: Samp lowest WER across profiles; pure pruning worst \
+         (deletes phonemes), pure merging in between."
+    );
+}

@@ -1,0 +1,63 @@
+//! Tables 4-6 reproduction: FP8 degradation and LeptoQuant recovery, plus
+//! the W4A8 near-lossless row, on the trained Rust transformer.
+//!
+//! Expected shape: BF16 < FP8-lepto <= FP8 (NLL; lower better), with
+//! lepto recovering part of the fp8 drop; W4A8 near-lossless.
+
+use angelslim::config::SlimConfig;
+use angelslim::coordinator::CompressEngine;
+use angelslim::util::table::{f2, Table};
+
+fn run(algo: &str) -> angelslim::coordinator::CompressReport {
+    let src = format!(
+        "global:\n  save_path: ./output/t456\nmodel:\n  name: tiny-target\n  artifacts_dir: artifacts\n\
+         compression:\n  method: quantization\n  quantization:\n    algo: {algo}\n\
+         dataset:\n  kind: artifact\n  num_samples: 10\n  seq_len: 48\n"
+    );
+    CompressEngine::new(SlimConfig::from_str(&src).unwrap())
+        .unwrap()
+        .run()
+        .unwrap()
+}
+
+fn main() {
+    let mut t = Table::new(
+        "Tables 4-6 analogue: FP8 / LeptoQuant / W4A8 (NLL, lower better)",
+        &["type", "NLL", "delta vs BF16", "notes"],
+    );
+    let fp8 = run("fp8_dynamic");
+    let base = fp8.metric_before;
+    t.row_strs(&["BF16 (fp32 here)", &f2(base), "+0.00", ""]);
+    t.row_strs(&[
+        "FP8",
+        &f2(fp8.metric_after),
+        &format!("{:+.3}", fp8.metric_after - base),
+        "",
+    ]);
+    let lepto = run("leptoquant");
+    let alpha_notes: Vec<&str> = lepto
+        .notes
+        .iter()
+        .filter(|n| n.contains("alpha"))
+        .map(String::as_str)
+        .take(2)
+        .collect();
+    t.row_strs(&[
+        "FP8-lepto",
+        &f2(lepto.metric_after),
+        &format!("{:+.3}", lepto.metric_after - base),
+        &alpha_notes.join("; "),
+    ]);
+    let w4a8 = run("w4a8");
+    t.row_strs(&[
+        "W4A8",
+        &f2(w4a8.metric_after),
+        &format!("{:+.3}", w4a8.metric_after - base),
+        "group-wise int4 weights",
+    ]);
+    t.print();
+    println!(
+        "paper shape: FP8 costs accuracy on hard streams; LeptoQuant's \
+         outlier-isolated scales recover part of it; W4A8 near-lossless."
+    );
+}

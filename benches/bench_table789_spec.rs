@@ -1,0 +1,79 @@
+//! Tables 7-9 reproduction: Eagle3-style speculative decoding TPS / AL
+//! across task mixes and speculative depths, on the PJRT artifacts.
+//!
+//! Expected shape: TPS_spec / TPS_vanilla ≈ 1.4-2.0x, AL in 1.7-3.5, with
+//! task-dependent variation (predictable spans accept more).
+
+use angelslim::runtime::ArtifactRegistry;
+use angelslim::spec_decode::{SpecDecoder, VanillaDecoder};
+use angelslim::util::table::{f2, Table};
+use angelslim::util::Rng;
+
+fn main() {
+    let mut reg = ArtifactRegistry::open("artifacts").expect("run `make artifacts`");
+    let target = reg.model("model_target_fp32_b1").unwrap();
+    let draft = reg.model("model_draft_fp32_b1").unwrap();
+    let eval = std::fs::read("artifacts/eval_corpus.bin").unwrap();
+
+    // four "task mixes" = prompt pools from different corpus regions
+    let mixes = [
+        ("mix-A (gsm8k-like)", 0usize),
+        ("mix-B (alpaca-like)", 8000),
+        ("mix-C (humaneval-like)", 16000),
+        ("mix-D (mtbench-like)", 24000),
+    ];
+    let n_prompts = 6;
+    let max_new = 40;
+
+    let mut t = Table::new(
+        "Tables 7-9 analogue: Eagle3 speculative decoding on vLLM-style loop",
+        &["task mix", "gamma", "vanilla TPS", "eagle3 TPS", "speedup", "AL", "accept%"],
+    );
+
+    for (label, off) in mixes {
+        for gamma in [2usize, 4] {
+            let mut rng = Rng::new(1);
+            let mut v_tok = 0usize;
+            let mut v_time = 0.0;
+            let mut s_tok = 0usize;
+            let mut s_time = 0.0;
+            let mut steps = 0usize;
+            let mut accepted = 0usize;
+            let mut proposed = 0usize;
+            for p in 0..n_prompts {
+                let start = off + p * 97;
+                let prompt = &eval[start..start + 12];
+                let (vout, vs) = VanillaDecoder::new(&target)
+                    .generate(prompt, max_new, &mut rng)
+                    .unwrap();
+                v_tok += vs.generated;
+                v_time += vs.wall_s;
+                let (sout, ss) = SpecDecoder::new(&draft, &target, gamma)
+                    .generate(prompt, max_new, &mut rng)
+                    .unwrap();
+                assert_eq!(vout, sout, "spec decode must preserve outputs");
+                s_tok += ss.generated;
+                s_time += ss.wall_s;
+                steps += ss.steps;
+                accepted += ss.accepted_draft;
+                proposed += ss.proposed;
+            }
+            let v_tps = v_tok as f64 / v_time;
+            let s_tps = s_tok as f64 / s_time;
+            t.row_strs(&[
+                label,
+                &gamma.to_string(),
+                &f2(v_tps),
+                &f2(s_tps),
+                &format!("{:.2}x", s_tps / v_tps),
+                &f2(s_tok as f64 / steps as f64),
+                &format!("{:.0}%", 100.0 * accepted as f64 / proposed as f64),
+            ]);
+        }
+    }
+    t.print();
+    println!(
+        "paper shape: consistent TPS gain with AL ~2 (gamma=2) to ~3 \
+         (gamma=4) on predictable mixes; outputs bit-identical to vanilla."
+    );
+}

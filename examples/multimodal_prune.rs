@@ -1,0 +1,45 @@
+//! Multimodal token reduction: the visual pruner sweep (IDPruner + 8
+//! baselines) on synthetic scenes and the audio reducer sweep (Samp + 5
+//! baselines) on synthetic speech streams — the paper's §4.2 framework.
+//!
+//!     cargo run --release --example multimodal_prune
+
+use angelslim::data::{AudioSceneGen, VisionSceneGen};
+use angelslim::eval::{asr, eval_pruner_accuracy, eval_wer, vqa};
+use angelslim::token_prune::{audio::all_audio_reducers, visual::all_visual_pruners};
+use angelslim::util::table::{f2, pct, Table};
+
+fn main() -> anyhow::Result<()> {
+    // visual
+    let gen = VisionSceneGen::new(96, 24, 6, 0);
+    let n = 60;
+    let base = vqa::baseline_accuracy(&gen, n);
+    let mut t = Table::new(
+        &format!("visual pruning (baseline accuracy {})", pct(base)),
+        &["method", "retain 25%", "retain 10%"],
+    );
+    for p in all_visual_pruners() {
+        let a25 = eval_pruner_accuracy(&gen, p.as_ref(), 0.25, n);
+        let a10 = eval_pruner_accuracy(&gen, p.as_ref(), 0.10, n);
+        t.row_strs(&[p.name(), &pct(a25), &pct(a10)]);
+    }
+    t.print();
+
+    // audio
+    let agen = AudioSceneGen::new(16, 40, 0.3, 0);
+    let scenes = 20;
+    let frames = 150;
+    let base_wer = asr::baseline_wer(&agen, scenes, frames);
+    let mut t = Table::new(
+        &format!("audio reduction WER%% (full-token baseline {:.2})", base_wer),
+        &["method", "retain 40%", "retain 55%"],
+    );
+    for r in all_audio_reducers() {
+        let w60 = eval_wer(&agen, r.as_ref(), 0.4, scenes, frames);
+        let w70 = eval_wer(&agen, r.as_ref(), 0.55, scenes, frames);
+        t.row_strs(&[r.name(), &f2(w60), &f2(w70)]);
+    }
+    t.print();
+    println!("multimodal_prune OK");
+    Ok(())
+}

@@ -1,0 +1,46 @@
+//! Quickstart: the paper's "one-click" flow — parse a YAML config, run the
+//! Compress Engine, read the report.
+//!
+//!     cargo run --release --example quickstart
+//!
+//! Requires `make artifacts` (builds the AOT models + weights).
+
+use angelslim::config::SlimConfig;
+use angelslim::coordinator::CompressEngine;
+
+const CONFIG: &str = r#"
+global:
+  save_path: ./output/quickstart
+  seed: 0
+model:
+  name: tiny-target
+  artifacts_dir: artifacts
+compression:
+  method: quantization
+  quantization:
+    algo: int4
+    bits: 4
+    group_size: 32
+dataset:
+  kind: artifact
+  num_samples: 8
+  seq_len: 48
+"#;
+
+fn main() -> anyhow::Result<()> {
+    let cfg = SlimConfig::from_str(CONFIG)?;
+    println!(
+        "job: {} / {} on model {}",
+        cfg.compression.method, cfg.compression.algo, cfg.model.name
+    );
+    let report = CompressEngine::new(cfg)?.run()?;
+    println!(
+        "NLL before {:.4} -> after {:.4} at {:.2} effective bits/weight",
+        report.metric_before, report.metric_after, report.compression
+    );
+    for note in &report.notes {
+        println!("note: {note}");
+    }
+    println!("quickstart OK");
+    Ok(())
+}

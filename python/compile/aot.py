@@ -1,0 +1,201 @@
+"""AOT entry point: train models, lower everything to HLO text artifacts.
+
+Run once via `make artifacts` (no-op afterwards thanks to the Makefile
+stamp).  Python is build-time only; the Rust coordinator loads these
+artifacts through PJRT and never calls back into Python.
+
+Interchange format is HLO *text*, not serialized HloModuleProto: jax >= 0.5
+emits protos with 64-bit instruction ids which xla_extension 0.5.1 rejects
+(`proto.id() <= INT_MAX`); the text parser reassigns ids and round-trips
+cleanly (see /opt/xla-example/README.md).
+
+Outputs (under artifacts/):
+  model_target_<mode>_b<B>.hlo.txt  tokens i32[B,64] -> (logits f32[B,64,256],)
+  model_draft_fp32_b<B>.hlo.txt     same signature, draft-sized
+  kernel_<int4|seq2|ternary|fp8>.hlo.txt  x f32[64,128] -> (y f32[64,128],)
+  sparse_attn.hlo.txt               q,k,v f32[128,4,32] + mask f32[8,8] -> out
+  weights.bin / meta.json           flat f32 LE params + layout contract
+  eval_corpus.bin / train_corpus.bin  synthetic byte streams for Rust eval
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import model as M
+from . import train as T
+from .kernels import quant_matmul as QK
+from .kernels import ref
+from .kernels import sparse_attn as SA
+
+SEQ_T = 64
+ATTN_T = 128
+ATTN_BLOCK = 16
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    # print_large_constants=True: the default HLO printer elides big literals
+    # as `constant({...})`, which the text parser on the Rust side cannot
+    # reconstruct — baked weights would be silently lost.
+    return comp.as_hlo_text(True)
+
+
+def dump(fn, example_args, path):
+    lowered = jax.jit(fn).lower(*example_args)
+    text = to_hlo_text(lowered)
+    with open(path, "w") as f:
+        f.write(text)
+    print(f"  wrote {path} ({len(text)} chars)")
+
+
+def export_model(params, cfg, mode, batch, out_dir, name):
+    qp = M.quantize_params(params, mode)
+
+    def fn(tokens):
+        return (M.forward(qp, tokens, cfg),)
+
+    spec = jax.ShapeDtypeStruct((batch, SEQ_T), jnp.int32)
+    dump(fn, (spec,), os.path.join(out_dir, f"{name}_b{batch}.hlo.txt"))
+
+
+def export_kernels(params, out_dir):
+    """Standalone Pallas-kernel artifacts with baked packed weights.
+
+    Uses target layer-0 wq (128x128) so the codes come from a *real* trained
+    weight distribution, not random data.
+    """
+    w = np.asarray(params["layer0.wq"])
+    x_spec = jax.ShapeDtypeStruct((64, w.shape[1]), jnp.float32)
+
+    codes, scales = ref.quantize_int4(w)
+    packed = jnp.asarray(ref.pack_nibbles(codes))
+    sc = jnp.asarray(scales)
+    dump(lambda x: (QK.int4_matmul(x, packed, sc),), (x_spec,),
+         os.path.join(out_dir, "kernel_int4.hlo.txt"))
+
+    codes, scales = ref.quantize_seq2(w)
+    packed2 = jnp.asarray(ref.pack_crumbs(codes))
+    sc2 = jnp.asarray(scales)
+    dump(lambda x: (QK.seq2_matmul(x, packed2, sc2),), (x_spec,),
+         os.path.join(out_dir, "kernel_seq2.hlo.txt"))
+
+    codes, alpha = ref.quantize_ternary(w)
+    packed3 = jnp.asarray(ref.pack_crumbs(codes))
+    al = jnp.asarray(alpha)
+    dump(lambda x: (QK.ternary_matmul(x, packed3, al),), (x_spec,),
+         os.path.join(out_dir, "kernel_ternary.hlo.txt"))
+
+    wj = jnp.asarray(w)
+    dump(lambda x: (QK.fp8_matmul(x, wj),), (x_spec,),
+         os.path.join(out_dir, "kernel_fp8.hlo.txt"))
+
+
+def export_sparse_attn(out_dir):
+    h, d = 4, 32
+    nb = ATTN_T // ATTN_BLOCK
+    qs = jax.ShapeDtypeStruct((ATTN_T, h, d), jnp.float32)
+    ms = jax.ShapeDtypeStruct((nb, nb), jnp.float32)
+
+    def fn(q, k, v, mask):
+        return (SA.block_sparse_attn(q, k, v, mask, block=ATTN_BLOCK),)
+
+    dump(fn, (qs, qs, qs, ms), os.path.join(out_dir, "sparse_attn.hlo.txt"))
+
+
+def export_weights(target_params, draft_params, out_dir):
+    blobs = []
+    layout = []
+    offset = 0
+    for model_name, params, cfg in [
+        ("target", target_params, M.TARGET_CFG),
+        ("draft", draft_params, M.DRAFT_CFG),
+    ]:
+        for name, shape in M.param_spec(cfg):
+            arr = np.asarray(params[name], dtype=np.float32)
+            assert arr.shape == tuple(shape), (name, arr.shape, shape)
+            blobs.append(arr.tobytes())
+            layout.append(
+                {"model": model_name, "name": name, "shape": list(shape),
+                 "offset": offset, "len": int(arr.size)}
+            )
+            offset += arr.size
+    with open(os.path.join(out_dir, "weights.bin"), "wb") as f:
+        for b in blobs:
+            f.write(b)
+    meta = {
+        "seq_t": SEQ_T,
+        "attn_t": ATTN_T,
+        "attn_block": ATTN_BLOCK,
+        "target": M.TARGET_CFG.__dict__,
+        "draft": M.DRAFT_CFG.__dict__,
+        "layout": layout,
+    }
+    with open(os.path.join(out_dir, "meta.json"), "w") as f:
+        json.dump(meta, f, indent=1)
+    print(f"  wrote weights.bin ({offset * 4} bytes) + meta.json")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--steps", type=int, default=400)
+    args = ap.parse_args()
+    os.makedirs(args.out, exist_ok=True)
+
+    print("[1/6] corpus")
+    train_corpus = T.make_corpus(200_000, seed=42)
+    eval_corpus = T.make_corpus(32_768, seed=777)  # held-out stream
+    train_corpus[: 65536].tofile(os.path.join(args.out, "train_corpus.bin"))
+    eval_corpus.tofile(os.path.join(args.out, "eval_corpus.bin"))
+
+    print("[2/6] train target")
+    target_params, _ = T.train_target(train_corpus, steps=args.steps)
+
+    print("[3/6] distill draft (Eagle3-style alignment) + SEQ QAT + small dense")
+    draft_params, _ = T.distill_draft(target_params, train_corpus,
+                                      steps=args.steps)
+    # 2-bit QAT from the tuned target init (paper §2.1.2) — exported as the
+    # HY-1.8B-2Bit analogue; plain PTQ-seq2 is exported too to show collapse.
+    qat_params, _ = T.qat_seq2(target_params, train_corpus,
+                               steps=args.steps // 2)
+    # small dense model trained from scratch = the HY-0.5B baseline analogue
+    small_params, _ = T.train_target(train_corpus, cfg=M.DRAFT_CFG,
+                                     steps=args.steps, seed=3)
+
+    print("[4/6] export model artifacts")
+    for mode in M.QUANT_MODES:
+        export_model(target_params, M.TARGET_CFG, mode, 1, args.out,
+                     f"model_target_{mode}")
+    export_model(qat_params, M.TARGET_CFG, "seq2", 1, args.out,
+                 "model_target_seq2qat")
+    export_model(small_params, M.DRAFT_CFG, "fp32", 1, args.out,
+                 "model_small_fp32")
+    export_model(target_params, M.TARGET_CFG, "fp32", 8, args.out,
+                 "model_target_fp32")
+    export_model(draft_params, M.DRAFT_CFG, "fp32", 1, args.out,
+                 "model_draft_fp32")
+    export_model(draft_params, M.DRAFT_CFG, "fp32", 8, args.out,
+                 "model_draft_fp32")
+
+    print("[5/6] export kernel + sparse-attention artifacts")
+    export_kernels(target_params, args.out)
+    export_sparse_attn(args.out)
+
+    print("[6/6] export weights.bin / meta.json")
+    export_weights(target_params, draft_params, args.out)
+    print("AOT done.")
+
+
+if __name__ == "__main__":
+    main()

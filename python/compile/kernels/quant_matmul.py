@@ -1,0 +1,188 @@
+"""Layer-1 Pallas kernels: quantized-weight matmuls.
+
+Each kernel consumes *packed* integer codes plus scales and expands them to
+float tiles inside the kernel (VMEM-resident on real hardware), so HBM
+traffic is proportional to the compressed weight size — the paper's
+bandwidth argument for 2-bit / ternary edge inference (§2.1.3, Table 3),
+re-thought for the TPU memory hierarchy (see DESIGN.md §Hardware-Adaptation).
+
+All kernels are lowered with interpret=True: the CPU PJRT plugin cannot run
+Mosaic custom-calls, and correctness is validated against kernels/ref.py.
+
+Tiling: grid over (M/bm, N/bn); the reduction axis K is kept whole per tile
+(K <= 512 for every model in this repo, so a [bm, K] activation tile plus a
+[bn, K/pack] code tile plus the [bm, bn] output tile fit comfortably in the
+~16 MiB VMEM budget of a TPU core — the footprint estimate lives in
+EXPERIMENTS.md §Perf).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import ref
+
+DEFAULT_BM = 32
+DEFAULT_BN = 32
+
+
+def _expand_scales(scales, group):
+    """[bn, K/group] -> [bn, K] by repeating each group scale."""
+    return jnp.repeat(scales, group, axis=1)
+
+
+# --------------------------------------------------------------------------
+# int4 group-wise dequant matmul
+# --------------------------------------------------------------------------
+
+
+def _int4_kernel(x_ref, packed_ref, scales_ref, o_ref, *, group):
+    x = x_ref[...]  # [bm, K] f32
+    packed = packed_ref[...]  # [bn, K//2] u8
+    scales = scales_ref[...]  # [bn, K//group] f32
+    lo = (packed & 0xF).astype(jnp.float32)
+    hi = ((packed >> 4) & 0xF).astype(jnp.float32)
+    codes = jnp.stack([lo, hi], axis=-1).reshape(packed.shape[0], -1)
+    w = (codes - 8.0) * _expand_scales(scales, group)  # [bn, K]
+    o_ref[...] = jax.lax.dot_general(
+        x, w, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    )
+
+
+def int4_matmul(x, packed, scales, *, group=32, bm=DEFAULT_BM, bn=DEFAULT_BN):
+    """x [M, K] f32 @ dequant(packed [N, K//2] u8, scales [N, K//group]).T."""
+    m, k = x.shape
+    n = packed.shape[0]
+    assert m % bm == 0 and n % bn == 0, (m, n, bm, bn)
+    return pl.pallas_call(
+        functools.partial(_int4_kernel, group=group),
+        grid=(m // bm, n // bn),
+        in_specs=[
+            pl.BlockSpec((bm, k), lambda i, j: (i, 0)),
+            pl.BlockSpec((bn, k // 2), lambda i, j: (j, 0)),
+            pl.BlockSpec((bn, k // group), lambda i, j: (j, 0)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        interpret=True,
+    )(x, packed, scales)
+
+
+# --------------------------------------------------------------------------
+# SEQ 2-bit dequant matmul — levels {-1.5, -0.5, +0.5, +1.5} * scale
+# --------------------------------------------------------------------------
+
+
+def _seq2_kernel(x_ref, packed_ref, scales_ref, o_ref, *, group):
+    x = x_ref[...]
+    packed = packed_ref[...]  # [bn, K//4] u8
+    scales = scales_ref[...]
+    parts = [((packed >> (2 * i)) & 0x3).astype(jnp.float32) for i in range(4)]
+    codes = jnp.stack(parts, axis=-1).reshape(packed.shape[0], -1)  # [bn, K]
+    levels = (2.0 * codes - 3.0) * 0.5
+    w = levels * _expand_scales(scales, group)
+    o_ref[...] = jax.lax.dot_general(
+        x, w, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    )
+
+
+def seq2_matmul(x, packed, scales, *, group=32, bm=DEFAULT_BM, bn=DEFAULT_BN):
+    """SEQ 2-bit matmul: x [M, K] @ dequant(packed [N, K//4]).T."""
+    m, k = x.shape
+    n = packed.shape[0]
+    assert m % bm == 0 and n % bn == 0
+    return pl.pallas_call(
+        functools.partial(_seq2_kernel, group=group),
+        grid=(m // bm, n // bn),
+        in_specs=[
+            pl.BlockSpec((bm, k), lambda i, j: (i, 0)),
+            pl.BlockSpec((bn, k // 4), lambda i, j: (j, 0)),
+            pl.BlockSpec((bn, k // group), lambda i, j: (j, 0)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        interpret=True,
+    )(x, packed, scales)
+
+
+# --------------------------------------------------------------------------
+# ternary dequant matmul — codes {0,1,2} -> {-1,0,+1} * alpha[out]
+# --------------------------------------------------------------------------
+
+
+def _ternary_kernel(x_ref, packed_ref, alpha_ref, o_ref):
+    x = x_ref[...]
+    packed = packed_ref[...]  # [bn, K//4] u8
+    alpha = alpha_ref[...]  # [bn] f32
+    parts = [((packed >> (2 * i)) & 0x3).astype(jnp.float32) for i in range(4)]
+    codes = jnp.stack(parts, axis=-1).reshape(packed.shape[0], -1)
+    w = (codes - 1.0) * alpha[:, None]
+    o_ref[...] = jax.lax.dot_general(
+        x, w, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    )
+
+
+def ternary_matmul(x, packed, alpha, *, bm=DEFAULT_BM, bn=DEFAULT_BN):
+    """Ternary matmul: x [M, K] @ ((codes-1) * alpha[:, None]).T."""
+    m, k = x.shape
+    n = packed.shape[0]
+    assert m % bm == 0 and n % bn == 0
+    return pl.pallas_call(
+        _ternary_kernel,
+        grid=(m // bm, n // bn),
+        in_specs=[
+            pl.BlockSpec((bm, k), lambda i, j: (i, 0)),
+            pl.BlockSpec((bn, k // 4), lambda i, j: (j, 0)),
+            pl.BlockSpec((bn,), lambda i, j: (j,)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        interpret=True,
+    )(x, packed, alpha)
+
+
+# --------------------------------------------------------------------------
+# fp8 QDQ matmul — per-tensor dynamic scales (W8A8-FP8 Dynamic, §2.3.1)
+# --------------------------------------------------------------------------
+
+
+def _fp8_kernel(x_ref, w_ref, xs_ref, ws_ref, o_ref):
+    # Scales are computed over the *whole tensor* outside the kernel (the
+    # dynamic-quantization step); the kernel does the QDQ + matmul.
+    x = x_ref[...]
+    w = w_ref[...]
+    xs = xs_ref[0]
+    ws = ws_ref[0]
+    xq = (x / xs).astype(jnp.float8_e4m3fn).astype(jnp.float32) * xs
+    wq = (w / ws).astype(jnp.float8_e4m3fn).astype(jnp.float32) * ws
+    o_ref[...] = jax.lax.dot_general(
+        xq, wq, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    )
+
+
+def fp8_matmul(x, w, *, bm=DEFAULT_BM, bn=DEFAULT_BN):
+    """W8A8-FP8 dynamic QDQ matmul: x [M, K] @ w [N, K].T."""
+    m, k = x.shape
+    n = w.shape[0]
+    assert m % bm == 0 and n % bn == 0
+    xs = jnp.maximum(jnp.max(jnp.abs(x)), 1e-12) / ref.FP8_E4M3_MAX
+    ws = jnp.maximum(jnp.max(jnp.abs(w)), 1e-12) / ref.FP8_E4M3_MAX
+    xs = xs.reshape(1)
+    ws = ws.reshape(1)
+    return pl.pallas_call(
+        _fp8_kernel,
+        grid=(m // bm, n // bn),
+        in_specs=[
+            pl.BlockSpec((bm, k), lambda i, j: (i, 0)),
+            pl.BlockSpec((bn, k), lambda i, j: (j, 0)),
+            pl.BlockSpec((1,), lambda i, j: (0,)),
+            pl.BlockSpec((1,), lambda i, j: (0,)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        interpret=True,
+    )(x, w, xs, ws)

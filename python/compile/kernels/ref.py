@@ -1,0 +1,194 @@
+"""Pure-jnp reference oracles for every Pallas kernel in this package.
+
+These are the CORE correctness signal: python/tests compares each Pallas
+kernel (interpret=True) against these functions with assert_allclose across
+a hypothesis-driven sweep of shapes and dtypes.
+
+Quantized-weight layout conventions (shared with the Rust side, see
+rust/src/quant/packing.rs):
+
+* int4 group-wise: codes in [0, 15], zero-point 8, scale per (out_channel,
+  group) with group size G along the reduction axis.  Packed two codes per
+  uint8: low nibble = even index, high nibble = odd index.
+* SEQ 2-bit   : codes in [0, 3] mapping to symmetric levels
+  {-1.5, -0.5, +0.5, +1.5} = (2*code - 3) / 2, scale per (out_channel, group).
+  Packed four codes per uint8, little-endian 2-bit fields.
+* ternary     : codes in {0, 1, 2} mapping to {-1, 0, +1} = code - 1,
+  per-out-channel scale alpha.  Packed four 2-bit fields per uint8 (the
+  1.58-bit entropy packing lives on the Rust side; HLO interchange uses the
+  SIMD-friendly 2-bit fields).
+* fp8 QDQ     : weights and activations round-tripped through float8_e4m3fn
+  with a per-tensor scale (absmax / 448).
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+# --------------------------------------------------------------------------
+# packing helpers (numpy, build-time only)
+# --------------------------------------------------------------------------
+
+
+def pack_nibbles(codes: np.ndarray) -> np.ndarray:
+    """Pack int4 codes [N, K] (values 0..15) into uint8 [N, K//2]."""
+    assert codes.shape[-1] % 2 == 0
+    lo = codes[..., 0::2].astype(np.uint8)
+    hi = codes[..., 1::2].astype(np.uint8)
+    return (lo | (hi << 4)).astype(np.uint8)
+
+
+def unpack_nibbles(packed: jnp.ndarray) -> jnp.ndarray:
+    """Inverse of pack_nibbles, jnp: uint8 [N, K//2] -> int32 [N, K]."""
+    lo = (packed & 0xF).astype(jnp.int32)
+    hi = ((packed >> 4) & 0xF).astype(jnp.int32)
+    return jnp.stack([lo, hi], axis=-1).reshape(*packed.shape[:-1], -1)
+
+
+def pack_crumbs(codes: np.ndarray) -> np.ndarray:
+    """Pack 2-bit codes [N, K] (values 0..3) into uint8 [N, K//4]."""
+    assert codes.shape[-1] % 4 == 0
+    c = codes.reshape(*codes.shape[:-1], -1, 4).astype(np.uint8)
+    return (c[..., 0] | (c[..., 1] << 2) | (c[..., 2] << 4) | (c[..., 3] << 6)).astype(
+        np.uint8
+    )
+
+
+def unpack_crumbs(packed: jnp.ndarray) -> jnp.ndarray:
+    """Inverse of pack_crumbs, jnp: uint8 [N, K//4] -> int32 [N, K]."""
+    parts = [((packed >> (2 * i)) & 0x3).astype(jnp.int32) for i in range(4)]
+    return jnp.stack(parts, axis=-1).reshape(*packed.shape[:-1], -1)
+
+
+# --------------------------------------------------------------------------
+# quantizers (numpy, build-time: produce codes + scales from fp weights)
+# --------------------------------------------------------------------------
+
+
+def quantize_int4(w: np.ndarray, group: int = 32):
+    """Group-wise symmetric-around-8 int4.  w: [N, K] -> (codes, scales)."""
+    n, k = w.shape
+    assert k % group == 0
+    wg = w.reshape(n, k // group, group)
+    absmax = np.abs(wg).max(axis=-1, keepdims=True)
+    scale = np.where(absmax == 0, 1.0, absmax / 7.0)
+    codes = np.clip(np.round(wg / scale) + 8, 0, 15).astype(np.uint8)
+    return codes.reshape(n, k), scale[..., 0].astype(np.float32)
+
+
+def dequantize_int4(codes: np.ndarray, scales: np.ndarray, group: int = 32):
+    n, k = codes.shape
+    wg = (codes.reshape(n, k // group, group).astype(np.float32) - 8.0) * scales[
+        ..., None
+    ]
+    return wg.reshape(n, k)
+
+
+def quantize_seq2(w: np.ndarray, group: int = 32):
+    """Stretched Elastic Quantization (SEQ): symmetric 2-bit levels
+    {-1.5,-0.5,+0.5,+1.5} * scale, scale per (out, group).
+
+    The paper (sec 2.1.2) eliminates the zero level and shifts the centroid;
+    the absmax-compatible scale maps absmax -> 1.5*scale.
+    """
+    n, k = w.shape
+    assert k % group == 0
+    wg = w.reshape(n, k // group, group)
+    absmax = np.abs(wg).max(axis=-1, keepdims=True)
+    scale = np.where(absmax == 0, 1.0, absmax / 1.5)
+    # levels l(code) = (2*code - 3)/2 = code - 1.5 ; nearest code = round(w/scale + 1.5)
+    codes = np.clip(np.round(wg / scale + 1.5), 0, 3).astype(np.uint8)
+    return codes.reshape(n, k), scale[..., 0].astype(np.float32)
+
+
+def dequantize_seq2(codes: np.ndarray, scales: np.ndarray, group: int = 32):
+    n, k = codes.shape
+    lv = (2.0 * codes.reshape(n, k // group, group).astype(np.float32) - 3.0) / 2.0
+    return (lv * scales[..., None]).reshape(n, k)
+
+
+def quantize_ternary(w: np.ndarray):
+    """TWN-style ternary: threshold Delta = 0.75 * mean|w| per out channel,
+    alpha = mean of |w| over the kept set.  codes in {0,1,2} -> {-1,0,+1}."""
+    delta = 0.75 * np.abs(w).mean(axis=1, keepdims=True)
+    mask = np.abs(w) >= delta
+    cnt = np.maximum(mask.sum(axis=1, keepdims=True), 1)
+    alpha = (np.abs(w) * mask).sum(axis=1, keepdims=True) / cnt
+    alpha = np.where(alpha == 0, 1.0, alpha)
+    codes = (np.sign(w) * mask + 1).astype(np.uint8)
+    return codes, alpha[:, 0].astype(np.float32)
+
+
+def dequantize_ternary(codes: np.ndarray, alpha: np.ndarray):
+    return (codes.astype(np.float32) - 1.0) * alpha[:, None]
+
+
+FP8_E4M3_MAX = 448.0
+
+
+def fp8_qdq(x: jnp.ndarray, scale=None) -> jnp.ndarray:
+    """Round-trip through float8_e4m3fn with per-tensor scale."""
+    if scale is None:
+        scale = jnp.maximum(jnp.max(jnp.abs(x)), 1e-12) / FP8_E4M3_MAX
+    y = (x / scale).astype(jnp.float8_e4m3fn).astype(jnp.float32)
+    return y * scale
+
+
+# --------------------------------------------------------------------------
+# reference computations (jnp) — what the Pallas kernels must match
+# --------------------------------------------------------------------------
+
+
+def ref_int4_matmul(x, packed, scales, group: int = 32):
+    """x [M, K] @ dequant(packed, scales).T -> [M, N]."""
+    codes = unpack_nibbles(packed)
+    n, k = codes.shape
+    wg = (codes.reshape(n, k // group, group).astype(jnp.float32) - 8.0) * scales[
+        ..., None
+    ]
+    w = wg.reshape(n, k)
+    return x @ w.T
+
+
+def ref_seq2_matmul(x, packed, scales, group: int = 32):
+    codes = unpack_crumbs(packed)
+    n, k = codes.shape
+    lv = (2.0 * codes.reshape(n, k // group, group).astype(jnp.float32) - 3.0) / 2.0
+    w = (lv * scales[..., None]).reshape(n, k)
+    return x @ w.T
+
+
+def ref_ternary_matmul(x, packed, alpha):
+    codes = unpack_crumbs(packed)
+    w = (codes.astype(jnp.float32) - 1.0) * alpha[:, None]
+    return x @ w.T
+
+
+def ref_fp8_matmul(x, w):
+    """QDQ both operands (per-tensor dynamic scale) then matmul."""
+    return fp8_qdq(x) @ fp8_qdq(w).T
+
+
+def ref_block_sparse_attn(q, k, v, block_mask, block: int):
+    """Causal attention with an additional [Tq/b, Tk/b] block mask.
+
+    q,k,v: [T, H, D].  block_mask[i, j] == True keeps the (i, j) block.
+    Masked-out entries get -inf before softmax.  Fully-masked rows produce
+    zeros (guarded; matches kernel behaviour).
+    """
+    t, h, d = q.shape
+    scale = 1.0 / jnp.sqrt(d)
+    scores = jnp.einsum("qhd,khd->hqk", q, k) * scale
+    causal = jnp.tril(jnp.ones((t, t), dtype=bool))
+    bm = jnp.repeat(jnp.repeat(block_mask, block, axis=0), block, axis=1)[:t, :t]
+    keep = causal & bm
+    neg = jnp.finfo(jnp.float32).min
+    scores = jnp.where(keep[None], scores, neg)
+    row_any = keep.any(axis=1)
+    m = jnp.max(scores, axis=-1, keepdims=True)
+    probs = jnp.exp(scores - m)
+    probs = jnp.where(keep[None], probs, 0.0)
+    denom = jnp.maximum(probs.sum(axis=-1, keepdims=True), 1e-30)
+    out = jnp.einsum("hqk,khd->qhd", probs / denom, v)
+    return jnp.where(row_any[:, None, None], out, 0.0)

@@ -1,0 +1,74 @@
+"""Layer-1 Pallas kernel: block-sparse causal prefill attention.
+
+This is the sparse-kernel half of the paper's sparse-attention framework
+(§4.1): L3 pattern algorithms (A-shape / Tri-shape / MInference / XAttention
+/ FlexPrefill / Stem) produce a *block mask* as metadata; this kernel
+consumes that mask and computes attention only where the mask keeps a block.
+
+GPU-kernel -> Pallas adaptation: the paper's CUDA kernels schedule thread
+blocks over (q_block, kv_block) pairs surviving the mask; here the HBM->VMEM
+schedule is expressed with BlockSpec over q blocks, and masked kv blocks are
+zeroed in-kernel (interpret=True executes densely on CPU; on a real TPU the
+same structure lets Mosaic skip masked KV DMA — the compute-savings model is
+accounted analytically in rust/src/sparse_attn/flops.rs).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _attn_kernel(q_ref, k_ref, v_ref, mask_ref, o_ref, *, block, t):
+    i = pl.program_id(0)
+    q = q_ref[...]  # [bq, H, D]
+    k = k_ref[...]  # [T, H, D]
+    v = v_ref[...]  # [T, H, D]
+    bmask = mask_ref[...]  # [1, T//block] f32 (1.0 keep / 0.0 drop)
+    bq, h, d = q.shape
+    scale = 1.0 / jnp.sqrt(jnp.float32(d))
+    scores = jnp.einsum("qhd,khd->hqk", q, k) * scale  # [H, bq, T]
+
+    q_pos = i * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, t), 0)
+    k_pos = jax.lax.broadcasted_iota(jnp.int32, (bq, t), 1)
+    causal = q_pos >= k_pos
+    keep_blocks = jnp.repeat(bmask[0] > 0.5, block)[:t]  # [T]
+    keep = causal & keep_blocks[None, :]  # [bq, T]
+
+    neg = jnp.float32(-1e30)
+    scores = jnp.where(keep[None], scores, neg)
+    m = jnp.max(scores, axis=-1, keepdims=True)
+    p = jnp.exp(scores - m)
+    p = jnp.where(keep[None], p, 0.0)
+    denom = jnp.maximum(jnp.sum(p, axis=-1, keepdims=True), 1e-30)
+    out = jnp.einsum("hqk,khd->qhd", p / denom, v)
+    row_any = keep.any(axis=1)
+    o_ref[...] = jnp.where(row_any[:, None, None], out, 0.0)
+
+
+def block_sparse_attn(q, k, v, block_mask, *, block=16):
+    """Causal block-sparse attention.
+
+    q, k, v     : [T, H, D] f32
+    block_mask  : [T//block, T//block] f32 (1.0 = keep block)
+    Returns [T, H, D] f32.
+    """
+    t, h, d = q.shape
+    nb = t // block
+    assert t % block == 0 and block_mask.shape == (nb, nb)
+    return pl.pallas_call(
+        functools.partial(_attn_kernel, block=block, t=t),
+        grid=(nb,),
+        in_specs=[
+            pl.BlockSpec((block, h, d), lambda i: (i, 0, 0)),
+            pl.BlockSpec((t, h, d), lambda i: (0, 0, 0)),
+            pl.BlockSpec((t, h, d), lambda i: (0, 0, 0)),
+            pl.BlockSpec((1, nb), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((block, h, d), lambda i: (i, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((t, h, d), jnp.float32),
+        interpret=True,
+    )(q, k, v, block_mask)

@@ -1,0 +1,170 @@
+"""Layer-2: TinyTransformer in JAX — the paper's model substrate.
+
+The paper compresses Hunyuan-1.8B / Qwen3 / LLaMA-3.2 checkpoints; those are
+not available here, so every algorithm is exercised on this byte-level
+TinyTransformer (see DESIGN.md §3 substitution table).  Two sizes:
+
+* target : d=128, 4 layers, 4 heads — the model being compressed/served.
+* draft  : d=64,  2 layers, 2 heads — the Eagle3-style speculator, distilled
+  against the target at build time (train.py).
+
+Architecture: learned positional embeddings, pre-RMSNorm, causal MHA, SwiGLU
+MLP, untied output head.  Everything is a plain dict of jnp arrays so
+train.py can run manual Adam and aot.py can bake weights into HLO constants.
+
+Quantized model variants apply the *same* quantizers as kernels/ref.py to
+every linear weight (QDQ at trace time, so the HLO carries the quantized
+weights); the packed-code hot path is exported separately as standalone
+Pallas-kernel artifacts consumed by the Rust runtime.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .kernels import ref
+
+
+@dataclass(frozen=True)
+class ModelCfg:
+    vocab: int = 256
+    d_model: int = 128
+    n_layers: int = 4
+    n_heads: int = 4
+    d_ff: int = 256
+    max_t: int = 128
+
+
+TARGET_CFG = ModelCfg()
+DRAFT_CFG = ModelCfg(d_model=64, n_layers=2, n_heads=2, d_ff=128)
+
+# Linear parameter names (out_features x in_features), per layer.
+_LAYER_LINEARS = ["wq", "wk", "wv", "wo", "w_gate", "w_up", "w_down"]
+
+
+def param_spec(cfg: ModelCfg):
+    """Ordered (name, shape) list — the weights.bin layout contract with
+    rust/src/models/weights.rs.  Keep in sync!"""
+    spec = [
+        ("embed", (cfg.vocab, cfg.d_model)),
+        ("pos", (cfg.max_t, cfg.d_model)),
+    ]
+    for i in range(cfg.n_layers):
+        p = f"layer{i}."
+        spec += [
+            (p + "ln1", (cfg.d_model,)),
+            (p + "wq", (cfg.d_model, cfg.d_model)),
+            (p + "wk", (cfg.d_model, cfg.d_model)),
+            (p + "wv", (cfg.d_model, cfg.d_model)),
+            (p + "wo", (cfg.d_model, cfg.d_model)),
+            (p + "ln2", (cfg.d_model,)),
+            (p + "w_gate", (cfg.d_ff, cfg.d_model)),
+            (p + "w_up", (cfg.d_ff, cfg.d_model)),
+            (p + "w_down", (cfg.d_model, cfg.d_ff)),
+        ]
+    spec += [
+        ("ln_f", (cfg.d_model,)),
+        ("head", (cfg.vocab, cfg.d_model)),
+    ]
+    return spec
+
+
+def init_params(cfg: ModelCfg, seed: int) -> dict:
+    rng = np.random.default_rng(seed)
+    params = {}
+    for name, shape in param_spec(cfg):
+        if name.endswith(("ln1", "ln2", "ln_f")):
+            params[name] = jnp.ones(shape, jnp.float32)
+        else:
+            fan_in = shape[-1]
+            params[name] = jnp.asarray(
+                rng.normal(0.0, fan_in**-0.5, shape), jnp.float32
+            )
+    return params
+
+
+def rmsnorm(x, g):
+    return x * g * jax.lax.rsqrt(jnp.mean(x * x, axis=-1, keepdims=True) + 1e-6)
+
+
+def _attn(x, p, prefix, cfg: ModelCfg):
+    b, t, d = x.shape
+    h, dh = cfg.n_heads, cfg.d_model // cfg.n_heads
+    q = (x @ p[prefix + "wq"].T).reshape(b, t, h, dh)
+    k = (x @ p[prefix + "wk"].T).reshape(b, t, h, dh)
+    v = (x @ p[prefix + "wv"].T).reshape(b, t, h, dh)
+    scores = jnp.einsum("bqhd,bkhd->bhqk", q, k) / jnp.sqrt(dh)
+    causal = jnp.tril(jnp.ones((t, t), dtype=bool))
+    scores = jnp.where(causal[None, None], scores, jnp.float32(-1e30))
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bhqk,bkhd->bqhd", probs, v).reshape(b, t, d)
+    return out @ p[prefix + "wo"].T
+
+
+def _mlp(x, p, prefix):
+    gate = jax.nn.silu(x @ p[prefix + "w_gate"].T)
+    up = x @ p[prefix + "w_up"].T
+    return (gate * up) @ p[prefix + "w_down"].T
+
+
+def forward(params: dict, tokens: jnp.ndarray, cfg: ModelCfg):
+    """tokens int32 [B, T] -> logits f32 [B, T, vocab]."""
+    b, t = tokens.shape
+    x = params["embed"][tokens] + params["pos"][:t][None]
+    for i in range(cfg.n_layers):
+        pre = f"layer{i}."
+        x = x + _attn(rmsnorm(x, params[pre + "ln1"]), params, pre, cfg)
+        x = x + _mlp(rmsnorm(x, params[pre + "ln2"]), params, pre)
+    x = rmsnorm(x, params["ln_f"])
+    return x @ params["head"].T
+
+
+def hidden_states(params: dict, tokens: jnp.ndarray, cfg: ModelCfg):
+    """Final pre-head hidden states [B, T, d] — the target-model supervision
+    signal for Eagle3-style draft alignment (paper §3.1.3)."""
+    b, t = tokens.shape
+    x = params["embed"][tokens] + params["pos"][:t][None]
+    for i in range(cfg.n_layers):
+        pre = f"layer{i}."
+        x = x + _attn(rmsnorm(x, params[pre + "ln1"]), params, pre, cfg)
+        x = x + _mlp(rmsnorm(x, params[pre + "ln2"]), params, pre)
+    return rmsnorm(x, params["ln_f"])
+
+
+# --------------------------------------------------------------------------
+# quantized variants — QDQ every linear weight with the shared quantizers
+# --------------------------------------------------------------------------
+
+QUANT_MODES = ("fp32", "int4", "seq2", "ternary", "fp8")
+
+
+def quantize_params(params: dict, mode: str, group: int = 32) -> dict:
+    """Return params with every linear weight replaced by its QDQ image."""
+    if mode == "fp32":
+        return dict(params)
+    out = {}
+    for name, w in params.items():
+        base = name.split(".")[-1]
+        if base in _LAYER_LINEARS or base == "head":
+            wn = np.asarray(w)
+            if mode == "int4":
+                codes, scales = ref.quantize_int4(wn, group)
+                wq = ref.dequantize_int4(codes, scales, group)
+            elif mode == "seq2":
+                codes, scales = ref.quantize_seq2(wn, group)
+                wq = ref.dequantize_seq2(codes, scales, group)
+            elif mode == "ternary":
+                codes, alpha = ref.quantize_ternary(wn)
+                wq = ref.dequantize_ternary(codes, alpha)
+            elif mode == "fp8":
+                wq = np.asarray(ref.fp8_qdq(jnp.asarray(wn)))
+            else:
+                raise ValueError(mode)
+            out[name] = jnp.asarray(wq, jnp.float32)
+        else:
+            out[name] = w
+    return out

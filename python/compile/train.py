@@ -1,0 +1,241 @@
+"""Build-time training: target LM + Eagle3-style draft distillation.
+
+The paper's speculative-decoding framework (§3.1) trains draft models that
+are *target-model-dependent*: the objective is alignment with the target's
+token distribution, not standalone quality.  We reproduce that pipeline at
+build time:
+
+1. train the TARGET TinyTransformer on a synthetic structured byte corpus
+   (next-token cross entropy, manual Adam — optax is not available);
+2. distill the DRAFT against the frozen target with a KL(target ‖ draft)
+   objective plus a hidden-state alignment term (the paper's "hidden state
+   extraction from the target model" supervision signal, §3.1.3) and a small
+   CE anchor.
+
+Everything is deterministic (seeded); Python never runs at request time —
+aot.py bakes the resulting weights into HLO artifacts and weights.bin.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import model as M
+
+# --------------------------------------------------------------------------
+# synthetic corpus — a structured byte language (Markov backbone + templates)
+# --------------------------------------------------------------------------
+
+N_STATES = 64  # "common" symbols; bytes >= N_STATES appear only in templates
+TEMPLATES = [
+    bytes([65, 110, 103, 101, 108]),  # "Angel"
+    bytes([83, 108, 105, 109, 33]),  # "Slim!"
+    bytes([113, 117, 97, 110, 116]),  # "quant"
+    bytes([115, 112, 97, 114, 115, 101]),  # "sparse"
+]
+
+
+def make_transition(seed: int) -> np.ndarray:
+    """Sparse order-1 Markov transition: each state has 4 likely successors."""
+    rng = np.random.default_rng(seed)
+    trans = np.full((N_STATES, N_STATES), 0.02 / N_STATES)
+    for s in range(N_STATES):
+        succ = rng.choice(N_STATES, size=4, replace=False)
+        probs = rng.dirichlet(np.ones(4) * 2.0) * 0.98
+        trans[s, succ] += probs
+    return trans / trans.sum(axis=1, keepdims=True)
+
+
+def make_corpus(n_tokens: int, seed: int) -> np.ndarray:
+    """Generate a deterministic byte stream: Markov walk with occasional
+    verbatim template insertions (gives the LM sharp, predictable spans that
+    speculative decoding can exploit — mirrors real-text redundancy)."""
+    rng = np.random.default_rng(seed)
+    trans = make_transition(seed=1234)  # transition structure is fixed
+    out = np.empty(n_tokens, dtype=np.uint8)
+    s = int(rng.integers(N_STATES))
+    i = 0
+    while i < n_tokens:
+        if rng.random() < 0.02:
+            tpl = TEMPLATES[int(rng.integers(len(TEMPLATES)))]
+            n = min(len(tpl), n_tokens - i)
+            out[i : i + n] = np.frombuffer(tpl[:n], dtype=np.uint8)
+            i += n
+            continue
+        s = int(rng.choice(N_STATES, p=trans[s]))
+        out[i] = s
+        i += 1
+    return out
+
+
+def batches(corpus: np.ndarray, batch: int, t: int, steps: int, seed: int):
+    rng = np.random.default_rng(seed)
+    hi = len(corpus) - t - 1
+    for _ in range(steps):
+        starts = rng.integers(0, hi, size=batch)
+        x = np.stack([corpus[s : s + t] for s in starts]).astype(np.int32)
+        y = np.stack([corpus[s + 1 : s + t + 1] for s in starts]).astype(np.int32)
+        yield jnp.asarray(x), jnp.asarray(y)
+
+
+# --------------------------------------------------------------------------
+# manual Adam
+# --------------------------------------------------------------------------
+
+
+def adam_init(params):
+    z = jax.tree_util.tree_map(jnp.zeros_like, params)
+    return {"m": z, "v": jax.tree_util.tree_map(jnp.zeros_like, params), "t": 0}
+
+
+def adam_update(params, grads, state, lr=1e-3, b1=0.9, b2=0.999, eps=1e-8):
+    t = state["t"] + 1
+    m = jax.tree_util.tree_map(
+        lambda m_, g: b1 * m_ + (1 - b1) * g, state["m"], grads
+    )
+    v = jax.tree_util.tree_map(
+        lambda v_, g: b2 * v_ + (1 - b2) * g * g, state["v"], grads
+    )
+    mhat_scale = 1.0 / (1 - b1**t)
+    vhat_scale = 1.0 / (1 - b2**t)
+    new_params = jax.tree_util.tree_map(
+        lambda p, m_, v_: p - lr * (m_ * mhat_scale) / (jnp.sqrt(v_ * vhat_scale) + eps),
+        params,
+        m,
+        v,
+    )
+    return new_params, {"m": m, "v": v, "t": t}
+
+
+def ce_loss(logits, targets):
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, targets[..., None], axis=-1)[..., 0]
+    return nll.mean()
+
+
+# --------------------------------------------------------------------------
+# target training
+# --------------------------------------------------------------------------
+
+
+def train_target(corpus, cfg=M.TARGET_CFG, steps=400, batch=16, t=64, seed=0,
+                 log_every=100):
+    params = M.init_params(cfg, seed=seed)
+    opt = adam_init(params)
+
+    @jax.jit
+    def step(params, opt, x, y):
+        def loss_fn(p):
+            return ce_loss(M.forward(p, x, cfg), y)
+
+        loss, grads = jax.value_and_grad(loss_fn)(params)
+        params, opt = adam_update(params, grads, opt, lr=2e-3)
+        return params, opt, loss
+
+    losses = []
+    for i, (x, y) in enumerate(batches(corpus, batch, t, steps, seed=seed + 7)):
+        params, opt, loss = step(params, opt, x, y)
+        if i % log_every == 0 or i == steps - 1:
+            losses.append(float(loss))
+            print(f"  target step {i:4d} loss {float(loss):.4f}")
+    return params, losses
+
+
+# --------------------------------------------------------------------------
+# SEQ 2-bit QAT (paper §2.1.2): fake-quant with STE on every linear weight
+# --------------------------------------------------------------------------
+
+
+def _seq2_fake_quant(w, group=32):
+    """Differentiable SEQ fake-quant: forward = QDQ, backward = identity."""
+    n, k = w.shape
+    wg = w.reshape(n, k // group, group)
+    absmax = jnp.max(jnp.abs(wg), axis=-1, keepdims=True)
+    scale = jnp.where(absmax == 0, 1.0, absmax / 1.5)
+    codes = jnp.clip(jnp.round(wg / scale + 1.5), 0, 3)
+    wq = ((2.0 * codes - 3.0) * 0.5 * scale).reshape(n, k)
+    return w + jax.lax.stop_gradient(wq - w)
+
+
+def _qat_forward(params, x, cfg):
+    qp = {}
+    for name, w in params.items():
+        base = name.split(".")[-1]
+        if base in M._LAYER_LINEARS or base == "head":
+            qp[name] = _seq2_fake_quant(w)
+        else:
+            qp[name] = w
+    return M.forward(qp, x, cfg)
+
+
+def qat_seq2(init, corpus, cfg=M.TARGET_CFG, steps=200, batch=16, t=64,
+             seed=2, log_every=100):
+    """QAT fine-tune from instruction-tuned-style init (the paper inits from
+    tuned weights rather than raw pre-training, §2.1.2)."""
+    params = dict(init)
+    opt = adam_init(params)
+
+    @jax.jit
+    def step(params, opt, x, y):
+        def loss_fn(p):
+            return ce_loss(_qat_forward(p, x, cfg), y)
+
+        loss, grads = jax.value_and_grad(loss_fn)(params)
+        params, opt = adam_update(params, grads, opt, lr=5e-4)
+        return params, opt, loss
+
+    losses = []
+    for i, (x, y) in enumerate(batches(corpus, batch, t, steps, seed=seed + 3)):
+        params, opt, loss = step(params, opt, x, y)
+        if i % log_every == 0 or i == steps - 1:
+            losses.append(float(loss))
+            print(f"  qat    step {i:4d} loss {float(loss):.4f}")
+    return params, losses
+
+
+# --------------------------------------------------------------------------
+# draft distillation (Eagle3-style target alignment)
+# --------------------------------------------------------------------------
+
+
+def distill_draft(target_params, corpus, tgt_cfg=M.TARGET_CFG,
+                  draft_cfg=M.DRAFT_CFG, steps=400, batch=16, t=64, seed=1,
+                  log_every=100):
+    params = M.init_params(draft_cfg, seed=seed)
+    opt = adam_init(params)
+    proj_seed = np.random.default_rng(seed + 99)
+    # fixed random projection target_d -> draft_d for hidden alignment
+    proj = jnp.asarray(
+        proj_seed.normal(0, tgt_cfg.d_model**-0.5,
+                         (tgt_cfg.d_model, draft_cfg.d_model)),
+        jnp.float32,
+    )
+
+    @jax.jit
+    def step(params, opt, x, y):
+        t_logits = M.forward(target_params, x, tgt_cfg)
+        t_hidden = M.hidden_states(target_params, x, tgt_cfg) @ proj
+        t_probs = jax.nn.softmax(t_logits, axis=-1)
+
+        def loss_fn(p):
+            d_logits = M.forward(p, x, draft_cfg)
+            d_hidden = M.hidden_states(p, x, draft_cfg)
+            logp = jax.nn.log_softmax(d_logits, axis=-1)
+            kl = -(t_probs * logp).sum(-1).mean()  # CE(target_probs, draft)
+            ce = ce_loss(d_logits, y)
+            align = jnp.mean((d_hidden - t_hidden) ** 2)
+            return kl + 0.3 * ce + 0.1 * align
+
+        loss, grads = jax.value_and_grad(loss_fn)(params)
+        params, opt = adam_update(params, grads, opt, lr=2e-3)
+        return params, opt, loss
+
+    losses = []
+    for i, (x, y) in enumerate(batches(corpus, batch, t, steps, seed=seed + 13)):
+        params, opt, loss = step(params, opt, x, y)
+        if i % log_every == 0 or i == steps - 1:
+            losses.append(float(loss))
+            print(f"  draft  step {i:4d} loss {float(loss):.4f}")
+    return params, losses

@@ -1,0 +1,175 @@
+"""Pallas kernels vs pure-jnp oracles — the core L1 correctness signal.
+
+Hypothesis sweeps shapes (multiples of the tile sizes) and value scales;
+every kernel must match its ref.py oracle to tight tolerance under
+interpret=True.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import quant_matmul as QK
+from compile.kernels import ref
+from compile.kernels import sparse_attn as SA
+
+SETTINGS = dict(max_examples=12, deadline=None)
+
+
+def rand(rng, *shape, scale=1.0):
+    return jnp.asarray(rng.normal(0, scale, shape), jnp.float32)
+
+
+dims = st.sampled_from([32, 64, 96])
+kdims = st.sampled_from([64, 128])
+scales = st.sampled_from([0.05, 1.0, 30.0])
+
+
+class TestInt4:
+    @given(m=dims, n=dims, k=kdims, scale=scales, seed=st.integers(0, 99))
+    @settings(**SETTINGS)
+    def test_matches_ref(self, m, n, k, scale, seed):
+        rng = np.random.default_rng(seed)
+        x = rand(rng, m, k)
+        w = np.asarray(rand(rng, n, k, scale=scale))
+        codes, sc = ref.quantize_int4(w)
+        packed = jnp.asarray(ref.pack_nibbles(codes))
+        sc = jnp.asarray(sc)
+        got = QK.int4_matmul(x, packed, sc)
+        want = ref.ref_int4_matmul(x, packed, sc)
+        np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-4 * scale)
+
+    def test_dequant_error_bounded(self):
+        rng = np.random.default_rng(0)
+        w = rng.normal(0, 1, (64, 128)).astype(np.float32)
+        codes, sc = ref.quantize_int4(w)
+        wq = ref.dequantize_int4(codes, sc)
+        # int4 with group 32: max error is half a step = absmax/14 per group
+        err = np.abs(wq - w)
+        step = np.repeat(sc, 32, axis=1)
+        assert (err <= 0.5 * step + 1e-6).all()
+
+    def test_pack_roundtrip(self):
+        rng = np.random.default_rng(1)
+        codes = rng.integers(0, 16, (8, 32)).astype(np.uint8)
+        packed = ref.pack_nibbles(codes)
+        assert packed.shape == (8, 16)
+        back = np.asarray(ref.unpack_nibbles(jnp.asarray(packed)))
+        np.testing.assert_array_equal(back, codes)
+
+
+class TestSeq2:
+    @given(m=dims, n=dims, k=kdims, scale=scales, seed=st.integers(0, 99))
+    @settings(**SETTINGS)
+    def test_matches_ref(self, m, n, k, scale, seed):
+        rng = np.random.default_rng(seed)
+        x = rand(rng, m, k)
+        w = np.asarray(rand(rng, n, k, scale=scale))
+        codes, sc = ref.quantize_seq2(w)
+        packed = jnp.asarray(ref.pack_crumbs(codes))
+        sc = jnp.asarray(sc)
+        got = QK.seq2_matmul(x, packed, sc)
+        want = ref.ref_seq2_matmul(x, packed, sc)
+        np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-4 * scale)
+
+    def test_levels_are_symmetric_no_zero(self):
+        """SEQ levels must be {-1.5,-0.5,0.5,1.5}*scale — no zero level."""
+        w = np.linspace(-2, 2, 128, dtype=np.float32)[None, :]
+        codes, sc = ref.quantize_seq2(w)
+        wq = ref.dequantize_seq2(codes, sc)
+        assert (np.abs(wq) > 1e-9).all()
+        levels = np.unique(np.round(wq / np.repeat(sc, 32, axis=1), 4))
+        assert len(levels) <= 4
+
+    def test_pack_roundtrip(self):
+        rng = np.random.default_rng(2)
+        codes = rng.integers(0, 4, (8, 32)).astype(np.uint8)
+        packed = ref.pack_crumbs(codes)
+        assert packed.shape == (8, 8)
+        back = np.asarray(ref.unpack_crumbs(jnp.asarray(packed)))
+        np.testing.assert_array_equal(back, codes)
+
+
+class TestTernary:
+    @given(m=dims, n=dims, k=kdims, scale=scales, seed=st.integers(0, 99))
+    @settings(**SETTINGS)
+    def test_matches_ref(self, m, n, k, scale, seed):
+        rng = np.random.default_rng(seed)
+        x = rand(rng, m, k)
+        w = np.asarray(rand(rng, n, k, scale=scale))
+        codes, alpha = ref.quantize_ternary(w)
+        packed = jnp.asarray(ref.pack_crumbs(codes))
+        al = jnp.asarray(alpha)
+        got = QK.ternary_matmul(x, packed, al)
+        want = ref.ref_ternary_matmul(x, packed, al)
+        np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-4 * scale)
+
+    def test_codes_in_range(self):
+        rng = np.random.default_rng(3)
+        w = rng.normal(0, 1, (16, 64)).astype(np.float32)
+        codes, alpha = ref.quantize_ternary(w)
+        assert set(np.unique(codes)) <= {0, 1, 2}
+        assert (alpha > 0).all()
+
+
+class TestFp8:
+    @given(m=dims, n=dims, k=kdims, scale=scales, seed=st.integers(0, 99))
+    @settings(**SETTINGS)
+    def test_matches_ref(self, m, n, k, scale, seed):
+        rng = np.random.default_rng(seed)
+        x = rand(rng, m, k)
+        w = rand(rng, n, k, scale=scale)
+        got = QK.fp8_matmul(x, w)
+        want = ref.ref_fp8_matmul(x, w)
+        np.testing.assert_allclose(got, want, rtol=1e-5,
+                                   atol=1e-3 * max(scale, 1.0))
+
+    def test_qdq_relative_error(self):
+        """fp8 e4m3 has ~2^-3 relative precision for normal values."""
+        x = jnp.asarray(np.random.default_rng(4).normal(0, 1, 1024),
+                        jnp.float32)
+        y = ref.fp8_qdq(x)
+        big = np.abs(np.asarray(x)) > 1e-2
+        rel = np.abs(np.asarray(y - x))[big] / np.abs(np.asarray(x))[big]
+        assert rel.max() < 0.13
+
+
+class TestSparseAttn:
+    @given(
+        t=st.sampled_from([32, 64, 128]),
+        h=st.sampled_from([1, 2, 4]),
+        d=st.sampled_from([8, 32]),
+        density=st.floats(0.2, 1.0),
+        seed=st.integers(0, 99),
+    )
+    @settings(**SETTINGS)
+    def test_matches_ref(self, t, h, d, density, seed):
+        block = 16
+        nb = t // block
+        rng = np.random.default_rng(seed)
+        q = rand(rng, t, h, d)
+        k = rand(rng, t, h, d)
+        v = rand(rng, t, h, d)
+        mask = (rng.random((nb, nb)) < density)
+        np.fill_diagonal(mask, True)  # keep the causal diagonal blocks
+        maskf = jnp.asarray(mask.astype(np.float32))
+        got = SA.block_sparse_attn(q, k, v, maskf, block=block)
+        want = ref.ref_block_sparse_attn(q, k, v, jnp.asarray(mask), block)
+        np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+    def test_dense_mask_equals_causal_attention(self):
+        t, h, d, block = 64, 2, 16, 16
+        rng = np.random.default_rng(5)
+        q, k, v = (rand(rng, t, h, d) for _ in range(3))
+        ones = jnp.ones((t // block, t // block), jnp.float32)
+        got = SA.block_sparse_attn(q, k, v, ones, block=block)
+        # plain causal softmax attention
+        scores = jnp.einsum("qhd,khd->hqk", q, k) / jnp.sqrt(d)
+        causal = jnp.tril(jnp.ones((t, t), dtype=bool))
+        scores = jnp.where(causal[None], scores, -1e30)
+        import jax
+
+        probs = jax.nn.softmax(scores, axis=-1)
+        want = jnp.einsum("hqk,khd->qhd", probs, v)
+        np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-5)

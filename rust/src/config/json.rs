@@ -1,0 +1,260 @@
+//! Minimal JSON parser — reads artifacts/meta.json (layout contract with
+//! the python AOT build). Full JSON value model, no serde available.
+
+use std::collections::BTreeMap;
+
+#[derive(Clone, Debug, PartialEq)]
+pub enum Json {
+    Null,
+    Bool(bool),
+    Num(f64),
+    Str(String),
+    Arr(Vec<Json>),
+    Obj(BTreeMap<String, Json>),
+}
+
+#[derive(Debug, thiserror::Error)]
+#[error("json parse error at byte {0}: {1}")]
+pub struct JsonError(usize, String);
+
+impl Json {
+    pub fn parse(src: &str) -> Result<Json, JsonError> {
+        let b = src.as_bytes();
+        let mut pos = 0;
+        let v = parse_value(b, &mut pos)?;
+        skip_ws(b, &mut pos);
+        if pos != b.len() {
+            return Err(JsonError(pos, "trailing content".into()));
+        }
+        Ok(v)
+    }
+
+    pub fn get(&self, key: &str) -> Option<&Json> {
+        match self {
+            Json::Obj(m) => m.get(key),
+            _ => None,
+        }
+    }
+
+    pub fn idx(&self, i: usize) -> Option<&Json> {
+        match self {
+            Json::Arr(a) => a.get(i),
+            _ => None,
+        }
+    }
+
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Json::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            Json::Num(n) => Some(*n),
+            _ => None,
+        }
+    }
+
+    pub fn as_usize(&self) -> Option<usize> {
+        self.as_f64().map(|n| n as usize)
+    }
+
+    pub fn as_arr(&self) -> Option<&[Json]> {
+        match self {
+            Json::Arr(a) => Some(a),
+            _ => None,
+        }
+    }
+}
+
+fn skip_ws(b: &[u8], pos: &mut usize) {
+    while *pos < b.len() && matches!(b[*pos], b' ' | b'\t' | b'\n' | b'\r') {
+        *pos += 1;
+    }
+}
+
+fn parse_value(b: &[u8], pos: &mut usize) -> Result<Json, JsonError> {
+    skip_ws(b, pos);
+    if *pos >= b.len() {
+        return Err(JsonError(*pos, "unexpected end".into()));
+    }
+    match b[*pos] {
+        b'{' => parse_obj(b, pos),
+        b'[' => parse_arr(b, pos),
+        b'"' => Ok(Json::Str(parse_string(b, pos)?)),
+        b't' => lit(b, pos, "true", Json::Bool(true)),
+        b'f' => lit(b, pos, "false", Json::Bool(false)),
+        b'n' => lit(b, pos, "null", Json::Null),
+        _ => parse_num(b, pos),
+    }
+}
+
+fn lit(b: &[u8], pos: &mut usize, word: &str, v: Json) -> Result<Json, JsonError> {
+    if b[*pos..].starts_with(word.as_bytes()) {
+        *pos += word.len();
+        Ok(v)
+    } else {
+        Err(JsonError(*pos, format!("expected {word}")))
+    }
+}
+
+fn parse_num(b: &[u8], pos: &mut usize) -> Result<Json, JsonError> {
+    let start = *pos;
+    while *pos < b.len()
+        && matches!(b[*pos], b'0'..=b'9' | b'-' | b'+' | b'.' | b'e' | b'E')
+    {
+        *pos += 1;
+    }
+    std::str::from_utf8(&b[start..*pos])
+        .ok()
+        .and_then(|s| s.parse::<f64>().ok())
+        .map(Json::Num)
+        .ok_or_else(|| JsonError(start, "bad number".into()))
+}
+
+fn parse_string(b: &[u8], pos: &mut usize) -> Result<String, JsonError> {
+    debug_assert_eq!(b[*pos], b'"');
+    *pos += 1;
+    let mut out = String::new();
+    while *pos < b.len() {
+        match b[*pos] {
+            b'"' => {
+                *pos += 1;
+                return Ok(out);
+            }
+            b'\\' => {
+                *pos += 1;
+                if *pos >= b.len() {
+                    break;
+                }
+                let c = b[*pos];
+                *pos += 1;
+                match c {
+                    b'n' => out.push('\n'),
+                    b't' => out.push('\t'),
+                    b'r' => out.push('\r'),
+                    b'u' => {
+                        let hex = std::str::from_utf8(&b[*pos..*pos + 4])
+                            .map_err(|_| JsonError(*pos, "bad \\u".into()))?;
+                        let cp = u32::from_str_radix(hex, 16)
+                            .map_err(|_| JsonError(*pos, "bad \\u".into()))?;
+                        out.push(char::from_u32(cp).unwrap_or('\u{FFFD}'));
+                        *pos += 4;
+                    }
+                    other => out.push(other as char),
+                }
+            }
+            c => {
+                // fast path: copy a run of plain bytes
+                let start = *pos;
+                while *pos < b.len() && b[*pos] != b'"' && b[*pos] != b'\\' {
+                    *pos += 1;
+                }
+                out.push_str(std::str::from_utf8(&b[start..*pos]).map_err(|_| {
+                    JsonError(start, format!("bad utf8 near {c}"))
+                })?);
+            }
+        }
+    }
+    Err(JsonError(*pos, "unterminated string".into()))
+}
+
+fn parse_arr(b: &[u8], pos: &mut usize) -> Result<Json, JsonError> {
+    *pos += 1; // [
+    let mut out = Vec::new();
+    skip_ws(b, pos);
+    if *pos < b.len() && b[*pos] == b']' {
+        *pos += 1;
+        return Ok(Json::Arr(out));
+    }
+    loop {
+        out.push(parse_value(b, pos)?);
+        skip_ws(b, pos);
+        match b.get(*pos) {
+            Some(b',') => *pos += 1,
+            Some(b']') => {
+                *pos += 1;
+                return Ok(Json::Arr(out));
+            }
+            _ => return Err(JsonError(*pos, "expected , or ]".into())),
+        }
+    }
+}
+
+fn parse_obj(b: &[u8], pos: &mut usize) -> Result<Json, JsonError> {
+    *pos += 1; // {
+    let mut out = BTreeMap::new();
+    skip_ws(b, pos);
+    if *pos < b.len() && b[*pos] == b'}' {
+        *pos += 1;
+        return Ok(Json::Obj(out));
+    }
+    loop {
+        skip_ws(b, pos);
+        let key = parse_string(b, pos)?;
+        skip_ws(b, pos);
+        if b.get(*pos) != Some(&b':') {
+            return Err(JsonError(*pos, "expected :".into()));
+        }
+        *pos += 1;
+        out.insert(key, parse_value(b, pos)?);
+        skip_ws(b, pos);
+        match b.get(*pos) {
+            Some(b',') => *pos += 1,
+            Some(b'}') => {
+                *pos += 1;
+                return Ok(Json::Obj(out));
+            }
+            _ => return Err(JsonError(*pos, "expected , or }".into())),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_meta_shape() {
+        let src = r#"{"seq_t": 64, "target": {"vocab": 256, "d_model": 128},
+                      "layout": [{"name": "embed", "shape": [256, 128],
+                                  "offset": 0, "len": 32768}]}"#;
+        let j = Json::parse(src).unwrap();
+        assert_eq!(j.get("seq_t").unwrap().as_usize(), Some(64));
+        assert_eq!(
+            j.get("target").unwrap().get("d_model").unwrap().as_usize(),
+            Some(128)
+        );
+        let l0 = j.get("layout").unwrap().idx(0).unwrap();
+        assert_eq!(l0.get("name").unwrap().as_str(), Some("embed"));
+        assert_eq!(
+            l0.get("shape").unwrap().as_arr().unwrap()[1].as_usize(),
+            Some(128)
+        );
+    }
+
+    #[test]
+    fn parses_escapes_and_nested() {
+        let j = Json::parse(r#"{"a": "x\ny\"z", "b": [1, 2.5, -3e2, true, null]}"#).unwrap();
+        assert_eq!(j.get("a").unwrap().as_str(), Some("x\ny\"z"));
+        let b = j.get("b").unwrap().as_arr().unwrap();
+        assert_eq!(b[2].as_f64(), Some(-300.0));
+        assert_eq!(b[3], Json::Bool(true));
+        assert_eq!(b[4], Json::Null);
+    }
+
+    #[test]
+    fn rejects_garbage() {
+        assert!(Json::parse("{").is_err());
+        assert!(Json::parse("[1,]").is_err());
+        assert!(Json::parse("{} extra").is_err());
+    }
+
+    #[test]
+    fn empty_containers() {
+        assert_eq!(Json::parse("[]").unwrap(), Json::Arr(vec![]));
+        assert_eq!(Json::parse("{}").unwrap(), Json::Obj(BTreeMap::new()));
+    }
+}

@@ -1,0 +1,20 @@
+//! Config subsystem — the entry stage of the paper's pipeline (Fig. 6):
+//! "AngelSlim starts by parsing a YAML configuration file to load all
+//! essential parameters for the compression task ... global settings, model
+//! information, compression algorithm specifications, and dataset
+//! configurations."
+//!
+//! serde/serde_yaml are unavailable offline, so `yaml` is a hand-rolled
+//! parser for the YAML subset these configs need (nested maps, sequences,
+//! scalars, comments), and `schema` maps the generic tree onto typed config
+//! structs with defaulting + validation.
+
+pub mod json;
+pub mod schema;
+pub mod yaml;
+
+pub use json::Json;
+pub use schema::{
+    CompressionCfg, DatasetCfg, EvalCfg, GlobalCfg, ModelCfg, SlimConfig,
+};
+pub use yaml::{parse, Yaml};

@@ -1,0 +1,251 @@
+//! Typed config schema over the generic YAML tree — mirrors the paper's
+//! four config sections (Fig. 6): global settings, model information,
+//! compression algorithm specification, dataset configuration (plus an
+//! evaluation section for the automated benchmarking pipeline).
+
+use super::yaml::{parse, Yaml};
+use anyhow::{bail, Context, Result};
+
+#[derive(Clone, Debug, PartialEq)]
+pub struct GlobalCfg {
+    pub save_path: String,
+    pub deploy_backend: String,
+    pub seed: u64,
+}
+
+#[derive(Clone, Debug, PartialEq)]
+pub struct ModelCfg {
+    /// registry key for the ModelFactory ("tiny-target", "tiny-draft", ...)
+    pub name: String,
+    /// artifact directory holding *.hlo.txt / weights.bin
+    pub artifacts_dir: String,
+    pub dtype: String,
+}
+
+#[derive(Clone, Debug, PartialEq)]
+pub struct CompressionCfg {
+    /// "quantization" | "spec_decode" | "sparse_attn" | "token_prune"
+    pub method: String,
+    /// algorithm within the method, e.g. "leptoquant", "gptq", "awq",
+    /// "fp8_dynamic", "seq2", "tequila", "sherry", "eagle3", "stem",
+    /// "idpruner", "samp"
+    pub algo: String,
+    pub bits: u32,
+    pub group_size: usize,
+    /// LeptoQuant outlier-isolation search grid for alpha (paper: [0, 0.001])
+    pub alpha_grid: Vec<f64>,
+    /// token-pruning retain ratio / sparse-attn density budget
+    pub ratio: f64,
+    /// number of speculative tokens per step (spec decode)
+    pub num_speculative_tokens: usize,
+    /// low-memory calibration: resident-layer budget (0 = keep everything)
+    pub low_memory_budget_layers: usize,
+}
+
+#[derive(Clone, Debug, PartialEq)]
+pub struct DatasetCfg {
+    pub kind: String,
+    pub num_samples: usize,
+    pub seq_len: usize,
+    pub seed: u64,
+}
+
+#[derive(Clone, Debug, PartialEq)]
+pub struct EvalCfg {
+    pub tasks: Vec<String>,
+    pub enabled: bool,
+}
+
+/// The full parsed config — one compression job.
+#[derive(Clone, Debug, PartialEq)]
+pub struct SlimConfig {
+    pub global: GlobalCfg,
+    pub model: ModelCfg,
+    pub compression: CompressionCfg,
+    pub dataset: DatasetCfg,
+    pub eval: EvalCfg,
+}
+
+impl SlimConfig {
+    pub fn from_str(src: &str) -> Result<Self> {
+        let y = parse(src).context("yaml parse")?;
+        Self::from_yaml(&y)
+    }
+
+    pub fn from_file(path: &str) -> Result<Self> {
+        let src = std::fs::read_to_string(path)
+            .with_context(|| format!("reading config {path}"))?;
+        Self::from_str(&src)
+    }
+
+    pub fn from_yaml(y: &Yaml) -> Result<Self> {
+        let global = y.get("global").cloned().unwrap_or(Yaml::Null);
+        let model = y
+            .get("model")
+            .context("config missing `model` section")?;
+        let comp = y
+            .get("compression")
+            .context("config missing `compression` section")?;
+        let dataset = y.get("dataset").cloned().unwrap_or(Yaml::Null);
+        let eval = y.get("eval").cloned().unwrap_or(Yaml::Null);
+
+        let method = comp.str_or("method", "quantization");
+        let method_section = comp.get(&method).cloned().unwrap_or(Yaml::Null);
+
+        let alpha_grid = method_section
+            .get("alpha_grid")
+            .and_then(Yaml::as_seq)
+            .map(|s| s.iter().filter_map(Yaml::as_f64).collect())
+            .unwrap_or_else(|| vec![0.0, 0.00025, 0.0005, 0.001]);
+
+        let cfg = SlimConfig {
+            global: GlobalCfg {
+                save_path: global.str_or("save_path", "./output"),
+                deploy_backend: global.str_or("deploy_backend", "angelslim"),
+                seed: global.i64_or("seed", 0) as u64,
+            },
+            model: ModelCfg {
+                name: model.str_or("name", "tiny-target"),
+                artifacts_dir: model.str_or("artifacts_dir", "artifacts"),
+                dtype: model.str_or("dtype", "fp32"),
+            },
+            compression: CompressionCfg {
+                algo: method_section.str_or("algo", default_algo(&method)),
+                bits: method_section.i64_or("bits", 8) as u32,
+                group_size: method_section.i64_or("group_size", 32) as usize,
+                alpha_grid,
+                ratio: method_section.f64_or("ratio", 0.25),
+                num_speculative_tokens: method_section
+                    .i64_or("num_speculative_tokens", 2)
+                    as usize,
+                low_memory_budget_layers: method_section
+                    .i64_or("low_memory_budget_layers", 0)
+                    as usize,
+                method,
+            },
+            dataset: DatasetCfg {
+                kind: dataset.str_or("kind", "synthetic"),
+                num_samples: dataset.i64_or("num_samples", 64) as usize,
+                seq_len: dataset.i64_or("seq_len", 64) as usize,
+                seed: dataset.i64_or("seed", 0) as u64,
+            },
+            eval: EvalCfg {
+                tasks: eval
+                    .get("tasks")
+                    .and_then(Yaml::as_seq)
+                    .map(|s| {
+                        s.iter()
+                            .filter_map(Yaml::as_str)
+                            .map(String::from)
+                            .collect()
+                    })
+                    .unwrap_or_else(|| vec!["perplexity".to_string()]),
+                enabled: eval.bool_or("enabled", true),
+            },
+        };
+        cfg.validate()?;
+        Ok(cfg)
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        match self.compression.method.as_str() {
+            "quantization" | "spec_decode" | "sparse_attn" | "token_prune" => {}
+            other => bail!("unknown compression method `{other}`"),
+        }
+        if !(1..=16).contains(&self.compression.bits) {
+            bail!("bits must be in 1..=16, got {}", self.compression.bits);
+        }
+        if self.compression.ratio <= 0.0 || self.compression.ratio > 1.0 {
+            bail!("ratio must be in (0, 1], got {}", self.compression.ratio);
+        }
+        if self.dataset.seq_len == 0 || self.dataset.num_samples == 0 {
+            bail!("dataset must be non-empty");
+        }
+        Ok(())
+    }
+}
+
+fn default_algo(method: &str) -> &'static str {
+    match method {
+        "quantization" => "fp8_dynamic",
+        "spec_decode" => "eagle3",
+        "sparse_attn" => "stem",
+        "token_prune" => "idpruner",
+        _ => "none",
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const FULL: &str = r#"
+global:
+  save_path: ./out
+  deploy_backend: vllm
+  seed: 7
+model:
+  name: tiny-target
+  artifacts_dir: artifacts
+  dtype: fp32
+compression:
+  method: quantization
+  quantization:
+    algo: leptoquant
+    bits: 8
+    group_size: 64
+    alpha_grid: [0.0, 0.001]
+dataset:
+  kind: synthetic
+  num_samples: 32
+  seq_len: 48
+eval:
+  enabled: true
+  tasks:
+    - perplexity
+    - copy
+"#;
+
+    #[test]
+    fn full_roundtrip() {
+        let c = SlimConfig::from_str(FULL).unwrap();
+        assert_eq!(c.global.seed, 7);
+        assert_eq!(c.compression.algo, "leptoquant");
+        assert_eq!(c.compression.group_size, 64);
+        assert_eq!(c.compression.alpha_grid, vec![0.0, 0.001]);
+        assert_eq!(c.dataset.seq_len, 48);
+        assert_eq!(c.eval.tasks, vec!["perplexity", "copy"]);
+    }
+
+    #[test]
+    fn defaults_fill_in() {
+        let c = SlimConfig::from_str(
+            "model:\n  name: m\ncompression:\n  method: sparse_attn\n",
+        )
+        .unwrap();
+        assert_eq!(c.compression.algo, "stem");
+        assert_eq!(c.dataset.num_samples, 64);
+        assert!(c.eval.enabled);
+    }
+
+    #[test]
+    fn rejects_unknown_method() {
+        let r = SlimConfig::from_str(
+            "model:\n  name: m\ncompression:\n  method: teleport\n",
+        );
+        assert!(r.is_err());
+    }
+
+    #[test]
+    fn rejects_bad_bits() {
+        let r = SlimConfig::from_str(
+            "model:\n  name: m\ncompression:\n  method: quantization\n  quantization:\n    bits: 99\n",
+        );
+        assert!(r.is_err());
+    }
+
+    #[test]
+    fn missing_model_errors() {
+        assert!(SlimConfig::from_str("compression:\n  method: quantization\n").is_err());
+    }
+}

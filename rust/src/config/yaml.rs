@@ -1,0 +1,422 @@
+//! Minimal YAML-subset parser.
+//!
+//! Supported: nested block maps, block sequences (`- item`), scalars
+//! (string / int / float / bool / null), inline comments, quoted strings,
+//! and flow sequences of scalars (`[a, b, c]`). This covers every config
+//! in configs/ and the paper's published examples. Anchors, multi-line
+//! scalars, and flow maps are intentionally out of scope.
+
+use std::collections::BTreeMap;
+use std::fmt;
+
+#[derive(Clone, Debug, PartialEq)]
+pub enum Yaml {
+    Null,
+    Bool(bool),
+    Int(i64),
+    Float(f64),
+    Str(String),
+    Seq(Vec<Yaml>),
+    Map(BTreeMap<String, Yaml>),
+}
+
+#[derive(Debug, thiserror::Error)]
+pub enum YamlError {
+    #[error("line {0}: {1}")]
+    Parse(usize, String),
+}
+
+impl Yaml {
+    pub fn get(&self, key: &str) -> Option<&Yaml> {
+        match self {
+            Yaml::Map(m) => m.get(key),
+            _ => None,
+        }
+    }
+
+    /// Dotted-path lookup: `cfg.path("compression.quantization.bits")`.
+    pub fn path(&self, dotted: &str) -> Option<&Yaml> {
+        let mut cur = self;
+        for part in dotted.split('.') {
+            cur = cur.get(part)?;
+        }
+        Some(cur)
+    }
+
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Yaml::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    pub fn as_i64(&self) -> Option<i64> {
+        match self {
+            Yaml::Int(i) => Some(*i),
+            _ => None,
+        }
+    }
+
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            Yaml::Float(f) => Some(*f),
+            Yaml::Int(i) => Some(*i as f64),
+            _ => None,
+        }
+    }
+
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            Yaml::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+
+    pub fn as_seq(&self) -> Option<&[Yaml]> {
+        match self {
+            Yaml::Seq(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    /// Typed getters with defaults — the schema layer leans on these.
+    pub fn str_or(&self, key: &str, default: &str) -> String {
+        self.get(key).and_then(Yaml::as_str).unwrap_or(default).to_string()
+    }
+
+    pub fn i64_or(&self, key: &str, default: i64) -> i64 {
+        self.get(key).and_then(Yaml::as_i64).unwrap_or(default)
+    }
+
+    pub fn f64_or(&self, key: &str, default: f64) -> f64 {
+        self.get(key).and_then(Yaml::as_f64).unwrap_or(default)
+    }
+
+    pub fn bool_or(&self, key: &str, default: bool) -> bool {
+        self.get(key).and_then(Yaml::as_bool).unwrap_or(default)
+    }
+}
+
+impl fmt::Display for Yaml {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Yaml::Null => write!(f, "null"),
+            Yaml::Bool(b) => write!(f, "{b}"),
+            Yaml::Int(i) => write!(f, "{i}"),
+            Yaml::Float(x) => write!(f, "{x}"),
+            Yaml::Str(s) => write!(f, "{s}"),
+            Yaml::Seq(s) => {
+                write!(f, "[")?;
+                for (i, v) in s.iter().enumerate() {
+                    if i > 0 {
+                        write!(f, ", ")?;
+                    }
+                    write!(f, "{v}")?;
+                }
+                write!(f, "]")
+            }
+            Yaml::Map(m) => write!(f, "{{{} keys}}", m.len()),
+        }
+    }
+}
+
+fn parse_scalar(s: &str) -> Yaml {
+    let t = s.trim();
+    if t.is_empty() || t == "~" || t == "null" {
+        return Yaml::Null;
+    }
+    if (t.starts_with('"') && t.ends_with('"') && t.len() >= 2)
+        || (t.starts_with('\'') && t.ends_with('\'') && t.len() >= 2)
+    {
+        return Yaml::Str(t[1..t.len() - 1].to_string());
+    }
+    match t {
+        "true" | "True" => return Yaml::Bool(true),
+        "false" | "False" => return Yaml::Bool(false),
+        _ => {}
+    }
+    if let Ok(i) = t.parse::<i64>() {
+        return Yaml::Int(i);
+    }
+    if let Ok(x) = t.parse::<f64>() {
+        return Yaml::Float(x);
+    }
+    if t.starts_with('[') && t.ends_with(']') {
+        let inner = &t[1..t.len() - 1];
+        if inner.trim().is_empty() {
+            return Yaml::Seq(vec![]);
+        }
+        return Yaml::Seq(inner.split(',').map(parse_scalar).collect());
+    }
+    Yaml::Str(t.to_string())
+}
+
+/// Strip comments outside of quotes.
+fn strip_comment(line: &str) -> &str {
+    let mut in_s = false;
+    let mut in_d = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '\'' if !in_d => in_s = !in_s,
+            '"' if !in_s => in_d = !in_d,
+            '#' if !in_s && !in_d => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+struct Line {
+    indent: usize,
+    content: String,
+    num: usize,
+}
+
+fn lex(src: &str) -> Vec<Line> {
+    let mut out = Vec::new();
+    for (num, raw) in src.lines().enumerate() {
+        let no_comment = strip_comment(raw);
+        let trimmed = no_comment.trim_end();
+        if trimmed.trim().is_empty() {
+            continue;
+        }
+        if trimmed.trim() == "---" {
+            continue;
+        }
+        let indent = trimmed.len() - trimmed.trim_start().len();
+        out.push(Line {
+            indent,
+            content: trimmed.trim_start().to_string(),
+            num: num + 1,
+        });
+    }
+    out
+}
+
+pub fn parse(src: &str) -> Result<Yaml, YamlError> {
+    let lines = lex(src);
+    if lines.is_empty() {
+        return Ok(Yaml::Map(BTreeMap::new()));
+    }
+    let mut pos = 0;
+    let v = parse_block(&lines, &mut pos, lines[0].indent)?;
+    if pos < lines.len() {
+        return Err(YamlError::Parse(
+            lines[pos].num,
+            format!("unexpected trailing content: {}", lines[pos].content),
+        ));
+    }
+    Ok(v)
+}
+
+fn parse_block(lines: &[Line], pos: &mut usize, indent: usize) -> Result<Yaml, YamlError> {
+    if *pos >= lines.len() {
+        return Ok(Yaml::Null);
+    }
+    if lines[*pos].content.starts_with("- ") || lines[*pos].content == "-" {
+        parse_seq(lines, pos, indent)
+    } else {
+        parse_map(lines, pos, indent)
+    }
+}
+
+fn parse_seq(lines: &[Line], pos: &mut usize, indent: usize) -> Result<Yaml, YamlError> {
+    let mut items = Vec::new();
+    while *pos < lines.len() {
+        let line = &lines[*pos];
+        if line.indent < indent {
+            break;
+        }
+        if line.indent > indent {
+            return Err(YamlError::Parse(line.num, "bad sequence indent".into()));
+        }
+        if !(line.content.starts_with("- ") || line.content == "-") {
+            break;
+        }
+        let rest = line.content[1..].trim().to_string();
+        *pos += 1;
+        if rest.is_empty() {
+            // nested block under "-"
+            if *pos < lines.len() && lines[*pos].indent > indent {
+                let child_indent = lines[*pos].indent;
+                items.push(parse_block(lines, pos, child_indent)?);
+            } else {
+                items.push(Yaml::Null);
+            }
+        } else if rest.contains(':') && !rest.starts_with('[') {
+            // inline "key: value" — start of a map item; re-parse with
+            // the remainder as its first line, children indented deeper.
+            let mut map = BTreeMap::new();
+            let (k, v) = split_kv(&rest, line.num)?;
+            insert_kv(&mut map, k, v, lines, pos, indent + 2)?;
+            // additional keys of the same item are indented by 2 from "-"
+            while *pos < lines.len() && lines[*pos].indent == indent + 2 {
+                let l2 = &lines[*pos];
+                if l2.content.starts_with("- ") {
+                    break;
+                }
+                let (k2, v2) = split_kv(&l2.content, l2.num)?;
+                *pos += 1;
+                insert_kv(&mut map, k2, v2, lines, pos, indent + 4)?;
+            }
+            items.push(Yaml::Map(map));
+        } else {
+            items.push(parse_scalar(&rest));
+        }
+    }
+    Ok(Yaml::Seq(items))
+}
+
+fn split_kv(content: &str, num: usize) -> Result<(String, String), YamlError> {
+    let idx = content
+        .find(':')
+        .ok_or_else(|| YamlError::Parse(num, format!("expected key: value in `{content}`")))?;
+    Ok((
+        content[..idx].trim().to_string(),
+        content[idx + 1..].trim().to_string(),
+    ))
+}
+
+fn insert_kv(
+    map: &mut BTreeMap<String, Yaml>,
+    key: String,
+    val: String,
+    lines: &[Line],
+    pos: &mut usize,
+    min_child_indent: usize,
+) -> Result<(), YamlError> {
+    if val.is_empty() {
+        if *pos < lines.len() && lines[*pos].indent >= min_child_indent {
+            let child_indent = lines[*pos].indent;
+            let child = parse_block(lines, pos, child_indent)?;
+            map.insert(key, child);
+        } else {
+            map.insert(key, Yaml::Null);
+        }
+    } else {
+        map.insert(key, parse_scalar(&val));
+    }
+    Ok(())
+}
+
+fn parse_map(lines: &[Line], pos: &mut usize, indent: usize) -> Result<Yaml, YamlError> {
+    let mut map = BTreeMap::new();
+    while *pos < lines.len() {
+        let line = &lines[*pos];
+        if line.indent < indent {
+            break;
+        }
+        if line.indent > indent {
+            return Err(YamlError::Parse(line.num, "bad map indent".into()));
+        }
+        if line.content.starts_with("- ") {
+            break;
+        }
+        let (k, v) = split_kv(&line.content, line.num)?;
+        *pos += 1;
+        insert_kv(&mut map, k, v, lines, pos, indent + 1)?;
+    }
+    Ok(Yaml::Map(map))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"
+# AngelSlim-style config
+global:
+  save_path: ./out
+  deploy_backend: vllm
+model:
+  name: tiny-target     # trailing comment
+  dtype: "fp32"
+compression:
+  method: quantization
+  quantization:
+    algo: leptoquant
+    bits: 8
+    alpha_grid: [0.0, 0.0005, 0.001]
+    use_smoothing: false
+dataset:
+  kind: synthetic
+  num_samples: 128
+"#;
+
+    #[test]
+    fn parses_nested_maps() {
+        let y = parse(SAMPLE).unwrap();
+        assert_eq!(y.path("global.save_path").unwrap().as_str(), Some("./out"));
+        assert_eq!(y.path("model.dtype").unwrap().as_str(), Some("fp32"));
+        assert_eq!(
+            y.path("compression.quantization.bits").unwrap().as_i64(),
+            Some(8)
+        );
+        assert_eq!(
+            y.path("compression.quantization.use_smoothing")
+                .unwrap()
+                .as_bool(),
+            Some(false)
+        );
+        assert_eq!(y.path("dataset.num_samples").unwrap().as_i64(), Some(128));
+    }
+
+    #[test]
+    fn parses_flow_seq() {
+        let y = parse(SAMPLE).unwrap();
+        let grid = y
+            .path("compression.quantization.alpha_grid")
+            .unwrap()
+            .as_seq()
+            .unwrap();
+        assert_eq!(grid.len(), 3);
+        assert_eq!(grid[1].as_f64(), Some(0.0005));
+        assert_eq!(grid[0].as_f64(), Some(0.0));
+    }
+
+    #[test]
+    fn parses_block_seq() {
+        let y = parse("methods:\n  - fastv\n  - idpruner\n  - samp\n").unwrap();
+        let s = y.get("methods").unwrap().as_seq().unwrap();
+        assert_eq!(s.len(), 3);
+        assert_eq!(s[2].as_str(), Some("samp"));
+    }
+
+    #[test]
+    fn parses_seq_of_maps() {
+        let src = "jobs:\n  - name: a\n    bits: 4\n  - name: b\n    bits: 8\n";
+        let y = parse(src).unwrap();
+        let s = y.get("jobs").unwrap().as_seq().unwrap();
+        assert_eq!(s.len(), 2);
+        assert_eq!(s[0].get("name").unwrap().as_str(), Some("a"));
+        assert_eq!(s[1].get("bits").unwrap().as_i64(), Some(8));
+    }
+
+    #[test]
+    fn scalars_and_defaults() {
+        let y = parse("a: 1\nb: 2.5\nc: yes_string\nd: true\ne:\n").unwrap();
+        assert_eq!(y.i64_or("a", 0), 1);
+        assert_eq!(y.f64_or("b", 0.0), 2.5);
+        assert_eq!(y.str_or("c", ""), "yes_string");
+        assert!(y.bool_or("d", false));
+        assert_eq!(y.get("e"), Some(&Yaml::Null));
+        assert_eq!(y.i64_or("missing", 42), 42);
+    }
+
+    #[test]
+    fn quoted_hash_not_comment() {
+        let y = parse("k: \"a # b\"\n").unwrap();
+        assert_eq!(y.get("k").unwrap().as_str(), Some("a # b"));
+    }
+
+    #[test]
+    fn empty_doc() {
+        assert_eq!(parse("").unwrap(), Yaml::Map(BTreeMap::new()));
+        assert_eq!(parse("# just a comment\n").unwrap(), Yaml::Map(BTreeMap::new()));
+    }
+
+    #[test]
+    fn rejects_bad_indent() {
+        assert!(parse("a:\n  b: 1\n c: 2\n").is_err());
+    }
+}

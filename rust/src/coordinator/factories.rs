@@ -1,0 +1,151 @@
+//! The three factories of the paper's Module Init stage (Fig. 6):
+//! ModelFactory (registered base models), DataFactory (dataset loaders),
+//! SlimFactory (compression strategy dispatch).
+
+use crate::config::SlimConfig;
+use crate::data;
+use crate::models::{Transformer, WeightStore};
+use anyhow::{bail, Context, Result};
+
+/// ModelFactory: registry keys -> loaded models.
+pub struct ModelFactory;
+
+impl ModelFactory {
+    pub fn registered() -> &'static [&'static str] {
+        &["tiny-target", "tiny-draft", "tiny-small"]
+    }
+
+    pub fn load(cfg: &SlimConfig) -> Result<Transformer> {
+        let ws = WeightStore::load(&cfg.model.artifacts_dir)
+            .context("loading weight store")?;
+        let key = match cfg.model.name.as_str() {
+            "tiny-target" => "target",
+            "tiny-draft" => "draft",
+            other => bail!(
+                "unknown model `{other}` (registered: {:?})",
+                Self::registered()
+            ),
+        };
+        Transformer::from_store(&ws, key)
+    }
+}
+
+/// DataFactory: dataset kind -> calibration / evaluation token sets.
+pub struct DataFactory;
+
+pub struct Datasets {
+    /// calibration sequences (token windows)
+    pub calib: Vec<Vec<u8>>,
+    /// held-out evaluation stream
+    pub eval: Vec<u8>,
+}
+
+impl DataFactory {
+    pub fn load(cfg: &SlimConfig) -> Result<Datasets> {
+        let eval = match cfg.dataset.kind.as_str() {
+            "synthetic" => data::markov_corpus(32_768, cfg.dataset.seed ^ 0xE7A1),
+            "artifact" => data::load_corpus(&format!(
+                "{}/eval_corpus.bin",
+                cfg.model.artifacts_dir
+            ))?,
+            other => bail!("unknown dataset kind `{other}`"),
+        };
+        let train = match cfg.dataset.kind.as_str() {
+            "artifact" => data::load_corpus(&format!(
+                "{}/train_corpus.bin",
+                cfg.model.artifacts_dir
+            ))?,
+            _ => data::markov_corpus(65_536, cfg.dataset.seed),
+        };
+        let mut calib = Vec::with_capacity(cfg.dataset.num_samples);
+        let stride = (train.len() - cfg.dataset.seq_len - 1) / cfg.dataset.num_samples.max(1);
+        for i in 0..cfg.dataset.num_samples {
+            let s = i * stride.max(1);
+            calib.push(train[s..s + cfg.dataset.seq_len].to_vec());
+        }
+        Ok(Datasets { calib, eval })
+    }
+}
+
+/// SlimFactory: compression method registry.
+pub struct SlimFactory;
+
+impl SlimFactory {
+    pub fn registered() -> &'static [(&'static str, &'static [&'static str])] {
+        &[
+            (
+                "quantization",
+                &[
+                    "fp8_dynamic", "fp8_lepto", "leptoquant", "int8", "int4",
+                    "gptq", "awq", "seq2", "ternary", "w4a8",
+                ],
+            ),
+            ("spec_decode", &["eagle3", "vanilla", "spec_exit"]),
+            (
+                "sparse_attn",
+                &[
+                    "dense", "a_shape", "tri_shape", "dilated", "strided",
+                    "minference", "xattention", "flexprefill", "stem",
+                ],
+            ),
+            (
+                "token_prune",
+                &[
+                    "idpruner", "fastv", "divprune", "visionzip", "dart",
+                    "vispruner", "scope", "visionselector", "hiprune", "samp",
+                    "atome", "fastadasp", "cdpruner",
+                ],
+            ),
+        ]
+    }
+
+    pub fn validate(cfg: &SlimConfig) -> Result<()> {
+        let method = cfg.compression.method.as_str();
+        let algo = cfg.compression.algo.as_str();
+        let entry = Self::registered()
+            .iter()
+            .find(|(m, _)| *m == method)
+            .with_context(|| format!("unknown method {method}"))?;
+        if !entry.1.contains(&algo) {
+            bail!("algo `{algo}` not registered for method `{method}` (have {:?})", entry.1);
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::SlimConfig;
+
+    fn cfg(method: &str, algo: &str) -> SlimConfig {
+        SlimConfig::from_str(&format!(
+            "model:\n  name: tiny-target\ncompression:\n  method: {method}\n  {method}:\n    algo: {algo}\n"
+        ))
+        .unwrap()
+    }
+
+    #[test]
+    fn slim_factory_validates_known_algos() {
+        assert!(SlimFactory::validate(&cfg("quantization", "gptq")).is_ok());
+        assert!(SlimFactory::validate(&cfg("sparse_attn", "stem")).is_ok());
+        assert!(SlimFactory::validate(&cfg("token_prune", "samp")).is_ok());
+        assert!(SlimFactory::validate(&cfg("quantization", "wizardry")).is_err());
+    }
+
+    #[test]
+    fn data_factory_synthetic() {
+        let c = cfg("quantization", "int8");
+        let ds = DataFactory::load(&c).unwrap();
+        assert_eq!(ds.calib.len(), c.dataset.num_samples);
+        assert!(ds.calib.iter().all(|s| s.len() == c.dataset.seq_len));
+        assert!(!ds.eval.is_empty());
+    }
+
+    #[test]
+    fn model_factory_rejects_unknown() {
+        let mut c = cfg("quantization", "int8");
+        c.model.name = "gpt-4".into();
+        assert!(ModelFactory::load(&c).is_err());
+    }
+}

@@ -1,0 +1,9 @@
+//! The Compress Engine — the paper's Fig. 6 pipeline: YAML config →
+//! Module Init (ModelFactory / DataFactory / SlimFactory) → Compress Engine
+//! (prepare → calibrate → compress → save → eval) → deployable artifacts.
+
+pub mod engine;
+pub mod factories;
+
+pub use engine::{CompressEngine, CompressReport};
+pub use factories::{DataFactory, ModelFactory, SlimFactory};

@@ -1,0 +1,171 @@
+//! Synthetic audio-token streams — the ASR-benchmark substitute for the
+//! audio token merge/prune evaluation (paper Table 13).
+//!
+//! Speech tokens have strong *temporal* redundancy: a phoneme spans several
+//! consecutive frames whose features are near-identical. A stream here is a
+//! sequence of phoneme segments (variable duration) with per-frame features
+//! near the phoneme centroid, plus encoder attention scores that peak at
+//! segment boundaries / stressed phonemes. The ASR proxy (eval/asr.rs)
+//! decodes the phoneme sequence from the (possibly merged/pruned) tokens
+//! and computes an edit-distance WER against the ground-truth transcript —
+//! the same failure mode real ASR pruning benchmarks measure: dropping or
+//! over-merging frames deletes/garbles phonemes.
+
+use crate::util::Rng;
+
+#[derive(Clone, Debug)]
+pub struct AudioScene {
+    /// frame features [n_frames][dim]
+    pub features: Vec<Vec<f32>>,
+    /// encoder attention score per frame (importance analogue)
+    pub attention: Vec<f32>,
+    /// per-frame phoneme id
+    pub frame_phonemes: Vec<usize>,
+    /// ground-truth transcript: run-length-collapsed phoneme sequence
+    pub transcript: Vec<usize>,
+}
+
+pub struct AudioSceneGen {
+    pub dim: usize,
+    pub n_phonemes: usize,
+    pub mean_segment_len: usize,
+    /// frame-level feature noise around the phoneme centroid; Table 13's
+    /// three model rows map to three noise profiles
+    pub noise: f32,
+    pub centroids: Vec<Vec<f32>>,
+    seed: u64,
+}
+
+impl AudioSceneGen {
+    pub fn new(dim: usize, n_phonemes: usize, noise: f32, seed: u64) -> Self {
+        let mut rng = Rng::new(seed ^ 0x0A0D10);
+        let centroids = (0..n_phonemes)
+            .map(|_| {
+                let mut v = rng.normal_vec(dim, 1.0);
+                let n = v.iter().map(|x| x * x).sum::<f32>().sqrt();
+                v.iter_mut().for_each(|x| *x *= 2.0 / n);
+                v
+            })
+            .collect();
+        AudioSceneGen {
+            dim,
+            n_phonemes,
+            mean_segment_len: 3,
+            noise,
+            centroids,
+            seed,
+        }
+    }
+
+    pub fn scene(&self, idx: u64, n_frames: usize) -> AudioScene {
+        let mut rng = Rng::new(self.seed.wrapping_add(idx.wrapping_mul(0xA11CE)));
+        let mut features = Vec::with_capacity(n_frames);
+        let mut attention = Vec::with_capacity(n_frames);
+        let mut frame_phonemes = Vec::with_capacity(n_frames);
+        let mut transcript = Vec::new();
+
+        let mut prev = usize::MAX;
+        while features.len() < n_frames {
+            let mut ph = rng.below(self.n_phonemes);
+            if ph == prev {
+                ph = (ph + 1) % self.n_phonemes;
+            }
+            prev = ph;
+            transcript.push(ph);
+            let dur = 1 + rng.below(self.mean_segment_len * 2 - 1);
+            let stressed = rng.bool(0.3);
+            for f in 0..dur {
+                if features.len() >= n_frames {
+                    break;
+                }
+                // attention peaks on the first frame of a segment and on
+                // stressed phonemes; mid-segment frames are redundant
+                let base = if f == 0 { 1.0 } else { 0.3 / (1.0 + f as f32) };
+                let a = base + if stressed { 0.5 } else { 0.0 } + rng.f32() * 0.35;
+                attention.push(a);
+                // articulation: high-attention frames are cleaner — this is
+                // what attention-*weighted* merging (Samp eq. 9) exploits
+                // over uniform averaging
+                let frame_noise = self.noise * (1.6 - a.min(1.5));
+                let mut feat = self.centroids[ph].clone();
+                for x in feat.iter_mut() {
+                    *x += rng.normal() * frame_noise;
+                }
+                features.push(feat);
+                frame_phonemes.push(ph);
+            }
+        }
+        // transcript may have a trailing phoneme with zero frames if we
+        // broke early — trim it
+        if let Some(&last) = frame_phonemes.last() {
+            while transcript.last() != Some(&last) {
+                transcript.pop();
+            }
+        }
+        AudioScene { features, attention, frame_phonemes, transcript }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn scene_shapes() {
+        let gen = AudioSceneGen::new(24, 32, 0.15, 0);
+        let s = gen.scene(0, 200);
+        assert_eq!(s.features.len(), 200);
+        assert_eq!(s.attention.len(), 200);
+        assert_eq!(s.frame_phonemes.len(), 200);
+        assert!(!s.transcript.is_empty());
+    }
+
+    #[test]
+    fn transcript_matches_frames() {
+        let gen = AudioSceneGen::new(16, 16, 0.1, 1);
+        let s = gen.scene(2, 150);
+        // run-length-collapse the frame phonemes; must equal transcript
+        let mut collapsed = Vec::new();
+        for &p in &s.frame_phonemes {
+            if collapsed.last() != Some(&p) {
+                collapsed.push(p);
+            }
+        }
+        assert_eq!(collapsed, s.transcript);
+    }
+
+    #[test]
+    fn adjacent_frames_similar_within_segment() {
+        let gen = AudioSceneGen::new(24, 32, 0.1, 3);
+        let s = gen.scene(1, 120);
+        let mut same_sim = Vec::new();
+        let mut diff_sim = Vec::new();
+        for i in 1..s.features.len() {
+            let sim = crate::util::stats::cosine(&s.features[i - 1], &s.features[i]);
+            if s.frame_phonemes[i - 1] == s.frame_phonemes[i] {
+                same_sim.push(sim);
+            } else {
+                diff_sim.push(sim);
+            }
+        }
+        let avg = |v: &[f32]| v.iter().sum::<f32>() / v.len().max(1) as f32;
+        assert!(avg(&same_sim) > avg(&diff_sim) + 0.2);
+    }
+
+    #[test]
+    fn segment_starts_get_attention() {
+        let gen = AudioSceneGen::new(16, 16, 0.1, 5);
+        let s = gen.scene(0, 200);
+        let mut starts = Vec::new();
+        let mut mids = Vec::new();
+        for i in 0..s.frame_phonemes.len() {
+            if i == 0 || s.frame_phonemes[i] != s.frame_phonemes[i - 1] {
+                starts.push(s.attention[i]);
+            } else {
+                mids.push(s.attention[i]);
+            }
+        }
+        let avg = |v: &[f32]| v.iter().sum::<f32>() / v.len().max(1) as f32;
+        assert!(avg(&starts) > avg(&mids) + 0.3);
+    }
+}

@@ -1,0 +1,17 @@
+//! Synthetic workload generators — the DataFactory substrate.
+//!
+//! The paper evaluates on proprietary corpora and public benchmark suites
+//! (GSM8K, LongBench, RULER, LibriSpeech, ...). None are available here, so
+//! each generator produces a *deterministic, seeded* synthetic equivalent
+//! that exercises the same code path and yields a graded metric with the
+//! same comparison structure (see DESIGN.md §3).
+
+pub mod audio;
+pub mod corpus;
+pub mod longctx;
+pub mod vision;
+
+pub use audio::{AudioScene, AudioSceneGen};
+pub use corpus::{load_corpus, markov_corpus, RequestGen, TokenRequest};
+pub use longctx::{LongCtxTask, LongCtxTaskKind, NeedleTask};
+pub use vision::{VisionScene, VisionSceneGen};

@@ -1,0 +1,171 @@
+//! Synthetic vision-token scenes — the VQA-benchmark substitute for the
+//! token-pruning evaluation (paper Table 12).
+//!
+//! A scene is a grid of token features with the structure visual pruners
+//! must navigate: a small set of *salient* tokens carrying task signal,
+//! clusters of near-duplicate background tokens (spatial redundancy), and
+//! i.i.d. noise tokens. The task proxy (eval/vqa.rs) classifies the scene
+//! from an attention-pooled embedding; pruning quality is how well the
+//! kept subset preserves the full-scene decision — exactly the importance
+//! vs diversity trade-off IDPruner's MMR objective targets.
+
+use crate::util::Rng;
+
+#[derive(Clone, Debug)]
+pub struct VisionScene {
+    /// token features [n_tokens][dim]
+    pub features: Vec<Vec<f32>>,
+    /// importance scores (e.g. CLS-attention analogue), one per token
+    pub importance: Vec<f32>,
+    /// ground-truth class of the scene
+    pub label: usize,
+    /// indices of the salient tokens (diagnostics only)
+    pub salient: Vec<usize>,
+}
+
+pub struct VisionSceneGen {
+    pub n_tokens: usize,
+    pub dim: usize,
+    pub n_classes: usize,
+    pub n_salient: usize,
+    pub n_clusters: usize,
+    /// class prototype directions [n_classes][dim]
+    pub prototypes: Vec<Vec<f32>>,
+    seed: u64,
+}
+
+impl VisionSceneGen {
+    pub fn new(n_tokens: usize, dim: usize, n_classes: usize, seed: u64) -> Self {
+        let mut rng = Rng::new(seed ^ 0x5EED_0515);
+        let prototypes = (0..n_classes)
+            .map(|_| {
+                let mut v = rng.normal_vec(dim, 1.0);
+                let n = v.iter().map(|x| x * x).sum::<f32>().sqrt();
+                v.iter_mut().for_each(|x| *x /= n);
+                v
+            })
+            .collect();
+        VisionSceneGen {
+            n_tokens,
+            dim,
+            n_classes,
+            n_salient: (n_tokens / 24).max(4),
+            n_clusters: 6,
+            prototypes,
+            seed,
+        }
+    }
+
+    pub fn scene(&self, idx: u64) -> VisionScene {
+        let mut rng = Rng::new(self.seed.wrapping_add(idx.wrapping_mul(0x9E37)));
+        let label = rng.below(self.n_classes);
+        let proto = &self.prototypes[label];
+
+        let mut features = Vec::with_capacity(self.n_tokens);
+        let mut importance = vec![0.0f32; self.n_tokens];
+
+        // background: a few clusters of near-duplicates (redundancy),
+        // unit-norm so they don't drown the class signal in pooled space
+        let centers: Vec<Vec<f32>> = (0..self.n_clusters)
+            .map(|_| {
+                let mut v = rng.normal_vec(self.dim, 1.0);
+                let n = v.iter().map(|x| x * x).sum::<f32>().sqrt().max(1e-6);
+                v.iter_mut().for_each(|x| *x /= n);
+                v
+            })
+            .collect();
+        for _ in 0..self.n_tokens {
+            let c = &centers[rng.below(self.n_clusters)];
+            let mut f = c.clone();
+            for x in f.iter_mut() {
+                *x += rng.normal() * 0.08; // tight cluster
+            }
+            features.push(f);
+        }
+
+        // salient tokens: carry the class prototype + moderate importance;
+        // several of them are *mutually redundant* copies, so a pruner that
+        // only ranks by importance wastes budget (DivPrune/IDPruner story).
+        let salient = rng.choose(self.n_tokens, self.n_salient);
+        for (si, &t) in salient.iter().enumerate() {
+            let strength = rng.range_f32(0.55, 1.0);
+            // half the salient set duplicates direction 0 of the prototype
+            let mut dir = proto.clone();
+            if si % 2 == 0 {
+                for (j, x) in dir.iter_mut().enumerate() {
+                    *x += 0.3 * centers[0][j];
+                }
+            } else {
+                // unique complementary evidence
+                for (j, x) in dir.iter_mut().enumerate() {
+                    *x = *x * 0.7 + 0.7 * ((j as f32 * (si as f32 + 2.0)).sin());
+                }
+            }
+            for j in 0..self.dim {
+                features[t][j] = dir[j] * strength + rng.normal() * 0.05;
+            }
+            importance[t] = strength;
+        }
+
+        // importance noise: many background tokens *look* important
+        // (high-attention sinks) — the trap single-metric pruners fall into.
+        for _ in 0..self.n_salient * 2 {
+            let t = rng.below(self.n_tokens);
+            if !salient.contains(&t) {
+                importance[t] = rng.range_f32(0.5, 1.0);
+            }
+        }
+        for imp in importance.iter_mut() {
+            *imp += rng.f32() * 0.1;
+        }
+
+        VisionScene { features, importance, label, salient }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn scene_shapes() {
+        let gen = VisionSceneGen::new(144, 32, 8, 0);
+        let s = gen.scene(0);
+        assert_eq!(s.features.len(), 144);
+        assert_eq!(s.features[0].len(), 32);
+        assert_eq!(s.importance.len(), 144);
+        assert!(s.label < 8);
+        assert!(!s.salient.is_empty());
+    }
+
+    #[test]
+    fn deterministic_per_index() {
+        let gen = VisionSceneGen::new(64, 16, 4, 1);
+        let a = gen.scene(5);
+        let b = gen.scene(5);
+        assert_eq!(a.features, b.features);
+        assert_eq!(a.label, b.label);
+        let c = gen.scene(6);
+        assert_ne!(a.features, c.features);
+    }
+
+    #[test]
+    fn salient_tokens_have_high_importance() {
+        let gen = VisionSceneGen::new(144, 32, 8, 2);
+        let s = gen.scene(3);
+        let avg_salient: f32 = s.salient.iter().map(|&t| s.importance[t]).sum::<f32>()
+            / s.salient.len() as f32;
+        let avg_all: f32 = s.importance.iter().sum::<f32>() / s.importance.len() as f32;
+        assert!(avg_salient > avg_all * 2.0);
+    }
+
+    #[test]
+    fn labels_cover_classes() {
+        let gen = VisionSceneGen::new(32, 8, 4, 3);
+        let mut seen = std::collections::HashSet::new();
+        for i in 0..40 {
+            seen.insert(gen.scene(i).label);
+        }
+        assert!(seen.len() >= 3);
+    }
+}

@@ -1,0 +1,121 @@
+//! ASR-proxy WER evaluation for audio token reduction (Table 13): decode
+//! each reduced token to its nearest phoneme centroid, run-length-collapse
+//! the sequence, and compute word-error-rate (edit distance) against the
+//! scene's ground-truth transcript. Over-merging deletes phonemes;
+//! importance-blind pruning garbles them — exactly the failure modes real
+//! ASR benchmarks punish.
+
+use crate::data::audio::AudioSceneGen;
+use crate::token_prune::{PruneContext, Reducer};
+
+/// Levenshtein distance between two sequences.
+pub fn edit_distance(a: &[usize], b: &[usize]) -> usize {
+    let (n, m) = (a.len(), b.len());
+    let mut prev: Vec<usize> = (0..=m).collect();
+    let mut cur = vec![0usize; m + 1];
+    for i in 1..=n {
+        cur[0] = i;
+        for j in 1..=m {
+            let sub = prev[j - 1] + usize::from(a[i - 1] != b[j - 1]);
+            cur[j] = sub.min(prev[j] + 1).min(cur[j - 1] + 1);
+        }
+        std::mem::swap(&mut prev, &mut cur);
+    }
+    prev[m]
+}
+
+/// WER in percent.
+pub fn wer(hyp: &[usize], truth: &[usize]) -> f64 {
+    100.0 * edit_distance(hyp, truth) as f64 / truth.len().max(1) as f64
+}
+
+fn decode(gen: &AudioSceneGen, feature: &[f32]) -> usize {
+    let mut best = 0;
+    let mut best_sim = f32::NEG_INFINITY;
+    for (p, c) in gen.centroids.iter().enumerate() {
+        let s = crate::util::stats::cosine(feature, c);
+        if s > best_sim {
+            best_sim = s;
+            best = p;
+        }
+    }
+    best
+}
+
+/// Mean WER of a reducer at a retain ratio over `n_scenes` scenes.
+pub fn eval_wer(
+    gen: &AudioSceneGen,
+    reducer: &dyn Reducer,
+    retain_ratio: f64,
+    n_scenes: usize,
+    frames: usize,
+) -> f64 {
+    let mut total = 0.0f64;
+    for i in 0..n_scenes {
+        let scene = gen.scene(i as u64, frames);
+        let retain = ((frames as f64 * retain_ratio).round() as usize).max(2);
+        let ctx = PruneContext {
+            features: &scene.features,
+            importance: &scene.attention,
+            retain,
+        };
+        let reduced = reducer.reduce(&ctx);
+        let mut hyp: Vec<usize> = reduced.iter().map(|t| decode(gen, &t.feature)).collect();
+        hyp.dedup(); // run-length collapse
+        total += wer(&hyp, &scene.transcript);
+    }
+    total / n_scenes as f64
+}
+
+/// Full-token reference WER (decoding every frame).
+pub fn baseline_wer(gen: &AudioSceneGen, n_scenes: usize, frames: usize) -> f64 {
+    let mut total = 0.0f64;
+    for i in 0..n_scenes {
+        let scene = gen.scene(i as u64, frames);
+        let mut hyp: Vec<usize> =
+            scene.features.iter().map(|f| decode(gen, f)).collect();
+        hyp.dedup();
+        total += wer(&hyp, &scene.transcript);
+    }
+    total / n_scenes as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::token_prune::audio::{AToMe, Samp};
+
+    #[test]
+    fn edit_distance_basics() {
+        assert_eq!(edit_distance(&[1, 2, 3], &[1, 2, 3]), 0);
+        assert_eq!(edit_distance(&[1, 2, 3], &[1, 3]), 1);
+        assert_eq!(edit_distance(&[], &[1, 2]), 2);
+        assert_eq!(edit_distance(&[1, 2], &[2, 1]), 2);
+    }
+
+    #[test]
+    fn baseline_wer_low() {
+        let gen = AudioSceneGen::new(24, 24, 0.1, 0);
+        let w = baseline_wer(&gen, 20, 150);
+        assert!(w < 10.0, "baseline WER {w}");
+    }
+
+    #[test]
+    fn samp_beats_pure_merge_at_aggressive_compression() {
+        let gen = AudioSceneGen::new(24, 24, 0.12, 1);
+        let samp = eval_wer(&gen, &Samp::default(), 0.6, 25, 150);
+        let atome = eval_wer(&gen, &AToMe, 0.6, 25, 150);
+        assert!(
+            samp <= atome + 2.0,
+            "samp {samp} should be competitive with a-tome {atome}"
+        );
+    }
+
+    #[test]
+    fn heavier_compression_hurts() {
+        let gen = AudioSceneGen::new(24, 24, 0.1, 2);
+        let mild = eval_wer(&gen, &Samp::default(), 0.7, 20, 150);
+        let harsh = eval_wer(&gen, &Samp::default(), 0.3, 20, 150);
+        assert!(harsh >= mild - 1.0, "mild {mild} harsh {harsh}");
+    }
+}

@@ -1,0 +1,15 @@
+//! Evaluation suites — the "automated benchmarking" layer of the paper:
+//! perplexity + task accuracy for quantization (Tables 1, 4-6), the
+//! LongBench-proxy suite for sparse attention (Table 11), the VQA-proxy
+//! for visual pruning (Table 12) and the ASR-proxy WER for audio reduction
+//! (Table 13).
+
+pub mod asr;
+pub mod longbench;
+pub mod perplexity;
+pub mod vqa;
+
+pub use asr::{eval_wer, wer};
+pub use longbench::eval_sparse_accuracy;
+pub use perplexity::{corpus_nll, task_accuracy};
+pub use vqa::eval_pruner_accuracy;

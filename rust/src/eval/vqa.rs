@@ -1,0 +1,110 @@
+//! VQA-proxy evaluation for visual token pruning (Table 12): the scene's
+//! class is decodable from the importance-weighted pool of its tokens; a
+//! pruner is scored by whether the pooled representation of its kept subset
+//! still classifies correctly (nearest prototype).
+
+use crate::data::vision::{VisionScene, VisionSceneGen};
+use crate::token_prune::{PruneContext, Pruner};
+
+fn pooled(scene: &VisionScene, kept: &[usize]) -> Vec<f32> {
+    let dim = scene.features[0].len();
+    let mut out = vec![0.0f32; dim];
+    let mut wsum = 0.0f32;
+    for &i in kept {
+        let w = scene.importance[i].max(0.01);
+        wsum += w;
+        for j in 0..dim {
+            out[j] += scene.features[i][j] * w;
+        }
+    }
+    for o in out.iter_mut() {
+        *o /= wsum.max(1e-6);
+    }
+    out
+}
+
+fn classify(gen: &VisionSceneGen, emb: &[f32]) -> usize {
+    let mut best = 0;
+    let mut best_sim = f32::NEG_INFINITY;
+    for (c, p) in gen.prototypes.iter().enumerate() {
+        let s = crate::util::stats::cosine(emb, p);
+        if s > best_sim {
+            best_sim = s;
+            best = c;
+        }
+    }
+    best
+}
+
+/// Accuracy of a pruner at a retain ratio over `n_scenes` scenes.
+/// `retain_ratio` = fraction of tokens kept (Table 12: 25% / 10%).
+pub fn eval_pruner_accuracy(
+    gen: &VisionSceneGen,
+    pruner: &dyn Pruner,
+    retain_ratio: f64,
+    n_scenes: usize,
+) -> f64 {
+    let mut correct = 0usize;
+    for i in 0..n_scenes {
+        let scene = gen.scene(i as u64);
+        let retain = ((scene.features.len() as f64 * retain_ratio).round() as usize).max(2);
+        let ctx = PruneContext {
+            features: &scene.features,
+            importance: &scene.importance,
+            retain,
+        };
+        let kept = pruner.apply(&ctx);
+        let pred = classify(gen, &pooled(&scene, &kept));
+        if pred == scene.label {
+            correct += 1;
+        }
+    }
+    correct as f64 / n_scenes as f64
+}
+
+/// Full-token baseline accuracy (the Table 12 "Baseline" row).
+pub fn baseline_accuracy(gen: &VisionSceneGen, n_scenes: usize) -> f64 {
+    let mut correct = 0usize;
+    for i in 0..n_scenes {
+        let scene = gen.scene(i as u64);
+        let all: Vec<usize> = (0..scene.features.len()).collect();
+        if classify(gen, &pooled(&scene, &all)) == scene.label {
+            correct += 1;
+        }
+    }
+    correct as f64 / n_scenes as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::token_prune::visual::{FastV, IdPruner};
+
+    #[test]
+    fn baseline_is_strong() {
+        let gen = VisionSceneGen::new(96, 24, 6, 0);
+        let acc = baseline_accuracy(&gen, 60);
+        assert!(acc > 0.6, "baseline acc {acc}");
+    }
+
+    #[test]
+    fn pruning_degrades_gracefully_and_idpruner_competitive() {
+        let gen = VisionSceneGen::new(96, 24, 6, 1);
+        let base = baseline_accuracy(&gen, 60);
+        let id25 = eval_pruner_accuracy(&gen, &IdPruner::default(), 0.25, 60);
+        let id10 = eval_pruner_accuracy(&gen, &IdPruner::default(), 0.10, 60);
+        // pruning noise tokens can even *help* slightly (seen on real
+        // benchmarks too); it must not collapse, and harsher pruning must
+        // not be better than milder pruning by much
+        assert!(id10 <= id25 + 0.1, "harsher pruning should not help: {id10} vs {id25}");
+        assert!(id25 > base - 0.3, "25% retention shouldn't collapse: {id25} vs {base}");
+    }
+
+    #[test]
+    fn idpruner_at_least_matches_fastv() {
+        let gen = VisionSceneGen::new(96, 24, 6, 2);
+        let id = eval_pruner_accuracy(&gen, &IdPruner::default(), 0.1, 80);
+        let fv = eval_pruner_accuracy(&gen, &FastV, 0.1, 80);
+        assert!(id >= fv - 0.05, "idpruner {id} vs fastv {fv}");
+    }
+}

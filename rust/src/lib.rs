@@ -1,0 +1,21 @@
+//! AngelSlim-RS: a unified large-model compression and acceleration toolkit.
+//!
+//! Reproduction of "AngelSlim: A more accessible, comprehensive, and
+//! efficient toolkit for large model compression" (Tencent Hunyuan, 2026).
+//! See DESIGN.md for the system inventory and EXPERIMENTS.md for the
+//! paper-vs-measured results.
+
+pub mod config;
+pub mod coordinator;
+pub mod data;
+pub mod eval;
+pub mod models;
+pub mod qat;
+pub mod quant;
+pub mod runtime;
+pub mod server;
+pub mod sparse_attn;
+pub mod spec_decode;
+pub mod tensor;
+pub mod token_prune;
+pub mod util;

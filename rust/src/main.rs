@@ -1,0 +1,159 @@
+//! AngelSlim-RS CLI — the leader entrypoint.
+//!
+//!   angelslim compress <config.yaml>     run a compression job
+//!   angelslim serve [--spec] [-n N]      serve synthetic requests
+//!   angelslim eval-quant                 PPL across all model artifacts
+//!   angelslim list                       registered models/algos/artifacts
+
+use angelslim::config::SlimConfig;
+use angelslim::coordinator::{CompressEngine, SlimFactory};
+use angelslim::data::RequestGen;
+use angelslim::eval;
+use angelslim::runtime::ArtifactRegistry;
+use angelslim::server::{BatcherCfg, ServingEngine};
+use angelslim::util::table::{f2, Table};
+use anyhow::Result;
+
+fn main() {
+    if let Err(e) = run() {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn run() -> Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    match args.first().map(String::as_str) {
+        Some("compress") => {
+            let path = args.get(1).map(String::as_str).unwrap_or("configs/quant_fp8.yaml");
+            cmd_compress(path)
+        }
+        Some("serve") => {
+            let spec = args.iter().any(|a| a == "--spec");
+            let n = args
+                .iter()
+                .position(|a| a == "-n")
+                .and_then(|i| args.get(i + 1))
+                .and_then(|s| s.parse().ok())
+                .unwrap_or(16);
+            cmd_serve(spec, n)
+        }
+        Some("eval-quant") => cmd_eval_quant(),
+        Some("list") => cmd_list(),
+        _ => {
+            println!(
+                "AngelSlim-RS — unified model compression toolkit (paper reproduction)\n\
+                 \n\
+                 usage:\n\
+                 \x20 angelslim compress <config.yaml>   run a YAML-configured job\n\
+                 \x20 angelslim serve [--spec] [-n N]    serve N synthetic requests\n\
+                 \x20 angelslim eval-quant               PPL across quantized artifacts\n\
+                 \x20 angelslim list                     registered components"
+            );
+            Ok(())
+        }
+    }
+}
+
+fn cmd_compress(path: &str) -> Result<()> {
+    println!("loading config {path}");
+    let engine = CompressEngine::from_file(path)?;
+    let r = engine.run()?;
+    let mut t = Table::new(
+        &format!("compress job: {} / {}", r.method, r.algo),
+        &["metric", "value"],
+    );
+    t.row_strs(&["before", &f2(r.metric_before)]);
+    t.row_strs(&["after", &f2(r.metric_after)]);
+    t.row_strs(&["compression", &f2(r.compression)]);
+    if r.peak_calib_bytes > 0 {
+        t.row_strs(&["peak calib bytes", &r.peak_calib_bytes.to_string()]);
+    }
+    t.print();
+    for n in &r.notes {
+        println!("  note: {n}");
+    }
+    Ok(())
+}
+
+fn cmd_serve(spec: bool, n: usize) -> Result<()> {
+    let mut reg = ArtifactRegistry::open("artifacts")?;
+    println!("platform: {}", reg.rt.platform());
+    let target = reg.model("model_target_fp32_b1")?;
+    let corpus = std::fs::read("artifacts/eval_corpus.bin")?;
+    let mut gen = RequestGen::new(corpus, 42);
+    let requests = gen.take(n);
+    let report = if spec {
+        let draft = reg.model("model_draft_fp32_b1")?;
+        ServingEngine::serve(requests, &target, Some((&draft, 3)), BatcherCfg::default(), 0)?
+    } else {
+        ServingEngine::serve::<std::rc::Rc<angelslim::runtime::ModelExecutable>, _>(
+            requests,
+            &target,
+            None,
+            BatcherCfg::default(),
+            0,
+        )?
+    };
+    let mut t = Table::new(
+        if spec { "serve (Eagle3-style speculative)" } else { "serve (vanilla)" },
+        &["metric", "value"],
+    );
+    t.row_strs(&["requests", &report.completed.len().to_string()]);
+    t.row_strs(&["tokens", &report.total_tokens.to_string()]);
+    t.row_strs(&["TPS", &f2(report.tps())]);
+    t.row_strs(&["AL", &f2(report.mean_al)]);
+    t.row_strs(&["TTFT p50 (ms)", &f2(report.ttft_summary().p50)]);
+    t.row_strs(&["latency p90 (ms)", &f2(report.latency_summary().p90)]);
+    t.print();
+    Ok(())
+}
+
+fn cmd_eval_quant() -> Result<()> {
+    let mut reg = ArtifactRegistry::open("artifacts")?;
+    let eval_corpus = std::fs::read("artifacts/eval_corpus.bin")?;
+    let mut t = Table::new(
+        "quantized model artifacts (PPL on held-out stream)",
+        &["artifact", "NLL", "PPL"],
+    );
+    for name in [
+        "model_target_fp32_b1",
+        "model_target_fp8_b1",
+        "model_target_int4_b1",
+        "model_target_seq2qat_b1",
+        "model_target_seq2_b1",
+        "model_target_ternary_b1",
+        "model_small_fp32_b1",
+    ] {
+        let exe = reg.model(name)?;
+        let nll = eval::corpus_nll(&exe, &eval_corpus, 48, 8)?;
+        t.row_strs(&[name, &f2(nll), &f2(nll.exp())]);
+    }
+    t.print();
+    Ok(())
+}
+
+fn cmd_list() -> Result<()> {
+    println!("methods and registered algorithms:");
+    for (method, algos) in SlimFactory::registered() {
+        println!("  {method}: {algos:?}");
+    }
+    if let Ok(reg) = ArtifactRegistry::open("artifacts") {
+        println!("artifacts present: {:?}", reg.available());
+    }
+    // validate the shipped configs parse
+    if let Ok(entries) = std::fs::read_dir("configs") {
+        for e in entries.flatten() {
+            let p = e.path();
+            if p.extension().map(|x| x == "yaml").unwrap_or(false) {
+                let ok = SlimConfig::from_file(p.to_str().unwrap()).is_ok();
+                println!(
+                    "config {:?}: {}",
+                    p.file_name().unwrap(),
+                    if ok { "ok" } else { "INVALID" }
+                );
+            }
+        }
+    }
+    Ok(())
+}

@@ -1,0 +1,13 @@
+//! Model substrate: loads artifacts/weights.bin + meta.json into a
+//! pure-Rust TinyTransformer whose forward matches python/compile/model.py
+//! op-for-op. This is the calibration / PTQ / sparse-attention
+//! experimentation path; the PJRT artifacts (runtime/) carry the serving
+//! hot path.
+
+pub mod sampler;
+pub mod transformer;
+pub mod weights;
+
+pub use sampler::Sampler;
+pub use transformer::{AttnOverride, Transformer, TransformerCfg};
+pub use weights::WeightStore;

@@ -1,0 +1,69 @@
+//! Token sampling policies for generation.
+
+use crate::tensor::ops::{argmax, softmax_inplace};
+use crate::util::Rng;
+
+#[derive(Clone, Debug)]
+pub enum Sampler {
+    Greedy,
+    Temperature(f32),
+}
+
+impl Sampler {
+    pub fn sample(&self, logits: &[f32], rng: &mut Rng) -> u8 {
+        match self {
+            Sampler::Greedy => argmax(logits) as u8,
+            Sampler::Temperature(t) => {
+                let mut p: Vec<f32> = logits.iter().map(|&l| l / t.max(1e-3)).collect();
+                softmax_inplace(&mut p);
+                rng.weighted(&p) as u8
+            }
+        }
+    }
+
+    /// Probability of `token` under this sampler's distribution.
+    pub fn prob(&self, logits: &[f32], token: u8) -> f32 {
+        match self {
+            Sampler::Greedy => {
+                if argmax(logits) == token as usize {
+                    1.0
+                } else {
+                    0.0
+                }
+            }
+            Sampler::Temperature(t) => {
+                let mut p: Vec<f32> = logits.iter().map(|&l| l / t.max(1e-3)).collect();
+                softmax_inplace(&mut p);
+                p[token as usize]
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn greedy_picks_argmax() {
+        let mut rng = Rng::new(0);
+        let mut logits = vec![0.0f32; 256];
+        logits[42] = 5.0;
+        assert_eq!(Sampler::Greedy.sample(&logits, &mut rng), 42);
+        assert_eq!(Sampler::Greedy.prob(&logits, 42), 1.0);
+        assert_eq!(Sampler::Greedy.prob(&logits, 41), 0.0);
+    }
+
+    #[test]
+    fn temperature_sampling_follows_distribution() {
+        let mut rng = Rng::new(1);
+        let mut logits = vec![0.0f32; 4];
+        logits[2] = 3.0;
+        let s = Sampler::Temperature(1.0);
+        let hits = (0..500)
+            .filter(|_| s.sample(&logits[..], &mut rng) == 2)
+            .count();
+        assert!(hits > 350, "hits {hits}");
+        assert!(s.prob(&logits, 2) > 0.7);
+    }
+}

@@ -1,0 +1,404 @@
+//! Pure-Rust TinyTransformer forward — op-for-op port of
+//! python/compile/model.py (learned pos emb, pre-RMSNorm, causal MHA,
+//! SwiGLU, untied head). Cross-validated against the PJRT fp32 artifact in
+//! tests/test_runtime.rs.
+//!
+//! Extras the PTQ / sparse-attention frameworks need:
+//!   * `apply_quantizer` — QDQ every linear in place (PTQ experiments)
+//!   * `AttnOverride::Mask` — inject a token-level attention keep-mask
+//!     (the sparse-attention accuracy evals)
+//!   * `capture_activations` — per-layer linear inputs (calibration for
+//!     GPTQ / AWQ / LeptoQuant)
+
+use crate::quant::WeightQuantizer;
+use crate::tensor::ops::{argmax, dot, rmsnorm, silu, softmax_inplace};
+use crate::tensor::Tensor;
+use anyhow::Result;
+
+use super::weights::WeightStore;
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct TransformerCfg {
+    pub vocab: usize,
+    pub d_model: usize,
+    pub n_layers: usize,
+    pub n_heads: usize,
+    pub d_ff: usize,
+    pub max_t: usize,
+}
+
+#[derive(Clone, Debug)]
+pub struct Layer {
+    pub ln1: Vec<f32>,
+    pub wq: Tensor,
+    pub wk: Tensor,
+    pub wv: Tensor,
+    pub wo: Tensor,
+    pub ln2: Vec<f32>,
+    pub w_gate: Tensor,
+    pub w_up: Tensor,
+    pub w_down: Tensor,
+}
+
+#[derive(Clone, Debug)]
+pub struct Transformer {
+    pub cfg: TransformerCfg,
+    pub embed: Tensor, // [vocab, d]
+    pub pos: Tensor,   // [max_t, d]
+    pub layers: Vec<Layer>,
+    pub ln_f: Vec<f32>,
+    pub head: Tensor, // [vocab, d]
+}
+
+/// Attention-behaviour override for sparse-attention experiments.
+#[derive(Clone, Debug, Default)]
+pub enum AttnOverride {
+    #[default]
+    None,
+    /// token-level keep mask, row-major [t, t]; combined with causality
+    Mask(Vec<bool>),
+}
+
+/// Captured per-layer activations (inputs to the linears) for calibration.
+#[derive(Clone, Debug)]
+pub struct LayerActivations {
+    /// post-ln1 (input to wq/wk/wv) [t, d]
+    pub attn_in: Tensor,
+    /// post-ln2 (input to w_gate/w_up) [t, d]
+    pub mlp_in: Tensor,
+    /// SwiGLU product (input to w_down) [t, d_ff]
+    pub mlp_mid: Tensor,
+}
+
+impl Transformer {
+    pub fn from_store(ws: &WeightStore, model: &str) -> Result<Self> {
+        let cfg = ws.model_cfg(model)?;
+        let t2 = |name: &str| -> Result<Tensor> {
+            let (data, shape) = ws.get(model, name)?;
+            Ok(Tensor::from_vec(shape, data.to_vec()))
+        };
+        let v1 = |name: &str| -> Result<Vec<f32>> {
+            let (data, _) = ws.get(model, name)?;
+            Ok(data.to_vec())
+        };
+        let mut layers = Vec::with_capacity(cfg.n_layers);
+        for i in 0..cfg.n_layers {
+            let p = format!("layer{i}.");
+            layers.push(Layer {
+                ln1: v1(&format!("{p}ln1"))?,
+                wq: t2(&format!("{p}wq"))?,
+                wk: t2(&format!("{p}wk"))?,
+                wv: t2(&format!("{p}wv"))?,
+                wo: t2(&format!("{p}wo"))?,
+                ln2: v1(&format!("{p}ln2"))?,
+                w_gate: t2(&format!("{p}w_gate"))?,
+                w_up: t2(&format!("{p}w_up"))?,
+                w_down: t2(&format!("{p}w_down"))?,
+            });
+        }
+        Ok(Transformer {
+            cfg,
+            embed: t2("embed")?,
+            pos: t2("pos")?,
+            layers,
+            ln_f: v1("ln_f")?,
+            head: t2("head")?,
+        })
+    }
+
+    /// QDQ every linear weight (and the head) with the given quantizer —
+    /// the PTQ experiment entry point.
+    pub fn apply_quantizer(&mut self, q: &dyn WeightQuantizer) {
+        for layer in self.layers.iter_mut() {
+            for w in [
+                &mut layer.wq,
+                &mut layer.wk,
+                &mut layer.wv,
+                &mut layer.wo,
+                &mut layer.w_gate,
+                &mut layer.w_up,
+                &mut layer.w_down,
+            ] {
+                let (n, k) = (w.rows(), w.cols());
+                q.qdq(&mut w.data, n, k);
+            }
+        }
+        let (n, k) = (self.head.rows(), self.head.cols());
+        q.qdq(&mut self.head.data, n, k);
+    }
+
+    /// Replace one layer's weight by an externally-quantized image (GPTQ /
+    /// AWQ write-back path). `which` is one of wq|wk|wv|wo|w_gate|w_up|w_down.
+    pub fn set_layer_weight(&mut self, layer: usize, which: &str, w: Tensor) {
+        let l = &mut self.layers[layer];
+        let slot = match which {
+            "wq" => &mut l.wq,
+            "wk" => &mut l.wk,
+            "wv" => &mut l.wv,
+            "wo" => &mut l.wo,
+            "w_gate" => &mut l.w_gate,
+            "w_up" => &mut l.w_up,
+            "w_down" => &mut l.w_down,
+            other => panic!("unknown weight {other}"),
+        };
+        assert_eq!(slot.dims(), w.dims());
+        *slot = w;
+    }
+
+    fn embed_tokens(&self, tokens: &[u8]) -> Tensor {
+        let t = tokens.len();
+        let d = self.cfg.d_model;
+        assert!(t <= self.cfg.max_t, "seq len {t} > max_t {}", self.cfg.max_t);
+        let mut x = Tensor::zeros(&[t, d]);
+        for (i, &tok) in tokens.iter().enumerate() {
+            let e = self.embed.row(tok as usize);
+            let p = self.pos.row(i);
+            let row = x.row_mut(i);
+            for j in 0..d {
+                row[j] = e[j] + p[j];
+            }
+        }
+        x
+    }
+
+    fn attn(&self, layer: &Layer, xn: &Tensor, ov: &AttnOverride) -> Tensor {
+        let t = xn.rows();
+        let d = self.cfg.d_model;
+        let h = self.cfg.n_heads;
+        let dh = d / h;
+        let q = crate::tensor::ops::matmul_transb(xn, &layer.wq);
+        let k = crate::tensor::ops::matmul_transb(xn, &layer.wk);
+        let v = crate::tensor::ops::matmul_transb(xn, &layer.wv);
+        let scale = 1.0 / (dh as f32).sqrt();
+        let mut ctx = Tensor::zeros(&[t, d]);
+        let mut scores = vec![0.0f32; t];
+        for head in 0..h {
+            let off = head * dh;
+            for qi in 0..t {
+                let qrow = &q.row(qi)[off..off + dh];
+                let limit = qi + 1;
+                for ki in 0..limit {
+                    let keep = match ov {
+                        AttnOverride::None => true,
+                        AttnOverride::Mask(m) => m[qi * t + ki],
+                    };
+                    scores[ki] = if keep {
+                        dot(qrow, &k.row(ki)[off..off + dh]) * scale
+                    } else {
+                        f32::NEG_INFINITY
+                    };
+                }
+                softmax_inplace(&mut scores[..limit]);
+                let crow = ctx.row_mut(qi);
+                for ki in 0..limit {
+                    let p = scores[ki];
+                    if p == 0.0 {
+                        continue;
+                    }
+                    let vrow = &v.row(ki)[off..off + dh];
+                    for j in 0..dh {
+                        crow[off + j] += p * vrow[j];
+                    }
+                }
+            }
+        }
+        crate::tensor::ops::matmul_transb(&ctx, &layer.wo)
+    }
+
+    fn mlp(&self, layer: &Layer, xn: &Tensor) -> (Tensor, Tensor) {
+        let gate = crate::tensor::ops::matmul_transb(xn, &layer.w_gate);
+        let up = crate::tensor::ops::matmul_transb(xn, &layer.w_up);
+        let mut mid = Tensor::zeros(&[xn.rows(), self.cfg.d_ff]);
+        for i in 0..xn.rows() {
+            let g = gate.row(i);
+            let u = up.row(i);
+            let m = mid.row_mut(i);
+            for j in 0..self.cfg.d_ff {
+                m[j] = silu(g[j]) * u[j];
+            }
+        }
+        let out = crate::tensor::ops::matmul_transb(&mid, &layer.w_down);
+        (out, mid)
+    }
+
+    fn norm(&self, x: &Tensor, g: &[f32]) -> Tensor {
+        let mut out = Tensor::zeros(&[x.rows(), x.cols()]);
+        for i in 0..x.rows() {
+            rmsnorm(x.row(i), g, out.row_mut(i));
+        }
+        out
+    }
+
+    /// Full forward: tokens -> logits [t, vocab].
+    pub fn forward(&self, tokens: &[u8], ov: &AttnOverride) -> Tensor {
+        let mut x = self.embed_tokens(tokens);
+        for layer in &self.layers {
+            let xn = self.norm(&x, &layer.ln1);
+            let a = self.attn(layer, &xn, ov);
+            for i in 0..x.numel() {
+                x.data[i] += a.data[i];
+            }
+            let xn = self.norm(&x, &layer.ln2);
+            let (m, _) = self.mlp(layer, &xn);
+            for i in 0..x.numel() {
+                x.data[i] += m.data[i];
+            }
+        }
+        let xf = self.norm(&x, &self.ln_f);
+        crate::tensor::ops::matmul_transb(&xf, &self.head)
+    }
+
+    /// Logits at the last position only.
+    pub fn next_logits(&self, tokens: &[u8], ov: &AttnOverride) -> Vec<f32> {
+        let logits = self.forward(tokens, ov);
+        logits.row(logits.rows() - 1).to_vec()
+    }
+
+    /// Greedy next token.
+    pub fn greedy_next(&self, tokens: &[u8]) -> u8 {
+        argmax(&self.next_logits(tokens, &AttnOverride::None)) as u8
+    }
+
+    /// Per-layer calibration activations.
+    pub fn capture_activations(&self, tokens: &[u8]) -> Vec<LayerActivations> {
+        let mut x = self.embed_tokens(tokens);
+        let mut caps = Vec::with_capacity(self.layers.len());
+        for layer in &self.layers {
+            let xn = self.norm(&x, &layer.ln1);
+            let a = self.attn(layer, &xn, &AttnOverride::None);
+            for i in 0..x.numel() {
+                x.data[i] += a.data[i];
+            }
+            let x2 = self.norm(&x, &layer.ln2);
+            let (m, mid) = self.mlp(layer, &x2);
+            for i in 0..x.numel() {
+                x.data[i] += m.data[i];
+            }
+            caps.push(LayerActivations { attn_in: xn, mlp_in: x2, mlp_mid: mid });
+        }
+        caps
+    }
+
+    /// Per-layer (Q, K, V) tensors for sparse-pattern estimation, shape
+    /// [t, d] each with heads packed along d.
+    pub fn capture_qk(&self, tokens: &[u8]) -> Vec<(Tensor, Tensor, Tensor)> {
+        let mut x = self.embed_tokens(tokens);
+        let mut out = Vec::with_capacity(self.layers.len());
+        for layer in &self.layers {
+            let xn = self.norm(&x, &layer.ln1);
+            let q = crate::tensor::ops::matmul_transb(&xn, &layer.wq);
+            let k = crate::tensor::ops::matmul_transb(&xn, &layer.wk);
+            let v = crate::tensor::ops::matmul_transb(&xn, &layer.wv);
+            out.push((q, k, v));
+            let a = self.attn(layer, &xn, &AttnOverride::None);
+            for i in 0..x.numel() {
+                x.data[i] += a.data[i];
+            }
+            let x2 = self.norm(&x, &layer.ln2);
+            let (m, _) = self.mlp(layer, &x2);
+            for i in 0..x.numel() {
+                x.data[i] += m.data[i];
+            }
+        }
+        out
+    }
+
+    /// Total linear-weight parameter count (size accounting).
+    pub fn linear_params(&self) -> usize {
+        let mut n = self.head.numel();
+        for l in &self.layers {
+            n += l.wq.numel()
+                + l.wk.numel()
+                + l.wv.numel()
+                + l.wo.numel()
+                + l.w_gate.numel()
+                + l.w_up.numel()
+                + l.w_down.numel();
+        }
+        n
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::AffineQuantizer;
+
+    fn load() -> Option<Transformer> {
+        if !std::path::Path::new("artifacts/weights.bin").exists() {
+            eprintln!("skipping: run `make artifacts` first");
+            return None;
+        }
+        let ws = WeightStore::load("artifacts").unwrap();
+        Some(Transformer::from_store(&ws, "target").unwrap())
+    }
+
+    #[test]
+    fn forward_shapes_and_finite() {
+        let Some(m) = load() else { return };
+        let toks = [1u8, 5, 9, 60, 2];
+        let logits = m.forward(&toks, &AttnOverride::None);
+        assert_eq!(logits.dims(), &[5, 256]);
+        assert!(logits.data.iter().all(|v| v.is_finite()));
+    }
+
+    #[test]
+    fn causality_holds() {
+        let Some(m) = load() else { return };
+        let a = m.forward(&[3, 7, 11, 13], &AttnOverride::None);
+        let b = m.forward(&[3, 7, 11, 99], &AttnOverride::None);
+        // positions 0..3 unaffected by the change at position 3
+        for p in 0..3 {
+            crate::util::testing::assert_allclose(a.row(p), b.row(p), 1e-5, 1e-5);
+        }
+        assert_ne!(a.row(3), b.row(3));
+    }
+
+    #[test]
+    fn dense_mask_override_matches_no_override() {
+        let Some(m) = load() else { return };
+        let toks = [2u8, 4, 8, 16, 32, 48];
+        let t = toks.len();
+        let mask = vec![true; t * t];
+        let a = m.forward(&toks, &AttnOverride::None);
+        let b = m.forward(&toks, &AttnOverride::Mask(mask));
+        crate::util::testing::assert_allclose(&a.data, &b.data, 1e-5, 1e-5);
+    }
+
+    #[test]
+    fn trained_model_predicts_template() {
+        // the corpus templates ("Angel", "quant", ...) should be learned:
+        // given "Ange", 'l' should rank highly
+        let Some(m) = load() else { return };
+        let prompt = b"Ange";
+        let logits = m.next_logits(prompt, &AttnOverride::None);
+        let mut ranked: Vec<usize> = (0..256).collect();
+        ranked.sort_by(|&a, &b| logits[b].total_cmp(&logits[a]));
+        let rank_l = ranked.iter().position(|&c| c == b'l' as usize).unwrap();
+        assert!(rank_l < 5, "'l' ranked {rank_l}");
+    }
+
+    #[test]
+    fn quantizer_changes_weights_but_model_runs() {
+        let Some(mut m) = load() else { return };
+        let before = m.next_logits(b"Angel", &AttnOverride::None);
+        m.apply_quantizer(&AffineQuantizer::int4_group32());
+        let after = m.next_logits(b"Angel", &AttnOverride::None);
+        assert_ne!(before, after);
+        // int4 keeps the argmax on an easy continuation
+        assert!(after.iter().all(|v| v.is_finite()));
+    }
+
+    #[test]
+    fn capture_shapes() {
+        let Some(m) = load() else { return };
+        let caps = m.capture_activations(&[1, 2, 3, 4]);
+        assert_eq!(caps.len(), 4);
+        assert_eq!(caps[0].attn_in.dims(), &[4, 128]);
+        assert_eq!(caps[0].mlp_mid.dims(), &[4, 256]);
+        let qk = m.capture_qk(&[1, 2, 3, 4]);
+        assert_eq!(qk.len(), 4);
+        assert_eq!(qk[0].0.dims(), &[4, 128]);
+        assert_eq!(qk[0].2.dims(), &[4, 128]);
+    }
+}

@@ -1,0 +1,129 @@
+//! weights.bin / meta.json loader — the layout contract with
+//! python/compile/aot.py::export_weights (flat f32 LE, param_spec order).
+
+use crate::config::Json;
+use anyhow::{bail, Context, Result};
+use std::collections::BTreeMap;
+
+#[derive(Clone, Debug)]
+pub struct ParamInfo {
+    pub model: String,
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub offset: usize,
+    pub len: usize,
+}
+
+#[derive(Clone, Debug)]
+pub struct WeightStore {
+    pub data: Vec<f32>,
+    pub params: Vec<ParamInfo>,
+    index: BTreeMap<(String, String), usize>,
+    pub meta: Json,
+}
+
+impl WeightStore {
+    pub fn load(artifacts_dir: &str) -> Result<Self> {
+        let meta_src = std::fs::read_to_string(format!("{artifacts_dir}/meta.json"))
+            .context("reading meta.json")?;
+        let meta = Json::parse(&meta_src).context("parsing meta.json")?;
+        let bin = std::fs::read(format!("{artifacts_dir}/weights.bin"))
+            .context("reading weights.bin")?;
+        if bin.len() % 4 != 0 {
+            bail!("weights.bin length {} not a multiple of 4", bin.len());
+        }
+        let data: Vec<f32> = bin
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect();
+
+        let mut params = Vec::new();
+        let mut index = BTreeMap::new();
+        for (i, p) in meta
+            .get("layout")
+            .and_then(Json::as_arr)
+            .context("meta.layout missing")?
+            .iter()
+            .enumerate()
+        {
+            let info = ParamInfo {
+                model: p.get("model").and_then(Json::as_str).context("model")?.into(),
+                name: p.get("name").and_then(Json::as_str).context("name")?.into(),
+                shape: p
+                    .get("shape")
+                    .and_then(Json::as_arr)
+                    .context("shape")?
+                    .iter()
+                    .filter_map(Json::as_usize)
+                    .collect(),
+                offset: p.get("offset").and_then(Json::as_usize).context("offset")?,
+                len: p.get("len").and_then(Json::as_usize).context("len")?,
+            };
+            if info.offset + info.len > data.len() {
+                bail!("param {} out of bounds", info.name);
+            }
+            index.insert((info.model.clone(), info.name.clone()), i);
+            params.push(info);
+        }
+        Ok(WeightStore { data, params, index, meta })
+    }
+
+    pub fn get(&self, model: &str, name: &str) -> Result<(&[f32], &[usize])> {
+        let i = self
+            .index
+            .get(&(model.to_string(), name.to_string()))
+            .with_context(|| format!("param {model}/{name} not found"))?;
+        let p = &self.params[*i];
+        Ok((&self.data[p.offset..p.offset + p.len], &p.shape))
+    }
+
+    /// Model config block from meta.json ("target" / "draft").
+    pub fn model_cfg(&self, model: &str) -> Result<super::TransformerCfg> {
+        let m = self.meta.get(model).with_context(|| format!("meta.{model}"))?;
+        let g = |k: &str| m.get(k).and_then(Json::as_usize).context(k.to_string());
+        Ok(super::TransformerCfg {
+            vocab: g("vocab")?,
+            d_model: g("d_model")?,
+            n_layers: g("n_layers")?,
+            n_heads: g("n_heads")?,
+            d_ff: g("d_ff")?,
+            max_t: g("max_t")?,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn have_artifacts() -> bool {
+        std::path::Path::new("artifacts/weights.bin").exists()
+    }
+
+    #[test]
+    fn loads_real_artifacts() {
+        if !have_artifacts() {
+            eprintln!("skipping: run `make artifacts` first");
+            return;
+        }
+        let ws = WeightStore::load("artifacts").unwrap();
+        let (embed, shape) = ws.get("target", "embed").unwrap();
+        assert_eq!(shape, &[256, 128]);
+        assert_eq!(embed.len(), 256 * 128);
+        assert!(embed.iter().all(|v| v.is_finite()));
+        let cfg = ws.model_cfg("target").unwrap();
+        assert_eq!(cfg.d_model, 128);
+        assert_eq!(cfg.n_layers, 4);
+        let dcfg = ws.model_cfg("draft").unwrap();
+        assert_eq!(dcfg.d_model, 64);
+    }
+
+    #[test]
+    fn missing_param_errors() {
+        if !have_artifacts() {
+            return;
+        }
+        let ws = WeightStore::load("artifacts").unwrap();
+        assert!(ws.get("target", "nope").is_err());
+    }
+}

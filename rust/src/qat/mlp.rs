@@ -1,0 +1,224 @@
+//! Tiny 2-layer MLP with manual backprop — the QAT training substrate.
+//!
+//! Forward: logits = W2 · relu(W1 · x). Backprop is hand-written (no
+//! autograd offline); the trainer quantizes W1/W2 with a fake-quant forward
+//! and routes gradients through STE (optionally with Tequila's dead-weight
+//! bias path or Sherry's Arenas residual).
+
+use crate::util::Rng;
+
+#[derive(Clone, Debug)]
+pub struct Mlp {
+    pub din: usize,
+    pub dh: usize,
+    pub dout: usize,
+    /// latent full-precision weights (what QAT updates)
+    pub w1: Vec<f32>, // [dh, din]
+    pub w2: Vec<f32>, // [dout, dh]
+}
+
+/// Per-example forward cache for backprop.
+pub struct Cache {
+    pub x: Vec<f32>,
+    pub h_pre: Vec<f32>,
+    pub h: Vec<f32>,
+    pub logits: Vec<f32>,
+}
+
+impl Mlp {
+    pub fn new(din: usize, dh: usize, dout: usize, rng: &mut Rng) -> Self {
+        Mlp {
+            din,
+            dh,
+            dout,
+            w1: rng.normal_vec(dh * din, (din as f32).powf(-0.5)),
+            w2: rng.normal_vec(dout * dh, (dh as f32).powf(-0.5)),
+        }
+    }
+
+    /// Forward with *given* effective weights (the trainer passes the
+    /// fake-quantized image of w1/w2 here).
+    pub fn forward_with(&self, qw1: &[f32], qw2: &[f32], x: &[f32]) -> Cache {
+        let mut h_pre = vec![0.0f32; self.dh];
+        for r in 0..self.dh {
+            h_pre[r] = crate::tensor::ops::dot(&qw1[r * self.din..(r + 1) * self.din], x);
+        }
+        let h: Vec<f32> = h_pre.iter().map(|&v| v.max(0.0)).collect();
+        let mut logits = vec![0.0f32; self.dout];
+        for r in 0..self.dout {
+            logits[r] = crate::tensor::ops::dot(&qw2[r * self.dh..(r + 1) * self.dh], &h);
+        }
+        Cache { x: x.to_vec(), h_pre, h, logits }
+    }
+
+    /// Softmax-CE loss + gradient wrt logits.
+    pub fn ce_grad(logits: &[f32], label: usize) -> (f32, Vec<f32>) {
+        let lp = crate::tensor::ops::log_softmax(logits);
+        let loss = -lp[label];
+        let mut g: Vec<f32> = lp.iter().map(|&l| l.exp()).collect();
+        g[label] -= 1.0;
+        (loss, g)
+    }
+
+    /// Forward with per-layer biases (Tequila's dynamic dead-weight bias).
+    pub fn forward_with_bias(
+        &self,
+        qw1: &[f32],
+        qw2: &[f32],
+        b1: &[f32],
+        b2: &[f32],
+        x: &[f32],
+    ) -> Cache {
+        let mut h_pre = vec![0.0f32; self.dh];
+        for r in 0..self.dh {
+            h_pre[r] =
+                crate::tensor::ops::dot(&qw1[r * self.din..(r + 1) * self.din], x) + b1[r];
+        }
+        let h: Vec<f32> = h_pre.iter().map(|&v| v.max(0.0)).collect();
+        let mut logits = vec![0.0f32; self.dout];
+        for r in 0..self.dout {
+            logits[r] =
+                crate::tensor::ops::dot(&qw2[r * self.dh..(r + 1) * self.dh], &h) + b2[r];
+        }
+        Cache { x: x.to_vec(), h_pre, h, logits }
+    }
+
+    /// Backprop through the *quantized* forward (STE: gradients flow to the
+    /// latent weights as if the quantizer were identity). Returns
+    /// (grad_w1, grad_w2, dh) where dh is the post-relu-gate hidden grad —
+    /// Tequila's dead-weight bias path needs it.
+    pub fn backward_ext(
+        &self,
+        qw2: &[f32],
+        cache: &Cache,
+        dlogits: &[f32],
+    ) -> (Vec<f32>, Vec<f32>, Vec<f32>) {
+        let mut gw2 = vec![0.0f32; self.dout * self.dh];
+        for r in 0..self.dout {
+            for c in 0..self.dh {
+                gw2[r * self.dh + c] = dlogits[r] * cache.h[c];
+            }
+        }
+        // dh = W2^T dlogits, gated by relu
+        let mut dh = vec![0.0f32; self.dh];
+        for c in 0..self.dh {
+            let mut acc = 0.0;
+            for r in 0..self.dout {
+                acc += qw2[r * self.dh + c] * dlogits[r];
+            }
+            dh[c] = if cache.h_pre[c] > 0.0 { acc } else { 0.0 };
+        }
+        let mut gw1 = vec![0.0f32; self.dh * self.din];
+        for r in 0..self.dh {
+            if dh[r] == 0.0 {
+                continue;
+            }
+            for c in 0..self.din {
+                gw1[r * self.din + c] = dh[r] * cache.x[c];
+            }
+        }
+        (gw1, gw2, dh)
+    }
+
+    /// Convenience wrapper for callers that don't need dh.
+    pub fn backward(&self, qw2: &[f32], cache: &Cache, dlogits: &[f32]) -> (Vec<f32>, Vec<f32>) {
+        let (gw1, gw2, _) = self.backward_ext(qw2, cache, dlogits);
+        (gw1, gw2)
+    }
+
+    /// Accuracy with given effective weights on a labelled set.
+    pub fn accuracy(&self, qw1: &[f32], qw2: &[f32], xs: &[Vec<f32>], ys: &[usize]) -> f64 {
+        let mut correct = 0usize;
+        for (x, &y) in xs.iter().zip(ys) {
+            let c = self.forward_with(qw1, qw2, x);
+            if crate::tensor::ops::argmax(&c.logits) == y {
+                correct += 1;
+            }
+        }
+        correct as f64 / xs.len().max(1) as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn forward_shapes() {
+        let mut rng = Rng::new(0);
+        let m = Mlp::new(8, 16, 4, &mut rng);
+        let x = rng.normal_vec(8, 1.0);
+        let c = m.forward_with(&m.w1, &m.w2, &x);
+        assert_eq!(c.logits.len(), 4);
+        assert!(c.h.iter().all(|&v| v >= 0.0));
+    }
+
+    #[test]
+    fn ce_grad_sums_to_zero() {
+        let (loss, g) = Mlp::ce_grad(&[1.0, 2.0, 0.5], 1);
+        assert!(loss > 0.0);
+        assert!((g.iter().sum::<f32>()).abs() < 1e-6);
+        assert!(g[1] < 0.0);
+    }
+
+    #[test]
+    fn numerical_gradient_check() {
+        let mut rng = Rng::new(1);
+        let m = Mlp::new(6, 10, 3, &mut rng);
+        let x = rng.normal_vec(6, 1.0);
+        let label = 2;
+        let c = m.forward_with(&m.w1, &m.w2, &x);
+        let (_, dlogits) = Mlp::ce_grad(&c.logits, label);
+        let (gw1, gw2) = m.backward(&m.w2, &c, &dlogits);
+
+        let eps = 1e-3;
+        let mut check = |widx: usize, is_w1: bool, analytic: f32| {
+            let mut mp = m.clone();
+            let w = if is_w1 { &mut mp.w1 } else { &mut mp.w2 };
+            w[widx] += eps;
+            let cp = mp.forward_with(&mp.w1, &mp.w2, &x);
+            let (lp, _) = Mlp::ce_grad(&cp.logits, label);
+            let w = if is_w1 { &mut mp.w1 } else { &mut mp.w2 };
+            w[widx] -= 2.0 * eps;
+            let cm = mp.forward_with(&mp.w1, &mp.w2, &x);
+            let (lm, _) = Mlp::ce_grad(&cm.logits, label);
+            let numeric = (lp - lm) / (2.0 * eps);
+            assert!(
+                (numeric - analytic).abs() < 2e-2 * (1.0 + analytic.abs()),
+                "numeric {numeric} vs analytic {analytic}"
+            );
+        };
+        for idx in [0, 7, 23] {
+            check(idx, true, gw1[idx]);
+        }
+        for idx in [0, 11, 29] {
+            check(idx, false, gw2[idx]);
+        }
+    }
+
+    #[test]
+    fn sgd_reduces_loss_fp32() {
+        let mut rng = Rng::new(2);
+        let mut m = Mlp::new(8, 24, 4, &mut rng);
+        let task = crate::qat::tasks::ClassTask::new("t", 8, 4, 0, 3);
+        let mut first = 0.0;
+        let mut last = 0.0;
+        for step in 0..300 {
+            let (x, y) = task.sample(&mut rng);
+            let c = m.forward_with(&m.w1.clone(), &m.w2.clone(), &x);
+            let (loss, dl) = Mlp::ce_grad(&c.logits, y);
+            let (gw1, gw2) = m.backward(&m.w2.clone(), &c, &dl);
+            for (w, g) in m.w1.iter_mut().zip(&gw1) {
+                *w -= 0.05 * g;
+            }
+            for (w, g) in m.w2.iter_mut().zip(&gw2) {
+                *w -= 0.05 * g;
+            }
+            if step == 0 {
+                first = loss;
+            }
+            last = loss;
+        }
+        assert!(last < first * 0.7, "loss {first} -> {last}");
+    }
+}

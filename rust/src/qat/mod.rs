@@ -1,0 +1,19 @@
+//! Quantization-Aware Training harness — the substrate behind Table 1
+//! (SEQ 2-bit QAT vs PTQ vs small-dense) and Table 2 (Tequila / Sherry vs
+//! ternary baselines).
+//!
+//! The paper QAT-trains billion-parameter LLMs on 89B tokens; here the same
+//! mechanisms (STE fake-quant, deadzone-bias reactivation, Arenas annealing)
+//! are exercised on a tiny MLP classifier over synthetic data — small
+//! enough to train hundreds of times inside a bench, big enough that the
+//! *ordering* of methods (fp32 > {Tequila, Sherry} > plain ternary ≫
+//! collapse) reproduces. The trained-transformer side of Table 1 runs on
+//! the python-built artifacts instead (model_target_seq2qat vs seq2 PTQ).
+
+pub mod mlp;
+pub mod tasks;
+pub mod trainer;
+
+pub use mlp::Mlp;
+pub use tasks::ClassTask;
+pub use trainer::{train, QatMethod, TrainCfg, TrainReport};

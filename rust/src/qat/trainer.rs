@@ -1,0 +1,307 @@
+//! QAT training loop with method-specific fake-quant forwards — the engine
+//! behind the Table 1 / Table 2 benches.
+//!
+//! Methods:
+//!   * Fp32         — full-precision reference
+//!   * Int4         — group-wise int4 fake-quant + STE
+//!   * Seq2         — SEQ 2-bit fake-quant + STE (§2.1.2)
+//!   * BitNetProxy  — absmean ternary (BitNet b1.58-style), STE
+//!   * Twn          — threshold ternary (TWN), STE — the "plain ternary"
+//!                    baseline whose deadzone traps weights
+//!   * LlmQatProxy  — per-tensor threshold ternary (coarser scale), STE
+//!   * Tequila      — Twn + dead-weight dynamic bias C(W) (§2.2.1): biases
+//!                    enter the forward and dead weights get the extra λ
+//!                    gradient path; bias is merged post-training
+//!   * Sherry       — 3:4 structured ternary + Arenas residual (§2.2.2):
+//!                    forward uses Q(W) + λ_t·W with λ_t annealed to 0
+
+use crate::quant::{
+    sherry::{ArenasSchedule, Sherry},
+    tequila::Tequila,
+    AffineQuantizer, Seq2Quantizer, TernaryQuantizer, WeightQuantizer,
+};
+use crate::util::Rng;
+
+use super::{mlp::Mlp, tasks::ClassTask};
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum QatMethod {
+    Fp32,
+    Int4,
+    Seq2,
+    BitNetProxy,
+    Twn,
+    LlmQatProxy,
+    Tequila,
+    Sherry,
+}
+
+impl QatMethod {
+    pub fn name(&self) -> &'static str {
+        match self {
+            QatMethod::Fp32 => "FP32",
+            QatMethod::Int4 => "INT4",
+            QatMethod::Seq2 => "SEQ-2bit",
+            QatMethod::BitNetProxy => "BitNet*",
+            QatMethod::Twn => "TernaryLLM*",
+            QatMethod::LlmQatProxy => "LLM-QAT*",
+            QatMethod::Tequila => "Tequila",
+            QatMethod::Sherry => "Sherry",
+        }
+    }
+
+    pub fn bits(&self) -> f64 {
+        match self {
+            QatMethod::Fp32 => 16.0, // reported as the paper's BF16 rows
+            QatMethod::Int4 => 4.0,
+            QatMethod::Seq2 => 2.0,
+            QatMethod::BitNetProxy | QatMethod::Twn | QatMethod::LlmQatProxy => 1.67,
+            QatMethod::Tequila => 1.67,
+            QatMethod::Sherry => 1.25,
+        }
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct TrainCfg {
+    pub steps: usize,
+    pub lr: f32,
+    pub hidden: usize,
+    pub eval_n: usize,
+    pub seed: u64,
+}
+
+impl Default for TrainCfg {
+    fn default() -> Self {
+        TrainCfg { steps: 1200, lr: 0.03, hidden: 48, eval_n: 400, seed: 0 }
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct TrainReport {
+    pub method: QatMethod,
+    pub task: &'static str,
+    pub accuracy: f64,
+    pub final_loss: f32,
+}
+
+/// Fake-quant the latent weights per method; returns (qw, per-row bias,
+/// per-weight grad scale multiplier) — grad scale encodes the Tequila dead
+/// path and the Arenas residual.
+fn effective_weights(
+    method: QatMethod,
+    w: &[f32],
+    n: usize,
+    k: usize,
+    step: usize,
+    arenas: &ArenasSchedule,
+) -> (Vec<f32>, Vec<f32>, Vec<f32>) {
+    let mut qw = w.to_vec();
+    let bias = vec![0.0f32; n];
+    let gscale = vec![1.0f32; w.len()];
+    match method {
+        QatMethod::Fp32 => (qw, bias, gscale),
+        QatMethod::Int4 => {
+            let g = if k % 32 == 0 { 32 } else { k };
+            AffineQuantizer::new(4, crate::quant::Granularity::Group(g)).qdq(&mut qw, n, k);
+            (qw, bias, gscale)
+        }
+        QatMethod::Seq2 => {
+            let g = if k % 32 == 0 { 32 } else { k };
+            Seq2Quantizer::new(g).qdq(&mut qw, n, k);
+            (qw, bias, gscale)
+        }
+        QatMethod::BitNetProxy => {
+            // absmean scaling, round to {-1,0,1}
+            let mean_abs = w.iter().map(|x| x.abs()).sum::<f32>() / w.len() as f32;
+            let s = mean_abs.max(1e-8);
+            for v in qw.iter_mut() {
+                *v = (*v / s).round().clamp(-1.0, 1.0) * s;
+            }
+            (qw, bias, gscale)
+        }
+        QatMethod::Twn => {
+            TernaryQuantizer::default().qdq(&mut qw, n, k);
+            (qw, bias, gscale)
+        }
+        QatMethod::LlmQatProxy => {
+            // per-tensor threshold ternary (coarsest granularity)
+            TernaryQuantizer::default().qdq(&mut qw, 1, n * k);
+            (qw, bias, gscale)
+        }
+        QatMethod::Tequila => {
+            let tq = Tequila::default();
+            let q = tq.quantize(w, n, k);
+            let qw = TernaryQuantizer::dequantize_codes(&q.codes, &q.alphas, n, k);
+            let mut gscale = vec![1.0f32; w.len()];
+            for (i, &c) in q.codes.iter().enumerate() {
+                gscale[i] = tq.grad_scale(c);
+            }
+            (qw, q.bias, gscale)
+        }
+        QatMethod::Sherry => {
+            let (codes, alphas) = Sherry::quantize_codes(w, n, k);
+            let mut qw = Sherry::dequantize_codes(&codes, &alphas, n, k);
+            let lambda = arenas.lambda(step);
+            if lambda > 0.0 {
+                for (qv, &wv) in qw.iter_mut().zip(w) {
+                    *qv += lambda * wv; // Arenas residual synapse (eq. 4)
+                }
+            }
+            let gscale = vec![1.0 + lambda; w.len()];
+            (qw, bias, gscale)
+        }
+    }
+}
+
+/// Deploy-time weights: what inference actually uses (Arenas residual gone,
+/// Tequila bias merged statically).
+pub fn deploy_weights(method: QatMethod, w: &[f32], n: usize, k: usize) -> (Vec<f32>, Vec<f32>) {
+    let arenas = ArenasSchedule::new(0.0, 1);
+    let (qw, bias, _) = effective_weights(method, w, n, k, usize::MAX, &arenas);
+    (qw, bias)
+}
+
+pub fn train(task: &ClassTask, method: QatMethod, cfg: &TrainCfg) -> TrainReport {
+    let mut rng = Rng::new(cfg.seed ^ 0x9A7);
+    let mut mlp = Mlp::new(task.dim, cfg.hidden, task.classes, &mut rng);
+    let arenas = ArenasSchedule::new(0.3, cfg.steps);
+    let mut last_loss = 0.0f32;
+
+    for step in 0..cfg.steps {
+        let (x, y) = task.sample(&mut rng);
+        let (qw1, b1, gs1) =
+            effective_weights(method, &mlp.w1, mlp.dh, mlp.din, step, &arenas);
+        let (qw2, b2, gs2) =
+            effective_weights(method, &mlp.w2, mlp.dout, mlp.dh, step, &arenas);
+        let cache = mlp.forward_with_bias(&qw1, &qw2, &b1, &b2, &x);
+        let (loss, dlogits) = Mlp::ce_grad(&cache.logits, y);
+        last_loss = loss;
+        let (gw1, gw2, dh) = mlp.backward_ext(&qw2, &cache, &dlogits);
+
+        let lr = cfg.lr * (1.0 - 0.9 * step as f32 / cfg.steps as f32);
+        // STE update with per-weight grad scaling; Tequila's dead weights
+        // additionally receive the bias-path gradient λ·dL/dy_row
+        let tq_lambda = if method == QatMethod::Tequila { Tequila::default().lambda } else { 0.0 };
+        for r in 0..mlp.dh {
+            for c in 0..mlp.din {
+                let i = r * mlp.din + c;
+                let mut g = gw1[i] * gs1[i];
+                if tq_lambda > 0.0 && gs1[i] > 1.0 {
+                    g = gw1[i] + tq_lambda * dh[r]; // explicit dead path
+                }
+                mlp.w1[i] -= lr * g;
+            }
+        }
+        for r in 0..mlp.dout {
+            for c in 0..mlp.dh {
+                let i = r * mlp.dh + c;
+                let mut g = gw2[i] * gs2[i];
+                if tq_lambda > 0.0 && gs2[i] > 1.0 {
+                    g = gw2[i] + tq_lambda * dlogits[r];
+                }
+                mlp.w2[i] -= lr * g;
+            }
+        }
+    }
+
+    // evaluate with deploy-time weights (bias merged, residual annealed off)
+    let (qw1, b1) = deploy_weights(method, &mlp.w1, mlp.dh, mlp.din);
+    let (qw2, b2) = deploy_weights(method, &mlp.w2, mlp.dout, mlp.dh);
+    let (xs, ys) = task.eval_set(cfg.eval_n);
+    let mut correct = 0usize;
+    for (x, &y) in xs.iter().zip(&ys) {
+        let c = mlp.forward_with_bias(&qw1, &qw2, &b1, &b2, x);
+        if crate::tensor::ops::argmax(&c.logits) == y {
+            correct += 1;
+        }
+    }
+    TrainReport {
+        method,
+        task: task.name,
+        accuracy: correct as f64 / xs.len() as f64,
+        final_loss: last_loss,
+    }
+}
+
+/// Train a method over the whole task suite; returns (per-task accs, mean).
+pub fn train_suite(method: QatMethod, dim: usize, cfg: &TrainCfg) -> (Vec<TrainReport>, f64) {
+    let suite = ClassTask::suite(dim, 7);
+    let reports: Vec<TrainReport> = suite.iter().map(|t| train(t, method, cfg)).collect();
+    let mean = reports.iter().map(|r| r.accuracy).sum::<f64>() / reports.len() as f64;
+    (reports, mean)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn quick_cfg() -> TrainCfg {
+        TrainCfg { steps: 700, lr: 0.03, hidden: 40, eval_n: 250, seed: 1 }
+    }
+
+    #[test]
+    fn fp32_learns_task() {
+        let task = ClassTask::suite(24, 7).remove(0);
+        let r = train(&task, QatMethod::Fp32, &quick_cfg());
+        assert!(r.accuracy > 0.6, "fp32 acc {}", r.accuracy);
+    }
+
+    #[test]
+    fn int4_close_to_fp32() {
+        let task = ClassTask::suite(24, 7).remove(0);
+        let f = train(&task, QatMethod::Fp32, &quick_cfg());
+        let q = train(&task, QatMethod::Int4, &quick_cfg());
+        assert!(q.accuracy > f.accuracy - 0.12, "int4 {} fp32 {}", q.accuracy, f.accuracy);
+    }
+
+    #[test]
+    fn seq2_qat_beats_chance_substantially() {
+        let task = ClassTask::suite(24, 7).remove(0);
+        let r = train(&task, QatMethod::Seq2, &quick_cfg());
+        let chance = 1.0 / task.classes as f64;
+        assert!(r.accuracy > chance * 2.0, "seq2 acc {}", r.accuracy);
+    }
+
+    #[test]
+    fn tequila_not_worse_than_twn_on_suite_mean() {
+        let cfg = quick_cfg();
+        let (_, twn) = train_suite(QatMethod::Twn, 24, &cfg);
+        let (_, teq) = train_suite(QatMethod::Tequila, 24, &cfg);
+        assert!(teq >= twn - 0.03, "tequila {teq} vs twn {twn}");
+    }
+
+    #[test]
+    fn sherry_not_worse_than_twn_on_suite_mean() {
+        let cfg = quick_cfg();
+        let (_, twn) = train_suite(QatMethod::Twn, 24, &cfg);
+        let (_, sh) = train_suite(QatMethod::Sherry, 24, &cfg);
+        assert!(sh >= twn - 0.05, "sherry {sh} vs twn {twn}");
+    }
+
+    #[test]
+    fn deploy_weights_are_pure_ternary_for_tequila() {
+        let mut rng = Rng::new(0);
+        let w = rng.normal_vec(8 * 16, 0.5);
+        let (qw, bias) = deploy_weights(QatMethod::Tequila, &w, 8, 16);
+        // exactly {-a, 0, +a} per row
+        for r in 0..8 {
+            let vals: std::collections::BTreeSet<i64> = qw[r * 16..(r + 1) * 16]
+                .iter()
+                .map(|v| (v * 1e4).round() as i64)
+                .collect();
+            assert!(vals.len() <= 3, "row {r} has {} levels", vals.len());
+        }
+        assert_eq!(bias.len(), 8);
+    }
+
+    #[test]
+    fn deploy_weights_sherry_has_no_residual() {
+        let mut rng = Rng::new(1);
+        let w = rng.normal_vec(4 * 16, 0.5);
+        let (qw, _) = deploy_weights(QatMethod::Sherry, &w, 4, 16);
+        // 3:4 sparsity must hold exactly (residual would break the zeros)
+        let nz = qw.iter().filter(|&&v| v != 0.0).count();
+        assert_eq!(nz, 4 * 16 * 3 / 4);
+    }
+}

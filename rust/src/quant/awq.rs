@@ -1,0 +1,145 @@
+//! AWQ — activation-aware weight quantization (Lin et al., 2024), the
+//! second INT4 scheme of the paper's PTQ framework (§2.3.1).
+//!
+//! Important channels (by activation magnitude) get their numerical range
+//! amplified before quantization: W' = W * s, X' = X / s with
+//! s_c = mean|X_c|^alpha, alpha grid-searched against layer output MSE.
+
+use crate::tensor::{ops::matmul_transb, Tensor};
+
+use super::{AffineQuantizer, Granularity, WeightQuantizer};
+
+#[derive(Clone, Debug)]
+pub struct Awq {
+    pub bits: u32,
+    pub group: usize,
+    /// alpha grid for the per-channel scale exponent
+    pub alpha_grid: Vec<f32>,
+}
+
+impl Default for Awq {
+    fn default() -> Self {
+        Awq {
+            bits: 4,
+            group: 32,
+            alpha_grid: vec![0.0, 0.25, 0.5, 0.75, 1.0],
+        }
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct AwqResult {
+    /// QDQ weights *in the original (unscaled) space* — ready to substitute
+    pub weights: Tensor,
+    pub best_alpha: f32,
+    pub output_mse: f32,
+}
+
+impl Awq {
+    /// Quantize w [n, k] with calibration activations x [m, k].
+    pub fn quantize(&self, w: &Tensor, x: &Tensor) -> AwqResult {
+        let (n, k) = (w.rows(), w.cols());
+        assert_eq!(x.cols(), k);
+        let y_ref = matmul_transb(x, w);
+
+        // per-channel activation magnitude
+        let mut act_mag = vec![0.0f32; k];
+        for r in 0..x.rows() {
+            for c in 0..k {
+                act_mag[c] += x.row(r)[c].abs();
+            }
+        }
+        for a in act_mag.iter_mut() {
+            *a = (*a / x.rows() as f32).max(1e-6);
+        }
+
+        let q = AffineQuantizer::new(self.bits, Granularity::Group(self.group));
+        let mut best: Option<AwqResult> = None;
+        for &alpha in &self.alpha_grid {
+            // s_c = mag^alpha, normalized to geometric mean 1 for stability
+            let mut s: Vec<f32> = act_mag.iter().map(|m| m.powf(alpha)).collect();
+            let log_mean: f32 =
+                s.iter().map(|v| v.ln()).sum::<f32>() / k as f32;
+            let norm = log_mean.exp();
+            s.iter_mut().for_each(|v| *v /= norm);
+
+            // scale, quantize, unscale
+            let mut ws = w.clone();
+            for r in 0..n {
+                let row = ws.row_mut(r);
+                for c in 0..k {
+                    row[c] *= s[c];
+                }
+            }
+            q.qdq(&mut ws.data, n, k);
+            for r in 0..n {
+                let row = ws.row_mut(r);
+                for c in 0..k {
+                    row[c] /= s[c];
+                }
+            }
+            let y = matmul_transb(x, &ws);
+            let mse = crate::util::stats::mse(&y.data, &y_ref.data);
+            if best.as_ref().map(|b| mse < b.output_mse).unwrap_or(true) {
+                best = Some(AwqResult { weights: ws, best_alpha: alpha, output_mse: mse });
+            }
+        }
+        best.unwrap()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    /// Activations with a few dominant channels — AWQ's motivating setting.
+    fn outlier_acts(m: usize, k: usize, seed: u64) -> Tensor {
+        let mut rng = Rng::new(seed);
+        let mut x = Tensor::randn(&[m, k], 1.0, &mut rng);
+        for r in 0..m {
+            for c in (0..k).step_by(16) {
+                x.row_mut(r)[c] *= 12.0; // outlier channels
+            }
+        }
+        x
+    }
+
+    #[test]
+    fn awq_no_worse_than_rtn() {
+        let mut rng = Rng::new(0);
+        let w = Tensor::randn(&[16, 64], 0.5, &mut rng);
+        let x = outlier_acts(48, 64, 1);
+        let y_ref = matmul_transb(&x, &w);
+
+        let res = Awq::default().quantize(&w, &x);
+
+        let mut rtn = w.clone();
+        use crate::quant::WeightQuantizer;
+        AffineQuantizer::int4_group32().qdq(&mut rtn.data, 16, 64);
+        let y_rtn = matmul_transb(&x, &rtn);
+        let e_rtn = crate::util::stats::mse(&y_rtn.data, &y_ref.data);
+
+        // alpha=0 in the grid *is* RTN, so AWQ can never be worse
+        assert!(res.output_mse <= e_rtn + 1e-9, "{} vs {e_rtn}", res.output_mse);
+    }
+
+    #[test]
+    fn awq_prefers_nonzero_alpha_with_outliers() {
+        let mut rng = Rng::new(2);
+        let w = Tensor::randn(&[24, 64], 0.5, &mut rng);
+        let x = outlier_acts(64, 64, 3);
+        let res = Awq::default().quantize(&w, &x);
+        assert!(res.best_alpha > 0.0, "expected activation-aware scaling to win");
+    }
+
+    #[test]
+    fn result_shape_and_finite() {
+        let mut rng = Rng::new(4);
+        let w = Tensor::randn(&[8, 32], 0.5, &mut rng);
+        let x = Tensor::randn(&[16, 32], 1.0, &mut rng);
+        let res = Awq::default().quantize(&w, &x);
+        assert_eq!(res.weights.dims(), &[8, 32]);
+        assert!(res.weights.data.iter().all(|v| v.is_finite()));
+    }
+}

@@ -1,0 +1,205 @@
+//! Calibration statistics + low-memory calibration accounting (§2.3.1).
+//!
+//! `CalibStats` accumulates per-channel activation statistics (absmax,
+//! mean |x|, reservoir sample for quantiles) across calibration batches —
+//! the inputs AWQ / SmoothQuant / LeptoQuant consume.
+//!
+//! `LowMemoryLedger` models the paper's Low-Memory FP8 Calibration mode:
+//! layers are streamed GPU<->CPU so peak resident bytes stay under a
+//! budget; the ledger tracks residency, swaps, and peak usage so the
+//! coordinator can report the same "single-GPU calibration" metric the
+//! paper claims for DeepSeek-R1.
+
+use crate::util::Rng;
+
+#[derive(Clone, Debug)]
+pub struct CalibStats {
+    pub channels: usize,
+    pub absmax: Vec<f32>,
+    pub mean_abs: Vec<f32>,
+    pub count: usize,
+    /// reservoir of |x| samples for quantile queries
+    reservoir: Vec<f32>,
+    reservoir_cap: usize,
+    seen: usize,
+    rng: Rng,
+}
+
+impl CalibStats {
+    pub fn new(channels: usize) -> Self {
+        CalibStats {
+            channels,
+            absmax: vec![0.0; channels],
+            mean_abs: vec![0.0; channels],
+            count: 0,
+            reservoir: Vec::new(),
+            reservoir_cap: 8192,
+            seen: 0,
+            rng: Rng::new(0xCA11B),
+        }
+    }
+
+    /// Feed a batch of activations, row-major [rows, channels].
+    pub fn update(&mut self, x: &[f32], rows: usize) {
+        assert_eq!(x.len(), rows * self.channels);
+        for r in 0..rows {
+            for c in 0..self.channels {
+                let a = x[r * self.channels + c].abs();
+                self.absmax[c] = self.absmax[c].max(a);
+                // running mean
+                let n = (self.count * rows + r + 1) as f32;
+                self.mean_abs[c] += (a - self.mean_abs[c]) / n.max(1.0);
+                // reservoir sampling
+                self.seen += 1;
+                if self.reservoir.len() < self.reservoir_cap {
+                    self.reservoir.push(a);
+                } else if self.rng.below(self.seen) < self.reservoir_cap {
+                    let slot = self.rng.below(self.reservoir_cap);
+                    self.reservoir[slot] = a;
+                }
+            }
+        }
+        self.count += 1;
+    }
+
+    pub fn tensor_absmax(&self) -> f32 {
+        self.absmax.iter().fold(0.0f32, |m, &x| m.max(x))
+    }
+
+    /// |x| value at the given upper quantile (e.g. 0.001 -> 99.9th pct) —
+    /// the `Outlier(W, alpha)` operator of LeptoQuant (eq. 5).
+    pub fn outlier(&self, alpha: f64) -> f32 {
+        if self.reservoir.is_empty() {
+            return 0.0;
+        }
+        if alpha <= 0.0 {
+            return self.tensor_absmax();
+        }
+        let mut s = self.reservoir.clone();
+        s.sort_by(|a, b| a.total_cmp(b));
+        let idx = ((1.0 - alpha) * (s.len() - 1) as f64).round() as usize;
+        s[idx.min(s.len() - 1)]
+    }
+}
+
+/// Events emitted by the low-memory layer streamer.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SwapEvent {
+    LoadToDevice(usize),
+    OffloadToHost(usize),
+}
+
+/// Residency ledger for low-memory calibration.
+#[derive(Clone, Debug)]
+pub struct LowMemoryLedger {
+    /// bytes of each layer
+    pub layer_bytes: Vec<usize>,
+    /// maximum simultaneously-resident layers (0 = unlimited)
+    pub budget_layers: usize,
+    resident: Vec<usize>, // LRU queue of layer ids
+    pub peak_bytes: usize,
+    pub swaps: usize,
+    pub log: Vec<SwapEvent>,
+}
+
+impl LowMemoryLedger {
+    pub fn new(layer_bytes: Vec<usize>, budget_layers: usize) -> Self {
+        LowMemoryLedger {
+            layer_bytes,
+            budget_layers,
+            resident: Vec::new(),
+            peak_bytes: 0,
+            swaps: 0,
+            log: Vec::new(),
+        }
+    }
+
+    /// Touch a layer for computation; evicts LRU layers past the budget.
+    pub fn touch(&mut self, layer: usize) {
+        if let Some(pos) = self.resident.iter().position(|&l| l == layer) {
+            self.resident.remove(pos);
+            self.resident.push(layer);
+        } else {
+            self.log.push(SwapEvent::LoadToDevice(layer));
+            self.swaps += 1;
+            self.resident.push(layer);
+            if self.budget_layers > 0 {
+                while self.resident.len() > self.budget_layers {
+                    let evicted = self.resident.remove(0);
+                    self.log.push(SwapEvent::OffloadToHost(evicted));
+                    self.swaps += 1;
+                }
+            }
+        }
+        let cur: usize = self.resident.iter().map(|&l| self.layer_bytes[l]).sum();
+        self.peak_bytes = self.peak_bytes.max(cur);
+    }
+
+    pub fn resident_bytes(&self) -> usize {
+        self.resident.iter().map(|&l| self.layer_bytes[l]).sum()
+    }
+
+    pub fn total_bytes(&self) -> usize {
+        self.layer_bytes.iter().sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    #[test]
+    fn stats_track_absmax() {
+        let mut s = CalibStats::new(4);
+        s.update(&[1.0, -2.0, 0.5, 0.1, 0.2, 3.0, -0.5, 0.0], 2);
+        assert_eq!(s.absmax, vec![1.0, 3.0, 0.5, 0.1]);
+        assert_eq!(s.tensor_absmax(), 3.0);
+    }
+
+    #[test]
+    fn outlier_quantile_below_absmax() {
+        let mut s = CalibStats::new(1);
+        let mut rng = Rng::new(0);
+        let xs: Vec<f32> = (0..4000).map(|_| rng.normal()).collect();
+        s.update(&xs, 4000);
+        let q = s.outlier(0.01);
+        assert!(q < s.tensor_absmax());
+        assert!(q > 1.0, "99th pct of |N(0,1)| ≈ 2.57, got {q}");
+        assert_eq!(s.outlier(0.0), s.tensor_absmax());
+    }
+
+    #[test]
+    fn ledger_respects_budget() {
+        let mut led = LowMemoryLedger::new(vec![100; 8], 2);
+        for l in 0..8 {
+            led.touch(l);
+        }
+        assert!(led.peak_bytes <= 200);
+        assert!(led.swaps >= 8);
+        // total model never resident at once
+        assert!(led.total_bytes() == 800);
+        assert!(led.resident_bytes() <= 200);
+    }
+
+    #[test]
+    fn ledger_unlimited_keeps_all() {
+        let mut led = LowMemoryLedger::new(vec![10; 4], 0);
+        for l in 0..4 {
+            led.touch(l);
+        }
+        assert_eq!(led.peak_bytes, 40);
+        assert_eq!(led.swaps, 4); // only loads, no evictions
+    }
+
+    #[test]
+    fn ledger_lru_order() {
+        let mut led = LowMemoryLedger::new(vec![1; 3], 2);
+        led.touch(0);
+        led.touch(1);
+        led.touch(0); // refresh 0
+        led.touch(2); // should evict 1, not 0
+        assert!(led.log.contains(&SwapEvent::OffloadToHost(1)));
+        assert!(!led.log.contains(&SwapEvent::OffloadToHost(0)));
+    }
+}

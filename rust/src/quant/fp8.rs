@@ -1,0 +1,151 @@
+//! Software FP8 codecs (E4M3FN and E5M2) with round-to-nearest-even.
+//!
+//! E4M3FN (the deployment format in the paper's PTQ suite): 1 sign, 4
+//! exponent (bias 7), 3 mantissa; no infinities; max finite = 448;
+//! subnormal step 2^-9. E5M2: bias 15, 2 mantissa, max finite 57344.
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Fp8Format {
+    E4M3,
+    E5M2,
+}
+
+impl Fp8Format {
+    pub fn max(&self) -> f32 {
+        match self {
+            Fp8Format::E4M3 => 448.0,
+            Fp8Format::E5M2 => 57344.0,
+        }
+    }
+
+    pub fn qdq(&self, x: f32) -> f32 {
+        match self {
+            Fp8Format::E4M3 => fp8_e4m3_qdq(x),
+            Fp8Format::E5M2 => fp8_e5m2_qdq(x),
+        }
+    }
+}
+
+fn qdq_generic(x: f32, mant_bits: i32, min_exp: i32, max_val: f32) -> f32 {
+    if x.is_nan() {
+        return f32::NAN;
+    }
+    let sign = if x.is_sign_negative() { -1.0 } else { 1.0 };
+    let a = x.abs();
+    if a == 0.0 {
+        return 0.0;
+    }
+    if a >= max_val {
+        return sign * max_val;
+    }
+    // exponent of the value (floor(log2 a)), clamped to the subnormal floor
+    let e = (a.log2().floor() as i32).max(min_exp);
+    let step = (e - mant_bits) as f32;
+    let step = step.exp2();
+    let q = (a / step).round_ties_even() * step;
+    // rounding up may have pushed us past max
+    sign * q.min(max_val)
+}
+
+/// Round-trip a value through FP8-E4M3FN.
+pub fn fp8_e4m3_qdq(x: f32) -> f32 {
+    qdq_generic(x, 3, -6, 448.0)
+}
+
+/// Round-trip a value through FP8-E5M2.
+pub fn fp8_e5m2_qdq(x: f32) -> f32 {
+    qdq_generic(x, 2, -14, 57344.0)
+}
+
+/// QDQ a slice with a per-tensor scale mapping absmax -> fmt.max().
+/// Returns the scale used.
+pub fn qdq_slice_scaled(xs: &mut [f32], fmt: Fp8Format) -> f32 {
+    let absmax = xs.iter().fold(0.0f32, |m, x| m.max(x.abs())).max(1e-12);
+    let scale = absmax / fmt.max();
+    for x in xs.iter_mut() {
+        *x = fmt.qdq(*x / scale) * scale;
+    }
+    scale
+}
+
+/// QDQ with an explicit scale (the LeptoQuant search path).
+pub fn qdq_slice_with_scale(xs: &mut [f32], fmt: Fp8Format, scale: f32) {
+    for x in xs.iter_mut() {
+        *x = fmt.qdq(*x / scale) * scale;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn exact_values_roundtrip() {
+        // representable e4m3 values must be fixed points
+        for v in [0.0f32, 1.0, -1.0, 0.5, 1.75, 448.0, -448.0, 0.015625] {
+            assert_eq!(fp8_e4m3_qdq(v), v, "{v}");
+        }
+    }
+
+    #[test]
+    fn saturates_at_max() {
+        assert_eq!(fp8_e4m3_qdq(1e6), 448.0);
+        assert_eq!(fp8_e4m3_qdq(-1e6), -448.0);
+        assert_eq!(fp8_e5m2_qdq(1e9), 57344.0);
+    }
+
+    #[test]
+    fn relative_error_bounded() {
+        // e4m3 normals: relative error <= 2^-4 (half ulp of 3-bit mantissa)
+        let mut x = 0.02f32;
+        while x < 400.0 {
+            let q = fp8_e4m3_qdq(x);
+            let rel = (q - x).abs() / x;
+            assert!(rel <= 1.0 / 16.0 + 1e-6, "x={x} q={q} rel={rel}");
+            x *= 1.173;
+        }
+    }
+
+    #[test]
+    fn subnormals_snap_to_grid() {
+        // subnormal step is 2^-9 = 0.001953125
+        let step = 2f32.powi(-9);
+        let q = fp8_e4m3_qdq(step * 2.4);
+        assert_eq!(q, step * 2.0);
+        let q2 = fp8_e4m3_qdq(step * 2.6);
+        assert_eq!(q2, step * 3.0);
+        // below half a step rounds to zero
+        assert_eq!(fp8_e4m3_qdq(step * 0.4), 0.0);
+    }
+
+    #[test]
+    fn round_ties_even() {
+        // between 16 and 18 (step 2 at that exponent), 17 ties to 16 (even)
+        let q = fp8_e4m3_qdq(17.0);
+        assert_eq!(q, 16.0);
+        let q = fp8_e4m3_qdq(19.0);
+        assert_eq!(q, 20.0);
+    }
+
+    #[test]
+    fn e5m2_coarser_than_e4m3_midrange() {
+        let x = 3.3f32;
+        let e4 = (fp8_e4m3_qdq(x) - x).abs();
+        let e5 = (fp8_e5m2_qdq(x) - x).abs();
+        assert!(e5 >= e4);
+    }
+
+    #[test]
+    fn scaled_qdq_uses_full_range() {
+        let mut xs = vec![0.001f32, -0.002, 0.0005, 0.002];
+        let scale = qdq_slice_scaled(&mut xs, Fp8Format::E4M3);
+        assert!((scale - 0.002 / 448.0).abs() < 1e-9);
+        // absmax element must be exactly representable after scaling
+        assert!((xs[3] - 0.002).abs() < 1e-9);
+    }
+
+    #[test]
+    fn nan_propagates() {
+        assert!(fp8_e4m3_qdq(f32::NAN).is_nan());
+    }
+}

@@ -1,0 +1,220 @@
+//! GPTQ — layer-wise reconstruction quantization (Frantar et al., 2022),
+//! one of the two INT4 schemes in the paper's PTQ framework (§2.3.1).
+//!
+//! Quantizes weight columns in order while redistributing the rounding
+//! error over the not-yet-quantized columns using the inverse Hessian
+//! H = 2 XᵀX + λI of the layer's calibration activations — minimizing the
+//! layer *output* error rather than the weight error.
+
+use crate::tensor::Tensor;
+
+#[derive(Clone, Debug)]
+pub struct Gptq {
+    pub bits: u32,
+    pub group: usize,
+    /// Hessian damping fraction of mean diagonal (GPTQ uses 1%)
+    pub damp: f32,
+}
+
+impl Default for Gptq {
+    fn default() -> Self {
+        Gptq { bits: 4, group: 32, damp: 0.01 }
+    }
+}
+
+impl Gptq {
+    fn qmax(&self) -> f32 {
+        ((1u32 << (self.bits - 1)) - 1) as f32
+    }
+
+    /// Quantize w [n, k] given calibration activations x [m, k].
+    /// Returns the QDQ weight matrix.
+    pub fn quantize(&self, w: &Tensor, x: &Tensor) -> Tensor {
+        let (n, k) = (w.rows(), w.cols());
+        assert_eq!(x.cols(), k);
+        let hinv = self.hessian_inverse(x);
+
+        // per (row, group) scales from the *original* weights
+        let qmax = self.qmax();
+        let groups = k / self.group;
+        let mut scales = vec![0.0f32; n * groups];
+        for r in 0..n {
+            for g in 0..groups {
+                let sl = &w.row(r)[g * self.group..(g + 1) * self.group];
+                let absmax = sl.iter().fold(0.0f32, |m, v| m.max(v.abs()));
+                scales[r * groups + g] = if absmax == 0.0 { 1.0 } else { absmax / qmax };
+            }
+        }
+
+        // working copy; columns quantized in order with error feedback
+        let mut wk = w.clone();
+        let mut out = Tensor::zeros(&[n, k]);
+        for j in 0..k {
+            let d = hinv[j * k + j].max(1e-8);
+            let g = j / self.group;
+            for r in 0..n {
+                let s = scales[r * groups + g];
+                let v = wk.row(r)[j];
+                let q = (v / s).round().clamp(-qmax, qmax) * s;
+                out.row_mut(r)[j] = q;
+                let err = (v - q) / d;
+                // propagate to remaining columns of this row
+                let row = wk.row_mut(r);
+                for jj in (j + 1)..k {
+                    row[jj] -= err * hinv[j * k + jj];
+                }
+            }
+        }
+        out
+    }
+
+    /// H^{-1} with damping, via Gauss-Jordan (k is at most a few hundred
+    /// for the tiny models in this repo).
+    fn hessian_inverse(&self, x: &Tensor) -> Vec<f32> {
+        let (m, k) = (x.rows(), x.cols());
+        // H = 2/m * X^T X
+        let mut h = vec![0.0f32; k * k];
+        for r in 0..m {
+            let row = x.row(r);
+            for i in 0..k {
+                let xi = row[i];
+                if xi == 0.0 {
+                    continue;
+                }
+                for j in 0..k {
+                    h[i * k + j] += 2.0 * xi * row[j] / m as f32;
+                }
+            }
+        }
+        let mean_diag: f32 = (0..k).map(|i| h[i * k + i]).sum::<f32>() / k as f32;
+        let damp = self.damp * mean_diag.max(1e-8);
+        for i in 0..k {
+            h[i * k + i] += damp;
+        }
+        invert(&mut h, k)
+    }
+}
+
+/// Gauss-Jordan inverse of a k x k matrix (destroys the input).
+fn invert(a: &mut [f32], k: usize) -> Vec<f32> {
+    let mut inv = vec![0.0f32; k * k];
+    for i in 0..k {
+        inv[i * k + i] = 1.0;
+    }
+    for col in 0..k {
+        // partial pivot
+        let mut piv = col;
+        for r in (col + 1)..k {
+            if a[r * k + col].abs() > a[piv * k + col].abs() {
+                piv = r;
+            }
+        }
+        if piv != col {
+            for j in 0..k {
+                a.swap(col * k + j, piv * k + j);
+                inv.swap(col * k + j, piv * k + j);
+            }
+        }
+        let d = a[col * k + col];
+        let d = if d.abs() < 1e-12 { 1e-12 } else { d };
+        let dinv = 1.0 / d;
+        for j in 0..k {
+            a[col * k + j] *= dinv;
+            inv[col * k + j] *= dinv;
+        }
+        for r in 0..k {
+            if r == col {
+                continue;
+            }
+            let f = a[r * k + col];
+            if f == 0.0 {
+                continue;
+            }
+            for j in 0..k {
+                a[r * k + j] -= f * a[col * k + j];
+                inv[r * k + j] -= f * inv[col * k + j];
+            }
+        }
+    }
+    inv
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::{AffineQuantizer, WeightQuantizer};
+    use crate::tensor::ops::matmul_transb;
+    use crate::util::Rng;
+
+    fn setup(seed: u64, n: usize, k: usize, m: usize) -> (Tensor, Tensor) {
+        let mut rng = Rng::new(seed);
+        let w = Tensor::randn(&[n, k], 0.5, &mut rng);
+        // correlated activations (what makes GPTQ matter)
+        let base = Tensor::randn(&[m, k / 4], 1.0, &mut rng);
+        let mix = Tensor::randn(&[k, k / 4], 0.5, &mut rng);
+        let mut x = Tensor::zeros(&[m, k]);
+        for r in 0..m {
+            for c in 0..k {
+                x.row_mut(r)[c] =
+                    crate::tensor::ops::dot(base.row(r), mix.row(c)) + rng.normal() * 0.1;
+            }
+        }
+        (w, x)
+    }
+
+    #[test]
+    fn invert_identity() {
+        let mut a = vec![2.0, 0.0, 0.0, 4.0];
+        let inv = invert(&mut a, 2);
+        assert!((inv[0] - 0.5).abs() < 1e-6);
+        assert!((inv[3] - 0.25).abs() < 1e-6);
+        assert!(inv[1].abs() < 1e-6);
+    }
+
+    #[test]
+    fn gptq_beats_rtn_on_output_error() {
+        let (w, x) = setup(0, 24, 64, 96);
+        let y_ref = matmul_transb(&x, &w);
+
+        let gptq_w = Gptq::default().quantize(&w, &x);
+        let y_gptq = matmul_transb(&x, &gptq_w);
+
+        let mut rtn_w = w.clone();
+        AffineQuantizer::int4_group32().qdq(&mut rtn_w.data, 24, 64);
+        let y_rtn = matmul_transb(&x, &rtn_w);
+
+        let e_gptq = crate::util::stats::mse(&y_gptq.data, &y_ref.data);
+        let e_rtn = crate::util::stats::mse(&y_rtn.data, &y_ref.data);
+        assert!(
+            e_gptq < e_rtn,
+            "gptq {e_gptq} should beat round-to-nearest {e_rtn}"
+        );
+    }
+
+    #[test]
+    fn gptq_output_on_quant_grid() {
+        let (w, x) = setup(1, 8, 32, 40);
+        let q = Gptq::default();
+        let wq = q.quantize(&w, &x);
+        // every output weight is a multiple of its group scale
+        let qmax = 7.0f32;
+        for r in 0..8 {
+            let sl = w.row(r);
+            let absmax = sl.iter().fold(0.0f32, |m, v| m.max(v.abs()));
+            let s = absmax / qmax;
+            for j in 0..32 {
+                let code = wq.row(r)[j] / s;
+                assert!((code - code.round()).abs() < 1e-3, "not on grid");
+                assert!(code.round().abs() <= qmax + 0.5);
+            }
+        }
+    }
+
+    #[test]
+    fn gptq_respects_shapes() {
+        let (w, x) = setup(2, 4, 32, 16);
+        let wq = Gptq::default().quantize(&w, &x);
+        assert_eq!(wq.dims(), w.dims());
+        assert!(wq.data.iter().all(|v| v.is_finite()));
+    }
+}

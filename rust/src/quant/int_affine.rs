@@ -1,0 +1,229 @@
+//! k-bit integer affine quantization with per-tensor / per-channel /
+//! group-wise granularity — the INT8/INT4 backbone of the PTQ framework
+//! (§2.3.1). Symmetric around the mid-code, matching the python-side
+//! reference (kernels/ref.py quantize_int4) for the group-wise 4-bit case.
+
+use super::WeightQuantizer;
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Granularity {
+    PerTensor,
+    PerChannel,
+    /// group size along the reduction (in) axis
+    Group(usize),
+}
+
+#[derive(Clone, Debug)]
+pub struct AffineQuantizer {
+    pub bits: u32,
+    pub granularity: Granularity,
+}
+
+impl AffineQuantizer {
+    pub fn new(bits: u32, granularity: Granularity) -> Self {
+        assert!((2..=8).contains(&bits), "bits {bits} out of range");
+        AffineQuantizer { bits, granularity }
+    }
+
+    pub fn int4_group32() -> Self {
+        AffineQuantizer::new(4, Granularity::Group(32))
+    }
+
+    pub fn int8_per_channel() -> Self {
+        AffineQuantizer::new(8, Granularity::PerChannel)
+    }
+
+    fn qmax(&self) -> f32 {
+        ((1u32 << (self.bits - 1)) - 1) as f32
+    }
+
+    /// QDQ one contiguous group with an absmax scale; returns the scale.
+    pub fn qdq_group(&self, xs: &mut [f32]) -> f32 {
+        let absmax = xs.iter().fold(0.0f32, |m, x| m.max(x.abs()));
+        let scale = if absmax == 0.0 { 1.0 } else { absmax / self.qmax() };
+        let qmax = self.qmax();
+        for x in xs.iter_mut() {
+            let code = (*x / scale).round().clamp(-qmax, qmax);
+            *x = code * scale;
+        }
+        scale
+    }
+
+    /// Quantize to codes (offset so codes are unsigned) — used by packers.
+    /// Returns (codes, scales) with one scale per group.
+    pub fn quantize_codes(&self, w: &[f32], n: usize, k: usize) -> (Vec<u8>, Vec<f32>) {
+        assert_eq!(w.len(), n * k);
+        let g = self.group_len(k);
+        let qmax = self.qmax();
+        let zero = (1u32 << (self.bits - 1)) as f32; // e.g. 8 for int4
+        let mut codes = vec![0u8; n * k];
+        let mut scales = Vec::with_capacity(n * k / g);
+        for row in 0..n {
+            for gs in (0..k).step_by(g) {
+                let sl = &w[row * k + gs..row * k + gs + g];
+                let absmax = sl.iter().fold(0.0f32, |m, x| m.max(x.abs()));
+                let scale = if absmax == 0.0 { 1.0 } else { absmax / qmax };
+                scales.push(scale);
+                for (i, &x) in sl.iter().enumerate() {
+                    let c = (x / scale).round().clamp(-qmax, qmax) + zero;
+                    codes[row * k + gs + i] = c as u8;
+                }
+            }
+        }
+        (codes, scales)
+    }
+
+    pub fn dequantize_codes(
+        &self,
+        codes: &[u8],
+        scales: &[f32],
+        n: usize,
+        k: usize,
+    ) -> Vec<f32> {
+        let g = self.group_len(k);
+        let zero = (1u32 << (self.bits - 1)) as f32;
+        let mut w = vec![0.0f32; n * k];
+        for row in 0..n {
+            for gs in (0..k).step_by(g) {
+                let scale = scales[(row * k + gs) / g];
+                for i in 0..g {
+                    w[row * k + gs + i] =
+                        (codes[row * k + gs + i] as f32 - zero) * scale;
+                }
+            }
+        }
+        w
+    }
+
+    fn group_len(&self, k: usize) -> usize {
+        match self.granularity {
+            Granularity::PerTensor => k, // handled row-wise below
+            Granularity::PerChannel => k,
+            Granularity::Group(g) => {
+                assert!(k % g == 0, "k={k} not divisible by group {g}");
+                g
+            }
+        }
+    }
+}
+
+impl WeightQuantizer for AffineQuantizer {
+    fn name(&self) -> &'static str {
+        match (self.bits, self.granularity) {
+            (4, _) => "int4",
+            (8, _) => "int8",
+            _ => "int-affine",
+        }
+    }
+
+    fn bits(&self) -> f64 {
+        // scale overhead: one f32 (32 bits) per group
+        let overhead = match self.granularity {
+            Granularity::PerTensor => 0.0,
+            Granularity::PerChannel => 0.0, // amortized over k, negligible
+            Granularity::Group(g) => 32.0 / g as f64,
+        };
+        self.bits as f64 + overhead
+    }
+
+    fn qdq(&self, w: &mut [f32], n: usize, k: usize) {
+        assert_eq!(w.len(), n * k);
+        match self.granularity {
+            Granularity::PerTensor => {
+                self.qdq_group(w);
+            }
+            Granularity::PerChannel => {
+                for row in 0..n {
+                    self.qdq_group(&mut w[row * k..(row + 1) * k]);
+                }
+            }
+            Granularity::Group(g) => {
+                assert!(k % g == 0);
+                for row in 0..n {
+                    for gs in (0..k).step_by(g) {
+                        self.qdq_group(&mut w[row * k + gs..row * k + gs + g]);
+                    }
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::{testing, Rng};
+
+    #[test]
+    fn int8_near_lossless() {
+        let mut rng = Rng::new(0);
+        let mut w = rng.normal_vec(64 * 64, 0.1);
+        let orig = w.clone();
+        AffineQuantizer::int8_per_channel().qdq(&mut w, 64, 64);
+        let mse = crate::util::stats::mse(&w, &orig);
+        assert!(mse < 1e-6, "int8 mse {mse}");
+    }
+
+    #[test]
+    fn int4_coarser_than_int8() {
+        let mut rng = Rng::new(1);
+        let orig = rng.normal_vec(32 * 64, 1.0);
+        let mut w8 = orig.clone();
+        let mut w4 = orig.clone();
+        AffineQuantizer::int8_per_channel().qdq(&mut w8, 32, 64);
+        AffineQuantizer::int4_group32().qdq(&mut w4, 32, 64);
+        assert!(
+            crate::util::stats::mse(&w4, &orig) > crate::util::stats::mse(&w8, &orig)
+        );
+    }
+
+    #[test]
+    fn codes_roundtrip_equals_qdq() {
+        testing::check(8, |rng| {
+            let (n, k) = (16, 64);
+            let w = rng.normal_vec(n * k, 0.5);
+            let q = AffineQuantizer::int4_group32();
+            let (codes, scales) = q.quantize_codes(&w, n, k);
+            let deq = q.dequantize_codes(&codes, &scales, n, k);
+            let mut direct = w.clone();
+            q.qdq(&mut direct, n, k);
+            testing::assert_allclose(&deq, &direct, 1e-6, 1e-6);
+            assert!(codes.iter().all(|&c| c <= 15));
+        });
+    }
+
+    #[test]
+    fn error_bounded_by_half_step() {
+        testing::check(8, |rng| {
+            let (n, k) = (8, 32);
+            let orig = rng.normal_vec(n * k, 1.0);
+            let mut w = orig.clone();
+            let q = AffineQuantizer::new(4, Granularity::Group(32));
+            q.qdq(&mut w, n, k);
+            for row in 0..n {
+                let sl = &orig[row * k..(row + 1) * k];
+                let absmax = sl.iter().fold(0.0f32, |m, x| m.max(x.abs()));
+                let step = absmax / 7.0;
+                for i in 0..k {
+                    assert!(
+                        (w[row * k + i] - sl[i]).abs() <= 0.5 * step + 1e-6,
+                        "row {row} i {i}"
+                    );
+                }
+            }
+        });
+    }
+
+    #[test]
+    fn effective_bits_include_scale_overhead() {
+        let q = AffineQuantizer::int4_group32();
+        assert!((q.bits() - 5.0).abs() < 1e-9); // 4 + 32/32
+    }
+
+    #[test]
+    fn zero_weights_stay_zero() {
+        let mut w = vec![0.0f32; 64];
+        AffineQuantizer::int4_group32().qdq(&mut w, 2, 32);
+        assert!(w.iter().all(|&x| x == 0.0));
+    }
+}

@@ -1,0 +1,43 @@
+//! Quantization framework — pillar 1 of the paper (§2).
+//!
+//! PTQ: fp8 (E4M3/E5M2) QDQ, k-bit affine (per-tensor / per-channel /
+//! group-wise), GPTQ layer-wise reconstruction, AWQ activation-aware
+//! scaling, SmoothQuant-style migration, and **LeptoQuant** outlier-
+//! isolation scale search (§2.3.2). QAT-side quantizers: SEQ 2-bit
+//! (§2.1.2), ternary TWN, **Tequila** deadzone-bias (§2.2.1) and **Sherry**
+//! 3:4 structured sparsity with the Arenas annealing schedule (§2.2.2).
+//! `packing` holds the bit-exact storage codecs (2-bit, 1.67-bit 3-in-5,
+//! Sherry's 1.25-bit 4-in-5) plus packed GEMV kernels for the edge
+//! efficiency benches (Fig. 2, Table 3).
+
+pub mod awq;
+pub mod calib;
+pub mod fp8;
+pub mod gptq;
+pub mod int_affine;
+pub mod leptoquant;
+pub mod packing;
+pub mod seq2;
+pub mod sherry;
+pub mod smooth;
+pub mod tequila;
+pub mod ternary;
+
+pub use calib::CalibStats;
+pub use fp8::{fp8_e4m3_qdq, fp8_e5m2_qdq, Fp8Format};
+pub use int_affine::{AffineQuantizer, Granularity};
+pub use leptoquant::LeptoQuant;
+pub use seq2::Seq2Quantizer;
+pub use sherry::{ArenasSchedule, Sherry};
+pub use tequila::Tequila;
+pub use ternary::TernaryQuantizer;
+
+/// Common interface: quantize-dequantize a weight matrix `[out, in]`
+/// in place, returning bookkeeping info as a human-readable tag.
+pub trait WeightQuantizer {
+    fn name(&self) -> &'static str;
+    /// effective bits per weight (for size accounting)
+    fn bits(&self) -> f64;
+    /// QDQ: replace w by its quantized image. `w` is row-major [n, k].
+    fn qdq(&self, w: &mut [f32], n: usize, k: usize);
+}

@@ -1,0 +1,629 @@
+//! Bit-exact storage codecs + packed GEMV kernels — the edge-inference
+//! hot path behind Figure 2 (TTFT / generation throughput) and Table 3
+//! (ternary packing strategies).
+//!
+//! The paper's Figure 4 comparison, reproduced here:
+//!   * 2-bit      : 1 weight / 2 bits, 4 per byte — aligned but wasteful
+//!                  for ternary content (BitNet I2_S analogue).
+//!   * 1.67-bit   : 3 ternary digits packed base-3 into 5 bits — dense but
+//!                  3-way patterns are SIMD-unfriendly (slow unpack).
+//!   * Sherry 1.25: 4 weights (3:4 sparse) into one 5-bit code — dense AND
+//!                  4-way aligned.
+//!
+//! GEMV kernels consume the packed bytes directly (no materialized f32
+//! weight matrix), so throughput reflects real memory-bandwidth-bound
+//! decode — the regime the paper's edge numbers live in.
+
+use super::sherry::SherryBlock;
+
+// --------------------------------------------------------------------------
+// codecs
+// --------------------------------------------------------------------------
+
+/// Pack 2-bit codes (values 0..=3), 4 per byte, little-endian fields.
+pub fn pack_2bit(codes: &[u8]) -> Vec<u8> {
+    assert!(codes.len() % 4 == 0);
+    codes
+        .chunks_exact(4)
+        .map(|c| c[0] | (c[1] << 2) | (c[2] << 4) | (c[3] << 6))
+        .collect()
+}
+
+pub fn unpack_2bit(packed: &[u8]) -> Vec<u8> {
+    let mut out = Vec::with_capacity(packed.len() * 4);
+    for &b in packed {
+        out.push(b & 3);
+        out.push((b >> 2) & 3);
+        out.push((b >> 4) & 3);
+        out.push((b >> 6) & 3);
+    }
+    out
+}
+
+/// Pack int4 codes (0..=15), 2 per byte (low nibble first).
+pub fn pack_nibbles(codes: &[u8]) -> Vec<u8> {
+    assert!(codes.len() % 2 == 0);
+    codes.chunks_exact(2).map(|c| c[0] | (c[1] << 4)).collect()
+}
+
+pub fn unpack_nibbles(packed: &[u8]) -> Vec<u8> {
+    let mut out = Vec::with_capacity(packed.len() * 2);
+    for &b in packed {
+        out.push(b & 0xF);
+        out.push(b >> 4);
+    }
+    out
+}
+
+/// 1.67-bit ternary: 3 digits (0..=2) base-3 into a 5-bit field (0..=26),
+/// fields packed contiguously into a bitstream. codes.len() % 3 == 0.
+pub fn pack_ternary_1_67(codes: &[u8]) -> Vec<u8> {
+    assert!(codes.len() % 3 == 0);
+    let mut bits = BitWriter::new();
+    for c in codes.chunks_exact(3) {
+        let v = c[0] as u32 + 3 * c[1] as u32 + 9 * c[2] as u32;
+        bits.write(v, 5);
+    }
+    bits.finish()
+}
+
+pub fn unpack_ternary_1_67(packed: &[u8], n_codes: usize) -> Vec<u8> {
+    assert!(n_codes % 3 == 0);
+    let mut r = BitReader::new(packed);
+    let mut out = Vec::with_capacity(n_codes);
+    for _ in 0..n_codes / 3 {
+        let v = r.read(5);
+        out.push((v % 3) as u8);
+        out.push(((v / 3) % 3) as u8);
+        out.push(((v / 9) % 3) as u8);
+    }
+    out
+}
+
+/// Sherry 1.25-bit: one 5-bit block code per 4 weights, bitstream-packed.
+pub fn pack_sherry(block_codes: &[u8]) -> Vec<u8> {
+    let mut bits = BitWriter::new();
+    for &c in block_codes {
+        bits.write(c as u32, 5);
+    }
+    bits.finish()
+}
+
+pub fn unpack_sherry(packed: &[u8], n_blocks: usize) -> Vec<u8> {
+    let mut r = BitReader::new(packed);
+    (0..n_blocks).map(|_| r.read(5) as u8).collect()
+}
+
+struct BitWriter {
+    out: Vec<u8>,
+    acc: u64,
+    nbits: u32,
+}
+
+impl BitWriter {
+    fn new() -> Self {
+        BitWriter { out: Vec::new(), acc: 0, nbits: 0 }
+    }
+
+    fn write(&mut self, v: u32, bits: u32) {
+        self.acc |= (v as u64) << self.nbits;
+        self.nbits += bits;
+        while self.nbits >= 8 {
+            self.out.push((self.acc & 0xFF) as u8);
+            self.acc >>= 8;
+            self.nbits -= 8;
+        }
+    }
+
+    fn finish(mut self) -> Vec<u8> {
+        if self.nbits > 0 {
+            self.out.push((self.acc & 0xFF) as u8);
+        }
+        self.out
+    }
+}
+
+struct BitReader<'a> {
+    data: &'a [u8],
+    pos: usize,
+    acc: u64,
+    nbits: u32,
+}
+
+impl<'a> BitReader<'a> {
+    fn new(data: &'a [u8]) -> Self {
+        BitReader { data, pos: 0, acc: 0, nbits: 0 }
+    }
+
+    fn read(&mut self, bits: u32) -> u32 {
+        while self.nbits < bits {
+            let b = if self.pos < self.data.len() { self.data[self.pos] } else { 0 };
+            self.pos += 1;
+            self.acc |= (b as u64) << self.nbits;
+            self.nbits += 8;
+        }
+        let v = (self.acc & ((1 << bits) - 1)) as u32;
+        self.acc >>= bits;
+        self.nbits -= bits;
+        v
+    }
+}
+
+// --------------------------------------------------------------------------
+// packed weight matrices + GEMV kernels
+// --------------------------------------------------------------------------
+
+/// Storage format tag for size accounting (model-size columns of Table 3).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum PackFormat {
+    F32,
+    F16, // accounted only (we compute in f32)
+    Int4,
+    TwoBit,
+    Ternary167,
+    Sherry125,
+}
+
+impl PackFormat {
+    pub fn bits_per_weight(&self) -> f64 {
+        match self {
+            PackFormat::F32 => 32.0,
+            PackFormat::F16 => 16.0,
+            PackFormat::Int4 => 4.0,
+            PackFormat::TwoBit => 2.0,
+            PackFormat::Ternary167 => 5.0 / 3.0,
+            PackFormat::Sherry125 => 1.25,
+        }
+    }
+
+    /// bytes for an [n, k] weight matrix incl. per-row scale overhead
+    pub fn matrix_bytes(&self, n: usize, k: usize) -> usize {
+        let w = (self.bits_per_weight() * (n * k) as f64 / 8.0).ceil() as usize;
+        let scales = match self {
+            PackFormat::F32 | PackFormat::F16 => 0,
+            _ => n * 4,
+        };
+        w + scales
+    }
+}
+
+/// A ternary matrix packed at 2 bits/weight (BitNet I2_S analogue).
+pub struct Packed2Bit {
+    pub n: usize,
+    pub k: usize,
+    pub bytes: Vec<u8>,
+    pub alphas: Vec<f32>,
+}
+
+impl Packed2Bit {
+    pub fn from_codes(codes: &[u8], alphas: &[f32], n: usize, k: usize) -> Self {
+        assert_eq!(codes.len(), n * k);
+        Packed2Bit { n, k, bytes: pack_2bit(codes), alphas: alphas.to_vec() }
+    }
+
+    /// y = W x with inline 2-bit unpack (4 weights per byte).
+    /// Baseline implementation — see `gemv_lut` for the optimized path
+    /// (before/after recorded in EXPERIMENTS.md §Perf).
+    pub fn gemv(&self, x: &[f32], y: &mut [f32]) {
+        assert_eq!(x.len(), self.k);
+        assert_eq!(y.len(), self.n);
+        let bpr = self.k / 4;
+        for row in 0..self.n {
+            let bytes = &self.bytes[row * bpr..(row + 1) * bpr];
+            let mut acc = 0.0f32;
+            for (bi, &b) in bytes.iter().enumerate() {
+                let xb = &x[bi * 4..bi * 4 + 4];
+                acc += ((b & 3) as f32 - 1.0) * xb[0];
+                acc += (((b >> 2) & 3) as f32 - 1.0) * xb[1];
+                acc += (((b >> 4) & 3) as f32 - 1.0) * xb[2];
+                acc += (((b >> 6) & 3) as f32 - 1.0) * xb[3];
+            }
+            y[row] = acc * self.alphas[row];
+        }
+    }
+
+    /// T-MAC-style lookup-table GEMV (Wei et al. 2025, the engine the
+    /// paper's ternary deployment targets): for each 4-weight segment of x,
+    /// precompute the dot contribution of all 256 possible code bytes once
+    /// (k/4 × 256 table), then each of the n rows is just k/4 table
+    /// lookups + adds instead of 4·k/4 unpack-multiply-adds. The table is
+    /// reused across all n rows, so the per-row cost drops ~4x and the
+    /// inner loop becomes pure loads — the memory-bandwidth-bound profile
+    /// edge decoding actually has.
+    pub fn gemv_lut(&self, x: &[f32], y: &mut [f32], lut: &mut Vec<f32>) {
+        assert_eq!(x.len(), self.k);
+        assert_eq!(y.len(), self.n);
+        let segs = self.k / 4;
+        lut.clear();
+        lut.resize(segs * 256, 0.0);
+        for seg in 0..segs {
+            let xb = &x[seg * 4..seg * 4 + 4];
+            let base = seg * 256;
+            // build incrementally: iterate fields to avoid 256*4 mults
+            for b in 0..256usize {
+                let v = ((b & 3) as f32 - 1.0) * xb[0]
+                    + (((b >> 2) & 3) as f32 - 1.0) * xb[1]
+                    + (((b >> 4) & 3) as f32 - 1.0) * xb[2]
+                    + (((b >> 6) & 3) as f32 - 1.0) * xb[3];
+                lut[base + b] = v;
+            }
+        }
+        let bpr = segs;
+        for row in 0..self.n {
+            let bytes = &self.bytes[row * bpr..(row + 1) * bpr];
+            let mut s0 = 0.0f32;
+            let mut s1 = 0.0f32;
+            let chunks = bytes.len() / 2;
+            for c in 0..chunks {
+                let i = c * 2;
+                s0 += lut[i * 256 + bytes[i] as usize];
+                s1 += lut[(i + 1) * 256 + bytes[i + 1] as usize];
+            }
+            if bytes.len() % 2 == 1 {
+                let i = bytes.len() - 1;
+                s0 += lut[i * 256 + bytes[i] as usize];
+            }
+            y[row] = (s0 + s1) * self.alphas[row];
+        }
+    }
+}
+
+/// Ternary matrix packed base-3, 3 codes per 5 bits (1.67-bit strategy).
+pub struct PackedTernary167 {
+    pub n: usize,
+    pub k: usize,
+    pub bytes: Vec<u8>,
+    pub alphas: Vec<f32>,
+}
+
+impl PackedTernary167 {
+    pub fn from_codes(codes: &[u8], alphas: &[f32], n: usize, k: usize) -> Self {
+        assert_eq!(codes.len(), n * k);
+        assert!(k % 3 == 0 || k % 24 == 0 || k % 3 != 0, "row-padded below");
+        // pad each row to a multiple of 3 with deadzone codes
+        let k_pad = k.div_ceil(3) * 3;
+        let mut padded = Vec::with_capacity(n * k_pad);
+        for row in 0..n {
+            padded.extend_from_slice(&codes[row * k..(row + 1) * k]);
+            padded.extend(std::iter::repeat(1u8).take(k_pad - k));
+        }
+        PackedTernary167 {
+            n,
+            k,
+            bytes: pack_ternary_1_67(&padded),
+            alphas: alphas.to_vec(),
+        }
+    }
+
+    /// y = W x — decodes the irregular 3-way base-3 groups inline. The
+    /// div/mod decode is the "SIMD-unfriendly" cost the paper calls out.
+    pub fn gemv(&self, x: &[f32], y: &mut [f32]) {
+        assert_eq!(x.len(), self.k);
+        assert_eq!(y.len(), self.n);
+        let k_pad = self.k.div_ceil(3) * 3;
+        let groups_per_row = k_pad / 3;
+        let mut r = BitReader::new(&self.bytes);
+        for row in 0..self.n {
+            let mut acc = 0.0f32;
+            for g in 0..groups_per_row {
+                let v = r.read(5);
+                let base = g * 3;
+                let c0 = (v % 3) as f32 - 1.0;
+                let c1 = ((v / 3) % 3) as f32 - 1.0;
+                let c2 = ((v / 9) % 3) as f32 - 1.0;
+                if base < self.k {
+                    acc += c0 * x[base];
+                }
+                if base + 1 < self.k {
+                    acc += c1 * x[base + 1];
+                }
+                if base + 2 < self.k {
+                    acc += c2 * x[base + 2];
+                }
+            }
+            y[row] = acc * self.alphas[row];
+        }
+    }
+}
+
+/// Sherry matrix: 5-bit block codes, 4 weights per code (1.25-bit).
+pub struct PackedSherry {
+    pub n: usize,
+    pub k: usize,
+    pub bytes: Vec<u8>,
+    pub alphas: Vec<f32>,
+}
+
+impl PackedSherry {
+    pub fn from_codes(block_codes: &[u8], alphas: &[f32], n: usize, k: usize) -> Self {
+        assert_eq!(block_codes.len(), n * k / 4);
+        PackedSherry { n, k, bytes: pack_sherry(block_codes), alphas: alphas.to_vec() }
+    }
+
+    /// y = W x — one 5-bit read expands to an aligned 4-lane group via a
+    /// 32-entry LUT (the SIMD-friendly 4-way pattern of Fig. 4 right).
+    pub fn gemv(&self, x: &[f32], y: &mut [f32]) {
+        assert_eq!(x.len(), self.k);
+        assert_eq!(y.len(), self.n);
+        // 32-entry expansion LUT, built once
+        let lut = sherry_lut();
+        let blocks_per_row = self.k / 4;
+        let mut r = BitReader::new(&self.bytes);
+        for row in 0..self.n {
+            let mut acc = 0.0f32;
+            for b in 0..blocks_per_row {
+                let code = r.read(5) as usize;
+                let vals = &lut[code];
+                let xb = &x[b * 4..b * 4 + 4];
+                acc += vals[0] * xb[0] + vals[1] * xb[1] + vals[2] * xb[2] + vals[3] * xb[3];
+            }
+            y[row] = acc * self.alphas[row];
+        }
+    }
+}
+
+fn sherry_lut() -> [[f32; 4]; 32] {
+    let mut lut = [[0.0f32; 4]; 32];
+    for code in 0..32u8 {
+        lut[code as usize] = SherryBlock::from_code(code).expand();
+    }
+    lut
+}
+
+/// Dense f32 GEMV baseline (the BF16 row of Table 3; compute is f32).
+pub fn gemv_f32(w: &[f32], n: usize, k: usize, x: &[f32], y: &mut [f32]) {
+    assert_eq!(w.len(), n * k);
+    for row in 0..n {
+        y[row] = crate::tensor::ops::dot(&w[row * k..(row + 1) * k], x);
+    }
+}
+
+/// int4 group-wise packed GEMV (2 codes per byte) — the Q4_K_M analogue
+/// for the Figure 2 edge comparison.
+pub struct PackedInt4 {
+    pub n: usize,
+    pub k: usize,
+    pub group: usize,
+    pub bytes: Vec<u8>,
+    pub scales: Vec<f32>,
+}
+
+impl PackedInt4 {
+    pub fn from_codes(codes: &[u8], scales: &[f32], n: usize, k: usize, group: usize) -> Self {
+        assert_eq!(codes.len(), n * k);
+        PackedInt4 { n, k, group, bytes: pack_nibbles(codes), scales: scales.to_vec() }
+    }
+
+    pub fn gemv(&self, x: &[f32], y: &mut [f32]) {
+        assert_eq!(x.len(), self.k);
+        let bpr = self.k / 2;
+        let groups_per_row = self.k / self.group;
+        for row in 0..self.n {
+            let bytes = &self.bytes[row * bpr..(row + 1) * bpr];
+            let mut acc = 0.0f32;
+            for g in 0..groups_per_row {
+                let s = self.scales[row * groups_per_row + g];
+                let mut gacc = 0.0f32;
+                let byte_lo = g * self.group / 2;
+                let byte_hi = byte_lo + self.group / 2;
+                for (bi, &b) in bytes[byte_lo..byte_hi].iter().enumerate() {
+                    let xi = g * self.group + bi * 2;
+                    gacc += ((b & 0xF) as f32 - 8.0) * x[xi];
+                    gacc += ((b >> 4) as f32 - 8.0) * x[xi + 1];
+                }
+                acc += gacc * s;
+            }
+            y[row] = acc;
+        }
+    }
+
+    /// T-MAC-style LUT GEMV for int4 (2 codes per byte, 256-entry table
+    /// per byte position, group scales applied on group subtotals). See
+    /// Packed2Bit::gemv_lut and EXPERIMENTS.md §Perf.
+    pub fn gemv_lut(&self, x: &[f32], y: &mut [f32], lut: &mut Vec<f32>) {
+        assert_eq!(x.len(), self.k);
+        let segs = self.k / 2;
+        lut.clear();
+        lut.resize(segs * 256, 0.0);
+        for seg in 0..segs {
+            let x0 = x[seg * 2];
+            let x1 = x[seg * 2 + 1];
+            let base = seg * 256;
+            for b in 0..256usize {
+                lut[base + b] =
+                    ((b & 0xF) as f32 - 8.0) * x0 + ((b >> 4) as f32 - 8.0) * x1;
+            }
+        }
+        let bpr = segs;
+        let groups_per_row = self.k / self.group;
+        let bytes_per_group = self.group / 2;
+        for row in 0..self.n {
+            let bytes = &self.bytes[row * bpr..(row + 1) * bpr];
+            let mut acc = 0.0f32;
+            for g in 0..groups_per_row {
+                let s = self.scales[row * groups_per_row + g];
+                let mut gacc = 0.0f32;
+                let lo = g * bytes_per_group;
+                for bi in 0..bytes_per_group {
+                    gacc += lut[(lo + bi) * 256 + bytes[lo + bi] as usize];
+                }
+                acc += gacc * s;
+            }
+            y[row] = acc;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::{seq2::Seq2Quantizer, ternary::TernaryQuantizer, Sherry};
+    use crate::util::{testing, Rng};
+
+    #[test]
+    fn pack2_roundtrip() {
+        testing::check(8, |rng| {
+            let codes: Vec<u8> = (0..64).map(|_| rng.below(4) as u8).collect();
+            assert_eq!(unpack_2bit(&pack_2bit(&codes)), codes);
+        });
+    }
+
+    #[test]
+    fn nibble_roundtrip() {
+        testing::check(8, |rng| {
+            let codes: Vec<u8> = (0..64).map(|_| rng.below(16) as u8).collect();
+            assert_eq!(unpack_nibbles(&pack_nibbles(&codes)), codes);
+        });
+    }
+
+    #[test]
+    fn ternary167_roundtrip() {
+        testing::check(8, |rng| {
+            let codes: Vec<u8> = (0..96).map(|_| rng.below(3) as u8).collect();
+            let packed = pack_ternary_1_67(&codes);
+            assert_eq!(unpack_ternary_1_67(&packed, 96), codes);
+            // 96 codes -> 32 groups * 5 bits = 160 bits = 20 bytes
+            assert_eq!(packed.len(), 20);
+        });
+    }
+
+    #[test]
+    fn sherry_pack_roundtrip() {
+        testing::check(8, |rng| {
+            let codes: Vec<u8> = (0..40).map(|_| rng.below(32) as u8).collect();
+            let packed = pack_sherry(&codes);
+            assert_eq!(unpack_sherry(&packed, 40), codes);
+            assert_eq!(packed.len(), 25); // 40 * 5 bits = 200 bits
+        });
+    }
+
+    #[test]
+    fn format_sizes_ordered() {
+        let sizes: Vec<usize> = [
+            PackFormat::F16,
+            PackFormat::Int4,
+            PackFormat::TwoBit,
+            PackFormat::Ternary167,
+            PackFormat::Sherry125,
+        ]
+        .iter()
+        .map(|f| f.matrix_bytes(1024, 1024))
+        .collect();
+        for w in sizes.windows(2) {
+            assert!(w[1] < w[0], "{sizes:?}");
+        }
+    }
+
+    #[test]
+    fn gemv_2bit_matches_dense() {
+        testing::check(6, |rng| {
+            let (n, k) = (16, 64);
+            let w = rng.normal_vec(n * k, 1.0);
+            let (codes, alphas) = TernaryQuantizer::default().quantize_codes(&w, n, k);
+            let deq = TernaryQuantizer::dequantize_codes(&codes, &alphas, n, k);
+            let x = rng.normal_vec(k, 1.0);
+            let mut dense = vec![0.0; n];
+            gemv_f32(&deq, n, k, &x, &mut dense);
+            let packed = Packed2Bit::from_codes(&codes, &alphas, n, k);
+            let mut y = vec![0.0; n];
+            packed.gemv(&x, &mut y);
+            testing::assert_allclose(&y, &dense, 1e-4, 1e-4);
+        });
+    }
+
+    #[test]
+    fn gemv_2bit_lut_matches_baseline() {
+        testing::check(6, |rng| {
+            let (n, k) = (16, 64);
+            let w = rng.normal_vec(n * k, 1.0);
+            let (codes, alphas) = TernaryQuantizer::default().quantize_codes(&w, n, k);
+            let packed = Packed2Bit::from_codes(&codes, &alphas, n, k);
+            let x = rng.normal_vec(k, 1.0);
+            let mut base = vec![0.0; n];
+            packed.gemv(&x, &mut base);
+            let mut lut_buf = Vec::new();
+            let mut fast = vec![0.0; n];
+            packed.gemv_lut(&x, &mut fast, &mut lut_buf);
+            testing::assert_allclose(&fast, &base, 1e-4, 1e-4);
+        });
+    }
+
+    #[test]
+    fn gemv_ternary167_matches_dense() {
+        testing::check(6, |rng| {
+            let (n, k) = (8, 48);
+            let w = rng.normal_vec(n * k, 1.0);
+            let (codes, alphas) = TernaryQuantizer::default().quantize_codes(&w, n, k);
+            let deq = TernaryQuantizer::dequantize_codes(&codes, &alphas, n, k);
+            let x = rng.normal_vec(k, 1.0);
+            let mut dense = vec![0.0; n];
+            gemv_f32(&deq, n, k, &x, &mut dense);
+            let packed = PackedTernary167::from_codes(&codes, &alphas, n, k);
+            let mut y = vec![0.0; n];
+            packed.gemv(&x, &mut y);
+            testing::assert_allclose(&y, &dense, 1e-4, 1e-4);
+        });
+    }
+
+    #[test]
+    fn gemv_sherry_matches_dense_dequant() {
+        testing::check(6, |rng| {
+            let (n, k) = (8, 64);
+            let w = rng.normal_vec(n * k, 1.0);
+            let (codes, alphas) = Sherry::quantize_codes(&w, n, k);
+            let deq = Sherry::dequantize_codes(&codes, &alphas, n, k);
+            let x = rng.normal_vec(k, 1.0);
+            let mut dense = vec![0.0; n];
+            gemv_f32(&deq, n, k, &x, &mut dense);
+            let packed = PackedSherry::from_codes(&codes, &alphas, n, k);
+            let mut y = vec![0.0; n];
+            packed.gemv(&x, &mut y);
+            testing::assert_allclose(&y, &dense, 1e-4, 1e-4);
+        });
+    }
+
+    #[test]
+    fn gemv_int4_matches_dense_dequant() {
+        testing::check(6, |rng| {
+            let (n, k, g) = (8, 64, 32);
+            let w = rng.normal_vec(n * k, 1.0);
+            let q = crate::quant::AffineQuantizer::int4_group32();
+            let (codes, scales) = q.quantize_codes(&w, n, k);
+            let deq = q.dequantize_codes(&codes, &scales, n, k);
+            let x = rng.normal_vec(k, 1.0);
+            let mut dense = vec![0.0; n];
+            gemv_f32(&deq, n, k, &x, &mut dense);
+            let packed = PackedInt4::from_codes(&codes, &scales, n, k, g);
+            let mut y = vec![0.0; n];
+            packed.gemv(&x, &mut y);
+            testing::assert_allclose(&y, &dense, 1e-3, 1e-3);
+        });
+    }
+
+    #[test]
+    fn gemv_int4_lut_matches_baseline() {
+        testing::check(6, |rng| {
+            let (n, k, g) = (8, 64, 32);
+            let w = rng.normal_vec(n * k, 1.0);
+            let q = crate::quant::AffineQuantizer::int4_group32();
+            let (codes, scales) = q.quantize_codes(&w, n, k);
+            let packed = PackedInt4::from_codes(&codes, &scales, n, k, g);
+            let x = rng.normal_vec(k, 1.0);
+            let mut base = vec![0.0; n];
+            packed.gemv(&x, &mut base);
+            let mut lut = Vec::new();
+            let mut fast = vec![0.0; n];
+            packed.gemv_lut(&x, &mut fast, &mut lut);
+            testing::assert_allclose(&fast, &base, 1e-4, 1e-4);
+        });
+    }
+
+    #[test]
+    fn seq2_codes_pack_2bit() {
+        // SEQ codes are 0..=3 so the 2-bit codec stores them losslessly
+        let mut rng = Rng::new(0);
+        let w = rng.normal_vec(4 * 32, 1.0);
+        let (codes, _) = Seq2Quantizer::new(32).quantize_codes(&w, 4, 32);
+        assert_eq!(unpack_2bit(&pack_2bit(&codes)), codes);
+    }
+}

@@ -1,0 +1,196 @@
+//! SEQ — Stretched Elastic Quantization (paper §2.1.2).
+//!
+//! Symmetric 2-bit mapping {-1.5, -0.5, +0.5, +1.5} * scale: no zero level,
+//! shifted centroid, full dynamic-range coverage. Mirrors the python-side
+//! reference (kernels/ref.py quantize_seq2) bit-for-bit so codes can move
+//! between the two worlds. Includes the "adaptive micro-tuning of the
+//! scaling factor" step: a small 1-D search refining the absmax scale to
+//! minimize group MSE.
+
+use super::WeightQuantizer;
+
+#[derive(Clone, Debug)]
+pub struct Seq2Quantizer {
+    pub group: usize,
+    /// enable scale micro-tuning (paper: adaptive micro-tuning of the
+    /// scaling factor for quantization intervals)
+    pub tune_scale: bool,
+}
+
+impl Seq2Quantizer {
+    pub fn new(group: usize) -> Self {
+        Seq2Quantizer { group, tune_scale: false }
+    }
+
+    pub fn tuned(group: usize) -> Self {
+        Seq2Quantizer { group, tune_scale: true }
+    }
+
+    /// level for a code 0..=3
+    #[inline]
+    pub fn level(code: u8) -> f32 {
+        (2.0 * code as f32 - 3.0) * 0.5
+    }
+
+    /// code for a value already divided by scale: nearest level is
+    /// round(v + 1.5) since level(c) = c - 1.5
+    #[inline]
+    pub fn encode_unit(v: f32) -> u8 {
+        ((v + 1.5).round().clamp(0.0, 3.0)) as u8
+    }
+
+    fn group_scale(&self, xs: &[f32]) -> f32 {
+        let absmax = xs.iter().fold(0.0f32, |m, x| m.max(x.abs()));
+        let base = if absmax == 0.0 { 1.0 } else { absmax / 1.5 };
+        if !self.tune_scale {
+            return base;
+        }
+        // micro-tune: grid around the absmax scale, pick min-MSE
+        let mut best = base;
+        let mut best_mse = f32::INFINITY;
+        for mult in [0.7, 0.8, 0.9, 1.0, 1.1] {
+            let s = base * mult;
+            let mse: f32 = xs
+                .iter()
+                .map(|&x| {
+                    let q = Self::level(Self::encode_unit(x / s)) * s;
+                    (q - x) * (q - x)
+                })
+                .sum();
+            if mse < best_mse {
+                best_mse = mse;
+                best = s;
+            }
+        }
+        best
+    }
+
+    /// Quantize to (codes, per-group scales).
+    pub fn quantize_codes(&self, w: &[f32], n: usize, k: usize) -> (Vec<u8>, Vec<f32>) {
+        assert_eq!(w.len(), n * k);
+        assert!(k % self.group == 0);
+        let mut codes = vec![0u8; n * k];
+        let mut scales = Vec::with_capacity(n * k / self.group);
+        for row in 0..n {
+            for gs in (0..k).step_by(self.group) {
+                let sl = &w[row * k + gs..row * k + gs + self.group];
+                let s = self.group_scale(sl);
+                scales.push(s);
+                for (i, &x) in sl.iter().enumerate() {
+                    codes[row * k + gs + i] = Self::encode_unit(x / s);
+                }
+            }
+        }
+        (codes, scales)
+    }
+
+    pub fn dequantize_codes(
+        &self,
+        codes: &[u8],
+        scales: &[f32],
+        n: usize,
+        k: usize,
+    ) -> Vec<f32> {
+        let mut w = vec![0.0f32; n * k];
+        for row in 0..n {
+            for gs in (0..k).step_by(self.group) {
+                let s = scales[(row * k + gs) / self.group];
+                for i in 0..self.group {
+                    w[row * k + gs + i] = Self::level(codes[row * k + gs + i]) * s;
+                }
+            }
+        }
+        w
+    }
+}
+
+impl WeightQuantizer for Seq2Quantizer {
+    fn name(&self) -> &'static str {
+        "seq2"
+    }
+
+    fn bits(&self) -> f64 {
+        2.0 + 32.0 / self.group as f64
+    }
+
+    fn qdq(&self, w: &mut [f32], n: usize, k: usize) {
+        let (codes, scales) = self.quantize_codes(w, n, k);
+        let deq = self.dequantize_codes(&codes, &scales, n, k);
+        w.copy_from_slice(&deq);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::{testing, Rng};
+
+    #[test]
+    fn levels_symmetric_no_zero() {
+        let ls: Vec<f32> = (0..4).map(Seq2Quantizer::level).collect();
+        assert_eq!(ls, vec![-1.5, -0.5, 0.5, 1.5]);
+        assert!(ls.iter().all(|&l| l != 0.0));
+    }
+
+    #[test]
+    fn absmax_maps_to_extreme_level() {
+        let q = Seq2Quantizer::new(4);
+        let w = [0.1f32, -0.2, 0.3, -0.6];
+        let (codes, scales) = q.quantize_codes(&w, 1, 4);
+        // absmax 0.6 -> scale 0.4 -> -0.6/0.4 = -1.5 -> code 0
+        assert!((scales[0] - 0.4).abs() < 1e-6);
+        assert_eq!(codes[3], 0);
+    }
+
+    #[test]
+    fn qdq_error_bounded() {
+        testing::check(8, |rng| {
+            let (n, k) = (8, 64);
+            let orig = rng.normal_vec(n * k, 1.0);
+            let mut w = orig.clone();
+            let q = Seq2Quantizer::new(32);
+            q.qdq(&mut w, n, k);
+            // error <= half a level spacing = 0.5 * scale
+            for row in 0..n {
+                for gs in (0..k).step_by(32) {
+                    let sl = &orig[row * k + gs..row * k + gs + 32];
+                    let absmax = sl.iter().fold(0.0f32, |m, x| m.max(x.abs()));
+                    let scale = absmax / 1.5;
+                    for i in 0..32 {
+                        let e = (w[row * k + gs + i] - sl[i]).abs();
+                        assert!(e <= 0.5 * scale + 1e-6);
+                    }
+                }
+            }
+        });
+    }
+
+    #[test]
+    fn tuned_scale_never_worse() {
+        testing::check(16, |rng| {
+            let (n, k) = (4, 32);
+            let orig = rng.normal_vec(n * k, 0.7);
+            let mut plain = orig.clone();
+            let mut tuned = orig.clone();
+            Seq2Quantizer::new(32).qdq(&mut plain, n, k);
+            Seq2Quantizer::tuned(32).qdq(&mut tuned, n, k);
+            let m_plain = crate::util::stats::mse(&plain, &orig);
+            let m_tuned = crate::util::stats::mse(&tuned, &orig);
+            assert!(m_tuned <= m_plain + 1e-9, "{m_tuned} vs {m_plain}");
+        });
+    }
+
+    #[test]
+    fn matches_python_reference_semantics() {
+        // same example as kernels/ref.py convention: code = round(w/s + 1)
+        let mut rng = Rng::new(3);
+        let w = rng.normal_vec(64, 1.0);
+        let q = Seq2Quantizer::new(32);
+        let (codes, scales) = q.quantize_codes(&w, 1, 64);
+        for (i, &c) in codes.iter().enumerate() {
+            let s = scales[i / 32];
+            let expect = ((w[i] / s + 1.5).round()).clamp(0.0, 3.0) as u8;
+            assert_eq!(c, expect);
+        }
+    }
+}

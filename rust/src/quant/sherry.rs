@@ -1,0 +1,222 @@
+//! Sherry — hardware-efficient 1.25-bit ternary quantization via 3:4
+//! fine-grained structured sparsity (paper §2.2.2).
+//!
+//! Constraint: exactly three non-zero (±1) weights in every contiguous
+//! block of four. Each block then has C(4,3) * 2^3 = 32 configurations —
+//! exactly a 5-bit index, giving 1.25 bits/weight with SIMD-friendly 4-way
+//! alignment (vs 2-bit padding waste or 1.67-bit 3-way irregularity).
+//!
+//! **Arenas** (Annealing Residual Synapse): during QAT the forward is
+//! Y = X·Q(W) + λ_t·X·W with λ_t annealed to zero, injecting heterogeneous
+//! gradients that prevent representational collapse. The annealing schedule
+//! lives here; the training loop is in qat/trainer.rs.
+
+#[derive(Clone, Debug, Default)]
+pub struct Sherry;
+
+/// One quantized block: which lane is zero + the three signs.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct SherryBlock {
+    /// 0..=3: index of the zeroed lane
+    pub zero_lane: u8,
+    /// sign bits of the three surviving lanes in lane order (1 = +1)
+    pub signs: u8,
+}
+
+impl SherryBlock {
+    /// 5-bit code: zero_lane * 8 + signs (0..=31)
+    pub fn code(&self) -> u8 {
+        self.zero_lane * 8 + (self.signs & 0x7)
+    }
+
+    pub fn from_code(code: u8) -> Self {
+        SherryBlock { zero_lane: (code >> 3) & 0x3, signs: code & 0x7 }
+    }
+
+    /// Expand to the 4 ternary values in {-1, 0, +1}.
+    pub fn expand(&self) -> [f32; 4] {
+        let mut out = [0.0f32; 4];
+        let mut s = 0;
+        for lane in 0..4 {
+            if lane == self.zero_lane as usize {
+                continue;
+            }
+            out[lane] = if (self.signs >> s) & 1 == 1 { 1.0 } else { -1.0 };
+            s += 1;
+        }
+        out
+    }
+}
+
+impl Sherry {
+    /// Quantize one block of 4: zero the min-|w| lane, sign the rest.
+    pub fn quantize_block(w: &[f32; 4]) -> SherryBlock {
+        let mut zero_lane = 0usize;
+        for lane in 1..4 {
+            if w[lane].abs() < w[zero_lane].abs() {
+                zero_lane = lane;
+            }
+        }
+        let mut signs = 0u8;
+        let mut s = 0;
+        for lane in 0..4 {
+            if lane == zero_lane {
+                continue;
+            }
+            if w[lane] >= 0.0 {
+                signs |= 1 << s;
+            }
+            s += 1;
+        }
+        SherryBlock { zero_lane: zero_lane as u8, signs }
+    }
+
+    /// Quantize a row-major [n, k] matrix (k % 4 == 0). Returns per-row
+    /// alpha (mean |w| over non-zeroed lanes) + the 5-bit block codes.
+    pub fn quantize_codes(w: &[f32], n: usize, k: usize) -> (Vec<u8>, Vec<f32>) {
+        assert!(k % 4 == 0, "k must be divisible by 4");
+        assert_eq!(w.len(), n * k);
+        let mut codes = Vec::with_capacity(n * k / 4);
+        let mut alphas = Vec::with_capacity(n);
+        for row in 0..n {
+            let mut kept_sum = 0.0f32;
+            let mut kept_n = 0usize;
+            for b in (0..k).step_by(4) {
+                let blk = [
+                    w[row * k + b],
+                    w[row * k + b + 1],
+                    w[row * k + b + 2],
+                    w[row * k + b + 3],
+                ];
+                let q = Self::quantize_block(&blk);
+                for lane in 0..4 {
+                    if lane != q.zero_lane as usize {
+                        kept_sum += blk[lane].abs();
+                        kept_n += 1;
+                    }
+                }
+                codes.push(q.code());
+            }
+            let alpha = if kept_n == 0 { 1.0 } else { kept_sum / kept_n as f32 };
+            alphas.push(alpha);
+        }
+        (codes, alphas)
+    }
+
+    pub fn dequantize_codes(codes: &[u8], alphas: &[f32], n: usize, k: usize) -> Vec<f32> {
+        let blocks_per_row = k / 4;
+        let mut w = vec![0.0f32; n * k];
+        for row in 0..n {
+            let a = alphas[row];
+            for b in 0..blocks_per_row {
+                let vals = SherryBlock::from_code(codes[row * blocks_per_row + b]).expand();
+                for lane in 0..4 {
+                    w[row * k + b * 4 + lane] = vals[lane] * a;
+                }
+            }
+        }
+        w
+    }
+
+    /// QDQ convenience used by the QAT trainer's fake-quant forward.
+    pub fn qdq(w: &mut [f32], n: usize, k: usize) {
+        let (codes, alphas) = Self::quantize_codes(w, n, k);
+        let deq = Self::dequantize_codes(&codes, &alphas, n, k);
+        w.copy_from_slice(&deq);
+    }
+}
+
+/// Arenas annealing schedule: λ_t from λ_0 down to 0 by end of training
+/// (cosine decay — smooth, reaches exactly zero).
+#[derive(Clone, Debug)]
+pub struct ArenasSchedule {
+    pub lambda0: f32,
+    pub total_steps: usize,
+}
+
+impl ArenasSchedule {
+    pub fn new(lambda0: f32, total_steps: usize) -> Self {
+        ArenasSchedule { lambda0, total_steps }
+    }
+
+    pub fn lambda(&self, step: usize) -> f32 {
+        if step >= self.total_steps {
+            return 0.0;
+        }
+        let t = step as f32 / self.total_steps as f32;
+        self.lambda0 * 0.5 * (1.0 + (std::f32::consts::PI * t).cos())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::{testing, Rng};
+
+    #[test]
+    fn block_code_roundtrip_all_32() {
+        for code in 0..32u8 {
+            let b = SherryBlock::from_code(code);
+            assert_eq!(b.code(), code);
+            let vals = b.expand();
+            let zeros = vals.iter().filter(|&&v| v == 0.0).count();
+            assert_eq!(zeros, 1, "exactly one zero per block");
+            assert!(vals.iter().all(|&v| v == 0.0 || v.abs() == 1.0));
+        }
+    }
+
+    #[test]
+    fn quantize_zeroes_smallest_lane() {
+        let q = Sherry::quantize_block(&[0.9, -0.05, -1.2, 0.4]);
+        assert_eq!(q.zero_lane, 1);
+        let vals = q.expand();
+        assert_eq!(vals[0], 1.0);
+        assert_eq!(vals[1], 0.0);
+        assert_eq!(vals[2], -1.0);
+        assert_eq!(vals[3], 1.0);
+    }
+
+    #[test]
+    fn three_quarters_density_exact() {
+        testing::check(8, |rng| {
+            let (n, k) = (8, 64);
+            let w = rng.normal_vec(n * k, 1.0);
+            let (codes, alphas) = Sherry::quantize_codes(&w, n, k);
+            let deq = Sherry::dequantize_codes(&codes, &alphas, n, k);
+            let nz = deq.iter().filter(|&&v| v != 0.0).count();
+            assert_eq!(nz, n * k * 3 / 4, "3:4 structured sparsity");
+        });
+    }
+
+    #[test]
+    fn qdq_error_bounded_vs_dense_ternary() {
+        // Sherry drops the min-|w| lane per block: its extra error relative
+        // to plain sign*alpha is bounded by the dropped mass.
+        let mut rng = Rng::new(0);
+        let orig = rng.normal_vec(16 * 64, 1.0);
+        let mut w = orig.clone();
+        Sherry::qdq(&mut w, 16, 64);
+        let mse = crate::util::stats::mse(&w, &orig);
+        assert!(mse < 1.0, "sherry mse {mse}");
+        // correlation with the original stays positive and strong-ish
+        let corr = crate::util::stats::pearson(&w, &orig);
+        assert!(corr > 0.6, "corr {corr}");
+    }
+
+    #[test]
+    fn arenas_anneals_to_zero() {
+        let s = ArenasSchedule::new(0.3, 100);
+        assert!((s.lambda(0) - 0.3).abs() < 1e-6);
+        assert!(s.lambda(50) < 0.3);
+        assert!(s.lambda(50) > 0.0);
+        assert_eq!(s.lambda(100), 0.0);
+        assert_eq!(s.lambda(500), 0.0);
+        // monotone non-increasing
+        let mut prev = f32::INFINITY;
+        for t in 0..=100 {
+            let l = s.lambda(t);
+            assert!(l <= prev + 1e-6);
+            prev = l;
+        }
+    }
+}

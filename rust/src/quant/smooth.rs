@@ -1,0 +1,106 @@
+//! SmoothQuant-style outlier migration — the "traditional smoothing" that
+//! LeptoQuant's §2.3.2 analysis contrasts against: it shifts activation
+//! outliers into weights via s_c = max|X_c|^α / max|W_c|^(1-α), trading
+//! activation range for weight range.
+
+use crate::tensor::Tensor;
+
+#[derive(Clone, Debug)]
+pub struct SmoothQuant {
+    pub alpha: f32,
+}
+
+impl Default for SmoothQuant {
+    fn default() -> Self {
+        SmoothQuant { alpha: 0.5 }
+    }
+}
+
+impl SmoothQuant {
+    /// Compute per-channel migration scales from activation/weight ranges.
+    pub fn scales(&self, x: &Tensor, w: &Tensor) -> Vec<f32> {
+        let k = x.cols();
+        assert_eq!(w.cols(), k);
+        let mut xmax = vec![1e-6f32; k];
+        for r in 0..x.rows() {
+            for c in 0..k {
+                xmax[c] = xmax[c].max(x.row(r)[c].abs());
+            }
+        }
+        let mut wmax = vec![1e-6f32; k];
+        for r in 0..w.rows() {
+            for c in 0..k {
+                wmax[c] = wmax[c].max(w.row(r)[c].abs());
+            }
+        }
+        (0..k)
+            .map(|c| {
+                (xmax[c].powf(self.alpha) / wmax[c].powf(1.0 - self.alpha)).max(1e-5)
+            })
+            .collect()
+    }
+
+    /// Apply migration: x'_c = x_c / s_c, w'_c = w_c * s_c.
+    /// The product X'W'ᵀ is mathematically unchanged.
+    pub fn apply(&self, x: &mut Tensor, w: &mut Tensor) -> Vec<f32> {
+        let s = self.scales(x, w);
+        for r in 0..x.rows() {
+            let row = x.row_mut(r);
+            for (c, sc) in s.iter().enumerate() {
+                row[c] /= sc;
+            }
+        }
+        for r in 0..w.rows() {
+            let row = w.row_mut(r);
+            for (c, sc) in s.iter().enumerate() {
+                row[c] *= sc;
+            }
+        }
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::ops::matmul_transb;
+    use crate::util::{testing::assert_allclose, Rng};
+
+    #[test]
+    fn migration_preserves_product() {
+        let mut rng = Rng::new(0);
+        let mut x = Tensor::randn(&[8, 32], 1.0, &mut rng);
+        let mut w = Tensor::randn(&[16, 32], 0.5, &mut rng);
+        let y_before = matmul_transb(&x, &w);
+        SmoothQuant::default().apply(&mut x, &mut w);
+        let y_after = matmul_transb(&x, &w);
+        assert_allclose(&y_after.data, &y_before.data, 1e-4, 1e-4);
+    }
+
+    #[test]
+    fn migration_shrinks_activation_outliers() {
+        let mut rng = Rng::new(1);
+        let mut x = Tensor::randn(&[16, 32], 1.0, &mut rng);
+        for r in 0..16 {
+            x.row_mut(r)[5] *= 50.0; // channel-5 outliers
+        }
+        let mut w = Tensor::randn(&[8, 32], 0.5, &mut rng);
+        let before: f32 = (0..16).map(|r| x.row(r)[5].abs()).fold(0.0, f32::max);
+        SmoothQuant::default().apply(&mut x, &mut w);
+        let after: f32 = (0..16).map(|r| x.row(r)[5].abs()).fold(0.0, f32::max);
+        assert!(after < before / 3.0, "{after} vs {before}");
+    }
+
+    #[test]
+    fn alpha_zero_leaves_acts_mostly_untouched() {
+        // alpha=0: s_c = 1 / wmax_c — activation ranges scale by wmax only
+        let mut rng = Rng::new(2);
+        let mut x = Tensor::randn(&[4, 16], 1.0, &mut rng);
+        let mut w = Tensor::randn(&[4, 16], 1.0, &mut rng);
+        let s = SmoothQuant { alpha: 0.0 }.apply(&mut x, &mut w);
+        for (c, sc) in s.iter().enumerate() {
+            let wmax: f32 = (0..4).map(|r| (w.row(r)[c] / sc).abs()).fold(0.0, f32::max);
+            assert!((sc - 1.0 / wmax.max(1e-6)).abs() / sc < 0.5);
+        }
+    }
+}

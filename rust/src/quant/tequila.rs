@@ -1,0 +1,137 @@
+//! Tequila — trapping-free ternary quantization (paper §2.2.1).
+//!
+//! Standard ternary QAT leaves deadzone weights (|w| < Δ) with
+//! uninformative STE gradients ("deadzone trapping"). Tequila repurposes
+//! them as an adaptive dynamic bias during training:
+//!
+//! ```text
+//! Y = X·Q(W) + C(W),   C(W) = Σ_{i∈D} λ·w_i            (eq. 2)
+//! ```
+//!
+//! which gives every dead weight a direct gradient path (eq. 3). After
+//! training the bias is *merged into static parameters* — zero inference
+//! overhead. This module provides the quantize-with-bias transform and the
+//! offline merge; the training loop lives in qat/trainer.rs.
+
+use super::ternary::TernaryQuantizer;
+
+#[derive(Clone, Debug)]
+pub struct Tequila {
+    pub base: TernaryQuantizer,
+    /// λ — the dead-weight bias coupling (paper's residual coefficient)
+    pub lambda: f32,
+}
+
+impl Default for Tequila {
+    fn default() -> Self {
+        Tequila { base: TernaryQuantizer::default(), lambda: 0.05 }
+    }
+}
+
+/// Result of quantizing one weight matrix with Tequila.
+#[derive(Clone, Debug)]
+pub struct TequilaQuant {
+    pub codes: Vec<u8>,
+    pub alphas: Vec<f32>,
+    /// per-output-row dynamic bias C(W) = λ Σ_{i∈D} w_i
+    pub bias: Vec<f32>,
+    pub n: usize,
+    pub k: usize,
+}
+
+impl Tequila {
+    /// Quantize and extract the deadzone bias per output row.
+    pub fn quantize(&self, w: &[f32], n: usize, k: usize) -> TequilaQuant {
+        let (codes, alphas) = self.base.quantize_codes(w, n, k);
+        let mut bias = vec![0.0f32; n];
+        for row in 0..n {
+            let mut c = 0.0;
+            for i in 0..k {
+                if codes[row * k + i] == 1 {
+                    c += w[row * k + i];
+                }
+            }
+            bias[row] = self.lambda * c;
+        }
+        TequilaQuant { codes, alphas, bias, n, k }
+    }
+
+    /// Training-time forward: y = x @ Wq.T + C(W) (bias broadcast per row).
+    pub fn forward(&self, q: &TequilaQuant, x: &[f32]) -> Vec<f32> {
+        assert_eq!(x.len(), q.k);
+        let mut y = vec![0.0f32; q.n];
+        for row in 0..q.n {
+            let a = q.alphas[row];
+            let mut acc = 0.0f32;
+            for i in 0..q.k {
+                let wv = (q.codes[row * q.k + i] as f32 - 1.0) * a;
+                acc += x[i] * wv;
+            }
+            y[row] = acc + q.bias[row];
+        }
+        y
+    }
+
+    /// Per-weight STE gradient multiplier: dead weights receive the extra
+    /// λ·dL/dY path (paper eq. 3); live weights get the plain STE path.
+    pub fn grad_scale(&self, code: u8) -> f32 {
+        if code == 1 {
+            1.0 + self.lambda
+        } else {
+            1.0
+        }
+    }
+
+    /// Offline merge: fold C(W) into a static bias vector (inference sees a
+    /// plain ternary layer + bias — "nearly zero inference overhead").
+    pub fn merge_bias(q: &TequilaQuant) -> Vec<f32> {
+        q.bias.clone()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::testing;
+
+    #[test]
+    fn bias_collects_deadzone_mass() {
+        let t = Tequila { lambda: 0.1, ..Default::default() };
+        // row: two big weights, two dead weights summing to 0.03
+        let w = [2.0f32, -2.0, 0.02, 0.01];
+        let q = t.quantize(&w, 1, 4);
+        assert!((q.bias[0] - 0.1 * 0.03).abs() < 1e-7);
+    }
+
+    #[test]
+    fn forward_adds_bias() {
+        let t = Tequila { lambda: 1.0, ..Default::default() };
+        let w = [2.0f32, -2.0, 0.02, 0.01];
+        let q = t.quantize(&w, 1, 4);
+        let x = [0.0f32; 4]; // zero input isolates the bias
+        let y = t.forward(&q, &x);
+        assert!((y[0] - q.bias[0]).abs() < 1e-7);
+    }
+
+    #[test]
+    fn grad_scale_boosts_dead_weights() {
+        let t = Tequila { lambda: 0.05, ..Default::default() };
+        assert!(t.grad_scale(1) > t.grad_scale(0));
+        assert_eq!(t.grad_scale(2), 1.0);
+    }
+
+    #[test]
+    fn dead_fraction_drives_bias_magnitude() {
+        testing::check(8, |rng| {
+            let (n, k) = (4, 64);
+            let w = rng.normal_vec(n * k, 1.0);
+            let t = Tequila::default();
+            let q = t.quantize(&w, n, k);
+            assert_eq!(q.bias.len(), n);
+            // bias is bounded by λ * Σ|dead| <= λ * k * Δ-ish
+            for &b in &q.bias {
+                assert!(b.abs() < t.lambda * k as f32);
+            }
+        });
+    }
+}

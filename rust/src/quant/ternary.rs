@@ -1,0 +1,145 @@
+//! TWN-style ternary quantization — the baseline for Tequila/Sherry (§2.2).
+//!
+//! codes {0,1,2} -> {-1,0,+1} * alpha with per-out-channel threshold
+//! Delta = 0.75 * mean|w| and alpha = mean|w| over the kept set; mirrors
+//! kernels/ref.py quantize_ternary.
+
+use super::WeightQuantizer;
+
+#[derive(Clone, Debug)]
+pub struct TernaryQuantizer {
+    /// threshold multiplier on mean |w| (TWN uses 0.75)
+    pub delta_mult: f32,
+}
+
+impl Default for TernaryQuantizer {
+    fn default() -> Self {
+        TernaryQuantizer { delta_mult: 0.75 }
+    }
+}
+
+impl TernaryQuantizer {
+    /// Quantize one row; returns (codes, alpha).
+    pub fn quantize_row(&self, row: &[f32]) -> (Vec<u8>, f32) {
+        let mean_abs = row.iter().map(|x| x.abs()).sum::<f32>() / row.len() as f32;
+        let delta = self.delta_mult * mean_abs;
+        let mut kept_sum = 0.0f32;
+        let mut kept_n = 0usize;
+        let codes: Vec<u8> = row
+            .iter()
+            .map(|&x| {
+                if x.abs() >= delta && delta > 0.0 {
+                    kept_sum += x.abs();
+                    kept_n += 1;
+                    if x > 0.0 {
+                        2
+                    } else {
+                        0
+                    }
+                } else {
+                    1
+                }
+            })
+            .collect();
+        let alpha = if kept_n == 0 { 1.0 } else { kept_sum / kept_n as f32 };
+        (codes, alpha)
+    }
+
+    pub fn quantize_codes(&self, w: &[f32], n: usize, k: usize) -> (Vec<u8>, Vec<f32>) {
+        assert_eq!(w.len(), n * k);
+        let mut codes = vec![0u8; n * k];
+        let mut alphas = Vec::with_capacity(n);
+        for row in 0..n {
+            let (c, a) = self.quantize_row(&w[row * k..(row + 1) * k]);
+            codes[row * k..(row + 1) * k].copy_from_slice(&c);
+            alphas.push(a);
+        }
+        (codes, alphas)
+    }
+
+    pub fn dequantize_codes(codes: &[u8], alphas: &[f32], n: usize, k: usize) -> Vec<f32> {
+        let mut w = vec![0.0f32; n * k];
+        for row in 0..n {
+            let a = alphas[row];
+            for i in 0..k {
+                w[row * k + i] = (codes[row * k + i] as f32 - 1.0) * a;
+            }
+        }
+        w
+    }
+
+    /// Fraction of weights in the deadzone (code == 1) — the population
+    /// Tequila reactivates.
+    pub fn deadzone_fraction(codes: &[u8]) -> f32 {
+        codes.iter().filter(|&&c| c == 1).count() as f32 / codes.len().max(1) as f32
+    }
+}
+
+impl WeightQuantizer for TernaryQuantizer {
+    fn name(&self) -> &'static str {
+        "ternary"
+    }
+
+    fn bits(&self) -> f64 {
+        // log2(3) entropy; stored as 1.67 or 1.25-bit via packing.rs codecs
+        1.58
+    }
+
+    fn qdq(&self, w: &mut [f32], n: usize, k: usize) {
+        let (codes, alphas) = self.quantize_codes(w, n, k);
+        let deq = Self::dequantize_codes(&codes, &alphas, n, k);
+        w.copy_from_slice(&deq);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::{testing, Rng};
+
+    #[test]
+    fn signs_preserved_outside_deadzone() {
+        let q = TernaryQuantizer::default();
+        let row = [2.0f32, -2.0, 0.01, -0.01];
+        let (codes, alpha) = q.quantize_row(&row);
+        assert_eq!(codes[0], 2);
+        assert_eq!(codes[1], 0);
+        assert_eq!(codes[2], 1);
+        assert_eq!(codes[3], 1);
+        assert!((alpha - 2.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn deadzone_fraction_reasonable_for_gaussian() {
+        let mut rng = Rng::new(0);
+        let w = rng.normal_vec(4096, 1.0);
+        let q = TernaryQuantizer::default();
+        let (codes, _) = q.quantize_codes(&w, 1, 4096);
+        let f = TernaryQuantizer::deadzone_fraction(&codes);
+        // P(|x| < 0.75 * E|x|) for a gaussian ~ 0.45
+        assert!((0.3..0.6).contains(&f), "deadzone {f}");
+    }
+
+    #[test]
+    fn qdq_idempotent() {
+        testing::check(8, |rng| {
+            let (n, k) = (8, 64);
+            let mut w = rng.normal_vec(n * k, 1.0);
+            let q = TernaryQuantizer::default();
+            q.qdq(&mut w, n, k);
+            let once = w.clone();
+            q.qdq(&mut w, n, k);
+            // quantizing a ternary tensor again is near-stable (alpha is a
+            // fixed point of the mean over kept weights)
+            testing::assert_allclose(&w, &once, 1e-4, 1e-5);
+        });
+    }
+
+    #[test]
+    fn all_zero_row_safe() {
+        let q = TernaryQuantizer::default();
+        let (codes, alpha) = q.quantize_row(&[0.0; 16]);
+        assert!(codes.iter().all(|&c| c == 1));
+        assert_eq!(alpha, 1.0);
+    }
+}

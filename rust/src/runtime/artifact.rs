@@ -1,0 +1,83 @@
+//! Artifact registry: names -> compiled executables, compiled lazily and
+//! cached. The "one compiled executable per model variant" policy of the
+//! runtime (DESIGN.md §2).
+
+use anyhow::{Context, Result};
+use std::collections::BTreeMap;
+
+use super::executor::{ModelExecutable, PjrtRuntime};
+
+/// Known model artifact variants (paper's quantization modes + sizes).
+pub const MODEL_VARIANTS: &[&str] = &[
+    "model_target_fp32_b1",
+    "model_target_int4_b1",
+    "model_target_seq2_b1",
+    "model_target_seq2qat_b1",
+    "model_target_ternary_b1",
+    "model_target_fp8_b1",
+    "model_target_fp32_b8",
+    "model_draft_fp32_b1",
+    "model_draft_fp32_b8",
+    "model_small_fp32_b1",
+];
+
+pub struct ArtifactRegistry {
+    pub rt: PjrtRuntime,
+    pub dir: String,
+    pub seq_t: usize,
+    pub vocab: usize,
+    cache: BTreeMap<String, std::rc::Rc<ModelExecutable>>,
+}
+
+impl ArtifactRegistry {
+    pub fn open(dir: &str) -> Result<Self> {
+        let rt = PjrtRuntime::cpu()?;
+        Ok(ArtifactRegistry {
+            rt,
+            dir: dir.to_string(),
+            seq_t: 64,
+            vocab: 256,
+            cache: BTreeMap::new(),
+        })
+    }
+
+    fn batch_of(name: &str) -> usize {
+        if name.ends_with("_b8") {
+            8
+        } else {
+            1
+        }
+    }
+
+    /// Get (compiling + caching on first use) a model executable by name.
+    pub fn model(&mut self, name: &str) -> Result<std::rc::Rc<ModelExecutable>> {
+        if let Some(exe) = self.cache.get(name) {
+            return Ok(exe.clone());
+        }
+        let path = format!("{}/{}.hlo.txt", self.dir, name);
+        anyhow::ensure!(
+            std::path::Path::new(&path).exists(),
+            "artifact {path} missing — run `make artifacts`"
+        );
+        let exe = ModelExecutable::new(
+            &self.rt,
+            &path,
+            name,
+            Self::batch_of(name),
+            self.seq_t,
+            self.vocab,
+        )
+        .with_context(|| format!("loading {name}"))?;
+        let rc = std::rc::Rc::new(exe);
+        self.cache.insert(name.to_string(), rc.clone());
+        Ok(rc)
+    }
+
+    pub fn available(&self) -> Vec<&'static str> {
+        MODEL_VARIANTS
+            .iter()
+            .copied()
+            .filter(|n| std::path::Path::new(&format!("{}/{}.hlo.txt", self.dir, n)).exists())
+            .collect()
+    }
+}

@@ -1,0 +1,150 @@
+//! PJRT client wrapper + compiled-executable handles.
+
+use anyhow::{Context, Result};
+use xla::{HloModuleProto, Literal, PjRtClient, PjRtLoadedExecutable, XlaComputation};
+
+/// Shared CPU PJRT client.
+pub struct PjrtRuntime {
+    pub client: PjRtClient,
+}
+
+impl PjrtRuntime {
+    pub fn cpu() -> Result<Self> {
+        Ok(PjrtRuntime { client: PjRtClient::cpu().context("creating PJRT CPU client")? })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load an HLO-text artifact and compile it.
+    pub fn load_hlo_text(&self, path: &str) -> Result<PjRtLoadedExecutable> {
+        let proto = HloModuleProto::from_text_file(path)
+            .with_context(|| format!("parsing HLO text {path}"))?;
+        let comp = XlaComputation::from_proto(&proto);
+        self.client
+            .compile(&comp)
+            .with_context(|| format!("compiling {path}"))
+    }
+}
+
+/// A compiled LM forward: tokens i32[B, T] -> logits f32[B, T, V].
+pub struct ModelExecutable {
+    exe: PjRtLoadedExecutable,
+    pub batch: usize,
+    pub seq_t: usize,
+    pub vocab: usize,
+    pub name: String,
+}
+
+impl ModelExecutable {
+    pub fn new(
+        rt: &PjrtRuntime,
+        path: &str,
+        name: &str,
+        batch: usize,
+        seq_t: usize,
+        vocab: usize,
+    ) -> Result<Self> {
+        Ok(ModelExecutable {
+            exe: rt.load_hlo_text(path)?,
+            batch,
+            seq_t,
+            vocab,
+            name: name.to_string(),
+        })
+    }
+
+    /// Run a full batch. `tokens` is row-major [batch, seq_t] (caller pads).
+    /// Returns logits row-major [batch, seq_t, vocab].
+    pub fn run(&self, tokens: &[i32]) -> Result<Vec<f32>> {
+        anyhow::ensure!(
+            tokens.len() == self.batch * self.seq_t,
+            "expected {}x{} tokens, got {}",
+            self.batch,
+            self.seq_t,
+            tokens.len()
+        );
+        let lit = Literal::vec1(tokens)
+            .reshape(&[self.batch as i64, self.seq_t as i64])
+            .context("reshaping tokens")?;
+        let result = self.exe.execute::<Literal>(&[lit])?[0][0]
+            .to_literal_sync()
+            .context("fetching result")?;
+        // aot.py lowers with return_tuple=True -> 1-tuple
+        let out = result.to_tuple1().context("untupling")?;
+        let v = out.to_vec::<f32>().context("reading logits")?;
+        anyhow::ensure!(v.len() == self.batch * self.seq_t * self.vocab);
+        Ok(v)
+    }
+
+    /// Run a single (possibly short) sequence: pads to seq_t, returns the
+    /// per-position logits for the first `len` positions.
+    pub fn run_padded(&self, tokens: &[u8]) -> Result<Vec<Vec<f32>>> {
+        anyhow::ensure!(self.batch == 1, "run_padded needs a b1 executable");
+        anyhow::ensure!(tokens.len() <= self.seq_t, "sequence too long");
+        let mut padded = vec![0i32; self.seq_t];
+        for (i, &t) in tokens.iter().enumerate() {
+            padded[i] = t as i32;
+        }
+        let flat = self.run(&padded)?;
+        Ok((0..tokens.len())
+            .map(|p| flat[p * self.vocab..(p + 1) * self.vocab].to_vec())
+            .collect())
+    }
+
+    /// Logits at the last real position of a padded single sequence.
+    pub fn next_logits(&self, tokens: &[u8]) -> Result<Vec<f32>> {
+        let rows = self.run_padded(tokens)?;
+        Ok(rows.into_iter().last().unwrap())
+    }
+}
+
+/// A compiled sparse-attention kernel artifact:
+/// (q, k, v f32[T, H, D], mask f32[NB, NB]) -> f32[T, H, D].
+pub struct AttnExecutable {
+    exe: PjRtLoadedExecutable,
+    pub t: usize,
+    pub h: usize,
+    pub d: usize,
+    pub nb: usize,
+}
+
+impl AttnExecutable {
+    pub fn new(rt: &PjrtRuntime, path: &str, t: usize, h: usize, d: usize, nb: usize) -> Result<Self> {
+        Ok(AttnExecutable { exe: rt.load_hlo_text(path)?, t, h, d, nb })
+    }
+
+    pub fn run(&self, q: &[f32], k: &[f32], v: &[f32], mask: &[f32]) -> Result<Vec<f32>> {
+        let dims = [self.t as i64, self.h as i64, self.d as i64];
+        let ql = Literal::vec1(q).reshape(&dims)?;
+        let kl = Literal::vec1(k).reshape(&dims)?;
+        let vl = Literal::vec1(v).reshape(&dims)?;
+        let ml = Literal::vec1(mask).reshape(&[self.nb as i64, self.nb as i64])?;
+        let result = self.exe.execute::<Literal>(&[ql, kl, vl, ml])?[0][0].to_literal_sync()?;
+        let out = result.to_tuple1()?;
+        Ok(out.to_vec::<f32>()?)
+    }
+}
+
+/// A compiled quantized-matmul kernel artifact: x f32[M, K] -> f32[M, N].
+pub struct KernelExecutable {
+    exe: PjRtLoadedExecutable,
+    pub m: usize,
+    pub k: usize,
+    pub n: usize,
+}
+
+impl KernelExecutable {
+    pub fn new(rt: &PjrtRuntime, path: &str, m: usize, k: usize, n: usize) -> Result<Self> {
+        Ok(KernelExecutable { exe: rt.load_hlo_text(path)?, m, k, n })
+    }
+
+    pub fn run(&self, x: &[f32]) -> Result<Vec<f32>> {
+        anyhow::ensure!(x.len() == self.m * self.k);
+        let xl = Literal::vec1(x).reshape(&[self.m as i64, self.k as i64])?;
+        let result = self.exe.execute::<Literal>(&[xl])?[0][0].to_literal_sync()?;
+        let out = result.to_tuple1()?;
+        Ok(out.to_vec::<f32>()?)
+    }
+}

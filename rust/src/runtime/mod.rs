@@ -1,0 +1,13 @@
+//! PJRT runtime — loads the AOT HLO-text artifacts produced by the python
+//! build and executes them on the CPU PJRT client. Python is never on this
+//! path: the Rust binary is self-contained once artifacts/ exists.
+//!
+//! Interchange is HLO *text*: xla_extension 0.5.1 rejects jax>=0.5's
+//! serialized protos (64-bit instruction ids); the text parser reassigns
+//! ids (see /opt/xla-example/README.md and DESIGN.md §2).
+
+pub mod artifact;
+pub mod executor;
+
+pub use artifact::ArtifactRegistry;
+pub use executor::{ModelExecutable, PjrtRuntime};

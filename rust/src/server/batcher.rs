@@ -1,0 +1,109 @@
+//! Batch assembly: collect queued requests into fixed-size batches under a
+//! wait-deadline — the standard serving trade-off (batch efficiency vs
+//! queueing latency).
+
+use crate::data::TokenRequest;
+use std::collections::VecDeque;
+
+#[derive(Clone, Debug)]
+pub struct BatcherCfg {
+    pub max_batch: usize,
+    /// assemble a partial batch once the oldest request has waited this long
+    pub max_wait_ms: f64,
+}
+
+impl Default for BatcherCfg {
+    fn default() -> Self {
+        BatcherCfg { max_batch: 8, max_wait_ms: 4.0 }
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct Batch {
+    pub requests: Vec<TokenRequest>,
+    /// virtual time at which the batch was closed
+    pub formed_at_ms: f64,
+}
+
+pub struct Batcher {
+    pub cfg: BatcherCfg,
+    queue: VecDeque<TokenRequest>,
+}
+
+impl Batcher {
+    pub fn new(cfg: BatcherCfg) -> Self {
+        Batcher { cfg, queue: VecDeque::new() }
+    }
+
+    pub fn push(&mut self, req: TokenRequest) {
+        self.queue.push_back(req);
+    }
+
+    pub fn pending(&self) -> usize {
+        self.queue.len()
+    }
+
+    /// Try to form a batch at virtual time `now_ms`. A batch forms when
+    /// either max_batch requests are queued or the oldest has exceeded the
+    /// wait deadline.
+    pub fn try_form(&mut self, now_ms: f64) -> Option<Batch> {
+        if self.queue.is_empty() {
+            return None;
+        }
+        let oldest_wait = now_ms - self.queue.front().unwrap().arrival_ms;
+        if self.queue.len() >= self.cfg.max_batch || oldest_wait >= self.cfg.max_wait_ms {
+            let n = self.queue.len().min(self.cfg.max_batch);
+            let requests: Vec<TokenRequest> = self.queue.drain(..n).collect();
+            return Some(Batch { requests, formed_at_ms: now_ms });
+        }
+        None
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn req(id: u64, arrival_ms: f64) -> TokenRequest {
+        TokenRequest { id, prompt: vec![1, 2, 3], max_new_tokens: 8, arrival_ms }
+    }
+
+    #[test]
+    fn forms_full_batch_immediately() {
+        let mut b = Batcher::new(BatcherCfg { max_batch: 2, max_wait_ms: 100.0 });
+        b.push(req(0, 0.0));
+        b.push(req(1, 0.1));
+        let batch = b.try_form(0.2).expect("full batch");
+        assert_eq!(batch.requests.len(), 2);
+        assert_eq!(b.pending(), 0);
+    }
+
+    #[test]
+    fn waits_for_deadline_on_partial() {
+        let mut b = Batcher::new(BatcherCfg { max_batch: 8, max_wait_ms: 5.0 });
+        b.push(req(0, 0.0));
+        assert!(b.try_form(2.0).is_none(), "should wait");
+        let batch = b.try_form(6.0).expect("deadline reached");
+        assert_eq!(batch.requests.len(), 1);
+    }
+
+    #[test]
+    fn drains_in_arrival_order() {
+        let mut b = Batcher::new(BatcherCfg { max_batch: 2, max_wait_ms: 0.0 });
+        for i in 0..5 {
+            b.push(req(i, i as f64));
+        }
+        let b1 = b.try_form(10.0).unwrap();
+        assert_eq!(b1.requests[0].id, 0);
+        assert_eq!(b1.requests[1].id, 1);
+        let b2 = b.try_form(10.0).unwrap();
+        assert_eq!(b2.requests[0].id, 2);
+        assert_eq!(b.pending(), 1);
+    }
+
+    #[test]
+    fn empty_queue_yields_nothing() {
+        let mut b = Batcher::new(BatcherCfg::default());
+        assert!(b.try_form(1e9).is_none());
+    }
+}

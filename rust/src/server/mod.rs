@@ -1,0 +1,9 @@
+//! Serving engine — the deployment layer the paper targets (vLLM/SGLang
+//! analogue): request queue, batch assembly, decode loop over the PJRT
+//! executables, TTFT / latency / throughput metrics.
+
+pub mod batcher;
+pub mod engine;
+
+pub use batcher::{Batch, Batcher, BatcherCfg};
+pub use engine::{ServeReport, ServingEngine};

@@ -1,0 +1,58 @@
+//! Analytical FLOP accounting for sparse prefill attention — the compute
+//! model behind the latency columns of Figure 11 (measured wall-clock of
+//! the masked kernels is reported alongside).
+
+use super::mask::BlockMask;
+
+/// FLOPs for one head of dense causal prefill attention at length t:
+/// scores (2·t·(t+1)/2·dh) + softmax (~5 per score) + weighted sum (same as
+/// scores).
+pub fn attn_flops(t: usize, dh: usize) -> f64 {
+    let pairs = (t * (t + 1) / 2) as f64;
+    pairs * (2.0 * dh as f64) * 2.0 + pairs * 5.0
+}
+
+/// FLOPs under a block mask: only kept blocks pay the score/value cost;
+/// add the pattern-estimation overhead (sampled scores).
+pub fn masked_attn_flops(mask: &BlockMask, dh: usize, estimation_samples: usize) -> f64 {
+    let per_block = (mask.block * mask.block) as f64 * (2.0 * dh as f64) * 2.0
+        + (mask.block * mask.block) as f64 * 5.0;
+    mask.kept() as f64 * per_block + estimation_samples as f64 * 2.0 * dh as f64
+}
+
+/// Speedup of a mask vs dense (pure compute model).
+pub fn speedup(mask: &BlockMask, dh: usize, estimation_samples: usize) -> f64 {
+    attn_flops(mask.t, dh) / masked_attn_flops(mask, dh, estimation_samples)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dense_mask_speedup_near_one() {
+        let m = BlockMask::dense(256, 16);
+        let s = speedup(&m, 32, 0);
+        assert!((0.8..1.3).contains(&s), "{s}");
+    }
+
+    #[test]
+    fn quarter_density_speeds_up() {
+        let mut m = BlockMask::empty(256, 16);
+        m.ensure_diagonal();
+        for qb in 0..m.nb {
+            m.set(qb, 0, true);
+        }
+        let s = speedup(&m, 32, 0);
+        assert!(s > 3.0, "{s}");
+    }
+
+    #[test]
+    fn estimation_overhead_reduces_speedup() {
+        let mut m = BlockMask::empty(256, 16);
+        m.ensure_diagonal();
+        let cheap = speedup(&m, 32, 0);
+        let pricey = speedup(&m, 32, 100_000);
+        assert!(pricey < cheap);
+    }
+}

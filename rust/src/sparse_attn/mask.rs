@@ -1,0 +1,149 @@
+//! Block-mask metadata: the interchange format between pattern algorithms
+//! and sparse kernels (the paper's "metadata-driven configuration system").
+
+#[derive(Clone, Debug, PartialEq)]
+pub struct BlockMask {
+    pub t: usize,
+    pub block: usize,
+    pub nb: usize,
+    /// row-major [nb, nb]; only the causal lower triangle is meaningful
+    pub keep: Vec<bool>,
+}
+
+impl BlockMask {
+    pub fn empty(t: usize, block: usize) -> Self {
+        let nb = t.div_ceil(block);
+        BlockMask { t, block, nb, keep: vec![false; nb * nb] }
+    }
+
+    pub fn dense(t: usize, block: usize) -> Self {
+        let nb = t.div_ceil(block);
+        let mut m = BlockMask { t, block, nb, keep: vec![false; nb * nb] };
+        for qi in 0..nb {
+            for ki in 0..=qi {
+                m.set(qi, ki, true);
+            }
+        }
+        m
+    }
+
+    #[inline]
+    pub fn get(&self, qb: usize, kb: usize) -> bool {
+        self.keep[qb * self.nb + kb]
+    }
+
+    #[inline]
+    pub fn set(&mut self, qb: usize, kb: usize, v: bool) {
+        // never keep acausal blocks
+        if kb <= qb {
+            self.keep[qb * self.nb + kb] = v;
+        }
+    }
+
+    /// Number of kept causal blocks.
+    pub fn kept(&self) -> usize {
+        let mut n = 0;
+        for qi in 0..self.nb {
+            for ki in 0..=qi {
+                if self.get(qi, ki) {
+                    n += 1;
+                }
+            }
+        }
+        n
+    }
+
+    /// Total causal blocks.
+    pub fn causal_total(&self) -> usize {
+        self.nb * (self.nb + 1) / 2
+    }
+
+    /// Fraction of causal blocks kept.
+    pub fn density(&self) -> f64 {
+        self.kept() as f64 / self.causal_total() as f64
+    }
+
+    /// Force the diagonal (every query must see its own block — avoids
+    /// fully-masked rows).
+    pub fn ensure_diagonal(&mut self) {
+        for i in 0..self.nb {
+            self.set(i, i, true);
+        }
+    }
+
+    /// Expand to a token-level [t, t] keep mask (combined with causality by
+    /// the consumer).
+    pub fn to_token_mask(&self) -> Vec<bool> {
+        let mut m = vec![false; self.t * self.t];
+        for qi in 0..self.t {
+            for ki in 0..=qi {
+                m[qi * self.t + ki] = self.get(qi / self.block, ki / self.block);
+            }
+        }
+        m
+    }
+
+    /// As f32 (the Pallas kernel artifact's mask input).
+    pub fn to_f32(&self) -> Vec<f32> {
+        self.keep.iter().map(|&b| if b { 1.0 } else { 0.0 }).collect()
+    }
+
+    /// Union with another mask.
+    pub fn union(&mut self, other: &BlockMask) {
+        assert_eq!(self.keep.len(), other.keep.len());
+        for (a, b) in self.keep.iter_mut().zip(&other.keep) {
+            *a |= b;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dense_mask_full_causal() {
+        let m = BlockMask::dense(64, 16);
+        assert_eq!(m.nb, 4);
+        assert_eq!(m.kept(), 10);
+        assert_eq!(m.density(), 1.0);
+        assert!(m.get(3, 0) && m.get(0, 0));
+    }
+
+    #[test]
+    fn set_refuses_acausal() {
+        let mut m = BlockMask::empty(64, 16);
+        m.set(0, 3, true);
+        assert!(!m.get(0, 3));
+        m.set(3, 0, true);
+        assert!(m.get(3, 0));
+    }
+
+    #[test]
+    fn token_mask_expansion() {
+        let mut m = BlockMask::empty(32, 16);
+        m.ensure_diagonal();
+        let tm = m.to_token_mask();
+        assert!(tm[0]); // (0,0)
+        assert!(tm[17 * 32 + 16]); // (17,16) in diag block (1,1)
+        assert!(!tm[17 * 32 + 2]); // (17,2) in dropped block (1,0)
+    }
+
+    #[test]
+    fn density_partial() {
+        let mut m = BlockMask::empty(64, 16);
+        m.ensure_diagonal();
+        assert_eq!(m.kept(), 4);
+        assert!((m.density() - 0.4).abs() < 1e-9);
+    }
+
+    #[test]
+    fn union_merges() {
+        let mut a = BlockMask::empty(32, 16);
+        a.set(1, 0, true);
+        let mut b = BlockMask::empty(32, 16);
+        b.set(1, 1, true);
+        a.union(&b);
+        assert!(a.get(1, 0) && a.get(1, 1));
+    }
+}

@@ -1,0 +1,80 @@
+//! Training-free sparse attention for long-context prefill — pillar 3 of
+//! the paper (§4.1).
+//!
+//! The framework follows the paper's decoupling: *pattern computation*
+//! (this module — static A-shape/Tri-shape/dilated/strided heuristics and
+//! dynamic MInference / XAttention / FlexPrefill / Stem estimators) emits a
+//! `BlockMask` as metadata; *sparse execution* consumes it — either the
+//! Pallas block-sparse kernel artifact (runtime::AttnExecutable) or the
+//! pure-Rust transformer's `AttnOverride::Mask`.
+
+pub mod flops;
+pub mod mask;
+pub mod patterns;
+pub mod stem;
+
+pub use flops::attn_flops;
+pub use mask::BlockMask;
+pub use patterns::{
+    a_shape, dilated, flexprefill, minference, strided, tri_shape, xattention,
+};
+pub use stem::{stem, StemCfg};
+
+use crate::tensor::Tensor;
+
+/// A dynamic sparse-attention algorithm: estimates a block mask from
+/// (per-head) Q, K, V at prefill time.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum SparseAlgo {
+    Dense,
+    AShape,
+    TriShape,
+    Dilated,
+    Strided,
+    MInference,
+    XAttention,
+    FlexPrefill,
+    Stem,
+}
+
+impl SparseAlgo {
+    pub fn all_dynamic() -> [SparseAlgo; 4] {
+        [
+            SparseAlgo::MInference,
+            SparseAlgo::XAttention,
+            SparseAlgo::FlexPrefill,
+            SparseAlgo::Stem,
+        ]
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            SparseAlgo::Dense => "Dense",
+            SparseAlgo::AShape => "A-shape",
+            SparseAlgo::TriShape => "Tri-shape",
+            SparseAlgo::Dilated => "Dilated",
+            SparseAlgo::Strided => "Strided",
+            SparseAlgo::MInference => "MINF",
+            SparseAlgo::XAttention => "XATTN",
+            SparseAlgo::FlexPrefill => "FLEX",
+            SparseAlgo::Stem => "Stem",
+        }
+    }
+
+    /// Build the block mask for one head's (q, k, v), each [t, dh], at the
+    /// given density budget (fraction of causal blocks kept).
+    pub fn mask(&self, q: &Tensor, k: &Tensor, v: &Tensor, block: usize, budget: f64) -> BlockMask {
+        let t = q.rows();
+        match self {
+            SparseAlgo::Dense => BlockMask::dense(t, block),
+            SparseAlgo::AShape => a_shape(t, block, budget),
+            SparseAlgo::TriShape => tri_shape(t, block, budget),
+            SparseAlgo::Dilated => dilated(t, block, budget),
+            SparseAlgo::Strided => strided(t, block, budget),
+            SparseAlgo::MInference => minference(q, k, block, budget),
+            SparseAlgo::XAttention => xattention(q, k, block, budget),
+            SparseAlgo::FlexPrefill => flexprefill(q, k, block, budget),
+            SparseAlgo::Stem => stem(q, k, v, block, budget, &StemCfg::default()),
+        }
+    }
+}

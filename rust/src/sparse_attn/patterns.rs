@@ -1,0 +1,315 @@
+//! Sparse-attention pattern generators: static heuristics + dynamic
+//! estimators (§4.1.1). All produce `BlockMask` metadata at a target
+//! density budget (fraction of causal blocks kept).
+
+use crate::tensor::{ops::dot, Tensor};
+
+use super::mask::BlockMask;
+
+// --------------------------------------------------------------------------
+// static patterns
+// --------------------------------------------------------------------------
+
+/// A-shape: attention sinks (first blocks) + local window. The window
+/// width is chosen to hit the budget.
+pub fn a_shape(t: usize, block: usize, budget: f64) -> BlockMask {
+    let mut m = BlockMask::empty(t, block);
+    let nb = m.nb;
+    let sink = 1usize;
+    let target = (budget * m.causal_total() as f64).ceil() as usize;
+    // blocks used: nb sinks + window*(nb) approx — solve window
+    let window = ((target.saturating_sub(nb)) as f64 / nb as f64).ceil() as usize;
+    for qi in 0..nb {
+        for s in 0..sink.min(qi + 1) {
+            m.set(qi, s, true);
+        }
+        for w in 0..=window {
+            m.set(qi, qi.saturating_sub(w), true);
+        }
+    }
+    m.ensure_diagonal();
+    m
+}
+
+/// Tri-shape: A-shape + a dense band of final query rows (the "recent
+/// queries see everything" triangle).
+pub fn tri_shape(t: usize, block: usize, budget: f64) -> BlockMask {
+    let mut m = a_shape(t, block, budget * 0.7);
+    let nb = m.nb;
+    // last rows dense until budget is spent
+    let target = (budget * m.causal_total() as f64).ceil() as usize;
+    let mut qi = nb;
+    while m.kept() < target && qi > 0 {
+        qi -= 1;
+        for ki in 0..=qi {
+            m.set(qi, ki, true);
+        }
+    }
+    m
+}
+
+/// Dilated: keep every d-th block diagonal stripe.
+pub fn dilated(t: usize, block: usize, budget: f64) -> BlockMask {
+    let mut m = BlockMask::empty(t, block);
+    let stride = (1.0 / budget.max(1e-3)).round().max(1.0) as usize;
+    for qi in 0..m.nb {
+        for ki in (0..=qi).rev() {
+            let dist = qi - ki;
+            if dist % stride == 0 {
+                m.set(qi, ki, true);
+            }
+        }
+    }
+    m.ensure_diagonal();
+    m
+}
+
+/// Strided: local window + periodic global columns.
+pub fn strided(t: usize, block: usize, budget: f64) -> BlockMask {
+    let mut m = BlockMask::empty(t, block);
+    let nb = m.nb;
+    let stride = ((nb as f64) / (budget * nb as f64).max(1.0)).ceil() as usize;
+    for qi in 0..nb {
+        m.set(qi, qi, true);
+        if qi > 0 {
+            m.set(qi, qi - 1, true);
+        }
+        for ki in (0..=qi).step_by(stride.max(1)) {
+            m.set(qi, ki, true);
+        }
+    }
+    m
+}
+
+// --------------------------------------------------------------------------
+// dynamic estimators (consume per-head q, k [t, dh])
+// --------------------------------------------------------------------------
+
+/// Mean attention score between a sampled set of q rows in block qb and
+/// all k rows in block kb.
+fn block_score(q: &Tensor, k: &Tensor, qb: usize, kb: usize, block: usize) -> f32 {
+    let t = q.rows();
+    let q_lo = qb * block;
+    let q_hi = ((qb + 1) * block).min(t);
+    let k_lo = kb * block;
+    let k_hi = ((kb + 1) * block).min(t);
+    let mut s = 0.0f32;
+    let mut n = 0;
+    // sample every 4th row for speed (pattern computation must be cheap)
+    for qi in (q_lo..q_hi).step_by(4) {
+        for ki in (k_lo..k_hi).step_by(4) {
+            if ki <= qi {
+                s += dot(q.row(qi), k.row(ki)).exp().min(1e6);
+                n += 1;
+            }
+        }
+    }
+    if n == 0 {
+        0.0
+    } else {
+        s / n as f32
+    }
+}
+
+/// MInference-style vertical-slash: estimate from the *last* q block which
+/// kv columns (vertical lines) and which diagonals (slashes) carry mass;
+/// keep the top ones within budget.
+pub fn minference(q: &Tensor, k: &Tensor, block: usize, budget: f64) -> BlockMask {
+    let t = q.rows();
+    let mut m = BlockMask::empty(t, block);
+    let nb = m.nb;
+    let target = (budget * m.causal_total() as f64).ceil() as usize;
+
+    // vertical scores: importance of each kv block to the last q block
+    let last_qb = nb - 1;
+    let mut vertical: Vec<(usize, f32)> = (0..nb)
+        .map(|kb| (kb, block_score(q, k, last_qb, kb, block)))
+        .collect();
+    vertical.sort_by(|a, b| b.1.total_cmp(&a.1));
+    // slash scores: strength of each diagonal offset (sampled rows)
+    let mut slash: Vec<(usize, f32)> = (0..nb)
+        .map(|off| {
+            let mut s = 0.0;
+            let mut n = 0;
+            for qb in off..nb {
+                s += block_score(q, k, qb, qb - off, block);
+                n += 1;
+            }
+            (off, if n == 0 { 0.0 } else { s / n as f32 })
+        })
+        .collect();
+    slash.sort_by(|a, b| b.1.total_cmp(&a.1));
+
+    // alternate verticals and slashes until the budget is filled
+    let mut vi = 0;
+    let mut si = 0;
+    while m.kept() < target && (vi < vertical.len() || si < slash.len()) {
+        if si < slash.len() && (vi >= vertical.len() || si <= vi) {
+            let off = slash[si].0;
+            for qb in off..nb {
+                m.set(qb, qb - off, true);
+            }
+            si += 1;
+        } else {
+            let kb = vertical[vi].0;
+            for qb in kb..nb {
+                m.set(qb, kb, true);
+            }
+            vi += 1;
+        }
+    }
+    m.ensure_diagonal();
+    m
+}
+
+/// XAttention-style antidiagonal scoring: each block is scored by strided
+/// antidiagonal samples of q·k (cheap but unbiased across the block);
+/// top-scoring blocks are kept per query row.
+pub fn xattention(q: &Tensor, k: &Tensor, block: usize, budget: f64) -> BlockMask {
+    let t = q.rows();
+    let mut m = BlockMask::empty(t, block);
+    let nb = m.nb;
+    for qb in 0..nb {
+        let causal = qb + 1;
+        let keep_n = ((budget * causal as f64).ceil() as usize).clamp(1, causal);
+        let mut scores: Vec<(usize, f32)> = (0..causal)
+            .map(|kb| {
+                // antidiagonal sampling inside the block
+                let q_lo = qb * block;
+                let k_lo = kb * block;
+                let mut s = 0.0f32;
+                let mut n = 0;
+                for d in (0..block).step_by(2) {
+                    let qi = q_lo + d;
+                    let ki = k_lo + (block - 1 - d);
+                    if qi < t && ki < t && ki <= qi {
+                        s += dot(q.row(qi), k.row(ki)).exp().min(1e6);
+                        n += 1;
+                    }
+                }
+                (kb, if n == 0 { 0.0 } else { s / n as f32 })
+            })
+            .collect();
+        scores.sort_by(|a, b| b.1.total_cmp(&a.1));
+        for &(kb, _) in scores.iter().take(keep_n) {
+            m.set(qb, kb, true);
+        }
+    }
+    m.ensure_diagonal();
+    m
+}
+
+/// FlexPrefill-style query-aware cumulative-mass selection: per query
+/// block, keep the smallest block set whose estimated attention mass
+/// reaches the budget-implied coverage τ.
+pub fn flexprefill(q: &Tensor, k: &Tensor, block: usize, budget: f64) -> BlockMask {
+    let t = q.rows();
+    let mut m = BlockMask::empty(t, block);
+    let nb = m.nb;
+    let tau = (0.5 + 0.5 * budget).min(0.99); // coverage target
+    for qb in 0..nb {
+        let causal = qb + 1;
+        let mut scores: Vec<(usize, f32)> = (0..causal)
+            .map(|kb| (kb, block_score(q, k, qb, kb, block)))
+            .collect();
+        let total: f32 = scores.iter().map(|s| s.1).sum::<f32>().max(1e-12);
+        scores.sort_by(|a, b| b.1.total_cmp(&a.1));
+        let mut mass = 0.0f32;
+        for &(kb, s) in &scores {
+            if mass / total >= tau as f32 {
+                break;
+            }
+            m.set(qb, kb, true);
+            mass += s;
+        }
+    }
+    m.ensure_diagonal();
+    m
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    fn qk(t: usize, dh: usize, seed: u64) -> (Tensor, Tensor) {
+        let mut rng = Rng::new(seed);
+        (
+            Tensor::randn(&[t, dh], 0.3, &mut rng),
+            Tensor::randn(&[t, dh], 0.3, &mut rng),
+        )
+    }
+
+    #[test]
+    fn static_patterns_hit_budget_roughly() {
+        for budget in [0.3, 0.5] {
+            for f in [a_shape, tri_shape, dilated, strided] {
+                let m = f(256, 16, budget);
+                let d = m.density();
+                assert!(
+                    d > budget * 0.4 && d < budget * 2.5 + 0.2,
+                    "density {d} for budget {budget}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn a_shape_keeps_sink_and_local() {
+        let m = a_shape(256, 16, 0.3);
+        let nb = m.nb;
+        for qi in 0..nb {
+            assert!(m.get(qi, 0), "sink kept");
+            assert!(m.get(qi, qi), "diagonal kept");
+        }
+    }
+
+    #[test]
+    fn tri_shape_last_row_dense() {
+        let m = tri_shape(256, 16, 0.5);
+        let nb = m.nb;
+        for ki in 0..nb {
+            assert!(m.get(nb - 1, ki), "last row must be dense");
+        }
+    }
+
+    #[test]
+    fn dynamic_estimators_respect_causality_and_diag() {
+        let (q, k) = qk(128, 16, 0);
+        for f in [minference, xattention, flexprefill] {
+            let m = f(&q, &k, 16, 0.4);
+            for qb in 0..m.nb {
+                assert!(m.get(qb, qb));
+                for kb in qb + 1..m.nb {
+                    assert!(!m.get(qb, kb), "acausal block kept");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn estimators_find_planted_column() {
+        // make kv block 1 highly attractive to all queries
+        let (mut q, mut k) = qk(128, 16, 1);
+        for ki in 16..32 {
+            for j in 0..16 {
+                k.row_mut(ki)[j] = 2.0;
+            }
+        }
+        for qi in 0..128 {
+            for j in 0..16 {
+                q.row_mut(qi)[j] = q.row(qi)[j].abs();
+            }
+        }
+        for (name, f) in [
+            ("minf", minference as fn(&Tensor, &Tensor, usize, f64) -> BlockMask),
+            ("xattn", xattention),
+            ("flex", flexprefill),
+        ] {
+            let m = f(&q, &k, 16, 0.35);
+            // most query blocks >= 1 should keep kv block 1
+            let kept = (1..m.nb).filter(|&qb| m.get(qb, 1)).count();
+            assert!(kept * 2 >= m.nb - 1, "{name} kept planted column {kept}/{}", m.nb - 1);
+        }
+    }
+}

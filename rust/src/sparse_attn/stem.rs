@@ -1,0 +1,185 @@
+//! Stem — position-aware, output-aware sparse prefill (paper §4.1.2).
+//!
+//! Two ideas on top of uniform top-k block selection:
+//!
+//! * **Token Position-Decay (TPD)** — early tokens are "recursive anchors"
+//!   that many later tokens depend on; they get higher retention stability.
+//!   The per-query-block budget is allocated non-uniformly: each kv block's
+//!   effective score is boosted by a decay factor that favours early
+//!   positions, so anchors survive even under aggressive global sparsity.
+//!
+//! * **Output-Aware Metric (OAM)** — selection weighs attention affinity by
+//!   the *value-state contribution* ‖V_block‖: a block with high scores but
+//!   weak value signal distorts the output less than its score suggests,
+//!   and vice versa. OAM ranks blocks by score × value-norm.
+
+use crate::tensor::{ops::dot, Tensor};
+
+use super::mask::BlockMask;
+
+#[derive(Clone, Debug)]
+pub struct StemCfg {
+    /// TPD decay rate: anchor boost = 1 + tpd_strength * exp(-pos/tau)
+    pub tpd_strength: f32,
+    /// decay horizon as a fraction of the sequence (in blocks)
+    pub tpd_tau_frac: f32,
+    /// weight of the value-norm term in OAM (0 = plain attention scores)
+    pub oam_weight: f32,
+}
+
+impl Default for StemCfg {
+    fn default() -> Self {
+        StemCfg { tpd_strength: 2.0, tpd_tau_frac: 0.15, oam_weight: 1.0 }
+    }
+}
+
+/// OAM block score: mean sampled attention score × (value norm)^oam_weight.
+fn oam_score(
+    q: &Tensor,
+    k: &Tensor,
+    vnorm: &[f32],
+    qb: usize,
+    kb: usize,
+    block: usize,
+    cfg: &StemCfg,
+) -> f32 {
+    let t = q.rows();
+    let q_lo = qb * block;
+    let q_hi = ((qb + 1) * block).min(t);
+    let k_lo = kb * block;
+    let k_hi = ((kb + 1) * block).min(t);
+    // max-pooled affinity: retrieval spikes (a needle's key matching the
+    // query) must not be diluted by averaging over a mostly-flat block
+    let mut best = f32::NEG_INFINITY;
+    let mut any = false;
+    for qi in (q_lo..q_hi).step_by(2) {
+        for ki in (k_lo..k_hi).step_by(2) {
+            if ki <= qi {
+                best = best.max(dot(q.row(qi), k.row(ki)));
+                any = true;
+            }
+        }
+    }
+    let attn = if any { best.exp().min(1e6) } else { 0.0 };
+    attn * vnorm[kb].powf(cfg.oam_weight)
+}
+
+/// Build the Stem block mask.
+pub fn stem(
+    q: &Tensor,
+    k: &Tensor,
+    v: &Tensor,
+    block: usize,
+    budget: f64,
+    cfg: &StemCfg,
+) -> BlockMask {
+    let t = q.rows();
+    let mut m = BlockMask::empty(t, block);
+    let nb = m.nb;
+    let tau = (cfg.tpd_tau_frac * nb as f32).max(1.0);
+
+    // per-kv-block mean value norm (the OAM contribution term)
+    let mut vnorm = vec![0.0f32; nb];
+    for kb in 0..nb {
+        let lo = kb * block;
+        let hi = ((kb + 1) * block).min(t);
+        let mut s = 0.0;
+        for r in lo..hi {
+            s += v.row(r).iter().map(|x| x * x).sum::<f32>().sqrt();
+        }
+        vnorm[kb] = s / (hi - lo).max(1) as f32 + 1e-6;
+    }
+
+    for qb in 0..nb {
+        let causal = qb + 1;
+        // per-row budget matches the uniform baselines; TPD redistributes
+        // *within* the row toward early-KV anchors instead of shrinking it
+        let keep_n = ((budget * causal as f64).ceil() as usize).clamp(1, causal);
+
+        let mut scores: Vec<(usize, f32)> = (0..causal)
+            .map(|kb| {
+                let base = oam_score(q, k, &vnorm, qb, kb, block, cfg);
+                // TPD: early kv blocks are "recursive anchors" with boosted
+                // retention stability; the boost decays toward later kv
+                // positions where redundancy is typically higher
+                let anchor = 1.0 + cfg.tpd_strength * (-(kb as f32) / tau).exp();
+                (kb, base * anchor)
+            })
+            .collect();
+        scores.sort_by(|a, b| b.1.total_cmp(&a.1));
+        for &(kb, _) in scores.iter().take(keep_n) {
+            m.set(qb, kb, true);
+        }
+        // local window: the diagonal neighbourhood is always causally hot
+        if qb > 0 {
+            m.set(qb, qb - 1, true);
+        }
+    }
+    m.ensure_diagonal();
+    m
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sparse_attn::patterns::xattention;
+    use crate::util::Rng;
+
+    fn qkv(t: usize, dh: usize, seed: u64) -> (Tensor, Tensor, Tensor) {
+        let mut rng = Rng::new(seed);
+        (
+            Tensor::randn(&[t, dh], 0.3, &mut rng),
+            Tensor::randn(&[t, dh], 0.3, &mut rng),
+            Tensor::randn(&[t, dh], 0.5, &mut rng),
+        )
+    }
+
+    #[test]
+    fn keeps_early_anchors() {
+        let (q, k, v) = qkv(256, 16, 0);
+        let m = stem(&q, &k, &v, 16, 0.3, &StemCfg::default());
+        // kv block 0 (anchor) kept by almost all query blocks
+        let kept0 = (0..m.nb).filter(|&qb| m.get(qb, 0)).count();
+        assert!(kept0 as f64 >= 0.8 * m.nb as f64, "anchors kept {kept0}/{}", m.nb);
+    }
+
+    #[test]
+    fn uniform_baseline_drops_anchors_more() {
+        let (q, k, v) = qkv(256, 16, 1);
+        let stem_m = stem(&q, &k, &v, 16, 0.25, &StemCfg::default());
+        let uni_m = xattention(&q, &k, 16, 0.25);
+        let anchors_stem = (0..stem_m.nb).filter(|&qb| stem_m.get(qb, 0)).count();
+        let anchors_uni = (0..uni_m.nb).filter(|&qb| uni_m.get(qb, 0)).count();
+        assert!(
+            anchors_stem >= anchors_uni,
+            "stem {anchors_stem} vs uniform {anchors_uni}"
+        );
+    }
+
+    #[test]
+    fn oam_downweights_weak_values() {
+        let (q, k, mut v) = qkv(128, 16, 2);
+        // kv block 2 has near-zero values: high-score-low-value trap
+        for r in 32..48 {
+            for j in 0..16 {
+                v.row_mut(r)[j] = 1e-4;
+            }
+        }
+        let m = stem(&q, &k, &v, 16, 0.4, &StemCfg::default());
+        let m0 = stem(&q, &k, &v, 16, 0.4, &StemCfg { oam_weight: 0.0, ..Default::default() });
+        let kept_oam = (2..m.nb).filter(|&qb| m.get(qb, 2)).count();
+        let kept_plain = (2..m0.nb).filter(|&qb| m0.get(qb, 2)).count();
+        assert!(kept_oam <= kept_plain, "oam {kept_oam} vs plain {kept_plain}");
+    }
+
+    #[test]
+    fn density_near_budget() {
+        let (q, k, v) = qkv(256, 16, 3);
+        for budget in [0.2, 0.4, 0.6] {
+            let m = stem(&q, &k, &v, 16, budget, &StemCfg::default());
+            let d = m.density();
+            // ceil-per-row + the local window add a small density floor
+            assert!(d > budget * 0.6 && d < budget * 1.6 + 0.25, "{d} vs {budget}");
+        }
+    }
+}

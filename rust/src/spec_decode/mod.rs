@@ -1,0 +1,13 @@
+//! Speculative decoding — pillar 2 of the paper (§3).
+//!
+//! The draft model (distilled at build time by python/compile/train.py with
+//! Eagle3-style target alignment) proposes γ tokens; the target verifies
+//! them in a single forward pass. Greedy and stochastic acceptance rules,
+//! AL / TPS metrics matching Tables 7-9, and the SpecExit early-exit
+//! controller (§3.2).
+
+pub mod engine;
+pub mod spec_exit;
+
+pub use engine::{GenStats, LogitsModel, SpecDecoder, VanillaDecoder};
+pub use spec_exit::{ExitSignals, SpecExitController};

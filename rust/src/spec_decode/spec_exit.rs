@@ -1,0 +1,230 @@
+//! SpecExit — speculative early exit (paper §3.2, Yang et al. 2025).
+//!
+//! The draft model's hidden states already encode reasoning progress; the
+//! paper augments the MTP layer with lightweight heads that emit
+//! (confidence, progress, remaining-length) signals in the same forward
+//! pass that proposes tokens — zero probe overhead. Here the signals are
+//! derived from the draft's output distribution (max-prob confidence and
+//! entropy trend), which is exactly the information those heads are trained
+//! to distill; the controller halts generation when the sustained signals
+//! say the remaining continuation is redundant.
+
+use crate::models::Sampler;
+use crate::tensor::ops::{argmax, log_softmax};
+use crate::util::Rng;
+use anyhow::Result;
+
+use super::engine::{GenStats, LogitsModel};
+
+/// Per-step exit signals (the paper's auxiliary head outputs).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct ExitSignals {
+    /// max softmax probability of the draft's next-token distribution
+    pub confidence: f32,
+    /// EMA of confidence — the "reasoning progress" proxy
+    pub progress: f32,
+    /// entropy of the distribution (low = little left to decide)
+    pub entropy: f32,
+}
+
+#[derive(Clone, Debug)]
+pub struct SpecExitController {
+    /// exit when progress EMA exceeds this
+    pub threshold: f32,
+    /// minimum tokens before exit is allowed (don't cut the answer)
+    pub min_tokens: usize,
+    /// consecutive high-confidence steps required
+    pub patience: usize,
+    ema: f32,
+    streak: usize,
+    started: bool,
+}
+
+impl SpecExitController {
+    pub fn new(threshold: f32, min_tokens: usize, patience: usize) -> Self {
+        SpecExitController {
+            threshold,
+            min_tokens,
+            patience,
+            ema: 0.0,
+            streak: 0,
+            started: false,
+        }
+    }
+
+    pub fn signals_from_logits(&self, logits: &[f32]) -> ExitSignals {
+        let lp = log_softmax(logits);
+        let conf = lp[argmax(logits)].exp();
+        let entropy: f32 = -lp.iter().map(|&l| l.exp() * l).sum::<f32>();
+        ExitSignals { confidence: conf, progress: self.ema, entropy }
+    }
+
+    /// Feed one step's draft logits; returns true when generation should
+    /// exit early.
+    pub fn observe(&mut self, logits: &[f32], tokens_so_far: usize) -> bool {
+        let s = self.signals_from_logits(logits);
+        if self.started {
+            self.ema = 0.7 * self.ema + 0.3 * s.confidence;
+        } else {
+            self.ema = s.confidence; // warm start at the first observation
+            self.started = true;
+        }
+        if s.confidence >= self.threshold {
+            self.streak += 1;
+        } else {
+            self.streak = 0;
+        }
+        tokens_so_far >= self.min_tokens
+            && self.streak >= self.patience
+            && self.ema >= self.threshold * 0.9
+    }
+
+    pub fn reset(&mut self) {
+        self.ema = 0.0;
+        self.streak = 0;
+        self.started = false;
+    }
+}
+
+/// Speculative decoding with embedded early exit: identical to
+/// SpecDecoder::generate, but the controller watches the draft's signals
+/// (no extra forward passes — the paper's key efficiency property).
+pub struct SpecExitDecoder<'a, D: LogitsModel, T: LogitsModel> {
+    pub draft: &'a D,
+    pub target: &'a T,
+    pub gamma: usize,
+    pub controller: SpecExitController,
+}
+
+impl<'a, D: LogitsModel, T: LogitsModel> SpecExitDecoder<'a, D, T> {
+    pub fn new(draft: &'a D, target: &'a T, gamma: usize, controller: SpecExitController) -> Self {
+        SpecExitDecoder { draft, target, gamma, controller }
+    }
+
+    pub fn generate(
+        &mut self,
+        prompt: &[u8],
+        max_new: usize,
+        rng: &mut Rng,
+    ) -> Result<(Vec<u8>, GenStats, bool)> {
+        let t0 = std::time::Instant::now();
+        self.controller.reset();
+        let sampler = Sampler::Greedy;
+        let mut seq = prompt.to_vec();
+        let mut stats = GenStats::default();
+        let limit = self.target.max_t().min(self.draft.max_t());
+        let budget = max_new.min(limit.saturating_sub(prompt.len()));
+        let mut exited = false;
+
+        'outer: while stats.generated < budget {
+            let room = (limit - seq.len()).min(self.gamma).min(budget - stats.generated);
+            if room == 0 {
+                break;
+            }
+            let mut proposal = Vec::with_capacity(room);
+            let mut exit_after: Option<usize> = None;
+            {
+                let mut dseq = seq.clone();
+                for i in 0..room {
+                    let dl = self.draft.seq_logits(&dseq)?;
+                    let last = dl.last().unwrap();
+                    // exit signals ride along with the proposal — same pass
+                    if exit_after.is_none()
+                        && self.controller.observe(last, stats.generated + i)
+                    {
+                        exit_after = Some(i);
+                    }
+                    let tok = sampler.sample(last, rng);
+                    dseq.push(tok);
+                    proposal.push(tok);
+                }
+            }
+            stats.proposed += proposal.len();
+
+            let mut ext = seq.clone();
+            ext.extend_from_slice(&proposal);
+            let tl = self.target.seq_logits(&ext)?;
+            let base = seq.len() - 1;
+            let mut n_acc = 0;
+            for (i, &tok) in proposal.iter().enumerate() {
+                if argmax(&tl[base + i]) as u8 == tok {
+                    n_acc += 1;
+                } else {
+                    break;
+                }
+            }
+            stats.accepted_draft += n_acc;
+            for (i, &tok) in proposal.iter().take(n_acc).enumerate() {
+                seq.push(tok);
+                stats.generated += 1;
+                if exit_after == Some(i) {
+                    exited = true;
+                    stats.steps += 1;
+                    break 'outer;
+                }
+            }
+            if stats.generated < budget && seq.len() < limit {
+                let bonus = argmax(&tl[base + n_acc]) as u8;
+                seq.push(bonus);
+                stats.generated += 1;
+            }
+            stats.steps += 1;
+            if exit_after.map(|e| e < n_acc.max(1)).unwrap_or(false) {
+                exited = true;
+                break;
+            }
+        }
+        stats.wall_s = t0.elapsed().as_secs_f64();
+        Ok((seq, stats, exited))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn signals_reflect_peakiness() {
+        let c = SpecExitController::new(0.9, 4, 2);
+        let mut peaky = vec![0.0f32; 16];
+        peaky[3] = 12.0;
+        let flat = vec![0.0f32; 16];
+        let sp = c.signals_from_logits(&peaky);
+        let sf = c.signals_from_logits(&flat);
+        assert!(sp.confidence > 0.99);
+        assert!(sf.confidence < 0.1);
+        assert!(sp.entropy < sf.entropy);
+    }
+
+    #[test]
+    fn controller_requires_patience_and_min_tokens() {
+        let mut c = SpecExitController::new(0.9, 5, 3);
+        let mut peaky = vec![0.0f32; 16];
+        peaky[0] = 12.0;
+        // high confidence but before min_tokens
+        assert!(!c.observe(&peaky, 0));
+        assert!(!c.observe(&peaky, 1));
+        // at min_tokens, needs streak >= 3 (already has 2)
+        assert!(c.observe(&peaky, 6));
+    }
+
+    #[test]
+    fn flat_logits_never_exit() {
+        let mut c = SpecExitController::new(0.9, 0, 1);
+        let flat = vec![0.0f32; 16];
+        for i in 0..50 {
+            assert!(!c.observe(&flat, i));
+        }
+    }
+
+    #[test]
+    fn reset_clears_state() {
+        let mut c = SpecExitController::new(0.5, 0, 1);
+        let mut peaky = vec![0.0f32; 8];
+        peaky[0] = 10.0;
+        assert!(c.observe(&peaky, 10));
+        c.reset();
+        assert_eq!(c.streak, 0);
+        assert_eq!(c.ema, 0.0);
+    }
+}

@@ -1,0 +1,110 @@
+//! Minimal dense f32 tensor + the linear-algebra ops the pure-Rust model
+//! path needs (matmul, softmax, rmsnorm, attention primitives).
+//!
+//! The PJRT artifacts carry the *serving* hot path; this module exists so
+//! the PTQ framework (GPTQ / AWQ / LeptoQuant) can run calibration and
+//! layer-wise reconstruction over real transformer weights entirely in Rust
+//! — the paper's Compress Engine does the same against torch modules.
+
+pub mod ops;
+pub mod shape;
+
+pub use ops::*;
+pub use shape::Shape;
+
+/// Row-major dense f32 tensor.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Tensor {
+    pub shape: Shape,
+    pub data: Vec<f32>,
+}
+
+impl Tensor {
+    pub fn zeros(dims: &[usize]) -> Self {
+        let shape = Shape::new(dims);
+        let n = shape.numel();
+        Tensor { shape, data: vec![0.0; n] }
+    }
+
+    pub fn from_vec(dims: &[usize], data: Vec<f32>) -> Self {
+        let shape = Shape::new(dims);
+        assert_eq!(shape.numel(), data.len(), "shape/data mismatch");
+        Tensor { shape, data }
+    }
+
+    pub fn randn(dims: &[usize], std: f32, rng: &mut crate::util::Rng) -> Self {
+        let shape = Shape::new(dims);
+        let data = rng.normal_vec(shape.numel(), std);
+        Tensor { shape, data }
+    }
+
+    pub fn numel(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn dims(&self) -> &[usize] {
+        &self.shape.dims
+    }
+
+    /// Number of rows for a 2-D tensor.
+    pub fn rows(&self) -> usize {
+        assert_eq!(self.dims().len(), 2);
+        self.dims()[0]
+    }
+
+    pub fn cols(&self) -> usize {
+        assert_eq!(self.dims().len(), 2);
+        self.dims()[1]
+    }
+
+    pub fn row(&self, i: usize) -> &[f32] {
+        let c = self.cols();
+        &self.data[i * c..(i + 1) * c]
+    }
+
+    pub fn row_mut(&mut self, i: usize) -> &mut [f32] {
+        let c = self.cols();
+        &mut self.data[i * c..(i + 1) * c]
+    }
+
+    /// Frobenius norm.
+    pub fn norm(&self) -> f32 {
+        self.data.iter().map(|x| x * x).sum::<f32>().sqrt()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    #[test]
+    fn zeros_and_shape() {
+        let t = Tensor::zeros(&[2, 3]);
+        assert_eq!(t.numel(), 6);
+        assert_eq!(t.rows(), 2);
+        assert_eq!(t.cols(), 3);
+        assert!(t.data.iter().all(|&x| x == 0.0));
+    }
+
+    #[test]
+    fn row_access() {
+        let t = Tensor::from_vec(&[2, 2], vec![1.0, 2.0, 3.0, 4.0]);
+        assert_eq!(t.row(0), &[1.0, 2.0]);
+        assert_eq!(t.row(1), &[3.0, 4.0]);
+    }
+
+    #[test]
+    #[should_panic]
+    fn from_vec_mismatch_panics() {
+        Tensor::from_vec(&[2, 2], vec![1.0]);
+    }
+
+    #[test]
+    fn randn_uses_std() {
+        let mut rng = Rng::new(0);
+        let t = Tensor::randn(&[100, 100], 0.1, &mut rng);
+        let var = t.data.iter().map(|x| x * x).sum::<f32>() / t.numel() as f32;
+        assert!((var - 0.01).abs() < 0.002, "var {var}");
+    }
+}

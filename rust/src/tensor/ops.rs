@@ -1,0 +1,189 @@
+//! Linear-algebra kernels for the pure-Rust model/calibration path.
+//!
+//! `matmul_transb` is the workhorse: activations are `[M, K]` row-major and
+//! weights are stored `[N, K]` (out x in, transposed-B layout), so both
+//! operands stream contiguously — the same layout the packed quantized
+//! GEMV kernels in quant/packing.rs use.
+
+use super::Tensor;
+
+/// y = x @ w.T where x: [M, K], w: [N, K] -> [M, N].
+pub fn matmul_transb(x: &Tensor, w: &Tensor) -> Tensor {
+    let (m, k) = (x.rows(), x.cols());
+    let (n, k2) = (w.rows(), w.cols());
+    assert_eq!(k, k2, "inner-dim mismatch {k} vs {k2}");
+    let mut out = Tensor::zeros(&[m, n]);
+    for i in 0..m {
+        let xi = x.row(i);
+        let oi = out.row_mut(i);
+        for j in 0..n {
+            oi[j] = dot(xi, w.row(j));
+        }
+    }
+    out
+}
+
+/// Unrolled dot product (4-wide) — the scalar hot loop of the repo.
+#[inline]
+pub fn dot(a: &[f32], b: &[f32]) -> f32 {
+    debug_assert_eq!(a.len(), b.len());
+    let chunks = a.len() / 4;
+    let (mut s0, mut s1, mut s2, mut s3) = (0.0f32, 0.0f32, 0.0f32, 0.0f32);
+    for c in 0..chunks {
+        let i = c * 4;
+        s0 += a[i] * b[i];
+        s1 += a[i + 1] * b[i + 1];
+        s2 += a[i + 2] * b[i + 2];
+        s3 += a[i + 3] * b[i + 3];
+    }
+    let mut s = s0 + s1 + s2 + s3;
+    for i in chunks * 4..a.len() {
+        s += a[i] * b[i];
+    }
+    s
+}
+
+/// In-place row-wise softmax over the last dim of a 2-D tensor.
+pub fn softmax_rows(t: &mut Tensor) {
+    let c = t.cols();
+    for i in 0..t.rows() {
+        let row = t.row_mut(i);
+        softmax_inplace(row);
+        debug_assert_eq!(row.len(), c);
+    }
+}
+
+/// Numerically-stable softmax on a slice.
+pub fn softmax_inplace(row: &mut [f32]) {
+    let m = row.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+    if !m.is_finite() {
+        let v = 1.0 / row.len() as f32;
+        row.iter_mut().for_each(|x| *x = v);
+        return;
+    }
+    let mut sum = 0.0;
+    for x in row.iter_mut() {
+        *x = (*x - m).exp();
+        sum += *x;
+    }
+    let inv = 1.0 / sum;
+    row.iter_mut().for_each(|x| *x *= inv);
+}
+
+/// Log-softmax of a slice (returns a new Vec).
+pub fn log_softmax(row: &[f32]) -> Vec<f32> {
+    let m = row.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+    let lse = m + row.iter().map(|x| (x - m).exp()).sum::<f32>().ln();
+    row.iter().map(|x| x - lse).collect()
+}
+
+/// RMSNorm: x * g / sqrt(mean(x^2) + eps), row-wise.
+pub fn rmsnorm(x: &[f32], g: &[f32], out: &mut [f32]) {
+    debug_assert_eq!(x.len(), g.len());
+    let ms = x.iter().map(|v| v * v).sum::<f32>() / x.len() as f32;
+    let inv = 1.0 / (ms + 1e-6).sqrt();
+    for i in 0..x.len() {
+        out[i] = x[i] * inv * g[i];
+    }
+}
+
+/// SiLU activation.
+#[inline]
+pub fn silu(x: f32) -> f32 {
+    x / (1.0 + (-x).exp())
+}
+
+/// Index of the max element.
+pub fn argmax(xs: &[f32]) -> usize {
+    let mut best = 0;
+    for i in 1..xs.len() {
+        if xs[i] > xs[best] {
+            best = i;
+        }
+    }
+    best
+}
+
+/// Element-wise a += b.
+pub fn add_inplace(a: &mut [f32], b: &[f32]) {
+    debug_assert_eq!(a.len(), b.len());
+    for i in 0..a.len() {
+        a[i] += b[i];
+    }
+}
+
+/// a * s element-wise, in place.
+pub fn scale_inplace(a: &mut [f32], s: f32) {
+    a.iter_mut().for_each(|x| *x *= s);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::testing::assert_allclose;
+
+    #[test]
+    fn matmul_small() {
+        // x = [[1,2],[3,4]], w = [[1,0],[0,1],[1,1]] (3x2) -> x @ w.T
+        let x = Tensor::from_vec(&[2, 2], vec![1.0, 2.0, 3.0, 4.0]);
+        let w = Tensor::from_vec(&[3, 2], vec![1.0, 0.0, 0.0, 1.0, 1.0, 1.0]);
+        let y = matmul_transb(&x, &w);
+        assert_eq!(y.dims(), &[2, 3]);
+        assert_allclose(&y.data, &[1.0, 2.0, 3.0, 3.0, 4.0, 7.0], 1e-6, 1e-6);
+    }
+
+    #[test]
+    fn dot_matches_naive() {
+        let a: Vec<f32> = (0..13).map(|i| i as f32 * 0.5).collect();
+        let b: Vec<f32> = (0..13).map(|i| (13 - i) as f32).collect();
+        let naive: f32 = a.iter().zip(&b).map(|(x, y)| x * y).sum();
+        assert!((dot(&a, &b) - naive).abs() < 1e-4);
+    }
+
+    #[test]
+    fn softmax_sums_to_one() {
+        let mut row = vec![1.0f32, 2.0, 3.0, 4.0];
+        softmax_inplace(&mut row);
+        let s: f32 = row.iter().sum();
+        assert!((s - 1.0).abs() < 1e-6);
+        assert!(row[3] > row[0]);
+    }
+
+    #[test]
+    fn softmax_handles_neg_inf_row() {
+        let mut row = vec![f32::NEG_INFINITY; 4];
+        softmax_inplace(&mut row);
+        assert!((row.iter().sum::<f32>() - 1.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn log_softmax_normalizes() {
+        let row = [0.5f32, 1.5, -0.5];
+        let lp = log_softmax(&row);
+        let s: f32 = lp.iter().map(|x| x.exp()).sum();
+        assert!((s - 1.0).abs() < 1e-5);
+    }
+
+    #[test]
+    fn rmsnorm_unit_scale() {
+        let x = [3.0f32, 4.0];
+        let g = [1.0f32, 1.0];
+        let mut out = [0.0f32; 2];
+        rmsnorm(&x, &g, &mut out);
+        // mean square = 12.5, rms ≈ 3.5355
+        assert!((out[0] - 3.0 / 3.5355).abs() < 1e-3);
+    }
+
+    #[test]
+    fn argmax_picks_max() {
+        assert_eq!(argmax(&[0.1, 0.9, 0.5]), 1);
+        assert_eq!(argmax(&[2.0]), 0);
+    }
+
+    #[test]
+    fn silu_signs() {
+        assert!(silu(5.0) > 4.9);
+        assert!(silu(-5.0).abs() < 0.05);
+        assert_eq!(silu(0.0), 0.0);
+    }
+}

@@ -1,0 +1,316 @@
+//! Audio token reduction — Samp (§4.2.3) and the Table 13 baselines.
+//!
+//! Audio methods can *merge* (collapse runs of redundant frames into
+//! weighted centroids) as well as prune, so they implement `Reducer`.
+
+use super::dpp::{conditional_kernel, dpp_map_select};
+use super::framework::{PruneContext, PrunerAsReducer, ReducedToken, Reducer};
+use super::visual::{VisPruner, VisionZip};
+use crate::util::stats::cosine;
+
+fn weighted_merge(features: &[Vec<f32>], idxs: &[usize], weights: &[f32]) -> Vec<f32> {
+    let dim = features[0].len();
+    let mut out = vec![0.0f32; dim];
+    let mut wsum = 0.0f32;
+    for &i in idxs {
+        let w = weights[i].max(1e-6);
+        wsum += w;
+        for j in 0..dim {
+            out[j] += features[i][j] * w;
+        }
+    }
+    for o in out.iter_mut() {
+        *o /= wsum.max(1e-6);
+    }
+    out
+}
+
+/// Cluster adjacent tokens whose mean similarity to the cluster exceeds λ
+/// (Samp's merging stage, eq. 8). Returns clusters as index ranges.
+pub fn adjacent_clusters(features: &[Vec<f32>], lambda: f32) -> Vec<Vec<usize>> {
+    let mut clusters: Vec<Vec<usize>> = Vec::new();
+    for i in 0..features.len() {
+        if let Some(cur) = clusters.last_mut() {
+            let mean_sim: f32 = cur
+                .iter()
+                .map(|&t| cosine(&features[i], &features[t]))
+                .sum::<f32>()
+                / cur.len() as f32;
+            if mean_sim >= lambda {
+                cur.push(i);
+                continue;
+            }
+        }
+        clusters.push(vec![i]);
+    }
+    clusters
+}
+
+// --------------------------------------------------------------------------
+// Samp — the paper's audio contribution
+// --------------------------------------------------------------------------
+
+/// Samp: similarity-attention synergistic merge-then-prune.
+/// Stage 1 merges adjacent similar frames with attention-weighted averaging
+/// (eq. 9); stage 2 prunes the merged tokens via DPP-MAP on the
+/// importance-conditioned kernel (eq. 10). The similarity threshold λ
+/// adaptively calibrates the merge/prune split per sample.
+pub struct Samp {
+    pub lambda: f32,
+}
+
+impl Default for Samp {
+    fn default() -> Self {
+        Samp { lambda: 0.85 }
+    }
+}
+
+impl Reducer for Samp {
+    fn name(&self) -> &'static str {
+        "Samp"
+    }
+
+    fn reduce(&self, ctx: &PruneContext) -> Vec<ReducedToken> {
+        // stage 1: adjacent merge
+        let clusters = adjacent_clusters(ctx.features, self.lambda);
+        let merged: Vec<ReducedToken> = clusters
+            .iter()
+            .map(|c| ReducedToken {
+                feature: weighted_merge(ctx.features, c, ctx.importance),
+                first_pos: c[0],
+                span: c.len(),
+            })
+            .collect();
+        if merged.len() <= ctx.retain {
+            return merged;
+        }
+        // stage 2: diversity-driven prune via importance-conditioned DPP
+        let n = merged.len();
+        let mut l = vec![vec![0.0f32; n]; n];
+        for i in 0..n {
+            for j in 0..n {
+                l[i][j] = (cosine(&merged[i].feature, &merged[j].feature) + 1.0) / 2.0;
+            }
+        }
+        // cluster importance = mean frame attention
+        let a: Vec<f32> = clusters
+            .iter()
+            .map(|c| {
+                c.iter().map(|&t| ctx.importance[t]).sum::<f32>() / c.len() as f32 + 0.05
+            })
+            .collect();
+        let lc = conditional_kernel(&l, &a);
+        let keep = dpp_map_select(&lc, ctx.retain);
+        keep.into_iter().map(|i| merged[i].clone()).collect()
+    }
+}
+
+// --------------------------------------------------------------------------
+// baselines
+// --------------------------------------------------------------------------
+
+/// A-ToMe: pure adjacent token merging by similarity threshold, no prune;
+/// threshold is tightened until the budget is met.
+pub struct AToMe;
+
+impl Reducer for AToMe {
+    fn name(&self) -> &'static str {
+        "A-ToMe"
+    }
+
+    fn reduce(&self, ctx: &PruneContext) -> Vec<ReducedToken> {
+        let mut lambda = 0.95f32;
+        loop {
+            let clusters = adjacent_clusters(ctx.features, lambda);
+            if clusters.len() <= ctx.retain || lambda < 0.2 {
+                return clusters
+                    .iter()
+                    .map(|c| ReducedToken {
+                        feature: weighted_merge(
+                            ctx.features,
+                            c,
+                            &vec![1.0; ctx.features.len()],
+                        ),
+                        first_pos: c[0],
+                        span: c.len(),
+                    })
+                    .collect();
+            }
+            lambda -= 0.05;
+        }
+    }
+}
+
+/// FastAdaSP: dominant frames by attention; neighbours merge into the
+/// nearest kept frame (multitask-adapted merging).
+pub struct FastAdaSp;
+
+impl Reducer for FastAdaSp {
+    fn name(&self) -> &'static str {
+        "FastAdaSP"
+    }
+
+    fn reduce(&self, ctx: &PruneContext) -> Vec<ReducedToken> {
+        let n = ctx.n();
+        let mut idx: Vec<usize> = (0..n).collect();
+        idx.sort_by(|&a, &b| ctx.importance[b].total_cmp(&ctx.importance[a]));
+        let mut kept: Vec<usize> = idx.into_iter().take(ctx.retain).collect();
+        kept.sort_unstable();
+        // merge each dropped frame into the nearest kept frame by position
+        let mut groups: Vec<Vec<usize>> = kept.iter().map(|&k| vec![k]).collect();
+        for t in 0..n {
+            if kept.binary_search(&t).is_ok() {
+                continue;
+            }
+            let g = match kept.binary_search(&t) {
+                Ok(p) => p,
+                Err(p) => {
+                    if p == 0 {
+                        0
+                    } else if p >= kept.len() {
+                        kept.len() - 1
+                    } else if t - kept[p - 1] <= kept[p] - t {
+                        p - 1
+                    } else {
+                        p
+                    }
+                }
+            };
+            groups[g].push(t);
+        }
+        groups
+            .iter()
+            .zip(&kept)
+            .map(|(g, &k)| ReducedToken {
+                feature: weighted_merge(ctx.features, g, ctx.importance),
+                first_pos: k,
+                span: g.len(),
+            })
+            .collect()
+    }
+}
+
+/// CDPruner: conditional-diversity pruning (DPP MAP on the relevance-
+/// conditioned kernel), no merging.
+pub struct CdPruner;
+
+impl Reducer for CdPruner {
+    fn name(&self) -> &'static str {
+        "CDPruner"
+    }
+
+    fn reduce(&self, ctx: &PruneContext) -> Vec<ReducedToken> {
+        let n = ctx.n();
+        let mut l = vec![vec![0.0f32; n]; n];
+        for i in 0..n {
+            for j in 0..n {
+                l[i][j] = (cosine(&ctx.features[i], &ctx.features[j]) + 1.0) / 2.0;
+            }
+        }
+        let a: Vec<f32> = ctx.importance.iter().map(|&x| x + 0.05).collect();
+        let lc = conditional_kernel(&l, &a);
+        dpp_map_select(&lc, ctx.retain)
+            .into_iter()
+            .map(|i| ReducedToken {
+                feature: ctx.features[i].clone(),
+                first_pos: i,
+                span: 1,
+            })
+            .collect()
+    }
+}
+
+/// The Table 13 method set (visual pruners reused on audio, as the paper
+/// does, via the Pruner->Reducer adapter).
+pub fn all_audio_reducers() -> Vec<Box<dyn Reducer>> {
+    vec![
+        Box::new(PrunerAsReducer(VisionZip)),
+        Box::new(PrunerAsReducer(VisPruner)),
+        Box::new(CdPruner),
+        Box::new(AToMe),
+        Box::new(FastAdaSp),
+        Box::new(Samp::default()),
+    ]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::AudioSceneGen;
+
+    fn ctx_of(scene: &crate::data::AudioScene, retain: usize) -> PruneContext<'_> {
+        PruneContext {
+            features: &scene.features,
+            importance: &scene.attention,
+            retain,
+        }
+    }
+
+    #[test]
+    fn adjacent_clusters_follow_segments() {
+        let gen = AudioSceneGen::new(16, 12, 0.05, 0);
+        let s = gen.scene(0, 100);
+        let clusters = adjacent_clusters(&s.features, 0.8);
+        // clusters should roughly match phoneme segments (±50%)
+        let segs = s.transcript.len();
+        assert!(
+            clusters.len() >= segs / 2 && clusters.len() <= segs * 2,
+            "{} clusters vs {} segments",
+            clusters.len(),
+            segs
+        );
+        // all indices covered exactly once, in order
+        let flat: Vec<usize> = clusters.iter().flatten().copied().collect();
+        assert_eq!(flat, (0..100).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn all_reducers_respect_budget() {
+        let gen = AudioSceneGen::new(16, 12, 0.1, 1);
+        let s = gen.scene(1, 120);
+        for r in all_audio_reducers() {
+            let reduced = r.reduce(&ctx_of(&s, 72));
+            assert!(
+                reduced.len() <= 72,
+                "{} produced {} tokens",
+                r.name(),
+                reduced.len()
+            );
+            assert!(!reduced.is_empty(), "{}", r.name());
+        }
+    }
+
+    #[test]
+    fn samp_merges_before_pruning() {
+        let gen = AudioSceneGen::new(16, 12, 0.05, 2);
+        let s = gen.scene(0, 150);
+        let reduced = Samp::default().reduce(&ctx_of(&s, 90));
+        let merged_any = reduced.iter().any(|t| t.span > 1);
+        assert!(merged_any, "samp should merge redundant adjacent frames");
+        let total_span: usize = reduced.iter().map(|t| t.span).sum();
+        assert!(total_span <= 150);
+    }
+
+    #[test]
+    fn atome_spans_cover_everything() {
+        let gen = AudioSceneGen::new(16, 12, 0.05, 3);
+        let s = gen.scene(0, 80);
+        let reduced = AToMe.reduce(&ctx_of(&s, 40));
+        let total: usize = reduced.iter().map(|t| t.span).sum();
+        assert_eq!(total, 80, "pure merging preserves all frames");
+    }
+
+    #[test]
+    fn reducers_preserve_order() {
+        let gen = AudioSceneGen::new(16, 12, 0.1, 4);
+        let s = gen.scene(0, 100);
+        for r in all_audio_reducers() {
+            let reduced = r.reduce(&ctx_of(&s, 60));
+            assert!(
+                reduced.windows(2).all(|w| w[0].first_pos < w[1].first_pos),
+                "{} order violated",
+                r.name()
+            );
+        }
+    }
+}

@@ -1,0 +1,178 @@
+//! The metadata-driven pruning interface (paper Fig. 12): strategies see a
+//! `PruneContext` and emit a keep-mask (`Pruner`) or a reduced token list
+//! (`Reducer`, for merge-capable audio methods). The framework handles the
+//! downstream slicing.
+
+/// Runtime context handed to a pruning strategy — the "metadata" the
+/// framework captures during the forward pass (features, attention-derived
+/// importance, budget).
+#[derive(Clone, Debug)]
+pub struct PruneContext<'a> {
+    /// token features [n][dim]
+    pub features: &'a [Vec<f32>],
+    /// per-token importance (attention metadata); empty if unavailable
+    pub importance: &'a [f32],
+    /// number of tokens to retain
+    pub retain: usize,
+}
+
+impl<'a> PruneContext<'a> {
+    pub fn n(&self) -> usize {
+        self.features.len()
+    }
+
+    /// Pairwise cosine similarity matrix (computed lazily by strategies
+    /// that need it).
+    pub fn similarity(&self) -> Vec<Vec<f32>> {
+        let n = self.n();
+        let mut sim = vec![vec![0.0f32; n]; n];
+        for i in 0..n {
+            sim[i][i] = 1.0;
+            for j in 0..i {
+                let s = crate::util::stats::cosine(&self.features[i], &self.features[j]);
+                sim[i][j] = s;
+                sim[j][i] = s;
+            }
+        }
+        sim
+    }
+}
+
+/// A pruning strategy: boolean keep-mask of length n with exactly
+/// `ctx.retain` true entries (the framework enforces this in `apply`).
+pub trait Pruner {
+    fn name(&self) -> &'static str;
+    fn prune(&self, ctx: &PruneContext) -> Vec<bool>;
+
+    /// Framework-side application: run the strategy, repair budget
+    /// violations (top-up by importance, trim by reverse importance), and
+    /// return kept indices in original order.
+    fn apply(&self, ctx: &PruneContext) -> Vec<usize> {
+        let mut mask = self.prune(ctx);
+        assert_eq!(mask.len(), ctx.n());
+        let kept = mask.iter().filter(|&&b| b).count();
+        if kept > ctx.retain {
+            // trim lowest-importance kept tokens
+            let mut idx: Vec<usize> = (0..ctx.n()).filter(|&i| mask[i]).collect();
+            idx.sort_by(|&a, &b| {
+                score(ctx, a).total_cmp(&score(ctx, b))
+            });
+            for &i in idx.iter().take(kept - ctx.retain) {
+                mask[i] = false;
+            }
+        } else if kept < ctx.retain {
+            let mut idx: Vec<usize> = (0..ctx.n()).filter(|&i| !mask[i]).collect();
+            idx.sort_by(|&a, &b| score(ctx, b).total_cmp(&score(ctx, a)));
+            for &i in idx.iter().take(ctx.retain - kept) {
+                mask[i] = true;
+            }
+        }
+        (0..ctx.n()).filter(|&i| mask[i]).collect()
+    }
+}
+
+fn score(ctx: &PruneContext, i: usize) -> f32 {
+    ctx.importance.get(i).copied().unwrap_or(0.0)
+}
+
+/// A reduced token: a (possibly merged) feature + the original position of
+/// its first constituent (for order-preserving downstream decoding).
+#[derive(Clone, Debug)]
+pub struct ReducedToken {
+    pub feature: Vec<f32>,
+    pub first_pos: usize,
+    /// number of original tokens merged into this one
+    pub span: usize,
+}
+
+/// A merge-capable reduction strategy (audio): tokens in, reduced tokens
+/// out, ordered by first_pos.
+pub trait Reducer {
+    fn name(&self) -> &'static str;
+    fn reduce(&self, ctx: &PruneContext) -> Vec<ReducedToken>;
+}
+
+/// Adapter: any Pruner is a Reducer that keeps raw features.
+pub struct PrunerAsReducer<P: Pruner>(pub P);
+
+impl<P: Pruner> Reducer for PrunerAsReducer<P> {
+    fn name(&self) -> &'static str {
+        self.0.name()
+    }
+
+    fn reduce(&self, ctx: &PruneContext) -> Vec<ReducedToken> {
+        self.0
+            .apply(ctx)
+            .into_iter()
+            .map(|i| ReducedToken {
+                feature: ctx.features[i].clone(),
+                first_pos: i,
+                span: 1,
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    struct KeepFirstHalf;
+
+    impl Pruner for KeepFirstHalf {
+        fn name(&self) -> &'static str {
+            "first-half"
+        }
+
+        fn prune(&self, ctx: &PruneContext) -> Vec<bool> {
+            (0..ctx.n()).map(|i| i < ctx.n() / 2).collect()
+        }
+    }
+
+    fn ctx_data(n: usize) -> (Vec<Vec<f32>>, Vec<f32>) {
+        let feats: Vec<Vec<f32>> = (0..n).map(|i| vec![i as f32, 1.0]).collect();
+        let imp: Vec<f32> = (0..n).map(|i| i as f32).collect();
+        (feats, imp)
+    }
+
+    #[test]
+    fn apply_repairs_overfull_mask() {
+        let (feats, imp) = ctx_data(10);
+        let ctx = PruneContext { features: &feats, importance: &imp, retain: 3 };
+        let kept = KeepFirstHalf.apply(&ctx);
+        assert_eq!(kept.len(), 3);
+        // trimmed the lowest-importance (smallest index) kept tokens
+        assert_eq!(kept, vec![2, 3, 4]);
+    }
+
+    #[test]
+    fn apply_tops_up_underfull_mask() {
+        let (feats, imp) = ctx_data(10);
+        let ctx = PruneContext { features: &feats, importance: &imp, retain: 8 };
+        let kept = KeepFirstHalf.apply(&ctx);
+        assert_eq!(kept.len(), 8);
+        // topped up with the highest-importance dropped tokens (9, 8, 7)
+        assert!(kept.contains(&9) && kept.contains(&8) && kept.contains(&7));
+    }
+
+    #[test]
+    fn pruner_as_reducer_preserves_features() {
+        let (feats, imp) = ctx_data(6);
+        let ctx = PruneContext { features: &feats, importance: &imp, retain: 2 };
+        let red = PrunerAsReducer(KeepFirstHalf).reduce(&ctx);
+        assert_eq!(red.len(), 2);
+        assert!(red.iter().all(|r| r.span == 1));
+        assert_eq!(red[0].feature, feats[red[0].first_pos]);
+    }
+
+    #[test]
+    fn similarity_symmetric_unit_diag() {
+        let feats = vec![vec![1.0, 0.0], vec![0.0, 1.0], vec![1.0, 1.0]];
+        let imp = vec![0.0; 3];
+        let ctx = PruneContext { features: &feats, importance: &imp, retain: 2 };
+        let s = ctx.similarity();
+        assert_eq!(s[0][0], 1.0);
+        assert_eq!(s[0][1], s[1][0]);
+        assert!(s[0][1].abs() < 1e-6);
+    }
+}

@@ -1,0 +1,105 @@
+//! Maximal Marginal Relevance — IDPruner's selection core (§4.2.2):
+//! iteratively pick the token maximizing
+//!     λ · importance_norm(i) − (1 − λ) · max_{j ∈ S} sim(i, j)
+//! balancing saliency against redundancy with the already-selected set.
+
+/// Greedy MMR selection of `k` indices.
+/// `importance` is normalized to [0, 1] internally; `sim` is [n][n].
+pub fn mmr_select(importance: &[f32], sim: &[Vec<f32>], k: usize, lambda: f32) -> Vec<usize> {
+    let n = importance.len();
+    let k = k.min(n);
+    if k == 0 {
+        return Vec::new();
+    }
+    let lo = importance.iter().cloned().fold(f32::INFINITY, f32::min);
+    let hi = importance.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+    let range = (hi - lo).max(1e-9);
+    let norm: Vec<f32> = importance.iter().map(|&v| (v - lo) / range).collect();
+
+    let mut selected = Vec::with_capacity(k);
+    let mut max_sim = vec![0.0f32; n]; // max similarity to selected set
+    let mut taken = vec![false; n];
+
+    // seed with the most important token
+    let first = (0..n).max_by(|&a, &b| norm[a].total_cmp(&norm[b])).unwrap();
+    selected.push(first);
+    taken[first] = true;
+    for i in 0..n {
+        max_sim[i] = sim[i][first];
+    }
+
+    while selected.len() < k {
+        let mut best = usize::MAX;
+        let mut best_score = f32::NEG_INFINITY;
+        for i in 0..n {
+            if taken[i] {
+                continue;
+            }
+            let score = lambda * norm[i] - (1.0 - lambda) * max_sim[i];
+            if score > best_score {
+                best_score = score;
+                best = i;
+            }
+        }
+        selected.push(best);
+        taken[best] = true;
+        for i in 0..n {
+            max_sim[i] = max_sim[i].max(sim[i][best]);
+        }
+    }
+    selected.sort_unstable();
+    selected
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sim_from(feats: &[Vec<f32>]) -> Vec<Vec<f32>> {
+        let n = feats.len();
+        let mut s = vec![vec![0.0; n]; n];
+        for i in 0..n {
+            for j in 0..n {
+                s[i][j] = crate::util::stats::cosine(&feats[i], &feats[j]);
+            }
+        }
+        s
+    }
+
+    #[test]
+    fn lambda_one_is_topk_importance() {
+        let imp = vec![0.1, 0.9, 0.5, 0.7];
+        let sim = vec![vec![1.0; 4]; 4];
+        let sel = mmr_select(&imp, &sim, 2, 1.0);
+        assert_eq!(sel, vec![1, 3]);
+    }
+
+    #[test]
+    fn low_lambda_avoids_duplicates() {
+        // tokens 0,1 identical & most important; token 2 orthogonal
+        let feats = vec![vec![1.0, 0.0], vec![1.0, 0.0], vec![0.0, 1.0]];
+        let imp = vec![1.0, 0.99, 0.2];
+        let sel = mmr_select(&imp, &sim_from(&feats), 2, 0.3);
+        assert!(sel.contains(&0));
+        assert!(sel.contains(&2), "diversity should beat the duplicate: {sel:?}");
+    }
+
+    #[test]
+    fn selects_k_distinct() {
+        let imp: Vec<f32> = (0..10).map(|i| i as f32).collect();
+        let sim = vec![vec![0.0; 10]; 10];
+        let sel = mmr_select(&imp, &sim, 5, 0.5);
+        assert_eq!(sel.len(), 5);
+        let mut d = sel.clone();
+        d.dedup();
+        assert_eq!(d.len(), 5);
+    }
+
+    #[test]
+    fn k_zero_and_k_over_n() {
+        let imp = vec![1.0, 2.0];
+        let sim = vec![vec![1.0, 0.0], vec![0.0, 1.0]];
+        assert!(mmr_select(&imp, &sim, 0, 0.5).is_empty());
+        assert_eq!(mmr_select(&imp, &sim, 5, 0.5).len(), 2);
+    }
+}

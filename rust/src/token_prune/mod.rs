@@ -1,0 +1,16 @@
+//! Token pruning & merging for multimodal models — pillar 4 (§4.2).
+//!
+//! The framework mirrors the paper's decoupling (Fig. 12): a pruning
+//! strategy is a standalone function from runtime context (features,
+//! importance metadata, retain budget) to a boolean keep-mask; downstream
+//! bookkeeping (slicing, metadata sync) is the framework's job. Visual
+//! methods rank/select; audio methods may also *merge* (Samp, A-ToMe).
+
+pub mod audio;
+pub mod dpp;
+pub mod framework;
+pub mod mmr;
+pub mod visual;
+
+pub use framework::{PruneContext, Pruner, ReducedToken, Reducer};
+pub use mmr::mmr_select;

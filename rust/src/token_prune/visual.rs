@@ -1,0 +1,395 @@
+//! Visual token pruning strategies — IDPruner (§4.2.2) plus the eight
+//! baselines of Table 12. Attention-map-based baselines use the importance
+//! metadata the framework captures; learnable baselines (VisionSelector)
+//! are implemented as their published selection rule's strongest
+//! training-free proxy (documented per struct).
+
+use super::framework::{PruneContext, Pruner};
+use super::mmr::mmr_select;
+
+fn mask_from(indices: &[usize], n: usize) -> Vec<bool> {
+    let mut m = vec![false; n];
+    for &i in indices {
+        m[i] = true;
+    }
+    m
+}
+
+fn topk_by(scores: &[f32], k: usize) -> Vec<usize> {
+    let mut idx: Vec<usize> = (0..scores.len()).collect();
+    idx.sort_by(|&a, &b| scores[b].total_cmp(&scores[a]));
+    idx.truncate(k);
+    idx
+}
+
+// --------------------------------------------------------------------------
+// IDPruner — the paper's contribution
+// --------------------------------------------------------------------------
+
+/// IDPruner: MMR re-ranking over (normalized saliency, pairwise semantic
+/// similarity) — importance *and* diversity, no attention maps required
+/// (falls back to feature norms when importance metadata is absent).
+pub struct IdPruner {
+    pub lambda: f32,
+}
+
+impl Default for IdPruner {
+    fn default() -> Self {
+        IdPruner { lambda: 0.6 }
+    }
+}
+
+impl Pruner for IdPruner {
+    fn name(&self) -> &'static str {
+        "IDPruner"
+    }
+
+    fn prune(&self, ctx: &PruneContext) -> Vec<bool> {
+        let imp: Vec<f32> = if ctx.importance.is_empty() {
+            ctx.features
+                .iter()
+                .map(|f| f.iter().map(|x| x * x).sum::<f32>().sqrt())
+                .collect()
+        } else {
+            ctx.importance.to_vec()
+        };
+        let sim = ctx.similarity();
+        mask_from(&mmr_select(&imp, &sim, ctx.retain, self.lambda), ctx.n())
+    }
+}
+
+// --------------------------------------------------------------------------
+// baselines
+// --------------------------------------------------------------------------
+
+/// FastV: rank purely by attention importance (single-metric baseline).
+pub struct FastV;
+
+impl Pruner for FastV {
+    fn name(&self) -> &'static str {
+        "FastV"
+    }
+
+    fn prune(&self, ctx: &PruneContext) -> Vec<bool> {
+        mask_from(&topk_by(ctx.importance, ctx.retain), ctx.n())
+    }
+}
+
+/// DivPrune: pure diversity — greedy farthest-point (max-min distance)
+/// selection, ignoring importance.
+pub struct DivPrune;
+
+impl Pruner for DivPrune {
+    fn name(&self) -> &'static str {
+        "DivPrune"
+    }
+
+    fn prune(&self, ctx: &PruneContext) -> Vec<bool> {
+        let n = ctx.n();
+        let sim = ctx.similarity();
+        let mut selected = vec![0usize];
+        let mut min_sim: Vec<f32> = sim.iter().map(|row| row[0]).collect();
+        while selected.len() < ctx.retain.min(n) {
+            let mut best = usize::MAX;
+            let mut best_val = f32::INFINITY;
+            for i in 0..n {
+                if !selected.contains(&i) && min_sim[i] < best_val {
+                    best_val = min_sim[i];
+                    best = i;
+                }
+            }
+            selected.push(best);
+            for i in 0..n {
+                min_sim[i] = min_sim[i].max(sim[i][best]);
+            }
+        }
+        mask_from(&selected, n)
+    }
+}
+
+/// VisionZip: dominant tokens by importance (most of the budget) + a
+/// stride-sampled "contextual" remainder standing in for merged tokens.
+pub struct VisionZip;
+
+impl Pruner for VisionZip {
+    fn name(&self) -> &'static str {
+        "VisionZip"
+    }
+
+    fn prune(&self, ctx: &PruneContext) -> Vec<bool> {
+        let n = ctx.n();
+        let dominant = (ctx.retain as f32 * 0.75).round() as usize;
+        let mut keep = topk_by(ctx.importance, dominant);
+        let rest = ctx.retain - keep.len().min(ctx.retain);
+        if rest > 0 {
+            let remaining: Vec<usize> = (0..n).filter(|i| !keep.contains(i)).collect();
+            let stride = (remaining.len() / rest.max(1)).max(1);
+            keep.extend(remaining.into_iter().step_by(stride).take(rest));
+        }
+        mask_from(&keep, n)
+    }
+}
+
+/// DART: duplication-aware — drop the token most similar to an
+/// already-kept pivot set, iteratively (duplication matters more than
+/// importance).
+pub struct Dart;
+
+impl Pruner for Dart {
+    fn name(&self) -> &'static str {
+        "DART"
+    }
+
+    fn prune(&self, ctx: &PruneContext) -> Vec<bool> {
+        let n = ctx.n();
+        let sim = ctx.similarity();
+        // pivots: a small stride sample
+        let pivots: Vec<usize> = (0..n).step_by((n / 8).max(1)).collect();
+        // redundancy = max similarity to any pivot (excluding self)
+        let mut red: Vec<f32> = (0..n)
+            .map(|i| {
+                pivots
+                    .iter()
+                    .filter(|&&p| p != i)
+                    .map(|&p| sim[i][p])
+                    .fold(f32::NEG_INFINITY, f32::max)
+            })
+            .collect();
+        for (i, r) in red.iter_mut().enumerate() {
+            if pivots.contains(&i) {
+                *r = f32::NEG_INFINITY; // pivots always kept first
+            }
+        }
+        // keep the LEAST redundant tokens
+        let mut idx: Vec<usize> = (0..n).collect();
+        idx.sort_by(|&a, &b| red[a].total_cmp(&red[b]));
+        idx.truncate(ctx.retain);
+        mask_from(&idx, n)
+    }
+}
+
+/// VisPruner: importance for half the budget, farthest-point diversity for
+/// the rest (visual-cue hybrid).
+pub struct VisPruner;
+
+impl Pruner for VisPruner {
+    fn name(&self) -> &'static str {
+        "VisPruner"
+    }
+
+    fn prune(&self, ctx: &PruneContext) -> Vec<bool> {
+        let n = ctx.n();
+        let half = ctx.retain / 2;
+        let mut keep = topk_by(ctx.importance, half);
+        let sim = ctx.similarity();
+        let mut max_sim = vec![f32::NEG_INFINITY; n];
+        for i in 0..n {
+            for &s in &keep {
+                max_sim[i] = max_sim[i].max(sim[i][s]);
+            }
+        }
+        while keep.len() < ctx.retain.min(n) {
+            let mut best = usize::MAX;
+            let mut best_val = f32::INFINITY;
+            for i in 0..n {
+                if !keep.contains(&i) && max_sim[i] < best_val {
+                    best_val = max_sim[i];
+                    best = i;
+                }
+            }
+            keep.push(best);
+            for i in 0..n {
+                max_sim[i] = max_sim[i].max(sim[i][best]);
+            }
+        }
+        mask_from(&keep, n)
+    }
+}
+
+/// SCOPE: saliency-coverage greedy — marginal gain = importance + coverage
+/// improvement over the feature set.
+pub struct Scope;
+
+impl Pruner for Scope {
+    fn name(&self) -> &'static str {
+        "SCOPE"
+    }
+
+    fn prune(&self, ctx: &PruneContext) -> Vec<bool> {
+        let n = ctx.n();
+        let sim = ctx.similarity();
+        let lo = ctx.importance.iter().cloned().fold(f32::INFINITY, f32::min);
+        let hi = ctx.importance.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+        let range = (hi - lo).max(1e-9);
+        let imp: Vec<f32> = ctx.importance.iter().map(|&v| (v - lo) / range).collect();
+        let mut cover = vec![0.0f32; n]; // current max sim to selected
+        let mut keep: Vec<usize> = Vec::new();
+        while keep.len() < ctx.retain.min(n) {
+            let mut best = usize::MAX;
+            let mut best_gain = f32::NEG_INFINITY;
+            for i in 0..n {
+                if keep.contains(&i) {
+                    continue;
+                }
+                // coverage gain: how much adding i raises everyone's cover
+                let gain: f32 = (0..n)
+                    .step_by(2)
+                    .map(|j| (sim[j][i] - cover[j]).max(0.0))
+                    .sum::<f32>()
+                    / (n as f32 / 2.0);
+                let score = 0.5 * imp[i] + 0.5 * gain;
+                if score > best_gain {
+                    best_gain = score;
+                    best = i;
+                }
+            }
+            keep.push(best);
+            for j in 0..n {
+                cover[j] = cover[j].max(sim[j][best]);
+            }
+        }
+        mask_from(&keep, n)
+    }
+}
+
+/// VisionSelector proxy: the published method learns an end-to-end scorer;
+/// training-free proxy = importance blended with feature-norm saliency,
+/// with a soft redundancy penalty.
+pub struct VisionSelector;
+
+impl Pruner for VisionSelector {
+    fn name(&self) -> &'static str {
+        "VisionSelector"
+    }
+
+    fn prune(&self, ctx: &PruneContext) -> Vec<bool> {
+        let imp: Vec<f32> = ctx
+            .features
+            .iter()
+            .zip(ctx.importance)
+            .map(|(f, &a)| {
+                let norm = f.iter().map(|x| x * x).sum::<f32>().sqrt();
+                0.6 * a + 0.4 * norm
+            })
+            .collect();
+        let sim = ctx.similarity();
+        mask_from(&mmr_select(&imp, &sim, ctx.retain, 0.75), ctx.n())
+    }
+}
+
+/// HiPrune: hierarchical — anchor tokens by importance, then their most
+/// similar neighbours (keeps local context around anchors).
+pub struct HiPrune;
+
+impl Pruner for HiPrune {
+    fn name(&self) -> &'static str {
+        "HiPrune"
+    }
+
+    fn prune(&self, ctx: &PruneContext) -> Vec<bool> {
+        let n = ctx.n();
+        let anchors = topk_by(ctx.importance, (ctx.retain / 2).max(1));
+        let sim = ctx.similarity();
+        let mut keep = anchors.clone();
+        let mut i = 0;
+        while keep.len() < ctx.retain.min(n) {
+            let a = anchors[i % anchors.len()];
+            // nearest unkept neighbour of this anchor
+            let next = (0..n)
+                .filter(|j| !keep.contains(j))
+                .max_by(|&x, &y| sim[a][x].total_cmp(&sim[a][y]));
+            match next {
+                Some(j) => keep.push(j),
+                None => break,
+            }
+            i += 1;
+        }
+        mask_from(&keep, n)
+    }
+}
+
+/// Every Table 12 strategy, boxed for sweep benches.
+pub fn all_visual_pruners() -> Vec<Box<dyn Pruner>> {
+    vec![
+        Box::new(FastV),
+        Box::new(VisionZip),
+        Box::new(HiPrune),
+        Box::new(VisionSelector),
+        Box::new(DivPrune),
+        Box::new(Dart),
+        Box::new(VisPruner),
+        Box::new(Scope),
+        Box::new(IdPruner::default()),
+    ]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::VisionSceneGen;
+
+    fn scene_ctx() -> (Vec<Vec<f32>>, Vec<f32>) {
+        let gen = VisionSceneGen::new(96, 16, 4, 0);
+        let s = gen.scene(0);
+        (s.features, s.importance)
+    }
+
+    #[test]
+    fn every_pruner_respects_budget() {
+        let (feats, imp) = scene_ctx();
+        for retain in [8, 24, 48] {
+            let ctx = PruneContext { features: &feats, importance: &imp, retain };
+            for p in all_visual_pruners() {
+                let kept = p.apply(&ctx);
+                assert_eq!(kept.len(), retain, "{} at {retain}", p.name());
+                assert!(kept.windows(2).all(|w| w[0] < w[1]), "sorted order");
+            }
+        }
+    }
+
+    #[test]
+    fn fastv_keeps_most_important() {
+        let feats = vec![vec![1.0]; 5];
+        let imp = vec![0.1, 0.9, 0.3, 0.8, 0.2];
+        let ctx = PruneContext { features: &feats, importance: &imp, retain: 2 };
+        let kept = FastV.apply(&ctx);
+        assert_eq!(kept, vec![1, 3]);
+    }
+
+    #[test]
+    fn idpruner_beats_fastv_on_redundant_salient_set() {
+        // two identical high-importance tokens + one distinct medium one:
+        // FastV keeps the duplicates, IDPruner keeps one + the distinct
+        let feats = vec![
+            vec![1.0, 0.0, 0.0],
+            vec![1.0, 0.0, 0.0],
+            vec![0.0, 1.0, 0.0],
+            vec![0.0, 0.0, 0.2],
+        ];
+        let imp = vec![1.0, 0.98, 0.6, 0.1];
+        let ctx = PruneContext { features: &feats, importance: &imp, retain: 2 };
+        let fv = FastV.apply(&ctx);
+        let id = IdPruner::default().apply(&ctx);
+        assert_eq!(fv, vec![0, 1], "fastv falls for duplicates");
+        assert!(id.contains(&2), "idpruner diversifies: {id:?}");
+    }
+
+    #[test]
+    fn divprune_spreads_over_clusters() {
+        // 3 clusters, retain 3 -> one from each
+        let feats = vec![
+            vec![1.0, 0.0],
+            vec![0.99, 0.01],
+            vec![0.0, 1.0],
+            vec![0.01, 0.99],
+            vec![-1.0, 0.0],
+            vec![-0.99, -0.01],
+        ];
+        let imp = vec![0.5; 6];
+        let ctx = PruneContext { features: &feats, importance: &imp, retain: 3 };
+        let kept = DivPrune.apply(&ctx);
+        let clusters: std::collections::HashSet<usize> =
+            kept.iter().map(|&i| i / 2).collect();
+        assert_eq!(clusters.len(), 3, "{kept:?}");
+    }
+}

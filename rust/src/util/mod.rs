@@ -1,0 +1,17 @@
+//! Shared utilities: RNG, timing, statistics, table rendering, and a tiny
+//! property-testing harness.
+//!
+//! This environment is offline with only the `xla` crate's dependency
+//! closure vendored, so the usual suspects (rand, criterion, proptest,
+//! comfy-table) are hand-rolled here. See DESIGN.md §8.
+
+pub mod rng;
+pub mod stats;
+pub mod table;
+pub mod testing;
+pub mod timer;
+
+pub use rng::Rng;
+pub use stats::Summary;
+pub use table::Table;
+pub use timer::{bench, BenchResult, Timer};

@@ -1,0 +1,77 @@
+//! Mini property-testing harness (proptest is not available offline).
+//!
+//! `check(seed_count, |rng| ...)` runs a property closure against many
+//! seeded RNGs and reports the first failing seed, so failures reproduce
+//! deterministically: re-run with `check_one(seed, ...)`.
+
+use super::rng::Rng;
+
+/// Run `prop` for `cases` deterministic seeds. Panics with the failing seed
+/// on the first property violation (the closure should panic/assert).
+pub fn check<F: FnMut(&mut Rng)>(cases: u64, mut prop: F) {
+    for seed in 0..cases {
+        let mut rng = Rng::new(0xC0FFEE ^ seed.wrapping_mul(0x9E3779B9));
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            prop(&mut rng)
+        }));
+        if let Err(e) = result {
+            let msg = e
+                .downcast_ref::<String>()
+                .cloned()
+                .or_else(|| e.downcast_ref::<&str>().map(|s| s.to_string()))
+                .unwrap_or_else(|| "<non-string panic>".into());
+            panic!("property failed at seed {seed}: {msg}");
+        }
+    }
+}
+
+/// Re-run a single failing case.
+pub fn check_one<F: FnMut(&mut Rng)>(seed: u64, mut prop: F) {
+    let mut rng = Rng::new(0xC0FFEE ^ seed.wrapping_mul(0x9E3779B9));
+    prop(&mut rng);
+}
+
+/// Assert two f32 slices are element-wise close.
+#[track_caller]
+pub fn assert_allclose(a: &[f32], b: &[f32], rtol: f32, atol: f32) {
+    assert_eq!(a.len(), b.len(), "length mismatch {} vs {}", a.len(), b.len());
+    for (i, (x, y)) in a.iter().zip(b).enumerate() {
+        let tol = atol + rtol * y.abs();
+        assert!(
+            (x - y).abs() <= tol,
+            "allclose failed at [{i}]: {x} vs {y} (tol {tol})"
+        );
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn check_passes_trivial_property() {
+        check(16, |rng| {
+            let x = rng.f32();
+            assert!((0.0..1.0).contains(&x));
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property failed at seed")]
+    fn check_reports_failing_seed() {
+        check(16, |rng| {
+            assert!(rng.f32() < 0.5, "coin came up heads");
+        });
+    }
+
+    #[test]
+    fn allclose_accepts_equal() {
+        assert_allclose(&[1.0, 2.0], &[1.0, 2.0 + 1e-7], 1e-5, 1e-6);
+    }
+
+    #[test]
+    #[should_panic(expected = "allclose failed")]
+    fn allclose_rejects_far() {
+        assert_allclose(&[1.0], &[2.0], 1e-5, 1e-6);
+    }
+}

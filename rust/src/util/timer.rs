@@ -1,0 +1,91 @@
+//! Wall-clock timing + a hand-rolled bench harness (criterion is not
+//! available offline): warmup, fixed iteration count, median-of-N reporting.
+
+use std::time::{Duration, Instant};
+
+pub struct Timer {
+    start: Instant,
+}
+
+impl Timer {
+    pub fn start() -> Self {
+        Timer { start: Instant::now() }
+    }
+
+    pub fn elapsed(&self) -> Duration {
+        self.start.elapsed()
+    }
+
+    pub fn elapsed_ms(&self) -> f64 {
+        self.start.elapsed().as_secs_f64() * 1e3
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct BenchResult {
+    pub name: String,
+    pub iters: usize,
+    /// per-iteration wall time, seconds
+    pub median_s: f64,
+    pub mean_s: f64,
+    pub min_s: f64,
+}
+
+impl BenchResult {
+    pub fn median_ms(&self) -> f64 {
+        self.median_s * 1e3
+    }
+
+    pub fn per_sec(&self) -> f64 {
+        if self.median_s > 0.0 {
+            1.0 / self.median_s
+        } else {
+            f64::INFINITY
+        }
+    }
+}
+
+/// Run `f` `iters` times after `warmup` untimed runs; report median/mean/min.
+pub fn bench<F: FnMut()>(name: &str, warmup: usize, iters: usize, mut f: F) -> BenchResult {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut samples = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t = Instant::now();
+        f();
+        samples.push(t.elapsed().as_secs_f64());
+    }
+    samples.sort_by(|a, b| a.total_cmp(b));
+    let median = samples[samples.len() / 2];
+    let mean = samples.iter().sum::<f64>() / samples.len() as f64;
+    BenchResult {
+        name: name.to_string(),
+        iters,
+        median_s: median,
+        mean_s: mean,
+        min_s: samples[0],
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_counts_iterations() {
+        let mut n = 0usize;
+        let r = bench("noop", 2, 5, || n += 1);
+        assert_eq!(n, 7);
+        assert_eq!(r.iters, 5);
+        assert!(r.median_s >= 0.0);
+        assert!(r.min_s <= r.median_s);
+    }
+
+    #[test]
+    fn timer_monotonic() {
+        let t = Timer::start();
+        std::thread::sleep(Duration::from_millis(2));
+        assert!(t.elapsed_ms() >= 1.0);
+    }
+}
