@@ -20,11 +20,20 @@ pub enum Yaml {
     Map(BTreeMap<String, Yaml>),
 }
 
-#[derive(Debug, thiserror::Error)]
+#[derive(Debug)]
 pub enum YamlError {
-    #[error("line {0}: {1}")]
     Parse(usize, String),
 }
+
+impl fmt::Display for YamlError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            YamlError::Parse(line, msg) => write!(f, "line {line}: {msg}"),
+        }
+    }
+}
+
+impl std::error::Error for YamlError {}
 
 impl Yaml {
     pub fn get(&self, key: &str) -> Option<&Yaml> {

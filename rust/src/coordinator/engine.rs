@@ -5,7 +5,7 @@ use crate::eval;
 use crate::models::Transformer;
 use crate::quant::{
     self, awq::Awq, gptq::Gptq, leptoquant::LeptoQuant, AffineQuantizer, Granularity,
-    Seq2Quantizer, TernaryQuantizer, WeightQuantizer,
+    Seq2Quantizer, TernaryQuantizer,
 };
 use crate::sparse_attn::SparseAlgo;
 use crate::tensor::Tensor;
@@ -86,18 +86,6 @@ impl CompressEngine {
             }
             "fp8_dynamic" | "w4a8" => {
                 // weight-side QDQ (activation QDQ is a runtime concern)
-                struct Fp8W;
-                impl WeightQuantizer for Fp8W {
-                    fn name(&self) -> &'static str {
-                        "fp8"
-                    }
-                    fn bits(&self) -> f64 {
-                        8.0
-                    }
-                    fn qdq(&self, w: &mut [f32], _n: usize, _k: usize) {
-                        quant::fp8::qdq_slice_scaled(w, quant::Fp8Format::E4M3);
-                    }
-                }
                 if algo == "w4a8" {
                     model.apply_quantizer(&AffineQuantizer::new(
                         4,
@@ -105,7 +93,7 @@ impl CompressEngine {
                     ));
                     4.25
                 } else {
-                    model.apply_quantizer(&Fp8W);
+                    model.apply_quantizer(&quant::Fp8WeightQuantizer);
                     8.0
                 }
             }
@@ -344,43 +332,38 @@ impl CompressEngine {
 mod tests {
     use super::*;
 
-    fn have_artifacts() -> bool {
-        std::path::Path::new("artifacts/weights.bin").exists()
-    }
-
+    /// Hermetic engine over the in-memory fixture model + its rule corpus:
+    /// no artifacts/ required, so these run on a clean checkout.
     fn engine(method: &str, algo: &str, extra: &str) -> CompressEngine {
         let src = format!(
-            "global:\n  save_path: target/test-out\nmodel:\n  name: tiny-target\n\
+            "global:\n  save_path: target/test-output/engine\nmodel:\n  name: tiny-fixture\n\
              compression:\n  method: {method}\n  {method}:\n    algo: {algo}\n{extra}\
-             dataset:\n  kind: artifact\n  num_samples: 8\n  seq_len: 48\n"
+             dataset:\n  kind: fixture\n  num_samples: 8\n  seq_len: 40\n"
         );
         CompressEngine::new(SlimConfig::from_str(&src).unwrap()).unwrap()
     }
 
     #[test]
     fn int8_job_near_lossless() {
-        if !have_artifacts() {
-            return;
-        }
         let r = engine("quantization", "int8", "").run().unwrap();
-        assert!(r.metric_after < r.metric_before + 0.02, "{r:?}");
+        assert!(r.metric_after < r.metric_before + 0.05, "{r:?}");
     }
 
     #[test]
-    fn seq2_ptq_job_degrades_vs_int4() {
-        if !have_artifacts() {
-            return;
-        }
+    fn ternary_ptq_job_degrades_vs_int4() {
+        // the paper-shaped PTQ ladder: sub-2-bit PTQ visibly collapses
+        // while int4 stays close to the fp32 reference
         let int4 = engine("quantization", "int4", "").run().unwrap();
-        let seq2 = engine("quantization", "seq2", "").run().unwrap();
-        assert!(seq2.metric_after > int4.metric_after, "{seq2:?} vs {int4:?}");
+        let tern = engine("quantization", "ternary", "").run().unwrap();
+        assert!(
+            tern.metric_after > int4.metric_after + 0.2,
+            "{tern:?} vs {int4:?}"
+        );
+        assert!(int4.metric_after < int4.metric_before + 0.6, "{int4:?}");
     }
 
     #[test]
     fn low_memory_budget_bounds_peak() {
-        if !have_artifacts() {
-            return;
-        }
         let full = engine("quantization", "gptq", "    low_memory_budget_layers: 0\n")
             .run()
             .unwrap();
@@ -394,19 +377,16 @@ mod tests {
 
     #[test]
     fn sparse_attn_job_runs() {
-        if !have_artifacts() {
-            return;
-        }
         let r = engine("sparse_attn", "stem", "    ratio: 0.3\n").run().unwrap();
         assert!(r.compression < 0.95, "{r:?}");
         assert!(r.metric_after >= 0.0);
+        // one scored note per long-context task family, incl. the needle task
+        assert_eq!(r.notes.len(), crate::data::LongCtxTaskKind::all().len(), "{r:?}");
+        assert!(r.notes.iter().any(|n| n.starts_with("SYN:")), "{r:?}");
     }
 
     #[test]
     fn token_prune_job_runs() {
-        if !have_artifacts() {
-            return;
-        }
         let r = engine("token_prune", "idpruner", "    ratio: 0.25\n").run().unwrap();
         assert!(r.metric_after > 0.3, "{r:?}");
     }

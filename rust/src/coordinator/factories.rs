@@ -12,10 +12,27 @@ pub struct ModelFactory;
 
 impl ModelFactory {
     pub fn registered() -> &'static [&'static str] {
-        &["tiny-target", "tiny-draft", "tiny-small"]
+        &[
+            "tiny-target",
+            "tiny-draft",
+            "tiny-small",
+            "tiny-fixture",
+            "tiny-fixture-draft",
+        ]
     }
 
     pub fn load(cfg: &SlimConfig) -> Result<Transformer> {
+        // hermetic fixture models need no artifacts/ on disk — the whole
+        // pipeline runs in-memory (seeded by global.seed)
+        match cfg.model.name.as_str() {
+            "tiny-fixture" => {
+                return Ok(crate::util::fixtures::fixture_target(cfg.global.seed))
+            }
+            "tiny-fixture-draft" => {
+                return Ok(crate::util::fixtures::fixture_draft(cfg.global.seed))
+            }
+            _ => {}
+        }
         let ws = WeightStore::load(&cfg.model.artifacts_dir)
             .context("loading weight store")?;
         let key = match cfg.model.name.as_str() {
@@ -42,8 +59,14 @@ pub struct Datasets {
 
 impl DataFactory {
     pub fn load(cfg: &SlimConfig) -> Result<Datasets> {
+        let fixture_spec = crate::util::fixtures::FixtureSpec::default();
         let eval = match cfg.dataset.kind.as_str() {
             "synthetic" => data::markov_corpus(32_768, cfg.dataset.seed ^ 0xE7A1),
+            "fixture" => crate::util::fixtures::fixture_corpus(
+                &fixture_spec,
+                16_384,
+                cfg.dataset.seed ^ 0xE7A1,
+            ),
             "artifact" => data::load_corpus(&format!(
                 "{}/eval_corpus.bin",
                 cfg.model.artifacts_dir
@@ -55,6 +78,9 @@ impl DataFactory {
                 "{}/train_corpus.bin",
                 cfg.model.artifacts_dir
             ))?,
+            "fixture" => {
+                crate::util::fixtures::fixture_corpus(&fixture_spec, 32_768, cfg.dataset.seed)
+            }
             _ => data::markov_corpus(65_536, cfg.dataset.seed),
         };
         let mut calib = Vec::with_capacity(cfg.dataset.num_samples);
@@ -147,5 +173,25 @@ mod tests {
         let mut c = cfg("quantization", "int8");
         c.model.name = "gpt-4".into();
         assert!(ModelFactory::load(&c).is_err());
+    }
+
+    #[test]
+    fn fixture_factories_are_hermetic() {
+        // no artifacts/ on disk needed for the fixture model + corpus
+        let mut c = cfg("quantization", "int8");
+        c.model.name = "tiny-fixture".into();
+        c.dataset.kind = "fixture".into();
+        let m = ModelFactory::load(&c).unwrap();
+        assert_eq!(m.cfg.vocab, 256);
+        let ds = DataFactory::load(&c).unwrap();
+        assert_eq!(ds.calib.len(), c.dataset.num_samples);
+        assert!(ds.eval.iter().all(|&t| (t as usize) < m.cfg.d_model));
+        let d = ModelFactory::load(&{
+            let mut c2 = c.clone();
+            c2.model.name = "tiny-fixture-draft".into();
+            c2
+        })
+        .unwrap();
+        assert_eq!(d.cfg.n_layers, 1);
     }
 }

@@ -323,19 +323,18 @@ impl Transformer {
 mod tests {
     use super::*;
     use crate::quant::AffineQuantizer;
+    use crate::util::fixtures::fixture_target;
 
-    fn load() -> Option<Transformer> {
-        if !std::path::Path::new("artifacts/weights.bin").exists() {
-            eprintln!("skipping: run `make artifacts` first");
-            return None;
-        }
-        let ws = WeightStore::load("artifacts").unwrap();
-        Some(Transformer::from_store(&ws, "target").unwrap())
+    // Structural invariants run hermetically on the in-memory fixture
+    // model (d_model 32, vocab 256); only the trained-artifact check below
+    // is `#[ignore]`d behind `make artifacts`.
+    fn model() -> Transformer {
+        fixture_target(0)
     }
 
     #[test]
     fn forward_shapes_and_finite() {
-        let Some(m) = load() else { return };
+        let m = model();
         let toks = [1u8, 5, 9, 60, 2];
         let logits = m.forward(&toks, &AttnOverride::None);
         assert_eq!(logits.dims(), &[5, 256]);
@@ -344,7 +343,7 @@ mod tests {
 
     #[test]
     fn causality_holds() {
-        let Some(m) = load() else { return };
+        let m = model();
         let a = m.forward(&[3, 7, 11, 13], &AttnOverride::None);
         let b = m.forward(&[3, 7, 11, 99], &AttnOverride::None);
         // positions 0..3 unaffected by the change at position 3
@@ -356,7 +355,7 @@ mod tests {
 
     #[test]
     fn dense_mask_override_matches_no_override() {
-        let Some(m) = load() else { return };
+        let m = model();
         let toks = [2u8, 4, 8, 16, 32, 48];
         let t = toks.len();
         let mask = vec![true; t * t];
@@ -366,10 +365,13 @@ mod tests {
     }
 
     #[test]
+    #[ignore = "needs trained artifacts/ on disk — run `make artifacts`, then `cargo test -- --ignored`"]
     fn trained_model_predicts_template() {
         // the corpus templates ("Angel", "quant", ...) should be learned:
         // given "Ange", 'l' should rank highly
-        let Some(m) = load() else { return };
+        let ws = WeightStore::load("artifacts")
+            .expect("artifacts missing — run `make artifacts` first");
+        let m = Transformer::from_store(&ws, "target").unwrap();
         let prompt = b"Ange";
         let logits = m.next_logits(prompt, &AttnOverride::None);
         let mut ranked: Vec<usize> = (0..256).collect();
@@ -380,25 +382,26 @@ mod tests {
 
     #[test]
     fn quantizer_changes_weights_but_model_runs() {
-        let Some(mut m) = load() else { return };
-        let before = m.next_logits(b"Angel", &AttnOverride::None);
+        let mut m = model();
+        let before = m.next_logits(&[1, 6, 11], &AttnOverride::None);
         m.apply_quantizer(&AffineQuantizer::int4_group32());
-        let after = m.next_logits(b"Angel", &AttnOverride::None);
+        let after = m.next_logits(&[1, 6, 11], &AttnOverride::None);
         assert_ne!(before, after);
-        // int4 keeps the argmax on an easy continuation
+        // int4 keeps the logits finite
         assert!(after.iter().all(|v| v.is_finite()));
     }
 
     #[test]
     fn capture_shapes() {
-        let Some(m) = load() else { return };
+        let m = model();
+        let (d, d_ff) = (m.cfg.d_model, m.cfg.d_ff);
         let caps = m.capture_activations(&[1, 2, 3, 4]);
-        assert_eq!(caps.len(), 4);
-        assert_eq!(caps[0].attn_in.dims(), &[4, 128]);
-        assert_eq!(caps[0].mlp_mid.dims(), &[4, 256]);
+        assert_eq!(caps.len(), m.cfg.n_layers);
+        assert_eq!(caps[0].attn_in.dims(), &[4, d]);
+        assert_eq!(caps[0].mlp_mid.dims(), &[4, d_ff]);
         let qk = m.capture_qk(&[1, 2, 3, 4]);
-        assert_eq!(qk.len(), 4);
-        assert_eq!(qk[0].0.dims(), &[4, 128]);
-        assert_eq!(qk[0].2.dims(), &[4, 128]);
+        assert_eq!(qk.len(), m.cfg.n_layers);
+        assert_eq!(qk[0].0.dims(), &[4, d]);
+        assert_eq!(qk[0].2.dims(), &[4, d]);
     }
 }

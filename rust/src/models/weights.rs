@@ -96,17 +96,15 @@ impl WeightStore {
 mod tests {
     use super::*;
 
-    fn have_artifacts() -> bool {
-        std::path::Path::new("artifacts/weights.bin").exists()
+    fn load_artifacts() -> WeightStore {
+        WeightStore::load("artifacts")
+            .expect("artifacts missing — run `make artifacts` before `cargo test -- --ignored`")
     }
 
     #[test]
+    #[ignore = "needs artifacts/ on disk — run `make artifacts`, then `cargo test -- --ignored`"]
     fn loads_real_artifacts() {
-        if !have_artifacts() {
-            eprintln!("skipping: run `make artifacts` first");
-            return;
-        }
-        let ws = WeightStore::load("artifacts").unwrap();
+        let ws = load_artifacts();
         let (embed, shape) = ws.get("target", "embed").unwrap();
         assert_eq!(shape, &[256, 128]);
         assert_eq!(embed.len(), 256 * 128);
@@ -119,11 +117,16 @@ mod tests {
     }
 
     #[test]
+    #[ignore = "needs artifacts/ on disk — run `make artifacts`, then `cargo test -- --ignored`"]
     fn missing_param_errors() {
-        if !have_artifacts() {
-            return;
-        }
-        let ws = WeightStore::load("artifacts").unwrap();
+        let ws = load_artifacts();
         assert!(ws.get("target", "nope").is_err());
+    }
+
+    #[test]
+    fn missing_store_is_an_error_not_a_skip() {
+        // a clean checkout has no artifacts — loading must fail loudly
+        let r = WeightStore::load("target/definitely-not-artifacts");
+        assert!(r.is_err());
     }
 }

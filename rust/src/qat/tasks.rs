@@ -22,7 +22,7 @@ impl ClassTask {
     /// The five tasks of the Table 2 analogue.
     pub fn suite(dim: usize, seed: u64) -> Vec<ClassTask> {
         ["piqa-s", "arc-e-s", "arc-c-s", "hels-s", "wing-s"]
-            .iter()
+            .into_iter()
             .enumerate()
             .map(|(i, name)| ClassTask::new(name, dim, 4 + (i % 2) * 4, i, seed + i as u64))
             .collect()

@@ -75,6 +75,28 @@ pub fn qdq_slice_with_scale(xs: &mut [f32], fmt: Fp8Format, scale: f32) {
     }
 }
 
+/// Per-tensor absmax-scaled FP8-E4M3 weight QDQ as a [`WeightQuantizer`] —
+/// the weight-side transform of the `fp8_dynamic` deployment mode
+/// (activation QDQ is a runtime concern handled by LeptoQuant's scales).
+///
+/// [`WeightQuantizer`]: crate::quant::WeightQuantizer
+#[derive(Clone, Copy, Debug, Default)]
+pub struct Fp8WeightQuantizer;
+
+impl crate::quant::WeightQuantizer for Fp8WeightQuantizer {
+    fn name(&self) -> &'static str {
+        "fp8"
+    }
+
+    fn bits(&self) -> f64 {
+        8.0
+    }
+
+    fn qdq(&self, w: &mut [f32], _n: usize, _k: usize) {
+        qdq_slice_scaled(w, Fp8Format::E4M3);
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

@@ -24,7 +24,7 @@ pub mod tequila;
 pub mod ternary;
 
 pub use calib::CalibStats;
-pub use fp8::{fp8_e4m3_qdq, fp8_e5m2_qdq, Fp8Format};
+pub use fp8::{fp8_e4m3_qdq, fp8_e5m2_qdq, Fp8Format, Fp8WeightQuantizer};
 pub use int_affine::{AffineQuantizer, Granularity};
 pub use leptoquant::LeptoQuant;
 pub use seq2::Seq2Quantizer;

@@ -7,6 +7,16 @@
 //! ids (see /opt/xla-example/README.md and DESIGN.md §2).
 
 pub mod artifact;
+
+/// Real PJRT executor — needs the vendored `xla` crate (see Cargo.toml's
+/// `pjrt` feature notes). Without the feature, an API-compatible stub is
+/// compiled instead so the rest of the toolkit (serving engine, spec
+/// decode, CLI) builds hermetically; stub constructors return a clear
+/// runtime error rather than silently succeeding.
+#[cfg(feature = "pjrt")]
+pub mod executor;
+#[cfg(not(feature = "pjrt"))]
+#[path = "executor_stub.rs"]
 pub mod executor;
 
 pub use artifact::ArtifactRegistry;

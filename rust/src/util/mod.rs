@@ -5,6 +5,7 @@
 //! closure vendored, so the usual suspects (rand, criterion, proptest,
 //! comfy-table) are hand-rolled here. See DESIGN.md §8.
 
+pub mod fixtures;
 pub mod rng;
 pub mod stats;
 pub mod table;

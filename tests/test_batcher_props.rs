@@ -1,0 +1,139 @@
+//! Property-style tests for the serving batcher: randomized request
+//! streams driven through `Batcher::try_form` must uphold the three
+//! serving contracts — the batch cap, the wait deadline, and FIFO order.
+//! Failures reproduce deterministically via the seeded harness in
+//! `angelslim::util::testing`.
+
+use angelslim::data::TokenRequest;
+use angelslim::server::{Batcher, BatcherCfg};
+use angelslim::util::testing::check;
+use angelslim::util::Rng;
+
+fn req(id: u64, arrival_ms: f64) -> TokenRequest {
+    TokenRequest { id, prompt: vec![1, 2, 3], max_new_tokens: 4, arrival_ms }
+}
+
+/// Drive one randomized scenario; calls `on_batch(now, batch_ids)` for
+/// every formed batch and `on_wait(now, oldest_arrival)` whenever the
+/// batcher declines to form one while requests are queued.
+fn drive(
+    rng: &mut Rng,
+    cfg: BatcherCfg,
+    mut on_batch: impl FnMut(f64, &[u64]),
+    mut on_wait: impl FnMut(f64, f64),
+) {
+    let mut batcher = Batcher::new(cfg);
+    // arrival times: nondecreasing with random gaps
+    let n = 20 + rng.below(40);
+    let mut arrivals = Vec::with_capacity(n);
+    let mut t = 0.0f64;
+    for _ in 0..n {
+        t += rng.f64() * 6.0;
+        arrivals.push(t);
+    }
+
+    let mut queued: std::collections::VecDeque<(u64, f64)> = Default::default();
+    let mut next = 0usize;
+    let mut clock = 0.0f64;
+    while next < n || queued.front().is_some() {
+        // admit all arrivals up to the clock
+        while next < n && arrivals[next] <= clock {
+            batcher.push(req(next as u64, arrivals[next]));
+            queued.push_back((next as u64, arrivals[next]));
+            next += 1;
+        }
+        match batcher.try_form(clock) {
+            Some(batch) => {
+                let ids: Vec<u64> = batch.requests.iter().map(|r| r.id).collect();
+                for _ in &ids {
+                    queued.pop_front();
+                }
+                on_batch(clock, &ids);
+            }
+            None => {
+                if let Some(&(_, oldest)) = queued.front() {
+                    on_wait(clock, oldest);
+                }
+                clock += 0.25 + rng.f64() * 2.0;
+            }
+        }
+        if next < n && queued.is_empty() {
+            clock = clock.max(arrivals[next]);
+        }
+    }
+}
+
+fn random_cfg(rng: &mut Rng) -> BatcherCfg {
+    BatcherCfg {
+        max_batch: 1 + rng.below(9),
+        max_wait_ms: 0.5 + rng.f64() * 12.0,
+    }
+}
+
+#[test]
+fn batch_size_never_exceeds_max() {
+    check(24, |rng| {
+        let cfg = random_cfg(rng);
+        let max_batch = cfg.max_batch;
+        drive(
+            rng,
+            cfg,
+            |_, ids| {
+                assert!(!ids.is_empty(), "formed an empty batch");
+                assert!(ids.len() <= max_batch, "batch of {} > cap {max_batch}", ids.len());
+            },
+            |_, _| {},
+        );
+    });
+}
+
+#[test]
+fn oldest_request_never_waits_past_deadline_unserved() {
+    check(24, |rng| {
+        let cfg = random_cfg(rng);
+        let max_wait = cfg.max_wait_ms;
+        drive(
+            rng,
+            cfg,
+            |_, _| {},
+            |now, oldest_arrival| {
+                // declining to form a batch is only legal while the oldest
+                // queued request is still inside the wait window
+                let waited = now - oldest_arrival;
+                assert!(
+                    waited < max_wait,
+                    "oldest waited {waited:.2}ms with deadline {max_wait:.2}ms and no batch"
+                );
+            },
+        );
+    });
+}
+
+#[test]
+fn fifo_order_preserved_across_batches() {
+    check(24, |rng| {
+        let cfg = random_cfg(rng);
+        let mut expected_next = 0u64;
+        drive(
+            rng,
+            cfg,
+            |_, ids| {
+                for &id in ids {
+                    assert_eq!(id, expected_next, "out-of-order drain: {ids:?}");
+                    expected_next += 1;
+                }
+            },
+            |_, _| {},
+        );
+    });
+}
+
+#[test]
+fn all_requests_eventually_served() {
+    check(24, |rng| {
+        let cfg = random_cfg(rng);
+        let mut served = 0usize;
+        drive(rng, cfg, |_, ids| served += ids.len(), |_, _| {});
+        assert!(served >= 20, "only {served} requests served");
+    });
+}

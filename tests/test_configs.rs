@@ -1,0 +1,33 @@
+//! Every shipped config in configs/ must parse into a valid `SlimConfig`
+//! and name a registered method/algorithm — the same validation
+//! `angelslim list` performs.
+
+use angelslim::config::SlimConfig;
+use angelslim::coordinator::SlimFactory;
+
+#[test]
+fn all_shipped_configs_parse_and_validate() {
+    let mut seen = 0usize;
+    for entry in std::fs::read_dir("configs").expect("configs/ directory missing") {
+        let path = entry.unwrap().path();
+        if path.extension().map(|e| e == "yaml").unwrap_or(false) {
+            let p = path.to_str().unwrap();
+            let cfg = SlimConfig::from_file(p)
+                .unwrap_or_else(|e| panic!("config {p} failed to parse: {e:#}"));
+            SlimFactory::validate(&cfg)
+                .unwrap_or_else(|e| panic!("config {p} failed validation: {e:#}"));
+            seen += 1;
+        }
+    }
+    // guard against the directory silently emptying out
+    assert!(seen >= 4, "expected at least 4 shipped configs, found {seen}");
+}
+
+#[test]
+fn fixture_configs_target_registered_fixture_model() {
+    let cfg = SlimConfig::from_file("configs/quant_int4_fixture.yaml").unwrap();
+    assert_eq!(cfg.model.name, "tiny-fixture");
+    assert_eq!(cfg.dataset.kind, "fixture");
+    assert_eq!(cfg.compression.method, "quantization");
+    assert_eq!(cfg.compression.algo, "int4");
+}

@@ -1,0 +1,249 @@
+//! Hermetic end-to-end pipeline tests — the whole paper flow (calibrate →
+//! quantize → perplexity eval → speculative decode → batch + serve →
+//! sparse-attention / token-prune invariants) driven through a tiny
+//! deterministic in-memory fixture transformer. No `artifacts/` on disk,
+//! no PJRT, no python build: this is the gate `cargo test -q` runs on a
+//! clean checkout.
+//!
+//! Fixture ↔ paper mapping (see rust/src/util/fixtures.rs):
+//!   * `fixture_target` / `fixture_draft` — the target/draft model pair
+//!     (draft encodes the same rule: the Eagle3 "training-aligned" setup)
+//!   * `fixture_corpus`                  — the calibration/eval dataset
+//!   * PTQ ladder fp8 → int4 → seq2 → ternary — §2's quantization suite
+//!   * SpecDecoder vs VanillaDecoder     — §3's lossless speculative loop
+//!   * Batcher + ServingEngine           — the deployment layer
+//!   * SparseAlgo masks on captured Q/K/V — §4.1's pattern estimators
+
+use angelslim::config::SlimConfig;
+use angelslim::coordinator::CompressEngine;
+use angelslim::data::RequestGen;
+use angelslim::eval::corpus_nll;
+use angelslim::models::{AttnOverride, Transformer};
+use angelslim::quant::{
+    AffineQuantizer, Fp8WeightQuantizer, Seq2Quantizer, TernaryQuantizer,
+};
+use angelslim::server::{BatcherCfg, ServingEngine};
+use angelslim::sparse_attn::SparseAlgo;
+use angelslim::spec_decode::{SpecDecoder, VanillaDecoder};
+use angelslim::util::fixtures::{
+    fixture_corpus, fixture_draft, fixture_target, fixture_transformer, FixtureSpec,
+};
+use angelslim::util::Rng;
+
+fn nll_of(m: &Transformer, corpus: &[u8]) -> f64 {
+    corpus_nll(m, corpus, 40, 6).unwrap()
+}
+
+/// The paper-shaped PTQ ladder on one model: quantize every linear with
+/// each format and check perplexity on the rule corpus orders the formats
+/// by coarseness (fp32 ≈ fp8 ≤ int4, with 2-bit PTQ degrading and ternary
+/// PTQ collapsing).
+#[test]
+fn quantization_ladder_orders_by_coarseness() {
+    let spec = FixtureSpec::default();
+    let corpus = fixture_corpus(&spec, 8_192, 11);
+    let base_model = fixture_target(1);
+    let base = nll_of(&base_model, &corpus);
+    assert!(base < 1.0, "fixture failed to encode the rule: NLL {base}");
+
+    let quantized_nll = |q: &dyn angelslim::quant::WeightQuantizer| -> f64 {
+        let mut m = base_model.clone();
+        m.apply_quantizer(q);
+        nll_of(&m, &corpus)
+    };
+    let fp8 = quantized_nll(&Fp8WeightQuantizer);
+    let int4 = quantized_nll(&AffineQuantizer::int4_group32());
+    let seq2 = quantized_nll(&Seq2Quantizer::tuned(32));
+    let tern = quantized_nll(&TernaryQuantizer::default());
+
+    // fp8 is near-lossless on this weight distribution
+    assert!((fp8 - base).abs() < 0.15, "fp8 {fp8} vs fp32 {base}");
+    // int4 group-32 stays close to the reference
+    assert!(int4 < base + 0.6, "int4 {int4} vs fp32 {base}");
+    // ternary's per-row alpha crushes the planted signal — visible collapse
+    assert!(tern > base + 0.4, "ternary {tern} should collapse vs fp32 {base}");
+    assert!(fp8 < tern && int4 < tern, "fp8 {fp8} / int4 {int4} / ternary {tern}");
+    // 2-bit SEQ amplifies the noise floor (no zero level) so it must sit
+    // strictly between int4 and the ternary collapse — the paper ordering
+    assert!(base <= seq2 + 0.1, "fp32 {base} vs seq2 {seq2}");
+    assert!(int4 < seq2, "int4 {int4} must beat seq2 {seq2}");
+    assert!(seq2 < tern - 0.3, "seq2 {seq2} vs ternary {tern}");
+}
+
+/// Greedy speculative decoding must be output-identical to vanilla
+/// decoding whether the draft agrees (high acceptance) or not.
+#[test]
+fn speculative_decode_is_lossless_and_accepts_aligned_draft() {
+    let spec = FixtureSpec::default();
+    let corpus = fixture_corpus(&spec, 2_048, 5);
+    let target = fixture_target(2);
+    let aligned_draft = fixture_draft(2);
+    let prompt = &corpus[64..72];
+    let mut rng = Rng::new(0);
+
+    let (vseq, vstats) = VanillaDecoder::new(&target)
+        .generate(prompt, 24, &mut rng)
+        .unwrap();
+    let (sseq, sstats) = SpecDecoder::new(&aligned_draft, &target, 3)
+        .generate(prompt, 24, &mut rng)
+        .unwrap();
+    assert_eq!(vseq, sseq, "greedy spec decode must preserve outputs");
+    assert_eq!(vstats.generated, sstats.generated);
+    assert!(sstats.al() > 1.5, "aligned draft AL {}", sstats.al());
+    assert!(sstats.acceptance_rate() > 0.3, "{}", sstats.acceptance_rate());
+    assert!(sstats.steps < vstats.steps, "spec must need fewer target steps");
+
+    // a draft encoding a DIFFERENT rule must not change outputs either
+    let wrong_draft = fixture_transformer(&FixtureSpec {
+        shift: 9,
+        seed: 77,
+        ..FixtureSpec::default()
+    });
+    let (wseq, wstats) = SpecDecoder::new(&wrong_draft, &target, 3)
+        .generate(prompt, 24, &mut rng)
+        .unwrap();
+    assert_eq!(vseq, wseq, "correctness must not depend on draft quality");
+    assert!(wstats.acceptance_rate() < 0.5, "{}", wstats.acceptance_rate());
+}
+
+/// The serving layer end-to-end: request stream → batcher → decode loop →
+/// report. Vanilla and speculative serving must complete every request
+/// with identical outputs; speculative serving must commit >1 token per
+/// target step on the aligned draft.
+#[test]
+fn serving_engine_end_to_end_report_is_sane() {
+    let spec = FixtureSpec::default();
+    let corpus = fixture_corpus(&spec, 8_192, 9);
+    let target = fixture_target(3);
+    let draft = fixture_draft(3);
+
+    let make_requests = || {
+        let mut gen = RequestGen::new(corpus.clone(), 42);
+        gen.prompt_len = 8;
+        gen.max_new_tokens = 12;
+        gen.take(10)
+    };
+
+    let vanilla = ServingEngine::serve::<Transformer, _>(
+        make_requests(),
+        &target,
+        None,
+        BatcherCfg::default(),
+        0,
+    )
+    .unwrap();
+    let spec_report = ServingEngine::serve(
+        make_requests(),
+        &target,
+        Some((&draft, 3)),
+        BatcherCfg::default(),
+        0,
+    )
+    .unwrap();
+
+    for report in [&vanilla, &spec_report] {
+        assert_eq!(report.completed.len(), 10);
+        assert!(report.completed.iter().all(|c| c.generated == 12), "budget respected");
+        assert!(report.total_tokens == 120);
+        assert!(report.tps() > 0.0);
+        let lat = report.latency_summary();
+        let ttft = report.ttft_summary();
+        assert!(lat.p50 <= lat.p90 + 1e-9 && lat.p90 <= lat.max + 1e-9);
+        assert!(ttft.min >= 0.0 && ttft.max >= ttft.min);
+        assert!(
+            report.completed.iter().all(|c| c.ttft_ms <= c.total_ms + 1e-9),
+            "first token cannot land after completion"
+        );
+    }
+    assert_eq!(vanilla.mean_al, 1.0);
+    assert!(spec_report.mean_al > 1.5, "AL {}", spec_report.mean_al);
+    for (a, b) in vanilla.completed.iter().zip(&spec_report.completed) {
+        assert_eq!(a.id, b.id);
+        assert_eq!(a.output, b.output, "spec serving changed request {}", a.id);
+    }
+}
+
+/// Config-file pipeline: YAML → CompressEngine over the fixture model and
+/// fixture dataset, for a calibrated (GPTQ) job under the low-memory
+/// ledger — the §2.3 "single-GPU calibration" accounting.
+#[test]
+fn yaml_gptq_job_with_low_memory_ledger() {
+    let cfg = |budget: usize| {
+        format!(
+            "global:\n  save_path: target/test-output/hermetic\n  seed: 7\n\
+             model:\n  name: tiny-fixture\n\
+             compression:\n  method: quantization\n  quantization:\n    algo: gptq\n    low_memory_budget_layers: {budget}\n\
+             dataset:\n  kind: fixture\n  num_samples: 8\n  seq_len: 40\n"
+        )
+    };
+    let full = CompressEngine::new(SlimConfig::from_str(&cfg(0)).unwrap())
+        .unwrap()
+        .run()
+        .unwrap();
+    let lo = CompressEngine::new(SlimConfig::from_str(&cfg(1)).unwrap())
+        .unwrap()
+        .run()
+        .unwrap();
+    assert!(full.metric_before < 1.0, "{full:?}");
+    assert!(full.metric_after < full.metric_before + 0.8, "gptq must not collapse: {full:?}");
+    assert!(lo.peak_calib_bytes < full.peak_calib_bytes, "{lo:?} vs {full:?}");
+    assert!((lo.metric_after - full.metric_after).abs() < 1e-6, "streaming must not change math");
+    assert!(full.notes.iter().any(|n| n.contains("calibration peak")), "{full:?}");
+}
+
+/// Sparse-attention pattern estimators on the fixture model's own Q/K/V:
+/// causality, forced diagonal, budget-bounded density, and a masked
+/// forward that stays finite.
+#[test]
+fn sparse_masks_uphold_invariants_on_fixture_qkv() {
+    let spec = FixtureSpec::default();
+    let model = fixture_target(4);
+    let corpus = fixture_corpus(&spec, 256, 3);
+    let tokens = &corpus[..40];
+    let qkv = model.capture_qk(tokens);
+    let (q, k, v) = &qkv[0];
+
+    for algo in [
+        SparseAlgo::AShape,
+        SparseAlgo::TriShape,
+        SparseAlgo::Dilated,
+        SparseAlgo::Strided,
+        SparseAlgo::MInference,
+        SparseAlgo::XAttention,
+        SparseAlgo::FlexPrefill,
+        SparseAlgo::Stem,
+    ] {
+        let mask = algo.mask(q, k, v, 8, 0.4);
+        assert_eq!(mask.t, 40, "{}", algo.name());
+        for qb in 0..mask.nb {
+            assert!(mask.get(qb, qb), "{} must keep the diagonal", algo.name());
+            for kb in qb + 1..mask.nb {
+                assert!(!mask.get(qb, kb), "{} kept an acausal block", algo.name());
+            }
+        }
+        let d = mask.density();
+        assert!(d > 0.0 && d <= 1.0, "{} density {d}", algo.name());
+
+        let token_mask = mask.to_token_mask();
+        assert_eq!(token_mask.len(), 40 * 40);
+        let logits = model.forward(tokens, &AttnOverride::Mask(token_mask));
+        assert!(
+            logits.data.iter().all(|x| x.is_finite()),
+            "{} produced non-finite logits",
+            algo.name()
+        );
+    }
+}
+
+/// Shipped-config smoke: the fixture config file drives the engine from
+/// disk exactly like `angelslim compress <path>` would.
+#[test]
+fn quant_int4_fixture_config_file_runs() {
+    let engine = CompressEngine::from_file("configs/quant_int4_fixture.yaml").unwrap();
+    let r = engine.run().unwrap();
+    assert_eq!(r.method, "quantization");
+    assert_eq!(r.algo, "int4");
+    assert!(r.metric_before < 1.0, "{r:?}");
+    assert!(r.metric_after < r.metric_before + 0.6, "{r:?}");
+    assert!((r.compression - 5.0).abs() < 1e-9);
+}

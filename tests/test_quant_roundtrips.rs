@@ -1,0 +1,165 @@
+//! Quantizer round-trip contracts through the public API: fp8 error
+//! bounds, int-affine exactness on representable grids, and bit-exact
+//! pack→unpack identity for every storage codec.
+
+use angelslim::quant::packing::{
+    pack_2bit, pack_nibbles, pack_sherry, pack_ternary_1_67, unpack_2bit, unpack_nibbles,
+    unpack_sherry, unpack_ternary_1_67,
+};
+use angelslim::quant::{
+    fp8_e4m3_qdq, fp8_e5m2_qdq, AffineQuantizer, Fp8Format, Granularity, Sherry,
+    TernaryQuantizer, WeightQuantizer,
+};
+use angelslim::util::testing::check;
+
+// ---------------------------------------------------------------------
+// fp8
+// ---------------------------------------------------------------------
+
+#[test]
+fn fp8_relative_error_bound_across_range() {
+    // e4m3 normals: |q - x| / |x| <= 2^-4; e5m2: <= 2^-3
+    for (qdq, max, bound) in [
+        (fp8_e4m3_qdq as fn(f32) -> f32, 448.0f32, 1.0 / 16.0),
+        (fp8_e5m2_qdq, 57344.0, 1.0 / 8.0),
+    ] {
+        let mut x = 0.02f32;
+        while x < max * 0.9 {
+            for v in [x, -x] {
+                let q = qdq(v);
+                let rel = (q - v).abs() / v.abs();
+                assert!(rel <= bound + 1e-6, "x={v} q={q} rel={rel}");
+            }
+            x *= 1.37;
+        }
+    }
+}
+
+#[test]
+fn fp8_qdq_is_idempotent() {
+    check(16, |rng| {
+        for _ in 0..64 {
+            let x = (rng.normal()) * 30.0;
+            let once = fp8_e4m3_qdq(x);
+            assert_eq!(fp8_e4m3_qdq(once), once, "x={x}");
+        }
+    });
+}
+
+#[test]
+fn fp8_scaled_slice_preserves_absmax_element() {
+    check(8, |rng| {
+        let mut xs = rng.normal_vec(64, 0.3);
+        xs[17] = 2.5; // known absmax
+        let before = xs.clone();
+        let scale = angelslim::quant::fp8::qdq_slice_scaled(&mut xs, Fp8Format::E4M3);
+        assert!((scale - 2.5 / 448.0).abs() < 1e-9);
+        // the absmax element maps exactly onto the top of the fp8 range
+        assert!((xs[17] - 2.5).abs() < 1e-6);
+        for (a, b) in xs.iter().zip(&before) {
+            assert!((a - b).abs() <= b.abs() / 16.0 + 1e-6, "{a} vs {b}");
+        }
+    });
+}
+
+// ---------------------------------------------------------------------
+// int affine
+// ---------------------------------------------------------------------
+
+#[test]
+fn int_affine_exact_roundtrip_on_representable_grid() {
+    // weights lying exactly on the code grid (code * 0.125, |code| <= 7,
+    // absmax hitting code 7) must round-trip bit-exactly
+    check(16, |rng| {
+        let (n, k, g) = (4, 64, 32usize);
+        let step = 0.125f32; // exactly representable in binary
+        let mut w = vec![0.0f32; n * k];
+        for row in 0..n {
+            for gs in (0..k).step_by(g) {
+                w[row * k + gs] = 7.0 * step; // pin the group absmax
+                for i in 1..g {
+                    let code = rng.below(15) as i32 - 7;
+                    w[row * k + gs + i] = code as f32 * step;
+                }
+            }
+        }
+        let orig = w.clone();
+        AffineQuantizer::new(4, Granularity::Group(g)).qdq(&mut w, n, k);
+        assert_eq!(w, orig, "on-grid weights must be fixed points");
+    });
+}
+
+#[test]
+fn int_affine_codes_dequant_matches_qdq() {
+    check(8, |rng| {
+        let (n, k) = (8, 64);
+        let w = rng.normal_vec(n * k, 0.7);
+        let q = AffineQuantizer::int4_group32();
+        let (codes, scales) = q.quantize_codes(&w, n, k);
+        assert!(codes.iter().all(|&c| c <= 15));
+        let deq = q.dequantize_codes(&codes, &scales, n, k);
+        let mut direct = w.clone();
+        q.qdq(&mut direct, n, k);
+        angelslim::util::testing::assert_allclose(&deq, &direct, 1e-6, 1e-6);
+    });
+}
+
+// ---------------------------------------------------------------------
+// ternary + packing codecs
+// ---------------------------------------------------------------------
+
+#[test]
+fn ternary_codes_roundtrip_through_every_codec() {
+    check(16, |rng| {
+        let codes: Vec<u8> = (0..240).map(|_| rng.below(3) as u8).collect();
+        assert_eq!(unpack_2bit(&pack_2bit(&codes)), codes);
+        assert_eq!(unpack_ternary_1_67(&pack_ternary_1_67(&codes), 240), codes);
+        // 240 ternary digits: 80 base-3 groups * 5 bits = 400 bits = 50 B
+        assert_eq!(pack_ternary_1_67(&codes).len(), 50);
+        assert_eq!(pack_2bit(&codes).len(), 60);
+    });
+}
+
+#[test]
+fn nibble_and_sherry_codecs_roundtrip() {
+    check(16, |rng| {
+        let nib: Vec<u8> = (0..128).map(|_| rng.below(16) as u8).collect();
+        assert_eq!(unpack_nibbles(&pack_nibbles(&nib)), nib);
+        let sherry: Vec<u8> = (0..56).map(|_| rng.below(32) as u8).collect();
+        assert_eq!(unpack_sherry(&pack_sherry(&sherry), 56), sherry);
+        assert_eq!(pack_sherry(&sherry).len(), 35); // 56 * 5 bits = 280 bits
+    });
+}
+
+#[test]
+fn ternary_quantize_dequantize_identity_on_codes() {
+    check(8, |rng| {
+        let (n, k) = (8, 48);
+        let w = rng.normal_vec(n * k, 1.0);
+        let q = TernaryQuantizer::default();
+        let (codes, alphas) = q.quantize_codes(&w, n, k);
+        assert!(codes.iter().all(|&c| c <= 2));
+        assert_eq!(alphas.len(), n);
+        let deq = TernaryQuantizer::dequantize_codes(&codes, &alphas, n, k);
+        // re-encoding the dequantized tensor reproduces the same codes
+        let (codes2, _) = q.quantize_codes(&deq, n, k);
+        assert_eq!(codes2, codes, "ternary code image must be stable");
+    });
+}
+
+#[test]
+fn sherry_codes_roundtrip_and_hold_3_4_sparsity() {
+    check(8, |rng| {
+        let (n, k) = (6, 64);
+        let w = rng.normal_vec(n * k, 1.0);
+        let (codes, alphas) = Sherry::quantize_codes(&w, n, k);
+        assert_eq!(codes.len(), n * k / 4);
+        assert!(codes.iter().all(|&c| c < 32));
+        let deq = Sherry::dequantize_codes(&codes, &alphas, n, k);
+        let nz = deq.iter().filter(|&&v| v != 0.0).count();
+        assert_eq!(nz, n * k * 3 / 4);
+        // pack → unpack → dequantize agrees with the direct dequant
+        let unpacked = unpack_sherry(&pack_sherry(&codes), codes.len());
+        assert_eq!(unpacked, codes);
+    });
+}

@@ -1,23 +1,35 @@
 //! Integration: PJRT artifacts vs the pure-Rust transformer — the two
 //! execution paths must agree on the numbers, proving the AOT bridge
 //! (jax -> HLO text -> xla crate) carries the trained weights faithfully.
+//!
+//! Every test here needs BOTH the `pjrt` cargo feature (vendored `xla`
+//! crate) and `artifacts/` from `make artifacts`, so they are `#[ignore]`d
+//! — a clean `cargo test` reports them as ignored instead of silently
+//! passing, and `cargo test -- --ignored` fails loudly when the
+//! prerequisites are absent. The hermetic pipeline equivalents (fixture
+//! model, no artifacts) live in tests/test_pipeline_hermetic.rs.
 
 use angelslim::models::{AttnOverride, Transformer, WeightStore};
 use angelslim::runtime::ArtifactRegistry;
 use angelslim::spec_decode::{LogitsModel, SpecDecoder, VanillaDecoder};
 use angelslim::util::{testing::assert_allclose, Rng};
 
-fn artifacts_ready() -> bool {
-    std::path::Path::new("artifacts/weights.bin").exists()
-        && std::path::Path::new("artifacts/model_target_fp32_b1.hlo.txt").exists()
+const IGNORE_REASON_HELP: &str =
+    "artifacts missing — run `make artifacts` and build with `--features pjrt` \
+     before `cargo test -- --ignored`";
+
+fn require_artifacts() {
+    assert!(
+        std::path::Path::new("artifacts/weights.bin").exists()
+            && std::path::Path::new("artifacts/model_target_fp32_b1.hlo.txt").exists(),
+        "{IGNORE_REASON_HELP}"
+    );
 }
 
 #[test]
+#[ignore = "needs `--features pjrt` + artifacts/ from `make artifacts`"]
 fn pjrt_matches_pure_rust_forward() {
-    if !artifacts_ready() {
-        eprintln!("skipping: run `make artifacts` first");
-        return;
-    }
+    require_artifacts();
     let mut reg = ArtifactRegistry::open("artifacts").unwrap();
     let exe = reg.model("model_target_fp32_b1").unwrap();
     let ws = WeightStore::load("artifacts").unwrap();
@@ -34,10 +46,9 @@ fn pjrt_matches_pure_rust_forward() {
 }
 
 #[test]
+#[ignore = "needs `--features pjrt` + artifacts/ from `make artifacts`"]
 fn quantized_artifacts_degrade_in_order() {
-    if !artifacts_ready() {
-        return;
-    }
+    require_artifacts();
     let mut reg = ArtifactRegistry::open("artifacts").unwrap();
     let eval = std::fs::read("artifacts/eval_corpus.bin").unwrap();
     let seq = &eval[..48];
@@ -72,10 +83,9 @@ fn quantized_artifacts_degrade_in_order() {
 }
 
 #[test]
+#[ignore = "needs `--features pjrt` + artifacts/ from `make artifacts`"]
 fn spec_decode_on_pjrt_models_is_output_identical_and_accepts() {
-    if !artifacts_ready() {
-        return;
-    }
+    require_artifacts();
     let mut reg = ArtifactRegistry::open("artifacts").unwrap();
     let target = reg.model("model_target_fp32_b1").unwrap();
     let draft = reg.model("model_draft_fp32_b1").unwrap();
@@ -100,10 +110,9 @@ fn spec_decode_on_pjrt_models_is_output_identical_and_accepts() {
 }
 
 #[test]
+#[ignore = "needs `--features pjrt` + artifacts/ from `make artifacts`"]
 fn draft_artifact_agrees_with_rust_draft() {
-    if !artifacts_ready() {
-        return;
-    }
+    require_artifacts();
     let mut reg = ArtifactRegistry::open("artifacts").unwrap();
     let exe = reg.model("model_draft_fp32_b1").unwrap();
     let ws = WeightStore::load("artifacts").unwrap();
@@ -117,10 +126,9 @@ fn draft_artifact_agrees_with_rust_draft() {
 }
 
 #[test]
+#[ignore = "needs `--features pjrt` + artifacts/ from `make artifacts`"]
 fn batch8_artifact_matches_b1_per_row() {
-    if !artifacts_ready() {
-        return;
-    }
+    require_artifacts();
     let mut reg = ArtifactRegistry::open("artifacts").unwrap();
     let b1 = reg.model("model_target_fp32_b1").unwrap();
     let b8 = reg.model("model_target_fp32_b8").unwrap();
@@ -139,4 +147,14 @@ fn batch8_artifact_matches_b1_per_row() {
             2e-3,
         );
     }
+}
+
+/// Without the `pjrt` feature the runtime must refuse to open, not
+/// pretend to work — guards against a silent-skip regression.
+#[cfg(not(feature = "pjrt"))]
+#[test]
+fn registry_fails_loudly_without_pjrt_feature() {
+    let err = ArtifactRegistry::open("artifacts").err();
+    let err = err.expect("stub runtime must not succeed");
+    assert!(format!("{err:#}").contains("pjrt"), "{err:#}");
 }

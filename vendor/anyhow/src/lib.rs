@@ -1,0 +1,279 @@
+//! Offline stand-in for the `anyhow` crate.
+//!
+//! The build environment has no registry access, so this vendored shim
+//! implements exactly the subset the workspace uses: `Error`, `Result`,
+//! the `Context` extension trait for `Result`/`Option`, and the
+//! `anyhow!` / `bail!` / `ensure!` macros. Error chains render the same
+//! way callers expect: `{}` prints the outermost message, `{:#}` prints
+//! the full colon-separated chain, and `{:?}` prints a "Caused by" list.
+//!
+//! The API is call-compatible with real `anyhow` for everything in this
+//! repo, so switching back to the crates.io crate is a Cargo.toml-only
+//! change.
+
+use std::fmt;
+
+/// A context-chained error value. Like `anyhow::Error`, this type does
+/// NOT implement `std::error::Error` itself — that is what lets the
+/// blanket `From<E: std::error::Error>` conversion coexist with the
+/// reflexive `From<Error>` impl that `?` relies on.
+pub struct Error {
+    msg: String,
+    source: Option<Box<Error>>,
+}
+
+/// `anyhow::Result<T>` — `Result` with a defaulted error type.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+impl Error {
+    /// Construct an error from a displayable message.
+    pub fn msg<M: fmt::Display>(message: M) -> Self {
+        Error { msg: message.to_string(), source: None }
+    }
+
+    /// Wrap this error with an outer context message.
+    pub fn context<C: fmt::Display>(self, context: C) -> Self {
+        Error { msg: context.to_string(), source: Some(Box::new(self)) }
+    }
+
+    fn from_std(e: &(dyn std::error::Error + 'static)) -> Self {
+        Error {
+            msg: e.to_string(),
+            source: e.source().map(|s| Box::new(Error::from_std(s))),
+        }
+    }
+
+    /// Iterate the context chain, outermost first.
+    pub fn chain(&self) -> Chain<'_> {
+        Chain { next: Some(self) }
+    }
+
+    /// The innermost (root) error in the chain.
+    pub fn root_cause(&self) -> &Error {
+        let mut cur = self;
+        while let Some(s) = cur.source.as_deref() {
+            cur = s;
+        }
+        cur
+    }
+}
+
+/// Iterator over an error's context chain.
+pub struct Chain<'a> {
+    next: Option<&'a Error>,
+}
+
+impl<'a> Iterator for Chain<'a> {
+    type Item = &'a Error;
+
+    fn next(&mut self) -> Option<&'a Error> {
+        let cur = self.next?;
+        self.next = cur.source.as_deref();
+        Some(cur)
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.msg)?;
+        if f.alternate() {
+            let mut cur = self.source.as_deref();
+            while let Some(e) = cur {
+                write!(f, ": {}", e.msg)?;
+                cur = e.source.as_deref();
+            }
+        }
+        Ok(())
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.msg)?;
+        if self.source.is_some() {
+            write!(f, "\n\nCaused by:")?;
+            let mut cur = self.source.as_deref();
+            let mut i = 0usize;
+            while let Some(e) = cur {
+                write!(f, "\n    {i}: {}", e.msg)?;
+                cur = e.source.as_deref();
+                i += 1;
+            }
+        }
+        Ok(())
+    }
+}
+
+impl<E> From<E> for Error
+where
+    E: std::error::Error + Send + Sync + 'static,
+{
+    fn from(e: E) -> Self {
+        Error::from_std(&e)
+    }
+}
+
+/// Extension trait adding `.context(..)` / `.with_context(..)` to
+/// `Result` and `Option`, mirroring `anyhow::Context`.
+pub trait Context<T>: Sized {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T, Error>;
+    fn with_context<C, F>(self, f: F) -> Result<T, Error>
+    where
+        C: fmt::Display,
+        F: FnOnce() -> C;
+}
+
+impl<T, E: Into<Error>> Context<T> for Result<T, E> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T, Error> {
+        match self {
+            Ok(v) => Ok(v),
+            Err(e) => Err(e.into().context(context)),
+        }
+    }
+
+    fn with_context<C, F>(self, f: F) -> Result<T, Error>
+    where
+        C: fmt::Display,
+        F: FnOnce() -> C,
+    {
+        match self {
+            Ok(v) => Ok(v),
+            Err(e) => Err(e.into().context(f())),
+        }
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T, Error> {
+        self.ok_or_else(|| Error::msg(context))
+    }
+
+    fn with_context<C, F>(self, f: F) -> Result<T, Error>
+    where
+        C: fmt::Display,
+        F: FnOnce() -> C,
+    {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+/// Construct an [`Error`] from format arguments.
+#[macro_export]
+macro_rules! anyhow {
+    ($($arg:tt)+) => {
+        $crate::Error::msg(::std::format!($($arg)+))
+    };
+}
+
+/// Alias of [`anyhow!`] kept for API compatibility.
+#[macro_export]
+macro_rules! format_err {
+    ($($arg:tt)+) => {
+        $crate::anyhow!($($arg)+)
+    };
+}
+
+/// Return early with a formatted [`Error`].
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)+) => {
+        return ::std::result::Result::Err($crate::anyhow!($($arg)+))
+    };
+}
+
+/// Return early with an [`Error`] unless the condition holds.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr $(,)?) => {
+        if !($cond) {
+            $crate::bail!("condition failed: `{}`", ::std::stringify!($cond));
+        }
+    };
+    ($cond:expr, $($arg:tt)+) => {
+        if !($cond) {
+            $crate::bail!($($arg)+);
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[derive(Debug)]
+    struct Leaf;
+
+    impl fmt::Display for Leaf {
+        fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+            write!(f, "file missing")
+        }
+    }
+
+    impl std::error::Error for Leaf {}
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        fn inner() -> Result<()> {
+            Err(Leaf)?;
+            Ok(())
+        }
+        let e = inner().unwrap_err();
+        assert_eq!(e.to_string(), "file missing");
+        // io::Error converts too (exact chain shape is io-internal)
+        fn io_inner() -> Result<()> {
+            Err(std::io::Error::new(std::io::ErrorKind::NotFound, "gone"))?;
+            Ok(())
+        }
+        assert_eq!(io_inner().unwrap_err().to_string(), "gone");
+    }
+
+    #[test]
+    fn context_chains_and_alternate_display() {
+        let e: Result<(), Leaf> = Err(Leaf);
+        let e = e.context("reading weights").unwrap_err();
+        assert_eq!(format!("{e}"), "reading weights");
+        assert_eq!(format!("{e:#}"), "reading weights: file missing");
+        assert_eq!(e.chain().count(), 2);
+        assert_eq!(e.root_cause().to_string(), "file missing");
+    }
+
+    #[test]
+    fn option_context() {
+        let v: Option<u32> = None;
+        let e = v.with_context(|| format!("missing {}", "key")).unwrap_err();
+        assert_eq!(e.to_string(), "missing key");
+        assert_eq!(Some(3u32).context("unused").unwrap(), 3);
+    }
+
+    #[test]
+    fn context_on_anyhow_result() {
+        let r: Result<()> = Err(Error::msg("inner"));
+        let e = r.context("outer").unwrap_err();
+        assert_eq!(format!("{e:#}"), "outer: inner");
+    }
+
+    #[test]
+    fn bail_and_ensure() {
+        fn b(x: usize) -> Result<usize> {
+            ensure!(x < 10, "x too big: {x}");
+            ensure!(x != 3);
+            if x == 5 {
+                bail!("five is right out");
+            }
+            Ok(x)
+        }
+        assert_eq!(b(2).unwrap(), 2);
+        assert_eq!(b(11).unwrap_err().to_string(), "x too big: 11");
+        assert!(b(3).unwrap_err().to_string().contains("condition failed"));
+        assert_eq!(b(5).unwrap_err().to_string(), "five is right out");
+    }
+
+    #[test]
+    fn debug_renders_cause_list() {
+        let e = Error::msg("root").context("mid").context("top");
+        let d = format!("{e:?}");
+        assert!(d.starts_with("top"));
+        assert!(d.contains("Caused by:"));
+        assert!(d.contains("1: root"));
+    }
+}
