@@ -1,0 +1,141 @@
+//! Decode-throughput benchmark: KV-cached incremental decoding
+//! (`prefill` + `decode_step`) vs re-forwarding the full prefix per token,
+//! on the hermetic fixture transformer — no artifacts required, so it runs
+//! on a clean checkout and in CI smoke mode.
+//!
+//! Prints a human table plus one machine-readable JSON line per
+//! configuration (prefix `BENCH_JSON `) so `BENCH_*.json` perf-trajectory
+//! tracking can diff tokens/sec across PRs.
+//!
+//!     cargo bench --bench bench_decode_kv            # full run
+//!     cargo bench --bench bench_decode_kv -- --quick # CI smoke mode
+//!
+//! Expected shape: cached decode ≥ 5x uncached tokens/sec at seq ≥ 64
+//! (the gap widens with sequence length: O(T²) total vs O(T³)).
+
+use angelslim::models::{AttnOverride, Transformer};
+use angelslim::tensor::ops::argmax;
+use angelslim::util::fixtures::{fixture_corpus, fixture_transformer, FixtureSpec};
+use angelslim::util::table::{f2, Table};
+use std::time::Instant;
+
+/// Fixture spec with room for long sequences (default max_t is 48).
+fn bench_spec(max_t: usize) -> FixtureSpec {
+    FixtureSpec { max_t, ..FixtureSpec::default() }
+}
+
+struct Run {
+    seq: Vec<u8>,
+    prefill_s: f64,
+    decode_s: f64,
+}
+
+/// The pre-KV-cache loop: one full forward over the whole prefix per
+/// generated token (next_logits already projects only the last row, so
+/// this measures the layer stack, not the head).
+fn uncached_generate(model: &Transformer, prompt: &[u8], max_new: usize) -> Run {
+    let mut seq = prompt.to_vec();
+    let t0 = Instant::now();
+    let mut last = model.next_logits(&seq, &AttnOverride::None);
+    let prefill_s = t0.elapsed().as_secs_f64();
+    let t1 = Instant::now();
+    for step in 0..max_new {
+        let next = argmax(&last) as u8;
+        seq.push(next);
+        if step + 1 < max_new {
+            last = model.next_logits(&seq, &AttnOverride::None);
+        }
+    }
+    Run { seq, prefill_s, decode_s: t1.elapsed().as_secs_f64() }
+}
+
+/// The KV-cached loop: one prefill over the prompt, one decode step per
+/// generated token.
+fn cached_generate(model: &Transformer, prompt: &[u8], max_new: usize) -> Run {
+    let mut seq = prompt.to_vec();
+    let mut cache = model.new_cache();
+    let t0 = Instant::now();
+    let rows = model.prefill(&mut cache, prompt);
+    let mut last = rows.row(rows.rows() - 1).to_vec();
+    let prefill_s = t0.elapsed().as_secs_f64();
+    let t1 = Instant::now();
+    for step in 0..max_new {
+        let next = argmax(&last) as u8;
+        seq.push(next);
+        if step + 1 < max_new {
+            last = model.decode_step(&mut cache, next);
+        }
+    }
+    Run { seq, prefill_s, decode_s: t1.elapsed().as_secs_f64() }
+}
+
+fn main() {
+    let quick = std::env::args().any(|a| a == "--quick");
+    let reps = if quick { 1 } else { 5 };
+    let configs: &[(usize, usize)] = if quick {
+        &[(64, 64)] // (prompt_t, decode_t): seq 128 ≥ the 64-token floor
+    } else {
+        &[(32, 32), (64, 64), (64, 128)]
+    };
+
+    let mut table = Table::new(
+        "KV-cached incremental decoding vs full re-forward (fixture model)",
+        &["prompt", "new", "uncached tok/s", "cached tok/s", "speedup", "cache KiB"],
+    );
+
+    for &(prompt_t, decode_t) in configs {
+        let max_t = prompt_t + decode_t + 8;
+        let spec = bench_spec(max_t);
+        let model = fixture_transformer(&spec);
+        let corpus = fixture_corpus(&spec, prompt_t + 16, 3);
+        let prompt = &corpus[..prompt_t];
+
+        let mut unc_decode = 0.0;
+        let mut unc_prefill = 0.0;
+        let mut cac_decode = 0.0;
+        let mut cac_prefill = 0.0;
+        let mut cache_bytes = 0usize;
+        for _ in 0..reps {
+            let u = uncached_generate(&model, prompt, decode_t);
+            let c = cached_generate(&model, prompt, decode_t);
+            assert_eq!(
+                u.seq, c.seq,
+                "cached decode must be output-identical to the full re-forward"
+            );
+            unc_decode += u.decode_s;
+            unc_prefill += u.prefill_s;
+            cac_decode += c.decode_s;
+            cac_prefill += c.prefill_s;
+            let mut cache = model.new_cache();
+            model.prefill(&mut cache, &c.seq[..c.seq.len().min(max_t)]);
+            cache_bytes = cache.bytes();
+        }
+        let n_tok = (decode_t * reps) as f64;
+        let uncached_tps = n_tok / unc_decode;
+        let cached_tps = n_tok / cac_decode;
+        let speedup = cached_tps / uncached_tps;
+
+        table.row_strs(&[
+            &prompt_t.to_string(),
+            &decode_t.to_string(),
+            &f2(uncached_tps),
+            &f2(cached_tps),
+            &format!("{speedup:.2}x"),
+            &format!("{:.1}", cache_bytes as f64 / 1024.0),
+        ]);
+        // machine-readable perf line (one JSON object per configuration)
+        println!(
+            "BENCH_JSON {{\"bench\":\"decode_kv\",\"prompt_t\":{prompt_t},\"decode_t\":{decode_t},\
+             \"reps\":{reps},\"uncached_tps\":{uncached_tps:.2},\"cached_tps\":{cached_tps:.2},\
+             \"speedup\":{speedup:.3},\"uncached_prefill_ms\":{:.3},\"cached_prefill_ms\":{:.3},\
+             \"cache_bytes\":{cache_bytes},\"quick\":{quick}}}",
+            unc_prefill * 1e3 / reps as f64,
+            cac_prefill * 1e3 / reps as f64,
+        );
+    }
+    table.print();
+    println!(
+        "shape: cached decode ≥ 5x at seq ≥ 64 and growing with T; \
+         outputs bit-identical to the uncached path."
+    );
+}

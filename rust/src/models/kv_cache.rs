@@ -1,0 +1,163 @@
+//! Per-request KV cache for incremental decoding.
+//!
+//! A [`KvCache`] holds, for every transformer layer, the key/value rows of
+//! all tokens processed so far, so `Transformer::prefill` /
+//! `Transformer::decode_step` compute Q/K/V only for new positions and
+//! attend against cached rows — turning T tokens of generation from
+//! O(T³) (full re-forward per token) into O(T²) total work, bit-identical
+//! to the full `forward` path.
+//!
+//! Rollback (`truncate`) supports the speculative-decoding rejection
+//! path: the target cache rewinds to the accepted prefix instead of
+//! re-forwarding the whole sequence. `bytes()` gives the resident-memory
+//! accounting the serving engine reports per in-flight request.
+
+use super::TransformerCfg;
+
+/// Cached key/value rows for one layer, stored flat row-major with
+/// `d_model` columns (heads packed along the row, same as the
+/// transformer's K/V projections).
+#[derive(Clone, Debug, Default)]
+pub struct LayerKv {
+    pub k: Vec<f32>,
+    pub v: Vec<f32>,
+}
+
+/// Per-layer K/V row buffers for one decoding session.
+#[derive(Clone, Debug)]
+pub struct KvCache {
+    d_model: usize,
+    max_t: usize,
+    len: usize,
+    layers: Vec<LayerKv>,
+}
+
+impl KvCache {
+    /// Empty cache sized for a model config; buffers reserve `max_t` rows
+    /// up front so decode steps never reallocate.
+    pub fn new(cfg: &TransformerCfg) -> Self {
+        let layers = (0..cfg.n_layers)
+            .map(|_| LayerKv {
+                k: Vec::with_capacity(cfg.max_t * cfg.d_model),
+                v: Vec::with_capacity(cfg.max_t * cfg.d_model),
+            })
+            .collect();
+        KvCache { d_model: cfg.d_model, max_t: cfg.max_t, len: 0, layers }
+    }
+
+    /// Tokens cached so far (the next token decodes at this position).
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// Maximum tokens the owning model can cache.
+    pub fn capacity(&self) -> usize {
+        self.max_t
+    }
+
+    pub fn n_layers(&self) -> usize {
+        self.layers.len()
+    }
+
+    pub fn d_model(&self) -> usize {
+        self.d_model
+    }
+
+    /// Cached rows of one layer.
+    pub fn layer(&self, li: usize) -> &LayerKv {
+        &self.layers[li]
+    }
+
+    /// Roll the cache back to its first `keep` tokens — the speculative
+    /// rejection path. No-op if the cache already holds fewer.
+    pub fn truncate(&mut self, keep: usize) {
+        if keep >= self.len {
+            return;
+        }
+        let nd = keep * self.d_model;
+        for l in &mut self.layers {
+            l.k.truncate(nd);
+            l.v.truncate(nd);
+        }
+        self.len = keep;
+    }
+
+    pub fn clear(&mut self) {
+        self.truncate(0);
+    }
+
+    /// Resident bytes of cached K/V rows (2 buffers × layers × len × d).
+    pub fn bytes(&self) -> usize {
+        self.layers.len() * 2 * self.len * self.d_model * std::mem::size_of::<f32>()
+    }
+
+    /// Bytes a full-length (`max_t`) session holds.
+    pub fn capacity_bytes(&self) -> usize {
+        self.layers.len() * 2 * self.max_t * self.d_model * std::mem::size_of::<f32>()
+    }
+
+    /// Append freshly-computed K/V rows to layer `li`. Called once per
+    /// layer by `Transformer::prefill` / `decode_step`, which commit the
+    /// new length via [`KvCache::advance`] after all layers are extended.
+    pub(crate) fn append_layer(&mut self, li: usize, k_rows: &[f32], v_rows: &[f32]) {
+        debug_assert_eq!(k_rows.len(), v_rows.len());
+        debug_assert_eq!(k_rows.len() % self.d_model, 0);
+        let l = &mut self.layers[li];
+        l.k.extend_from_slice(k_rows);
+        l.v.extend_from_slice(v_rows);
+    }
+
+    /// Commit `t_new` appended tokens (every layer must have been extended).
+    pub(crate) fn advance(&mut self, t_new: usize) {
+        self.len += t_new;
+        debug_assert!(
+            self.layers.iter().all(|l| l.k.len() == self.len * self.d_model),
+            "cache advance without matching per-layer rows"
+        );
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg() -> TransformerCfg {
+        TransformerCfg { vocab: 256, d_model: 32, n_layers: 2, n_heads: 2, d_ff: 64, max_t: 48 }
+    }
+
+    #[test]
+    fn empty_cache_accounting() {
+        let c = KvCache::new(&cfg());
+        assert_eq!(c.len(), 0);
+        assert!(c.is_empty());
+        assert_eq!(c.bytes(), 0);
+        assert_eq!(c.capacity(), 48);
+        assert_eq!(c.capacity_bytes(), 2 * 2 * 48 * 32 * 4);
+    }
+
+    #[test]
+    fn append_advance_truncate_roundtrip() {
+        let mut c = KvCache::new(&cfg());
+        let rows = vec![0.5f32; 3 * 32];
+        for li in 0..2 {
+            c.append_layer(li, &rows, &rows);
+        }
+        c.advance(3);
+        assert_eq!(c.len(), 3);
+        assert_eq!(c.bytes(), 2 * 2 * 3 * 32 * 4);
+        c.truncate(1);
+        assert_eq!(c.len(), 1);
+        assert_eq!(c.layer(0).k.len(), 32);
+        assert_eq!(c.bytes(), 2 * 2 * 32 * 4);
+        // truncating past the end is a no-op
+        c.truncate(10);
+        assert_eq!(c.len(), 1);
+        c.clear();
+        assert!(c.is_empty());
+        assert_eq!(c.bytes(), 0);
+    }
+}

@@ -4,10 +4,12 @@
 //! experimentation path; the PJRT artifacts (runtime/) carry the serving
 //! hot path.
 
+pub mod kv_cache;
 pub mod sampler;
 pub mod transformer;
 pub mod weights;
 
+pub use kv_cache::{KvCache, LayerKv};
 pub use sampler::Sampler;
 pub use transformer::{AttnOverride, Transformer, TransformerCfg};
 pub use weights::WeightStore;

@@ -9,12 +9,21 @@
 //!     (the sparse-attention accuracy evals)
 //!   * `capture_activations` — per-layer linear inputs (calibration for
 //!     GPTQ / AWQ / LeptoQuant)
+//!
+//! Incremental decoding: `prefill` / `decode_step` extend a [`KvCache`]
+//! and compute Q/K/V only for new positions, attending against cached
+//! rows — logits are bit-identical to `forward` over the full sequence
+//! (asserted by tests/test_kv_cache.rs), but T tokens of generation cost
+//! O(T²) total instead of O(T³).
 
 use crate::quant::WeightQuantizer;
-use crate::tensor::ops::{argmax, dot, rmsnorm, silu, softmax_inplace};
+use crate::tensor::ops::{
+    add_inplace, argmax, dot, matmul_transb, matvec_transb, rmsnorm, silu, softmax_inplace,
+};
 use crate::tensor::Tensor;
 use anyhow::Result;
 
+use super::kv_cache::KvCache;
 use super::weights::WeightStore;
 
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -161,29 +170,53 @@ impl Transformer {
         x
     }
 
-    fn attn(&self, layer: &Layer, xn: &Tensor, ov: &AttnOverride) -> Tensor {
-        let t = xn.rows();
+    /// Q/K/V projections for one layer over normalized inputs `xn` [t, d]
+    /// — the single site both `attn` and `capture_qk` compute them from.
+    fn qkv_proj(&self, layer: &Layer, xn: &Tensor) -> (Tensor, Tensor, Tensor) {
+        (
+            matmul_transb(xn, &layer.wq),
+            matmul_transb(xn, &layer.wk),
+            matmul_transb(xn, &layer.wv),
+        )
+    }
+
+    /// Causal multi-head attention mix + output projection. `q` holds
+    /// query rows for absolute positions `start..start + q.rows()`;
+    /// `kbuf`/`vbuf` hold key/value rows for ALL positions `0..start +
+    /// q.rows()`, flat with `d_model` columns (exactly a [`KvCache`]
+    /// layer's layout). Mask overrides only apply to full-sequence calls
+    /// (`start == 0`); the cached path always passes `AttnOverride::None`.
+    fn attn_mix(
+        &self,
+        layer: &Layer,
+        q: &Tensor,
+        kbuf: &[f32],
+        vbuf: &[f32],
+        start: usize,
+        ov: &AttnOverride,
+    ) -> Tensor {
+        let t_new = q.rows();
+        let t_total = start + t_new;
         let d = self.cfg.d_model;
         let h = self.cfg.n_heads;
         let dh = d / h;
-        let q = crate::tensor::ops::matmul_transb(xn, &layer.wq);
-        let k = crate::tensor::ops::matmul_transb(xn, &layer.wk);
-        let v = crate::tensor::ops::matmul_transb(xn, &layer.wv);
+        debug_assert_eq!(kbuf.len(), t_total * d);
+        debug_assert_eq!(vbuf.len(), t_total * d);
         let scale = 1.0 / (dh as f32).sqrt();
-        let mut ctx = Tensor::zeros(&[t, d]);
-        let mut scores = vec![0.0f32; t];
+        let mut ctx = Tensor::zeros(&[t_new, d]);
+        let mut scores = vec![0.0f32; t_total];
         for head in 0..h {
             let off = head * dh;
-            for qi in 0..t {
+            for qi in 0..t_new {
                 let qrow = &q.row(qi)[off..off + dh];
-                let limit = qi + 1;
+                let limit = start + qi + 1;
                 for ki in 0..limit {
                     let keep = match ov {
                         AttnOverride::None => true,
-                        AttnOverride::Mask(m) => m[qi * t + ki],
+                        AttnOverride::Mask(m) => m[(start + qi) * t_total + ki],
                     };
                     scores[ki] = if keep {
-                        dot(qrow, &k.row(ki)[off..off + dh]) * scale
+                        dot(qrow, &kbuf[ki * d + off..ki * d + off + dh]) * scale
                     } else {
                         f32::NEG_INFINITY
                     };
@@ -195,19 +228,24 @@ impl Transformer {
                     if p == 0.0 {
                         continue;
                     }
-                    let vrow = &v.row(ki)[off..off + dh];
+                    let vrow = &vbuf[ki * d + off..ki * d + off + dh];
                     for j in 0..dh {
                         crow[off + j] += p * vrow[j];
                     }
                 }
             }
         }
-        crate::tensor::ops::matmul_transb(&ctx, &layer.wo)
+        matmul_transb(&ctx, &layer.wo)
+    }
+
+    fn attn(&self, layer: &Layer, xn: &Tensor, ov: &AttnOverride) -> Tensor {
+        let (q, k, v) = self.qkv_proj(layer, xn);
+        self.attn_mix(layer, &q, &k.data, &v.data, 0, ov)
     }
 
     fn mlp(&self, layer: &Layer, xn: &Tensor) -> (Tensor, Tensor) {
-        let gate = crate::tensor::ops::matmul_transb(xn, &layer.w_gate);
-        let up = crate::tensor::ops::matmul_transb(xn, &layer.w_up);
+        let gate = matmul_transb(xn, &layer.w_gate);
+        let up = matmul_transb(xn, &layer.w_up);
         let mut mid = Tensor::zeros(&[xn.rows(), self.cfg.d_ff]);
         for i in 0..xn.rows() {
             let g = gate.row(i);
@@ -217,7 +255,7 @@ impl Transformer {
                 m[j] = silu(g[j]) * u[j];
             }
         }
-        let out = crate::tensor::ops::matmul_transb(&mid, &layer.w_down);
+        let out = matmul_transb(&mid, &layer.w_down);
         (out, mid)
     }
 
@@ -229,29 +267,35 @@ impl Transformer {
         out
     }
 
-    /// Full forward: tokens -> logits [t, vocab].
-    pub fn forward(&self, tokens: &[u8], ov: &AttnOverride) -> Tensor {
+    /// Residual stream after all blocks (pre-final-norm), [t, d].
+    fn hidden(&self, tokens: &[u8], ov: &AttnOverride) -> Tensor {
         let mut x = self.embed_tokens(tokens);
         for layer in &self.layers {
             let xn = self.norm(&x, &layer.ln1);
             let a = self.attn(layer, &xn, ov);
-            for i in 0..x.numel() {
-                x.data[i] += a.data[i];
-            }
+            add_inplace(&mut x.data, &a.data);
             let xn = self.norm(&x, &layer.ln2);
             let (m, _) = self.mlp(layer, &xn);
-            for i in 0..x.numel() {
-                x.data[i] += m.data[i];
-            }
+            add_inplace(&mut x.data, &m.data);
         }
-        let xf = self.norm(&x, &self.ln_f);
-        crate::tensor::ops::matmul_transb(&xf, &self.head)
+        x
     }
 
-    /// Logits at the last position only.
+    /// Full forward: tokens -> logits [t, vocab].
+    pub fn forward(&self, tokens: &[u8], ov: &AttnOverride) -> Tensor {
+        let xf = self.norm(&self.hidden(tokens, ov), &self.ln_f);
+        matmul_transb(&xf, &self.head)
+    }
+
+    /// Logits at the last position only: projects a single hidden row
+    /// through the `[vocab, d]` head instead of materializing `[t, vocab]`
+    /// logits and discarding all but the last row.
     pub fn next_logits(&self, tokens: &[u8], ov: &AttnOverride) -> Vec<f32> {
-        let logits = self.forward(tokens, ov);
-        logits.row(logits.rows() - 1).to_vec()
+        let x = self.hidden(tokens, ov);
+        let last = x.row(x.rows() - 1);
+        let mut xf = vec![0.0f32; last.len()];
+        rmsnorm(last, &self.ln_f, &mut xf);
+        matvec_transb(&xf, &self.head)
     }
 
     /// Greedy next token.
@@ -266,41 +310,145 @@ impl Transformer {
         for layer in &self.layers {
             let xn = self.norm(&x, &layer.ln1);
             let a = self.attn(layer, &xn, &AttnOverride::None);
-            for i in 0..x.numel() {
-                x.data[i] += a.data[i];
-            }
+            add_inplace(&mut x.data, &a.data);
             let x2 = self.norm(&x, &layer.ln2);
             let (m, mid) = self.mlp(layer, &x2);
-            for i in 0..x.numel() {
-                x.data[i] += m.data[i];
-            }
+            add_inplace(&mut x.data, &m.data);
             caps.push(LayerActivations { attn_in: xn, mlp_in: x2, mlp_mid: mid });
         }
         caps
     }
 
     /// Per-layer (Q, K, V) tensors for sparse-pattern estimation, shape
-    /// [t, d] each with heads packed along d.
+    /// [t, d] each with heads packed along d. The projections are computed
+    /// once and shared with the attention mix (not recomputed inside it).
     pub fn capture_qk(&self, tokens: &[u8]) -> Vec<(Tensor, Tensor, Tensor)> {
         let mut x = self.embed_tokens(tokens);
         let mut out = Vec::with_capacity(self.layers.len());
         for layer in &self.layers {
             let xn = self.norm(&x, &layer.ln1);
-            let q = crate::tensor::ops::matmul_transb(&xn, &layer.wq);
-            let k = crate::tensor::ops::matmul_transb(&xn, &layer.wk);
-            let v = crate::tensor::ops::matmul_transb(&xn, &layer.wv);
-            out.push((q, k, v));
-            let a = self.attn(layer, &xn, &AttnOverride::None);
-            for i in 0..x.numel() {
-                x.data[i] += a.data[i];
-            }
+            let (q, k, v) = self.qkv_proj(layer, &xn);
+            let a = self.attn_mix(layer, &q, &k.data, &v.data, 0, &AttnOverride::None);
+            add_inplace(&mut x.data, &a.data);
             let x2 = self.norm(&x, &layer.ln2);
             let (m, _) = self.mlp(layer, &x2);
-            for i in 0..x.numel() {
-                x.data[i] += m.data[i];
-            }
+            add_inplace(&mut x.data, &m.data);
+            out.push((q, k, v));
         }
         out
+    }
+
+    // ------------------------------------------------------------------
+    // incremental decoding (KV-cache sessions)
+    // ------------------------------------------------------------------
+
+    /// Fresh empty KV cache sized for this model.
+    pub fn new_cache(&self) -> KvCache {
+        KvCache::new(&self.cfg)
+    }
+
+    /// Extend `cache` with `tokens` at positions `cache.len()..`,
+    /// computing Q/K/V only for the new rows and attending against the
+    /// cached ones. Returns logits rows for the new positions — bit-
+    /// identical to the same rows of [`Transformer::forward`] over the
+    /// whole sequence.
+    pub fn prefill(&self, cache: &mut KvCache, tokens: &[u8]) -> Tensor {
+        let start = cache.len();
+        let t_new = tokens.len();
+        let d = self.cfg.d_model;
+        assert_eq!(cache.n_layers(), self.cfg.n_layers, "cache/model layer mismatch");
+        assert_eq!(cache.d_model(), d, "cache/model width mismatch");
+        assert!(
+            start + t_new <= self.cfg.max_t,
+            "session len {} > max_t {}",
+            start + t_new,
+            self.cfg.max_t
+        );
+        if t_new == 0 {
+            return Tensor::zeros(&[0, self.cfg.vocab]);
+        }
+        let mut x = Tensor::zeros(&[t_new, d]);
+        for (i, &tok) in tokens.iter().enumerate() {
+            let e = self.embed.row(tok as usize);
+            let p = self.pos.row(start + i);
+            let row = x.row_mut(i);
+            for j in 0..d {
+                row[j] = e[j] + p[j];
+            }
+        }
+        for (li, layer) in self.layers.iter().enumerate() {
+            let xn = self.norm(&x, &layer.ln1);
+            let (q, k, v) = self.qkv_proj(layer, &xn);
+            cache.append_layer(li, &k.data, &v.data);
+            let lk = cache.layer(li);
+            let a = self.attn_mix(layer, &q, &lk.k, &lk.v, start, &AttnOverride::None);
+            add_inplace(&mut x.data, &a.data);
+            let xn = self.norm(&x, &layer.ln2);
+            let (m, _) = self.mlp(layer, &xn);
+            add_inplace(&mut x.data, &m.data);
+        }
+        cache.advance(t_new);
+        let xf = self.norm(&x, &self.ln_f);
+        matmul_transb(&xf, &self.head)
+    }
+
+    /// One incremental decode step: process `token` at position
+    /// `cache.len()` and return next-token logits. Scalar fast path for
+    /// t=1 — matvec kernels throughout, no `[t, vocab]` materialization,
+    /// O(cache.len()·d + d²) per layer.
+    pub fn decode_step(&self, cache: &mut KvCache, token: u8) -> Vec<f32> {
+        let pos = cache.len();
+        let d = self.cfg.d_model;
+        let h = self.cfg.n_heads;
+        let dh = d / h;
+        let scale = 1.0 / (dh as f32).sqrt();
+        assert_eq!(cache.n_layers(), self.cfg.n_layers, "cache/model layer mismatch");
+        assert!(pos < self.cfg.max_t, "session len {} > max_t {}", pos + 1, self.cfg.max_t);
+        let e = self.embed.row(token as usize);
+        let prow = self.pos.row(pos);
+        let mut x: Vec<f32> = (0..d).map(|j| e[j] + prow[j]).collect();
+        let mut xn = vec![0.0f32; d];
+        for (li, layer) in self.layers.iter().enumerate() {
+            rmsnorm(&x, &layer.ln1, &mut xn);
+            let q = matvec_transb(&xn, &layer.wq);
+            let k = matvec_transb(&xn, &layer.wk);
+            let v = matvec_transb(&xn, &layer.wv);
+            cache.append_layer(li, &k, &v);
+            let lk = cache.layer(li);
+            let limit = pos + 1;
+            let mut ctx = vec![0.0f32; d];
+            let mut scores = vec![0.0f32; limit];
+            for head in 0..h {
+                let off = head * dh;
+                let qrow = &q[off..off + dh];
+                for ki in 0..limit {
+                    scores[ki] = dot(qrow, &lk.k[ki * d + off..ki * d + off + dh]) * scale;
+                }
+                softmax_inplace(&mut scores);
+                for ki in 0..limit {
+                    let p = scores[ki];
+                    if p == 0.0 {
+                        continue;
+                    }
+                    let vrow = &lk.v[ki * d + off..ki * d + off + dh];
+                    for j in 0..dh {
+                        ctx[off + j] += p * vrow[j];
+                    }
+                }
+            }
+            let a = matvec_transb(&ctx, &layer.wo);
+            add_inplace(&mut x, &a);
+            rmsnorm(&x, &layer.ln2, &mut xn);
+            let gate = matvec_transb(&xn, &layer.w_gate);
+            let up = matvec_transb(&xn, &layer.w_up);
+            let mid: Vec<f32> = gate.iter().zip(&up).map(|(&g, &u)| silu(g) * u).collect();
+            let m = matvec_transb(&mid, &layer.w_down);
+            add_inplace(&mut x, &m);
+        }
+        cache.advance(1);
+        let mut xf = vec![0.0f32; d];
+        rmsnorm(&x, &self.ln_f, &mut xf);
+        matvec_transb(&xf, &self.head)
     }
 
     /// Total linear-weight parameter count (size accounting).
@@ -389,6 +537,33 @@ mod tests {
         assert_ne!(before, after);
         // int4 keeps the logits finite
         assert!(after.iter().all(|v| v.is_finite()));
+    }
+
+    #[test]
+    fn next_logits_matches_forward_last_row_exactly() {
+        let m = model();
+        let toks = [2u8, 9, 31, 7, 14];
+        let full = m.forward(&toks, &AttnOverride::None);
+        let fast = m.next_logits(&toks, &AttnOverride::None);
+        assert_eq!(full.row(toks.len() - 1), &fast[..]);
+    }
+
+    #[test]
+    fn prefill_then_decode_matches_forward_exactly() {
+        let m = model();
+        let toks = [1u8, 5, 9, 60, 2, 17];
+        let mut cache = m.new_cache();
+        let pre = m.prefill(&mut cache, &toks[..4]);
+        let full = m.forward(&toks, &AttnOverride::None);
+        assert_eq!(cache.len(), 4);
+        for i in 0..4 {
+            assert_eq!(pre.row(i), full.row(i), "prefill row {i}");
+        }
+        for (i, &tok) in toks.iter().enumerate().skip(4) {
+            let step = m.decode_step(&mut cache, tok);
+            assert_eq!(&step[..], full.row(i), "decode step at {i}");
+        }
+        assert_eq!(cache.len(), toks.len());
     }
 
     #[test]

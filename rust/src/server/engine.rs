@@ -11,7 +11,7 @@
 //! serving simulators.
 
 use crate::data::TokenRequest;
-use crate::spec_decode::{LogitsModel, SpecDecoder, VanillaDecoder};
+use crate::spec_decode::{DecodeSession, SessionModel, SpecDecoder, VanillaDecoder};
 use crate::tensor::ops::argmax;
 use crate::util::{Rng, Summary};
 use anyhow::Result;
@@ -53,18 +53,13 @@ impl ServeReport {
     }
 }
 
-pub enum DecodeMode<'a, D: LogitsModel, T: LogitsModel> {
-    Vanilla,
-    Speculative { draft: &'a D, gamma: usize },
-    _Phantom(std::marker::PhantomData<&'a T>),
-}
-
 pub struct ServingEngine;
 
 impl ServingEngine {
     /// Serve a trace of requests with per-request decoding (b1 models).
-    /// `draft` = None -> vanilla decoding.
-    pub fn serve<D: LogitsModel, T: LogitsModel>(
+    /// Each generation call holds its own KV session, so decoding costs
+    /// one cached step per token. `draft` = None -> vanilla decoding.
+    pub fn serve<D: SessionModel, T: SessionModel>(
         requests: Vec<TokenRequest>,
         target: &T,
         draft: Option<(&D, usize)>,
@@ -139,6 +134,86 @@ impl ServingEngine {
             wall_s: t0.elapsed().as_secs_f64(),
             total_tokens,
             mean_al: if al_den == 0.0 { 0.0 } else { al_num / al_den },
+        })
+    }
+
+    /// Static batched greedy decoding on any session model: every request
+    /// in the chunk holds its own KV-cache session and the whole batch
+    /// advances one decode step per round — the pure-Rust analogue of
+    /// [`ServingEngine::serve_batched_pjrt`], one cached step per token
+    /// instead of one full forward per token.
+    pub fn serve_batched<T>(
+        requests: Vec<TokenRequest>,
+        target: &T,
+        max_batch: usize,
+    ) -> Result<ServeReport>
+    where
+        T: SessionModel,
+        T::Session: DecodeSession<T>,
+    {
+        let b = max_batch.max(1);
+        let t0 = std::time::Instant::now();
+        let mut completed = Vec::new();
+        let mut total_tokens = 0usize;
+        for chunk in requests.chunks(b) {
+            let chunk_t0 = std::time::Instant::now();
+            let mut seqs: Vec<Vec<u8>> = chunk.iter().map(|r| r.prompt.clone()).collect();
+            let mut first_token_ms = vec![0.0f64; chunk.len()];
+            // one session per in-flight request; prefill covers the prompt.
+            // `last[ri]` holds the next-token logits while the request is
+            // live, None once it has finished (or can never start).
+            let mut sessions = Vec::with_capacity(chunk.len());
+            let mut last: Vec<Option<Vec<f32>>> = Vec::with_capacity(chunk.len());
+            for req in chunk {
+                let mut sess = target.new_session();
+                let row = if req.prompt.is_empty()
+                    || req.prompt.len() >= target.max_t()
+                    || req.max_new_tokens == 0
+                {
+                    None
+                } else {
+                    sess.extend(target, &req.prompt)?.pop()
+                };
+                sessions.push(sess);
+                last.push(row);
+            }
+            let max_new = chunk.iter().map(|r| r.max_new_tokens).max().unwrap_or(0);
+            for step in 0..max_new {
+                for ri in 0..chunk.len() {
+                    let next = match &last[ri] {
+                        Some(row) => argmax(row) as u8,
+                        None => continue,
+                    };
+                    seqs[ri].push(next);
+                    total_tokens += 1;
+                    if step == 0 {
+                        first_token_ms[ri] = chunk_t0.elapsed().as_secs_f64() * 1e3;
+                    }
+                    let live = seqs[ri].len() - chunk[ri].prompt.len() < chunk[ri].max_new_tokens
+                        && seqs[ri].len() < target.max_t();
+                    last[ri] = if live {
+                        sessions[ri].extend(target, &[next])?.pop()
+                    } else {
+                        None
+                    };
+                }
+            }
+            let chunk_ms = chunk_t0.elapsed().as_secs_f64() * 1e3;
+            for (ri, req) in chunk.iter().enumerate() {
+                completed.push(CompletedRequest {
+                    id: req.id,
+                    output: seqs[ri][req.prompt.len()..].to_vec(),
+                    ttft_ms: first_token_ms[ri],
+                    total_ms: chunk_ms,
+                    generated: seqs[ri].len() - req.prompt.len(),
+                });
+            }
+        }
+        Ok(ServeReport {
+            completed,
+            wall_s: t0.elapsed().as_secs_f64(),
+            total_tokens,
+            mean_al: 1.0,
         })
     }
 
@@ -263,6 +338,28 @@ mod tests {
             assert_eq!(a.output, b.output, "spec decode must preserve outputs");
         }
         assert!(s.mean_al > 2.0, "AL {}", s.mean_al);
+    }
+
+    #[test]
+    fn batched_serving_matches_sequential_outputs() {
+        let target = ToyModel::new(3);
+        let sequential = ServingEngine::serve::<ToyModel, _>(
+            reqs(7),
+            &target,
+            None,
+            BatcherCfg::default(),
+            0,
+        )
+        .unwrap();
+        let batched = ServingEngine::serve_batched(reqs(7), &target, 4).unwrap();
+        assert_eq!(batched.completed.len(), 7);
+        assert_eq!(batched.total_tokens, sequential.total_tokens);
+        let mut by_id: Vec<_> = batched.completed.clone();
+        by_id.sort_by_key(|c| c.id);
+        for (a, b) in sequential.completed.iter().zip(&by_id) {
+            assert_eq!(a.id, b.id);
+            assert_eq!(a.output, b.output, "batched decode changed request {}", a.id);
+        }
     }
 
     #[test]

@@ -1,6 +1,7 @@
 //! Serving engine — the deployment layer the paper targets (vLLM/SGLang
-//! analogue): request queue, batch assembly, decode loop over the PJRT
-//! executables, TTFT / latency / throughput metrics.
+//! analogue): request queue, batch assembly, KV-cached decode loop (one
+//! session per in-flight request; PJRT executables fall back to replay
+//! sessions), TTFT / latency / throughput metrics.
 
 pub mod batcher;
 pub mod engine;

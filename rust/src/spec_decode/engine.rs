@@ -1,6 +1,16 @@
-//! Draft-propose / target-verify generation loop.
+//! Draft-propose / target-verify generation loop over KV-cached
+//! decoding sessions.
+//!
+//! [`LogitsModel`] is the stateless "logits for a whole sequence"
+//! surface; [`SessionModel`] adds per-request incremental state (a
+//! [`DecodeSession`]) so generation costs one decode step per token
+//! instead of one full forward. The pure-Rust [`Transformer`] backs its
+//! sessions with a real [`KvCache`] (with rollback on speculative
+//! rejection); models without native caching fall back to
+//! [`ReplaySession`], which reproduces the old re-forward behavior
+//! byte-for-byte.
 
-use crate::models::{AttnOverride, Sampler, Transformer};
+use crate::models::{AttnOverride, KvCache, Sampler, Transformer};
 use crate::runtime::ModelExecutable;
 use crate::tensor::ops::argmax;
 use crate::util::Rng;
@@ -34,6 +44,107 @@ impl LogitsModel for Transformer {
 
     fn max_t(&self) -> usize {
         self.cfg.max_t
+    }
+}
+
+/// Incremental decoding state for one request. `extend` feeds new tokens
+/// and returns the logits row at every fed position — exactly the rows
+/// `seq_logits` over the full sequence would return — and `rollback`
+/// rewinds to an accepted prefix (the speculative rejection path).
+pub trait DecodeSession<M: ?Sized> {
+    /// Feed `tokens` at positions `self.len()..`, returning one logits
+    /// row per fed position.
+    fn extend(&mut self, model: &M, tokens: &[u8]) -> Result<Vec<Vec<f32>>>;
+    /// Tokens fed so far.
+    fn len(&self) -> usize;
+    fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+    /// Keep only the first `keep` tokens (no-op if already shorter).
+    fn rollback(&mut self, keep: usize);
+}
+
+/// Models that decode incrementally through per-request sessions.
+pub trait SessionModel: LogitsModel + Sized {
+    type Session: DecodeSession<Self>;
+    fn new_session(&self) -> Self::Session;
+}
+
+/// Fallback session for models without native KV caching: replays the
+/// whole history through `seq_logits` on every extension — the
+/// pre-KV-cache O(T³) behavior, byte-identical outputs.
+#[derive(Clone, Debug, Default)]
+pub struct ReplaySession {
+    history: Vec<u8>,
+}
+
+impl<M: LogitsModel> DecodeSession<M> for ReplaySession {
+    fn extend(&mut self, model: &M, tokens: &[u8]) -> Result<Vec<Vec<f32>>> {
+        if tokens.is_empty() {
+            return Ok(Vec::new());
+        }
+        self.history.extend_from_slice(tokens);
+        let rows = model.seq_logits(&self.history)?;
+        Ok(rows[self.history.len() - tokens.len()..].to_vec())
+    }
+
+    fn len(&self) -> usize {
+        self.history.len()
+    }
+
+    fn rollback(&mut self, keep: usize) {
+        self.history.truncate(keep);
+    }
+}
+
+/// KV-cached session for the pure-Rust transformer: multi-token
+/// extensions go through `prefill`, single tokens through the
+/// `decode_step` matvec fast path.
+pub struct KvSession {
+    cache: KvCache,
+}
+
+impl KvSession {
+    /// Resident K/V bytes held for this request.
+    pub fn cache_bytes(&self) -> usize {
+        self.cache.bytes()
+    }
+}
+
+impl DecodeSession<Transformer> for KvSession {
+    fn extend(&mut self, model: &Transformer, tokens: &[u8]) -> Result<Vec<Vec<f32>>> {
+        match tokens.len() {
+            0 => Ok(Vec::new()),
+            1 => Ok(vec![model.decode_step(&mut self.cache, tokens[0])]),
+            _ => {
+                let rows = model.prefill(&mut self.cache, tokens);
+                Ok((0..rows.rows()).map(|i| rows.row(i).to_vec()).collect())
+            }
+        }
+    }
+
+    fn len(&self) -> usize {
+        self.cache.len()
+    }
+
+    fn rollback(&mut self, keep: usize) {
+        self.cache.truncate(keep);
+    }
+}
+
+impl SessionModel for Transformer {
+    type Session = KvSession;
+
+    fn new_session(&self) -> KvSession {
+        KvSession { cache: self.new_cache() }
+    }
+}
+
+impl SessionModel for Rc<ModelExecutable> {
+    type Session = ReplaySession;
+
+    fn new_session(&self) -> ReplaySession {
+        ReplaySession::default()
     }
 }
 
@@ -75,13 +186,14 @@ impl GenStats {
     }
 }
 
-/// Vanilla autoregressive decoding (the baseline rows of Tables 7-9).
-pub struct VanillaDecoder<'a, M: LogitsModel> {
+/// Vanilla autoregressive decoding (the baseline rows of Tables 7-9):
+/// one prefill over the prompt, then one cached decode step per token.
+pub struct VanillaDecoder<'a, M: SessionModel> {
     pub target: &'a M,
     pub sampler: Sampler,
 }
 
-impl<'a, M: LogitsModel> VanillaDecoder<'a, M> {
+impl<'a, M: SessionModel> VanillaDecoder<'a, M> {
     pub fn new(target: &'a M) -> Self {
         VanillaDecoder { target, sampler: Sampler::Greedy }
     }
@@ -91,20 +203,31 @@ impl<'a, M: LogitsModel> VanillaDecoder<'a, M> {
         let mut seq = prompt.to_vec();
         let mut stats = GenStats::default();
         let budget = max_new.min(self.target.max_t().saturating_sub(prompt.len()));
-        for _ in 0..budget {
-            let logits = self.target.seq_logits(&seq)?;
-            let next = self.sampler.sample(logits.last().unwrap(), rng);
-            seq.push(next);
-            stats.generated += 1;
-            stats.steps += 1;
+        if budget > 0 {
+            let mut sess = self.target.new_session();
+            let mut last = sess
+                .extend(self.target, prompt)?
+                .pop()
+                .expect("prompt must be non-empty");
+            for step in 0..budget {
+                let next = self.sampler.sample(&last, rng);
+                seq.push(next);
+                stats.generated += 1;
+                stats.steps += 1;
+                if step + 1 < budget {
+                    last = sess.extend(self.target, &[next])?.pop().unwrap();
+                }
+            }
         }
         stats.wall_s = t0.elapsed().as_secs_f64();
         Ok((seq, stats))
     }
 }
 
-/// Speculative decoder: draft proposes, target verifies.
-pub struct SpecDecoder<'a, D: LogitsModel, T: LogitsModel> {
+/// Speculative decoder: draft proposes, target verifies. Both models
+/// keep a KV session across steps; on rejection the caches roll back to
+/// the accepted prefix instead of re-forwarding the whole sequence.
+pub struct SpecDecoder<'a, D: SessionModel, T: SessionModel> {
     pub draft: &'a D,
     pub target: &'a T,
     /// number of speculative tokens per step (num_speculative_tokens)
@@ -112,7 +235,7 @@ pub struct SpecDecoder<'a, D: LogitsModel, T: LogitsModel> {
     pub sampler: Sampler,
 }
 
-impl<'a, D: LogitsModel, T: LogitsModel> SpecDecoder<'a, D, T> {
+impl<'a, D: SessionModel, T: SessionModel> SpecDecoder<'a, D, T> {
     pub fn new(draft: &'a D, target: &'a T, gamma: usize) -> Self {
         SpecDecoder { draft, target, gamma, sampler: Sampler::Greedy }
     }
@@ -120,42 +243,61 @@ impl<'a, D: LogitsModel, T: LogitsModel> SpecDecoder<'a, D, T> {
     /// Greedy speculative decoding: accept while draft token == target
     /// argmax; then commit the target's bonus token. Output-identical to
     /// vanilla greedy decoding (verified in tests).
+    ///
+    /// Session bookkeeping: both sessions trail the committed sequence by
+    /// at least one token between steps, so the next extension always
+    /// yields the logits row that predicts the first new token. After
+    /// each verify the caches rewind to `seq.len() - 1` — keeping the
+    /// accepted prefix, discarding rejected speculative rows.
     pub fn generate(&self, prompt: &[u8], max_new: usize, rng: &mut Rng) -> Result<(Vec<u8>, GenStats)> {
         let t0 = std::time::Instant::now();
         let mut seq = prompt.to_vec();
         let mut stats = GenStats::default();
         let limit = self.target.max_t().min(self.draft.max_t());
         let budget = max_new.min(limit.saturating_sub(prompt.len()));
+        if budget == 0 {
+            stats.wall_s = t0.elapsed().as_secs_f64();
+            return Ok((seq, stats));
+        }
+
+        // Sessions start empty: the first verify pass feeds the whole
+        // prompt plus the proposal in one extension (exactly the old
+        // full-forward call for replay-backed models), and later passes
+        // feed only what the rollback left uncached.
+        let mut dsess = self.draft.new_session();
+        let mut tsess = self.target.new_session();
 
         while stats.generated < budget {
-            // draft proposes up to gamma tokens autoregressively
             let room = (limit - seq.len()).min(self.gamma).min(budget - stats.generated);
             if room == 0 {
                 break;
             }
+            // draft proposes up to `room` tokens, one cached decode step
+            // each (the catch-up covers tokens committed last round)
             let mut proposal = Vec::with_capacity(room);
-            {
-                let mut dseq = seq.clone();
-                for _ in 0..room {
-                    let dl = self.draft.seq_logits(&dseq)?;
-                    let tok = self.sampler.sample(dl.last().unwrap(), rng);
-                    dseq.push(tok);
-                    proposal.push(tok);
+            let mut dlast = dsess
+                .extend(self.draft, &seq[dsess.len()..])?
+                .pop()
+                .expect("draft catch-up covers at least one token");
+            for i in 0..room {
+                let tok = self.sampler.sample(&dlast, rng);
+                proposal.push(tok);
+                if i + 1 < room {
+                    dlast = dsess.extend(self.draft, &[tok])?.pop().unwrap();
                 }
             }
             stats.proposed += proposal.len();
 
-            // single target forward over seq + proposal
-            let mut ext = seq.clone();
-            ext.extend_from_slice(&proposal);
-            let tl = self.target.seq_logits(&ext)?;
+            // single target pass over catch-up + proposal; tl[i] is the
+            // logits row at position seq.len()-1+i, predicting seq.len()+i
+            let mut feed: Vec<u8> = seq[tsess.len()..].to_vec();
+            feed.extend_from_slice(&proposal);
+            let rows = tsess.extend(self.target, &feed)?;
+            let tl = &rows[rows.len() - (room + 1)..];
 
-            // verify: target logits at position seq.len()-1+i predict token
-            // seq.len()+i
-            let base = seq.len() - 1;
             let mut n_acc = 0;
             for (i, &tok) in proposal.iter().enumerate() {
-                let target_tok = argmax(&tl[base + i]) as u8;
+                let target_tok = argmax(&tl[i]) as u8;
                 if target_tok == tok {
                     n_acc += 1;
                 } else {
@@ -169,11 +311,16 @@ impl<'a, D: LogitsModel, T: LogitsModel> SpecDecoder<'a, D, T> {
             }
             // bonus token from the target at the first unverified position
             if stats.generated < budget && seq.len() < limit {
-                let bonus = argmax(&tl[base + n_acc]) as u8;
+                let bonus = argmax(&tl[n_acc]) as u8;
                 seq.push(bonus);
                 stats.generated += 1;
             }
             stats.steps += 1;
+
+            // rewind both caches to the accepted prefix (minus the trailing
+            // token the next catch-up re-feeds)
+            tsess.rollback(seq.len() - 1);
+            dsess.rollback(seq.len() - 1);
         }
         stats.wall_s = t0.elapsed().as_secs_f64();
         Ok((seq, stats))
@@ -213,6 +360,14 @@ pub mod tests_support {
 
         fn max_t(&self) -> usize {
             64
+        }
+    }
+
+    impl SessionModel for ToyModel {
+        type Session = ReplaySession;
+
+        fn new_session(&self) -> ReplaySession {
+            ReplaySession::default()
         }
     }
 }

@@ -2,12 +2,16 @@
 //!
 //! The draft model (distilled at build time by python/compile/train.py with
 //! Eagle3-style target alignment) proposes γ tokens; the target verifies
-//! them in a single forward pass. Greedy and stochastic acceptance rules,
-//! AL / TPS metrics matching Tables 7-9, and the SpecExit early-exit
-//! controller (§3.2).
+//! them in a single forward pass over a persistent KV session, rolling the
+//! cache back to the accepted prefix on rejection. Greedy and stochastic
+//! acceptance rules, AL / TPS metrics matching Tables 7-9, and the
+//! SpecExit early-exit controller (§3.2).
 
 pub mod engine;
 pub mod spec_exit;
 
-pub use engine::{GenStats, LogitsModel, SpecDecoder, VanillaDecoder};
+pub use engine::{
+    DecodeSession, GenStats, KvSession, LogitsModel, ReplaySession, SessionModel, SpecDecoder,
+    VanillaDecoder,
+};
 pub use spec_exit::{ExitSignals, SpecExitController};

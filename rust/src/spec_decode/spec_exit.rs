@@ -14,7 +14,7 @@ use crate::tensor::ops::{argmax, log_softmax};
 use crate::util::Rng;
 use anyhow::Result;
 
-use super::engine::{GenStats, LogitsModel};
+use super::engine::{GenStats, SessionModel};
 
 /// Per-step exit signals (the paper's auxiliary head outputs).
 #[derive(Clone, Copy, Debug, Default)]
@@ -87,16 +87,17 @@ impl SpecExitController {
 }
 
 /// Speculative decoding with embedded early exit: identical to
-/// SpecDecoder::generate, but the controller watches the draft's signals
-/// (no extra forward passes — the paper's key efficiency property).
-pub struct SpecExitDecoder<'a, D: LogitsModel, T: LogitsModel> {
+/// SpecDecoder::generate (including its KV-session bookkeeping), but the
+/// controller watches the draft's signals (no extra forward passes — the
+/// paper's key efficiency property).
+pub struct SpecExitDecoder<'a, D: SessionModel, T: SessionModel> {
     pub draft: &'a D,
     pub target: &'a T,
     pub gamma: usize,
     pub controller: SpecExitController,
 }
 
-impl<'a, D: LogitsModel, T: LogitsModel> SpecExitDecoder<'a, D, T> {
+impl<'a, D: SessionModel, T: SessionModel> SpecExitDecoder<'a, D, T> {
     pub fn new(draft: &'a D, target: &'a T, gamma: usize, controller: SpecExitController) -> Self {
         SpecExitDecoder { draft, target, gamma, controller }
     }
@@ -115,6 +116,13 @@ impl<'a, D: LogitsModel, T: LogitsModel> SpecExitDecoder<'a, D, T> {
         let limit = self.target.max_t().min(self.draft.max_t());
         let budget = max_new.min(limit.saturating_sub(prompt.len()));
         let mut exited = false;
+        if budget == 0 {
+            stats.wall_s = t0.elapsed().as_secs_f64();
+            return Ok((seq, stats, exited));
+        }
+
+        let mut dsess = self.draft.new_session();
+        let mut tsess = self.target.new_session();
 
         'outer: while stats.generated < budget {
             let room = (limit - seq.len()).min(self.gamma).min(budget - stats.generated);
@@ -123,31 +131,30 @@ impl<'a, D: LogitsModel, T: LogitsModel> SpecExitDecoder<'a, D, T> {
             }
             let mut proposal = Vec::with_capacity(room);
             let mut exit_after: Option<usize> = None;
-            {
-                let mut dseq = seq.clone();
-                for i in 0..room {
-                    let dl = self.draft.seq_logits(&dseq)?;
-                    let last = dl.last().unwrap();
-                    // exit signals ride along with the proposal — same pass
-                    if exit_after.is_none()
-                        && self.controller.observe(last, stats.generated + i)
-                    {
-                        exit_after = Some(i);
-                    }
-                    let tok = sampler.sample(last, rng);
-                    dseq.push(tok);
-                    proposal.push(tok);
+            let mut dlast = dsess
+                .extend(self.draft, &seq[dsess.len()..])?
+                .pop()
+                .expect("draft catch-up covers at least one token");
+            for i in 0..room {
+                // exit signals ride along with the proposal — same pass
+                if exit_after.is_none() && self.controller.observe(&dlast, stats.generated + i) {
+                    exit_after = Some(i);
+                }
+                let tok = sampler.sample(&dlast, rng);
+                proposal.push(tok);
+                if i + 1 < room {
+                    dlast = dsess.extend(self.draft, &[tok])?.pop().unwrap();
                 }
             }
             stats.proposed += proposal.len();
 
-            let mut ext = seq.clone();
-            ext.extend_from_slice(&proposal);
-            let tl = self.target.seq_logits(&ext)?;
-            let base = seq.len() - 1;
+            let mut feed: Vec<u8> = seq[tsess.len()..].to_vec();
+            feed.extend_from_slice(&proposal);
+            let rows = tsess.extend(self.target, &feed)?;
+            let tl = &rows[rows.len() - (room + 1)..];
             let mut n_acc = 0;
             for (i, &tok) in proposal.iter().enumerate() {
-                if argmax(&tl[base + i]) as u8 == tok {
+                if argmax(&tl[i]) as u8 == tok {
                     n_acc += 1;
                 } else {
                     break;
@@ -164,7 +171,7 @@ impl<'a, D: LogitsModel, T: LogitsModel> SpecExitDecoder<'a, D, T> {
                 }
             }
             if stats.generated < budget && seq.len() < limit {
-                let bonus = argmax(&tl[base + n_acc]) as u8;
+                let bonus = argmax(&tl[n_acc]) as u8;
                 seq.push(bonus);
                 stats.generated += 1;
             }
@@ -173,6 +180,8 @@ impl<'a, D: LogitsModel, T: LogitsModel> SpecExitDecoder<'a, D, T> {
                 exited = true;
                 break;
             }
+            tsess.rollback(seq.len() - 1);
+            dsess.rollback(seq.len() - 1);
         }
         stats.wall_s = t0.elapsed().as_secs_f64();
         Ok((seq, stats, exited))

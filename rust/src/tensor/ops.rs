@@ -8,12 +8,33 @@
 use super::Tensor;
 
 /// y = x @ w.T where x: [M, K], w: [N, K] -> [M, N].
+///
+/// Register-blocked over activation rows: four `x` rows share each
+/// streamed `w` row via [`dot4`], so the (large) weight operand is read
+/// once per block instead of once per row. Each output element still
+/// accumulates in exactly [`dot`]'s order, so results are bit-identical
+/// to the naive row-at-a-time kernel.
 pub fn matmul_transb(x: &Tensor, w: &Tensor) -> Tensor {
     let (m, k) = (x.rows(), x.cols());
     let (n, k2) = (w.rows(), w.cols());
     assert_eq!(k, k2, "inner-dim mismatch {k} vs {k2}");
     let mut out = Tensor::zeros(&[m, n]);
-    for i in 0..m {
+    let blocks = m / 4;
+    for ib in 0..blocks {
+        let i = ib * 4;
+        let x0 = &x.data[i * k..(i + 1) * k];
+        let x1 = &x.data[(i + 1) * k..(i + 2) * k];
+        let x2 = &x.data[(i + 2) * k..(i + 3) * k];
+        let x3 = &x.data[(i + 3) * k..(i + 4) * k];
+        for j in 0..n {
+            let [y0, y1, y2, y3] = dot4(x0, x1, x2, x3, w.row(j));
+            out.data[i * n + j] = y0;
+            out.data[(i + 1) * n + j] = y1;
+            out.data[(i + 2) * n + j] = y2;
+            out.data[(i + 3) * n + j] = y3;
+        }
+    }
+    for i in blocks * 4..m {
         let xi = x.row(i);
         let oi = out.row_mut(i);
         for j in 0..n {
@@ -21,6 +42,14 @@ pub fn matmul_transb(x: &Tensor, w: &Tensor) -> Tensor {
         }
     }
     out
+}
+
+/// y = x @ w.T for a single activation row: [K] · [N, K] -> [N].
+/// The t=1 decode-step fast path — no [1, N] Tensor round-trips.
+pub fn matvec_transb(x: &[f32], w: &Tensor) -> Vec<f32> {
+    let (n, k) = (w.rows(), w.cols());
+    assert_eq!(x.len(), k, "inner-dim mismatch {} vs {k}", x.len());
+    (0..n).map(|j| dot(x, w.row(j))).collect()
 }
 
 /// Unrolled dot product (4-wide) — the scalar hot loop of the repo.
@@ -41,6 +70,36 @@ pub fn dot(a: &[f32], b: &[f32]) -> f32 {
         s += a[i] * b[i];
     }
     s
+}
+
+/// Four dot products against a shared right-hand side. Each lane keeps
+/// the same four-phase accumulators as [`dot`] (bit-identical results);
+/// `b` is streamed once per block of four left-hand rows.
+#[inline]
+pub fn dot4(a0: &[f32], a1: &[f32], a2: &[f32], a3: &[f32], b: &[f32]) -> [f32; 4] {
+    let len = b.len();
+    debug_assert!(a0.len() == len && a1.len() == len && a2.len() == len && a3.len() == len);
+    let chunks = len / 4;
+    let mut s = [[0.0f32; 4]; 4]; // s[lane][phase]
+    for c in 0..chunks {
+        let i = c * 4;
+        for p in 0..4 {
+            let bv = b[i + p];
+            s[0][p] += a0[i + p] * bv;
+            s[1][p] += a1[i + p] * bv;
+            s[2][p] += a2[i + p] * bv;
+            s[3][p] += a3[i + p] * bv;
+        }
+    }
+    let mut out = [0.0f32; 4];
+    for (lane, a) in [a0, a1, a2, a3].into_iter().enumerate() {
+        let mut acc = s[lane][0] + s[lane][1] + s[lane][2] + s[lane][3];
+        for i in chunks * 4..len {
+            acc += a[i] * b[i];
+        }
+        out[lane] = acc;
+    }
+    out
 }
 
 /// In-place row-wise softmax over the last dim of a 2-D tensor.
@@ -130,6 +189,55 @@ mod tests {
         let y = matmul_transb(&x, &w);
         assert_eq!(y.dims(), &[2, 3]);
         assert_allclose(&y.data, &[1.0, 2.0, 3.0, 3.0, 4.0, 7.0], 1e-6, 1e-6);
+    }
+
+    /// Reference row-at-a-time kernel the blocked matmul must match bitwise.
+    fn matmul_transb_naive(x: &Tensor, w: &Tensor) -> Tensor {
+        let (m, n) = (x.rows(), w.rows());
+        let mut out = Tensor::zeros(&[m, n]);
+        for i in 0..m {
+            for j in 0..n {
+                out.row_mut(i)[j] = dot(x.row(i), w.row(j));
+            }
+        }
+        out
+    }
+
+    #[test]
+    fn blocked_matmul_bit_identical_to_naive() {
+        let mut rng = crate::util::Rng::new(42);
+        // m spans sub-block, exact-block, and remainder cases; k exercises
+        // the 4-wide unroll remainder too
+        for (m, k, n) in [(1, 7, 5), (3, 8, 4), (4, 16, 9), (6, 13, 3), (9, 32, 17)] {
+            let x = Tensor::randn(&[m, k], 1.0, &mut rng);
+            let w = Tensor::randn(&[n, k], 1.0, &mut rng);
+            let blocked = matmul_transb(&x, &w);
+            let naive = matmul_transb_naive(&x, &w);
+            assert_eq!(blocked.data, naive.data, "m={m} k={k} n={n}");
+        }
+    }
+
+    #[test]
+    fn dot4_bit_identical_to_dot() {
+        let mut rng = crate::util::Rng::new(7);
+        for len in [1usize, 4, 7, 16, 33] {
+            let rows: Vec<Vec<f32>> = (0..4).map(|_| rng.normal_vec(len, 1.0)).collect();
+            let b = rng.normal_vec(len, 1.0);
+            let ys = dot4(&rows[0], &rows[1], &rows[2], &rows[3], &b);
+            for (lane, row) in rows.iter().enumerate() {
+                assert_eq!(ys[lane], dot(row, &b), "len={len} lane={lane}");
+            }
+        }
+    }
+
+    #[test]
+    fn matvec_matches_matmul_row() {
+        let mut rng = crate::util::Rng::new(9);
+        let x = Tensor::randn(&[1, 13], 1.0, &mut rng);
+        let w = Tensor::randn(&[6, 13], 1.0, &mut rng);
+        let full = matmul_transb(&x, &w);
+        let fast = matvec_transb(x.row(0), &w);
+        assert_eq!(full.data, fast);
     }
 
     #[test]

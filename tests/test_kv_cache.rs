@@ -1,0 +1,232 @@
+//! Cache-correctness property tests for the incremental-decoding
+//! subsystem: `prefill` + `decode_step` must be *logit-exact* (bitwise,
+//! not approximately) vs the full `forward` across random prompts, split
+//! points, and rollbacks; the speculative decoder must stay
+//! output-identical to vanilla decoding while rolling its target cache
+//! back on rejection; and the cache's truncation / memory accounting must
+//! uphold its invariants.
+
+use angelslim::models::{AttnOverride, KvCache, Transformer};
+use angelslim::server::ServingEngine;
+use angelslim::spec_decode::{DecodeSession, SessionModel, SpecDecoder, VanillaDecoder};
+use angelslim::util::fixtures::{
+    fixture_corpus, fixture_draft, fixture_target, fixture_transformer, FixtureSpec,
+};
+use angelslim::util::Rng;
+
+fn random_prompt(rng: &mut Rng, len: usize) -> Vec<u8> {
+    (0..len).map(|_| rng.below(256) as u8).collect()
+}
+
+/// prefill over the whole prompt returns every logits row bit-identical
+/// to the full forward, across random prompts and lengths.
+#[test]
+fn prefill_is_logit_exact_vs_forward() {
+    let mut rng = Rng::new(11);
+    for seed in 0..4u64 {
+        let m = fixture_target(seed);
+        for len in [1usize, 2, 5, 17, 40] {
+            let toks = random_prompt(&mut rng, len);
+            let full = m.forward(&toks, &AttnOverride::None);
+            let mut cache = m.new_cache();
+            let rows = m.prefill(&mut cache, &toks);
+            assert_eq!(rows.dims(), full.dims());
+            assert_eq!(rows.data, full.data, "seed {seed} len {len}");
+            assert_eq!(cache.len(), len);
+        }
+    }
+}
+
+/// Every decode_step position matches the corresponding row of a fresh
+/// full forward, for arbitrary prefill/decode split points.
+#[test]
+fn decode_steps_are_logit_exact_at_every_position() {
+    let mut rng = Rng::new(23);
+    let m = fixture_target(7);
+    for split in [1usize, 3, 8] {
+        let toks = random_prompt(&mut rng, 20);
+        let mut cache = m.new_cache();
+        m.prefill(&mut cache, &toks[..split]);
+        for i in split..toks.len() {
+            let step = m.decode_step(&mut cache, toks[i]);
+            let full = m.forward(&toks[..=i], &AttnOverride::None);
+            assert_eq!(&step[..], full.row(i), "split {split} pos {i}");
+            assert_eq!(cache.len(), i + 1);
+        }
+    }
+}
+
+/// Chained prefills (multi-token extension of a warm cache — the
+/// speculative verify pass) match one forward over the concatenation.
+#[test]
+fn chained_prefills_match_single_forward() {
+    let mut rng = Rng::new(31);
+    let m = fixture_target(3);
+    let a = random_prompt(&mut rng, 9);
+    let b = random_prompt(&mut rng, 7);
+    let mut all = a.clone();
+    all.extend_from_slice(&b);
+    let full = m.forward(&all, &AttnOverride::None);
+    let mut cache = m.new_cache();
+    m.prefill(&mut cache, &a);
+    let rows_b = m.prefill(&mut cache, &b);
+    for (i, pos) in (a.len()..all.len()).enumerate() {
+        assert_eq!(rows_b.row(i), full.row(pos), "extension row {i}");
+    }
+}
+
+/// Truncating to an accepted prefix and re-extending with a different
+/// continuation replays exactly what a cold cache computes — the
+/// speculative-rejection rollback path.
+#[test]
+fn rollback_then_reextend_is_exact() {
+    let mut rng = Rng::new(47);
+    let m = fixture_target(5);
+    let prefix = random_prompt(&mut rng, 10);
+    let rejected = random_prompt(&mut rng, 6);
+    let accepted = random_prompt(&mut rng, 6);
+
+    let mut cache = m.new_cache();
+    m.prefill(&mut cache, &prefix);
+    m.prefill(&mut cache, &rejected);
+    cache.truncate(prefix.len());
+    assert_eq!(cache.len(), prefix.len());
+    let rows = m.prefill(&mut cache, &accepted);
+
+    let mut all = prefix.clone();
+    all.extend_from_slice(&accepted);
+    let full = m.forward(&all, &AttnOverride::None);
+    for i in 0..accepted.len() {
+        assert_eq!(rows.row(i), full.row(prefix.len() + i), "replayed row {i}");
+    }
+}
+
+/// The KvSession wrapper (what the decoders drive) agrees with seq_logits
+/// and reports its cache length through the trait surface.
+#[test]
+fn kv_session_extend_matches_seq_logits() {
+    use angelslim::spec_decode::LogitsModel;
+    let m = fixture_target(9);
+    let spec = FixtureSpec::default();
+    let corpus = fixture_corpus(&spec, 256, 2);
+    let toks = &corpus[..24];
+    let reference = m.seq_logits(toks).unwrap();
+    let mut sess = m.new_session();
+    let mut got: Vec<Vec<f32>> = sess.extend(&m, &toks[..10]).unwrap();
+    for &t in &toks[10..] {
+        got.extend(sess.extend(&m, &[t]).unwrap());
+    }
+    assert_eq!(sess.len(), toks.len());
+    assert_eq!(got, reference);
+    sess.rollback(4);
+    assert_eq!(sess.len(), 4);
+}
+
+/// Memory accounting: bytes grow linearly with cached tokens, shrink on
+/// truncation, and capacity_bytes is invariant.
+#[test]
+fn cache_memory_accounting_invariants() {
+    let m = fixture_target(0);
+    let mut cache = m.new_cache();
+    let per_token = m.cfg.n_layers * 2 * m.cfg.d_model * std::mem::size_of::<f32>();
+    assert_eq!(cache.bytes(), 0);
+    assert_eq!(cache.capacity_bytes(), per_token * m.cfg.max_t);
+    m.prefill(&mut cache, &[1, 2, 3, 4, 5]);
+    assert_eq!(cache.bytes(), 5 * per_token);
+    let cap_before = cache.capacity_bytes();
+    cache.truncate(2);
+    assert_eq!(cache.bytes(), 2 * per_token);
+    assert_eq!(cache.capacity_bytes(), cap_before);
+    cache.clear();
+    assert_eq!(cache.bytes(), 0);
+    assert_eq!(cache.capacity(), m.cfg.max_t);
+}
+
+#[test]
+#[should_panic(expected = "max_t")]
+fn decode_beyond_capacity_panics() {
+    let m = fixture_target(0);
+    let mut cache = m.new_cache();
+    for _ in 0..m.cfg.max_t + 1 {
+        m.decode_step(&mut cache, 1);
+    }
+}
+
+/// A standalone KvCache rejects models it wasn't sized for.
+#[test]
+#[should_panic(expected = "layer mismatch")]
+fn mismatched_cache_panics() {
+    let m = fixture_target(0);
+    let other = fixture_draft(0); // 1 layer vs 2
+    let mut cache = KvCache::new(&other.cfg);
+    m.prefill(&mut cache, &[1, 2, 3]);
+}
+
+/// Cached speculative decoding (KV sessions + rollback on rejection) is
+/// output-identical to cached vanilla decoding, for drafts that agree
+/// (high acceptance) and drafts that encode a different rule (constant
+/// rejection, so the rollback path is exercised hard).
+#[test]
+fn spec_decode_with_cache_rollback_is_output_identical() {
+    let spec = FixtureSpec::default();
+    let corpus = fixture_corpus(&spec, 4_096, 13);
+    let target = fixture_target(6);
+    let aligned = fixture_draft(6);
+    let wrong = fixture_transformer(&FixtureSpec { shift: 11, seed: 99, ..FixtureSpec::default() });
+
+    for start in [0usize, 50, 300] {
+        let prompt = &corpus[start..start + 8];
+        for gamma in [1usize, 3, 4] {
+            let mut rng = Rng::new(start as u64);
+            let (vseq, vstats) = VanillaDecoder::new(&target)
+                .generate(prompt, 24, &mut rng)
+                .unwrap();
+            let (aseq, astats) = SpecDecoder::new(&aligned, &target, gamma)
+                .generate(prompt, 24, &mut rng)
+                .unwrap();
+            assert_eq!(vseq, aseq, "aligned draft start {start} gamma {gamma}");
+            assert_eq!(vstats.generated, astats.generated);
+            let (wseq, wstats) = SpecDecoder::new(&wrong, &target, gamma)
+                .generate(prompt, 24, &mut rng)
+                .unwrap();
+            assert_eq!(vseq, wseq, "wrong draft start {start} gamma {gamma}");
+            assert!(wstats.steps >= astats.steps, "rejections cannot speed decoding up");
+        }
+    }
+}
+
+/// Batched serving over KV sessions produces the same outputs as
+/// per-request sequential serving.
+#[test]
+fn serve_batched_kv_matches_sequential() {
+    use angelslim::data::TokenRequest;
+    use angelslim::server::BatcherCfg;
+    let spec = FixtureSpec::default();
+    let corpus = fixture_corpus(&spec, 2_048, 21);
+    let target = fixture_target(4);
+    let make = || -> Vec<TokenRequest> {
+        (0..6)
+            .map(|i| TokenRequest {
+                id: i as u64,
+                prompt: corpus[i * 31..i * 31 + 8].to_vec(),
+                max_new_tokens: 12,
+                arrival_ms: i as f64,
+            })
+            .collect()
+    };
+    let sequential = ServingEngine::serve::<Transformer, _>(
+        make(),
+        &target,
+        None,
+        BatcherCfg::default(),
+        0,
+    )
+    .unwrap();
+    let batched = ServingEngine::serve_batched(make(), &target, 3).unwrap();
+    assert_eq!(batched.completed.len(), 6);
+    for (a, b) in sequential.completed.iter().zip(&batched.completed) {
+        assert_eq!(a.id, b.id);
+        assert_eq!(a.output, b.output, "request {}", a.id);
+        assert_eq!(a.generated, 12);
+    }
+}
