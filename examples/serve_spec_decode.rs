@@ -7,7 +7,7 @@
 
 use angelslim::data::RequestGen;
 use angelslim::runtime::ArtifactRegistry;
-use angelslim::server::{BatcherCfg, ServingEngine};
+use angelslim::server::ServingEngine;
 use angelslim::util::table::{f2, Table};
 
 fn main() -> anyhow::Result<()> {
@@ -27,16 +27,10 @@ fn main() -> anyhow::Result<()> {
     let vanilla = ServingEngine::serve::<
         std::rc::Rc<angelslim::runtime::ModelExecutable>,
         _,
-    >(make_requests(), &target, None, BatcherCfg::default(), 0)?;
+    >(make_requests(), &target, None, 0)?;
 
     println!("serving {n_requests} requests, Eagle3-style speculative (gamma=3)...");
-    let spec = ServingEngine::serve(
-        make_requests(),
-        &target,
-        Some((&draft, 3)),
-        BatcherCfg::default(),
-        0,
-    )?;
+    let spec = ServingEngine::serve(make_requests(), &target, Some((&draft, 3)), 0)?;
 
     // correctness: greedy speculative decoding must match vanilla outputs
     let mut identical = 0;

@@ -4,6 +4,7 @@
 //! evaluation section for the automated benchmarking pipeline).
 
 use super::yaml::{parse, Yaml};
+use crate::server::{AdmissionPolicy, ServeCfg};
 use anyhow::{bail, Context, Result};
 
 #[derive(Clone, Debug, PartialEq)]
@@ -64,6 +65,9 @@ pub struct SlimConfig {
     pub compression: CompressionCfg,
     pub dataset: DatasetCfg,
     pub eval: EvalCfg,
+    /// serving-scheduler knobs (the `serve:` section); defaults to
+    /// continuous batching, 8 in flight, unlimited KV budget
+    pub serve: ServeCfg,
 }
 
 impl SlimConfig {
@@ -88,6 +92,7 @@ impl SlimConfig {
             .context("config missing `compression` section")?;
         let dataset = y.get("dataset").cloned().unwrap_or(Yaml::Null);
         let eval = y.get("eval").cloned().unwrap_or(Yaml::Null);
+        let serve = y.get("serve").cloned().unwrap_or(Yaml::Null);
 
         let method = comp.str_or("method", "quantization");
         let method_section = comp.get(&method).cloned().unwrap_or(Yaml::Null);
@@ -142,6 +147,17 @@ impl SlimConfig {
                     .unwrap_or_else(|| vec!["perplexity".to_string()]),
                 enabled: eval.bool_or("enabled", true),
             },
+            serve: ServeCfg {
+                policy: AdmissionPolicy::parse(&serve.str_or("policy", "continuous"))?,
+                max_in_flight: non_negative(
+                    serve.i64_or("max_in_flight", 8),
+                    "serve.max_in_flight",
+                )?,
+                kv_budget_bytes: non_negative(
+                    serve.i64_or("kv_budget_bytes", 0),
+                    "serve.kv_budget_bytes",
+                )?,
+            },
         };
         cfg.validate()?;
         Ok(cfg)
@@ -161,8 +177,20 @@ impl SlimConfig {
         if self.dataset.seq_len == 0 || self.dataset.num_samples == 0 {
             bail!("dataset must be non-empty");
         }
+        if self.serve.max_in_flight == 0 {
+            bail!("serve.max_in_flight must be >= 1");
+        }
         Ok(())
     }
+}
+
+/// Reject negative config values instead of letting `as usize` wrap them
+/// into huge limits that silently disable the knob they configure.
+fn non_negative(v: i64, name: &str) -> Result<usize> {
+    if v < 0 {
+        bail!("{name} must be >= 0, got {v}");
+    }
+    Ok(v as usize)
 }
 
 fn default_algo(method: &str) -> &'static str {
@@ -204,6 +232,10 @@ eval:
   tasks:
     - perplexity
     - copy
+serve:
+  policy: static
+  max_in_flight: 4
+  kv_budget_bytes: 65536
 "#;
 
     #[test]
@@ -215,6 +247,9 @@ eval:
         assert_eq!(c.compression.alpha_grid, vec![0.0, 0.001]);
         assert_eq!(c.dataset.seq_len, 48);
         assert_eq!(c.eval.tasks, vec!["perplexity", "copy"]);
+        assert_eq!(c.serve.policy, AdmissionPolicy::Static);
+        assert_eq!(c.serve.max_in_flight, 4);
+        assert_eq!(c.serve.kv_budget_bytes, 65536);
     }
 
     #[test]
@@ -226,6 +261,27 @@ eval:
         assert_eq!(c.compression.algo, "stem");
         assert_eq!(c.dataset.num_samples, 64);
         assert!(c.eval.enabled);
+        assert_eq!(c.serve.policy, AdmissionPolicy::Continuous);
+        assert_eq!(c.serve.max_in_flight, 8);
+        assert_eq!(c.serve.kv_budget_bytes, 0);
+    }
+
+    #[test]
+    fn rejects_unknown_serve_policy() {
+        let r = SlimConfig::from_str(
+            "model:\n  name: m\ncompression:\n  method: quantization\nserve:\n  policy: psychic\n",
+        );
+        assert!(r.is_err());
+    }
+
+    #[test]
+    fn rejects_negative_serve_values() {
+        for field in ["max_in_flight", "kv_budget_bytes"] {
+            let r = SlimConfig::from_str(&format!(
+                "model:\n  name: m\ncompression:\n  method: quantization\nserve:\n  {field}: -1\n",
+            ));
+            assert!(r.is_err(), "negative {field} must not wrap to usize::MAX");
+        }
     }
 
     #[test]

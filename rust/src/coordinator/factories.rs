@@ -93,6 +93,35 @@ impl DataFactory {
     }
 }
 
+/// ServeFactory: config -> serving-scheduler setup (models + ServeCfg).
+pub struct ServeFactory;
+
+impl ServeFactory {
+    /// The scheduler configuration for this job (the `serve:` section of
+    /// the YAML, already parsed and validated).
+    pub fn serve_cfg(cfg: &SlimConfig) -> crate::server::ServeCfg {
+        cfg.serve.clone()
+    }
+
+    /// Target model, plus the aligned draft when the job's compression
+    /// method is `spec_decode` (speculative serving needs both).
+    pub fn load_models(cfg: &SlimConfig) -> Result<(Transformer, Option<Transformer>)> {
+        let target = ModelFactory::load(cfg)?;
+        if cfg.compression.method != "spec_decode" {
+            return Ok((target, None));
+        }
+        let draft_name = match cfg.model.name.as_str() {
+            "tiny-fixture" => "tiny-fixture-draft",
+            "tiny-target" => "tiny-draft",
+            other => bail!("no registered draft model for target `{other}`"),
+        };
+        let mut draft_cfg = cfg.clone();
+        draft_cfg.model.name = draft_name.into();
+        let draft = ModelFactory::load(&draft_cfg)?;
+        Ok((target, Some(draft)))
+    }
+}
+
 /// SlimFactory: compression method registry.
 pub struct SlimFactory;
 
@@ -173,6 +202,22 @@ mod tests {
         let mut c = cfg("quantization", "int8");
         c.model.name = "gpt-4".into();
         assert!(ModelFactory::load(&c).is_err());
+    }
+
+    #[test]
+    fn serve_factory_loads_fixture_pair() {
+        let mut c = cfg("spec_decode", "eagle3");
+        c.model.name = "tiny-fixture".into();
+        let (target, draft) = ServeFactory::load_models(&c).unwrap();
+        assert_eq!(target.cfg.n_layers, 2);
+        let draft = draft.expect("spec_decode jobs serve with a draft");
+        assert_eq!(draft.cfg.n_layers, 1);
+        // non-spec jobs serve without a draft
+        let mut q = cfg("quantization", "int8");
+        q.model.name = "tiny-fixture".into();
+        let (_, none) = ServeFactory::load_models(&q).unwrap();
+        assert!(none.is_none());
+        assert_eq!(ServeFactory::serve_cfg(&q), q.serve);
     }
 
     #[test]

@@ -6,4 +6,4 @@ pub mod engine;
 pub mod factories;
 
 pub use engine::{CompressEngine, CompressReport};
-pub use factories::{DataFactory, ModelFactory, SlimFactory};
+pub use factories::{DataFactory, ModelFactory, ServeFactory, SlimFactory};

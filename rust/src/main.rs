@@ -1,16 +1,19 @@
 //! AngelSlim-RS CLI — the leader entrypoint.
 //!
 //!   angelslim compress <config.yaml>     run a compression job
-//!   angelslim serve [--spec] [-n N]      serve synthetic requests
+//!   angelslim serve [--spec] [-n N]      serve synthetic requests (artifacts)
+//!   angelslim serve --config <yaml> [-n N]  continuous-batching serve on the
+//!                                        configured model (hermetic fixtures OK)
 //!   angelslim eval-quant                 PPL across all model artifacts
 //!   angelslim list                       registered models/algos/artifacts
 
 use angelslim::config::SlimConfig;
-use angelslim::coordinator::{CompressEngine, SlimFactory};
+use angelslim::coordinator::{CompressEngine, DataFactory, ServeFactory, SlimFactory};
 use angelslim::data::RequestGen;
 use angelslim::eval;
+use angelslim::models::Transformer;
 use angelslim::runtime::ArtifactRegistry;
-use angelslim::server::{BatcherCfg, ServingEngine};
+use angelslim::server::ServingEngine;
 use angelslim::util::table::{f2, Table};
 use anyhow::Result;
 
@@ -36,7 +39,15 @@ fn run() -> Result<()> {
                 .and_then(|i| args.get(i + 1))
                 .and_then(|s| s.parse().ok())
                 .unwrap_or(16);
-            cmd_serve(spec, n)
+            match args.iter().position(|a| a == "--config") {
+                Some(i) => {
+                    let Some(path) = args.get(i + 1) else {
+                        anyhow::bail!("--config requires a path argument");
+                    };
+                    cmd_serve_config(path, n)
+                }
+                None => cmd_serve(spec, n),
+            }
         }
         Some("eval-quant") => cmd_eval_quant(),
         Some("list") => cmd_list(),
@@ -45,10 +56,11 @@ fn run() -> Result<()> {
                 "AngelSlim-RS — unified model compression toolkit (paper reproduction)\n\
                  \n\
                  usage:\n\
-                 \x20 angelslim compress <config.yaml>   run a YAML-configured job\n\
-                 \x20 angelslim serve [--spec] [-n N]    serve N synthetic requests\n\
-                 \x20 angelslim eval-quant               PPL across quantized artifacts\n\
-                 \x20 angelslim list                     registered components"
+                 \x20 angelslim compress <config.yaml>        run a YAML-configured job\n\
+                 \x20 angelslim serve [--spec] [-n N]         serve N synthetic requests\n\
+                 \x20 angelslim serve --config <yaml> [-n N]  continuous-batching serve\n\
+                 \x20 angelslim eval-quant                    PPL across quantized artifacts\n\
+                 \x20 angelslim list                          registered components"
             );
             Ok(())
         }
@@ -85,28 +97,72 @@ fn cmd_serve(spec: bool, n: usize) -> Result<()> {
     let requests = gen.take(n);
     let report = if spec {
         let draft = reg.model("model_draft_fp32_b1")?;
-        ServingEngine::serve(requests, &target, Some((&draft, 3)), BatcherCfg::default(), 0)?
+        ServingEngine::serve(requests, &target, Some((&draft, 3)), 0)?
     } else {
         ServingEngine::serve::<std::rc::Rc<angelslim::runtime::ModelExecutable>, _>(
+            requests, &target, None, 0,
+        )?
+    };
+    print_serve_report(
+        if spec { "serve (Eagle3-style speculative)" } else { "serve (vanilla)" },
+        &report,
+    );
+    Ok(())
+}
+
+/// Config-driven serving: load the configured model (hermetic fixtures
+/// included), build a request stream from the configured dataset, and run
+/// the continuous-batching scheduler with the config's `serve:` knobs.
+fn cmd_serve_config(path: &str, n: usize) -> Result<()> {
+    let cfg = SlimConfig::from_file(path)?;
+    let serve_cfg = ServeFactory::serve_cfg(&cfg);
+    let (target, draft) = ServeFactory::load_models(&cfg)?;
+    let datasets = DataFactory::load(&cfg)?;
+    let mut gen = RequestGen::new(datasets.eval, cfg.global.seed ^ 0x5E7E);
+    gen.prompt_len = 8;
+    gen.max_new_tokens = 24;
+    let requests = gen.take(n);
+    println!(
+        "serving {n} requests | policy={} max_in_flight={} kv_budget_bytes={}",
+        serve_cfg.policy.name(),
+        serve_cfg.max_in_flight,
+        serve_cfg.kv_budget_bytes
+    );
+    let gamma = cfg.compression.num_speculative_tokens.max(1);
+    let report = match &draft {
+        Some(d) => ServingEngine::serve_scheduled(
+            requests,
+            &target,
+            Some((d, gamma)),
+            &serve_cfg,
+            cfg.global.seed,
+        )?,
+        None => ServingEngine::serve_scheduled::<Transformer, _>(
             requests,
             &target,
             None,
-            BatcherCfg::default(),
-            0,
-        )?
+            &serve_cfg,
+            cfg.global.seed,
+        )?,
     };
-    let mut t = Table::new(
-        if spec { "serve (Eagle3-style speculative)" } else { "serve (vanilla)" },
-        &["metric", "value"],
-    );
+    print_serve_report(&format!("serve ({} scheduler)", serve_cfg.policy.name()), &report);
+    Ok(())
+}
+
+fn print_serve_report(title: &str, report: &angelslim::server::ServeReport) {
+    let mut t = Table::new(title, &["metric", "value"]);
     t.row_strs(&["requests", &report.completed.len().to_string()]);
     t.row_strs(&["tokens", &report.total_tokens.to_string()]);
     t.row_strs(&["TPS", &f2(report.tps())]);
     t.row_strs(&["AL", &f2(report.mean_al)]);
+    if report.proposed > 0 {
+        t.row_strs(&["acceptance", &f2(report.acceptance_rate())]);
+    }
     t.row_strs(&["TTFT p50 (ms)", &f2(report.ttft_summary().p50)]);
+    t.row_strs(&["TTFT p99 (ms)", &f2(report.ttft_summary().p99)]);
     t.row_strs(&["latency p90 (ms)", &f2(report.latency_summary().p90)]);
+    t.row_strs(&["peak KV bytes", &report.peak_kv_bytes.to_string()]);
     t.print();
-    Ok(())
 }
 
 fn cmd_eval_quant() -> Result<()> {

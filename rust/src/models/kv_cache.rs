@@ -36,10 +36,20 @@ impl KvCache {
     /// Empty cache sized for a model config; buffers reserve `max_t` rows
     /// up front so decode steps never reallocate.
     pub fn new(cfg: &TransformerCfg) -> Self {
+        Self::new_bounded(cfg, cfg.max_t)
+    }
+
+    /// Empty cache whose buffers reserve only `cap_t` rows (clamped to
+    /// `max_t`). The serving scheduler sizes each session to its request's
+    /// projected peak, so resident allocation matches the KV admission
+    /// budget instead of every session malloc'ing the full `max_t`.
+    /// Growing past the reservation stays correct (buffers reallocate).
+    pub fn new_bounded(cfg: &TransformerCfg, cap_t: usize) -> Self {
+        let cap = cap_t.min(cfg.max_t);
         let layers = (0..cfg.n_layers)
             .map(|_| LayerKv {
-                k: Vec::with_capacity(cfg.max_t * cfg.d_model),
-                v: Vec::with_capacity(cfg.max_t * cfg.d_model),
+                k: Vec::with_capacity(cap * cfg.d_model),
+                v: Vec::with_capacity(cap * cfg.d_model),
             })
             .collect();
         KvCache { d_model: cfg.d_model, max_t: cfg.max_t, len: 0, layers }
@@ -137,6 +147,20 @@ mod tests {
         assert_eq!(c.bytes(), 0);
         assert_eq!(c.capacity(), 48);
         assert_eq!(c.capacity_bytes(), 2 * 2 * 48 * 32 * 4);
+    }
+
+    #[test]
+    fn bounded_cache_reserves_only_the_cap() {
+        let c = KvCache::new_bounded(&cfg(), 10);
+        let reserved = c.layer(0).k.capacity();
+        assert!(
+            (10 * 32..48 * 32).contains(&reserved),
+            "reserved {reserved} rows*d, want ~10 tokens not max_t"
+        );
+        assert_eq!(c.capacity(), 48, "logical capacity stays max_t");
+        // the cap clamps to max_t
+        let big = KvCache::new_bounded(&cfg(), 1000);
+        assert!(big.layer(0).k.capacity() >= 48 * 32);
     }
 
     #[test]

@@ -36,6 +36,15 @@ pub struct TransformerCfg {
     pub max_t: usize,
 }
 
+impl TransformerCfg {
+    /// Bytes of cached K/V rows one token occupies across all layers —
+    /// the unit of the serving scheduler's KV-memory admission budget
+    /// (2 buffers × layers × d_model × f32).
+    pub fn kv_bytes_per_token(&self) -> usize {
+        self.n_layers * 2 * self.d_model * std::mem::size_of::<f32>()
+    }
+}
+
 #[derive(Clone, Debug)]
 pub struct Layer {
     pub ln1: Vec<f32>,
@@ -345,6 +354,12 @@ impl Transformer {
     /// Fresh empty KV cache sized for this model.
     pub fn new_cache(&self) -> KvCache {
         KvCache::new(&self.cfg)
+    }
+
+    /// Fresh empty KV cache reserving only `cap_t` rows — the serving
+    /// scheduler's admission-sized sessions.
+    pub fn new_cache_bounded(&self, cap_t: usize) -> KvCache {
+        KvCache::new_bounded(&self.cfg, cap_t)
     }
 
     /// Extend `cache` with `tokens` at positions `cache.len()..`,

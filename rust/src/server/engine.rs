@@ -1,38 +1,45 @@
-//! Serving engine: drains a request stream through the batcher and decodes
-//! with either vanilla batched decoding (the b8 PJRT executable) or
-//! per-request speculative decoding (draft + target b1 executables) —
-//! reporting TTFT / latency / throughput like the paper's deployment
-//! benchmarks.
-//!
-//! Time model: request *arrivals* are virtual (from the workload trace);
-//! compute occupies real wall-clock measured around the PJRT calls. The
-//! engine advances a virtual clock max(arrival, ready) + measured compute,
-//! which is the standard discrete-event treatment for single-worker
-//! serving simulators.
+//! Serving entry points — thin policy wrappers over the one
+//! [`Scheduler`] loop (see `server/scheduler.rs`). Sequential serving,
+//! static batching, and the PJRT batched path are degenerate
+//! configurations of the same continuous-batching scheduler, so TTFT and
+//! total latency mean the same thing on every path: per-request, on the
+//! unified virtual clock, measured from arrival.
 
 use crate::data::TokenRequest;
-use crate::spec_decode::{DecodeSession, SessionModel, SpecDecoder, VanillaDecoder};
-use crate::tensor::ops::argmax;
-use crate::util::{Rng, Summary};
+use crate::spec_decode::SessionModel;
+use crate::util::Summary;
 use anyhow::Result;
 
-use super::batcher::{Batcher, BatcherCfg};
+use super::scheduler::{
+    GreedyExecutor, PjrtBatchExecutor, Scheduler, ServeCfg, SpecExecutor,
+};
 
 #[derive(Clone, Debug)]
 pub struct CompletedRequest {
     pub id: u64,
     pub output: Vec<u8>,
+    /// first-token time measured from *arrival* (queueing included)
     pub ttft_ms: f64,
+    /// completion time measured from *arrival*
     pub total_ms: f64,
     pub generated: usize,
 }
 
 #[derive(Clone, Debug)]
 pub struct ServeReport {
+    /// completed requests, ordered by id
     pub completed: Vec<CompletedRequest>,
     pub wall_s: f64,
     pub total_tokens: usize,
+    /// tokens committed per target step, from actual step counts (1.0 for
+    /// greedy decoding; > 1 when speculation accepts proposals)
     pub mean_al: f64,
+    /// speculative tokens proposed across all requests (0 when greedy)
+    pub proposed: usize,
+    /// speculative tokens accepted across all requests
+    pub accepted: usize,
+    /// max resident KV bytes observed across decode rounds
+    pub peak_kv_bytes: usize,
 }
 
 impl ServeReport {
@@ -41,6 +48,16 @@ impl ServeReport {
             0.0
         } else {
             self.total_tokens as f64 / self.wall_s
+        }
+    }
+
+    /// Fraction of speculative proposals the target accepted (0.0 when
+    /// nothing was proposed — greedy serving).
+    pub fn acceptance_rate(&self) -> f64 {
+        if self.proposed == 0 {
+            0.0
+        } else {
+            self.accepted as f64 / self.proposed as f64
         }
     }
 
@@ -56,228 +73,66 @@ impl ServeReport {
 pub struct ServingEngine;
 
 impl ServingEngine {
-    /// Serve a trace of requests with per-request decoding (b1 models).
-    /// Each generation call holds its own KV session, so decoding costs
-    /// one cached step per token. `draft` = None -> vanilla decoding.
+    /// Serve a trace one request at a time in arrival order (b1 models).
+    /// `draft = None` -> vanilla decoding; `Some((draft, gamma))` ->
+    /// speculative decoding. Sequential configuration of the scheduler.
     pub fn serve<D: SessionModel, T: SessionModel>(
         requests: Vec<TokenRequest>,
         target: &T,
         draft: Option<(&D, usize)>,
-        batcher_cfg: BatcherCfg,
         seed: u64,
     ) -> Result<ServeReport> {
-        let mut rng = Rng::new(seed);
-        let mut batcher = Batcher::new(batcher_cfg);
-        let mut completed = Vec::new();
-        let t0 = std::time::Instant::now();
-        let mut clock_ms = 0.0f64;
-        let mut al_num = 0.0f64;
-        let mut al_den = 0.0f64;
-        let mut total_tokens = 0usize;
-
-        let mut pending = requests.into_iter().peekable();
-        loop {
-            // admit arrivals up to the current clock (or the next arrival
-            // if the queue is empty — the worker sleeps until then)
-            while let Some(r) = pending.peek() {
-                if r.arrival_ms <= clock_ms || batcher.pending() == 0 {
-                    clock_ms = clock_ms.max(pending.peek().unwrap().arrival_ms);
-                    batcher.push(pending.next().unwrap());
-                } else {
-                    break;
-                }
-            }
-            let Some(batch) = batcher.try_form(clock_ms) else {
-                if pending.peek().is_none() && batcher.pending() == 0 {
-                    break;
-                }
-                // force the deadline forward
-                clock_ms += 1.0;
-                continue;
-            };
-
-            for req in batch.requests {
-                let gen_t0 = std::time::Instant::now();
-                let (out, stats) = match draft {
-                    Some((d, gamma)) => {
-                        SpecDecoder::new(d, target, gamma).generate(
-                            &req.prompt,
-                            req.max_new_tokens,
-                            &mut rng,
-                        )?
-                    }
-                    None => VanillaDecoder::new(target).generate(
-                        &req.prompt,
-                        req.max_new_tokens,
-                        &mut rng,
-                    )?,
-                };
-                let gen_ms = gen_t0.elapsed().as_secs_f64() * 1e3;
-                // TTFT: queueing delay + one verify/decode step
-                let first_step_ms = gen_ms / stats.steps.max(1) as f64;
-                let queue_ms = (clock_ms - req.arrival_ms).max(0.0);
-                clock_ms += gen_ms;
-                al_num += stats.generated as f64;
-                al_den += stats.steps as f64;
-                total_tokens += stats.generated;
-                completed.push(CompletedRequest {
-                    id: req.id,
-                    output: out[req.prompt.len()..].to_vec(),
-                    ttft_ms: queue_ms + first_step_ms,
-                    total_ms: queue_ms + gen_ms,
-                    generated: stats.generated,
-                });
-            }
-        }
-        Ok(ServeReport {
-            completed,
-            wall_s: t0.elapsed().as_secs_f64(),
-            total_tokens,
-            mean_al: if al_den == 0.0 { 0.0 } else { al_num / al_den },
-        })
+        Self::serve_scheduled(requests, target, draft, &ServeCfg::sequential(), seed)
     }
 
-    /// Static batched greedy decoding on any session model: every request
-    /// in the chunk holds its own KV-cache session and the whole batch
-    /// advances one decode step per round — the pure-Rust analogue of
-    /// [`ServingEngine::serve_batched_pjrt`], one cached step per token
-    /// instead of one full forward per token.
-    pub fn serve_batched<T>(
+    /// Serve under an explicit scheduler configuration — the continuous
+    /// batching entry point (admission policy, in-flight cap, KV budget).
+    pub fn serve_scheduled<D: SessionModel, T: SessionModel>(
+        requests: Vec<TokenRequest>,
+        target: &T,
+        draft: Option<(&D, usize)>,
+        cfg: &ServeCfg,
+        seed: u64,
+    ) -> Result<ServeReport> {
+        match draft {
+            Some((d, gamma)) => {
+                Scheduler::run(requests, SpecExecutor::new(d, target, gamma), cfg, seed)
+            }
+            None => Scheduler::run(requests, GreedyExecutor::new(target), cfg, seed),
+        }
+    }
+
+    /// Static batched greedy decoding on any session model: up to
+    /// `max_batch` requests decode together and the whole chunk drains
+    /// before the next one is admitted. Static configuration of the
+    /// scheduler — kept as the baseline the continuous bench compares
+    /// against.
+    pub fn serve_batched<T: SessionModel>(
         requests: Vec<TokenRequest>,
         target: &T,
         max_batch: usize,
-    ) -> Result<ServeReport>
-    where
-        T: SessionModel,
-        T::Session: DecodeSession<T>,
-    {
-        let b = max_batch.max(1);
-        let t0 = std::time::Instant::now();
-        let mut completed = Vec::new();
-        let mut total_tokens = 0usize;
-        for chunk in requests.chunks(b) {
-            let chunk_t0 = std::time::Instant::now();
-            let mut seqs: Vec<Vec<u8>> = chunk.iter().map(|r| r.prompt.clone()).collect();
-            let mut first_token_ms = vec![0.0f64; chunk.len()];
-            // one session per in-flight request; prefill covers the prompt.
-            // `last[ri]` holds the next-token logits while the request is
-            // live, None once it has finished (or can never start).
-            let mut sessions = Vec::with_capacity(chunk.len());
-            let mut last: Vec<Option<Vec<f32>>> = Vec::with_capacity(chunk.len());
-            for req in chunk {
-                let mut sess = target.new_session();
-                let row = if req.prompt.is_empty()
-                    || req.prompt.len() >= target.max_t()
-                    || req.max_new_tokens == 0
-                {
-                    None
-                } else {
-                    sess.extend(target, &req.prompt)?.pop()
-                };
-                sessions.push(sess);
-                last.push(row);
-            }
-            let max_new = chunk.iter().map(|r| r.max_new_tokens).max().unwrap_or(0);
-            for step in 0..max_new {
-                for ri in 0..chunk.len() {
-                    let next = match &last[ri] {
-                        Some(row) => argmax(row) as u8,
-                        None => continue,
-                    };
-                    seqs[ri].push(next);
-                    total_tokens += 1;
-                    if step == 0 {
-                        first_token_ms[ri] = chunk_t0.elapsed().as_secs_f64() * 1e3;
-                    }
-                    let live = seqs[ri].len() - chunk[ri].prompt.len() < chunk[ri].max_new_tokens
-                        && seqs[ri].len() < target.max_t();
-                    last[ri] = if live {
-                        sessions[ri].extend(target, &[next])?.pop()
-                    } else {
-                        None
-                    };
-                }
-            }
-            let chunk_ms = chunk_t0.elapsed().as_secs_f64() * 1e3;
-            for (ri, req) in chunk.iter().enumerate() {
-                completed.push(CompletedRequest {
-                    id: req.id,
-                    output: seqs[ri][req.prompt.len()..].to_vec(),
-                    ttft_ms: first_token_ms[ri],
-                    total_ms: chunk_ms,
-                    generated: seqs[ri].len() - req.prompt.len(),
-                });
-            }
-        }
-        Ok(ServeReport {
-            completed,
-            wall_s: t0.elapsed().as_secs_f64(),
-            total_tokens,
-            mean_al: 1.0,
-        })
+    ) -> Result<ServeReport> {
+        Scheduler::run(
+            requests,
+            GreedyExecutor::new(target),
+            &ServeCfg::static_batch(max_batch),
+            0,
+        )
     }
 
-    /// Batched vanilla decoding on a b8 executable: all requests in the
-    /// batch advance one token per joint forward (static batching).
+    /// Batched vanilla decoding on a b>1 executable: all live requests
+    /// advance one token per joint forward. Static configuration of the
+    /// scheduler over the PJRT step executor.
     pub fn serve_batched_pjrt(
         requests: Vec<TokenRequest>,
         exe: &crate::runtime::ModelExecutable,
     ) -> Result<ServeReport> {
-        let b = exe.batch;
-        let t0 = std::time::Instant::now();
-        let mut completed = Vec::new();
-        let mut total_tokens = 0usize;
-        for chunk in requests.chunks(b) {
-            let mut seqs: Vec<Vec<u8>> = chunk.iter().map(|r| r.prompt.clone()).collect();
-            let max_new = chunk.iter().map(|r| r.max_new_tokens).max().unwrap_or(0);
-            let chunk_t0 = std::time::Instant::now();
-            let mut first_token_ms = vec![0.0f64; chunk.len()];
-            for step in 0..max_new {
-                if seqs.iter().all(|s| s.len() >= exe.seq_t) {
-                    break;
-                }
-                // pack the batch (pad short rows, reuse last row for gaps)
-                let mut tokens = vec![0i32; b * exe.seq_t];
-                for (ri, seq) in seqs.iter().enumerate() {
-                    for (i, &t) in seq.iter().enumerate().take(exe.seq_t) {
-                        tokens[ri * exe.seq_t + i] = t as i32;
-                    }
-                }
-                let logits = exe.run(&tokens)?;
-                for (ri, seq) in seqs.iter_mut().enumerate() {
-                    if ri >= chunk.len()
-                        || seq.len() >= exe.seq_t
-                        || seq.len() - chunk[ri].prompt.len() >= chunk[ri].max_new_tokens
-                    {
-                        continue;
-                    }
-                    let pos = seq.len() - 1;
-                    let off = ri * exe.seq_t * exe.vocab + pos * exe.vocab;
-                    let next = argmax(&logits[off..off + exe.vocab]) as u8;
-                    seq.push(next);
-                    total_tokens += 1;
-                    if step == 0 {
-                        first_token_ms[ri] = chunk_t0.elapsed().as_secs_f64() * 1e3;
-                    }
-                }
-            }
-            let chunk_ms = chunk_t0.elapsed().as_secs_f64() * 1e3;
-            for (ri, req) in chunk.iter().enumerate() {
-                completed.push(CompletedRequest {
-                    id: req.id,
-                    output: seqs[ri][req.prompt.len()..].to_vec(),
-                    ttft_ms: first_token_ms[ri],
-                    total_ms: chunk_ms,
-                    generated: seqs[ri].len() - req.prompt.len(),
-                });
-            }
-        }
-        Ok(ServeReport {
-            completed,
-            wall_s: t0.elapsed().as_secs_f64(),
-            total_tokens,
-            mean_al: 1.0,
-        })
+        Scheduler::run(
+            requests,
+            PjrtBatchExecutor::new(exe),
+            &ServeCfg::static_batch(exe.batch),
+            0,
+        )
     }
 }
 
@@ -300,14 +155,8 @@ mod tests {
     #[test]
     fn vanilla_serving_completes_all() {
         let target = ToyModel::new(3);
-        let report = ServingEngine::serve::<ToyModel, _>(
-            reqs(6),
-            &target,
-            None,
-            BatcherCfg::default(),
-            0,
-        )
-        .unwrap();
+        let report =
+            ServingEngine::serve::<ToyModel, _>(reqs(6), &target, None, 0).unwrap();
         assert_eq!(report.completed.len(), 6);
         assert!(report.completed.iter().all(|c| c.generated == 10));
         assert!(report.tps() > 0.0);
@@ -318,62 +167,59 @@ mod tests {
     fn speculative_serving_same_outputs_higher_al() {
         let target = ToyModel::new(3);
         let draft = ToyModel::new(3);
-        let v = ServingEngine::serve::<ToyModel, _>(
-            reqs(4),
-            &target,
-            None,
-            BatcherCfg::default(),
-            0,
-        )
-        .unwrap();
-        let s = ServingEngine::serve(
-            reqs(4),
-            &target,
-            Some((&draft, 3)),
-            BatcherCfg::default(),
-            0,
-        )
-        .unwrap();
+        let v = ServingEngine::serve::<ToyModel, _>(reqs(4), &target, None, 0).unwrap();
+        let s = ServingEngine::serve(reqs(4), &target, Some((&draft, 3)), 0).unwrap();
         for (a, b) in v.completed.iter().zip(&s.completed) {
             assert_eq!(a.output, b.output, "spec decode must preserve outputs");
         }
         assert!(s.mean_al > 2.0, "AL {}", s.mean_al);
+        assert!(s.acceptance_rate() > 0.9, "{}", s.acceptance_rate());
+        assert_eq!(v.proposed, 0, "greedy serving proposes nothing");
     }
 
     #[test]
     fn batched_serving_matches_sequential_outputs() {
         let target = ToyModel::new(3);
-        let sequential = ServingEngine::serve::<ToyModel, _>(
-            reqs(7),
-            &target,
-            None,
-            BatcherCfg::default(),
-            0,
-        )
-        .unwrap();
+        let sequential =
+            ServingEngine::serve::<ToyModel, _>(reqs(7), &target, None, 0).unwrap();
         let batched = ServingEngine::serve_batched(reqs(7), &target, 4).unwrap();
         assert_eq!(batched.completed.len(), 7);
         assert_eq!(batched.total_tokens, sequential.total_tokens);
-        let mut by_id: Vec<_> = batched.completed.clone();
-        by_id.sort_by_key(|c| c.id);
-        for (a, b) in sequential.completed.iter().zip(&by_id) {
+        for (a, b) in sequential.completed.iter().zip(&batched.completed) {
             assert_eq!(a.id, b.id);
             assert_eq!(a.output, b.output, "batched decode changed request {}", a.id);
         }
     }
 
     #[test]
-    fn ttft_includes_queueing() {
+    fn ttft_includes_queueing_on_the_unified_clock() {
         let target = ToyModel::new(1);
-        let report = ServingEngine::serve::<ToyModel, _>(
-            reqs(8),
+        let report =
+            ServingEngine::serve::<ToyModel, _>(reqs(8), &target, None, 0).unwrap();
+        let ttft = report.ttft_summary();
+        assert!(ttft.max >= ttft.min);
+        for c in &report.completed {
+            assert!(c.ttft_ms >= 0.0, "ttft measured from arrival");
+            assert!(c.ttft_ms <= c.total_ms + 1e-9);
+        }
+    }
+
+    #[test]
+    fn continuous_serving_matches_sequential_outputs() {
+        let target = ToyModel::new(3);
+        let sequential =
+            ServingEngine::serve::<ToyModel, _>(reqs(7), &target, None, 0).unwrap();
+        let continuous = ServingEngine::serve_scheduled::<ToyModel, _>(
+            reqs(7),
             &target,
             None,
-            BatcherCfg { max_batch: 8, max_wait_ms: 50.0 },
+            &ServeCfg::continuous(4),
             0,
         )
         .unwrap();
-        let ttft = report.ttft_summary();
-        assert!(ttft.max >= ttft.min);
+        for (a, b) in sequential.completed.iter().zip(&continuous.completed) {
+            assert_eq!(a.id, b.id);
+            assert_eq!(a.output, b.output, "continuous changed request {}", a.id);
+        }
     }
 }

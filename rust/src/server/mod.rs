@@ -1,10 +1,14 @@
 //! Serving engine — the deployment layer the paper targets (vLLM/SGLang
-//! analogue): request queue, batch assembly, KV-cached decode loop (one
-//! session per in-flight request; PJRT executables fall back to replay
-//! sessions), TTFT / latency / throughput metrics.
+//! analogue). One continuous-batching scheduler (request state machine +
+//! KV-memory admission control between decode rounds) drives every serve
+//! path; sequential and static batching are degenerate configurations.
+//! TTFT / latency / throughput metrics share one virtual-clock time model.
 
-pub mod batcher;
 pub mod engine;
+pub mod scheduler;
 
-pub use batcher::{Batch, Batcher, BatcherCfg};
-pub use engine::{ServeReport, ServingEngine};
+pub use engine::{CompletedRequest, ServeReport, ServingEngine};
+pub use scheduler::{
+    AdmissionPolicy, GreedyExecutor, PjrtBatchExecutor, ReqState, Scheduler, ServeCfg,
+    SpecExecutor, StepEvent, StepExecutor,
+};

@@ -1,0 +1,875 @@
+//! Continuous-batching scheduler with KV-memory admission control.
+//!
+//! One loop serves every path: a per-request state machine
+//!
+//!     Queued ──admit──▶ Prefill ──first step──▶ Decoding ──▶ Finished
+//!
+//! driven by a [`Scheduler`] that, **between every decode round**, retires
+//! finished requests and admits queued ones under a configurable KV-memory
+//! budget (projected from [`KvCache`] bytes accounting), so a long-running
+//! decode no longer blocks newly arrived short requests. Static batching
+//! and sequential serving are degenerate configurations of the same loop
+//! (see [`AdmissionPolicy`]), which is what unifies the time model across
+//! `ServingEngine::serve` / `serve_batched` / `serve_batched_pjrt`.
+//!
+//! Compute is pluggable through [`StepExecutor`]: greedy KV-session
+//! decoding ([`GreedyExecutor`]), speculative draft+target sessions with
+//! rollback ([`SpecExecutor`]), or a joint batched forward over a PJRT
+//! executable ([`PjrtBatchExecutor`]).
+//!
+//! Time model (unified across all paths): request *arrivals* are virtual
+//! (from the workload trace); compute occupies real wall-clock measured
+//! around each decode round. The virtual clock advances by the measured
+//! round time; an empty round jumps straight to the next arrival in O(1)
+//! (no busy-advance). Per-request TTFT = first-token round end − arrival,
+//! total = finish round end − arrival, on the same clock everywhere.
+//!
+//! [`KvCache`]: crate::models::KvCache
+
+use crate::data::TokenRequest;
+use crate::models::Sampler;
+use crate::runtime::ModelExecutable;
+use crate::spec_decode::{spec_verify_step, DecodeSession, SessionModel};
+use crate::tensor::ops::argmax;
+use crate::util::Rng;
+use anyhow::{bail, Result};
+use std::collections::VecDeque;
+use std::time::Instant;
+
+use super::engine::{CompletedRequest, ServeReport};
+
+/// When the scheduler may move a request from Queued to Prefill.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum AdmissionPolicy {
+    /// Admit whenever a slot and KV budget are free — between every decode
+    /// round. This is continuous batching.
+    Continuous,
+    /// Admit only when no request is in flight, up to `max_in_flight` at
+    /// once: classic static batching (the whole chunk drains before the
+    /// next one forms).
+    Static,
+    /// One request at a time, in arrival order (`max_in_flight` is forced
+    /// to 1): the old per-request serve loop.
+    Sequential,
+}
+
+impl AdmissionPolicy {
+    /// Parse a config/CLI name ("continuous" | "static" | "sequential").
+    pub fn parse(name: &str) -> Result<Self> {
+        Ok(match name {
+            "continuous" => AdmissionPolicy::Continuous,
+            "static" => AdmissionPolicy::Static,
+            "sequential" => AdmissionPolicy::Sequential,
+            other => bail!(
+                "unknown admission policy `{other}` (continuous | static | sequential)"
+            ),
+        })
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            AdmissionPolicy::Continuous => "continuous",
+            AdmissionPolicy::Static => "static",
+            AdmissionPolicy::Sequential => "sequential",
+        }
+    }
+}
+
+/// Scheduler configuration — the `serve:` section of a YAML config.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ServeCfg {
+    pub policy: AdmissionPolicy,
+    /// concurrent-request cap (executors may clamp it further, e.g. to the
+    /// PJRT batch dimension)
+    pub max_in_flight: usize,
+    /// KV-memory admission budget in bytes; 0 = unlimited. Admission
+    /// reserves each request's *projected peak* KV bytes up front — and
+    /// sessions are allocated at exactly that bound (`new_session_bounded`)
+    /// — so both observable and resident KV memory stay within the budget.
+    /// A single request projected over the whole budget is admitted alone
+    /// (safety valve) rather than starving.
+    pub kv_budget_bytes: usize,
+}
+
+impl Default for ServeCfg {
+    fn default() -> Self {
+        ServeCfg {
+            policy: AdmissionPolicy::Continuous,
+            max_in_flight: 8,
+            kv_budget_bytes: 0,
+        }
+    }
+}
+
+impl ServeCfg {
+    pub fn continuous(max_in_flight: usize) -> Self {
+        ServeCfg { max_in_flight, ..ServeCfg::default() }
+    }
+
+    pub fn sequential() -> Self {
+        ServeCfg { policy: AdmissionPolicy::Sequential, max_in_flight: 1, ..ServeCfg::default() }
+    }
+
+    pub fn static_batch(max_batch: usize) -> Self {
+        ServeCfg {
+            policy: AdmissionPolicy::Static,
+            max_in_flight: max_batch,
+            ..ServeCfg::default()
+        }
+    }
+
+    pub fn with_budget(mut self, kv_budget_bytes: usize) -> Self {
+        self.kv_budget_bytes = kv_budget_bytes;
+        self
+    }
+}
+
+/// Lifecycle of one request inside the scheduler. `Queued` and `Finished`
+/// are the boundary states (the arrival queue, and the completed list with
+/// the KV reservation released); the live set tracks only
+/// `Prefill`/`Decoding`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ReqState {
+    /// waiting for a slot / KV budget
+    Queued,
+    /// admitted; its first decode round (which feeds the prompt) has not
+    /// completed yet
+    Prefill,
+    /// producing tokens, one round at a time
+    Decoding,
+    /// retired; its KV reservation is released
+    Finished,
+}
+
+/// What one request did during one decode round.
+#[derive(Clone, Debug)]
+pub struct StepEvent {
+    pub id: u64,
+    /// tokens committed this round (greedy: 1; speculative: accepted + bonus)
+    pub tokens: Vec<u8>,
+    /// target verify/decode steps this round (the AL denominator)
+    pub steps: usize,
+    /// speculative tokens proposed this round
+    pub proposed: usize,
+    /// speculative tokens accepted this round
+    pub accepted: usize,
+    pub finished: bool,
+}
+
+/// Pluggable compute for one decode round over the live set. The scheduler
+/// owns admission, retirement, the virtual clock, and metrics; executors
+/// own per-request sessions and the model calls.
+pub trait StepExecutor {
+    /// Projected peak KV bytes `req` will hold while in flight — the
+    /// amount admission control reserves against the budget.
+    fn projected_bytes(&self, req: &TokenRequest) -> usize;
+    /// Allocate per-request decode state. The request's first round (its
+    /// Prefill step) runs at the next `step_round`.
+    fn admit(&mut self, req: &TokenRequest) -> Result<()>;
+    /// Advance every admitted request one decode round, returning one
+    /// event per live request.
+    fn step_round(&mut self, rng: &mut Rng) -> Result<Vec<StepEvent>>;
+    /// Drop a finished request's state, freeing its KV bytes.
+    fn retire(&mut self, id: u64);
+    /// Resident KV bytes across live sessions (observability + the budget
+    /// property test).
+    fn live_bytes(&self) -> usize;
+    /// Hard cap on concurrently-admittable requests (e.g. the PJRT batch
+    /// dimension); `None` = bounded only by `ServeCfg::max_in_flight`.
+    fn slot_cap(&self) -> Option<usize> {
+        None
+    }
+}
+
+struct LiveReq {
+    id: u64,
+    arrival_ms: f64,
+    state: ReqState,
+    output: Vec<u8>,
+    first_token_ms: Option<f64>,
+    reserved_bytes: usize,
+}
+
+/// The one serve loop. All `ServingEngine` entry points are thin policy
+/// wrappers over [`Scheduler::run`].
+pub struct Scheduler;
+
+impl Scheduler {
+    pub fn run<E: StepExecutor>(
+        mut requests: Vec<TokenRequest>,
+        mut executor: E,
+        cfg: &ServeCfg,
+        seed: u64,
+    ) -> Result<ServeReport> {
+        let mut rng = Rng::new(seed);
+        // stable sort: FIFO among simultaneous arrivals
+        requests.sort_by(|a, b| a.arrival_ms.total_cmp(&b.arrival_ms));
+        let mut max_in_flight = match cfg.policy {
+            AdmissionPolicy::Sequential => 1,
+            _ => cfg.max_in_flight.max(1),
+        };
+        if let Some(cap) = executor.slot_cap() {
+            max_in_flight = max_in_flight.min(cap.max(1));
+        }
+
+        let t0 = Instant::now();
+        let mut clock_ms = 0.0f64;
+        let mut queue: VecDeque<TokenRequest> = requests.into();
+        let mut live: Vec<LiveReq> = Vec::new();
+        let mut reserved_bytes = 0usize;
+        let mut completed: Vec<CompletedRequest> = Vec::new();
+        let mut total_tokens = 0usize;
+        let mut al_num = 0.0f64;
+        let mut al_den = 0.0f64;
+        let mut proposed = 0usize;
+        let mut accepted = 0usize;
+        let mut peak_kv_bytes = 0usize;
+
+        loop {
+            // ── between-round admission ──────────────────────────────
+            let may_admit = match cfg.policy {
+                AdmissionPolicy::Static => {
+                    // classic static batching waits for the whole chunk:
+                    // jump the clock to the last arrival of the requests
+                    // the next chunk can actually admit (slot cap AND KV
+                    // budget), so chunks neither degenerate to size 1 on
+                    // staggered traces nor wait for arrivals the budget
+                    // could never seat
+                    if live.is_empty() && !queue.is_empty() {
+                        let mut k = 0usize;
+                        let mut sum = 0usize;
+                        for r in queue.iter().take(max_in_flight) {
+                            let need = executor.projected_bytes(r);
+                            let fits = cfg.kv_budget_bytes == 0
+                                || sum + need <= cfg.kv_budget_bytes
+                                || (k == 0 && need > cfg.kv_budget_bytes);
+                            if !fits {
+                                break;
+                            }
+                            sum += need;
+                            k += 1;
+                        }
+                        let chunk_arrival = queue
+                            .iter()
+                            .take(k)
+                            .map(|r| r.arrival_ms)
+                            .fold(f64::NEG_INFINITY, f64::max);
+                        clock_ms = clock_ms.max(chunk_arrival);
+                    }
+                    live.is_empty()
+                }
+                _ => true,
+            };
+            if may_admit {
+                while live.len() < max_in_flight {
+                    let Some(head) = queue.front() else { break };
+                    if head.arrival_ms > clock_ms {
+                        break;
+                    }
+                    let need = executor.projected_bytes(head);
+                    let fits = cfg.kv_budget_bytes == 0
+                        || reserved_bytes + need <= cfg.kv_budget_bytes
+                        // oversized-request safety valve: a request that
+                        // could never fit runs alone instead of starving
+                        || (live.is_empty() && need > cfg.kv_budget_bytes);
+                    if !fits {
+                        // strict FIFO: never admit past a blocked head, so
+                        // freed bytes always reach the oldest request
+                        break;
+                    }
+                    let req = queue.pop_front().unwrap();
+                    executor.admit(&req)?;
+                    reserved_bytes += need;
+                    live.push(LiveReq {
+                        id: req.id,
+                        arrival_ms: req.arrival_ms,
+                        state: ReqState::Prefill,
+                        output: Vec::new(),
+                        first_token_ms: None,
+                        reserved_bytes: need,
+                    });
+                }
+            }
+
+            if live.is_empty() {
+                let Some(head) = queue.front() else { break };
+                // empty round: jump the clock straight to the next arrival
+                // in O(1) — the worker sleeps until then
+                clock_ms = clock_ms.max(head.arrival_ms);
+                continue;
+            }
+
+            // ── one measured decode round over the live set ──────────
+            let round_t0 = Instant::now();
+            let events = executor.step_round(&mut rng)?;
+            clock_ms += round_t0.elapsed().as_secs_f64() * 1e3;
+            peak_kv_bytes = peak_kv_bytes.max(executor.live_bytes());
+
+            // ── retire finished, book metrics on the shared clock ────
+            for ev in events {
+                let idx = live
+                    .iter()
+                    .position(|l| l.id == ev.id)
+                    .expect("step event for a request that was never admitted");
+                {
+                    let l = &mut live[idx];
+                    debug_assert!(
+                        matches!(l.state, ReqState::Prefill | ReqState::Decoding),
+                        "step event for a request outside Prefill/Decoding"
+                    );
+                    if !ev.tokens.is_empty() {
+                        if l.first_token_ms.is_none() {
+                            l.first_token_ms = Some(clock_ms);
+                        }
+                        l.state = ReqState::Decoding;
+                    }
+                    total_tokens += ev.tokens.len();
+                    al_num += ev.tokens.len() as f64;
+                    al_den += ev.steps as f64;
+                    proposed += ev.proposed;
+                    accepted += ev.accepted;
+                    l.output.extend_from_slice(&ev.tokens);
+                }
+                if ev.finished {
+                    let l = live.swap_remove(idx);
+                    executor.retire(l.id);
+                    reserved_bytes -= l.reserved_bytes;
+                    completed.push(CompletedRequest {
+                        id: l.id,
+                        generated: l.output.len(),
+                        ttft_ms: l.first_token_ms.unwrap_or(clock_ms) - l.arrival_ms,
+                        total_ms: clock_ms - l.arrival_ms,
+                        output: l.output,
+                    });
+                }
+            }
+        }
+
+        completed.sort_by_key(|c| c.id);
+        Ok(ServeReport {
+            completed,
+            wall_s: t0.elapsed().as_secs_f64(),
+            total_tokens,
+            mean_al: if al_den == 0.0 { 0.0 } else { al_num / al_den },
+            proposed,
+            accepted,
+            peak_kv_bytes,
+        })
+    }
+}
+
+// ─────────────────────────────────────────────────────────────────────
+// Executors
+// ─────────────────────────────────────────────────────────────────────
+
+struct GreedySlot<T: SessionModel> {
+    id: u64,
+    prompt: Vec<u8>,
+    sess: T::Session,
+    /// tokens still to generate; 0 at admission means the request can
+    /// never start (empty prompt / no context room) and finishes empty
+    remaining: usize,
+    last: Option<Vec<f32>>,
+}
+
+/// Greedy KV-session decoding: per request, one prompt prefill then one
+/// cached decode step per round — per-request output bit-identical to
+/// `VanillaDecoder` (and to the old static `serve_batched` loop).
+pub struct GreedyExecutor<'a, T: SessionModel> {
+    model: &'a T,
+    sampler: Sampler,
+    slots: Vec<GreedySlot<T>>,
+}
+
+impl<'a, T: SessionModel> GreedyExecutor<'a, T> {
+    pub fn new(model: &'a T) -> Self {
+        GreedyExecutor { model, sampler: Sampler::Greedy, slots: Vec::new() }
+    }
+
+    /// Most tokens this request's session can come to hold.
+    fn peak_tokens(&self, req: &TokenRequest) -> usize {
+        req.prompt
+            .len()
+            .saturating_add(req.max_new_tokens)
+            .min(self.model.max_t())
+    }
+}
+
+impl<T: SessionModel> StepExecutor for GreedyExecutor<'_, T> {
+    fn projected_bytes(&self, req: &TokenRequest) -> usize {
+        self.peak_tokens(req) * self.model.kv_bytes_per_token()
+    }
+
+    fn admit(&mut self, req: &TokenRequest) -> Result<()> {
+        let budget = if req.prompt.is_empty() {
+            0
+        } else {
+            req.max_new_tokens
+                .min(self.model.max_t().saturating_sub(req.prompt.len()))
+        };
+        self.slots.push(GreedySlot {
+            id: req.id,
+            prompt: req.prompt.clone(),
+            // sized to the projected peak, so the session's resident
+            // allocation is what admission reserved against the budget
+            sess: self.model.new_session_bounded(self.peak_tokens(req)),
+            remaining: budget,
+            last: None,
+        });
+        Ok(())
+    }
+
+    fn step_round(&mut self, rng: &mut Rng) -> Result<Vec<StepEvent>> {
+        let model = self.model;
+        let mut events = Vec::with_capacity(self.slots.len());
+        for slot in &mut self.slots {
+            if slot.remaining == 0 {
+                events.push(StepEvent {
+                    id: slot.id,
+                    tokens: Vec::new(),
+                    steps: 0,
+                    proposed: 0,
+                    accepted: 0,
+                    finished: true,
+                });
+                continue;
+            }
+            // Prefill state: the first round feeds the whole prompt
+            if slot.last.is_none() {
+                slot.last = slot.sess.extend(model, &slot.prompt)?.pop();
+            }
+            let next = {
+                let row = slot.last.as_ref().expect("non-empty prompt yields a logits row");
+                self.sampler.sample(row, rng)
+            };
+            slot.remaining -= 1;
+            let finished = slot.remaining == 0;
+            // like VanillaDecoder, the final committed token is never fed back
+            slot.last = if finished {
+                None
+            } else {
+                Some(slot.sess.extend(model, &[next])?.pop().unwrap())
+            };
+            events.push(StepEvent {
+                id: slot.id,
+                tokens: vec![next],
+                steps: 1,
+                proposed: 0,
+                accepted: 0,
+                finished,
+            });
+        }
+        Ok(events)
+    }
+
+    fn retire(&mut self, id: u64) {
+        self.slots.retain(|s| s.id != id);
+    }
+
+    fn live_bytes(&self) -> usize {
+        self.slots.iter().map(|s| s.sess.kv_bytes()).sum()
+    }
+}
+
+struct SpecSlot<D: SessionModel, T: SessionModel> {
+    id: u64,
+    seq: Vec<u8>,
+    budget: usize,
+    generated: usize,
+    dsess: D::Session,
+    tsess: T::Session,
+}
+
+/// Speculative draft-propose / target-verify decoding threaded through the
+/// continuous loop: each request keeps a draft and a target KV session;
+/// one round = one verify step (catch-up + γ proposals + bonus), with both
+/// caches rolled back to the accepted prefix — per-request output
+/// bit-identical to `SpecDecoder::generate`.
+pub struct SpecExecutor<'a, D: SessionModel, T: SessionModel> {
+    draft: &'a D,
+    target: &'a T,
+    gamma: usize,
+    sampler: Sampler,
+    slots: Vec<SpecSlot<D, T>>,
+}
+
+impl<'a, D: SessionModel, T: SessionModel> SpecExecutor<'a, D, T> {
+    pub fn new(draft: &'a D, target: &'a T, gamma: usize) -> Self {
+        SpecExecutor { draft, target, gamma, sampler: Sampler::Greedy, slots: Vec::new() }
+    }
+
+    fn limit(&self) -> usize {
+        self.target.max_t().min(self.draft.max_t())
+    }
+
+    /// Most tokens this request's sessions can come to hold.
+    fn peak_tokens(&self, req: &TokenRequest) -> usize {
+        req.prompt
+            .len()
+            .saturating_add(req.max_new_tokens)
+            .min(self.limit())
+    }
+}
+
+impl<D: SessionModel, T: SessionModel> StepExecutor for SpecExecutor<'_, D, T> {
+    fn projected_bytes(&self, req: &TokenRequest) -> usize {
+        self.peak_tokens(req)
+            * (self.target.kv_bytes_per_token() + self.draft.kv_bytes_per_token())
+    }
+
+    fn admit(&mut self, req: &TokenRequest) -> Result<()> {
+        let budget = if req.prompt.is_empty() {
+            0
+        } else {
+            req.max_new_tokens
+                .min(self.limit().saturating_sub(req.prompt.len()))
+        };
+        let peak_t = self.peak_tokens(req);
+        self.slots.push(SpecSlot {
+            id: req.id,
+            seq: req.prompt.clone(),
+            budget,
+            generated: 0,
+            dsess: self.draft.new_session_bounded(peak_t),
+            tsess: self.target.new_session_bounded(peak_t),
+        });
+        Ok(())
+    }
+
+    fn step_round(&mut self, rng: &mut Rng) -> Result<Vec<StepEvent>> {
+        let draft = self.draft;
+        let target = self.target;
+        let gamma = self.gamma;
+        let limit = self.limit();
+        let mut events = Vec::with_capacity(self.slots.len());
+        for slot in &mut self.slots {
+            // saturating: an over-long prompt admits with budget 0 and the
+            // limit term must not underflow before the room hits 0
+            let room = limit
+                .saturating_sub(slot.seq.len())
+                .min(gamma)
+                .min(slot.budget.saturating_sub(slot.generated));
+            if room == 0 {
+                events.push(StepEvent {
+                    id: slot.id,
+                    tokens: Vec::new(),
+                    steps: 0,
+                    proposed: 0,
+                    accepted: 0,
+                    finished: true,
+                });
+                continue;
+            }
+            // one shared verify step: draft catch-up + γ proposals, single
+            // target pass, greedy acceptance + bonus, rollback — the same
+            // function SpecDecoder::generate runs per iteration
+            let (tokens, proposed, accepted) = spec_verify_step(
+                draft,
+                target,
+                &mut slot.dsess,
+                &mut slot.tsess,
+                &mut slot.seq,
+                room,
+                slot.budget - slot.generated,
+                limit,
+                &self.sampler,
+                rng,
+            )?;
+            slot.generated += tokens.len();
+
+            let finished = slot.generated >= slot.budget || slot.seq.len() >= limit;
+            events.push(StepEvent {
+                id: slot.id,
+                tokens,
+                steps: 1,
+                proposed,
+                accepted,
+                finished,
+            });
+        }
+        Ok(events)
+    }
+
+    fn retire(&mut self, id: u64) {
+        self.slots.retain(|s| s.id != id);
+    }
+
+    fn live_bytes(&self) -> usize {
+        self.slots
+            .iter()
+            .map(|s| s.dsess.kv_bytes() + s.tsess.kv_bytes())
+            .sum()
+    }
+}
+
+struct PjrtSlot {
+    id: u64,
+    seq: Vec<u8>,
+    prompt_len: usize,
+    max_new: usize,
+}
+
+/// Joint batched greedy decoding over a b>1 PJRT executable: every live
+/// request occupies one batch row and the whole set advances one token per
+/// joint forward. Slot count is capped by the executable's batch dim.
+pub struct PjrtBatchExecutor<'a> {
+    exe: &'a ModelExecutable,
+    slots: Vec<PjrtSlot>,
+}
+
+impl<'a> PjrtBatchExecutor<'a> {
+    pub fn new(exe: &'a ModelExecutable) -> Self {
+        PjrtBatchExecutor { exe, slots: Vec::new() }
+    }
+}
+
+impl StepExecutor for PjrtBatchExecutor<'_> {
+    fn projected_bytes(&self, _req: &TokenRequest) -> usize {
+        0 // the executable re-forwards per round; no resident KV state
+    }
+
+    fn admit(&mut self, req: &TokenRequest) -> Result<()> {
+        self.slots.push(PjrtSlot {
+            id: req.id,
+            seq: req.prompt.clone(),
+            prompt_len: req.prompt.len(),
+            max_new: req.max_new_tokens,
+        });
+        Ok(())
+    }
+
+    fn step_round(&mut self, _rng: &mut Rng) -> Result<Vec<StepEvent>> {
+        let (b, seq_t, vocab) = (self.exe.batch, self.exe.seq_t, self.exe.vocab);
+        // pack the live set into the batch (free rows stay zero)
+        let mut tokens = vec![0i32; b * seq_t];
+        for (ri, slot) in self.slots.iter().enumerate() {
+            for (i, &t) in slot.seq.iter().enumerate().take(seq_t) {
+                tokens[ri * seq_t + i] = t as i32;
+            }
+        }
+        let logits = self.exe.run(&tokens)?;
+        let mut events = Vec::with_capacity(self.slots.len());
+        for (ri, slot) in self.slots.iter_mut().enumerate() {
+            let done = slot.seq.is_empty()
+                || slot.seq.len() >= seq_t
+                || slot.seq.len() - slot.prompt_len >= slot.max_new;
+            if done {
+                events.push(StepEvent {
+                    id: slot.id,
+                    tokens: Vec::new(),
+                    steps: 0,
+                    proposed: 0,
+                    accepted: 0,
+                    finished: true,
+                });
+                continue;
+            }
+            let pos = slot.seq.len() - 1;
+            let off = ri * seq_t * vocab + pos * vocab;
+            let next = argmax(&logits[off..off + vocab]) as u8;
+            slot.seq.push(next);
+            let finished = slot.seq.len() >= seq_t
+                || slot.seq.len() - slot.prompt_len >= slot.max_new;
+            events.push(StepEvent {
+                id: slot.id,
+                tokens: vec![next],
+                steps: 1,
+                proposed: 0,
+                accepted: 0,
+                finished,
+            });
+        }
+        Ok(events)
+    }
+
+    fn retire(&mut self, id: u64) {
+        self.slots.retain(|s| s.id != id);
+    }
+
+    fn live_bytes(&self) -> usize {
+        0
+    }
+
+    fn slot_cap(&self) -> Option<usize> {
+        Some(self.exe.batch)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::spec_decode::engine::tests_support::ToyModel;
+
+    fn reqs(n: usize, gap_ms: f64, max_new: usize) -> Vec<TokenRequest> {
+        (0..n)
+            .map(|i| TokenRequest {
+                id: i as u64,
+                prompt: vec![1, 2, 3],
+                max_new_tokens: max_new,
+                arrival_ms: i as f64 * gap_ms,
+            })
+            .collect()
+    }
+
+    #[test]
+    fn continuous_matches_sequential_outputs_on_toy_model() {
+        let target = ToyModel::new(3);
+        let seq = Scheduler::run(
+            reqs(6, 2.0, 10),
+            GreedyExecutor::new(&target),
+            &ServeCfg::sequential(),
+            0,
+        )
+        .unwrap();
+        let cont = Scheduler::run(
+            reqs(6, 2.0, 10),
+            GreedyExecutor::new(&target),
+            &ServeCfg::continuous(3),
+            0,
+        )
+        .unwrap();
+        assert_eq!(seq.completed.len(), 6);
+        assert_eq!(cont.completed.len(), 6);
+        assert_eq!(seq.total_tokens, cont.total_tokens);
+        for (a, b) in seq.completed.iter().zip(&cont.completed) {
+            assert_eq!(a.id, b.id);
+            assert_eq!(a.output, b.output, "continuous changed request {}", a.id);
+        }
+    }
+
+    #[test]
+    fn empty_rounds_jump_to_next_arrival_in_o1() {
+        let target = ToyModel::new(1);
+        let mut requests = reqs(2, 0.0, 4);
+        // a gap the old clock_ms += 1.0 busy-advance would crawl across
+        // one millisecond at a time (1e9 iterations)
+        requests[1].arrival_ms = 1e9;
+        let report = Scheduler::run(
+            requests,
+            GreedyExecutor::new(&target),
+            &ServeCfg::continuous(2),
+            0,
+        )
+        .unwrap();
+        assert_eq!(report.completed.len(), 2);
+        // the late request starts right at its arrival: no residual queueing
+        assert!(report.completed[1].ttft_ms < 1e6, "{}", report.completed[1].ttft_ms);
+    }
+
+    #[test]
+    fn zero_budget_requests_finish_empty() {
+        let target = ToyModel::new(2);
+        let mut requests = reqs(3, 1.0, 5);
+        requests[1].max_new_tokens = 0;
+        requests[2].prompt = vec![1u8; 64]; // fills max_t: no room to decode
+        let report = Scheduler::run(
+            requests,
+            GreedyExecutor::new(&target),
+            &ServeCfg::continuous(4),
+            0,
+        )
+        .unwrap();
+        assert_eq!(report.completed.len(), 3);
+        assert_eq!(report.completed[0].generated, 5);
+        assert_eq!(report.completed[1].generated, 0);
+        assert_eq!(report.completed[2].generated, 0);
+    }
+
+    /// Mock executor with synthetic KV accounting: each request reserves a
+    /// fixed byte count and runs for `max_new_tokens` rounds.
+    struct FakeExec {
+        bytes_per_req: usize,
+        live: Vec<(u64, usize)>,
+    }
+
+    impl StepExecutor for FakeExec {
+        fn projected_bytes(&self, _req: &TokenRequest) -> usize {
+            self.bytes_per_req
+        }
+
+        fn admit(&mut self, req: &TokenRequest) -> Result<()> {
+            self.live.push((req.id, req.max_new_tokens.max(1)));
+            Ok(())
+        }
+
+        fn step_round(&mut self, _rng: &mut Rng) -> Result<Vec<StepEvent>> {
+            let mut events = Vec::new();
+            for (id, left) in &mut self.live {
+                *left -= 1;
+                events.push(StepEvent {
+                    id: *id,
+                    tokens: vec![7],
+                    steps: 1,
+                    proposed: 0,
+                    accepted: 0,
+                    finished: *left == 0,
+                });
+            }
+            Ok(events)
+        }
+
+        fn retire(&mut self, id: u64) {
+            self.live.retain(|(i, _)| *i != id);
+        }
+
+        fn live_bytes(&self) -> usize {
+            self.live.len() * self.bytes_per_req
+        }
+    }
+
+    #[test]
+    fn kv_budget_caps_concurrency_without_starvation() {
+        let exec = FakeExec { bytes_per_req: 100, live: Vec::new() };
+        let cfg = ServeCfg::continuous(8).with_budget(250); // fits 2 of 100
+        let report = Scheduler::run(reqs(7, 0.0, 3), exec, &cfg, 0).unwrap();
+        assert_eq!(report.completed.len(), 7, "every request must complete");
+        assert!(report.peak_kv_bytes <= 250, "peak {} > budget", report.peak_kv_bytes);
+    }
+
+    #[test]
+    fn oversized_request_admitted_alone_not_starved() {
+        let exec = FakeExec { bytes_per_req: 1000, live: Vec::new() };
+        let cfg = ServeCfg::continuous(8).with_budget(250); // smaller than one request
+        let report = Scheduler::run(reqs(3, 0.0, 2), exec, &cfg, 0).unwrap();
+        assert_eq!(report.completed.len(), 3, "safety valve must prevent deadlock");
+    }
+
+    #[test]
+    fn static_policy_drains_chunks() {
+        let target = ToyModel::new(3);
+        let report = Scheduler::run(
+            reqs(5, 0.0, 6),
+            GreedyExecutor::new(&target),
+            &ServeCfg::static_batch(2),
+            0,
+        )
+        .unwrap();
+        assert_eq!(report.completed.len(), 5);
+        assert!(report.completed.iter().all(|c| c.generated == 6));
+    }
+
+    #[test]
+    fn static_policy_waits_to_fill_chunks_on_staggered_arrivals() {
+        let exec = FakeExec { bytes_per_req: 1, live: Vec::new() };
+        // arrivals 10 ms apart: a chunk of 2 must wait for its second
+        // member instead of degenerating to batch size 1
+        let report = Scheduler::run(reqs(4, 10.0, 3), exec, &ServeCfg::static_batch(2), 0).unwrap();
+        assert_eq!(report.completed.len(), 4);
+        // request 0 (arrival 0) only starts once request 1 (arrival 10)
+        // has arrived, so its first token lands after the 10 ms wait
+        assert!(
+            report.completed[0].ttft_ms >= 10.0,
+            "chunk started before it filled: ttft {}",
+            report.completed[0].ttft_ms
+        );
+    }
+
+    #[test]
+    fn admission_policy_parses() {
+        assert_eq!(AdmissionPolicy::parse("continuous").unwrap(), AdmissionPolicy::Continuous);
+        assert_eq!(AdmissionPolicy::parse("static").unwrap(), AdmissionPolicy::Static);
+        assert_eq!(AdmissionPolicy::parse("sequential").unwrap(), AdmissionPolicy::Sequential);
+        assert!(AdmissionPolicy::parse("magic").is_err());
+        assert_eq!(AdmissionPolicy::Continuous.name(), "continuous");
+    }
+}

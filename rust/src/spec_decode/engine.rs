@@ -24,6 +24,13 @@ pub trait LogitsModel {
     /// Logits at every position of `tokens` ([t][vocab]).
     fn seq_logits(&self, tokens: &[u8]) -> Result<Vec<Vec<f32>>>;
     fn max_t(&self) -> usize;
+    /// Resident K/V bytes one cached token costs in this model's decode
+    /// sessions — the unit of the serving scheduler's KV-memory admission
+    /// control. 0 for models without native caching (replay sessions hold
+    /// no per-token state).
+    fn kv_bytes_per_token(&self) -> usize {
+        0
+    }
 }
 
 impl LogitsModel for Rc<ModelExecutable> {
@@ -45,6 +52,10 @@ impl LogitsModel for Transformer {
     fn max_t(&self) -> usize {
         self.cfg.max_t
     }
+
+    fn kv_bytes_per_token(&self) -> usize {
+        self.cfg.kv_bytes_per_token()
+    }
 }
 
 /// Incremental decoding state for one request. `extend` feeds new tokens
@@ -62,12 +73,24 @@ pub trait DecodeSession<M: ?Sized> {
     }
     /// Keep only the first `keep` tokens (no-op if already shorter).
     fn rollback(&mut self, keep: usize);
+    /// Resident KV bytes this session currently holds (0 for sessions
+    /// without native caching).
+    fn kv_bytes(&self) -> usize {
+        0
+    }
 }
 
 /// Models that decode incrementally through per-request sessions.
 pub trait SessionModel: LogitsModel + Sized {
     type Session: DecodeSession<Self>;
     fn new_session(&self) -> Self::Session;
+    /// Session expected to hold at most `cap_t` tokens — an admission-time
+    /// sizing hint so serving sessions allocate only their projected peak
+    /// (keeping resident memory within the scheduler's KV budget). The
+    /// default ignores the hint.
+    fn new_session_bounded(&self, _cap_t: usize) -> Self::Session {
+        self.new_session()
+    }
 }
 
 /// Fallback session for models without native KV caching: replays the
@@ -130,6 +153,10 @@ impl DecodeSession<Transformer> for KvSession {
     fn rollback(&mut self, keep: usize) {
         self.cache.truncate(keep);
     }
+
+    fn kv_bytes(&self) -> usize {
+        self.cache.bytes()
+    }
 }
 
 impl SessionModel for Transformer {
@@ -137,6 +164,10 @@ impl SessionModel for Transformer {
 
     fn new_session(&self) -> KvSession {
         KvSession { cache: self.new_cache() }
+    }
+
+    fn new_session_bounded(&self, cap_t: usize) -> KvSession {
+        KvSession { cache: self.new_cache_bounded(cap_t) }
     }
 }
 
@@ -224,6 +255,79 @@ impl<'a, M: SessionModel> VanillaDecoder<'a, M> {
     }
 }
 
+/// One greedy speculative verify step over persistent sessions — the
+/// shared core of [`SpecDecoder::generate`] and the serving scheduler's
+/// `SpecExecutor` (one call per decode round), so the two paths cannot
+/// drift apart.
+///
+/// Draft catch-up + `room` proposals (one cached step each), a single
+/// target pass over catch-up + proposal, greedy acceptance, the target's
+/// bonus token (while `budget_left`/`limit` allow), then both caches
+/// rewind to the accepted prefix minus the trailing token the next
+/// catch-up re-feeds. Commits onto `seq`; returns
+/// `(committed tokens, proposed count, accepted count)`.
+#[allow(clippy::too_many_arguments)]
+pub fn spec_verify_step<D: SessionModel, T: SessionModel>(
+    draft: &D,
+    target: &T,
+    dsess: &mut D::Session,
+    tsess: &mut T::Session,
+    seq: &mut Vec<u8>,
+    room: usize,
+    budget_left: usize,
+    limit: usize,
+    sampler: &Sampler,
+    rng: &mut Rng,
+) -> Result<(Vec<u8>, usize, usize)> {
+    // draft proposes up to `room` tokens, one cached decode step each
+    // (the catch-up covers tokens committed last round)
+    let mut proposal = Vec::with_capacity(room);
+    let mut dlast = dsess
+        .extend(draft, &seq[dsess.len()..])?
+        .pop()
+        .expect("draft catch-up covers at least one token");
+    for i in 0..room {
+        let tok = sampler.sample(&dlast, rng);
+        proposal.push(tok);
+        if i + 1 < room {
+            dlast = dsess.extend(draft, &[tok])?.pop().unwrap();
+        }
+    }
+
+    // single target pass over catch-up + proposal; tl[i] is the logits
+    // row at position seq.len()-1+i, predicting seq.len()+i
+    let mut feed: Vec<u8> = seq[tsess.len()..].to_vec();
+    feed.extend_from_slice(&proposal);
+    let rows = tsess.extend(target, &feed)?;
+    let tl = &rows[rows.len() - (room + 1)..];
+
+    let mut n_acc = 0;
+    for (i, &tok) in proposal.iter().enumerate() {
+        if argmax(&tl[i]) as u8 == tok {
+            n_acc += 1;
+        } else {
+            break;
+        }
+    }
+    let mut committed = Vec::with_capacity(n_acc + 1);
+    for &tok in proposal.iter().take(n_acc) {
+        seq.push(tok);
+        committed.push(tok);
+    }
+    // bonus token from the target at the first unverified position
+    if committed.len() < budget_left && seq.len() < limit {
+        let bonus = argmax(&tl[n_acc]) as u8;
+        seq.push(bonus);
+        committed.push(bonus);
+    }
+
+    // rewind both caches to the accepted prefix (minus the trailing token
+    // the next catch-up re-feeds)
+    tsess.rollback(seq.len() - 1);
+    dsess.rollback(seq.len() - 1);
+    Ok((committed, proposal.len(), n_acc))
+}
+
 /// Speculative decoder: draft proposes, target verifies. Both models
 /// keep a KV session across steps; on rejection the caches roll back to
 /// the accepted prefix instead of re-forwarding the whole sequence.
@@ -254,7 +358,12 @@ impl<'a, D: SessionModel, T: SessionModel> SpecDecoder<'a, D, T> {
         let mut seq = prompt.to_vec();
         let mut stats = GenStats::default();
         let limit = self.target.max_t().min(self.draft.max_t());
-        let budget = max_new.min(limit.saturating_sub(prompt.len()));
+        // an empty prompt gives the draft no row to propose from
+        let budget = if prompt.is_empty() {
+            0
+        } else {
+            max_new.min(limit.saturating_sub(prompt.len()))
+        };
         if budget == 0 {
             stats.wall_s = t0.elapsed().as_secs_f64();
             return Ok((seq, stats));
@@ -272,55 +381,22 @@ impl<'a, D: SessionModel, T: SessionModel> SpecDecoder<'a, D, T> {
             if room == 0 {
                 break;
             }
-            // draft proposes up to `room` tokens, one cached decode step
-            // each (the catch-up covers tokens committed last round)
-            let mut proposal = Vec::with_capacity(room);
-            let mut dlast = dsess
-                .extend(self.draft, &seq[dsess.len()..])?
-                .pop()
-                .expect("draft catch-up covers at least one token");
-            for i in 0..room {
-                let tok = self.sampler.sample(&dlast, rng);
-                proposal.push(tok);
-                if i + 1 < room {
-                    dlast = dsess.extend(self.draft, &[tok])?.pop().unwrap();
-                }
-            }
-            stats.proposed += proposal.len();
-
-            // single target pass over catch-up + proposal; tl[i] is the
-            // logits row at position seq.len()-1+i, predicting seq.len()+i
-            let mut feed: Vec<u8> = seq[tsess.len()..].to_vec();
-            feed.extend_from_slice(&proposal);
-            let rows = tsess.extend(self.target, &feed)?;
-            let tl = &rows[rows.len() - (room + 1)..];
-
-            let mut n_acc = 0;
-            for (i, &tok) in proposal.iter().enumerate() {
-                let target_tok = argmax(&tl[i]) as u8;
-                if target_tok == tok {
-                    n_acc += 1;
-                } else {
-                    break;
-                }
-            }
-            stats.accepted_draft += n_acc;
-            for &tok in proposal.iter().take(n_acc) {
-                seq.push(tok);
-                stats.generated += 1;
-            }
-            // bonus token from the target at the first unverified position
-            if stats.generated < budget && seq.len() < limit {
-                let bonus = argmax(&tl[n_acc]) as u8;
-                seq.push(bonus);
-                stats.generated += 1;
-            }
+            let (committed, proposed, accepted) = spec_verify_step(
+                self.draft,
+                self.target,
+                &mut dsess,
+                &mut tsess,
+                &mut seq,
+                room,
+                budget - stats.generated,
+                limit,
+                &self.sampler,
+                rng,
+            )?;
+            stats.proposed += proposed;
+            stats.accepted_draft += accepted;
+            stats.generated += committed.len();
             stats.steps += 1;
-
-            // rewind both caches to the accepted prefix (minus the trailing
-            // token the next catch-up re-feeds)
-            tsess.rollback(seq.len() - 1);
-            dsess.rollback(seq.len() - 1);
         }
         stats.wall_s = t0.elapsed().as_secs_f64();
         Ok((seq, stats))
@@ -416,6 +492,18 @@ mod tests {
     fn stats_al_counts_bonus() {
         let s = GenStats { generated: 30, steps: 10, ..Default::default() };
         assert_eq!(s.al(), 3.0);
+    }
+
+    #[test]
+    fn empty_prompt_generates_nothing() {
+        let target = ToyModel::new(1);
+        let draft = ToyModel::new(1);
+        let mut rng = Rng::new(0);
+        let (seq, stats) = SpecDecoder::new(&draft, &target, 3)
+            .generate(&[], 10, &mut rng)
+            .unwrap();
+        assert!(seq.is_empty());
+        assert_eq!(stats.generated, 0);
     }
 
     #[test]

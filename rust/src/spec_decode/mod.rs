@@ -11,7 +11,7 @@ pub mod engine;
 pub mod spec_exit;
 
 pub use engine::{
-    DecodeSession, GenStats, KvSession, LogitsModel, ReplaySession, SessionModel, SpecDecoder,
-    VanillaDecoder,
+    spec_verify_step, DecodeSession, GenStats, KvSession, LogitsModel, ReplaySession,
+    SessionModel, SpecDecoder, VanillaDecoder,
 };
 pub use spec_exit::{ExitSignals, SpecExitController};

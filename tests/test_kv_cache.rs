@@ -200,7 +200,6 @@ fn spec_decode_with_cache_rollback_is_output_identical() {
 #[test]
 fn serve_batched_kv_matches_sequential() {
     use angelslim::data::TokenRequest;
-    use angelslim::server::BatcherCfg;
     let spec = FixtureSpec::default();
     let corpus = fixture_corpus(&spec, 2_048, 21);
     let target = fixture_target(4);
@@ -214,14 +213,7 @@ fn serve_batched_kv_matches_sequential() {
             })
             .collect()
     };
-    let sequential = ServingEngine::serve::<Transformer, _>(
-        make(),
-        &target,
-        None,
-        BatcherCfg::default(),
-        0,
-    )
-    .unwrap();
+    let sequential = ServingEngine::serve::<Transformer, _>(make(), &target, None, 0).unwrap();
     let batched = ServingEngine::serve_batched(make(), &target, 3).unwrap();
     assert_eq!(batched.completed.len(), 6);
     for (a, b) in sequential.completed.iter().zip(&batched.completed) {

@@ -11,7 +11,7 @@
 //!   * `fixture_corpus`                  — the calibration/eval dataset
 //!   * PTQ ladder fp8 → int4 → seq2 → ternary — §2's quantization suite
 //!   * SpecDecoder vs VanillaDecoder     — §3's lossless speculative loop
-//!   * Batcher + ServingEngine           — the deployment layer
+//!   * Scheduler + ServingEngine         — the deployment layer
 //!   * SparseAlgo masks on captured Q/K/V — §4.1's pattern estimators
 
 use angelslim::config::SlimConfig;
@@ -22,7 +22,7 @@ use angelslim::models::{AttnOverride, Transformer};
 use angelslim::quant::{
     AffineQuantizer, Fp8WeightQuantizer, Seq2Quantizer, TernaryQuantizer,
 };
-use angelslim::server::{BatcherCfg, ServingEngine};
+use angelslim::server::ServingEngine;
 use angelslim::sparse_attn::SparseAlgo;
 use angelslim::spec_decode::{SpecDecoder, VanillaDecoder};
 use angelslim::util::fixtures::{
@@ -106,8 +106,8 @@ fn speculative_decode_is_lossless_and_accepts_aligned_draft() {
     assert!(wstats.acceptance_rate() < 0.5, "{}", wstats.acceptance_rate());
 }
 
-/// The serving layer end-to-end: request stream → batcher → decode loop →
-/// report. Vanilla and speculative serving must complete every request
+/// The serving layer end-to-end: request stream → scheduler → decode loop
+/// → report. Vanilla and speculative serving must complete every request
 /// with identical outputs; speculative serving must commit >1 token per
 /// target step on the aligned draft.
 #[test]
@@ -124,22 +124,10 @@ fn serving_engine_end_to_end_report_is_sane() {
         gen.take(10)
     };
 
-    let vanilla = ServingEngine::serve::<Transformer, _>(
-        make_requests(),
-        &target,
-        None,
-        BatcherCfg::default(),
-        0,
-    )
-    .unwrap();
-    let spec_report = ServingEngine::serve(
-        make_requests(),
-        &target,
-        Some((&draft, 3)),
-        BatcherCfg::default(),
-        0,
-    )
-    .unwrap();
+    let vanilla =
+        ServingEngine::serve::<Transformer, _>(make_requests(), &target, None, 0).unwrap();
+    let spec_report =
+        ServingEngine::serve(make_requests(), &target, Some((&draft, 3)), 0).unwrap();
 
     for report in [&vanilla, &spec_report] {
         assert_eq!(report.completed.len(), 10);

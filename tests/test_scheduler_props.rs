@@ -1,0 +1,216 @@
+//! Property tests for the continuous-batching scheduler: randomized and
+//! fixture-driven traces must uphold the serving contracts — per-request
+//! outputs bit-identical to sequential decoding, live KV bytes within the
+//! admission budget, and completion of every request (no starvation) even
+//! under tight budgets. Failures reproduce deterministically via the
+//! seeded harness in `angelslim::util::testing`.
+
+use angelslim::data::TokenRequest;
+use angelslim::models::Transformer;
+use angelslim::server::{ServeCfg, ServingEngine};
+use angelslim::util::fixtures::{fixture_corpus, fixture_draft, fixture_target, FixtureSpec};
+use angelslim::util::testing::check;
+use angelslim::util::Rng;
+
+fn fixture_requests(corpus: &[u8], n: usize, max_new: usize) -> Vec<TokenRequest> {
+    (0..n)
+        .map(|i| TokenRequest {
+            id: i as u64,
+            prompt: corpus[i * 17..i * 17 + 8].to_vec(),
+            // heterogeneous lengths so retirement actually frees slots
+            max_new_tokens: if i % 2 == 0 { max_new } else { max_new / 3 + 1 },
+            arrival_ms: i as f64 * 0.5,
+        })
+        .collect()
+}
+
+/// Projected peak KV bytes the scheduler reserves for one greedy request.
+fn projected_greedy(model: &Transformer, r: &TokenRequest) -> usize {
+    (r.prompt.len() + r.max_new_tokens).min(model.cfg.max_t) * model.cfg.kv_bytes_per_token()
+}
+
+#[test]
+fn continuous_outputs_bit_identical_to_sequential_greedy() {
+    let spec = FixtureSpec::default();
+    let corpus = fixture_corpus(&spec, 2_048, 13);
+    let target = fixture_target(5);
+    let reqs = || fixture_requests(&corpus, 9, 12);
+
+    let sequential = ServingEngine::serve::<Transformer, _>(reqs(), &target, None, 0).unwrap();
+    for max_in_flight in [2, 4, 9] {
+        let continuous = ServingEngine::serve_scheduled::<Transformer, _>(
+            reqs(),
+            &target,
+            None,
+            &ServeCfg::continuous(max_in_flight),
+            0,
+        )
+        .unwrap();
+        assert_eq!(continuous.completed.len(), 9);
+        for (a, b) in sequential.completed.iter().zip(&continuous.completed) {
+            assert_eq!(a.id, b.id);
+            assert_eq!(
+                a.output, b.output,
+                "continuous (max_in_flight {max_in_flight}) changed request {}",
+                a.id
+            );
+            assert_eq!(a.generated, b.generated);
+        }
+    }
+}
+
+#[test]
+fn continuous_outputs_bit_identical_to_sequential_speculative() {
+    let spec = FixtureSpec::default();
+    let corpus = fixture_corpus(&spec, 2_048, 29);
+    let target = fixture_target(3);
+    let draft = fixture_draft(3);
+    let reqs = || fixture_requests(&corpus, 8, 12);
+
+    let sequential = ServingEngine::serve(reqs(), &target, Some((&draft, 3)), 0).unwrap();
+    let continuous = ServingEngine::serve_scheduled(
+        reqs(),
+        &target,
+        Some((&draft, 3)),
+        &ServeCfg::continuous(4),
+        0,
+    )
+    .unwrap();
+    assert_eq!(continuous.completed.len(), 8);
+    for (a, b) in sequential.completed.iter().zip(&continuous.completed) {
+        assert_eq!(a.id, b.id);
+        assert_eq!(a.output, b.output, "continuous spec changed request {}", a.id);
+    }
+    assert!(sequential.mean_al > 1.2, "AL {}", sequential.mean_al);
+    assert!(continuous.mean_al > 1.2, "AL {}", continuous.mean_al);
+    // aligned draft: the target accepts most proposals on either path
+    assert!(continuous.acceptance_rate() > 0.3, "{}", continuous.acceptance_rate());
+    assert_eq!(sequential.proposed, continuous.proposed);
+    assert_eq!(sequential.accepted, continuous.accepted);
+}
+
+#[test]
+fn live_kv_bytes_never_exceed_budget() {
+    let spec = FixtureSpec::default();
+    let corpus = fixture_corpus(&spec, 2_048, 7);
+    let target = fixture_target(5);
+    let reqs = fixture_requests(&corpus, 9, 12);
+    let worst = reqs.iter().map(|r| projected_greedy(&target, r)).max().unwrap();
+    // room for ~2 concurrent requests, far below max_in_flight's 8
+    let budget = 2 * worst + 64;
+    let report = ServingEngine::serve_scheduled::<Transformer, _>(
+        reqs,
+        &target,
+        None,
+        &ServeCfg::continuous(8).with_budget(budget),
+        0,
+    )
+    .unwrap();
+    assert_eq!(report.completed.len(), 9);
+    assert!(report.peak_kv_bytes > 0, "fixture sessions hold real KV bytes");
+    assert!(
+        report.peak_kv_bytes <= budget,
+        "peak live KV {} exceeded budget {budget}",
+        report.peak_kv_bytes
+    );
+}
+
+#[test]
+fn tight_budget_completes_every_request_with_correct_outputs() {
+    let spec = FixtureSpec::default();
+    let corpus = fixture_corpus(&spec, 2_048, 17);
+    let target = fixture_target(5);
+    let reqs = || fixture_requests(&corpus, 8, 10);
+    let worst = reqs().iter().map(|r| projected_greedy(&target, r)).max().unwrap();
+    // tightest non-degenerate budget: exactly one request at a time
+    let budget = worst;
+    let sequential = ServingEngine::serve::<Transformer, _>(reqs(), &target, None, 0).unwrap();
+    let tight = ServingEngine::serve_scheduled::<Transformer, _>(
+        reqs(),
+        &target,
+        None,
+        &ServeCfg::continuous(8).with_budget(budget),
+        0,
+    )
+    .unwrap();
+    assert_eq!(tight.completed.len(), 8, "tight budget must not starve any request");
+    assert!(tight.peak_kv_bytes <= budget);
+    for (a, b) in sequential.completed.iter().zip(&tight.completed) {
+        assert_eq!(a.id, b.id);
+        assert_eq!(a.output, b.output, "budgeted scheduling changed request {}", a.id);
+    }
+}
+
+#[test]
+fn speculative_budget_covers_draft_and_target_sessions() {
+    let spec = FixtureSpec::default();
+    let corpus = fixture_corpus(&spec, 2_048, 23);
+    let target = fixture_target(3);
+    let draft = fixture_draft(3);
+    let reqs = fixture_requests(&corpus, 6, 10);
+    let bpt = target.cfg.kv_bytes_per_token() + draft.cfg.kv_bytes_per_token();
+    let worst = reqs
+        .iter()
+        .map(|r| (r.prompt.len() + r.max_new_tokens).min(target.cfg.max_t) * bpt)
+        .max()
+        .unwrap();
+    let budget = 2 * worst;
+    let report = ServingEngine::serve_scheduled(
+        reqs,
+        &target,
+        Some((&draft, 3)),
+        &ServeCfg::continuous(6).with_budget(budget),
+        0,
+    )
+    .unwrap();
+    assert_eq!(report.completed.len(), 6);
+    assert!(report.peak_kv_bytes <= budget, "{} > {budget}", report.peak_kv_bytes);
+}
+
+/// Randomized traces and configurations: every request is served exactly
+/// once with outputs identical to sequential decoding, TTFT never lands
+/// after completion, and the KV budget holds whenever it admits at least
+/// one request.
+#[test]
+fn randomized_traces_uphold_serving_contracts() {
+    let spec = FixtureSpec::default();
+    let corpus = fixture_corpus(&spec, 4_096, 31);
+    let target = fixture_target(7);
+    check(8, |rng: &mut Rng| {
+        let n = 4 + rng.below(8);
+        let mut t = 0.0f64;
+        let reqs: Vec<TokenRequest> = (0..n)
+            .map(|i| {
+                t += rng.f64() * 2.0;
+                let start = rng.below(corpus.len() - 12);
+                TokenRequest {
+                    id: i as u64,
+                    prompt: corpus[start..start + 4 + rng.below(8)].to_vec(),
+                    max_new_tokens: 1 + rng.below(10),
+                    arrival_ms: t,
+                }
+            })
+            .collect();
+        let worst = reqs.iter().map(|r| projected_greedy(&target, r)).max().unwrap();
+        let budget = worst * (1 + rng.below(3));
+        let max_in_flight = 1 + rng.below(6);
+
+        let sequential =
+            ServingEngine::serve::<Transformer, _>(reqs.clone(), &target, None, 0).unwrap();
+        let continuous = ServingEngine::serve_scheduled::<Transformer, _>(
+            reqs,
+            &target,
+            None,
+            &ServeCfg::continuous(max_in_flight).with_budget(budget),
+            0,
+        )
+        .unwrap();
+        assert_eq!(continuous.completed.len(), n, "all requests served");
+        assert!(continuous.peak_kv_bytes <= budget, "budget violated");
+        for (a, b) in sequential.completed.iter().zip(&continuous.completed) {
+            assert_eq!(a.id, b.id, "ids aligned");
+            assert_eq!(a.output, b.output, "outputs identical");
+            assert!(b.ttft_ms >= 0.0 && b.ttft_ms <= b.total_ms + 1e-9);
+        }
+    });
+}
