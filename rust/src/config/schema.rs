@@ -157,6 +157,7 @@ impl SlimConfig {
                     serve.i64_or("kv_budget_bytes", 0),
                     "serve.kv_budget_bytes",
                 )?,
+                workers: non_negative(serve.i64_or("workers", 1), "serve.workers")?,
             },
         };
         cfg.validate()?;
@@ -179,6 +180,17 @@ impl SlimConfig {
         }
         if self.serve.max_in_flight == 0 {
             bail!("serve.max_in_flight must be >= 1");
+        }
+        if self.serve.workers == 0 {
+            bail!("serve.workers must be >= 1 (scheduler worker count)");
+        }
+        if self.serve.kv_budget_bytes > 0 && self.serve.kv_budget_bytes < self.serve.workers {
+            bail!(
+                "serve.kv_budget_bytes = {} splits to zero across {} workers; \
+                 raise the budget, reduce workers, or set 0 for unlimited",
+                self.serve.kv_budget_bytes,
+                self.serve.workers
+            );
         }
         Ok(())
     }
@@ -236,6 +248,7 @@ serve:
   policy: static
   max_in_flight: 4
   kv_budget_bytes: 65536
+  workers: 2
 "#;
 
     #[test]
@@ -250,6 +263,7 @@ serve:
         assert_eq!(c.serve.policy, AdmissionPolicy::Static);
         assert_eq!(c.serve.max_in_flight, 4);
         assert_eq!(c.serve.kv_budget_bytes, 65536);
+        assert_eq!(c.serve.workers, 2);
     }
 
     #[test]
@@ -264,6 +278,7 @@ serve:
         assert_eq!(c.serve.policy, AdmissionPolicy::Continuous);
         assert_eq!(c.serve.max_in_flight, 8);
         assert_eq!(c.serve.kv_budget_bytes, 0);
+        assert_eq!(c.serve.workers, 1, "single worker unless configured");
     }
 
     #[test]
@@ -276,13 +291,17 @@ serve:
 
     #[test]
     fn rejects_negative_serve_values() {
-        for field in ["max_in_flight", "kv_budget_bytes"] {
+        for field in ["max_in_flight", "kv_budget_bytes", "workers"] {
             let r = SlimConfig::from_str(&format!(
                 "model:\n  name: m\ncompression:\n  method: quantization\nserve:\n  {field}: -1\n",
             ));
             assert!(r.is_err(), "negative {field} must not wrap to usize::MAX");
         }
     }
+
+    // zero-worker and budget-splits-to-zero rejections are covered at the
+    // integration level in tests/test_configs.rs (which also exercises the
+    // executor-aware ensure_requests_fit guard)
 
     #[test]
     fn rejects_unknown_method() {

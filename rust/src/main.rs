@@ -13,7 +13,7 @@ use angelslim::data::RequestGen;
 use angelslim::eval;
 use angelslim::models::Transformer;
 use angelslim::runtime::ArtifactRegistry;
-use angelslim::server::ServingEngine;
+use angelslim::server::{GreedyExecutor, ServingEngine, SpecExecutor};
 use angelslim::util::table::{f2, Table};
 use anyhow::Result;
 
@@ -123,12 +123,21 @@ fn cmd_serve_config(path: &str, n: usize) -> Result<()> {
     gen.max_new_tokens = 24;
     let requests = gen.take(n);
     println!(
-        "serving {n} requests | policy={} max_in_flight={} kv_budget_bytes={}",
+        "serving {n} requests | policy={} workers={} max_in_flight={} kv_budget_bytes={}",
         serve_cfg.policy.name(),
+        serve_cfg.workers,
         serve_cfg.max_in_flight,
         serve_cfg.kv_budget_bytes
     );
     let gamma = cfg.compression.num_speculative_tokens.max(1);
+    // loud misconfiguration guard: a budget share no request fits would
+    // silently collapse the pool onto the oversized-request safety valve
+    match &draft {
+        Some(d) => {
+            serve_cfg.ensure_requests_fit(&SpecExecutor::new(d, &target, gamma), &requests)?
+        }
+        None => serve_cfg.ensure_requests_fit(&GreedyExecutor::new(&target), &requests)?,
+    }
     let report = match &draft {
         Some(d) => ServingEngine::serve_scheduled(
             requests,
@@ -153,7 +162,9 @@ fn print_serve_report(title: &str, report: &angelslim::server::ServeReport) {
     let mut t = Table::new(title, &["metric", "value"]);
     t.row_strs(&["requests", &report.completed.len().to_string()]);
     t.row_strs(&["tokens", &report.total_tokens.to_string()]);
+    t.row_strs(&["workers", &report.workers().to_string()]);
     t.row_strs(&["TPS", &f2(report.tps())]);
+    t.row_strs(&["TPS (virtual clock)", &f2(report.virtual_tps())]);
     t.row_strs(&["AL", &f2(report.mean_al)]);
     if report.proposed > 0 {
         t.row_strs(&["acceptance", &f2(report.acceptance_rate())]);

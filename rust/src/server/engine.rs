@@ -1,9 +1,10 @@
 //! Serving entry points — thin policy wrappers over the one
-//! [`Scheduler`] loop (see `server/scheduler.rs`). Sequential serving,
-//! static batching, and the PJRT batched path are degenerate
-//! configurations of the same continuous-batching scheduler, so TTFT and
-//! total latency mean the same thing on every path: per-request, on the
-//! unified virtual clock, measured from arrival.
+//! [`WorkerPool`] loop (see `server/scheduler.rs`). Sequential serving,
+//! static batching, the PJRT batched path, and single-worker continuous
+//! batching are degenerate configurations of the same sharded
+//! work-stealing scheduler, so TTFT and total latency mean the same
+//! thing on every path and every worker count: per-request, on the
+//! unified virtual timeline, measured from arrival.
 
 use crate::data::TokenRequest;
 use crate::spec_decode::SessionModel;
@@ -11,7 +12,7 @@ use crate::util::Summary;
 use anyhow::Result;
 
 use super::scheduler::{
-    GreedyExecutor, PjrtBatchExecutor, Scheduler, ServeCfg, SpecExecutor,
+    GreedyExecutor, PjrtBatchExecutor, Scheduler, ServeCfg, SpecExecutor, WorkerPool,
 };
 
 #[derive(Clone, Debug)]
@@ -30,6 +31,11 @@ pub struct ServeReport {
     /// completed requests, ordered by id
     pub completed: Vec<CompletedRequest>,
     pub wall_s: f64,
+    /// end of the last decode round on the virtual timeline (max worker
+    /// clock): the schedule's makespan. With N workers the pool executes
+    /// rounds one at a time but models the workers as parallel replicas,
+    /// so this — not `wall_s` — is the time the sharded schedule takes.
+    pub makespan_ms: f64,
     pub total_tokens: usize,
     /// tokens committed per target step, from actual step counts (1.0 for
     /// greedy decoding; > 1 when speculation accepts proposals)
@@ -38,8 +44,13 @@ pub struct ServeReport {
     pub proposed: usize,
     /// speculative tokens accepted across all requests
     pub accepted: usize,
-    /// max resident KV bytes observed across decode rounds
+    /// max resident KV bytes observed across decode rounds, summed over
+    /// all workers
     pub peak_kv_bytes: usize,
+    /// per-worker max resident KV bytes (length = worker count) — each
+    /// entry stays within that worker's `ServeCfg::per_worker_budgets`
+    /// share (property-tested in `tests/test_sharded_props.rs`)
+    pub worker_peak_kv_bytes: Vec<usize>,
 }
 
 impl ServeReport {
@@ -49,6 +60,24 @@ impl ServeReport {
         } else {
             self.total_tokens as f64 / self.wall_s
         }
+    }
+
+    /// Tokens per second on the virtual timeline (total tokens over the
+    /// schedule makespan) — the throughput the worker pool models, and the
+    /// number that scales with `ServeCfg::workers` (`bench_sharded`
+    /// tracks it; `tps()` measures the simulation's real wall time, which
+    /// executes workers' rounds one at a time).
+    pub fn virtual_tps(&self) -> f64 {
+        if self.makespan_ms <= 0.0 {
+            0.0
+        } else {
+            self.total_tokens as f64 / (self.makespan_ms / 1e3)
+        }
+    }
+
+    /// Worker count that produced this report.
+    pub fn workers(&self) -> usize {
+        self.worker_peak_kv_bytes.len().max(1)
     }
 
     /// Fraction of speculative proposals the target accepted (0.0 when
@@ -86,7 +115,11 @@ impl ServingEngine {
     }
 
     /// Serve under an explicit scheduler configuration — the continuous
-    /// batching entry point (admission policy, in-flight cap, KV budget).
+    /// batching / sharded entry point (admission policy, per-worker
+    /// in-flight cap, KV budget, worker count). `cfg.workers > 1` staffs a
+    /// [`WorkerPool`] with one executor per worker, all borrowing the same
+    /// model(s); per-request outputs stay bit-identical to sequential
+    /// decoding for every worker count.
     pub fn serve_scheduled<D: SessionModel, T: SessionModel>(
         requests: Vec<TokenRequest>,
         target: &T,
@@ -96,9 +129,9 @@ impl ServingEngine {
     ) -> Result<ServeReport> {
         match draft {
             Some((d, gamma)) => {
-                Scheduler::run(requests, SpecExecutor::new(d, target, gamma), cfg, seed)
+                WorkerPool::run(requests, |_| SpecExecutor::new(d, target, gamma), cfg, seed)
             }
-            None => Scheduler::run(requests, GreedyExecutor::new(target), cfg, seed),
+            None => WorkerPool::run(requests, |_| GreedyExecutor::new(target), cfg, seed),
         }
     }
 

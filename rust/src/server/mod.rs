@@ -1,8 +1,10 @@
 //! Serving engine — the deployment layer the paper targets (vLLM/SGLang
-//! analogue). One continuous-batching scheduler (request state machine +
-//! KV-memory admission control between decode rounds) drives every serve
-//! path; sequential and static batching are degenerate configurations.
-//! TTFT / latency / throughput metrics share one virtual-clock time model.
+//! analogue). One sharded continuous-batching scheduler (request state
+//! machine + per-worker KV-memory admission control between decode
+//! rounds, work-stealing from a shared FIFO queue) drives every serve
+//! path; sequential, static batching, and single-worker serving are
+//! degenerate configurations. TTFT / latency / throughput metrics share
+//! one virtual-clock time model across worker counts.
 
 pub mod engine;
 pub mod scheduler;
@@ -10,5 +12,5 @@ pub mod scheduler;
 pub use engine::{CompletedRequest, ServeReport, ServingEngine};
 pub use scheduler::{
     AdmissionPolicy, GreedyExecutor, PjrtBatchExecutor, ReqState, Scheduler, ServeCfg,
-    SpecExecutor, StepEvent, StepExecutor,
+    SpecExecutor, StepEvent, StepExecutor, WorkerPool,
 };

@@ -1,16 +1,23 @@
-//! Continuous-batching scheduler with KV-memory admission control.
+//! Sharded continuous-batching scheduler with KV-memory admission control.
 //!
 //! One loop serves every path: a per-request state machine
 //!
 //!     Queued ──admit──▶ Prefill ──first step──▶ Decoding ──▶ Finished
 //!
-//! driven by a [`Scheduler`] that, **between every decode round**, retires
-//! finished requests and admits queued ones under a configurable KV-memory
-//! budget (projected from [`KvCache`] bytes accounting), so a long-running
-//! decode no longer blocks newly arrived short requests. Static batching
-//! and sequential serving are degenerate configurations of the same loop
-//! (see [`AdmissionPolicy`]), which is what unifies the time model across
-//! `ServingEngine::serve` / `serve_batched` / `serve_batched_pjrt`.
+//! driven by a [`WorkerPool`] of `workers` independent scheduler loops —
+//! each with its own [`StepExecutor`], KV-budget share, live set, and
+//! compute clock — pulling from **one shared FIFO queue**. Between every
+//! decode round a worker retires finished requests, and admission is
+//! **work-stealing**: the worker that can start the queue head earliest
+//! (an idle worker jumps its clock to the arrival in O(1)) steals it,
+//! under that worker's KV-memory budget share (projected from [`KvCache`]
+//! bytes accounting). A request that fits *no* worker's budget share is
+//! routed to an idle least-loaded worker to run alone (safety valve)
+//! instead of starving. Static batching, sequential serving, and the
+//! single-worker [`Scheduler`] are degenerate configurations of the same
+//! loop (see [`AdmissionPolicy`] / [`ServeCfg::workers`]), which is what
+//! unifies the time model across `ServingEngine::serve` / `serve_batched`
+//! / `serve_batched_pjrt` / sharded serving.
 //!
 //! Compute is pluggable through [`StepExecutor`]: greedy KV-session
 //! decoding ([`GreedyExecutor`]), speculative draft+target sessions with
@@ -18,11 +25,20 @@
 //! executable ([`PjrtBatchExecutor`]).
 //!
 //! Time model (unified across all paths): request *arrivals* are virtual
-//! (from the workload trace); compute occupies real wall-clock measured
-//! around each decode round. The virtual clock advances by the measured
-//! round time; an empty round jumps straight to the next arrival in O(1)
-//! (no busy-advance). Per-request TTFT = first-token round end − arrival,
-//! total = finish round end − arrival, on the same clock everywhere.
+//! (from the workload trace) on one global timeline; compute occupies
+//! real wall-clock measured around each decode round **on the worker
+//! that ran it**, so worker clocks advance independently (parallel
+//! replicas on the virtual timeline). An empty round jumps straight to
+//! the earliest next event across workers — never further than the
+//! arrival the jumping worker is about to admit — in O(1) (no
+//! busy-advance). Per-request TTFT = first-token round end − arrival,
+//! total = finish round end − arrival, on the same timeline everywhere,
+//! so sharded reports compare directly against single-worker ones.
+//!
+//! Because every executor decodes each request in its own session(s),
+//! per-request outputs are **bit-identical** for every worker count and
+//! admission interleaving (property-tested in
+//! `tests/test_sharded_props.rs`).
 //!
 //! [`KvCache`]: crate::models::KvCache
 
@@ -79,16 +95,22 @@ impl AdmissionPolicy {
 #[derive(Clone, Debug, PartialEq)]
 pub struct ServeCfg {
     pub policy: AdmissionPolicy,
-    /// concurrent-request cap (executors may clamp it further, e.g. to the
-    /// PJRT batch dimension)
+    /// concurrent-request cap **per worker** (executors may clamp it
+    /// further, e.g. to the PJRT batch dimension)
     pub max_in_flight: usize,
-    /// KV-memory admission budget in bytes; 0 = unlimited. Admission
-    /// reserves each request's *projected peak* KV bytes up front — and
-    /// sessions are allocated at exactly that bound (`new_session_bounded`)
-    /// — so both observable and resident KV memory stay within the budget.
-    /// A single request projected over the whole budget is admitted alone
-    /// (safety valve) rather than starving.
+    /// Total KV-memory admission budget in bytes, split evenly across
+    /// `workers`; 0 = unlimited. Admission reserves each request's
+    /// *projected peak* KV bytes up front against its worker's share —
+    /// and sessions are allocated at exactly that bound
+    /// (`new_session_bounded`) — so both observable and resident KV
+    /// memory stay within every worker's share. A request projected over
+    /// every worker's share is admitted alone on an idle worker (safety
+    /// valve) rather than starving.
     pub kv_budget_bytes: usize,
+    /// Number of scheduler workers sharing the FIFO queue (work-stealing
+    /// admission). 1 = the classic single-worker scheduler; 0 is invalid
+    /// and rejected at config validation.
+    pub workers: usize,
 }
 
 impl Default for ServeCfg {
@@ -97,6 +119,7 @@ impl Default for ServeCfg {
             policy: AdmissionPolicy::Continuous,
             max_in_flight: 8,
             kv_budget_bytes: 0,
+            workers: 1,
         }
     }
 }
@@ -121,6 +144,60 @@ impl ServeCfg {
     pub fn with_budget(mut self, kv_budget_bytes: usize) -> Self {
         self.kv_budget_bytes = kv_budget_bytes;
         self
+    }
+
+    pub fn with_workers(mut self, workers: usize) -> Self {
+        self.workers = workers;
+        self
+    }
+
+    /// Each worker's KV-budget share: `kv_budget_bytes` split evenly, the
+    /// remainder spread over the first workers, so shares always sum to
+    /// the configured total. A nonzero total smaller than the worker
+    /// count would leave trailing shares at 0 — i.e. silently unlimited —
+    /// so both config validation and [`WorkerPool::run`] reject that
+    /// combination loudly instead.
+    pub fn per_worker_budgets(&self) -> Vec<usize> {
+        let n = self.workers.max(1);
+        if self.kv_budget_bytes == 0 {
+            return vec![0; n];
+        }
+        let base = self.kv_budget_bytes / n;
+        let rem = self.kv_budget_bytes % n;
+        (0..n).map(|i| base + usize::from(i < rem)).collect()
+    }
+
+    /// Loud misconfiguration guard for config-driven serving: with a
+    /// nonzero budget, at least the smallest request of `requests` must
+    /// fit one worker's share. Otherwise *every* request would fall back
+    /// to the oversized-request safety valve and the pool would silently
+    /// degenerate to budget-less one-at-a-time serving.
+    pub fn ensure_requests_fit<E: StepExecutor>(
+        &self,
+        executor: &E,
+        requests: &[TokenRequest],
+    ) -> Result<()> {
+        if self.kv_budget_bytes == 0 || requests.is_empty() {
+            return Ok(());
+        }
+        let share = self.per_worker_budgets().into_iter().max().unwrap_or(0);
+        let min_need = requests
+            .iter()
+            .map(|r| executor.projected_bytes(r))
+            .min()
+            .unwrap_or(0);
+        if min_need > share {
+            bail!(
+                "serve.kv_budget_bytes = {} splits to {share} bytes per worker \
+                 ({} workers), smaller than the smallest request's projected \
+                 peak KV of {min_need} bytes; every request would need the \
+                 oversized-request safety valve — raise the budget or reduce \
+                 workers",
+                self.kv_budget_bytes,
+                self.workers.max(1),
+            );
+        }
+        Ok(())
     }
 }
 
@@ -190,33 +267,126 @@ struct LiveReq {
     reserved_bytes: usize,
 }
 
-/// The one serve loop. All `ServingEngine` entry points are thin policy
-/// wrappers over [`Scheduler::run`].
+/// Single-worker serve loop — the degenerate [`WorkerPool`] of one worker,
+/// kept as the entry point for callers that hand over one concrete
+/// executor (`serve_batched`, the PJRT path, unit tests).
 pub struct Scheduler;
 
 impl Scheduler {
+    /// Run `executor` as a one-worker pool. A single executor can only
+    /// staff one worker, so `cfg.workers > 1` is a loud error here (no
+    /// silent single-worker fallback); sharded callers go through
+    /// [`WorkerPool::run`] with an executor factory.
     pub fn run<E: StepExecutor>(
-        mut requests: Vec<TokenRequest>,
-        mut executor: E,
+        requests: Vec<TokenRequest>,
+        executor: E,
         cfg: &ServeCfg,
         seed: u64,
     ) -> Result<ServeReport> {
-        let mut rng = Rng::new(seed);
+        if cfg.workers > 1 {
+            bail!(
+                "Scheduler::run staffs exactly one worker but cfg.workers = {}; \
+                 use WorkerPool::run with an executor factory for sharded serving",
+                cfg.workers
+            );
+        }
+        let mut slot = Some(executor);
+        let one = ServeCfg { workers: 1, ..cfg.clone() };
+        WorkerPool::run(
+            requests,
+            move |_| slot.take().expect("a one-worker pool builds one executor"),
+            &one,
+            seed,
+        )
+    }
+}
+
+/// One worker's slice of the pool: its executor, KV-budget share, live
+/// set, and compute clock.
+struct PoolWorker<E: StepExecutor> {
+    executor: E,
+    rng: Rng,
+    /// this worker's position on the shared virtual timeline
+    clock_ms: f64,
+    live: Vec<LiveReq>,
+    reserved_bytes: usize,
+    /// KV-budget share (0 = unlimited)
+    budget: usize,
+    max_in_flight: usize,
+    /// max resident KV bytes observed on this worker
+    peak_kv_bytes: usize,
+    /// this worker's `executor.live_bytes()` as of its last state change
+    /// (admission / round / retirement) — lets the pool sample the total
+    /// concurrent residency without re-summing every executor each round
+    cached_live_bytes: usize,
+}
+
+/// What the pool does next: run a decode round on a busy worker, or let
+/// the designated stealer admit the queue head.
+enum PoolAct {
+    Round(usize),
+    Admit(usize),
+}
+
+/// The sharded serve loop: `cfg.workers` independent scheduler loops over
+/// one shared FIFO queue with work-stealing admission. All `ServingEngine`
+/// entry points are thin policy wrappers over this run (single-worker via
+/// [`Scheduler::run`]).
+pub struct WorkerPool;
+
+impl WorkerPool {
+    /// `make_executor(worker_index)` is called once per worker; executors
+    /// typically share one immutable model reference.
+    pub fn run<E: StepExecutor, F: FnMut(usize) -> E>(
+        mut requests: Vec<TokenRequest>,
+        mut make_executor: F,
+        cfg: &ServeCfg,
+        seed: u64,
+    ) -> Result<ServeReport> {
+        let n_workers = cfg.workers.max(1);
+        if cfg.kv_budget_bytes > 0 && cfg.kv_budget_bytes < n_workers {
+            // enforced here as well as at config validation: a split that
+            // leaves any worker a zero share would make that worker
+            // silently unlimited and the pool's resident KV could exceed
+            // the configured total
+            bail!(
+                "kv_budget_bytes = {} splits to zero across {n_workers} workers; \
+                 raise the budget, reduce workers, or set 0 for unlimited",
+                cfg.kv_budget_bytes
+            );
+        }
+        let budgets = cfg.per_worker_budgets();
+        let mut workers: Vec<PoolWorker<E>> = (0..n_workers)
+            .map(|w| {
+                let executor = make_executor(w);
+                let mut max_in_flight = match cfg.policy {
+                    AdmissionPolicy::Sequential => 1,
+                    _ => cfg.max_in_flight.max(1),
+                };
+                if let Some(cap) = executor.slot_cap() {
+                    max_in_flight = max_in_flight.min(cap.max(1));
+                }
+                PoolWorker {
+                    executor,
+                    // worker 0 keeps the bare seed, so a one-worker pool is
+                    // bit-identical to the historical single scheduler
+                    rng: Rng::new(seed ^ (w as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15)),
+                    clock_ms: 0.0,
+                    live: Vec::new(),
+                    reserved_bytes: 0,
+                    budget: budgets[w],
+                    max_in_flight,
+                    peak_kv_bytes: 0,
+                    cached_live_bytes: 0,
+                }
+            })
+            .collect();
+
+        let n_submitted = requests.len();
+        let t0 = Instant::now();
         // stable sort: FIFO among simultaneous arrivals
         requests.sort_by(|a, b| a.arrival_ms.total_cmp(&b.arrival_ms));
-        let mut max_in_flight = match cfg.policy {
-            AdmissionPolicy::Sequential => 1,
-            _ => cfg.max_in_flight.max(1),
-        };
-        if let Some(cap) = executor.slot_cap() {
-            max_in_flight = max_in_flight.min(cap.max(1));
-        }
-
-        let t0 = Instant::now();
-        let mut clock_ms = 0.0f64;
         let mut queue: VecDeque<TokenRequest> = requests.into();
-        let mut live: Vec<LiveReq> = Vec::new();
-        let mut reserved_bytes = 0usize;
         let mut completed: Vec<CompletedRequest> = Vec::new();
         let mut total_tokens = 0usize;
         let mut al_num = 0.0f64;
@@ -224,137 +394,269 @@ impl Scheduler {
         let mut proposed = 0usize;
         let mut accepted = 0usize;
         let mut peak_kv_bytes = 0usize;
+        // running sum of every worker's cached_live_bytes
+        let mut pool_live_bytes = 0usize;
 
         loop {
-            // ── between-round admission ──────────────────────────────
-            let may_admit = match cfg.policy {
-                AdmissionPolicy::Static => {
-                    // classic static batching waits for the whole chunk:
-                    // jump the clock to the last arrival of the requests
-                    // the next chunk can actually admit (slot cap AND KV
-                    // budget), so chunks neither degenerate to size 1 on
-                    // staggered traces nor wait for arrivals the budget
-                    // could never seat
-                    if live.is_empty() && !queue.is_empty() {
-                        let mut k = 0usize;
-                        let mut sum = 0usize;
-                        for r in queue.iter().take(max_in_flight) {
-                            let need = executor.projected_bytes(r);
-                            let fits = cfg.kv_budget_bytes == 0
-                                || sum + need <= cfg.kv_budget_bytes
-                                || (k == 0 && need > cfg.kv_budget_bytes);
-                            if !fits {
-                                break;
-                            }
-                            sum += need;
-                            k += 1;
-                        }
-                        let chunk_arrival = queue
-                            .iter()
-                            .take(k)
-                            .map(|r| r.arrival_ms)
-                            .fold(f64::NEG_INFINITY, f64::max);
-                        clock_ms = clock_ms.max(chunk_arrival);
-                    }
-                    live.is_empty()
+            // ── earliest next event across workers ───────────────────
+            // A busy worker can run a round at its current clock; the
+            // designated stealer can admit the queue head at
+            // max(its clock, head arrival). The earliest acts; ties go to
+            // the stealer so admission lands before the round it feeds
+            // (the single-worker loop's admit-then-step order).
+            let mut best_busy: Option<usize> = None;
+            for (i, w) in workers.iter().enumerate() {
+                if w.live.is_empty() {
+                    continue;
                 }
-                _ => true,
+                let earlier = match best_busy {
+                    None => true,
+                    Some(b) => w.clock_ms < workers[b].clock_ms,
+                };
+                if earlier {
+                    best_busy = Some(i);
+                }
+            }
+            let stealer = Self::pick_stealer(&workers, queue.front(), cfg.policy);
+
+            let act = match (best_busy, stealer) {
+                (None, None) => break, // queue drained, every worker idle
+                (Some(b), None) => PoolAct::Round(b),
+                (None, Some((s, _))) => PoolAct::Admit(s),
+                (Some(b), Some((s, start))) => {
+                    if start <= workers[b].clock_ms {
+                        PoolAct::Admit(s)
+                    } else {
+                        PoolAct::Round(b)
+                    }
+                }
             };
-            if may_admit {
-                while live.len() < max_in_flight {
-                    let Some(head) = queue.front() else { break };
-                    if head.arrival_ms > clock_ms {
-                        break;
-                    }
-                    let need = executor.projected_bytes(head);
-                    let fits = cfg.kv_budget_bytes == 0
-                        || reserved_bytes + need <= cfg.kv_budget_bytes
-                        // oversized-request safety valve: a request that
-                        // could never fit runs alone instead of starving
-                        || (live.is_empty() && need > cfg.kv_budget_bytes);
-                    if !fits {
-                        // strict FIFO: never admit past a blocked head, so
-                        // freed bytes always reach the oldest request
-                        break;
-                    }
-                    let req = queue.pop_front().unwrap();
-                    executor.admit(&req)?;
-                    reserved_bytes += need;
-                    live.push(LiveReq {
-                        id: req.id,
-                        arrival_ms: req.arrival_ms,
-                        state: ReqState::Prefill,
-                        output: Vec::new(),
-                        first_token_ms: None,
-                        reserved_bytes: need,
-                    });
-                }
-            }
 
-            if live.is_empty() {
-                let Some(head) = queue.front() else { break };
-                // empty round: jump the clock straight to the next arrival
-                // in O(1) — the worker sleeps until then
-                clock_ms = clock_ms.max(head.arrival_ms);
-                continue;
-            }
-
-            // ── one measured decode round over the live set ──────────
-            let round_t0 = Instant::now();
-            let events = executor.step_round(&mut rng)?;
-            clock_ms += round_t0.elapsed().as_secs_f64() * 1e3;
-            peak_kv_bytes = peak_kv_bytes.max(executor.live_bytes());
-
-            // ── retire finished, book metrics on the shared clock ────
-            for ev in events {
-                let idx = live
-                    .iter()
-                    .position(|l| l.id == ev.id)
-                    .expect("step event for a request that was never admitted");
-                {
-                    let l = &mut live[idx];
-                    debug_assert!(
-                        matches!(l.state, ReqState::Prefill | ReqState::Decoding),
-                        "step event for a request outside Prefill/Decoding"
-                    );
-                    if !ev.tokens.is_empty() {
-                        if l.first_token_ms.is_none() {
-                            l.first_token_ms = Some(clock_ms);
+            match act {
+                // ── work-stealing admission of the queue head ────────
+                PoolAct::Admit(s) => {
+                    match cfg.policy {
+                        AdmissionPolicy::Static => {
+                            Self::admit_static_chunk(&mut workers[s], &mut queue)?
                         }
-                        l.state = ReqState::Decoding;
+                        _ => {
+                            let w = &mut workers[s];
+                            let req =
+                                queue.pop_front().expect("stealer needs a queue head");
+                            // empty-round jump, multi-worker aware: only the
+                            // stealer advances, straight to the arrival it is
+                            // about to seat, in O(1)
+                            if req.arrival_ms > w.clock_ms {
+                                w.clock_ms = req.arrival_ms;
+                            }
+                            Self::admit_one(w, req)?;
+                        }
                     }
-                    total_tokens += ev.tokens.len();
-                    al_num += ev.tokens.len() as f64;
-                    al_den += ev.steps as f64;
-                    proposed += ev.proposed;
-                    accepted += ev.accepted;
-                    l.output.extend_from_slice(&ev.tokens);
+                    let w = &mut workers[s];
+                    let now_bytes = w.executor.live_bytes();
+                    pool_live_bytes = pool_live_bytes - w.cached_live_bytes + now_bytes;
+                    w.cached_live_bytes = now_bytes;
                 }
-                if ev.finished {
-                    let l = live.swap_remove(idx);
-                    executor.retire(l.id);
-                    reserved_bytes -= l.reserved_bytes;
-                    completed.push(CompletedRequest {
-                        id: l.id,
-                        generated: l.output.len(),
-                        ttft_ms: l.first_token_ms.unwrap_or(clock_ms) - l.arrival_ms,
-                        total_ms: clock_ms - l.arrival_ms,
-                        output: l.output,
-                    });
+
+                // ── one measured decode round on one worker ──────────
+                PoolAct::Round(b) => {
+                    let events = {
+                        let w = &mut workers[b];
+                        let round_t0 = Instant::now();
+                        let events = w.executor.step_round(&mut w.rng)?;
+                        w.clock_ms += round_t0.elapsed().as_secs_f64() * 1e3;
+                        events
+                    };
+                    let w = &mut workers[b];
+                    // pool-wide concurrent residency, sampled post-round /
+                    // pre-retirement: other workers' caches are current
+                    // (refreshed on their every admission/round), so only
+                    // worker b needs a fresh read
+                    let round_bytes = w.executor.live_bytes();
+                    peak_kv_bytes = peak_kv_bytes
+                        .max(pool_live_bytes - w.cached_live_bytes + round_bytes);
+                    w.peak_kv_bytes = w.peak_kv_bytes.max(round_bytes);
+
+                    // retire finished, book metrics on this worker's clock
+                    let now = w.clock_ms;
+                    for ev in events {
+                        let idx = w
+                            .live
+                            .iter()
+                            .position(|l| l.id == ev.id)
+                            .expect("step event for a request that was never admitted");
+                        {
+                            let l = &mut w.live[idx];
+                            debug_assert!(
+                                matches!(l.state, ReqState::Prefill | ReqState::Decoding),
+                                "step event for a request outside Prefill/Decoding"
+                            );
+                            if !ev.tokens.is_empty() {
+                                if l.first_token_ms.is_none() {
+                                    l.first_token_ms = Some(now);
+                                }
+                                l.state = ReqState::Decoding;
+                            }
+                            total_tokens += ev.tokens.len();
+                            al_num += ev.tokens.len() as f64;
+                            al_den += ev.steps as f64;
+                            proposed += ev.proposed;
+                            accepted += ev.accepted;
+                            l.output.extend_from_slice(&ev.tokens);
+                        }
+                        if ev.finished {
+                            let l = w.live.swap_remove(idx);
+                            w.executor.retire(l.id);
+                            w.reserved_bytes -= l.reserved_bytes;
+                            completed.push(CompletedRequest {
+                                id: l.id,
+                                generated: l.output.len(),
+                                ttft_ms: l.first_token_ms.unwrap_or(now) - l.arrival_ms,
+                                total_ms: now - l.arrival_ms,
+                                output: l.output,
+                            });
+                        }
+                    }
+                    // refresh the cache post-retirement so the next
+                    // sample sees the freed bytes
+                    let now_bytes = w.executor.live_bytes();
+                    pool_live_bytes = pool_live_bytes - w.cached_live_bytes + now_bytes;
+                    w.cached_live_bytes = now_bytes;
                 }
             }
         }
 
+        if completed.len() != n_submitted {
+            bail!(
+                "scheduler invariant broken: {} of {n_submitted} requests completed",
+                completed.len()
+            );
+        }
         completed.sort_by_key(|c| c.id);
+        let makespan_ms = workers
+            .iter()
+            .map(|w| w.clock_ms)
+            .fold(0.0f64, f64::max);
         Ok(ServeReport {
             completed,
             wall_s: t0.elapsed().as_secs_f64(),
+            makespan_ms,
             total_tokens,
             mean_al: if al_den == 0.0 { 0.0 } else { al_num / al_den },
             proposed,
             accepted,
             peak_kv_bytes,
+            worker_peak_kv_bytes: workers.iter().map(|w| w.peak_kv_bytes).collect(),
         })
+    }
+
+    /// The worker that should admit the queue head, and when it could
+    /// start it: the minimum over workers with room of
+    /// `max(worker clock, arrival)` (ties → fewest live, then index).
+    /// `None` while no worker has room — the head then waits, strictly
+    /// FIFO, for the next retirement; admission never skips past it.
+    ///
+    /// Admitting at that minimum is safe: any worker currently without
+    /// room frees it no earlier than its own clock, which is never below
+    /// the chosen start (the pool always acts on the earliest event
+    /// first), so no deferred assignment could start the head sooner.
+    fn pick_stealer<E: StepExecutor>(
+        workers: &[PoolWorker<E>],
+        head: Option<&TokenRequest>,
+        policy: AdmissionPolicy,
+    ) -> Option<(usize, f64)> {
+        let head = head?;
+        // oversized-request safety valve, pool edition: a head that fits
+        // no worker's budget share can only ever run alone, so it becomes
+        // admissible exactly on idle workers
+        let fits_nowhere = workers.iter().all(|w| {
+            w.budget != 0 && w.executor.projected_bytes(head) > w.budget
+        });
+        let mut best: Option<(usize, f64, usize)> = None;
+        for (i, w) in workers.iter().enumerate() {
+            let has_room = match policy {
+                // a static chunk only forms on a drained worker
+                AdmissionPolicy::Static => w.live.is_empty(),
+                _ => {
+                    if w.live.len() >= w.max_in_flight {
+                        false
+                    } else if fits_nowhere {
+                        w.live.is_empty()
+                    } else {
+                        w.budget == 0
+                            || w.reserved_bytes + w.executor.projected_bytes(head)
+                                <= w.budget
+                    }
+                }
+            };
+            if !has_room {
+                continue;
+            }
+            let start = w.clock_ms.max(head.arrival_ms);
+            let better = match best {
+                None => true,
+                Some((_, bs, bl)) => {
+                    start < bs || (start == bs && w.live.len() < bl)
+                }
+            };
+            if better {
+                best = Some((i, start, w.live.len()));
+            }
+        }
+        best.map(|(i, s, _)| (i, s))
+    }
+
+    /// Admit one request to `w`, reserving its projected peak KV bytes.
+    fn admit_one<E: StepExecutor>(w: &mut PoolWorker<E>, req: TokenRequest) -> Result<()> {
+        let need = w.executor.projected_bytes(&req);
+        w.executor.admit(&req)?;
+        w.reserved_bytes += need;
+        w.live.push(LiveReq {
+            id: req.id,
+            arrival_ms: req.arrival_ms,
+            state: ReqState::Prefill,
+            output: Vec::new(),
+            first_token_ms: None,
+            reserved_bytes: need,
+        });
+        Ok(())
+    }
+
+    /// Classic static batching on one drained worker: jump the clock to
+    /// the last arrival of the requests the next chunk can actually seat
+    /// (slot cap AND KV-budget share), then admit the whole chunk — so
+    /// chunks neither degenerate to size 1 on staggered traces nor wait
+    /// for arrivals the budget could never seat.
+    fn admit_static_chunk<E: StepExecutor>(
+        w: &mut PoolWorker<E>,
+        queue: &mut VecDeque<TokenRequest>,
+    ) -> Result<()> {
+        let mut k = 0usize;
+        let mut sum = 0usize;
+        for r in queue.iter().take(w.max_in_flight) {
+            let need = w.executor.projected_bytes(r);
+            let fits = w.budget == 0
+                || sum + need <= w.budget
+                || (k == 0 && need > w.budget);
+            if !fits {
+                break;
+            }
+            sum += need;
+            k += 1;
+        }
+        let chunk_arrival = queue
+            .iter()
+            .take(k)
+            .map(|r| r.arrival_ms)
+            .fold(f64::NEG_INFINITY, f64::max);
+        if chunk_arrival > w.clock_ms {
+            w.clock_ms = chunk_arrival;
+        }
+        for _ in 0..k {
+            let req = queue.pop_front().expect("chunk counted from the queue");
+            Self::admit_one(w, req)?;
+        }
+        Ok(())
     }
 }
 
@@ -862,6 +1164,169 @@ mod tests {
             "chunk started before it filled: ttft {}",
             report.completed[0].ttft_ms
         );
+    }
+
+    #[test]
+    fn pool_idle_worker_jumps_to_earliest_event_across_workers() {
+        // Per-worker capacity 1; r0 occupies worker 0 from t=0 and the
+        // next arrival is 1e9 ms away. The empty-round jump must move only
+        // the idle worker, straight to the arrival it is about to seat, in
+        // O(1) (this test would effectively hang on a busy-advance) — and
+        // the busy worker's in-flight request must not be dragged to the
+        // far-future arrival time.
+        let target = ToyModel::new(1);
+        let mut requests = reqs(2, 0.0, 6);
+        requests[1].arrival_ms = 1e9;
+        let cfg = ServeCfg::continuous(1).with_workers(2);
+        let report =
+            WorkerPool::run(requests, |_| GreedyExecutor::new(&target), &cfg, 0).unwrap();
+        assert_eq!(report.completed.len(), 2);
+        assert!(
+            report.completed[0].total_ms < 1e6,
+            "busy worker dragged to the far arrival: {}",
+            report.completed[0].total_ms
+        );
+        assert!(
+            report.completed[1].ttft_ms < 1e6,
+            "late arrival queued behind an idle worker: {}",
+            report.completed[1].ttft_ms
+        );
+        // the stealer's clock lands on the arrival it seated
+        assert!(report.makespan_ms >= 1e9);
+    }
+
+    #[test]
+    fn pool_steals_work_across_workers_with_identical_outputs() {
+        // 6 simultaneous arrivals, per-worker capacity 1: three workers
+        // drain the shared queue in parallel lanes; outputs stay
+        // bit-identical to the single-worker run, nothing duplicated or
+        // dropped.
+        let target = ToyModel::new(3);
+        let one = WorkerPool::run(
+            reqs(6, 0.0, 8),
+            |_| GreedyExecutor::new(&target),
+            &ServeCfg::continuous(1),
+            0,
+        )
+        .unwrap();
+        let three = WorkerPool::run(
+            reqs(6, 0.0, 8),
+            |_| GreedyExecutor::new(&target),
+            &ServeCfg::continuous(1).with_workers(3),
+            0,
+        )
+        .unwrap();
+        assert_eq!(three.completed.len(), 6);
+        assert_eq!(three.workers(), 3);
+        assert_eq!(one.total_tokens, three.total_tokens);
+        for (a, b) in one.completed.iter().zip(&three.completed) {
+            assert_eq!(a.id, b.id);
+            assert_eq!(a.output, b.output, "sharding changed request {}", a.id);
+        }
+    }
+
+    #[test]
+    fn pool_splits_budget_and_respects_worker_shares() {
+        // 500 total bytes over 2 workers = 250 each: at most 2 of the
+        // 100-byte requests in flight per worker, never more.
+        let cfg = ServeCfg::continuous(8).with_budget(500).with_workers(2);
+        assert_eq!(cfg.per_worker_budgets(), vec![250, 250]);
+        let report = WorkerPool::run(
+            reqs(9, 0.0, 3),
+            |_| FakeExec { bytes_per_req: 100, live: Vec::new() },
+            &cfg,
+            0,
+        )
+        .unwrap();
+        assert_eq!(report.completed.len(), 9, "every request must complete");
+        for (w, peak) in report.worker_peak_kv_bytes.iter().enumerate() {
+            assert!(*peak <= 250, "worker {w} peak {peak} > share 250");
+        }
+        assert!(report.peak_kv_bytes <= 500, "pool peak {}", report.peak_kv_bytes);
+    }
+
+    #[test]
+    fn pool_oversized_request_runs_alone_on_an_idle_worker() {
+        // 1000-byte requests fit no worker's 200-byte share: the safety
+        // valve routes each to an idle worker alone; nothing starves and
+        // no worker ever holds two at once.
+        let cfg = ServeCfg::continuous(8).with_budget(400).with_workers(2);
+        let report = WorkerPool::run(
+            reqs(4, 0.0, 2),
+            |_| FakeExec { bytes_per_req: 1000, live: Vec::new() },
+            &cfg,
+            0,
+        )
+        .unwrap();
+        assert_eq!(report.completed.len(), 4, "safety valve must prevent starvation");
+        for peak in &report.worker_peak_kv_bytes {
+            assert!(*peak <= 1000, "oversized request must run alone: peak {peak}");
+        }
+    }
+
+    #[test]
+    fn scheduler_run_rejects_multi_worker_configs() {
+        // one executor cannot staff two workers; no silent fallback to 1
+        let target = ToyModel::new(1);
+        let r = Scheduler::run(
+            reqs(1, 0.0, 2),
+            GreedyExecutor::new(&target),
+            &ServeCfg::continuous(2).with_workers(2),
+            0,
+        );
+        assert!(r.is_err(), "Scheduler::run must reject workers > 1 loudly");
+    }
+
+    #[test]
+    fn pool_rejects_budget_that_splits_to_zero() {
+        // programmatic configs bypass YAML validation; the pool itself
+        // must refuse shares of zero rather than run workers unlimited
+        let cfg = ServeCfg::continuous(4).with_budget(3).with_workers(8);
+        let r = WorkerPool::run(
+            reqs(2, 0.0, 2),
+            |_| FakeExec { bytes_per_req: 1, live: Vec::new() },
+            &cfg,
+            0,
+        );
+        assert!(r.is_err(), "zero shares must be rejected, not silently unlimited");
+    }
+
+    #[test]
+    fn per_worker_budget_split_covers_total() {
+        let cfg = ServeCfg::continuous(4).with_budget(1003).with_workers(4);
+        let shares = cfg.per_worker_budgets();
+        assert_eq!(shares.len(), 4);
+        assert_eq!(shares.iter().sum::<usize>(), 1003);
+        // unlimited stays unlimited on every worker
+        assert_eq!(ServeCfg::continuous(4).per_worker_budgets(), vec![0]);
+    }
+
+    #[test]
+    fn ensure_requests_fit_flags_budget_below_smallest_request() {
+        let exec = FakeExec { bytes_per_req: 100, live: Vec::new() };
+        let trace = reqs(3, 0.0, 2);
+        // 90 bytes per worker: even the smallest request (100 bytes)
+        // would need the safety valve — reject loudly
+        let bad = ServeCfg::continuous(4).with_budget(180).with_workers(2);
+        assert!(bad.ensure_requests_fit(&exec, &trace).is_err());
+        let ok = ServeCfg::continuous(4).with_budget(200).with_workers(2);
+        assert!(ok.ensure_requests_fit(&exec, &trace).is_ok());
+        // unlimited budget always fits
+        assert!(ServeCfg::continuous(4).ensure_requests_fit(&exec, &trace).is_ok());
+    }
+
+    #[test]
+    fn pool_static_policy_drains_parallel_chunks() {
+        let target = ToyModel::new(3);
+        let report = WorkerPool::run(
+            reqs(6, 0.0, 5),
+            |_| GreedyExecutor::new(&target),
+            &ServeCfg::static_batch(2).with_workers(2),
+            0,
+        )
+        .unwrap();
+        assert_eq!(report.completed.len(), 6);
+        assert!(report.completed.iter().all(|c| c.generated == 5));
     }
 
     #[test]

@@ -3,8 +3,18 @@
 //! `check(seed_count, |rng| ...)` runs a property closure against many
 //! seeded RNGs and reports the first failing seed, so failures reproduce
 //! deterministically: re-run with `check_one(seed, ...)`.
+//!
+//! Also home to the serving-trace helpers shared by the scheduler
+//! property tests (`tests/test_scheduler_props.rs`,
+//! `tests/test_sharded_props.rs`) and the serving benches
+//! (`benches/bench_continuous.rs`, `benches/bench_sharded.rs`): building
+//! heterogeneous fixture traces and asserting the cross-path equivalence
+//! / exactly-once contracts in one place instead of three.
 
 use super::rng::Rng;
+use crate::data::TokenRequest;
+use crate::models::Transformer;
+use crate::server::{GreedyExecutor, ServeReport, StepExecutor};
 
 /// Run `prop` for `cases` deterministic seeds. Panics with the failing seed
 /// on the first property violation (the closure should panic/assert).
@@ -29,6 +39,112 @@ pub fn check<F: FnMut(&mut Rng)>(cases: u64, mut prop: F) {
 pub fn check_one<F: FnMut(&mut Rng)>(seed: u64, mut prop: F) {
     let mut rng = Rng::new(0xC0FFEE ^ seed.wrapping_mul(0x9E3779B9));
     prop(&mut rng);
+}
+
+/// Heterogeneous-length request trace over a corpus: prompt windows of 8
+/// tokens strided through the stream, alternating full/short generations
+/// (so retirement actually frees slots mid-run), arrivals 0.5 ms apart.
+/// The shape the scheduler property tests and serving benches share.
+pub fn fixture_requests(corpus: &[u8], n: usize, max_new: usize) -> Vec<TokenRequest> {
+    assert!(corpus.len() >= n * 17 + 8, "corpus too short for {n} requests");
+    (0..n)
+        .map(|i| TokenRequest {
+            id: i as u64,
+            prompt: corpus[i * 17..i * 17 + 8].to_vec(),
+            max_new_tokens: if i % 2 == 0 { max_new } else { max_new / 3 + 1 },
+            arrival_ms: i as f64 * 0.5,
+        })
+        .collect()
+}
+
+/// Run a timing-sensitive performance check up to `attempts` times: `f`
+/// returns `Ok(value)` when the expected shape holds, or `Err(detail)`
+/// when a run was skewed — compute times are tens of microseconds at
+/// fixture scale, so a single OS preemption can distort one run's
+/// virtual clocks. Intermediate failures are logged and retried;
+/// exhaustion panics with the last detail. Shared by the serving benches
+/// and the sharded TTFT property test.
+pub fn retry_timing<T>(attempts: usize, mut f: impl FnMut() -> Result<T, String>) -> T {
+    for attempt in 1..=attempts {
+        match f() {
+            Ok(v) => return v,
+            Err(detail) => {
+                assert!(
+                    attempt < attempts,
+                    "performance shape failed after {attempts} attempts: {detail}"
+                );
+                eprintln!("attempt {attempt}: {detail} (timing noise); retrying");
+            }
+        }
+    }
+    unreachable!("retry_timing returns or panics inside the loop");
+}
+
+/// Projected peak KV bytes the scheduler reserves for one greedy request
+/// on `model`, for sizing admission budgets in tests and benches —
+/// delegates to `GreedyExecutor::projected_bytes` so it can never drift
+/// from the real reservation formula.
+pub fn projected_greedy_bytes(model: &Transformer, r: &TokenRequest) -> usize {
+    GreedyExecutor::new(model).projected_bytes(r)
+}
+
+/// Assert two serve reports completed the same request set with
+/// bit-identical per-request outputs (ids aligned, same token bytes,
+/// same generated counts). `context` names the pair under comparison in
+/// the failure message (e.g. "continuous vs sequential", "workers=4").
+#[track_caller]
+pub fn assert_outputs_match(a: &ServeReport, b: &ServeReport, context: &str) {
+    assert_eq!(
+        a.completed.len(),
+        b.completed.len(),
+        "{context}: completed-request counts differ"
+    );
+    for (x, y) in a.completed.iter().zip(&b.completed) {
+        assert_eq!(x.id, y.id, "{context}: completed ids misaligned");
+        assert_eq!(
+            x.output, y.output,
+            "{context}: request {} output changed",
+            x.id
+        );
+        assert_eq!(
+            x.generated, y.generated,
+            "{context}: request {} generated count changed",
+            x.id
+        );
+    }
+}
+
+/// Assert the universal serving contracts on one report: each of the `n`
+/// submitted requests completed exactly once (no duplicates, no drops),
+/// every TTFT lies in `[0, total]`, and — when `budget > 0` — peak live
+/// KV bytes stayed within the admission budget.
+#[track_caller]
+pub fn assert_serving_contracts(r: &ServeReport, n: usize, budget: usize) {
+    assert_eq!(r.completed.len(), n, "every submitted request completes");
+    for w in r.completed.windows(2) {
+        assert!(
+            w[0].id < w[1].id,
+            "completed ids must be strictly increasing (duplicate id {}?)",
+            w[1].id
+        );
+    }
+    for c in &r.completed {
+        assert!(c.ttft_ms >= 0.0, "request {}: ttft measured from arrival", c.id);
+        assert!(
+            c.ttft_ms <= c.total_ms + 1e-9,
+            "request {}: ttft {} after completion {}",
+            c.id,
+            c.ttft_ms,
+            c.total_ms
+        );
+    }
+    if budget > 0 {
+        assert!(
+            r.peak_kv_bytes <= budget,
+            "peak live KV {} exceeded budget {budget}",
+            r.peak_kv_bytes
+        );
+    }
 }
 
 /// Assert two f32 slices are element-wise close.

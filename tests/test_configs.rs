@@ -1,9 +1,20 @@
 //! Every shipped config in configs/ must parse into a valid `SlimConfig`
 //! and name a registered method/algorithm — the same validation
-//! `angelslim list` performs.
+//! `angelslim list` performs — and serving misconfigurations must fail
+//! loudly at parse/startup instead of silently falling back.
 
 use angelslim::config::SlimConfig;
 use angelslim::coordinator::SlimFactory;
+use angelslim::data::TokenRequest;
+use angelslim::server::{GreedyExecutor, ServeCfg, StepExecutor};
+use angelslim::util::fixtures::fixture_target;
+
+/// Minimal valid config with an arbitrary `serve:` section appended.
+fn with_serve(serve_yaml: &str) -> Result<SlimConfig, anyhow::Error> {
+    SlimConfig::from_str(&format!(
+        "model:\n  name: tiny-fixture\ncompression:\n  method: quantization\nserve:\n{serve_yaml}"
+    ))
+}
 
 #[test]
 fn all_shipped_configs_parse_and_validate() {
@@ -30,4 +41,71 @@ fn fixture_configs_target_registered_fixture_model() {
     assert_eq!(cfg.dataset.kind, "fixture");
     assert_eq!(cfg.compression.method, "quantization");
     assert_eq!(cfg.compression.algo, "int4");
+}
+
+#[test]
+fn sharded_config_parses_with_worker_count() {
+    let cfg = SlimConfig::from_file("configs/serve_sharded_fixture.yaml").unwrap();
+    assert_eq!(cfg.serve.workers, 4);
+    assert_eq!(cfg.serve.max_in_flight, 4);
+    // the split leaves every worker a real share
+    assert!(cfg.serve.per_worker_budgets().iter().all(|&b| b > 0));
+}
+
+#[test]
+fn serve_rejects_zero_or_negative_workers() {
+    assert!(
+        with_serve("  workers: 0\n").is_err(),
+        "workers: 0 must be a loud error, not a silent single worker"
+    );
+    assert!(
+        with_serve("  workers: -2\n").is_err(),
+        "negative workers must not wrap to a huge pool"
+    );
+    assert_eq!(with_serve("  workers: 3\n").unwrap().serve.workers, 3);
+}
+
+#[test]
+fn serve_rejects_unknown_policy_strings() {
+    assert!(
+        with_serve("  policy: psychic\n").is_err(),
+        "unknown policy must not fall back to a default"
+    );
+    assert!(with_serve("  policy: continuous\n").is_ok());
+}
+
+#[test]
+fn serve_rejects_budget_below_the_smallest_request() {
+    // config-level: a total budget that splits to zero per worker
+    assert!(
+        with_serve("  workers: 8\n  kv_budget_bytes: 3\n").is_err(),
+        "budget below the worker count leaves workers effectively unlimited"
+    );
+
+    // startup-level: a per-worker share smaller than the smallest
+    // request's projected peak KV would silently push *every* request
+    // through the oversized-request safety valve — `ensure_requests_fit`
+    // (the `angelslim serve --config` guard) must flag it instead
+    let target = fixture_target(5);
+    let exec = GreedyExecutor::new(&target);
+    let requests = vec![TokenRequest {
+        id: 0,
+        prompt: vec![1, 2, 3, 4],
+        max_new_tokens: 8,
+        arrival_ms: 0.0,
+    }];
+    let need = exec.projected_bytes(&requests[0]);
+    assert!(need > 0, "fixture requests project real KV bytes");
+
+    let bad = ServeCfg::continuous(4).with_workers(2).with_budget(2 * (need - 1));
+    assert!(
+        bad.ensure_requests_fit(&exec, &requests).is_err(),
+        "budget below the smallest request must error loudly"
+    );
+    let ok = ServeCfg::continuous(4).with_workers(2).with_budget(2 * need);
+    assert!(ok.ensure_requests_fit(&exec, &requests).is_ok());
+    // unlimited budget never errors
+    assert!(ServeCfg::continuous(4)
+        .ensure_requests_fit(&exec, &requests)
+        .is_ok());
 }

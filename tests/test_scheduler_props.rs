@@ -3,31 +3,19 @@
 //! outputs bit-identical to sequential decoding, live KV bytes within the
 //! admission budget, and completion of every request (no starvation) even
 //! under tight budgets. Failures reproduce deterministically via the
-//! seeded harness in `angelslim::util::testing`.
+//! seeded harness in `angelslim::util::testing`, and the trace builder /
+//! equivalence assertions live there too, shared with the serving benches
+//! and `tests/test_sharded_props.rs`.
 
 use angelslim::data::TokenRequest;
 use angelslim::models::Transformer;
 use angelslim::server::{ServeCfg, ServingEngine};
 use angelslim::util::fixtures::{fixture_corpus, fixture_draft, fixture_target, FixtureSpec};
-use angelslim::util::testing::check;
+use angelslim::util::testing::{
+    assert_outputs_match, assert_serving_contracts, check, fixture_requests,
+    projected_greedy_bytes as projected_greedy,
+};
 use angelslim::util::Rng;
-
-fn fixture_requests(corpus: &[u8], n: usize, max_new: usize) -> Vec<TokenRequest> {
-    (0..n)
-        .map(|i| TokenRequest {
-            id: i as u64,
-            prompt: corpus[i * 17..i * 17 + 8].to_vec(),
-            // heterogeneous lengths so retirement actually frees slots
-            max_new_tokens: if i % 2 == 0 { max_new } else { max_new / 3 + 1 },
-            arrival_ms: i as f64 * 0.5,
-        })
-        .collect()
-}
-
-/// Projected peak KV bytes the scheduler reserves for one greedy request.
-fn projected_greedy(model: &Transformer, r: &TokenRequest) -> usize {
-    (r.prompt.len() + r.max_new_tokens).min(model.cfg.max_t) * model.cfg.kv_bytes_per_token()
-}
 
 #[test]
 fn continuous_outputs_bit_identical_to_sequential_greedy() {
@@ -46,16 +34,12 @@ fn continuous_outputs_bit_identical_to_sequential_greedy() {
             0,
         )
         .unwrap();
-        assert_eq!(continuous.completed.len(), 9);
-        for (a, b) in sequential.completed.iter().zip(&continuous.completed) {
-            assert_eq!(a.id, b.id);
-            assert_eq!(
-                a.output, b.output,
-                "continuous (max_in_flight {max_in_flight}) changed request {}",
-                a.id
-            );
-            assert_eq!(a.generated, b.generated);
-        }
+        assert_serving_contracts(&continuous, 9, 0);
+        assert_outputs_match(
+            &sequential,
+            &continuous,
+            &format!("continuous (max_in_flight {max_in_flight}) vs sequential"),
+        );
     }
 }
 
@@ -76,11 +60,8 @@ fn continuous_outputs_bit_identical_to_sequential_speculative() {
         0,
     )
     .unwrap();
-    assert_eq!(continuous.completed.len(), 8);
-    for (a, b) in sequential.completed.iter().zip(&continuous.completed) {
-        assert_eq!(a.id, b.id);
-        assert_eq!(a.output, b.output, "continuous spec changed request {}", a.id);
-    }
+    assert_serving_contracts(&continuous, 8, 0);
+    assert_outputs_match(&sequential, &continuous, "continuous spec vs sequential spec");
     assert!(sequential.mean_al > 1.2, "AL {}", sequential.mean_al);
     assert!(continuous.mean_al > 1.2, "AL {}", continuous.mean_al);
     // aligned draft: the target accepts most proposals on either path
@@ -106,13 +87,8 @@ fn live_kv_bytes_never_exceed_budget() {
         0,
     )
     .unwrap();
-    assert_eq!(report.completed.len(), 9);
     assert!(report.peak_kv_bytes > 0, "fixture sessions hold real KV bytes");
-    assert!(
-        report.peak_kv_bytes <= budget,
-        "peak live KV {} exceeded budget {budget}",
-        report.peak_kv_bytes
-    );
+    assert_serving_contracts(&report, 9, budget);
 }
 
 #[test]
@@ -133,12 +109,8 @@ fn tight_budget_completes_every_request_with_correct_outputs() {
         0,
     )
     .unwrap();
-    assert_eq!(tight.completed.len(), 8, "tight budget must not starve any request");
-    assert!(tight.peak_kv_bytes <= budget);
-    for (a, b) in sequential.completed.iter().zip(&tight.completed) {
-        assert_eq!(a.id, b.id);
-        assert_eq!(a.output, b.output, "budgeted scheduling changed request {}", a.id);
-    }
+    assert_serving_contracts(&tight, 8, budget);
+    assert_outputs_match(&sequential, &tight, "tight budget vs sequential");
 }
 
 #[test]
@@ -163,8 +135,7 @@ fn speculative_budget_covers_draft_and_target_sessions() {
         0,
     )
     .unwrap();
-    assert_eq!(report.completed.len(), 6);
-    assert!(report.peak_kv_bytes <= budget, "{} > {budget}", report.peak_kv_bytes);
+    assert_serving_contracts(&report, 6, budget);
 }
 
 /// Randomized traces and configurations: every request is served exactly
@@ -205,12 +176,7 @@ fn randomized_traces_uphold_serving_contracts() {
             0,
         )
         .unwrap();
-        assert_eq!(continuous.completed.len(), n, "all requests served");
-        assert!(continuous.peak_kv_bytes <= budget, "budget violated");
-        for (a, b) in sequential.completed.iter().zip(&continuous.completed) {
-            assert_eq!(a.id, b.id, "ids aligned");
-            assert_eq!(a.output, b.output, "outputs identical");
-            assert!(b.ttft_ms >= 0.0 && b.ttft_ms <= b.total_ms + 1e-9);
-        }
+        assert_serving_contracts(&continuous, n, budget);
+        assert_outputs_match(&sequential, &continuous, "randomized continuous vs sequential");
     });
 }

@@ -1,0 +1,214 @@
+//! Property tests for the sharded multi-worker scheduler
+//! (`server::WorkerPool`): for every worker count the work-stealing pool
+//! must stay *observationally identical* to sequential decoding on
+//! per-request outputs, keep every worker inside its KV-budget share,
+//! serve every request of randomized bursty traces exactly once, and
+//! never make time-to-first-token worse than the single-worker scheduler
+//! on the same trace. Failures reproduce deterministically via the seeded
+//! harness in `angelslim::util::testing`.
+
+use angelslim::data::{RequestGen, TokenRequest};
+use angelslim::models::Transformer;
+use angelslim::server::{ServeCfg, ServingEngine};
+use angelslim::util::fixtures::{fixture_corpus, fixture_draft, fixture_target, FixtureSpec};
+use angelslim::util::testing::{
+    assert_outputs_match, assert_serving_contracts, check, fixture_requests,
+    projected_greedy_bytes as projected_greedy, retry_timing,
+};
+use angelslim::util::Rng;
+
+/// Seeded bursty trace (mixed short/long generations, near-simultaneous
+/// arrivals inside each burst) — the workload sharding is for.
+fn bursty(corpus: &[u8], seed: u64, bursts: usize, per_burst: usize) -> Vec<TokenRequest> {
+    let mut gen = RequestGen::new(corpus.to_vec(), seed);
+    gen.prompt_len = 8;
+    gen.take_bursty(bursts, per_burst, 0.05, 4, 14)
+}
+
+#[test]
+fn sharded_outputs_bit_identical_to_sequential_greedy() {
+    let spec = FixtureSpec::default();
+    let corpus = fixture_corpus(&spec, 2_048, 41);
+    let target = fixture_target(5);
+    let reqs = || fixture_requests(&corpus, 10, 12);
+
+    let sequential = ServingEngine::serve::<Transformer, _>(reqs(), &target, None, 0).unwrap();
+    for workers in [1, 2, 4] {
+        let sharded = ServingEngine::serve_scheduled::<Transformer, _>(
+            reqs(),
+            &target,
+            None,
+            &ServeCfg::continuous(4).with_workers(workers),
+            0,
+        )
+        .unwrap();
+        assert_eq!(sharded.workers(), workers);
+        assert_serving_contracts(&sharded, 10, 0);
+        assert_outputs_match(
+            &sequential,
+            &sharded,
+            &format!("greedy workers={workers} vs sequential"),
+        );
+    }
+}
+
+#[test]
+fn sharded_outputs_bit_identical_to_sequential_speculative() {
+    let spec = FixtureSpec::default();
+    let corpus = fixture_corpus(&spec, 2_048, 43);
+    let target = fixture_target(3);
+    let draft = fixture_draft(3);
+    let reqs = || fixture_requests(&corpus, 8, 12);
+
+    let sequential = ServingEngine::serve(reqs(), &target, Some((&draft, 3)), 0).unwrap();
+    for workers in [1, 2, 4] {
+        let sharded = ServingEngine::serve_scheduled(
+            reqs(),
+            &target,
+            Some((&draft, 3)),
+            &ServeCfg::continuous(4).with_workers(workers),
+            0,
+        )
+        .unwrap();
+        assert_serving_contracts(&sharded, 8, 0);
+        assert_outputs_match(
+            &sequential,
+            &sharded,
+            &format!("speculative workers={workers} vs sequential"),
+        );
+        // the verify schedule per request is interleaving-independent, so
+        // speculation bookkeeping must agree too
+        assert_eq!(sequential.proposed, sharded.proposed, "workers={workers}");
+        assert_eq!(sequential.accepted, sharded.accepted, "workers={workers}");
+        assert!(sharded.mean_al > 1.2, "workers={workers} AL {}", sharded.mean_al);
+    }
+}
+
+#[test]
+fn per_worker_live_kv_never_exceeds_worker_share() {
+    let spec = FixtureSpec::default();
+    let corpus = fixture_corpus(&spec, 2_048, 47);
+    let target = fixture_target(5);
+    let reqs = || fixture_requests(&corpus, 12, 12);
+    let worst = reqs().iter().map(|r| projected_greedy(&target, r)).max().unwrap();
+
+    for workers in [2, 4] {
+        // each worker's share seats ~2 requests, so budget pressure is
+        // real on every worker while no request needs the safety valve
+        let cfg = ServeCfg::continuous(8)
+            .with_workers(workers)
+            .with_budget(workers * (2 * worst + 64));
+        let shares = cfg.per_worker_budgets();
+        let report = ServingEngine::serve_scheduled::<Transformer, _>(
+            reqs(),
+            &target,
+            None,
+            &cfg,
+            0,
+        )
+        .unwrap();
+        assert_serving_contracts(&report, 12, cfg.kv_budget_bytes);
+        assert_eq!(report.worker_peak_kv_bytes.len(), workers);
+        assert!(
+            report.worker_peak_kv_bytes.iter().any(|&p| p > 0),
+            "fixture sessions hold real KV bytes"
+        );
+        for (w, peak) in report.worker_peak_kv_bytes.iter().enumerate() {
+            assert!(
+                *peak <= shares[w],
+                "workers={workers}: worker {w} peak {peak} exceeded share {}",
+                shares[w]
+            );
+        }
+    }
+}
+
+/// Randomized seeded bursty traces, randomized worker counts and budgets:
+/// every request completes exactly once across the pool (no duplicates,
+/// no drops), outputs stay bit-identical to sequential decoding, and
+/// every worker stays inside its KV-budget share.
+#[test]
+fn randomized_bursty_traces_serve_exactly_once_across_workers() {
+    let spec = FixtureSpec::default();
+    let corpus = fixture_corpus(&spec, 4_096, 53);
+    let target = fixture_target(7);
+    check(6, |rng: &mut Rng| {
+        let bursts = 1 + rng.below(3);
+        let per_burst = 2 + rng.below(4);
+        let n = bursts * per_burst;
+        let trace_seed = rng.next_u64();
+        let workers = 1 + rng.below(4);
+        let trace = || bursty(&corpus, trace_seed, bursts, per_burst);
+        let worst = trace().iter().map(|r| projected_greedy(&target, r)).max().unwrap();
+        // every worker's share seats the worst request at least once
+        let cfg = ServeCfg::continuous(1 + rng.below(4))
+            .with_workers(workers)
+            .with_budget(workers * worst * (1 + rng.below(2)));
+        let shares = cfg.per_worker_budgets();
+
+        let sequential =
+            ServingEngine::serve::<Transformer, _>(trace(), &target, None, 0).unwrap();
+        let sharded = ServingEngine::serve_scheduled::<Transformer, _>(
+            trace(),
+            &target,
+            None,
+            &cfg,
+            0,
+        )
+        .unwrap();
+        assert_serving_contracts(&sharded, n, cfg.kv_budget_bytes);
+        assert_outputs_match(&sequential, &sharded, "randomized sharded vs sequential");
+        for (w, peak) in sharded.worker_peak_kv_bytes.iter().enumerate() {
+            assert!(
+                *peak <= shares[w],
+                "worker {w} peak {peak} exceeded share {}",
+                shares[w]
+            );
+        }
+    });
+}
+
+/// Adding workers must not make time-to-first-token worse: on a bursty
+/// trace the pool's extra capacity admits queued requests earlier. The
+/// comparison uses the *median* TTFT — a single OS preemption inflates a
+/// few requests' measured rounds but barely moves the p50 over 18
+/// requests, whereas the queueing signal (whole decode drains at 1
+/// worker) dominates it — and timing-noise runs are still retried
+/// through the shared `retry_timing` harness the serving benches use.
+#[test]
+fn multi_worker_ttft_not_worse_than_single_worker() {
+    let spec = FixtureSpec::default();
+    let corpus = fixture_corpus(&spec, 4_096, 59);
+    let target = fixture_target(3);
+    let trace = || bursty(&corpus, 71, 3, 6);
+
+    retry_timing(5, || {
+        let one = ServingEngine::serve_scheduled::<Transformer, _>(
+            trace(),
+            &target,
+            None,
+            &ServeCfg::continuous(4),
+            0,
+        )
+        .unwrap();
+        for workers in [2, 4] {
+            let sharded = ServingEngine::serve_scheduled::<Transformer, _>(
+                trace(),
+                &target,
+                None,
+                &ServeCfg::continuous(4).with_workers(workers),
+                0,
+            )
+            .unwrap();
+            assert_outputs_match(&one, &sharded, &format!("ttft run workers={workers}"));
+            let m1 = one.ttft_summary().p50;
+            let mw = sharded.ttft_summary().p50;
+            if mw > m1 {
+                return Err(format!(
+                    "workers={workers}: median TTFT {mw:.4}ms worse than single-worker {m1:.4}ms"
+                ));
+            }
+        }
+        Ok(())
+    });
+}
