@@ -8,7 +8,7 @@ use angelslim::config::SlimConfig;
 use angelslim::coordinator::CompressEngine;
 use angelslim::util::table::{f2, Table};
 
-fn run(algo: &str) -> angelslim::coordinator::CompressReport {
+fn run(algo: &str) -> angelslim::coordinator::StageReport {
     let src = format!(
         "global:\n  save_path: ./output/t456\nmodel:\n  name: tiny-target\n  artifacts_dir: artifacts\n\
          compression:\n  method: quantization\n  quantization:\n    algo: {algo}\n\
@@ -17,6 +17,10 @@ fn run(algo: &str) -> angelslim::coordinator::CompressReport {
     CompressEngine::new(SlimConfig::from_str(&src).unwrap())
         .unwrap()
         .run()
+        .unwrap()
+        .stages
+        .into_iter()
+        .next()
         .unwrap()
 }
 

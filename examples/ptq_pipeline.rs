@@ -20,12 +20,13 @@ fn main() -> anyhow::Result<()> {
              dataset:\n  kind: artifact\n  num_samples: 10\n  seq_len: 48\n"
         );
         let report = CompressEngine::new(SlimConfig::from_str(&src)?)?.run()?;
+        let stage = &report.stages[0];
         t.row_strs(&[
             algo,
-            &f2(report.compression),
-            &f2(report.metric_before),
-            &f2(report.metric_after),
-            &f2(report.metric_after - report.metric_before),
+            &f2(stage.compression),
+            &f2(stage.metric_before),
+            &f2(stage.metric_after),
+            &f2(stage.metric_after - stage.metric_before),
         ]);
     }
     t.print();

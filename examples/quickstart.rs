@@ -34,13 +34,16 @@ fn main() -> anyhow::Result<()> {
         cfg.compression.method, cfg.compression.algo, cfg.model.name
     );
     let report = CompressEngine::new(cfg)?.run()?;
-    println!(
-        "NLL before {:.4} -> after {:.4} at {:.2} effective bits/weight",
-        report.metric_before, report.metric_after, report.compression
-    );
-    for note in &report.notes {
-        println!("note: {note}");
+    for stage in &report.stages {
+        println!(
+            "[{}] NLL before {:.4} -> after {:.4} at {:.2} effective bits/weight",
+            stage.pass, stage.metric_before, stage.metric_after, stage.compression
+        );
+        for note in &stage.notes {
+            println!("note: {note}");
+        }
     }
+    println!("overall size ratio {:.4}", report.overall_size_ratio());
     println!("quickstart OK");
     Ok(())
 }

@@ -15,6 +15,6 @@ pub mod yaml;
 
 pub use json::Json;
 pub use schema::{
-    CompressionCfg, DatasetCfg, EvalCfg, GlobalCfg, ModelCfg, SlimConfig,
+    CompressionCfg, DatasetCfg, EvalCfg, GlobalCfg, ModelCfg, SlimConfig, StageCfg,
 };
 pub use yaml::{parse, Yaml};

@@ -1,9 +1,19 @@
 //! Typed config schema over the generic YAML tree — mirrors the paper's
 //! four config sections (Fig. 6): global settings, model information,
 //! compression algorithm specification, dataset configuration (plus an
-//! evaluation section for the automated benchmarking pipeline).
+//! evaluation section for the automated benchmarking pipeline), and the
+//! composable `pipeline:` section (an ordered list of compression-pass
+//! stages with per-stage overrides).
+//!
+//! The legacy single-method form (`compression.method` + algo) desugars to
+//! a one-stage pipeline, so every pre-pipeline YAML keeps working and is
+//! proven bit-identical to its pipeline spelling by
+//! tests/test_pass_pipeline.rs. Pass names are validated against the one
+//! static `coordinator::PassRegistry` — there is no second algorithm list
+//! here to drift.
 
 use super::yaml::{parse, Yaml};
+use crate::coordinator::{PassKind, PassRegistry};
 use crate::server::{AdmissionPolicy, ServeCfg};
 use anyhow::{bail, Context, Result};
 
@@ -23,13 +33,16 @@ pub struct ModelCfg {
     pub dtype: String,
 }
 
+/// Parameters of one compression stage. Doubles as the legacy
+/// `compression:` section (the base every pipeline stage inherits its
+/// defaults from) and as the per-stage resolved params.
 #[derive(Clone, Debug, PartialEq)]
 pub struct CompressionCfg {
-    /// "quantization" | "spec_decode" | "sparse_attn" | "token_prune"
+    /// method family, resolved from the PassRegistry ("quantization" |
+    /// "spec_decode" | "sparse_attn" | "token_prune" | "eval")
     pub method: String,
-    /// algorithm within the method, e.g. "leptoquant", "gptq", "awq",
-    /// "fp8_dynamic", "seq2", "tequila", "sherry", "eagle3", "stem",
-    /// "idpruner", "samp"
+    /// pass name within the family, e.g. "leptoquant", "gptq", "awq",
+    /// "smooth", "tequila", "sherry", "eagle3", "stem", "idpruner", "samp"
     pub algo: String,
     pub bits: u32,
     pub group_size: usize,
@@ -37,10 +50,20 @@ pub struct CompressionCfg {
     pub alpha_grid: Vec<f64>,
     /// token-pruning retain ratio / sparse-attn density budget
     pub ratio: f64,
+    /// SmoothQuant migration strength (s_c = max|X|^a / max|W|^(1-a))
+    pub smooth_alpha: f64,
     /// number of speculative tokens per step (spec decode)
     pub num_speculative_tokens: usize,
     /// low-memory calibration: resident-layer budget (0 = keep everything)
     pub low_memory_budget_layers: usize,
+}
+
+/// One stage of the compression pipeline: a registered pass name plus its
+/// fully-resolved parameters (config-level defaults + per-stage overrides).
+#[derive(Clone, Debug, PartialEq)]
+pub struct StageCfg {
+    pub pass: String,
+    pub params: CompressionCfg,
 }
 
 #[derive(Clone, Debug, PartialEq)]
@@ -62,7 +85,12 @@ pub struct EvalCfg {
 pub struct SlimConfig {
     pub global: GlobalCfg,
     pub model: ModelCfg,
+    /// the legacy single-method section; also the defaults every pipeline
+    /// stage inherits
     pub compression: CompressionCfg,
+    /// ordered pipeline stages (>= 1). Absent `pipeline:` desugars the
+    /// legacy `compression.method` form into one stage.
+    pub pipeline: Vec<StageCfg>,
     pub dataset: DatasetCfg,
     pub eval: EvalCfg,
     /// serving-scheduler knobs (the `serve:` section); defaults to
@@ -87,21 +115,77 @@ impl SlimConfig {
         let model = y
             .get("model")
             .context("config missing `model` section")?;
-        let comp = y
-            .get("compression")
-            .context("config missing `compression` section")?;
+        let comp = y.get("compression").cloned().unwrap_or(Yaml::Null);
+        if y.get("compression").is_none() && y.get("pipeline").is_none() {
+            bail!("config needs a `compression` section or a `pipeline` section");
+        }
         let dataset = y.get("dataset").cloned().unwrap_or(Yaml::Null);
         let eval = y.get("eval").cloned().unwrap_or(Yaml::Null);
         let serve = y.get("serve").cloned().unwrap_or(Yaml::Null);
 
         let method = comp.str_or("method", "quantization");
         let method_section = comp.get(&method).cloned().unwrap_or(Yaml::Null);
+        let default_algo = PassKind::from_method(&method)
+            .map(|k| k.default_pass())
+            .unwrap_or("none");
 
-        let alpha_grid = method_section
-            .get("alpha_grid")
-            .and_then(Yaml::as_seq)
-            .map(|s| s.iter().filter_map(Yaml::as_f64).collect())
-            .unwrap_or_else(|| vec![0.0, 0.00025, 0.0005, 0.001]);
+        // the legacy method section uses the same strict typed accessors
+        // as pipeline stages: a wrong-typed value is a loud error in both
+        // spellings, never a silent fall-back to the default. (Unlike
+        // `pipeline:` stages, *unknown* keys are tolerated here —
+        // AngelSlim-style configs carry extra method-section fields — so
+        // only the new stage spelling gets the typo-catching whitelist.)
+        let sec = &method_section;
+        let label = "compression";
+        let compression = CompressionCfg {
+            algo: match sec.get("algo") {
+                None => default_algo.to_string(),
+                Some(v) => v
+                    .as_str()
+                    .map(String::from)
+                    .with_context(|| format!("compression: algo must be a string, got `{v}`"))?,
+            },
+            bits: match stage_i64(sec, "bits", label)? {
+                Some(v) => u32::try_from(v)
+                    .map_err(|_| anyhow::anyhow!("compression: bits must be >= 0, got {v}"))?,
+                None => 8,
+            },
+            group_size: match stage_i64(sec, "group_size", label)? {
+                Some(v) => non_negative(v, "compression.group_size")?,
+                None => 32,
+            },
+            alpha_grid: alpha_grid_strict(sec, label)?
+                .unwrap_or_else(|| vec![0.0, 0.00025, 0.0005, 0.001]),
+            ratio: stage_f64(sec, "ratio", label)?.unwrap_or(0.25),
+            smooth_alpha: stage_f64(sec, "smooth_alpha", label)?.unwrap_or(0.5),
+            num_speculative_tokens: match stage_i64(sec, "num_speculative_tokens", label)? {
+                Some(v) => non_negative(v, "compression.num_speculative_tokens")?,
+                None => 2,
+            },
+            low_memory_budget_layers: match stage_i64(sec, "low_memory_budget_layers", label)? {
+                Some(v) => non_negative(v, "compression.low_memory_budget_layers")?,
+                None => 0,
+            },
+            method,
+        };
+
+        let pipeline = match y.get("pipeline") {
+            // legacy single-method form: one stage, params = the
+            // compression section verbatim (the claimed method is checked
+            // against the registry in validate())
+            None => vec![StageCfg {
+                pass: compression.algo.clone(),
+                params: compression.clone(),
+            }],
+            Some(Yaml::Seq(items)) => items
+                .iter()
+                .map(|item| stage_from_yaml(item, &compression))
+                .collect::<Result<Vec<_>>>()?,
+            Some(other) => bail!(
+                "`pipeline` must be a sequence of stages (got {other}); \
+                 write `pipeline:` followed by `- pass: <name>` entries"
+            ),
+        };
 
         let cfg = SlimConfig {
             global: GlobalCfg {
@@ -114,20 +198,8 @@ impl SlimConfig {
                 artifacts_dir: model.str_or("artifacts_dir", "artifacts"),
                 dtype: model.str_or("dtype", "fp32"),
             },
-            compression: CompressionCfg {
-                algo: method_section.str_or("algo", default_algo(&method)),
-                bits: method_section.i64_or("bits", 8) as u32,
-                group_size: method_section.i64_or("group_size", 32) as usize,
-                alpha_grid,
-                ratio: method_section.f64_or("ratio", 0.25),
-                num_speculative_tokens: method_section
-                    .i64_or("num_speculative_tokens", 2)
-                    as usize,
-                low_memory_budget_layers: method_section
-                    .i64_or("low_memory_budget_layers", 0)
-                    as usize,
-                method,
-            },
+            compression,
+            pipeline,
             dataset: DatasetCfg {
                 kind: dataset.str_or("kind", "synthetic"),
                 num_samples: dataset.i64_or("num_samples", 64) as usize,
@@ -165,15 +237,55 @@ impl SlimConfig {
     }
 
     pub fn validate(&self) -> Result<()> {
-        match self.compression.method.as_str() {
-            "quantization" | "spec_decode" | "sparse_attn" | "token_prune" => {}
-            other => bail!("unknown compression method `{other}`"),
+        if PassKind::from_method(&self.compression.method).is_none() {
+            bail!(
+                "unknown compression method `{}` (have {:?})",
+                self.compression.method,
+                PassKind::all().map(|k| k.method())
+            );
         }
-        if !(1..=16).contains(&self.compression.bits) {
-            bail!("bits must be in 1..=16, got {}", self.compression.bits);
+        if self.pipeline.is_empty() {
+            bail!("pipeline must contain at least one stage");
         }
-        if self.compression.ratio <= 0.0 || self.compression.ratio > 1.0 {
-            bail!("ratio must be in (0, 1], got {}", self.compression.ratio);
+        for (i, stage) in self.pipeline.iter().enumerate() {
+            let pass = PassRegistry::find(&stage.pass).with_context(|| {
+                format!(
+                    "pipeline stage {i}: unknown pass `{}` (registered: {:?})",
+                    stage.pass,
+                    PassRegistry::names()
+                )
+            })?;
+            // the desugared legacy form carries the YAML's claimed method;
+            // a mismatch there is the old "algo not registered for method"
+            if stage.params.method != pass.kind().method() {
+                bail!(
+                    "algo `{}` not registered for method `{}` (have {:?})",
+                    stage.pass,
+                    stage.params.method,
+                    PassRegistry::names_for(pass.kind())
+                );
+            }
+            let p = &stage.params;
+            if !(1..=16).contains(&p.bits) {
+                bail!("stage {i} (`{}`): bits must be in 1..=16, got {}", stage.pass, p.bits);
+            }
+            if p.ratio <= 0.0 || p.ratio > 1.0 {
+                bail!("stage {i} (`{}`): ratio must be in (0, 1], got {}", stage.pass, p.ratio);
+            }
+            if !(0.0..=1.0).contains(&p.smooth_alpha) {
+                bail!(
+                    "stage {i} (`{}`): smooth_alpha must be in [0, 1], got {}",
+                    stage.pass,
+                    p.smooth_alpha
+                );
+            }
+            if p.alpha_grid.is_empty() {
+                bail!(
+                    "stage {i} (`{}`): alpha_grid must not be empty \
+                     (the LeptoQuant search needs at least one candidate)",
+                    stage.pass
+                );
+            }
         }
         if self.dataset.seq_len == 0 || self.dataset.num_samples == 0 {
             bail!("dataset must be non-empty");
@@ -196,6 +308,119 @@ impl SlimConfig {
     }
 }
 
+/// The per-stage override keys a `pipeline:` entry may carry. A key
+/// outside this list (a typo like `smooth_aplha`) or a value of the wrong
+/// YAML type is a loud error, not a silent fallback to the default.
+const STAGE_KEYS: &[&str] = &[
+    "pass",
+    "bits",
+    "group_size",
+    "ratio",
+    "smooth_alpha",
+    "num_speculative_tokens",
+    "low_memory_budget_layers",
+    "alpha_grid",
+];
+
+/// Parse one `pipeline:` entry — either a bare pass name (`- gptq`) or a
+/// map with per-stage overrides (`- pass: gptq` + `group_size: 64` ...).
+fn stage_from_yaml(item: &Yaml, base: &CompressionCfg) -> Result<StageCfg> {
+    let (name, overrides): (&str, &Yaml) = match item {
+        Yaml::Str(s) => (s.as_str(), &Yaml::Null),
+        Yaml::Map(m) => {
+            let name = item
+                .get("pass")
+                .and_then(Yaml::as_str)
+                .context("pipeline stage missing `pass: <name>`")?;
+            if let Some(unknown) = m.keys().find(|k| !STAGE_KEYS.contains(&k.as_str())) {
+                bail!(
+                    "stage `{name}`: unknown override `{unknown}` (allowed: {STAGE_KEYS:?})"
+                );
+            }
+            (name, item)
+        }
+        other => bail!(
+            "pipeline stage must be a pass name or a `pass:` map, got `{other}`"
+        ),
+    };
+    let mut params = base.clone();
+    params.algo = name.to_string();
+    // resolve the method family from the registry; unknown names keep the
+    // base method and fail loudly in validate() with the full name list
+    if let Some(pass) = PassRegistry::find(name) {
+        params.method = pass.kind().method().to_string();
+    }
+    let scope = format!("stage `{name}`");
+    if let Some(v) = stage_i64(overrides, "bits", &scope)? {
+        params.bits = u32::try_from(v)
+            .map_err(|_| anyhow::anyhow!("{scope}: bits must be >= 0, got {v}"))?;
+    }
+    if let Some(v) = stage_i64(overrides, "group_size", &scope)? {
+        params.group_size = non_negative(v, &format!("{scope}: group_size"))?;
+    }
+    if let Some(v) = stage_f64(overrides, "ratio", &scope)? {
+        params.ratio = v;
+    }
+    if let Some(v) = stage_f64(overrides, "smooth_alpha", &scope)? {
+        params.smooth_alpha = v;
+    }
+    if let Some(v) = stage_i64(overrides, "num_speculative_tokens", &scope)? {
+        params.num_speculative_tokens =
+            non_negative(v, &format!("{scope}: num_speculative_tokens"))?;
+    }
+    if let Some(v) = stage_i64(overrides, "low_memory_budget_layers", &scope)? {
+        params.low_memory_budget_layers =
+            non_negative(v, &format!("{scope}: low_memory_budget_layers"))?;
+    }
+    if let Some(grid) = alpha_grid_strict(overrides, &scope)? {
+        params.alpha_grid = grid;
+    }
+    Ok(StageCfg { pass: name.to_string(), params })
+}
+
+/// Typed override accessors shared by the legacy `compression:` section
+/// and `pipeline:` stages: absent key → None; present with the wrong
+/// YAML type → loud error (never a silent default).
+fn stage_i64(section: &Yaml, key: &str, scope: &str) -> Result<Option<i64>> {
+    match section.get(key) {
+        None => Ok(None),
+        Some(v) => Ok(Some(v.as_i64().with_context(|| {
+            format!("{scope}: {key} must be an integer, got `{v}`")
+        })?)),
+    }
+}
+
+fn stage_f64(section: &Yaml, key: &str, scope: &str) -> Result<Option<f64>> {
+    match section.get(key) {
+        None => Ok(None),
+        Some(v) => Ok(Some(v.as_f64().with_context(|| {
+            format!("{scope}: {key} must be a number, got `{v}`")
+        })?)),
+    }
+}
+
+/// Strict alpha_grid: present-but-not-a-list or non-numeric entries are
+/// loud errors; absent → None (caller applies the default).
+fn alpha_grid_strict(section: &Yaml, scope: &str) -> Result<Option<Vec<f64>>> {
+    match section.get("alpha_grid") {
+        None => Ok(None),
+        Some(grid) => {
+            let seq = grid
+                .as_seq()
+                .with_context(|| format!("{scope}: alpha_grid must be a list, got `{grid}`"))?;
+            let vals = seq
+                .iter()
+                .map(|v| {
+                    v.as_f64().with_context(|| {
+                        format!("{scope}: alpha_grid entries must be numbers, got `{v}`")
+                    })
+                })
+                .collect::<Result<Vec<f64>>>()?;
+            Ok(Some(vals))
+        }
+    }
+}
+
 /// Reject negative config values instead of letting `as usize` wrap them
 /// into huge limits that silently disable the knob they configure.
 fn non_negative(v: i64, name: &str) -> Result<usize> {
@@ -203,16 +428,6 @@ fn non_negative(v: i64, name: &str) -> Result<usize> {
         bail!("{name} must be >= 0, got {v}");
     }
     Ok(v as usize)
-}
-
-fn default_algo(method: &str) -> &'static str {
-    match method {
-        "quantization" => "fp8_dynamic",
-        "spec_decode" => "eagle3",
-        "sparse_attn" => "stem",
-        "token_prune" => "idpruner",
-        _ => "none",
-    }
 }
 
 #[cfg(test)]
@@ -264,6 +479,10 @@ serve:
         assert_eq!(c.serve.max_in_flight, 4);
         assert_eq!(c.serve.kv_budget_bytes, 65536);
         assert_eq!(c.serve.workers, 2);
+        // legacy form desugars to a one-stage pipeline
+        assert_eq!(c.pipeline.len(), 1);
+        assert_eq!(c.pipeline[0].pass, "leptoquant");
+        assert_eq!(c.pipeline[0].params, c.compression);
     }
 
     #[test]
@@ -279,6 +498,110 @@ serve:
         assert_eq!(c.serve.max_in_flight, 8);
         assert_eq!(c.serve.kv_budget_bytes, 0);
         assert_eq!(c.serve.workers, 1, "single worker unless configured");
+        assert_eq!(c.pipeline[0].pass, "stem");
+    }
+
+    #[test]
+    fn pipeline_section_parses_stages_with_overrides() {
+        let c = SlimConfig::from_str(
+            "model:\n  name: tiny-fixture\n\
+             pipeline:\n\
+             \x20 - pass: smooth\n    smooth_alpha: 0.4\n\
+             \x20 - pass: gptq\n    group_size: 64\n    low_memory_budget_layers: 1\n\
+             \x20 - eval\n",
+        )
+        .unwrap();
+        assert_eq!(c.pipeline.len(), 3);
+        assert_eq!(c.pipeline[0].pass, "smooth");
+        assert_eq!(c.pipeline[0].params.method, "quantization");
+        assert!((c.pipeline[0].params.smooth_alpha - 0.4).abs() < 1e-12);
+        assert_eq!(c.pipeline[1].params.group_size, 64);
+        assert_eq!(c.pipeline[1].params.low_memory_budget_layers, 1);
+        // bare scalar stage + method resolved from the registry
+        assert_eq!(c.pipeline[2].pass, "eval");
+        assert_eq!(c.pipeline[2].params.method, "eval");
+        // stage 0 inherited the default where not overridden
+        assert_eq!(c.pipeline[0].params.group_size, 32);
+    }
+
+    #[test]
+    fn pipeline_rejects_unknown_pass_and_empty() {
+        let err = SlimConfig::from_str(
+            "model:\n  name: m\npipeline:\n  - pass: wizardry\n",
+        )
+        .unwrap_err();
+        assert!(format!("{err:#}").contains("wizardry"), "{err:#}");
+        assert!(SlimConfig::from_str("model:\n  name: m\npipeline: []\n").is_err());
+        assert!(
+            SlimConfig::from_str("model:\n  name: m\npipeline: gptq\n").is_err(),
+            "scalar pipeline must be rejected with guidance"
+        );
+    }
+
+    #[test]
+    fn pipeline_rejects_invalid_stage_overrides() {
+        for bad in [
+            "  - pass: int4\n    bits: 99\n",
+            "  - pass: idpruner\n    ratio: 0.0\n",
+            "  - pass: smooth\n    smooth_alpha: 1.5\n",
+            "  - pass: gptq\n    low_memory_budget_layers: -1\n",
+            "  - pass: gptq\n    bits: -4\n",
+        ] {
+            let r = SlimConfig::from_str(&format!("model:\n  name: m\npipeline:\n{bad}"));
+            assert!(r.is_err(), "override must fail loudly: {bad}");
+        }
+    }
+
+    #[test]
+    fn pipeline_rejects_wrong_typed_and_unknown_overrides() {
+        for (bad, why) in [
+            ("  - pass: idpruner\n    ratio: fast\n", "string ratio"),
+            ("  - pass: int4\n    bits: 4.5\n", "float bits"),
+            ("  - pass: smooth\n    smooth_aplha: 0.9\n", "typoed key"),
+            ("  - pass: leptoquant\n    alpha_grid: 3\n", "scalar alpha_grid"),
+            ("  - pass: leptoquant\n    alpha_grid: [a, b]\n", "non-numeric grid"),
+        ] {
+            let r = SlimConfig::from_str(&format!("model:\n  name: m\npipeline:\n{bad}"));
+            assert!(r.is_err(), "{why} must fail loudly, not fall back to the default");
+        }
+        // integers are valid floats for f64 overrides
+        let c = SlimConfig::from_str(
+            "model:\n  name: m\npipeline:\n  - pass: idpruner\n    ratio: 1\n",
+        )
+        .unwrap();
+        assert!((c.pipeline[0].params.ratio - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn legacy_section_is_equally_strict_about_types() {
+        // the same misconfiguration must fail identically in both
+        // spellings — no silent fall-back in the legacy form either
+        for bad in [
+            "    ratio: fast\n",
+            "    bits: 4.5\n",
+            "    alpha_grid: [a, b]\n",
+            "    alpha_grid: []\n",
+        ] {
+            let src = format!(
+                "model:\n  name: m\ncompression:\n  method: quantization\n  quantization:\n\
+                 \x20   algo: leptoquant\n{bad}"
+            );
+            assert!(SlimConfig::from_str(&src).is_err(), "legacy form must reject: {bad:?}");
+        }
+        // wrong-typed algo must not silently fall back to the default pass
+        let r = SlimConfig::from_str(
+            "model:\n  name: m\ncompression:\n  method: quantization\n  quantization:\n    algo: 4\n",
+        );
+        assert!(r.is_err(), "non-string algo must be rejected, not defaulted");
+    }
+
+    #[test]
+    fn legacy_method_algo_mismatch_is_loud() {
+        let r = SlimConfig::from_str(
+            "model:\n  name: m\ncompression:\n  method: quantization\n  quantization:\n    algo: stem\n",
+        );
+        let err = format!("{:#}", r.unwrap_err());
+        assert!(err.contains("not registered for method"), "{err}");
     }
 
     #[test]
@@ -308,7 +631,8 @@ serve:
         let r = SlimConfig::from_str(
             "model:\n  name: m\ncompression:\n  method: teleport\n",
         );
-        assert!(r.is_err());
+        let err = format!("{:#}", r.unwrap_err());
+        assert!(err.contains("unknown compression method"), "{err}");
     }
 
     #[test]
@@ -322,5 +646,10 @@ serve:
     #[test]
     fn missing_model_errors() {
         assert!(SlimConfig::from_str("compression:\n  method: quantization\n").is_err());
+    }
+
+    #[test]
+    fn missing_compression_and_pipeline_errors() {
+        assert!(SlimConfig::from_str("model:\n  name: m\n").is_err());
     }
 }

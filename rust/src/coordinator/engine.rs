@@ -1,31 +1,18 @@
-//! CompressEngine: prepare → calibrate → compress → save → eval.
+//! CompressEngine: the generic pipeline-stage loop.
+//!
+//! `run` resolves each configured stage against the static `PassRegistry`
+//! and drives the pass lifecycle (prepare → calibrate → apply → report)
+//! over one shared [`PassContext`], threading the mutated model from stage
+//! to stage and accumulating a structured per-stage [`PipelineReport`].
+//! There is no per-algorithm dispatch here: adding a pass to the registry
+//! is all it takes to make it runnable, listable, and validatable.
 
 use crate::config::SlimConfig;
-use crate::eval;
-use crate::models::Transformer;
-use crate::quant::{
-    self, awq::Awq, gptq::Gptq, leptoquant::LeptoQuant, AffineQuantizer, Granularity,
-    Seq2Quantizer, TernaryQuantizer,
-};
-use crate::sparse_attn::SparseAlgo;
-use crate::tensor::Tensor;
-use anyhow::{bail, Result};
+use anyhow::{Context, Result};
 
-use super::factories::{DataFactory, Datasets, ModelFactory, SlimFactory};
-
-#[derive(Clone, Debug, Default)]
-pub struct CompressReport {
-    pub method: String,
-    pub algo: String,
-    /// quantization: NLL before/after; sparse/prune: accuracy dense/sparse
-    pub metric_before: f64,
-    pub metric_after: f64,
-    /// effective bits per weight (quantization) or kept density
-    pub compression: f64,
-    pub notes: Vec<String>,
-    /// peak resident bytes during calibration (low-memory mode)
-    pub peak_calib_bytes: usize,
-}
+use super::factories::SlimFactory;
+use super::pass::{PassContext, PipelineReport};
+use super::registry::PassRegistry;
 
 pub struct CompressEngine {
     pub cfg: SlimConfig,
@@ -41,296 +28,41 @@ impl CompressEngine {
         Self::new(SlimConfig::from_file(path)?)
     }
 
-    pub fn run(&self) -> Result<CompressReport> {
-        match self.cfg.compression.method.as_str() {
-            "quantization" => self.run_quantization(),
-            "sparse_attn" => self.run_sparse_attn(),
-            "token_prune" => self.run_token_prune(),
-            "spec_decode" => bail!(
-                "spec_decode jobs run through the serving engine — use \
-                 `angelslim serve` or examples/serve_spec_decode"
-            ),
-            other => bail!("unknown method {other}"),
+    /// Run the configured pipeline and return the per-stage report.
+    pub fn run(&self) -> Result<PipelineReport> {
+        self.run_with_context().map(|(report, _)| report)
+    }
+
+    /// Run the pipeline, also returning the final context (mutated model,
+    /// calibration cache, baseline metric) — the hook equivalence tests
+    /// and downstream tooling use to inspect the produced model.
+    pub fn run_with_context(&self) -> Result<(PipelineReport, PassContext)> {
+        let mut ctx = PassContext::new(self.cfg.clone());
+        for (i, spec) in self.cfg.pipeline.iter().enumerate() {
+            let pass = PassRegistry::find(&spec.pass).with_context(|| {
+                format!(
+                    "pipeline stage {i}: unknown pass `{}` (registered: {:?})",
+                    spec.pass,
+                    PassRegistry::names()
+                )
+            })?;
+            let stage_err = |what: &str| format!("stage {i} (`{}`): {what}", spec.pass);
+            pass.prepare(&mut ctx, spec).with_context(|| stage_err("prepare"))?;
+            let t0 = std::time::Instant::now();
+            pass.calibrate(&mut ctx, spec).with_context(|| stage_err("calibrate"))?;
+            let outcome = pass.apply(&mut ctx, spec).with_context(|| stage_err("apply"))?;
+            let wall_ms = t0.elapsed().as_secs_f64() * 1e3;
+            ctx.reports.push(pass.report(outcome, wall_ms));
         }
-    }
-
-    // ------------------------------------------------------------------
-    // quantization jobs
-    // ------------------------------------------------------------------
-
-    fn run_quantization(&self) -> Result<CompressReport> {
-        let mut model = ModelFactory::load(&self.cfg)?;
-        let ds = DataFactory::load(&self.cfg)?;
-        let algo = self.cfg.compression.algo.as_str();
-
-        let before = eval::corpus_nll(&model, &ds.eval, 48, 8)?;
-        let mut notes = Vec::new();
-        let mut peak = 0usize;
-
-        let bits: f64 = match algo {
-            "int8" => {
-                model.apply_quantizer(&AffineQuantizer::int8_per_channel());
-                8.0
-            }
-            "int4" => {
-                model.apply_quantizer(&AffineQuantizer::int4_group32());
-                5.0
-            }
-            "seq2" => {
-                model.apply_quantizer(&Seq2Quantizer::tuned(32));
-                3.0
-            }
-            "ternary" => {
-                model.apply_quantizer(&TernaryQuantizer::default());
-                1.67
-            }
-            "fp8_dynamic" | "w4a8" => {
-                // weight-side QDQ (activation QDQ is a runtime concern)
-                if algo == "w4a8" {
-                    model.apply_quantizer(&AffineQuantizer::new(
-                        4,
-                        Granularity::Group(self.cfg.compression.group_size.max(32)),
-                    ));
-                    4.25
-                } else {
-                    model.apply_quantizer(&quant::Fp8WeightQuantizer);
-                    8.0
-                }
-            }
-            "gptq" | "awq" | "fp8_lepto" | "leptoquant" => {
-                peak = self.calibrated_quantization(&mut model, &ds, algo, &mut notes)?;
-                match algo {
-                    "gptq" | "awq" => 5.0,
-                    _ => 8.0,
-                }
-            }
-            other => bail!("unhandled quant algo {other}"),
-        };
-
-        let after = eval::corpus_nll(&model, &ds.eval, 48, 8)?;
-        self.save_note(&mut notes)?;
-        Ok(CompressReport {
-            method: "quantization".into(),
-            algo: algo.into(),
-            metric_before: before,
-            metric_after: after,
-            compression: bits,
-            notes,
-            peak_calib_bytes: peak,
-        })
-    }
-
-    /// GPTQ / AWQ / LeptoQuant need calibration activations; layers are
-    /// streamed under the low-memory ledger when a budget is configured.
-    fn calibrated_quantization(
-        &self,
-        model: &mut Transformer,
-        ds: &Datasets,
-        algo: &str,
-        notes: &mut Vec<String>,
-    ) -> Result<usize> {
-        // capture per-layer activations over the calibration set
-        let mut attn_in: Vec<Vec<f32>> = vec![Vec::new(); model.cfg.n_layers];
-        let mut mlp_in: Vec<Vec<f32>> = vec![Vec::new(); model.cfg.n_layers];
-        for seq in ds.calib.iter().take(8) {
-            let caps = model.capture_activations(seq);
-            for (li, cap) in caps.iter().enumerate() {
-                attn_in[li].extend_from_slice(&cap.attn_in.data);
-                mlp_in[li].extend_from_slice(&cap.mlp_in.data);
-            }
-        }
-        let d = model.cfg.d_model;
-
-        // low-memory ledger: one entry per layer, sized by parameter bytes
-        let layer_bytes: Vec<usize> = model
-            .layers
-            .iter()
-            .map(|l| {
-                4 * (l.wq.numel()
-                    + l.wk.numel()
-                    + l.wv.numel()
-                    + l.wo.numel()
-                    + l.w_gate.numel()
-                    + l.w_up.numel()
-                    + l.w_down.numel())
-            })
-            .collect();
-        let mut ledger = quant::calib::LowMemoryLedger::new(
-            layer_bytes,
-            self.cfg.compression.low_memory_budget_layers,
-        );
-
-        for li in 0..model.cfg.n_layers {
-            ledger.touch(li);
-            let rows_a = attn_in[li].len() / d;
-            let xa = Tensor::from_vec(&[rows_a, d], attn_in[li].clone());
-            let rows_m = mlp_in[li].len() / d;
-            let xm = Tensor::from_vec(&[rows_m, d], mlp_in[li].clone());
-            match algo {
-                "gptq" => {
-                    let g = Gptq::default();
-                    let wq = g.quantize(&model.layers[li].wq.clone(), &xa);
-                    model.set_layer_weight(li, "wq", wq);
-                    let wg = g.quantize(&model.layers[li].w_gate.clone(), &xm);
-                    model.set_layer_weight(li, "w_gate", wg);
-                    let wu = g.quantize(&model.layers[li].w_up.clone(), &xm);
-                    model.set_layer_weight(li, "w_up", wu);
-                }
-                "awq" => {
-                    let a = Awq::default();
-                    let r = a.quantize(&model.layers[li].w_gate.clone(), &xm);
-                    notes.push(format!("layer{li} w_gate awq alpha={}", r.best_alpha));
-                    model.set_layer_weight(li, "w_gate", r.weights);
-                    let r = a.quantize(&model.layers[li].w_up.clone(), &xm);
-                    model.set_layer_weight(li, "w_up", r.weights);
-                }
-                "fp8_lepto" | "leptoquant" => {
-                    let lq = LeptoQuant {
-                        alpha_grid: self.cfg.compression.alpha_grid.clone(),
-                        ..Default::default()
-                    };
-                    let res = lq.search(&xm, &model.layers[li].w_gate.clone());
-                    notes.push(format!(
-                        "layer{li} lepto alpha={} mse {:.3e} -> {:.3e}",
-                        res.best_alpha, res.mse_traditional, res.mse_best
-                    ));
-                    // deploy: weight QDQ at fp8 (activation scale is a
-                    // runtime parameter recorded in the notes)
-                    for which in ["w_gate", "w_up"] {
-                        let mut w = match which {
-                            "w_gate" => model.layers[li].w_gate.clone(),
-                            _ => model.layers[li].w_up.clone(),
-                        };
-                        quant::fp8::qdq_slice_scaled(&mut w.data, quant::Fp8Format::E4M3);
-                        model.set_layer_weight(li, which, w);
-                    }
-                }
-                _ => unreachable!(),
-            }
-        }
-        notes.push(format!(
-            "calibration peak {} / total {} bytes (budget {} layers), {} swaps",
-            ledger.peak_bytes,
-            ledger.total_bytes(),
-            self.cfg.compression.low_memory_budget_layers,
-            ledger.swaps
-        ));
-        Ok(ledger.peak_bytes)
-    }
-
-    // ------------------------------------------------------------------
-    // sparse attention + token pruning jobs
-    // ------------------------------------------------------------------
-
-    fn run_sparse_attn(&self) -> Result<CompressReport> {
-        let model = ModelFactory::load(&self.cfg)?;
-        let algo = match self.cfg.compression.algo.as_str() {
-            "dense" => SparseAlgo::Dense,
-            "a_shape" => SparseAlgo::AShape,
-            "tri_shape" => SparseAlgo::TriShape,
-            "dilated" => SparseAlgo::Dilated,
-            "strided" => SparseAlgo::Strided,
-            "minference" => SparseAlgo::MInference,
-            "xattention" => SparseAlgo::XAttention,
-            "flexprefill" => SparseAlgo::FlexPrefill,
-            "stem" => SparseAlgo::Stem,
-            other => bail!("unknown sparse algo {other}"),
-        };
-        let seq = self.cfg.dataset.seq_len.min(model.cfg.max_t - 8);
-        let dense = eval::eval_sparse_accuracy(&model, SparseAlgo::Dense, seq, 4, 8, 1.0);
-        let row = eval::eval_sparse_accuracy(
-            &model,
-            algo,
-            seq,
-            4,
-            8, // finer blocks keep short configs meaningfully sparse
-            self.cfg.compression.ratio,
-        );
-        Ok(CompressReport {
-            method: "sparse_attn".into(),
-            algo: self.cfg.compression.algo.clone(),
-            metric_before: dense.avg,
-            metric_after: row.avg,
-            compression: row.mean_density,
-            notes: row
-                .per_task
-                .iter()
-                .map(|(k, a)| format!("{}: {:.3}", k.name(), a))
-                .collect(),
-            peak_calib_bytes: 0,
-        })
-    }
-
-    fn run_token_prune(&self) -> Result<CompressReport> {
-        use crate::token_prune::visual;
-        let algo = self.cfg.compression.algo.as_str();
-        let gen = crate::data::VisionSceneGen::new(96, 24, 6, self.cfg.global.seed);
-        let pruner: Box<dyn crate::token_prune::Pruner> = match algo {
-            "idpruner" => Box::new(visual::IdPruner::default()),
-            "fastv" => Box::new(visual::FastV),
-            "divprune" => Box::new(visual::DivPrune),
-            "visionzip" => Box::new(visual::VisionZip),
-            "dart" => Box::new(visual::Dart),
-            "vispruner" => Box::new(visual::VisPruner),
-            "scope" => Box::new(visual::Scope),
-            "visionselector" => Box::new(visual::VisionSelector),
-            "hiprune" => Box::new(visual::HiPrune),
-            // audio algos run through the ASR evaluator instead
-            "samp" | "atome" | "fastadasp" | "cdpruner" => {
-                return self.run_audio_prune(algo);
-            }
-            other => bail!("unknown pruner {other}"),
-        };
-        let n = 40;
-        let base = eval::vqa::baseline_accuracy(&gen, n);
-        let acc = eval::eval_pruner_accuracy(&gen, pruner.as_ref(), self.cfg.compression.ratio, n);
-        Ok(CompressReport {
-            method: "token_prune".into(),
-            algo: algo.into(),
-            metric_before: base,
-            metric_after: acc,
-            compression: self.cfg.compression.ratio,
-            notes: vec![],
-            peak_calib_bytes: 0,
-        })
-    }
-
-    fn run_audio_prune(&self, algo: &str) -> Result<CompressReport> {
-        use crate::token_prune::audio;
-        let gen = crate::data::AudioSceneGen::new(24, 24, 0.1, self.cfg.global.seed);
-        let reducer: Box<dyn crate::token_prune::Reducer> = match algo {
-            "samp" => Box::new(audio::Samp::default()),
-            "atome" => Box::new(audio::AToMe),
-            "fastadasp" => Box::new(audio::FastAdaSp),
-            "cdpruner" => Box::new(audio::CdPruner),
-            other => bail!("unknown audio reducer {other}"),
-        };
-        let base = eval::asr::baseline_wer(&gen, 15, 150);
-        let w = eval::eval_wer(&gen, reducer.as_ref(), self.cfg.compression.ratio, 15, 150);
-        Ok(CompressReport {
-            method: "token_prune(audio)".into(),
-            algo: algo.into(),
-            metric_before: base,
-            metric_after: w,
-            compression: self.cfg.compression.ratio,
-            notes: vec!["metric is WER% (lower is better)".into()],
-            peak_calib_bytes: 0,
-        })
-    }
-
-    fn save_note(&self, notes: &mut Vec<String>) -> Result<()> {
-        let dir = &self.cfg.global.save_path;
-        std::fs::create_dir_all(dir)?;
-        let marker = format!("{dir}/compressed_{}.txt", self.cfg.compression.algo);
-        std::fs::write(&marker, format!("{:#?}", self.cfg))?;
-        notes.push(format!("checkpoint note saved to {marker}"));
-        Ok(())
+        let report = PipelineReport { stages: ctx.reports.clone() };
+        Ok((report, ctx))
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::coordinator::pass::StageReport;
 
     /// Hermetic engine over the in-memory fixture model + its rule corpus:
     /// no artifacts/ required, so these run on a clean checkout.
@@ -343,18 +75,28 @@ mod tests {
         CompressEngine::new(SlimConfig::from_str(&src).unwrap()).unwrap()
     }
 
+    /// One-stage runs: the single stage of the desugared legacy config.
+    fn run_one(method: &str, algo: &str, extra: &str) -> StageReport {
+        let r = engine(method, algo, extra).run().unwrap();
+        assert_eq!(r.stages.len(), 1, "legacy config desugars to one stage");
+        r.stages.into_iter().next().unwrap()
+    }
+
     #[test]
     fn int8_job_near_lossless() {
-        let r = engine("quantization", "int8", "").run().unwrap();
+        let r = run_one("quantization", "int8", "");
         assert!(r.metric_after < r.metric_before + 0.05, "{r:?}");
+        assert_eq!(r.kind, "quantization");
+        assert!((r.size_ratio - 0.25).abs() < 1e-12, "8/32 bits: {r:?}");
+        assert!(r.wall_ms >= 0.0);
     }
 
     #[test]
     fn ternary_ptq_job_degrades_vs_int4() {
         // the paper-shaped PTQ ladder: sub-2-bit PTQ visibly collapses
         // while int4 stays close to the fp32 reference
-        let int4 = engine("quantization", "int4", "").run().unwrap();
-        let tern = engine("quantization", "ternary", "").run().unwrap();
+        let int4 = run_one("quantization", "int4", "");
+        let tern = run_one("quantization", "ternary", "");
         assert!(
             tern.metric_after > int4.metric_after + 0.2,
             "{tern:?} vs {int4:?}"
@@ -364,12 +106,8 @@ mod tests {
 
     #[test]
     fn low_memory_budget_bounds_peak() {
-        let full = engine("quantization", "gptq", "    low_memory_budget_layers: 0\n")
-            .run()
-            .unwrap();
-        let lo = engine("quantization", "gptq", "    low_memory_budget_layers: 1\n")
-            .run()
-            .unwrap();
+        let full = run_one("quantization", "gptq", "    low_memory_budget_layers: 0\n");
+        let lo = run_one("quantization", "gptq", "    low_memory_budget_layers: 1\n");
         assert!(lo.peak_calib_bytes < full.peak_calib_bytes, "{lo:?} vs {full:?}");
         // accuracy unaffected by streaming
         assert!((lo.metric_after - full.metric_after).abs() < 1e-6);
@@ -377,7 +115,7 @@ mod tests {
 
     #[test]
     fn sparse_attn_job_runs() {
-        let r = engine("sparse_attn", "stem", "    ratio: 0.3\n").run().unwrap();
+        let r = run_one("sparse_attn", "stem", "    ratio: 0.3\n");
         assert!(r.compression < 0.95, "{r:?}");
         assert!(r.metric_after >= 0.0);
         // one scored note per long-context task family, incl. the needle task
@@ -387,7 +125,54 @@ mod tests {
 
     #[test]
     fn token_prune_job_runs() {
-        let r = engine("token_prune", "idpruner", "    ratio: 0.25\n").run().unwrap();
+        let r = run_one("token_prune", "idpruner", "    ratio: 0.25\n");
         assert!(r.metric_after > 0.3, "{r:?}");
+        assert_eq!(r.kind, "token_prune");
+    }
+
+    #[test]
+    fn spec_decode_stage_refuses_compress_loop() {
+        let err = engine("spec_decode", "eagle3", "").run().unwrap_err();
+        assert!(format!("{err:#}").contains("serving engine"), "{err:#}");
+    }
+
+    #[test]
+    fn multi_stage_pipeline_threads_the_model_through() {
+        let src = "global:\n  save_path: target/test-output/engine\n\
+                   model:\n  name: tiny-fixture\n\
+                   pipeline:\n  - smooth\n  - int4\n  - eval\n\
+                   dataset:\n  kind: fixture\n  num_samples: 8\n  seq_len: 40\n";
+        let engine = CompressEngine::new(SlimConfig::from_str(src).unwrap()).unwrap();
+        let (report, ctx) = engine.run_with_context().unwrap();
+        assert_eq!(report.stages.len(), 3);
+        let [smooth, int4, eval] = &report.stages[..] else { unreachable!() };
+        // smooth is function-preserving: NLL moves only by float rounding
+        assert!((smooth.metric_after - smooth.metric_before).abs() < 0.05, "{smooth:?}");
+        assert!((smooth.size_ratio - 1.0).abs() < 1e-12);
+        // int4 sees the *smoothed* model: its before == the pipeline state
+        // (two deterministic evals of the same weights — exactly equal)
+        assert_eq!(int4.metric_before.to_bits(), smooth.metric_after.to_bits(), "{int4:?}");
+        // the eval checkpoint reports final-vs-baseline
+        assert_eq!(eval.kind, "eval");
+        assert_eq!(eval.metric_before.to_bits(), ctx.baseline_nll.unwrap().to_bits());
+        assert_eq!(eval.metric_after.to_bits(), int4.metric_after.to_bits(), "{eval:?}");
+        assert!((report.overall_size_ratio() - 5.0 / 32.0).abs() < 1e-12);
+        // the context surrenders the quantized model
+        assert!(ctx.into_model().is_some());
+    }
+
+    #[test]
+    fn eval_only_pipeline_scores_the_pristine_model() {
+        let src = "global:\n  save_path: target/test-output/engine\n\
+                   model:\n  name: tiny-fixture\n\
+                   pipeline:\n  - eval\n\
+                   dataset:\n  kind: fixture\n  num_samples: 8\n  seq_len: 40\n";
+        let r = CompressEngine::new(SlimConfig::from_str(src).unwrap())
+            .unwrap()
+            .run()
+            .unwrap();
+        let s = &r.stages[0];
+        assert!(s.metric_after < 1.0, "fixture encodes its rule: {s:?}");
+        assert_eq!(s.metric_before.to_bits(), s.metric_after.to_bits());
     }
 }

@@ -7,6 +7,9 @@ use crate::data;
 use crate::models::{Transformer, WeightStore};
 use anyhow::{bail, Context, Result};
 
+#[cfg(test)]
+use super::registry::PassRegistry;
+
 /// ModelFactory: registry keys -> loaded models.
 pub struct ModelFactory;
 
@@ -122,49 +125,26 @@ impl ServeFactory {
     }
 }
 
-/// SlimFactory: compression method registry.
+/// SlimFactory: the compression strategy surface of the Module Init stage.
+/// Both the listing and the validation render directly from the single
+/// static `PassRegistry`, so they cannot drift from what the engine
+/// actually dispatches.
 pub struct SlimFactory;
 
 impl SlimFactory {
-    pub fn registered() -> &'static [(&'static str, &'static [&'static str])] {
-        &[
-            (
-                "quantization",
-                &[
-                    "fp8_dynamic", "fp8_lepto", "leptoquant", "int8", "int4",
-                    "gptq", "awq", "seq2", "ternary", "w4a8",
-                ],
-            ),
-            ("spec_decode", &["eagle3", "vanilla", "spec_exit"]),
-            (
-                "sparse_attn",
-                &[
-                    "dense", "a_shape", "tri_shape", "dilated", "strided",
-                    "minference", "xattention", "flexprefill", "stem",
-                ],
-            ),
-            (
-                "token_prune",
-                &[
-                    "idpruner", "fastv", "divprune", "visionzip", "dart",
-                    "vispruner", "scope", "visionselector", "hiprune", "samp",
-                    "atome", "fastadasp", "cdpruner",
-                ],
-            ),
-        ]
+    /// Method families and their registered passes, straight from the
+    /// `PassRegistry` (the same table `angelslim list` prints and the
+    /// engine dispatches on).
+    pub fn registered() -> Vec<(&'static str, Vec<&'static str>)> {
+        super::registry::PassRegistry::by_method()
     }
 
+    /// Validate a job config against the registry: every pipeline stage
+    /// must name a registered pass with in-range parameters. (Configs
+    /// built by `SlimConfig::from_str`/`from_file` are already validated;
+    /// this re-checks hand-constructed ones.)
     pub fn validate(cfg: &SlimConfig) -> Result<()> {
-        let method = cfg.compression.method.as_str();
-        let algo = cfg.compression.algo.as_str();
-        let entry = Self::registered()
-            .iter()
-            .find(|(m, _)| *m == method)
-            .with_context(|| format!("unknown method {method}"))?;
-        if !entry.1.contains(&algo) {
-            bail!("algo `{algo}` not registered for method `{method}` (have {:?})", entry.1);
-        }
-        Ok(())
+        cfg.validate()
     }
 }
 
@@ -185,7 +165,30 @@ mod tests {
         assert!(SlimFactory::validate(&cfg("quantization", "gptq")).is_ok());
         assert!(SlimFactory::validate(&cfg("sparse_attn", "stem")).is_ok());
         assert!(SlimFactory::validate(&cfg("token_prune", "samp")).is_ok());
-        assert!(SlimFactory::validate(&cfg("quantization", "wizardry")).is_err());
+        // unknown algos are rejected at parse time by the same registry
+        let src = "model:\n  name: m\ncompression:\n  method: quantization\n  \
+                   quantization:\n    algo: wizardry\n";
+        assert!(SlimConfig::from_str(src).is_err());
+        // ...and a hand-mutated config is re-rejected by validate()
+        let mut c = cfg("quantization", "gptq");
+        c.pipeline[0].pass = "wizardry".into();
+        assert!(SlimFactory::validate(&c).is_err());
+    }
+
+    #[test]
+    fn registered_renders_from_the_pass_registry() {
+        let listed = SlimFactory::registered();
+        // every listed algo resolves in the registry under its method...
+        for (method, algos) in &listed {
+            for algo in algos {
+                let pass = PassRegistry::find(algo)
+                    .unwrap_or_else(|| panic!("listed algo {algo} not in registry"));
+                assert_eq!(pass.kind().method(), *method);
+            }
+        }
+        // ...and the listing covers the whole registry (no drift possible)
+        let total: usize = listed.iter().map(|(_, a)| a.len()).sum();
+        assert_eq!(total, PassRegistry::all().len());
     }
 
     #[test]

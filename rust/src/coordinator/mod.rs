@@ -1,9 +1,17 @@
 //! The Compress Engine — the paper's Fig. 6 pipeline: YAML config →
-//! Module Init (ModelFactory / DataFactory / SlimFactory) → Compress Engine
-//! (prepare → calibrate → compress → save → eval) → deployable artifacts.
+//! Module Init (ModelFactory / DataFactory / SlimFactory) → composable
+//! pass pipeline (prepare → calibrate → apply → report per stage) →
+//! deployable artifacts + structured per-stage reports.
 
 pub mod engine;
 pub mod factories;
+pub mod pass;
+pub mod registry;
 
-pub use engine::{CompressEngine, CompressReport};
+pub use engine::CompressEngine;
 pub use factories::{DataFactory, ModelFactory, ServeFactory, SlimFactory};
+pub use pass::{
+    CalibCapture, CompressionPass, PassContext, PassKind, PipelineReport, StageOutcome,
+    StageReport,
+};
+pub use registry::PassRegistry;

@@ -1,0 +1,568 @@
+//! The composable compression-pass API — the paper's unified pipeline
+//! (Fig. 6) as a first-class abstraction.
+//!
+//! A [`CompressionPass`] is one named stage (GPTQ, SmoothQuant migration,
+//! token pruning, an eval checkpoint, ...) executed over a shared
+//! [`PassContext`]: the mutating model, the calibration / evaluation
+//! datasets, cached calibration activations (invalidated whenever a pass
+//! mutates the model), a seeded RNG, and the accumulated per-stage
+//! reports. `CompressEngine::run` threads the context through the
+//! config's `pipeline:` stages and emits a structured [`PipelineReport`],
+//! so compositions like smooth → GPTQ → eval are ordinary configs instead
+//! of impossible special cases.
+//!
+//! Every pass lives in the single static registry
+//! (`coordinator::registry::PassRegistry`); the engine, `SlimFactory`,
+//! `angelslim list`, and config-schema validation all read from it.
+
+use crate::config::{SlimConfig, StageCfg};
+use crate::models::Transformer;
+use crate::tensor::Tensor;
+use crate::util::Rng;
+use anyhow::Result;
+
+use super::factories::{DataFactory, Datasets, ModelFactory};
+
+/// How many calibration sequences are captured for activation statistics
+/// (GPTQ / AWQ / LeptoQuant / SmoothQuant).
+pub const CALIB_SEQS: usize = 8;
+
+/// NLL evaluation window / stride shared by every pass that scores the
+/// current model on the held-out stream.
+pub const EVAL_WINDOW: usize = 48;
+pub const EVAL_STRIDE: usize = 8;
+
+/// The method family a pass belongs to — the paper's four compression
+/// pillars plus the in-pipeline evaluation checkpoint.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum PassKind {
+    Quantization,
+    SpecDecode,
+    SparseAttn,
+    TokenPrune,
+    Eval,
+}
+
+impl PassKind {
+    pub fn all() -> [PassKind; 5] {
+        [
+            PassKind::Quantization,
+            PassKind::SpecDecode,
+            PassKind::SparseAttn,
+            PassKind::TokenPrune,
+            PassKind::Eval,
+        ]
+    }
+
+    /// The `compression.method` string this family answers to.
+    pub fn method(&self) -> &'static str {
+        match self {
+            PassKind::Quantization => "quantization",
+            PassKind::SpecDecode => "spec_decode",
+            PassKind::SparseAttn => "sparse_attn",
+            PassKind::TokenPrune => "token_prune",
+            PassKind::Eval => "eval",
+        }
+    }
+
+    pub fn from_method(method: &str) -> Option<PassKind> {
+        PassKind::all().into_iter().find(|k| k.method() == method)
+    }
+
+    /// The pass a bare `compression.method` desugars to when no algo is
+    /// named — kept next to the registry so the default cannot drift from
+    /// what is actually registered (pinned by a registry test).
+    pub fn default_pass(&self) -> &'static str {
+        match self {
+            PassKind::Quantization => "fp8_dynamic",
+            PassKind::SpecDecode => "eagle3",
+            PassKind::SparseAttn => "stem",
+            PassKind::TokenPrune => "idpruner",
+            PassKind::Eval => "eval",
+        }
+    }
+}
+
+/// Per-layer calibration activations captured from the *current* model
+/// weights (tagged with the model version that produced them).
+#[derive(Clone, Debug)]
+pub struct CalibCapture {
+    pub model_version: u64,
+    /// post-ln1 inputs to wq/wk/wv, one `[rows, d]` tensor per layer
+    pub attn_in: Vec<Tensor>,
+    /// post-ln2 inputs to w_gate/w_up, one `[rows, d]` tensor per layer
+    pub mlp_in: Vec<Tensor>,
+}
+
+/// Shared state threaded through every stage of a pipeline run.
+///
+/// Model and datasets load lazily so passes that need neither (visual /
+/// audio token pruning on synthetic scenes) stay hermetic even when the
+/// configured model artifacts are absent — exactly like the pre-pipeline
+/// engine behaved.
+pub struct PassContext {
+    pub cfg: SlimConfig,
+    model: Option<Transformer>,
+    datasets: Option<Datasets>,
+    /// seeded from `global.seed`: the one RNG stream for passes that need
+    /// randomness. No built-in pass draws from it (they stay bit-identical
+    /// to the legacy engine, pinned by tests/test_pass_pipeline.rs);
+    /// drawing from it in a new pass is safe — it feeds nothing else.
+    pub rng: Rng,
+    /// bumped by `mark_model_mutated`; invalidates the calibration cache
+    pub model_version: u64,
+    calib: Option<CalibCapture>,
+    /// memoized held-out NLL of the current weights, keyed by version —
+    /// a stage's "before" is bit-identical to its predecessor's "after",
+    /// so stage boundaries don't re-run the dominant eval
+    nll_cache: Option<(u64, f64)>,
+    /// NLL of the model the first metric-producing stage saw — the
+    /// pipeline-wide "before" an eval checkpoint reports against
+    pub baseline_nll: Option<f64>,
+    /// accumulated per-stage reports (what `PipelineReport` is built from)
+    pub reports: Vec<StageReport>,
+}
+
+impl PassContext {
+    pub fn new(cfg: SlimConfig) -> Self {
+        let rng = Rng::new(cfg.global.seed ^ 0x9A55_C0DE);
+        PassContext {
+            cfg,
+            model: None,
+            datasets: None,
+            rng,
+            model_version: 0,
+            calib: None,
+            nll_cache: None,
+            baseline_nll: None,
+            reports: Vec::new(),
+        }
+    }
+
+    /// The model under compression (loaded on first use).
+    pub fn model(&mut self) -> Result<&mut Transformer> {
+        if self.model.is_none() {
+            self.model = Some(ModelFactory::load(&self.cfg)?);
+        }
+        Ok(self.model.as_mut().unwrap())
+    }
+
+    /// Calibration + evaluation datasets (loaded on first use).
+    pub fn datasets(&mut self) -> Result<&Datasets> {
+        if self.datasets.is_none() {
+            self.datasets = Some(DataFactory::load(&self.cfg)?);
+        }
+        Ok(self.datasets.as_ref().unwrap())
+    }
+
+    /// Both at once (split borrow for calibrate-then-mutate passes).
+    pub fn model_and_data(&mut self) -> Result<(&mut Transformer, &Datasets)> {
+        self.model()?;
+        self.datasets()?;
+        Ok((self.model.as_mut().unwrap(), self.datasets.as_ref().unwrap()))
+    }
+
+    /// Record that the model weights changed: calibration activations
+    /// captured before this point no longer describe the model, so the
+    /// cached capture is freed immediately (it could never be reused —
+    /// the version bump alone would keep it resident until the next
+    /// capture or the end of the run).
+    pub fn mark_model_mutated(&mut self) {
+        self.model_version += 1;
+        self.calib = None;
+    }
+
+    /// Calibration activations for the current weights, recapturing only
+    /// when a pass has mutated the model since the last capture — so
+    /// back-to-back calibrated passes share one capture.
+    pub fn calib(&mut self) -> Result<&CalibCapture> {
+        let version = self.model_version;
+        if self.calib.as_ref().map(|c| c.model_version) != Some(version) {
+            let (model, ds) = self.model_and_data()?;
+            let (n_layers, d) = (model.cfg.n_layers, model.cfg.d_model);
+            let mut attn: Vec<Vec<f32>> = vec![Vec::new(); n_layers];
+            let mut mlp: Vec<Vec<f32>> = vec![Vec::new(); n_layers];
+            for seq in ds.calib.iter().take(CALIB_SEQS) {
+                let caps = model.capture_activations(seq);
+                for (li, cap) in caps.iter().enumerate() {
+                    attn[li].extend_from_slice(&cap.attn_in.data);
+                    mlp[li].extend_from_slice(&cap.mlp_in.data);
+                }
+            }
+            let to_tensors = |cols: Vec<Vec<f32>>| -> Vec<Tensor> {
+                cols.into_iter()
+                    .map(|v| {
+                        let rows = v.len() / d;
+                        Tensor::from_vec(&[rows, d], v)
+                    })
+                    .collect()
+            };
+            self.calib = Some(CalibCapture {
+                model_version: version,
+                attn_in: to_tensors(attn),
+                mlp_in: to_tensors(mlp),
+            });
+        }
+        Ok(self.calib.as_ref().unwrap())
+    }
+
+    /// Run `f` with the current calibration capture *and* mutable context
+    /// access, without cloning the capture: the capture is moved out for
+    /// the duration of the call and restored afterwards, so peak memory
+    /// stays one capture. `f` must not call `ctx.calib()` (it would
+    /// recapture into the temporarily-empty slot); mutating the model is
+    /// fine — the caller bumps the version afterwards as usual.
+    pub fn with_calib<R>(
+        &mut self,
+        f: impl FnOnce(&mut PassContext, &CalibCapture) -> Result<R>,
+    ) -> Result<R> {
+        self.calib()?;
+        let capture = self.calib.take().expect("calib() just populated the capture");
+        let out = f(self, &capture);
+        self.calib = Some(capture);
+        out
+    }
+
+    /// NLL of the current model on the held-out stream — the shared
+    /// quality metric quant/eval stages report. Memoized per model
+    /// version: deterministic evals of the same weights are bit-identical,
+    /// so a stage's "before" reuses the previous stage's "after" for free.
+    pub fn nll(&mut self) -> Result<f64> {
+        if let Some((version, nll)) = self.nll_cache {
+            if version == self.model_version {
+                return Ok(nll);
+            }
+        }
+        let version = self.model_version;
+        let (model, ds) = self.model_and_data()?;
+        let nll = crate::eval::corpus_nll(model, &ds.eval, EVAL_WINDOW, EVAL_STRIDE)?;
+        self.nll_cache = Some((version, nll));
+        Ok(nll)
+    }
+
+    /// Record the pipeline-wide baseline metric (first writer wins).
+    pub fn note_baseline(&mut self, nll: f64) {
+        if self.baseline_nll.is_none() {
+            self.baseline_nll = Some(nll);
+        }
+    }
+
+    /// Surrender the (possibly mutated) model — the bit-exactness witness
+    /// for pipeline-equivalence tests. `None` if no stage ever loaded it.
+    pub fn into_model(self) -> Option<Transformer> {
+        self.model
+    }
+}
+
+/// What a pass hands back from `apply`: the raw stage metrics, before the
+/// trait's `report` hook folds in identity / wall-clock / size ratio.
+#[derive(Clone, Debug, Default)]
+pub struct StageOutcome {
+    /// quantization/eval: NLL; sparse/prune: accuracy (audio: WER%)
+    pub metric_before: f64,
+    pub metric_after: f64,
+    /// effective bits per weight (quantization) or kept density/ratio
+    pub compression: f64,
+    pub notes: Vec<String>,
+    /// peak resident bytes during calibration (low-memory mode)
+    pub peak_calib_bytes: usize,
+}
+
+/// One finished stage of a pipeline run.
+#[derive(Clone, Debug, PartialEq)]
+pub struct StageReport {
+    /// registry name of the pass ("gptq", "smooth", "eval", ...)
+    pub pass: String,
+    /// method family ("quantization", "token_prune", ...)
+    pub kind: String,
+    pub metric_before: f64,
+    pub metric_after: f64,
+    /// effective bits per weight (quantization) or kept density/ratio
+    pub compression: f64,
+    /// stored-size multiplier this stage contributes (bits/32 for
+    /// quantization, kept fraction for prune/sparse, 1.0 otherwise)
+    pub size_ratio: f64,
+    pub wall_ms: f64,
+    pub peak_calib_bytes: usize,
+    pub notes: Vec<String>,
+}
+
+impl StageReport {
+    /// Report-number equality ignoring wall-clock (the only
+    /// non-deterministic field) — what pipeline-equivalence tests compare.
+    pub fn same_numbers(&self, other: &StageReport) -> bool {
+        self.pass == other.pass
+            && self.kind == other.kind
+            && self.metric_before.to_bits() == other.metric_before.to_bits()
+            && self.metric_after.to_bits() == other.metric_after.to_bits()
+            && self.compression.to_bits() == other.compression.to_bits()
+            && self.size_ratio.to_bits() == other.size_ratio.to_bits()
+            && self.peak_calib_bytes == other.peak_calib_bytes
+            && self.notes == other.notes
+    }
+
+    fn json_fragment(&self) -> String {
+        let notes = self
+            .notes
+            .iter()
+            .map(|n| format!("\"{}\"", json_escape(n)))
+            .collect::<Vec<_>>()
+            .join(",");
+        format!(
+            "{{\"pass\":\"{}\",\"kind\":\"{}\",\"metric_before\":{},\"metric_after\":{},\
+             \"compression\":{},\"size_ratio\":{},\"wall_ms\":{},\"peak_calib_bytes\":{},\
+             \"notes\":[{}]}}",
+            json_escape(&self.pass),
+            json_escape(&self.kind),
+            json_num(self.metric_before),
+            json_num(self.metric_after),
+            json_num(self.compression),
+            json_num(self.size_ratio),
+            json_num(self.wall_ms),
+            self.peak_calib_bytes,
+            notes
+        )
+    }
+}
+
+/// The structured result of a pipeline run — one entry per stage, in
+/// execution order.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct PipelineReport {
+    pub stages: Vec<StageReport>,
+}
+
+impl PipelineReport {
+    pub fn final_stage(&self) -> &StageReport {
+        self.stages.last().expect("a validated pipeline has >= 1 stage")
+    }
+
+    /// The pipeline's combined stored-size multiplier vs the fp32 model.
+    /// Weight quantizers *replace* the stored weight image, so only the
+    /// last quantization stage's ratio counts (int8 → int4 stores int4,
+    /// not int4-of-int8; gptq → smooth re-scales the weights off the int
+    /// grid back to fp32). Prune/sparse ratios act on different axes
+    /// (tokens / attention) and compose multiplicatively.
+    pub fn overall_size_ratio(&self) -> f64 {
+        let weights = self
+            .stages
+            .iter()
+            .rev()
+            .find(|s| s.kind == "quantization")
+            .map(|s| s.size_ratio)
+            .unwrap_or(1.0);
+        let other: f64 = self
+            .stages
+            .iter()
+            .filter(|s| s.kind != "quantization")
+            .map(|s| s.size_ratio)
+            .product();
+        weights * other
+    }
+
+    pub fn total_wall_ms(&self) -> f64 {
+        self.stages.iter().map(|s| s.wall_ms).sum()
+    }
+
+    /// One machine-readable JSON object (no prefix) following the same
+    /// conventions as the benches' BENCH_JSON lines; `angelslim compress
+    /// --json` prints it behind the `BENCH_JSON ` prefix so CI can gate on
+    /// `python -m json.tool` parsing it.
+    pub fn to_json(&self, config: &str) -> String {
+        let stages = self
+            .stages
+            .iter()
+            .map(StageReport::json_fragment)
+            .collect::<Vec<_>>()
+            .join(",");
+        format!(
+            "{{\"bench\":\"compress\",\"config\":\"{}\",\"stages\":[{}],\
+             \"overall_size_ratio\":{},\"total_wall_ms\":{}}}",
+            json_escape(config),
+            stages,
+            json_num(self.overall_size_ratio()),
+            json_num(self.total_wall_ms())
+        )
+    }
+}
+
+fn json_escape(s: &str) -> String {
+    let mut out = String::with_capacity(s.len());
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+/// JSON has no NaN/Inf literals; clamp them to null so the line always
+/// parses.
+fn json_num(x: f64) -> String {
+    if x.is_finite() {
+        format!("{x}")
+    } else {
+        "null".into()
+    }
+}
+
+/// A composable compression stage. Implementations are stateless unit
+/// values registered once in `PassRegistry`; all per-run inputs arrive
+/// via the shared context and the stage's resolved config.
+pub trait CompressionPass: Sync {
+    /// Registry name — the string configs dispatch on.
+    fn name(&self) -> &'static str;
+    /// Method family (groups the registry for listing/validation).
+    fn kind(&self) -> PassKind;
+    /// One-line human description for `angelslim list`.
+    fn describe(&self) -> &'static str;
+
+    /// Cheap feasibility checks against the context (model shape
+    /// constraints, missing inputs) — loud errors before any work.
+    fn prepare(&self, _ctx: &mut PassContext, _spec: &StageCfg) -> Result<()> {
+        Ok(())
+    }
+
+    /// Gather calibration statistics into the shared context (shared and
+    /// reused across consecutive stages until the model mutates).
+    fn calibrate(&self, _ctx: &mut PassContext, _spec: &StageCfg) -> Result<()> {
+        Ok(())
+    }
+
+    /// Run the stage: mutate the model / score the method, returning the
+    /// stage metrics.
+    fn apply(&self, ctx: &mut PassContext, spec: &StageCfg) -> Result<StageOutcome>;
+
+    /// Fold an outcome into the structured per-stage report.
+    fn report(&self, outcome: StageOutcome, wall_ms: f64) -> StageReport {
+        let size_ratio = match self.kind() {
+            PassKind::Quantization => outcome.compression / 32.0,
+            PassKind::SparseAttn | PassKind::TokenPrune => outcome.compression,
+            PassKind::SpecDecode | PassKind::Eval => 1.0,
+        };
+        StageReport {
+            pass: self.name().into(),
+            kind: self.kind().method().into(),
+            metric_before: outcome.metric_before,
+            metric_after: outcome.metric_after,
+            compression: outcome.compression,
+            size_ratio,
+            wall_ms,
+            peak_calib_bytes: outcome.peak_calib_bytes,
+            notes: outcome.notes,
+        }
+    }
+}
+
+/// Write the per-stage checkpoint marker (the save step of the paper's
+/// prepare → calibrate → compress → save → eval flow).
+pub(crate) fn save_marker(cfg: &SlimConfig, algo: &str, notes: &mut Vec<String>) -> Result<()> {
+    let dir = &cfg.global.save_path;
+    std::fs::create_dir_all(dir)?;
+    let marker = format!("{dir}/compressed_{algo}.txt");
+    std::fs::write(&marker, format!("{cfg:#?}"))?;
+    notes.push(format!("checkpoint note saved to {marker}"));
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::Json;
+
+    fn stage(pass: &str, kind: &str) -> StageReport {
+        StageReport {
+            pass: pass.into(),
+            kind: kind.into(),
+            metric_before: 0.25,
+            metric_after: 0.5,
+            compression: 5.0,
+            size_ratio: 5.0 / 32.0,
+            wall_ms: 12.5,
+            peak_calib_bytes: 64,
+            notes: vec!["a \"quoted\" note".into()],
+        }
+    }
+
+    #[test]
+    fn pipeline_json_parses_with_own_parser() {
+        let report = PipelineReport {
+            stages: vec![stage("gptq", "quantization"), stage("eval", "eval")],
+        };
+        let line = report.to_json("configs/x.yaml");
+        let v = Json::parse(&line).expect("report JSON must parse");
+        assert_eq!(v.get("bench").unwrap().as_str(), Some("compress"));
+        let stages = v.get("stages").unwrap();
+        assert_eq!(stages.idx(0).unwrap().get("pass").unwrap().as_str(), Some("gptq"));
+        let note = stages.idx(1).unwrap().get("notes").unwrap().idx(0).unwrap();
+        assert_eq!(note.as_str(), Some("a \"quoted\" note"));
+    }
+
+    #[test]
+    fn non_finite_metrics_emit_null_not_nan() {
+        let mut s = stage("eval", "eval");
+        s.metric_before = f64::NAN;
+        let line = PipelineReport { stages: vec![s] }.to_json("c");
+        assert!(Json::parse(&line).is_ok(), "NaN must not break the JSON line: {line}");
+        assert!(line.contains("null"));
+    }
+
+    #[test]
+    fn same_numbers_ignores_wall_clock_only() {
+        let a = stage("gptq", "quantization");
+        let mut b = a.clone();
+        b.wall_ms = 9999.0;
+        assert!(a.same_numbers(&b));
+        b.metric_after += 1e-12;
+        assert!(!a.same_numbers(&b));
+    }
+
+    #[test]
+    fn kind_method_roundtrip_and_defaults() {
+        for k in PassKind::all() {
+            assert_eq!(PassKind::from_method(k.method()), Some(k));
+        }
+        assert_eq!(PassKind::from_method("teleport"), None);
+    }
+
+    #[test]
+    fn overall_size_ratio_last_quantizer_wins() {
+        let quant = |pass: &str, bits: f64| StageReport {
+            compression: bits,
+            size_ratio: bits / 32.0,
+            ..stage(pass, "quantization")
+        };
+        // successive weight quantizers replace the image — no double count
+        let r = PipelineReport { stages: vec![quant("int8", 8.0), quant("int4", 5.0)] };
+        assert!((r.overall_size_ratio() - 5.0 / 32.0).abs() < 1e-12);
+        // prune composes with the (last) weight format
+        let mut prune = stage("idpruner", "token_prune");
+        prune.size_ratio = 0.25;
+        let r = PipelineReport { stages: vec![prune, quant("int4", 5.0)] };
+        assert!((r.overall_size_ratio() - 0.25 * 5.0 / 32.0).abs() < 1e-12);
+        // no quantizer at all → only the prune axis
+        let mut prune = stage("idpruner", "token_prune");
+        prune.size_ratio = 0.25;
+        let r = PipelineReport { stages: vec![prune] };
+        assert!((r.overall_size_ratio() - 0.25).abs() < 1e-12);
+    }
+
+    #[test]
+    fn context_rng_is_seeded_and_deterministic() {
+        let cfg = SlimConfig::from_str(
+            "global:\n  seed: 9\nmodel:\n  name: tiny-fixture\n\
+             compression:\n  method: quantization\n",
+        )
+        .unwrap();
+        let mut a = PassContext::new(cfg.clone());
+        let mut b = PassContext::new(cfg);
+        // the pass-facing RNG stream is a pure function of global.seed
+        let draw = |ctx: &mut PassContext| (0..8).map(|_| ctx.rng.next_u64()).collect::<Vec<_>>();
+        assert_eq!(draw(&mut a), draw(&mut b));
+    }
+}

@@ -1,0 +1,925 @@
+//! The single static `PassRegistry` — every compression algorithm wrapped
+//! as a [`CompressionPass`] and registered exactly once.
+//!
+//! This is the only place algorithm names are bound to dispatch targets:
+//! `CompressEngine` resolves pipeline stages here, `SlimFactory`
+//! (`registered`/`validate`), `angelslim list`, and config-schema
+//! validation all render from this table, so the CLI listing can never
+//! drift from what the engine actually runs.
+
+use crate::config::{CompressionCfg, StageCfg};
+use crate::eval;
+use crate::quant::{
+    self, awq::Awq, gptq::Gptq, leptoquant::LeptoQuant, smooth::SmoothQuant, AffineQuantizer,
+    Granularity, Seq2Quantizer, Sherry, Tequila, TernaryQuantizer, WeightQuantizer,
+};
+use crate::sparse_attn::SparseAlgo;
+use crate::tensor::Tensor;
+use crate::token_prune::{audio, visual, Pruner, Reducer};
+use anyhow::{bail, Result};
+
+use super::pass::{save_marker, CompressionPass, PassContext, PassKind, StageOutcome};
+
+/// The static pass registry. All lookups are by registry name (the string
+/// configs dispatch on).
+pub struct PassRegistry;
+
+impl PassRegistry {
+    pub fn all() -> &'static [&'static (dyn CompressionPass + Sync)] {
+        REGISTRY
+    }
+
+    pub fn find(name: &str) -> Option<&'static (dyn CompressionPass + Sync)> {
+        REGISTRY.iter().copied().find(|p| p.name() == name)
+    }
+
+    pub fn names() -> Vec<&'static str> {
+        REGISTRY.iter().map(|p| p.name()).collect()
+    }
+
+    pub fn names_for(kind: PassKind) -> Vec<&'static str> {
+        REGISTRY
+            .iter()
+            .filter(|p| p.kind() == kind)
+            .map(|p| p.name())
+            .collect()
+    }
+
+    /// Registry grouped by method family — what `SlimFactory::registered`
+    /// and `angelslim list` render.
+    pub fn by_method() -> Vec<(&'static str, Vec<&'static str>)> {
+        PassKind::all()
+            .into_iter()
+            .map(|k| (k.method(), Self::names_for(k)))
+            .collect()
+    }
+}
+
+// ---------------------------------------------------------------------
+// quantization passes
+// ---------------------------------------------------------------------
+
+/// Calibration-free weight QDQ (round-to-nearest family): the quantizer is
+/// built from the stage params and applied to every linear.
+struct RtnQuantPass {
+    name: &'static str,
+    describe: &'static str,
+    /// stored-size override in bits/weight for formats whose packed
+    /// storage differs from `WeightQuantizer::bits()` (ternary's 3-in-5
+    /// codec); `None` derives bits from the constructed quantizer, so
+    /// per-stage overrides (w4a8 `group_size`) stay in lockstep with the
+    /// reported compression
+    stored_bits: Option<f64>,
+    /// every quantized matrix dimension must divide this (Sherry's 4-lane
+    /// blocks); checked loudly in `prepare`
+    k_multiple: usize,
+    /// pass consumes `group_size` (w4a8): `prepare` then requires the
+    /// group to evenly tile every quantized row (k ∈ {d_model, d_ff}),
+    /// turning a would-be kernel assert into a loud config error
+    group_wired: bool,
+    /// caveat recorded in the stage report notes (empty = none)
+    caveat: &'static str,
+    make: fn(&CompressionCfg) -> Box<dyn WeightQuantizer>,
+}
+
+fn mk_fp8(_: &CompressionCfg) -> Box<dyn WeightQuantizer> {
+    Box::new(quant::Fp8WeightQuantizer)
+}
+fn mk_int8(_: &CompressionCfg) -> Box<dyn WeightQuantizer> {
+    Box::new(AffineQuantizer::int8_per_channel())
+}
+fn mk_int4(_: &CompressionCfg) -> Box<dyn WeightQuantizer> {
+    Box::new(AffineQuantizer::int4_group32())
+}
+fn mk_w4a8(p: &CompressionCfg) -> Box<dyn WeightQuantizer> {
+    // weight-side QDQ (activation QDQ is a runtime concern); the group is
+    // honored verbatim — `prepare` has already rejected non-tiling values
+    Box::new(AffineQuantizer::new(4, Granularity::Group(p.group_size)))
+}
+fn mk_seq2(_: &CompressionCfg) -> Box<dyn WeightQuantizer> {
+    Box::new(Seq2Quantizer::tuned(32))
+}
+fn mk_ternary(_: &CompressionCfg) -> Box<dyn WeightQuantizer> {
+    Box::new(TernaryQuantizer::default())
+}
+fn mk_tequila(_: &CompressionCfg) -> Box<dyn WeightQuantizer> {
+    Box::new(Tequila::default())
+}
+fn mk_sherry(_: &CompressionCfg) -> Box<dyn WeightQuantizer> {
+    Box::new(Sherry)
+}
+
+impl CompressionPass for RtnQuantPass {
+    fn name(&self) -> &'static str {
+        self.name
+    }
+    fn kind(&self) -> PassKind {
+        PassKind::Quantization
+    }
+    fn describe(&self) -> &'static str {
+        self.describe
+    }
+
+    fn prepare(&self, ctx: &mut PassContext, spec: &StageCfg) -> Result<()> {
+        if self.k_multiple > 1 {
+            let cfg = ctx.model()?.cfg;
+            if cfg.d_model % self.k_multiple != 0 || cfg.d_ff % self.k_multiple != 0 {
+                bail!(
+                    "pass `{}` needs weight dims divisible by {} (model has d_model={} d_ff={})",
+                    self.name,
+                    self.k_multiple,
+                    cfg.d_model,
+                    cfg.d_ff
+                );
+            }
+        }
+        if self.group_wired {
+            let cfg = ctx.model()?.cfg;
+            let g = spec.params.group_size;
+            if g == 0 || cfg.d_model % g != 0 || cfg.d_ff % g != 0 {
+                bail!(
+                    "pass `{}`: group_size {g} must be a nonzero divisor of both \
+                     d_model {} and d_ff {}",
+                    self.name,
+                    cfg.d_model,
+                    cfg.d_ff
+                );
+            }
+        }
+        Ok(())
+    }
+
+    fn apply(&self, ctx: &mut PassContext, spec: &StageCfg) -> Result<StageOutcome> {
+        let before = ctx.nll()?;
+        ctx.note_baseline(before);
+        let q = (self.make)(&spec.params);
+        let bits = self.stored_bits.unwrap_or_else(|| q.bits());
+        ctx.model()?.apply_quantizer(q.as_ref());
+        ctx.mark_model_mutated();
+        let after = ctx.nll()?;
+        let mut notes = Vec::new();
+        if !self.caveat.is_empty() {
+            notes.push(self.caveat.to_string());
+        }
+        save_marker(&ctx.cfg, self.name, &mut notes)?;
+        Ok(StageOutcome {
+            metric_before: before,
+            metric_after: after,
+            compression: bits,
+            notes,
+            peak_calib_bytes: 0,
+        })
+    }
+}
+
+/// Run the per-layer calibrated write-back loop shared by GPTQ / AWQ /
+/// LeptoQuant: streams layers under the low-memory ledger and hands each
+/// layer's captured activations to the algorithm closure.
+fn with_calibrated_layers(
+    ctx: &mut PassContext,
+    spec: &StageCfg,
+    notes: &mut Vec<String>,
+    f: &mut dyn FnMut(usize, &Tensor, &Tensor, &mut crate::models::Transformer, &mut Vec<String>),
+) -> Result<usize> {
+    let budget = spec.params.low_memory_budget_layers;
+    // borrow the capture in place (no clone — peak memory stays one
+    // calibration set, which is what the low-memory ledger accounts for)
+    ctx.with_calib(|ctx, capture| {
+        let model = ctx.model()?;
+
+        // low-memory ledger: one entry per layer, sized by parameter bytes
+        let layer_bytes: Vec<usize> = model
+            .layers
+            .iter()
+            .map(|l| {
+                4 * (l.wq.numel()
+                    + l.wk.numel()
+                    + l.wv.numel()
+                    + l.wo.numel()
+                    + l.w_gate.numel()
+                    + l.w_up.numel()
+                    + l.w_down.numel())
+            })
+            .collect();
+        let mut ledger = quant::calib::LowMemoryLedger::new(layer_bytes, budget);
+
+        for li in 0..model.cfg.n_layers {
+            ledger.touch(li);
+            f(li, &capture.attn_in[li], &capture.mlp_in[li], model, notes);
+        }
+        notes.push(format!(
+            "calibration peak {} / total {} bytes (budget {} layers), {} swaps",
+            ledger.peak_bytes,
+            ledger.total_bytes(),
+            budget,
+            ledger.swaps
+        ));
+        Ok(ledger.peak_bytes)
+    })
+}
+
+/// Calibrated group-wise quantizers consume `group_size` per-stage; the
+/// group must evenly tile every quantized row (all have k = d_model), so
+/// a non-divisor is a loud `prepare` error instead of a silent ignore.
+fn ensure_group_divides_d_model(ctx: &mut PassContext, spec: &StageCfg, pass: &str) -> Result<()> {
+    let d = ctx.model()?.cfg.d_model;
+    let g = spec.params.group_size;
+    if g == 0 || d % g != 0 {
+        bail!("pass `{pass}`: group_size {g} must be a nonzero divisor of d_model {d}");
+    }
+    Ok(())
+}
+
+struct GptqPass;
+
+impl CompressionPass for GptqPass {
+    fn name(&self) -> &'static str {
+        "gptq"
+    }
+    fn kind(&self) -> PassKind {
+        PassKind::Quantization
+    }
+    fn describe(&self) -> &'static str {
+        "layer-wise Hessian-aware reconstruction (calibrated int4; group_size wired)"
+    }
+
+    fn prepare(&self, ctx: &mut PassContext, spec: &StageCfg) -> Result<()> {
+        ensure_group_divides_d_model(ctx, spec, self.name())
+    }
+
+    fn calibrate(&self, ctx: &mut PassContext, _spec: &StageCfg) -> Result<()> {
+        ctx.calib().map(|_| ())
+    }
+
+    fn apply(&self, ctx: &mut PassContext, spec: &StageCfg) -> Result<StageOutcome> {
+        let before = ctx.nll()?;
+        ctx.note_baseline(before);
+        let mut notes = Vec::new();
+        let g = Gptq { group: spec.params.group_size, ..Default::default() };
+        let peak = with_calibrated_layers(ctx, spec, &mut notes, &mut |li, xa, xm, model, _| {
+            let wq = g.quantize(&model.layers[li].wq.clone(), xa);
+            model.set_layer_weight(li, "wq", wq);
+            let wg = g.quantize(&model.layers[li].w_gate.clone(), xm);
+            model.set_layer_weight(li, "w_gate", wg);
+            let wu = g.quantize(&model.layers[li].w_up.clone(), xm);
+            model.set_layer_weight(li, "w_up", wu);
+        })?;
+        ctx.mark_model_mutated();
+        let after = ctx.nll()?;
+        save_marker(&ctx.cfg, self.name(), &mut notes)?;
+        Ok(StageOutcome {
+            metric_before: before,
+            metric_after: after,
+            // int4 weights + one f32 scale per group (tracks group_size)
+            compression: 4.0 + 32.0 / spec.params.group_size as f64,
+            notes,
+            peak_calib_bytes: peak,
+        })
+    }
+}
+
+struct AwqPass;
+
+impl CompressionPass for AwqPass {
+    fn name(&self) -> &'static str {
+        "awq"
+    }
+    fn kind(&self) -> PassKind {
+        PassKind::Quantization
+    }
+    fn describe(&self) -> &'static str {
+        "activation-aware weight scaling (calibrated int4; group_size wired)"
+    }
+
+    fn prepare(&self, ctx: &mut PassContext, spec: &StageCfg) -> Result<()> {
+        ensure_group_divides_d_model(ctx, spec, self.name())
+    }
+
+    fn calibrate(&self, ctx: &mut PassContext, _spec: &StageCfg) -> Result<()> {
+        ctx.calib().map(|_| ())
+    }
+
+    fn apply(&self, ctx: &mut PassContext, spec: &StageCfg) -> Result<StageOutcome> {
+        let before = ctx.nll()?;
+        ctx.note_baseline(before);
+        let mut notes = Vec::new();
+        let a = Awq { group: spec.params.group_size, ..Default::default() };
+        let peak = with_calibrated_layers(
+            ctx,
+            spec,
+            &mut notes,
+            &mut |li, _xa, xm, model, notes| {
+                let r = a.quantize(&model.layers[li].w_gate.clone(), xm);
+                notes.push(format!("layer{li} w_gate awq alpha={}", r.best_alpha));
+                model.set_layer_weight(li, "w_gate", r.weights);
+                let r = a.quantize(&model.layers[li].w_up.clone(), xm);
+                model.set_layer_weight(li, "w_up", r.weights);
+            },
+        )?;
+        ctx.mark_model_mutated();
+        let after = ctx.nll()?;
+        save_marker(&ctx.cfg, self.name(), &mut notes)?;
+        Ok(StageOutcome {
+            metric_before: before,
+            metric_after: after,
+            // int4 weights + one f32 scale per group (tracks group_size)
+            compression: 4.0 + 32.0 / spec.params.group_size as f64,
+            notes,
+            peak_calib_bytes: peak,
+        })
+    }
+}
+
+/// LeptoQuant outlier-isolation FP8 — registered under both the paper's
+/// `fp8_lepto` deployment name and the plain `leptoquant` alias.
+struct LeptoPass {
+    name: &'static str,
+}
+
+impl CompressionPass for LeptoPass {
+    fn name(&self) -> &'static str {
+        self.name
+    }
+    fn kind(&self) -> PassKind {
+        PassKind::Quantization
+    }
+    fn describe(&self) -> &'static str {
+        "LeptoQuant outlier-isolation alpha search + fp8 weight QDQ"
+    }
+
+    fn calibrate(&self, ctx: &mut PassContext, _spec: &StageCfg) -> Result<()> {
+        ctx.calib().map(|_| ())
+    }
+
+    fn apply(&self, ctx: &mut PassContext, spec: &StageCfg) -> Result<StageOutcome> {
+        let before = ctx.nll()?;
+        ctx.note_baseline(before);
+        let mut notes = Vec::new();
+        let alpha_grid = spec.params.alpha_grid.clone();
+        let peak = with_calibrated_layers(
+            ctx,
+            spec,
+            &mut notes,
+            &mut |li, _xa, xm, model, notes| {
+                let lq = LeptoQuant { alpha_grid: alpha_grid.clone(), ..Default::default() };
+                let res = lq.search(xm, &model.layers[li].w_gate.clone());
+                notes.push(format!(
+                    "layer{li} lepto alpha={} mse {:.3e} -> {:.3e}",
+                    res.best_alpha, res.mse_traditional, res.mse_best
+                ));
+                // deploy: weight QDQ at fp8 (activation scale is a runtime
+                // parameter recorded in the notes)
+                for which in ["w_gate", "w_up"] {
+                    let mut w = match which {
+                        "w_gate" => model.layers[li].w_gate.clone(),
+                        _ => model.layers[li].w_up.clone(),
+                    };
+                    quant::fp8::qdq_slice_scaled(&mut w.data, quant::Fp8Format::E4M3);
+                    model.set_layer_weight(li, which, w);
+                }
+            },
+        )?;
+        ctx.mark_model_mutated();
+        let after = ctx.nll()?;
+        save_marker(&ctx.cfg, self.name, &mut notes)?;
+        Ok(StageOutcome {
+            metric_before: before,
+            metric_after: after,
+            compression: 8.0,
+            notes,
+            peak_calib_bytes: peak,
+        })
+    }
+}
+
+/// SmoothQuant-style outlier migration folded into the RMSNorm gains —
+/// function-preserving (up to float rounding), so it composes in front of
+/// any weight quantizer (the paper's smooth → GPTQ recipe).
+struct SmoothPass;
+
+impl SmoothPass {
+    /// Fold migration scales: gain_c /= s_c, and column c of every
+    /// consumer weight *= s_c. The normed-input × weight products are
+    /// mathematically unchanged.
+    fn fold(gain: &mut [f32], ws: &mut [&mut Tensor], s: &[f32]) -> f32 {
+        for (g, sc) in gain.iter_mut().zip(s) {
+            *g /= sc;
+        }
+        for w in ws.iter_mut() {
+            for r in 0..w.rows() {
+                let row = w.row_mut(r);
+                for (c, sc) in s.iter().enumerate() {
+                    row[c] *= sc;
+                }
+            }
+        }
+        s.iter().fold(0.0f32, |m, &v| m.max(v))
+    }
+}
+
+impl CompressionPass for SmoothPass {
+    fn name(&self) -> &'static str {
+        "smooth"
+    }
+    fn kind(&self) -> PassKind {
+        PassKind::Quantization
+    }
+    fn describe(&self) -> &'static str {
+        "SmoothQuant activation-outlier migration into RMSNorm gains (lossless)"
+    }
+
+    fn calibrate(&self, ctx: &mut PassContext, _spec: &StageCfg) -> Result<()> {
+        ctx.calib().map(|_| ())
+    }
+
+    fn apply(&self, ctx: &mut PassContext, spec: &StageCfg) -> Result<StageOutcome> {
+        let before = ctx.nll()?;
+        ctx.note_baseline(before);
+        let alpha = spec.params.smooth_alpha as f32;
+        let sq = SmoothQuant { alpha };
+        let mut notes = Vec::new();
+        ctx.with_calib(|ctx, capture| {
+            let model = ctx.model()?;
+            for li in 0..model.cfg.n_layers {
+                let l = &mut model.layers[li];
+                let s_attn = sq.shared_scales(&capture.attn_in[li], &[&l.wq, &l.wk, &l.wv]);
+                let attn_max =
+                    Self::fold(&mut l.ln1, &mut [&mut l.wq, &mut l.wk, &mut l.wv], &s_attn);
+                let s_mlp = sq.shared_scales(&capture.mlp_in[li], &[&l.w_gate, &l.w_up]);
+                let mlp_max = Self::fold(&mut l.ln2, &mut [&mut l.w_gate, &mut l.w_up], &s_mlp);
+                notes.push(format!(
+                    "layer{li} smooth alpha={alpha} s_max attn={attn_max:.3} mlp={mlp_max:.3}"
+                ));
+            }
+            Ok(())
+        })?;
+        ctx.mark_model_mutated();
+        let after = ctx.nll()?;
+        save_marker(&ctx.cfg, self.name(), &mut notes)?;
+        Ok(StageOutcome {
+            metric_before: before,
+            metric_after: after,
+            compression: 32.0, // migration only — no storage change
+            notes,
+            peak_calib_bytes: 0,
+        })
+    }
+}
+
+// ---------------------------------------------------------------------
+// speculative-decoding passes (serving-path; compress pipelines reject)
+// ---------------------------------------------------------------------
+
+struct SpecDecodePass {
+    name: &'static str,
+    describe: &'static str,
+}
+
+impl CompressionPass for SpecDecodePass {
+    fn name(&self) -> &'static str {
+        self.name
+    }
+    fn kind(&self) -> PassKind {
+        PassKind::SpecDecode
+    }
+    fn describe(&self) -> &'static str {
+        self.describe
+    }
+
+    fn apply(&self, _ctx: &mut PassContext, _spec: &StageCfg) -> Result<StageOutcome> {
+        bail!(
+            "spec_decode jobs run through the serving engine — use \
+             `angelslim serve` or examples/serve_spec_decode"
+        )
+    }
+}
+
+// ---------------------------------------------------------------------
+// sparse-attention passes
+// ---------------------------------------------------------------------
+
+struct SparseAttnPass {
+    name: &'static str,
+    describe: &'static str,
+    algo: SparseAlgo,
+}
+
+impl CompressionPass for SparseAttnPass {
+    fn name(&self) -> &'static str {
+        self.name
+    }
+    fn kind(&self) -> PassKind {
+        PassKind::SparseAttn
+    }
+    fn describe(&self) -> &'static str {
+        self.describe
+    }
+
+    fn apply(&self, ctx: &mut PassContext, spec: &StageCfg) -> Result<StageOutcome> {
+        let seq_cap = ctx.cfg.dataset.seq_len;
+        let ratio = spec.params.ratio;
+        let model = ctx.model()?;
+        let seq = seq_cap.min(model.cfg.max_t - 8);
+        let dense = eval::eval_sparse_accuracy(model, SparseAlgo::Dense, seq, 4, 8, 1.0);
+        // finer blocks keep short configs meaningfully sparse
+        let row = eval::eval_sparse_accuracy(model, self.algo, seq, 4, 8, ratio);
+        Ok(StageOutcome {
+            metric_before: dense.avg,
+            metric_after: row.avg,
+            compression: row.mean_density,
+            notes: row
+                .per_task
+                .iter()
+                .map(|(k, a)| format!("{}: {:.3}", k.name(), a))
+                .collect(),
+            peak_calib_bytes: 0,
+        })
+    }
+}
+
+// ---------------------------------------------------------------------
+// token-pruning passes (visual VQA-proxy / audio ASR-proxy)
+// ---------------------------------------------------------------------
+
+struct VisualPrunePass {
+    name: &'static str,
+    describe: &'static str,
+    make: fn() -> Box<dyn Pruner>,
+}
+
+fn mk_idpruner() -> Box<dyn Pruner> {
+    Box::new(visual::IdPruner::default())
+}
+fn mk_fastv() -> Box<dyn Pruner> {
+    Box::new(visual::FastV)
+}
+fn mk_divprune() -> Box<dyn Pruner> {
+    Box::new(visual::DivPrune)
+}
+fn mk_visionzip() -> Box<dyn Pruner> {
+    Box::new(visual::VisionZip)
+}
+fn mk_dart() -> Box<dyn Pruner> {
+    Box::new(visual::Dart)
+}
+fn mk_vispruner() -> Box<dyn Pruner> {
+    Box::new(visual::VisPruner)
+}
+fn mk_scope() -> Box<dyn Pruner> {
+    Box::new(visual::Scope)
+}
+fn mk_visionselector() -> Box<dyn Pruner> {
+    Box::new(visual::VisionSelector)
+}
+fn mk_hiprune() -> Box<dyn Pruner> {
+    Box::new(visual::HiPrune)
+}
+
+impl CompressionPass for VisualPrunePass {
+    fn name(&self) -> &'static str {
+        self.name
+    }
+    fn kind(&self) -> PassKind {
+        PassKind::TokenPrune
+    }
+    fn describe(&self) -> &'static str {
+        self.describe
+    }
+
+    fn apply(&self, ctx: &mut PassContext, spec: &StageCfg) -> Result<StageOutcome> {
+        let gen = crate::data::VisionSceneGen::new(96, 24, 6, ctx.cfg.global.seed);
+        let pruner = (self.make)();
+        let n = 40;
+        let base = eval::vqa::baseline_accuracy(&gen, n);
+        let acc = eval::eval_pruner_accuracy(&gen, pruner.as_ref(), spec.params.ratio, n);
+        Ok(StageOutcome {
+            metric_before: base,
+            metric_after: acc,
+            compression: spec.params.ratio,
+            notes: vec![],
+            peak_calib_bytes: 0,
+        })
+    }
+}
+
+struct AudioPrunePass {
+    name: &'static str,
+    describe: &'static str,
+    make: fn() -> Box<dyn Reducer>,
+}
+
+fn mk_samp() -> Box<dyn Reducer> {
+    Box::new(audio::Samp::default())
+}
+fn mk_atome() -> Box<dyn Reducer> {
+    Box::new(audio::AToMe)
+}
+fn mk_fastadasp() -> Box<dyn Reducer> {
+    Box::new(audio::FastAdaSp)
+}
+fn mk_cdpruner() -> Box<dyn Reducer> {
+    Box::new(audio::CdPruner)
+}
+
+impl CompressionPass for AudioPrunePass {
+    fn name(&self) -> &'static str {
+        self.name
+    }
+    fn kind(&self) -> PassKind {
+        PassKind::TokenPrune
+    }
+    fn describe(&self) -> &'static str {
+        self.describe
+    }
+
+    fn apply(&self, ctx: &mut PassContext, spec: &StageCfg) -> Result<StageOutcome> {
+        let gen = crate::data::AudioSceneGen::new(24, 24, 0.1, ctx.cfg.global.seed);
+        let reducer = (self.make)();
+        let base = eval::asr::baseline_wer(&gen, 15, 150);
+        let w = eval::eval_wer(&gen, reducer.as_ref(), spec.params.ratio, 15, 150);
+        Ok(StageOutcome {
+            metric_before: base,
+            metric_after: w,
+            compression: spec.params.ratio,
+            notes: vec!["metric is WER% (lower is better)".into()],
+            peak_calib_bytes: 0,
+        })
+    }
+}
+
+// ---------------------------------------------------------------------
+// evaluation checkpoint
+// ---------------------------------------------------------------------
+
+/// In-pipeline evaluation checkpoint: scores the *current* model on the
+/// held-out stream and reports it against the pipeline-wide baseline (the
+/// model the first metric-producing stage saw).
+struct EvalPass;
+
+impl CompressionPass for EvalPass {
+    fn name(&self) -> &'static str {
+        "eval"
+    }
+    fn kind(&self) -> PassKind {
+        PassKind::Eval
+    }
+    fn describe(&self) -> &'static str {
+        "perplexity checkpoint on the held-out stream (vs pipeline baseline)"
+    }
+
+    fn apply(&self, ctx: &mut PassContext, _spec: &StageCfg) -> Result<StageOutcome> {
+        let nll = ctx.nll()?;
+        ctx.note_baseline(nll);
+        let before = ctx.baseline_nll.unwrap_or(nll);
+        Ok(StageOutcome {
+            metric_before: before,
+            metric_after: nll,
+            compression: 1.0,
+            notes: vec![format!(
+                "ppl {:.4} (pipeline baseline ppl {:.4})",
+                nll.exp(),
+                before.exp()
+            )],
+            peak_calib_bytes: 0,
+        })
+    }
+}
+
+// ---------------------------------------------------------------------
+// the registry itself
+// ---------------------------------------------------------------------
+
+static REGISTRY: &[&(dyn CompressionPass + Sync)] = &[
+    // quantization (PTQ + QAT-derived QDQ deployments)
+    &RtnQuantPass {
+        name: "fp8_dynamic",
+        describe: "fp8 E4M3 weight QDQ (near-lossless)",
+        stored_bits: None,
+        k_multiple: 1,
+        group_wired: false,
+        caveat: "",
+        make: mk_fp8,
+    },
+    &LeptoPass { name: "fp8_lepto" },
+    &LeptoPass { name: "leptoquant" },
+    &RtnQuantPass {
+        name: "int8",
+        describe: "int8 per-channel affine QDQ",
+        stored_bits: None,
+        k_multiple: 1,
+        group_wired: false,
+        caveat: "",
+        make: mk_int8,
+    },
+    &RtnQuantPass {
+        name: "int4",
+        describe: "int4 group-32 affine QDQ",
+        stored_bits: None,
+        k_multiple: 1,
+        group_wired: false,
+        caveat: "",
+        make: mk_int4,
+    },
+    &GptqPass,
+    &AwqPass,
+    &SmoothPass,
+    &RtnQuantPass {
+        name: "seq2",
+        describe: "SEQ 2-bit shifted-exponential QDQ (fixed group 32)",
+        stored_bits: None,
+        k_multiple: 1,
+        group_wired: false,
+        caveat: "",
+        make: mk_seq2,
+    },
+    &RtnQuantPass {
+        name: "tequila",
+        describe: "Tequila ternary QDQ (ternary image; bias needs a deploy target)",
+        stored_bits: None,
+        k_multiple: 1,
+        group_wired: false,
+        caveat: "deadzone bias C(W) dropped: Transformer has no bias slots — \
+                 apply Tequila::merge_bias in a deploy target that does",
+        make: mk_tequila,
+    },
+    &RtnQuantPass {
+        name: "sherry",
+        describe: "Sherry 1.25-bit 3:4 structured-sparse ternary QDQ",
+        stored_bits: None,
+        k_multiple: 4,
+        group_wired: false,
+        caveat: "",
+        make: mk_sherry,
+    },
+    &RtnQuantPass {
+        name: "ternary",
+        describe: "TWN ternary per-row QDQ",
+        // packed 3-in-5 storage (packing.rs), not the 1.58-bit entropy
+        stored_bits: Some(1.67),
+        k_multiple: 1,
+        group_wired: false,
+        caveat: "",
+        make: mk_ternary,
+    },
+    &RtnQuantPass {
+        name: "w4a8",
+        describe: "int4 group-wise weight QDQ (W4A8 deployment; group_size wired)",
+        stored_bits: None,
+        k_multiple: 1,
+        group_wired: true,
+        caveat: "",
+        make: mk_w4a8,
+    },
+    // spec_decode (dispatches to the serving engine, not the compress loop)
+    &SpecDecodePass { name: "eagle3", describe: "Eagle3-style aligned-draft speculative serving" },
+    &SpecDecodePass { name: "vanilla", describe: "vanilla draft/target speculative serving" },
+    &SpecDecodePass { name: "spec_exit", describe: "early-exit self-speculative serving" },
+    // sparse_attn
+    &SparseAttnPass {
+        name: "dense",
+        describe: "dense baseline (no sparsity)",
+        algo: SparseAlgo::Dense,
+    },
+    &SparseAttnPass {
+        name: "a_shape",
+        describe: "A-shape static sink+local mask",
+        algo: SparseAlgo::AShape,
+    },
+    &SparseAttnPass {
+        name: "tri_shape",
+        describe: "Tri-shape static mask",
+        algo: SparseAlgo::TriShape,
+    },
+    &SparseAttnPass {
+        name: "dilated",
+        describe: "dilated strided static mask",
+        algo: SparseAlgo::Dilated,
+    },
+    &SparseAttnPass { name: "strided", describe: "strided static mask", algo: SparseAlgo::Strided },
+    &SparseAttnPass {
+        name: "minference",
+        describe: "MInference dynamic block estimation",
+        algo: SparseAlgo::MInference,
+    },
+    &SparseAttnPass {
+        name: "xattention",
+        describe: "XAttention antidiagonal scoring",
+        algo: SparseAlgo::XAttention,
+    },
+    &SparseAttnPass {
+        name: "flexprefill",
+        describe: "FlexPrefill adaptive per-head budget",
+        algo: SparseAlgo::FlexPrefill,
+    },
+    &SparseAttnPass {
+        name: "stem",
+        describe: "Stem query-group block selection",
+        algo: SparseAlgo::Stem,
+    },
+    // token_prune — visual (VQA-proxy)
+    &VisualPrunePass {
+        name: "idpruner",
+        describe: "IDPruner identity-aware visual pruning",
+        make: mk_idpruner,
+    },
+    &VisualPrunePass {
+        name: "fastv",
+        describe: "FastV attention-rank visual pruning",
+        make: mk_fastv,
+    },
+    &VisualPrunePass {
+        name: "divprune",
+        describe: "DivPrune diversity-max visual pruning",
+        make: mk_divprune,
+    },
+    &VisualPrunePass {
+        name: "visionzip",
+        describe: "VisionZip dominant-token selection",
+        make: mk_visionzip,
+    },
+    &VisualPrunePass { name: "dart", describe: "DART duplication-aware reduction", make: mk_dart },
+    &VisualPrunePass {
+        name: "vispruner",
+        describe: "VisPruner importance+diversity pruning",
+        make: mk_vispruner,
+    },
+    &VisualPrunePass { name: "scope", describe: "SCOPE set-cover visual pruning", make: mk_scope },
+    &VisualPrunePass {
+        name: "visionselector",
+        describe: "VisionSelector learned scoring proxy",
+        make: mk_visionselector,
+    },
+    &VisualPrunePass {
+        name: "hiprune",
+        describe: "HiPrune hierarchical visual pruning",
+        make: mk_hiprune,
+    },
+    // token_prune — audio (ASR-proxy, WER metric)
+    &AudioPrunePass {
+        name: "samp",
+        describe: "Samp salience-aware audio merge (WER)",
+        make: mk_samp,
+    },
+    &AudioPrunePass {
+        name: "atome",
+        describe: "A-ToMe adjacent token merging (WER)",
+        make: mk_atome,
+    },
+    &AudioPrunePass {
+        name: "fastadasp",
+        describe: "FastAdaSp adaptive audio pruning (WER)",
+        make: mk_fastadasp,
+    },
+    &AudioPrunePass {
+        name: "cdpruner",
+        describe: "CDPruner conditional-diversity pruning (WER)",
+        make: mk_cdpruner,
+    },
+    // eval checkpoint
+    &EvalPass,
+];
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn registry_names_are_unique() {
+        let names = PassRegistry::names();
+        let mut dedup = names.clone();
+        dedup.sort();
+        dedup.dedup();
+        assert_eq!(dedup.len(), names.len(), "duplicate registry name: {names:?}");
+    }
+
+    #[test]
+    fn every_kind_has_a_registered_default() {
+        for kind in PassKind::all() {
+            let def = kind.default_pass();
+            let pass = PassRegistry::find(def)
+                .unwrap_or_else(|| panic!("default pass `{def}` for {kind:?} not registered"));
+            assert_eq!(pass.kind(), kind, "default `{def}` registered under the wrong kind");
+        }
+    }
+
+    #[test]
+    fn find_resolves_each_registered_name_to_itself() {
+        for p in PassRegistry::all() {
+            let found = PassRegistry::find(p.name()).expect("registered name must resolve");
+            assert_eq!(found.name(), p.name());
+            assert!(!p.describe().is_empty(), "{} needs a description", p.name());
+        }
+        assert!(PassRegistry::find("wizardry").is_none());
+    }
+
+    #[test]
+    fn by_method_groups_cover_the_whole_registry() {
+        let grouped = PassRegistry::by_method();
+        let total: usize = grouped.iter().map(|(_, names)| names.len()).sum();
+        assert_eq!(total, PassRegistry::all().len());
+        let quant = &grouped.iter().find(|(m, _)| *m == "quantization").unwrap().1;
+        for expected in ["fp8_dynamic", "gptq", "awq", "smooth", "tequila", "sherry"] {
+            assert!(quant.contains(&expected), "missing quant pass {expected}");
+        }
+    }
+}

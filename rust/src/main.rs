@@ -1,14 +1,18 @@
 //! AngelSlim-RS CLI — the leader entrypoint.
 //!
-//!   angelslim compress <config.yaml>     run a compression job
+//!   angelslim compress [--json] <config.yaml>  run a compression pipeline
+//!                                        (--json also emits the BENCH_JSON
+//!                                        machine-readable PipelineReport)
 //!   angelslim serve [--spec] [-n N]      serve synthetic requests (artifacts)
 //!   angelslim serve --config <yaml> [-n N]  continuous-batching serve on the
 //!                                        configured model (hermetic fixtures OK)
 //!   angelslim eval-quant                 PPL across all model artifacts
-//!   angelslim list                       registered models/algos/artifacts
+//!   angelslim list                       registered passes/models/artifacts
 
 use angelslim::config::SlimConfig;
-use angelslim::coordinator::{CompressEngine, DataFactory, ServeFactory, SlimFactory};
+use angelslim::coordinator::{
+    CompressEngine, DataFactory, PassRegistry, ServeFactory, SlimFactory,
+};
 use angelslim::data::RequestGen;
 use angelslim::eval;
 use angelslim::models::Transformer;
@@ -28,8 +32,18 @@ fn run() -> Result<()> {
     let args: Vec<String> = std::env::args().skip(1).collect();
     match args.first().map(String::as_str) {
         Some("compress") => {
-            let path = args.get(1).map(String::as_str).unwrap_or("configs/quant_fp8.yaml");
-            cmd_compress(path)
+            if let Some(bad) = args.iter().skip(1).find(|a| a.starts_with("--") && *a != "--json")
+            {
+                anyhow::bail!("unknown flag `{bad}` for compress (supported: --json)");
+            }
+            let json = args.iter().any(|a| a == "--json");
+            let path = args
+                .iter()
+                .skip(1)
+                .find(|a| !a.starts_with("--"))
+                .map(String::as_str)
+                .unwrap_or("configs/quant_fp8.yaml");
+            cmd_compress(path, json)
         }
         Some("serve") => {
             let spec = args.iter().any(|a| a == "--spec");
@@ -56,34 +70,56 @@ fn run() -> Result<()> {
                 "AngelSlim-RS — unified model compression toolkit (paper reproduction)\n\
                  \n\
                  usage:\n\
-                 \x20 angelslim compress <config.yaml>        run a YAML-configured job\n\
+                 \x20 angelslim compress [--json] <config.yaml>  run a YAML pipeline job\n\
+                 \x20                                          (--json: BENCH_JSON report)\n\
                  \x20 angelslim serve [--spec] [-n N]         serve N synthetic requests\n\
                  \x20 angelslim serve --config <yaml> [-n N]  continuous-batching serve\n\
                  \x20 angelslim eval-quant                    PPL across quantized artifacts\n\
-                 \x20 angelslim list                          registered components"
+                 \x20 angelslim list                          registered passes + components"
             );
             Ok(())
         }
     }
 }
 
-fn cmd_compress(path: &str) -> Result<()> {
+fn cmd_compress(path: &str, json: bool) -> Result<()> {
     println!("loading config {path}");
     let engine = CompressEngine::from_file(path)?;
     let r = engine.run()?;
     let mut t = Table::new(
-        &format!("compress job: {} / {}", r.method, r.algo),
-        &["metric", "value"],
+        &format!("compress pipeline: {} stage(s)", r.stages.len()),
+        &["stage", "pass", "kind", "before", "after", "compression", "size", "wall ms"],
     );
-    t.row_strs(&["before", &f2(r.metric_before)]);
-    t.row_strs(&["after", &f2(r.metric_after)]);
-    t.row_strs(&["compression", &f2(r.compression)]);
-    if r.peak_calib_bytes > 0 {
-        t.row_strs(&["peak calib bytes", &r.peak_calib_bytes.to_string()]);
+    for (i, s) in r.stages.iter().enumerate() {
+        t.row_strs(&[
+            &i.to_string(),
+            &s.pass,
+            &s.kind,
+            &f2(s.metric_before),
+            &f2(s.metric_after),
+            &f2(s.compression),
+            &f2(s.size_ratio),
+            &f2(s.wall_ms),
+        ]);
     }
     t.print();
-    for n in &r.notes {
-        println!("  note: {n}");
+    println!(
+        "overall size ratio {:.4} | total wall {:.1} ms",
+        r.overall_size_ratio(),
+        r.total_wall_ms()
+    );
+    for s in &r.stages {
+        if s.peak_calib_bytes > 0 {
+            println!("  [{}] peak calib bytes: {}", s.pass, s.peak_calib_bytes);
+        }
+        for n in &s.notes {
+            println!("  [{}] note: {n}", s.pass);
+        }
+    }
+    if json {
+        // same convention as the benches: one machine-readable line CI
+        // gates on with `python -m json.tool`
+        println!("BENCH_JSON {}", r.to_json(path));
     }
     Ok(())
 }
@@ -201,9 +237,13 @@ fn cmd_eval_quant() -> Result<()> {
 }
 
 fn cmd_list() -> Result<()> {
-    println!("methods and registered algorithms:");
+    println!("methods and registered passes (from the PassRegistry):");
     for (method, algos) in SlimFactory::registered() {
         println!("  {method}: {algos:?}");
+    }
+    println!("pass details:");
+    for pass in PassRegistry::all() {
+        println!("  {:14} {:12} {}", pass.name(), pass.kind().method(), pass.describe());
     }
     if let Ok(reg) = ArtifactRegistry::open("artifacts") {
         println!("artifacts present: {:?}", reg.available());

@@ -163,6 +163,28 @@ impl Transformer {
         *slot = w;
     }
 
+    /// Every learned parameter flattened in a fixed traversal order —
+    /// the bit-exactness witness pipeline-equivalence tests compare
+    /// (`f32::to_bits` over this vector ⇔ identical model bytes).
+    pub fn flat_weights(&self) -> Vec<f32> {
+        let mut out = Vec::new();
+        out.extend_from_slice(&self.embed.data);
+        out.extend_from_slice(&self.pos.data);
+        for l in &self.layers {
+            out.extend_from_slice(&l.ln1);
+            for w in [&l.wq, &l.wk, &l.wv, &l.wo] {
+                out.extend_from_slice(&w.data);
+            }
+            out.extend_from_slice(&l.ln2);
+            for w in [&l.w_gate, &l.w_up, &l.w_down] {
+                out.extend_from_slice(&w.data);
+            }
+        }
+        out.extend_from_slice(&self.ln_f);
+        out.extend_from_slice(&self.head.data);
+        out
+    }
+
     fn embed_tokens(&self, tokens: &[u8]) -> Tensor {
         let t = tokens.len();
         let d = self.cfg.d_model;

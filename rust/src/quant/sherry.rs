@@ -126,6 +126,24 @@ impl Sherry {
     }
 }
 
+/// Pipeline-pass adapter: Sherry's 3:4 structured ternary as a generic
+/// weight quantizer (the registry's `sherry` pass; requires every weight
+/// dimension divisible by the 4-lane block, checked in the pass's
+/// `prepare`).
+impl super::WeightQuantizer for Sherry {
+    fn name(&self) -> &'static str {
+        "sherry"
+    }
+
+    fn bits(&self) -> f64 {
+        1.25
+    }
+
+    fn qdq(&self, w: &mut [f32], n: usize, k: usize) {
+        Sherry::qdq(w, n, k);
+    }
+}
+
 /// Arenas annealing schedule: λ_t from λ_0 down to 0 by end of training
 /// (cosine decay — smooth, reaches exactly zero).
 #[derive(Clone, Debug)]

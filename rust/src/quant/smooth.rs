@@ -19,8 +19,15 @@ impl Default for SmoothQuant {
 impl SmoothQuant {
     /// Compute per-channel migration scales from activation/weight ranges.
     pub fn scales(&self, x: &Tensor, w: &Tensor) -> Vec<f32> {
+        self.shared_scales(x, &[w])
+    }
+
+    /// Migration scales shared by several linears reading the same input
+    /// (wq/wk/wv after ln1, w_gate/w_up after ln2): the weight range is
+    /// taken over *all* consumers so one scale vector serves them all —
+    /// what the pipeline's `smooth` pass folds into the RMSNorm gains.
+    pub fn shared_scales(&self, x: &Tensor, ws: &[&Tensor]) -> Vec<f32> {
         let k = x.cols();
-        assert_eq!(w.cols(), k);
         let mut xmax = vec![1e-6f32; k];
         for r in 0..x.rows() {
             for c in 0..k {
@@ -28,9 +35,12 @@ impl SmoothQuant {
             }
         }
         let mut wmax = vec![1e-6f32; k];
-        for r in 0..w.rows() {
-            for c in 0..k {
-                wmax[c] = wmax[c].max(w.row(r)[c].abs());
+        for w in ws {
+            assert_eq!(w.cols(), k);
+            for r in 0..w.rows() {
+                for c in 0..k {
+                    wmax[c] = wmax[c].max(w.row(r)[c].abs());
+                }
             }
         }
         (0..k)

@@ -89,6 +89,33 @@ impl Tequila {
     }
 }
 
+/// Deploy-side QDQ so Tequila-trained checkpoints slot into the generic
+/// pass pipeline: the weight image is the ternary reconstruction ONLY.
+/// The deadzone bias C(W) is **dropped**, not merged — the Transformer
+/// has no bias slots, so [`Tequila::merge_bias`] can only be applied by a
+/// deployment target that does (the pipeline's `tequila` stage records
+/// this limitation in its report notes). Metrics from this QDQ therefore
+/// measure the ternary image without the bias recovery.
+impl super::WeightQuantizer for Tequila {
+    fn name(&self) -> &'static str {
+        "tequila"
+    }
+
+    fn bits(&self) -> f64 {
+        2.0
+    }
+
+    fn qdq(&self, w: &mut [f32], n: usize, k: usize) {
+        let q = self.quantize(w, n, k);
+        for row in 0..n {
+            let a = q.alphas[row];
+            for i in 0..k {
+                w[row * k + i] = (q.codes[row * k + i] as f32 - 1.0) * a;
+            }
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

@@ -1,10 +1,12 @@
 //! Every shipped config in configs/ must parse into a valid `SlimConfig`
-//! and name a registered method/algorithm — the same validation
-//! `angelslim list` performs — and serving misconfigurations must fail
-//! loudly at parse/startup instead of silently falling back.
+//! whose pipeline stages (explicit `pipeline:` or desugared legacy
+//! `compression.method` form) name registered passes — the same
+//! registry-driven validation `angelslim list` performs — and both
+//! compression-pipeline and serving misconfigurations must fail loudly at
+//! parse/startup instead of silently falling back.
 
 use angelslim::config::SlimConfig;
-use angelslim::coordinator::SlimFactory;
+use angelslim::coordinator::{PassRegistry, SlimFactory};
 use angelslim::data::TokenRequest;
 use angelslim::server::{GreedyExecutor, ServeCfg, StepExecutor};
 use angelslim::util::fixtures::fixture_target;
@@ -19,6 +21,7 @@ fn with_serve(serve_yaml: &str) -> Result<SlimConfig, anyhow::Error> {
 #[test]
 fn all_shipped_configs_parse_and_validate() {
     let mut seen = 0usize;
+    let mut multi_stage = 0usize;
     for entry in std::fs::read_dir("configs").expect("configs/ directory missing") {
         let path = entry.unwrap().path();
         if path.extension().map(|e| e == "yaml").unwrap_or(false) {
@@ -27,11 +30,90 @@ fn all_shipped_configs_parse_and_validate() {
                 .unwrap_or_else(|e| panic!("config {p} failed to parse: {e:#}"));
             SlimFactory::validate(&cfg)
                 .unwrap_or_else(|e| panic!("config {p} failed validation: {e:#}"));
+            // pipeline invariants every config upholds (legacy forms
+            // desugar to exactly one stage; every stage is registered)
+            assert!(!cfg.pipeline.is_empty(), "{p}: empty pipeline");
+            for stage in &cfg.pipeline {
+                assert!(
+                    PassRegistry::find(&stage.pass).is_some(),
+                    "{p}: stage `{}` not in the PassRegistry",
+                    stage.pass
+                );
+            }
+            if cfg.pipeline.len() > 1 {
+                multi_stage += 1;
+            }
             seen += 1;
         }
     }
     // guard against the directory silently emptying out
     assert!(seen >= 4, "expected at least 4 shipped configs, found {seen}");
+    assert!(
+        multi_stage >= 2,
+        "expected the two shipped multi-stage pipeline fixtures, found {multi_stage}"
+    );
+}
+
+#[test]
+fn legacy_single_method_form_desugars_to_one_stage() {
+    let cfg = SlimConfig::from_str(
+        "model:\n  name: tiny-fixture\ncompression:\n  method: quantization\n  \
+         quantization:\n    algo: gptq\n",
+    )
+    .unwrap();
+    assert_eq!(cfg.pipeline.len(), 1);
+    assert_eq!(cfg.pipeline[0].pass, "gptq");
+    assert_eq!(cfg.pipeline[0].params, cfg.compression);
+}
+
+#[test]
+fn pipeline_rejects_unknown_pass_names() {
+    let err = SlimConfig::from_str(
+        "model:\n  name: tiny-fixture\npipeline:\n  - pass: wizardry\n",
+    )
+    .unwrap_err();
+    let msg = format!("{err:#}");
+    assert!(msg.contains("wizardry") && msg.contains("registered"), "{msg}");
+    // same loud failure through the legacy spelling
+    assert!(SlimConfig::from_str(
+        "model:\n  name: tiny-fixture\ncompression:\n  method: quantization\n  \
+         quantization:\n    algo: wizardry\n",
+    )
+    .is_err());
+}
+
+#[test]
+fn pipeline_rejects_empty_and_malformed_sections() {
+    for bad in [
+        "pipeline: []\n",
+        "pipeline:\n",
+        "pipeline: gptq\n",
+        "pipeline:\n  - 17\n",
+    ] {
+        assert!(
+            SlimConfig::from_str(&format!("model:\n  name: tiny-fixture\n{bad}")).is_err(),
+            "must reject: {bad:?}"
+        );
+    }
+}
+
+#[test]
+fn pipeline_rejects_invalid_per_stage_overrides() {
+    for bad in [
+        "  - pass: int4\n    bits: 99\n",
+        "  - pass: int4\n    bits: -4\n",
+        "  - pass: idpruner\n    ratio: 0.0\n",
+        "  - pass: stem\n    ratio: 1.5\n",
+        "  - pass: smooth\n    smooth_alpha: 2.0\n",
+        "  - pass: gptq\n    low_memory_budget_layers: -1\n",
+        "  - pass: gptq\n    group_size: -32\n",
+    ] {
+        assert!(
+            SlimConfig::from_str(&format!("model:\n  name: tiny-fixture\npipeline:\n{bad}"))
+                .is_err(),
+            "stage override must fail loudly: {bad:?}"
+        );
+    }
 }
 
 #[test]

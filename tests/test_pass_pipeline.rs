@@ -1,0 +1,263 @@
+//! The composable CompressionPass pipeline, end to end and hermetic:
+//!
+//! * pipeline-equivalence property — a one-stage `pipeline:` config is
+//!   bit-identical (model weights AND report numbers) to the legacy
+//!   `compression.method` form, for a representative pass from each
+//!   method family (quant RTN, quant calibrated, token prune, sparse
+//!   attention);
+//! * the shipped multi-stage fixture configs (`smooth → gptq → eval`,
+//!   `token_prune → int4 → eval`) run end-to-end through
+//!   `CompressEngine::from_file` exactly like `angelslim compress` would,
+//!   producing a per-stage `PipelineReport`;
+//! * the smooth pass is function-preserving and actually helps GPTQ;
+//! * the `--json` report line round-trips through the JSON parser;
+//! * the registry is the single source of truth (listing == dispatch).
+
+use angelslim::config::{Json, SlimConfig};
+use angelslim::coordinator::{CompressEngine, PassKind, PassRegistry, SlimFactory};
+
+const DATASET: &str = "dataset:\n  kind: fixture\n  num_samples: 8\n  seq_len: 40\n";
+
+fn legacy_src(method: &str, algo: &str, overrides: &str) -> String {
+    format!(
+        "global:\n  save_path: target/test-output/pass_pipeline\n  seed: 7\n\
+         model:\n  name: tiny-fixture\n\
+         compression:\n  method: {method}\n  {method}:\n    algo: {algo}\n{overrides}{DATASET}"
+    )
+}
+
+fn pipeline_src(pass: &str, stage_overrides: &str) -> String {
+    format!(
+        "global:\n  save_path: target/test-output/pass_pipeline\n  seed: 7\n\
+         model:\n  name: tiny-fixture\n\
+         pipeline:\n  - pass: {pass}\n{stage_overrides}{DATASET}"
+    )
+}
+
+fn run(src: &str) -> (angelslim::coordinator::PipelineReport, Option<Vec<u32>>) {
+    let engine = CompressEngine::new(SlimConfig::from_str(src).unwrap()).unwrap();
+    let (report, ctx) = engine.run_with_context().unwrap();
+    let bits = ctx
+        .into_model()
+        .map(|m| m.flat_weights().into_iter().map(f32::to_bits).collect());
+    (report, bits)
+}
+
+/// A one-stage pipeline must be bit-identical to the equivalent legacy
+/// single-method config: same model bytes, same report numbers (wall-clock
+/// excluded — the only non-deterministic field).
+#[test]
+fn one_stage_pipeline_is_bit_identical_to_legacy_form() {
+    const LOW_MEM: &str = "    low_memory_budget_layers: 1\n";
+    let cases: &[(&str, &str, &str, &str)] = &[
+        // method, algo, legacy overrides (method-section), stage overrides
+        ("quantization", "int4", "", ""),
+        ("quantization", "gptq", LOW_MEM, LOW_MEM),
+        ("token_prune", "idpruner", "    ratio: 0.25\n", "    ratio: 0.25\n"),
+        ("sparse_attn", "stem", "    ratio: 0.3\n", "    ratio: 0.3\n"),
+    ];
+    for (method, algo, legacy_over, stage_over) in cases {
+        let (legacy, legacy_model) = run(&legacy_src(method, algo, legacy_over));
+        let (piped, piped_model) = run(&pipeline_src(algo, stage_over));
+        assert_eq!(legacy.stages.len(), 1, "{algo}");
+        assert_eq!(piped.stages.len(), 1, "{algo}");
+        assert!(
+            legacy.stages[0].same_numbers(&piped.stages[0]),
+            "{algo}: report numbers diverged\n legacy: {:?}\n piped: {:?}",
+            legacy.stages[0],
+            piped.stages[0]
+        );
+        assert_eq!(
+            legacy_model, piped_model,
+            "{algo}: pipeline form must produce bit-identical model weights"
+        );
+        // quant passes mutate a loaded model; prune never loads one
+        match *method {
+            "quantization" => assert!(legacy_model.is_some(), "{algo}"),
+            "token_prune" => assert!(legacy_model.is_none(), "{algo} must stay model-free"),
+            _ => {}
+        }
+    }
+}
+
+/// Determinism backstop for the equivalence test: the same config run
+/// twice produces the same report numbers and model bits.
+#[test]
+fn pipeline_runs_are_deterministic() {
+    let src = pipeline_src("gptq", "");
+    let (a, ma) = run(&src);
+    let (b, mb) = run(&src);
+    assert!(a.stages[0].same_numbers(&b.stages[0]));
+    assert_eq!(ma, mb);
+}
+
+#[test]
+fn shipped_smooth_gptq_eval_config_runs_end_to_end() {
+    let engine = CompressEngine::from_file("configs/pipeline_smooth_gptq_fixture.yaml").unwrap();
+    let (report, ctx) = engine.run_with_context().unwrap();
+    assert_eq!(report.stages.len(), 3);
+    let [smooth, gptq, eval] = &report.stages[..] else { unreachable!() };
+
+    assert_eq!((smooth.pass.as_str(), smooth.kind.as_str()), ("smooth", "quantization"));
+    // migration is function-preserving: NLL moves only by float rounding
+    assert!(
+        (smooth.metric_after - smooth.metric_before).abs() < 0.05,
+        "smooth must not change the function: {smooth:?}"
+    );
+    assert!((smooth.size_ratio - 1.0).abs() < 1e-12, "{smooth:?}");
+
+    assert_eq!(gptq.pass, "gptq");
+    assert!(gptq.peak_calib_bytes > 0, "low-memory ledger must report: {gptq:?}");
+    assert!(
+        gptq.metric_after < gptq.metric_before + 0.8,
+        "gptq on the smoothed model must not collapse: {gptq:?}"
+    );
+    assert!((gptq.size_ratio - 5.0 / 32.0).abs() < 1e-12);
+
+    assert_eq!((eval.pass.as_str(), eval.kind.as_str()), ("eval", "eval"));
+    // the checkpoint scores the final model against the pipeline baseline
+    assert_eq!(eval.metric_before.to_bits(), ctx.baseline_nll.unwrap().to_bits());
+    assert_eq!(eval.metric_after.to_bits(), gptq.metric_after.to_bits());
+    assert!(eval.notes.iter().any(|n| n.contains("ppl")), "{eval:?}");
+
+    assert!((report.overall_size_ratio() - 5.0 / 32.0).abs() < 1e-12);
+    assert!(report.total_wall_ms() >= 0.0);
+    assert_eq!(report.final_stage().pass, "eval");
+}
+
+#[test]
+fn shipped_prune_int4_eval_config_runs_end_to_end() {
+    let engine = CompressEngine::from_file("configs/pipeline_prune_int4_fixture.yaml").unwrap();
+    let (report, ctx) = engine.run_with_context().unwrap();
+    assert_eq!(report.stages.len(), 3);
+    let [prune, int4, eval] = &report.stages[..] else { unreachable!() };
+
+    assert_eq!((prune.pass.as_str(), prune.kind.as_str()), ("idpruner", "token_prune"));
+    assert!(prune.metric_after > 0.3, "pruned VQA accuracy collapsed: {prune:?}");
+    assert!((prune.size_ratio - 0.25).abs() < 1e-12, "{prune:?}");
+
+    assert_eq!(int4.pass, "int4");
+    assert!(int4.metric_after < int4.metric_before + 0.6, "{int4:?}");
+
+    assert_eq!(eval.pass, "eval");
+    assert_eq!(eval.metric_after.to_bits(), int4.metric_after.to_bits());
+    // prune produced no NLL, so the baseline is int4's pristine before
+    assert_eq!(ctx.baseline_nll.unwrap().to_bits(), int4.metric_before.to_bits());
+
+    // combined footprint: 0.25 tokens kept x 5/32 weight bits
+    assert!((report.overall_size_ratio() - 0.25 * 5.0 / 32.0).abs() < 1e-12);
+}
+
+/// SmoothQuant migration must measurably condition the weights: the
+/// migrated model's weight channels are flatter, and GPTQ after smooth is
+/// no worse than a meaningful margin vs GPTQ alone.
+#[test]
+fn smooth_stage_composes_with_gptq() {
+    let solo = run(&pipeline_src("gptq", "")).0;
+    let chained_src = format!(
+        "global:\n  save_path: target/test-output/pass_pipeline\n  seed: 7\n\
+         model:\n  name: tiny-fixture\n\
+         pipeline:\n  - smooth\n  - gptq\n{DATASET}"
+    );
+    let (chained, _) = run(&chained_src);
+    let solo_after = solo.stages[0].metric_after;
+    let chained_after = chained.stages[1].metric_after;
+    assert!(
+        chained_after < solo_after + 0.3,
+        "smooth->gptq {chained_after} must stay comparable to gptq {solo_after}"
+    );
+}
+
+#[test]
+fn json_report_line_round_trips() {
+    let engine = CompressEngine::from_file("configs/pipeline_smooth_gptq_fixture.yaml").unwrap();
+    let report = engine.run().unwrap();
+    let line = report.to_json("configs/pipeline_smooth_gptq_fixture.yaml");
+    let v = Json::parse(&line).expect("compress --json line must be valid JSON");
+    assert_eq!(v.get("bench").unwrap().as_str(), Some("compress"));
+    let stages = v.get("stages").unwrap();
+    assert_eq!(stages.idx(2).unwrap().get("pass").unwrap().as_str(), Some("eval"));
+    for i in 0..3 {
+        let s = stages.idx(i).unwrap();
+        for key in ["metric_before", "metric_after", "compression", "size_ratio", "wall_ms"] {
+            assert!(s.get(key).unwrap().as_f64().is_some(), "stage {i} missing {key}");
+        }
+    }
+    assert!(v.get("overall_size_ratio").unwrap().as_f64().is_some());
+}
+
+/// The registry is the single source of truth: the factory listing, the
+/// schema's accepted names, and the engine's dispatch all agree.
+#[test]
+fn registry_is_single_source_of_truth() {
+    // listing == registry
+    let listed: Vec<&str> = SlimFactory::registered()
+        .into_iter()
+        .flat_map(|(_, algos)| algos)
+        .collect();
+    assert_eq!(listed.len(), PassRegistry::all().len());
+    // every listed name parses as a one-stage pipeline (schema agrees)...
+    for name in &listed {
+        let src = pipeline_src(name, "");
+        let cfg = SlimConfig::from_str(&src)
+            .unwrap_or_else(|e| panic!("registered pass `{name}` rejected by schema: {e:#}"));
+        // ...and the engine resolves it (dispatch agrees)
+        CompressEngine::new(cfg)
+            .unwrap_or_else(|e| panic!("registered pass `{name}` rejected by engine: {e:#}"));
+    }
+    // every method family default is registered under that family
+    for kind in PassKind::all() {
+        let p = PassRegistry::find(kind.default_pass()).expect("default must be registered");
+        assert_eq!(p.kind(), kind);
+    }
+}
+
+/// Calibrated passes consume `group_size`, and a group that cannot tile
+/// the model's rows is a loud prepare-stage error — never a silent
+/// fall-back to the default.
+#[test]
+fn gptq_group_override_is_wired_and_guarded() {
+    let (r32, m32) = run(&pipeline_src("gptq", "    group_size: 32\n"));
+    let (r16, m16) = run(&pipeline_src("gptq", "    group_size: 16\n"));
+    assert!(r32.stages[0].metric_after.is_finite() && r16.stages[0].metric_after.is_finite());
+    assert_ne!(m32, m16, "finer groups must change the reconstruction");
+    // 24 does not divide the fixture's d_model = 32
+    let cfg = SlimConfig::from_str(&pipeline_src("gptq", "    group_size: 24\n")).unwrap();
+    let err = CompressEngine::new(cfg).unwrap().run().unwrap_err();
+    assert!(format!("{err:#}").contains("group_size"), "{err:#}");
+}
+
+/// Reported compression derives from the quantizer that actually ran, so
+/// per-stage overrides stay in lockstep with the size accounting — and a
+/// group that cannot tile every weight row is a loud error, not a kernel
+/// assert (the fixture's d_model is 32, so 64 fits no attention row).
+#[test]
+fn w4a8_compression_tracks_group_size_override() {
+    let (r32, _) = run(&pipeline_src("w4a8", ""));
+    assert!((r32.stages[0].compression - 5.0).abs() < 1e-12, "group 32: {:?}", r32.stages[0]);
+    let (r16, _) = run(&pipeline_src("w4a8", "    group_size: 16\n"));
+    assert!((r16.stages[0].compression - 6.0).abs() < 1e-12, "group 16: {:?}", r16.stages[0]);
+    assert!(
+        r16.stages[0].size_ratio > r32.stages[0].size_ratio,
+        "finer groups carry more scale overhead"
+    );
+    let cfg = SlimConfig::from_str(&pipeline_src("w4a8", "    group_size: 64\n")).unwrap();
+    let err = CompressEngine::new(cfg).unwrap().run().unwrap_err();
+    assert!(format!("{err:#}").contains("group_size"), "{err:#}");
+}
+
+/// Newly wrapped QAT-side quantizers run as pipeline passes: tequila and
+/// sherry QDQ the fixture end to end with their expected footprints.
+#[test]
+fn tequila_and_sherry_run_as_passes() {
+    for (pass, bits) in [("tequila", 2.0), ("sherry", 1.25)] {
+        let (report, model) = run(&pipeline_src(pass, ""));
+        let s = &report.stages[0];
+        assert_eq!(s.pass, pass);
+        assert!((s.compression - bits).abs() < 1e-12, "{s:?}");
+        // sub-2-bit PTQ visibly damages the planted rule (sanity that the
+        // quantizer actually ran)
+        assert!(s.metric_after > s.metric_before, "{s:?}");
+        assert!(model.is_some());
+    }
+}

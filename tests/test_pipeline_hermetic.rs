@@ -164,14 +164,15 @@ fn yaml_gptq_job_with_low_memory_ledger() {
              dataset:\n  kind: fixture\n  num_samples: 8\n  seq_len: 40\n"
         )
     };
-    let full = CompressEngine::new(SlimConfig::from_str(&cfg(0)).unwrap())
-        .unwrap()
-        .run()
-        .unwrap();
-    let lo = CompressEngine::new(SlimConfig::from_str(&cfg(1)).unwrap())
-        .unwrap()
-        .run()
-        .unwrap();
+    let run_stage = |src: &str| {
+        let r = CompressEngine::new(SlimConfig::from_str(src).unwrap())
+            .unwrap()
+            .run()
+            .unwrap();
+        r.stages.into_iter().next().unwrap()
+    };
+    let full = run_stage(&cfg(0));
+    let lo = run_stage(&cfg(1));
     assert!(full.metric_before < 1.0, "{full:?}");
     assert!(full.metric_after < full.metric_before + 0.8, "gptq must not collapse: {full:?}");
     assert!(lo.peak_calib_bytes < full.peak_calib_bytes, "{lo:?} vs {full:?}");
@@ -228,10 +229,13 @@ fn sparse_masks_uphold_invariants_on_fixture_qkv() {
 #[test]
 fn quant_int4_fixture_config_file_runs() {
     let engine = CompressEngine::from_file("configs/quant_int4_fixture.yaml").unwrap();
-    let r = engine.run().unwrap();
-    assert_eq!(r.method, "quantization");
-    assert_eq!(r.algo, "int4");
+    let report = engine.run().unwrap();
+    assert_eq!(report.stages.len(), 1, "legacy config desugars to one stage");
+    let r = &report.stages[0];
+    assert_eq!(r.kind, "quantization");
+    assert_eq!(r.pass, "int4");
     assert!(r.metric_before < 1.0, "{r:?}");
     assert!(r.metric_after < r.metric_before + 0.6, "{r:?}");
     assert!((r.compression - 5.0).abs() < 1e-9);
+    assert!((report.overall_size_ratio() - 5.0 / 32.0).abs() < 1e-12);
 }
