@@ -56,6 +56,14 @@ pub struct CompressionCfg {
     pub num_speculative_tokens: usize,
     /// low-memory calibration: resident-layer budget (0 = keep everything)
     pub low_memory_budget_layers: usize,
+    /// packed storage format for the `pack` pass ("int4" | "2bit" |
+    /// "ternary167" | "sherry125")
+    pub format: String,
+    /// pattern-based per-layer selection for the `pack` pass: substrings
+    /// or regexes over weight names (auto-detected, mixable); empty
+    /// include = all layers, exclude always wins
+    pub include: Vec<String>,
+    pub exclude: Vec<String>,
 }
 
 /// One stage of the compression pipeline: a registered pass name plus its
@@ -166,6 +174,9 @@ impl SlimConfig {
                 Some(v) => non_negative(v, "compression.low_memory_budget_layers")?,
                 None => 0,
             },
+            format: stage_str(sec, "format", label)?.unwrap_or_else(|| "int4".to_string()),
+            include: str_list_strict(sec, "include", label)?.unwrap_or_default(),
+            exclude: str_list_strict(sec, "exclude", label)?.unwrap_or_default(),
             method,
         };
 
@@ -286,6 +297,17 @@ impl SlimConfig {
                     stage.pass
                 );
             }
+            if crate::quant::packing::PackFormat::parse(&p.format).is_none() {
+                bail!(
+                    "stage {i} (`{}`): unknown pack format `{}` \
+                     (have f32, f16, int4, 2bit, ternary167, sherry125)",
+                    stage.pass,
+                    p.format
+                );
+            }
+            crate::util::Selector::new(&p.include, &p.exclude).with_context(|| {
+                format!("stage {i} (`{}`): bad include/exclude layer pattern", stage.pass)
+            })?;
         }
         if self.dataset.seq_len == 0 || self.dataset.num_samples == 0 {
             bail!("dataset must be non-empty");
@@ -320,6 +342,9 @@ const STAGE_KEYS: &[&str] = &[
     "num_speculative_tokens",
     "low_memory_budget_layers",
     "alpha_grid",
+    "format",
+    "include",
+    "exclude",
 ];
 
 /// Parse one `pipeline:` entry — either a bare pass name (`- gptq`) or a
@@ -375,6 +400,15 @@ fn stage_from_yaml(item: &Yaml, base: &CompressionCfg) -> Result<StageCfg> {
     if let Some(grid) = alpha_grid_strict(overrides, &scope)? {
         params.alpha_grid = grid;
     }
+    if let Some(v) = stage_str(overrides, "format", &scope)? {
+        params.format = v;
+    }
+    if let Some(v) = str_list_strict(overrides, "include", &scope)? {
+        params.include = v;
+    }
+    if let Some(v) = str_list_strict(overrides, "exclude", &scope)? {
+        params.exclude = v;
+    }
     Ok(StageCfg { pass: name.to_string(), params })
 }
 
@@ -396,6 +430,36 @@ fn stage_f64(section: &Yaml, key: &str, scope: &str) -> Result<Option<f64>> {
         Some(v) => Ok(Some(v.as_f64().with_context(|| {
             format!("{scope}: {key} must be a number, got `{v}`")
         })?)),
+    }
+}
+
+fn stage_str(section: &Yaml, key: &str, scope: &str) -> Result<Option<String>> {
+    match section.get(key) {
+        None => Ok(None),
+        Some(v) => Ok(Some(v.as_str().map(String::from).with_context(|| {
+            format!("{scope}: {key} must be a string, got `{v}`")
+        })?)),
+    }
+}
+
+/// Strict string-list accessor (include/exclude layer patterns): present
+/// but not a list, or non-string entries, are loud errors; absent → None.
+fn str_list_strict(section: &Yaml, key: &str, scope: &str) -> Result<Option<Vec<String>>> {
+    match section.get(key) {
+        None => Ok(None),
+        Some(list) => {
+            let seq = list.as_seq().with_context(|| {
+                format!("{scope}: {key} must be a list of strings, got `{list}`")
+            })?;
+            seq.iter()
+                .map(|v| {
+                    v.as_str().map(String::from).with_context(|| {
+                        format!("{scope}: {key} entries must be strings, got `{v}`")
+                    })
+                })
+                .collect::<Result<Vec<String>>>()
+                .map(Some)
+        }
     }
 }
 
@@ -570,6 +634,34 @@ serve:
         )
         .unwrap();
         assert!((c.pipeline[0].params.ratio - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn pack_stage_knobs_parse_and_validate() {
+        let c = SlimConfig::from_str(
+            "model:\n  name: tiny-fixture\n\
+             pipeline:\n\
+             \x20 - pass: pack\n    format: 2bit\n    include: [w_gate, w_up]\n    exclude: [layer1]\n",
+        )
+        .unwrap();
+        assert_eq!(c.pipeline[0].params.format, "2bit");
+        assert_eq!(c.pipeline[0].params.include, vec!["w_gate", "w_up"]);
+        assert_eq!(c.pipeline[0].params.exclude, vec!["layer1"]);
+        // defaults: int4, empty selectors
+        let d = SlimConfig::from_str("model:\n  name: m\npipeline:\n  - pass: pack\n").unwrap();
+        assert_eq!(d.pipeline[0].params.format, "int4");
+        assert!(d.pipeline[0].params.include.is_empty());
+
+        for (bad, why) in [
+            ("  - pass: pack\n    format: int3\n", "unknown format"),
+            ("  - pass: pack\n    format: [int4]\n", "non-string format"),
+            ("  - pass: pack\n    include: wq\n", "scalar include"),
+            ("  - pass: pack\n    include: [4]\n", "non-string include entry"),
+            ("  - pass: pack\n    exclude: ['(bad']\n", "uncompilable pattern"),
+        ] {
+            let r = SlimConfig::from_str(&format!("model:\n  name: m\npipeline:\n{bad}"));
+            assert!(r.is_err(), "{why} must fail loudly");
+        }
     }
 
     #[test]

@@ -21,6 +21,7 @@ impl ModelFactory {
             "tiny-small",
             "tiny-fixture",
             "tiny-fixture-draft",
+            "packed-artifact",
         ]
     }
 
@@ -33,6 +34,12 @@ impl ModelFactory {
             }
             "tiny-fixture-draft" => {
                 return Ok(crate::util::fixtures::fixture_draft(cfg.global.seed))
+            }
+            // serve directly from a compress job's exported packed artifact
+            // (`export-packed` stage output in model.artifacts_dir)
+            "packed-artifact" => {
+                return crate::models::packed_store::load_packed(&cfg.model.artifacts_dir)
+                    .context("loading packed artifact")
             }
             _ => {}
         }
@@ -221,6 +228,32 @@ mod tests {
         let (_, none) = ServeFactory::load_models(&q).unwrap();
         assert!(none.is_none());
         assert_eq!(ServeFactory::serve_cfg(&q), q.serve);
+    }
+
+    #[test]
+    fn packed_artifact_factory_serves_exported_model() {
+        use crate::models::packed_store;
+        use crate::quant::packing::PackFormat;
+        use crate::util::Selector;
+
+        let mut m = crate::util::fixtures::fixture_target(11);
+        m.pack_weights(&Selector::all(), PackFormat::Int4, 16).unwrap();
+        let dir = std::env::temp_dir().join("angelslim_factory_packed_artifact");
+        let _ = std::fs::remove_dir_all(&dir);
+        let dir = dir.to_string_lossy().into_owned();
+        packed_store::save_packed(&m, &dir).unwrap();
+
+        let mut c = cfg("quantization", "int8");
+        c.model.name = "packed-artifact".into();
+        c.model.artifacts_dir = dir.clone();
+        let loaded = ModelFactory::load(&c).unwrap();
+        let toks = [2u8, 7, 12];
+        assert_eq!(loaded.greedy_next(&toks), m.greedy_next(&toks));
+        let _ = std::fs::remove_dir_all(&dir);
+
+        // a missing artifact dir fails loudly, pointing at export-packed
+        let err = ModelFactory::load(&c).unwrap_err();
+        assert!(format!("{err:#}").contains("export-packed"), "{err:#}");
     }
 
     #[test]

@@ -9,6 +9,8 @@
 
 use crate::config::{CompressionCfg, StageCfg};
 use crate::eval;
+use crate::models::packed_store;
+use crate::quant::packing::PackFormat;
 use crate::quant::{
     self, awq::Awq, gptq::Gptq, leptoquant::LeptoQuant, smooth::SmoothQuant, AffineQuantizer,
     Granularity, Seq2Quantizer, Sherry, Tequila, TernaryQuantizer, WeightQuantizer,
@@ -16,7 +18,8 @@ use crate::quant::{
 use crate::sparse_attn::SparseAlgo;
 use crate::tensor::Tensor;
 use crate::token_prune::{audio, visual, Pruner, Reducer};
-use anyhow::{bail, Result};
+use crate::util::Selector;
+use anyhow::{bail, Context, Result};
 
 use super::pass::{save_marker, CompressionPass, PassContext, PassKind, StageOutcome};
 
@@ -257,11 +260,11 @@ impl CompressionPass for GptqPass {
         let mut notes = Vec::new();
         let g = Gptq { group: spec.params.group_size, ..Default::default() };
         let peak = with_calibrated_layers(ctx, spec, &mut notes, &mut |li, xa, xm, model, _| {
-            let wq = g.quantize(&model.layers[li].wq.clone(), xa);
+            let wq = g.quantize(model.layers[li].wq.f32(), xa);
             model.set_layer_weight(li, "wq", wq);
-            let wg = g.quantize(&model.layers[li].w_gate.clone(), xm);
+            let wg = g.quantize(model.layers[li].w_gate.f32(), xm);
             model.set_layer_weight(li, "w_gate", wg);
-            let wu = g.quantize(&model.layers[li].w_up.clone(), xm);
+            let wu = g.quantize(model.layers[li].w_up.f32(), xm);
             model.set_layer_weight(li, "w_up", wu);
         })?;
         ctx.mark_model_mutated();
@@ -309,10 +312,10 @@ impl CompressionPass for AwqPass {
             spec,
             &mut notes,
             &mut |li, _xa, xm, model, notes| {
-                let r = a.quantize(&model.layers[li].w_gate.clone(), xm);
+                let r = a.quantize(model.layers[li].w_gate.f32(), xm);
                 notes.push(format!("layer{li} w_gate awq alpha={}", r.best_alpha));
                 model.set_layer_weight(li, "w_gate", r.weights);
-                let r = a.quantize(&model.layers[li].w_up.clone(), xm);
+                let r = a.quantize(model.layers[li].w_up.f32(), xm);
                 model.set_layer_weight(li, "w_up", r.weights);
             },
         )?;
@@ -362,7 +365,7 @@ impl CompressionPass for LeptoPass {
             &mut notes,
             &mut |li, _xa, xm, model, notes| {
                 let lq = LeptoQuant { alpha_grid: alpha_grid.clone(), ..Default::default() };
-                let res = lq.search(xm, &model.layers[li].w_gate.clone());
+                let res = lq.search(xm, model.layers[li].w_gate.f32());
                 notes.push(format!(
                     "layer{li} lepto alpha={} mse {:.3e} -> {:.3e}",
                     res.best_alpha, res.mse_traditional, res.mse_best
@@ -371,8 +374,8 @@ impl CompressionPass for LeptoPass {
                 // parameter recorded in the notes)
                 for which in ["w_gate", "w_up"] {
                     let mut w = match which {
-                        "w_gate" => model.layers[li].w_gate.clone(),
-                        _ => model.layers[li].w_up.clone(),
+                        "w_gate" => model.layers[li].w_gate.f32().clone(),
+                        _ => model.layers[li].w_up.f32().clone(),
                     };
                     quant::fp8::qdq_slice_scaled(&mut w.data, quant::Fp8Format::E4M3);
                     model.set_layer_weight(li, which, w);
@@ -442,11 +445,20 @@ impl CompressionPass for SmoothPass {
             let model = ctx.model()?;
             for li in 0..model.cfg.n_layers {
                 let l = &mut model.layers[li];
-                let s_attn = sq.shared_scales(&capture.attn_in[li], &[&l.wq, &l.wk, &l.wv]);
-                let attn_max =
-                    Self::fold(&mut l.ln1, &mut [&mut l.wq, &mut l.wk, &mut l.wv], &s_attn);
-                let s_mlp = sq.shared_scales(&capture.mlp_in[li], &[&l.w_gate, &l.w_up]);
-                let mlp_max = Self::fold(&mut l.ln2, &mut [&mut l.w_gate, &mut l.w_up], &s_mlp);
+                let s_attn = sq
+                    .shared_scales(&capture.attn_in[li], &[l.wq.f32(), l.wk.f32(), l.wv.f32()]);
+                let attn_max = Self::fold(
+                    &mut l.ln1,
+                    &mut [l.wq.f32_mut(), l.wk.f32_mut(), l.wv.f32_mut()],
+                    &s_attn,
+                );
+                let s_mlp =
+                    sq.shared_scales(&capture.mlp_in[li], &[l.w_gate.f32(), l.w_up.f32()]);
+                let mlp_max = Self::fold(
+                    &mut l.ln2,
+                    &mut [l.w_gate.f32_mut(), l.w_up.f32_mut()],
+                    &s_mlp,
+                );
                 notes.push(format!(
                     "layer{li} smooth alpha={alpha} s_max attn={attn_max:.3} mlp={mlp_max:.3}"
                 ));
@@ -461,6 +473,145 @@ impl CompressionPass for SmoothPass {
             metric_after: after,
             compression: 32.0, // migration only — no storage change
             notes,
+            peak_calib_bytes: 0,
+        })
+    }
+}
+
+/// The quantized execution bridge: quantize + pack selected layers into a
+/// `PackedLinear` storage format, so the decode hot path runs the packed
+/// LUT GEMV kernels instead of dequantized f32. Layer selection is the
+/// DynamicDiT-style include/exclude pattern API (substrings or regexes,
+/// auto-detected); repeated `pack` stages with disjoint selectors give
+/// per-layer mixed precision.
+struct PackPass;
+
+impl PackPass {
+    fn resolve(spec: &StageCfg) -> Result<(PackFormat, Selector)> {
+        let p = &spec.params;
+        let fmt = PackFormat::parse(&p.format).with_context(|| {
+            format!("pass `pack`: unknown format `{}`", p.format)
+        })?;
+        if !matches!(
+            fmt,
+            PackFormat::Int4 | PackFormat::TwoBit | PackFormat::Ternary167 | PackFormat::Sherry125
+        ) {
+            bail!(
+                "pass `pack`: format `{}` has no packed execution kernel \
+                 (use int4, 2bit, ternary167, or sherry125)",
+                p.format
+            );
+        }
+        let sel = Selector::new(&p.include, &p.exclude)
+            .context("pass `pack`: bad include/exclude pattern")?;
+        Ok((fmt, sel))
+    }
+}
+
+impl CompressionPass for PackPass {
+    fn name(&self) -> &'static str {
+        "pack"
+    }
+    fn kind(&self) -> PassKind {
+        PassKind::Quantization
+    }
+    fn describe(&self) -> &'static str {
+        "quantize + pack selected layers for packed-kernel serving (format/include/exclude wired)"
+    }
+
+    fn prepare(&self, ctx: &mut PassContext, spec: &StageCfg) -> Result<()> {
+        let (fmt, _) = Self::resolve(spec)?;
+        let cfg = ctx.model()?.cfg;
+        match fmt {
+            PackFormat::Int4 => {
+                let g = spec.params.group_size;
+                if g == 0 || g % 2 != 0 || cfg.d_model % g != 0 || cfg.d_ff % g != 0 {
+                    bail!(
+                        "pass `pack`: int4 group_size {g} must be even and divide both \
+                         d_model {} and d_ff {}",
+                        cfg.d_model,
+                        cfg.d_ff
+                    );
+                }
+            }
+            PackFormat::TwoBit | PackFormat::Sherry125 => {
+                if cfg.d_model % 4 != 0 || cfg.d_ff % 4 != 0 {
+                    bail!(
+                        "pass `pack`: format `{}` needs weight dims divisible by 4 \
+                         (model has d_model={} d_ff={})",
+                        fmt.name(),
+                        cfg.d_model,
+                        cfg.d_ff
+                    );
+                }
+            }
+            _ => {}
+        }
+        Ok(())
+    }
+
+    fn apply(&self, ctx: &mut PassContext, spec: &StageCfg) -> Result<StageOutcome> {
+        let before = ctx.nll()?;
+        ctx.note_baseline(before);
+        let (fmt, sel) = Self::resolve(spec)?;
+        let (packed, total, bits) = {
+            let model = ctx.model()?;
+            let packed = model.pack_weights(&sel, fmt, spec.params.group_size)?;
+            if packed == 0 {
+                bail!("pass `pack`: include/exclude selected no weights");
+            }
+            // effective stored bits over ALL linears (unselected layers
+            // stay f32 and are charged honestly)
+            let bits =
+                model.stored_weight_bytes() as f64 * 8.0 / model.linear_params() as f64;
+            (packed, model.named_weights().len(), bits)
+        };
+        ctx.mark_model_mutated();
+        let after = ctx.nll()?;
+        let mut notes =
+            vec![format!("packed {packed}/{total} linear weights as {}", fmt.name())];
+        save_marker(&ctx.cfg, self.name(), &mut notes)?;
+        Ok(StageOutcome {
+            metric_before: before,
+            metric_after: after,
+            compression: bits,
+            notes,
+            peak_calib_bytes: 0,
+        })
+    }
+}
+
+/// Pipeline-level artifact export: serialize the current (possibly packed)
+/// model under `global.save_path` so `angelslim serve` can load exactly
+/// what `angelslim compress` produced. Registered under the eval family —
+/// exporting never changes the stored-size accounting of the pipeline.
+struct ExportPackedPass;
+
+impl CompressionPass for ExportPackedPass {
+    fn name(&self) -> &'static str {
+        "export-packed"
+    }
+    fn kind(&self) -> PassKind {
+        PassKind::Eval
+    }
+    fn describe(&self) -> &'static str {
+        "serialize the packed model as a serve-loadable artifact under save_path"
+    }
+
+    fn apply(&self, ctx: &mut PassContext, _spec: &StageCfg) -> Result<StageOutcome> {
+        let nll = ctx.nll()?;
+        ctx.note_baseline(nll);
+        let dir = ctx.cfg.global.save_path.clone();
+        let model = ctx.model()?;
+        let bytes = packed_store::save_packed(model, &dir)?;
+        let stored = model.stored_weight_bytes();
+        Ok(StageOutcome {
+            metric_before: ctx.baseline_nll.unwrap_or(nll),
+            metric_after: nll,
+            compression: 1.0,
+            notes: vec![format!(
+                "packed artifact: {bytes} bytes to {dir} ({stored} linear-weight bytes)"
+            )],
             peak_calib_bytes: 0,
         })
     }
@@ -770,6 +921,7 @@ static REGISTRY: &[&(dyn CompressionPass + Sync)] = &[
         caveat: "",
         make: mk_w4a8,
     },
+    &PackPass,
     // spec_decode (dispatches to the serving engine, not the compress loop)
     &SpecDecodePass { name: "eagle3", describe: "Eagle3-style aligned-draft speculative serving" },
     &SpecDecodePass { name: "vanilla", describe: "vanilla draft/target speculative serving" },
@@ -875,8 +1027,9 @@ static REGISTRY: &[&(dyn CompressionPass + Sync)] = &[
         describe: "CDPruner conditional-diversity pruning (WER)",
         make: mk_cdpruner,
     },
-    // eval checkpoint
+    // eval checkpoint + artifact export
     &EvalPass,
+    &ExportPackedPass,
 ];
 
 #[cfg(test)]

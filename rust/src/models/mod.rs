@@ -5,11 +5,14 @@
 //! hot path.
 
 pub mod kv_cache;
+pub mod packed;
+pub mod packed_store;
 pub mod sampler;
 pub mod transformer;
 pub mod weights;
 
 pub use kv_cache::{KvCache, LayerKv};
+pub use packed::PackedLinear;
 pub use sampler::Sampler;
 pub use transformer::{AttnOverride, Transformer, TransformerCfg};
 pub use weights::WeightStore;

@@ -1,0 +1,309 @@
+//! `PackedLinear` — the quantized execution bridge between compression and
+//! serving. A `Transformer` holds one `PackedLinear` per weight matrix; f32
+//! models keep dense tensors while compressed models store the packed codec
+//! (`rust/src/quant/packing.rs`) and route the decode hot path through the
+//! LUT GEMV kernels, reading 4–26x fewer weight bytes per token.
+//!
+//! Correctness contract: `matmul` (prefill, t>1) is **bit-identical** to
+//! `matmul_transb(x, &self.dequantize())` — the fused path dequantizes each
+//! weight row with the quantizer's exact `dequantize_codes` arithmetic and
+//! preserves `matmul_transb`'s accumulation order. `matvec` (decode, t=1)
+//! uses the fast LUT kernels, which reassociate the dot product; it matches
+//! the dequantized model to float tolerance, and end-to-end greedy decode on
+//! the fixtures is token-identical (logit margins dwarf the kernel deltas).
+
+use crate::quant::packing::{
+    PackFormat, Packed2Bit, PackedInt4, PackedSherry, PackedTernary167,
+};
+use crate::quant::{AffineQuantizer, Granularity, Sherry, TernaryQuantizer};
+use crate::tensor::ops::{matmul_transb, matmul_transb_rows, matvec_transb};
+use crate::tensor::Tensor;
+use anyhow::{bail, Result};
+
+/// One linear weight matrix, either dense f32 or in a packed storage format.
+#[derive(Clone, Debug)]
+pub enum PackedLinear {
+    F32(Tensor),
+    Int4(PackedInt4),
+    TwoBit(Packed2Bit),
+    Ternary167(PackedTernary167),
+    Sherry125(PackedSherry),
+}
+
+impl From<Tensor> for PackedLinear {
+    fn from(t: Tensor) -> Self {
+        PackedLinear::F32(t)
+    }
+}
+
+impl PackedLinear {
+    /// Quantize + pack a dense weight into `fmt` storage. `group` is the
+    /// int4 group size (ignored by other formats). Shape constraints are
+    /// reported as errors here rather than asserts so pipeline stages can
+    /// surface them with layer context.
+    pub fn from_tensor(w: &Tensor, fmt: PackFormat, group: usize) -> Result<PackedLinear> {
+        let (n, k) = (w.rows(), w.cols());
+        Ok(match fmt {
+            PackFormat::F32 => PackedLinear::F32(w.clone()),
+            PackFormat::F16 => bail!("f16 is accounting-only; it has no packed execution kernel"),
+            PackFormat::Int4 => {
+                if group == 0 || group % 2 != 0 {
+                    bail!("int4 group {group} must be even and non-zero");
+                }
+                if k % group != 0 {
+                    bail!("cols {k} not divisible by int4 group {group}");
+                }
+                let q = AffineQuantizer::new(4, Granularity::Group(group));
+                let (codes, scales) = q.quantize_codes(&w.data, n, k);
+                PackedLinear::Int4(PackedInt4::from_codes(&codes, &scales, n, k, group))
+            }
+            PackFormat::TwoBit => {
+                if k % 4 != 0 {
+                    bail!("cols {k} not divisible by 4 (2-bit packs 4 codes per byte)");
+                }
+                let (codes, alphas) = TernaryQuantizer::default().quantize_codes(&w.data, n, k);
+                PackedLinear::TwoBit(Packed2Bit::from_codes(&codes, &alphas, n, k))
+            }
+            PackFormat::Ternary167 => {
+                let (codes, alphas) = TernaryQuantizer::default().quantize_codes(&w.data, n, k);
+                PackedLinear::Ternary167(PackedTernary167::from_codes(&codes, &alphas, n, k))
+            }
+            PackFormat::Sherry125 => {
+                if k % 4 != 0 {
+                    bail!("cols {k} not divisible by 4 (sherry packs 4-weight blocks)");
+                }
+                let (codes, alphas) = Sherry::quantize_codes(&w.data, n, k);
+                PackedLinear::Sherry125(PackedSherry::from_codes(&codes, &alphas, n, k))
+            }
+        })
+    }
+
+    pub fn rows(&self) -> usize {
+        match self {
+            PackedLinear::F32(t) => t.rows(),
+            PackedLinear::Int4(p) => p.n,
+            PackedLinear::TwoBit(p) => p.n,
+            PackedLinear::Ternary167(p) => p.n,
+            PackedLinear::Sherry125(p) => p.n,
+        }
+    }
+
+    pub fn cols(&self) -> usize {
+        match self {
+            PackedLinear::F32(t) => t.cols(),
+            PackedLinear::Int4(p) => p.k,
+            PackedLinear::TwoBit(p) => p.k,
+            PackedLinear::Ternary167(p) => p.k,
+            PackedLinear::Sherry125(p) => p.k,
+        }
+    }
+
+    pub fn dims(&self) -> [usize; 2] {
+        [self.rows(), self.cols()]
+    }
+
+    pub fn numel(&self) -> usize {
+        self.rows() * self.cols()
+    }
+
+    pub fn format(&self) -> PackFormat {
+        match self {
+            PackedLinear::F32(_) => PackFormat::F32,
+            PackedLinear::Int4(_) => PackFormat::Int4,
+            PackedLinear::TwoBit(_) => PackFormat::TwoBit,
+            PackedLinear::Ternary167(_) => PackFormat::Ternary167,
+            PackedLinear::Sherry125(_) => PackFormat::Sherry125,
+        }
+    }
+
+    pub fn is_packed(&self) -> bool {
+        !matches!(self, PackedLinear::F32(_))
+    }
+
+    /// Bytes this weight actually occupies in memory / on disk (packed
+    /// payload plus per-row or per-group float metadata).
+    pub fn stored_bytes(&self) -> usize {
+        match self {
+            PackedLinear::F32(t) => t.numel() * 4,
+            PackedLinear::Int4(p) => p.bytes.len() + p.scales.len() * 4,
+            PackedLinear::TwoBit(p) => p.bytes.len() + p.alphas.len() * 4,
+            PackedLinear::Ternary167(p) => p.bytes.len() + p.alphas.len() * 4,
+            PackedLinear::Sherry125(p) => p.bytes.len() + p.alphas.len() * 4,
+        }
+    }
+
+    /// Dense-f32 view; panics loudly on packed weights so callers that
+    /// genuinely need mutable f32 data (QDQ passes, flat_weights snapshots)
+    /// fail with a clear message instead of silently reading garbage.
+    pub fn f32(&self) -> &Tensor {
+        match self {
+            PackedLinear::F32(t) => t,
+            other => panic!(
+                "weight is {}-packed; call dequantize() instead of f32()",
+                other.format().name()
+            ),
+        }
+    }
+
+    pub fn f32_mut(&mut self) -> &mut Tensor {
+        match self {
+            PackedLinear::F32(t) => t,
+            other => panic!(
+                "weight is {}-packed; packed weights cannot be mutated as f32",
+                other.format().name()
+            ),
+        }
+    }
+
+    /// Dequantize row `j` into `out`, bit-identical to the quantizer's
+    /// `dequantize_codes` for that row (f32 weights just copy).
+    pub fn dequant_row(&self, j: usize, out: &mut [f32]) {
+        match self {
+            PackedLinear::F32(t) => out.copy_from_slice(t.row(j)),
+            PackedLinear::Int4(p) => p.dequant_row(j, out),
+            PackedLinear::TwoBit(p) => p.dequant_row(j, out),
+            PackedLinear::Ternary167(p) => p.dequant_row(j, out),
+            PackedLinear::Sherry125(p) => p.dequant_row(j, out),
+        }
+    }
+
+    /// The exact f32 image the packed kernels compute with.
+    pub fn dequantize(&self) -> Tensor {
+        match self {
+            PackedLinear::F32(t) => t.clone(),
+            _ => {
+                let (n, k) = (self.rows(), self.cols());
+                let mut t = Tensor::zeros(&[n, k]);
+                for j in 0..n {
+                    self.dequant_row(j, t.row_mut(j));
+                }
+                t
+            }
+        }
+    }
+
+    /// Decode hot path: y = W x for a single token. Packed formats with a
+    /// half-byte LUT kernel (2-bit, int4) use it; `scratch` holds the LUT
+    /// tables and is reused across calls to avoid per-token allocation.
+    pub fn matvec(&self, x: &[f32], scratch: &mut Vec<f32>) -> Vec<f32> {
+        match self {
+            PackedLinear::F32(t) => matvec_transb(x, t),
+            PackedLinear::Int4(p) => {
+                let mut y = vec![0.0; p.n];
+                p.gemv_fast(x, &mut y, scratch);
+                y
+            }
+            PackedLinear::TwoBit(p) => {
+                let mut y = vec![0.0; p.n];
+                p.gemv_fast(x, &mut y, scratch);
+                y
+            }
+            PackedLinear::Ternary167(p) => {
+                let mut y = vec![0.0; p.n];
+                p.gemv(x, &mut y);
+                y
+            }
+            PackedLinear::Sherry125(p) => {
+                let mut y = vec![0.0; p.n];
+                p.gemv(x, &mut y);
+                y
+            }
+        }
+    }
+
+    /// Prefill path: x `[m,k]` times W^T, fused per-row dequant for packed
+    /// formats. Bit-identical to `matmul_transb(x, &self.dequantize())`.
+    pub fn matmul(&self, x: &Tensor) -> Tensor {
+        match self {
+            PackedLinear::F32(t) => matmul_transb(x, t),
+            packed => matmul_transb_rows(x, packed.rows(), packed.cols(), |j, buf| {
+                packed.dequant_row(j, buf)
+            }),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::testing::assert_allclose;
+    use crate::util::Rng;
+
+    fn weight(n: usize, k: usize, seed: u64) -> Tensor {
+        let mut rng = Rng::new(seed);
+        Tensor::randn(&[n, k], 0.3, &mut rng)
+    }
+
+    const FORMATS: [PackFormat; 4] = [
+        PackFormat::Int4,
+        PackFormat::TwoBit,
+        PackFormat::Ternary167,
+        PackFormat::Sherry125,
+    ];
+
+    #[test]
+    fn matmul_bit_identical_to_dequantized_dense() {
+        let w = weight(24, 32, 7);
+        let mut rng = Rng::new(11);
+        let x = Tensor::randn(&[6, 32], 1.0, &mut rng);
+        for fmt in FORMATS {
+            let p = PackedLinear::from_tensor(&w, fmt, 16).unwrap();
+            let fused = p.matmul(&x);
+            let dense = matmul_transb(&x, &p.dequantize());
+            assert_eq!(fused.data, dense.data, "{} fused prefill drifted", fmt.name());
+        }
+    }
+
+    #[test]
+    fn matvec_matches_dequantized_dense() {
+        let w = weight(24, 32, 3);
+        let mut rng = Rng::new(13);
+        let x = Tensor::randn(&[1, 32], 1.0, &mut rng);
+        let mut scratch = Vec::new();
+        for fmt in FORMATS {
+            let p = PackedLinear::from_tensor(&w, fmt, 16).unwrap();
+            let fast = p.matvec(&x.data, &mut scratch);
+            let dense = matvec_transb(&x.data, &p.dequantize());
+            assert_allclose(&fast, &dense, 1e-5, 1e-5);
+        }
+    }
+
+    #[test]
+    fn packed_formats_shrink_storage() {
+        let w = weight(64, 64, 5);
+        let f32_bytes = PackedLinear::from(w.clone()).stored_bytes();
+        assert_eq!(f32_bytes, 64 * 64 * 4);
+        for fmt in FORMATS {
+            let p = PackedLinear::from_tensor(&w, fmt, 32).unwrap();
+            assert!(p.is_packed());
+            assert_eq!(p.format(), fmt);
+            assert_eq!(p.dims(), [64, 64]);
+            assert!(
+                p.stored_bytes() * 4 < f32_bytes,
+                "{} stored {} bytes, expected > 4x shrink vs {f32_bytes}",
+                fmt.name(),
+                p.stored_bytes()
+            );
+        }
+    }
+
+    #[test]
+    fn from_tensor_rejects_bad_shapes() {
+        let w = weight(4, 10, 9); // k=10: not divisible by 4, not by group 16
+        assert!(PackedLinear::from_tensor(&w, PackFormat::TwoBit, 0).is_err());
+        assert!(PackedLinear::from_tensor(&w, PackFormat::Sherry125, 0).is_err());
+        assert!(PackedLinear::from_tensor(&w, PackFormat::Int4, 16).is_err());
+        assert!(PackedLinear::from_tensor(&w, PackFormat::Int4, 3).is_err(), "odd group");
+        assert!(PackedLinear::from_tensor(&w, PackFormat::F16, 0).is_err());
+        // ternary 1.67 pads rows, so any k works
+        assert!(PackedLinear::from_tensor(&w, PackFormat::Ternary167, 0).is_ok());
+    }
+
+    #[test]
+    #[should_panic(expected = "packed")]
+    fn f32_accessor_panics_on_packed() {
+        let w = weight(8, 16, 1);
+        let p = PackedLinear::from_tensor(&w, PackFormat::TwoBit, 0).unwrap();
+        let _ = p.f32();
+    }
+}

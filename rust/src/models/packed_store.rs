@@ -1,0 +1,413 @@
+//! On-disk packed-model artifact: the contract between `angelslim
+//! compress` (the `export-packed` pipeline stage) and `angelslim serve`
+//! (the `packed-artifact` model factory). Two files per artifact dir:
+//!
+//! - `packed_meta.json` — model shape plus one `{name, format, n, k,
+//!   group}` entry per linear weight, in [`Transformer::named_weights`]
+//!   order.
+//! - `packed_weights.bin` — length-prefixed sections (u64 LE count, then
+//!   payload): embed, pos, ln_f, per-layer ln1+ln2, then each weight's
+//!   sections in meta order. f32 sections store LE floats; packed weights
+//!   store their per-row scale/alpha floats first, then the raw code
+//!   bytes exactly as the in-memory packed structs hold them.
+//!
+//! The round trip is bit-exact: loading rebuilds the packed structs from
+//! the stored bytes verbatim (no re-quantization), so a served packed
+//! artifact produces the same tokens as the model that exported it.
+
+use crate::config::Json;
+use crate::quant::packing::{
+    PackFormat, Packed2Bit, PackedInt4, PackedSherry, PackedTernary167,
+};
+use crate::tensor::Tensor;
+use anyhow::{bail, Context, Result};
+
+use super::packed::PackedLinear;
+use super::transformer::Layer;
+use super::{Transformer, TransformerCfg};
+
+/// Artifact file names — shared with the serve path and CI so the
+/// compress→serve handoff never drifts.
+pub const META_FILE: &str = "packed_meta.json";
+pub const WEIGHTS_FILE: &str = "packed_weights.bin";
+
+fn push_f32s(buf: &mut Vec<u8>, vals: &[f32]) {
+    buf.extend_from_slice(&(vals.len() as u64).to_le_bytes());
+    for v in vals {
+        buf.extend_from_slice(&v.to_le_bytes());
+    }
+}
+
+fn push_bytes(buf: &mut Vec<u8>, vals: &[u8]) {
+    buf.extend_from_slice(&(vals.len() as u64).to_le_bytes());
+    buf.extend_from_slice(vals);
+}
+
+fn push_weight(buf: &mut Vec<u8>, w: &PackedLinear) {
+    match w {
+        PackedLinear::F32(t) => push_f32s(buf, &t.data),
+        PackedLinear::Int4(p) => {
+            push_f32s(buf, &p.scales);
+            push_bytes(buf, &p.bytes);
+        }
+        PackedLinear::TwoBit(p) => {
+            push_f32s(buf, &p.alphas);
+            push_bytes(buf, &p.bytes);
+        }
+        PackedLinear::Ternary167(p) => {
+            push_f32s(buf, &p.alphas);
+            push_bytes(buf, &p.bytes);
+        }
+        PackedLinear::Sherry125(p) => {
+            push_f32s(buf, &p.alphas);
+            push_bytes(buf, &p.bytes);
+        }
+    }
+}
+
+struct Reader<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Reader<'a> {
+    fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+        if self.pos + n > self.buf.len() {
+            bail!(
+                "packed weights truncated: need {n} bytes at offset {}, file has {}",
+                self.pos,
+                self.buf.len()
+            );
+        }
+        let s = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    fn read_len(&mut self) -> Result<usize> {
+        let b = self.take(8)?;
+        Ok(u64::from_le_bytes(b.try_into().unwrap()) as usize)
+    }
+
+    fn read_f32s(&mut self, expect: usize) -> Result<Vec<f32>> {
+        let n = self.read_len()?;
+        if n != expect {
+            bail!("packed weights: section holds {n} f32s, expected {expect}");
+        }
+        let raw = self.take(n * 4)?;
+        Ok(raw
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+            .collect())
+    }
+
+    fn read_bytes(&mut self, expect: usize) -> Result<Vec<u8>> {
+        let n = self.read_len()?;
+        if n != expect {
+            bail!("packed weights: section holds {n} bytes, expected {expect}");
+        }
+        Ok(self.take(n)?.to_vec())
+    }
+}
+
+/// Serialize a (possibly packed) model into `dir`. Returns the total
+/// bytes written across both artifact files.
+pub fn save_packed(model: &Transformer, dir: &str) -> Result<usize> {
+    std::fs::create_dir_all(dir).with_context(|| format!("creating artifact dir {dir}"))?;
+    let cfg = model.cfg;
+
+    let mut buf = Vec::new();
+    push_f32s(&mut buf, &model.embed.data);
+    push_f32s(&mut buf, &model.pos.data);
+    push_f32s(&mut buf, &model.ln_f);
+    for l in &model.layers {
+        push_f32s(&mut buf, &l.ln1);
+        push_f32s(&mut buf, &l.ln2);
+    }
+
+    let mut entries = Vec::new();
+    for (name, w) in model.named_weights() {
+        let group = match w {
+            PackedLinear::Int4(p) => p.group,
+            _ => 0,
+        };
+        let [n, k] = w.dims();
+        entries.push(format!(
+            "{{\"name\":\"{name}\",\"format\":\"{}\",\"n\":{n},\"k\":{k},\"group\":{group}}}",
+            w.format().name()
+        ));
+        push_weight(&mut buf, w);
+    }
+
+    let meta = format!(
+        "{{\"kind\":\"packed-model\",\"cfg\":{{\"vocab\":{},\"d_model\":{},\"n_layers\":{},\"n_heads\":{},\"d_ff\":{},\"max_t\":{}}},\"weights\":[{}]}}",
+        cfg.vocab,
+        cfg.d_model,
+        cfg.n_layers,
+        cfg.n_heads,
+        cfg.d_ff,
+        cfg.max_t,
+        entries.join(",")
+    );
+
+    let meta_path = format!("{dir}/{META_FILE}");
+    let bin_path = format!("{dir}/{WEIGHTS_FILE}");
+    std::fs::write(&meta_path, meta.as_bytes()).with_context(|| format!("writing {meta_path}"))?;
+    std::fs::write(&bin_path, &buf).with_context(|| format!("writing {bin_path}"))?;
+    Ok(meta.len() + buf.len())
+}
+
+/// Byte length of a weight's packed code payload — must agree with the
+/// `from_codes` packers in `quant::packing` or loads reject the file.
+fn payload_bytes(fmt: PackFormat, n: usize, k: usize) -> usize {
+    match fmt {
+        PackFormat::Int4 => n * k / 2,
+        PackFormat::TwoBit => n * k / 4,
+        PackFormat::Ternary167 => (n * k.div_ceil(3) * 5).div_ceil(8),
+        PackFormat::Sherry125 => (n * (k / 4) * 5).div_ceil(8),
+        PackFormat::F32 | PackFormat::F16 => 0,
+    }
+}
+
+fn read_weight(
+    r: &mut Reader,
+    fmt: PackFormat,
+    n: usize,
+    k: usize,
+    group: usize,
+) -> Result<PackedLinear> {
+    Ok(match fmt {
+        PackFormat::F32 => PackedLinear::F32(Tensor::from_vec(&[n, k], r.read_f32s(n * k)?)),
+        PackFormat::F16 => bail!("f16 is accounting-only and never serialized"),
+        PackFormat::Int4 => {
+            if group == 0 || group % 2 != 0 || k % group != 0 {
+                bail!("int4 weight needs an even group dividing k={k}, meta says {group}");
+            }
+            let scales = r.read_f32s(n * (k / group))?;
+            let bytes = r.read_bytes(payload_bytes(fmt, n, k))?;
+            PackedLinear::Int4(PackedInt4 { n, k, group, bytes, scales })
+        }
+        PackFormat::TwoBit => {
+            if k % 4 != 0 {
+                bail!("2bit weight needs k divisible by 4, meta says k={k}");
+            }
+            let alphas = r.read_f32s(n)?;
+            let bytes = r.read_bytes(payload_bytes(fmt, n, k))?;
+            PackedLinear::TwoBit(Packed2Bit { n, k, bytes, alphas })
+        }
+        PackFormat::Ternary167 => {
+            let alphas = r.read_f32s(n)?;
+            let bytes = r.read_bytes(payload_bytes(fmt, n, k))?;
+            PackedLinear::Ternary167(PackedTernary167 { n, k, bytes, alphas })
+        }
+        PackFormat::Sherry125 => {
+            if k % 4 != 0 {
+                bail!("sherry weight needs k divisible by 4, meta says k={k}");
+            }
+            let alphas = r.read_f32s(n)?;
+            let bytes = r.read_bytes(payload_bytes(fmt, n, k))?;
+            PackedLinear::Sherry125(PackedSherry { n, k, bytes, alphas })
+        }
+    })
+}
+
+/// Load a packed artifact back into a servable [`Transformer`],
+/// bit-exactly reproducing the model [`save_packed`] was given.
+pub fn load_packed(dir: &str) -> Result<Transformer> {
+    let meta_path = format!("{dir}/{META_FILE}");
+    let src = std::fs::read_to_string(&meta_path).with_context(|| {
+        format!("reading {meta_path} — run a pipeline with an `export-packed` stage first")
+    })?;
+    let meta = Json::parse(&src).with_context(|| format!("parsing {meta_path}"))?;
+    match meta.get("kind").and_then(Json::as_str) {
+        Some("packed-model") => {}
+        other => bail!("{meta_path}: kind is {other:?}, expected \"packed-model\""),
+    }
+
+    let cfgj = meta.get("cfg").with_context(|| format!("{meta_path}: missing cfg"))?;
+    let dim = |key: &str| -> Result<usize> {
+        cfgj.get(key)
+            .and_then(Json::as_usize)
+            .with_context(|| format!("{meta_path}: cfg.{key} missing or not a count"))
+    };
+    let cfg = TransformerCfg {
+        vocab: dim("vocab")?,
+        d_model: dim("d_model")?,
+        n_layers: dim("n_layers")?,
+        n_heads: dim("n_heads")?,
+        d_ff: dim("d_ff")?,
+        max_t: dim("max_t")?,
+    };
+
+    let bin_path = format!("{dir}/{WEIGHTS_FILE}");
+    let raw = std::fs::read(&bin_path).with_context(|| format!("reading {bin_path}"))?;
+    let mut r = Reader { buf: &raw, pos: 0 };
+    let d = cfg.d_model;
+    let embed = Tensor::from_vec(&[cfg.vocab, d], r.read_f32s(cfg.vocab * d)?);
+    let pos = Tensor::from_vec(&[cfg.max_t, d], r.read_f32s(cfg.max_t * d)?);
+    let ln_f = r.read_f32s(d)?;
+    let mut norms = Vec::with_capacity(cfg.n_layers);
+    for _ in 0..cfg.n_layers {
+        let ln1 = r.read_f32s(d)?;
+        let ln2 = r.read_f32s(d)?;
+        norms.push((ln1, ln2));
+    }
+
+    let entries = meta
+        .get("weights")
+        .and_then(Json::as_arr)
+        .with_context(|| format!("{meta_path}: missing weights array"))?;
+    let expected = cfg.n_layers * 7 + 1;
+    if entries.len() != expected {
+        bail!(
+            "{meta_path}: lists {} weights, a {}-layer model has {expected}",
+            entries.len(),
+            cfg.n_layers
+        );
+    }
+
+    // expected shapes in named_weights order, to cross-check the meta
+    let mut shapes = Vec::with_capacity(expected);
+    for i in 0..cfg.n_layers {
+        for w in ["wq", "wk", "wv", "wo"] {
+            shapes.push((format!("layer{i}.{w}"), d, d));
+        }
+        shapes.push((format!("layer{i}.w_gate"), cfg.d_ff, d));
+        shapes.push((format!("layer{i}.w_up"), cfg.d_ff, d));
+        shapes.push((format!("layer{i}.w_down"), d, cfg.d_ff));
+    }
+    shapes.push(("head".to_string(), cfg.vocab, d));
+
+    let mut linears = Vec::with_capacity(expected);
+    for (entry, (want_name, want_n, want_k)) in entries.iter().zip(&shapes) {
+        let name = entry
+            .get("name")
+            .and_then(Json::as_str)
+            .with_context(|| format!("{meta_path}: weight entry missing name"))?;
+        if name != want_name.as_str() {
+            bail!("{meta_path}: weight `{name}` out of order, expected `{want_name}`");
+        }
+        let field = |key: &str| -> Result<usize> {
+            entry
+                .get(key)
+                .and_then(Json::as_usize)
+                .with_context(|| format!("{meta_path}: weight `{name}`: bad {key}"))
+        };
+        let (n, k, group) = (field("n")?, field("k")?, field("group")?);
+        if n != *want_n || k != *want_k {
+            bail!("{meta_path}: weight `{name}` is [{n}, {k}], cfg implies [{want_n}, {want_k}]");
+        }
+        let fmt_s = entry
+            .get("format")
+            .and_then(Json::as_str)
+            .with_context(|| format!("{meta_path}: weight `{name}`: missing format"))?;
+        let fmt = PackFormat::parse(fmt_s)
+            .with_context(|| format!("{meta_path}: weight `{name}`: unknown format `{fmt_s}`"))?;
+        let w = read_weight(&mut r, fmt, n, k, group)
+            .with_context(|| format!("{bin_path}: weight `{name}`"))?;
+        linears.push(w);
+    }
+    if r.pos != raw.len() {
+        bail!("{bin_path}: {} trailing bytes after last weight", raw.len() - r.pos);
+    }
+
+    let mut it = linears.into_iter();
+    let mut layers = Vec::with_capacity(cfg.n_layers);
+    for (ln1, ln2) in norms {
+        layers.push(Layer {
+            ln1,
+            wq: it.next().unwrap(),
+            wk: it.next().unwrap(),
+            wv: it.next().unwrap(),
+            wo: it.next().unwrap(),
+            ln2,
+            w_gate: it.next().unwrap(),
+            w_up: it.next().unwrap(),
+            w_down: it.next().unwrap(),
+        });
+    }
+    let head = it.next().unwrap();
+    Ok(Transformer { cfg, embed, pos, layers, ln_f, head })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::models::AttnOverride;
+    use crate::util::fixtures::fixture_target;
+    use crate::util::Selector;
+
+    fn tmp_dir(tag: &str) -> String {
+        let dir = std::env::temp_dir().join(format!("angelslim_packed_store_{tag}"));
+        let _ = std::fs::remove_dir_all(&dir);
+        dir.to_string_lossy().into_owned()
+    }
+
+    #[test]
+    fn roundtrip_is_bit_exact_for_mixed_formats() {
+        let mut m = fixture_target(7);
+        // mixed precision: 2bit MLP gates, int4 attention, f32 the rest
+        let sel = Selector::new(&["w_gate".into(), "w_up".into()], &[]).unwrap();
+        assert!(m.pack_weights(&sel, PackFormat::TwoBit, 0).unwrap() > 0);
+        let sel = Selector::new(&["wq".into(), "wv".into()], &[]).unwrap();
+        assert!(m.pack_weights(&sel, PackFormat::Int4, 16).unwrap() > 0);
+
+        let dir = tmp_dir("roundtrip");
+        let bytes = save_packed(&m, &dir).unwrap();
+        assert!(bytes > 0);
+        let loaded = load_packed(&dir).unwrap();
+
+        assert_eq!(loaded.cfg, m.cfg);
+        assert_eq!(loaded.embed.data, m.embed.data);
+        for (a, b) in m.named_weights().iter().zip(loaded.named_weights().iter()) {
+            assert_eq!(a.0, b.0);
+            assert_eq!(a.1.format(), b.1.format(), "{}", a.0);
+            assert_eq!(a.1.stored_bytes(), b.1.stored_bytes(), "{}", a.0);
+        }
+        let toks = [3u8, 8, 13, 18];
+        let la = m.forward(&toks, &AttnOverride::None);
+        let lb = loaded.forward(&toks, &AttnOverride::None);
+        assert_eq!(la.data, lb.data, "loaded artifact must forward bit-identically");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn roundtrip_covers_every_pack_format() {
+        for fmt in [
+            PackFormat::Int4,
+            PackFormat::TwoBit,
+            PackFormat::Ternary167,
+            PackFormat::Sherry125,
+        ] {
+            let mut m = fixture_target(3);
+            m.pack_weights(&Selector::all(), fmt, 16).unwrap();
+            let dir = tmp_dir(fmt.name());
+            save_packed(&m, &dir).unwrap();
+            let loaded = load_packed(&dir).unwrap();
+            let la = m.forward(&[5u8, 10, 15], &AttnOverride::None);
+            let lb = loaded.forward(&[5u8, 10, 15], &AttnOverride::None);
+            assert_eq!(la.data, lb.data, "{} artifact drifted", fmt.name());
+            let _ = std::fs::remove_dir_all(&dir);
+        }
+    }
+
+    #[test]
+    fn load_rejects_missing_artifact() {
+        let err = load_packed("/nonexistent/packed/dir").unwrap_err();
+        assert!(err.to_string().contains("export-packed"), "{err}");
+    }
+
+    #[test]
+    fn load_rejects_corrupt_payload() {
+        let mut m = fixture_target(4);
+        m.pack_weights(&Selector::all(), PackFormat::TwoBit, 0).unwrap();
+        let dir = tmp_dir("corrupt");
+        save_packed(&m, &dir).unwrap();
+        let bin = format!("{dir}/{WEIGHTS_FILE}");
+        let mut raw = std::fs::read(&bin).unwrap();
+        raw.truncate(raw.len() - 9);
+        std::fs::write(&bin, &raw).unwrap();
+        assert!(load_packed(&dir).is_err());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

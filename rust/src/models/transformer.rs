@@ -16,14 +16,15 @@
 //! (asserted by tests/test_kv_cache.rs), but T tokens of generation cost
 //! O(T²) total instead of O(T³).
 
+use crate::quant::packing::PackFormat;
 use crate::quant::WeightQuantizer;
-use crate::tensor::ops::{
-    add_inplace, argmax, dot, matmul_transb, matvec_transb, rmsnorm, silu, softmax_inplace,
-};
+use crate::tensor::ops::{add_inplace, argmax, dot, rmsnorm, silu, softmax_inplace};
 use crate::tensor::Tensor;
-use anyhow::Result;
+use crate::util::Selector;
+use anyhow::{bail, Context, Result};
 
 use super::kv_cache::KvCache;
+use super::packed::PackedLinear;
 use super::weights::WeightStore;
 
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -48,14 +49,14 @@ impl TransformerCfg {
 #[derive(Clone, Debug)]
 pub struct Layer {
     pub ln1: Vec<f32>,
-    pub wq: Tensor,
-    pub wk: Tensor,
-    pub wv: Tensor,
-    pub wo: Tensor,
+    pub wq: PackedLinear,
+    pub wk: PackedLinear,
+    pub wv: PackedLinear,
+    pub wo: PackedLinear,
     pub ln2: Vec<f32>,
-    pub w_gate: Tensor,
-    pub w_up: Tensor,
-    pub w_down: Tensor,
+    pub w_gate: PackedLinear,
+    pub w_up: PackedLinear,
+    pub w_down: PackedLinear,
 }
 
 #[derive(Clone, Debug)]
@@ -65,7 +66,7 @@ pub struct Transformer {
     pub pos: Tensor,   // [max_t, d]
     pub layers: Vec<Layer>,
     pub ln_f: Vec<f32>,
-    pub head: Tensor, // [vocab, d]
+    pub head: PackedLinear, // [vocab, d]
 }
 
 /// Attention-behaviour override for sparse-attention experiments.
@@ -104,14 +105,14 @@ impl Transformer {
             let p = format!("layer{i}.");
             layers.push(Layer {
                 ln1: v1(&format!("{p}ln1"))?,
-                wq: t2(&format!("{p}wq"))?,
-                wk: t2(&format!("{p}wk"))?,
-                wv: t2(&format!("{p}wv"))?,
-                wo: t2(&format!("{p}wo"))?,
+                wq: t2(&format!("{p}wq"))?.into(),
+                wk: t2(&format!("{p}wk"))?.into(),
+                wv: t2(&format!("{p}wv"))?.into(),
+                wo: t2(&format!("{p}wo"))?.into(),
                 ln2: v1(&format!("{p}ln2"))?,
-                w_gate: t2(&format!("{p}w_gate"))?,
-                w_up: t2(&format!("{p}w_up"))?,
-                w_down: t2(&format!("{p}w_down"))?,
+                w_gate: t2(&format!("{p}w_gate"))?.into(),
+                w_up: t2(&format!("{p}w_up"))?.into(),
+                w_down: t2(&format!("{p}w_down"))?.into(),
             });
         }
         Ok(Transformer {
@@ -120,12 +121,13 @@ impl Transformer {
             pos: t2("pos")?,
             layers,
             ln_f: v1("ln_f")?,
-            head: t2("head")?,
+            head: t2("head")?.into(),
         })
     }
 
     /// QDQ every linear weight (and the head) with the given quantizer —
-    /// the PTQ experiment entry point.
+    /// the PTQ experiment entry point. Panics on packed weights (QDQ
+    /// mutates dense f32; pack after, not before).
     pub fn apply_quantizer(&mut self, q: &dyn WeightQuantizer) {
         for layer in self.layers.iter_mut() {
             for w in [
@@ -138,11 +140,11 @@ impl Transformer {
                 &mut layer.w_down,
             ] {
                 let (n, k) = (w.rows(), w.cols());
-                q.qdq(&mut w.data, n, k);
+                q.qdq(&mut w.f32_mut().data, n, k);
             }
         }
         let (n, k) = (self.head.rows(), self.head.cols());
-        q.qdq(&mut self.head.data, n, k);
+        q.qdq(&mut self.head.f32_mut().data, n, k);
     }
 
     /// Replace one layer's weight by an externally-quantized image (GPTQ /
@@ -159,13 +161,15 @@ impl Transformer {
             "w_down" => &mut l.w_down,
             other => panic!("unknown weight {other}"),
         };
-        assert_eq!(slot.dims(), w.dims());
-        *slot = w;
+        assert_eq!(&slot.dims()[..], w.dims());
+        *slot = w.into();
     }
 
     /// Every learned parameter flattened in a fixed traversal order —
     /// the bit-exactness witness pipeline-equivalence tests compare
     /// (`f32::to_bits` over this vector ⇔ identical model bytes).
+    /// Panics on packed weights (the witness is defined over dense f32;
+    /// compare `dequantized()` models instead).
     pub fn flat_weights(&self) -> Vec<f32> {
         let mut out = Vec::new();
         out.extend_from_slice(&self.embed.data);
@@ -173,15 +177,15 @@ impl Transformer {
         for l in &self.layers {
             out.extend_from_slice(&l.ln1);
             for w in [&l.wq, &l.wk, &l.wv, &l.wo] {
-                out.extend_from_slice(&w.data);
+                out.extend_from_slice(&w.f32().data);
             }
             out.extend_from_slice(&l.ln2);
             for w in [&l.w_gate, &l.w_up, &l.w_down] {
-                out.extend_from_slice(&w.data);
+                out.extend_from_slice(&w.f32().data);
             }
         }
         out.extend_from_slice(&self.ln_f);
-        out.extend_from_slice(&self.head.data);
+        out.extend_from_slice(&self.head.f32().data);
         out
     }
 
@@ -204,11 +208,7 @@ impl Transformer {
     /// Q/K/V projections for one layer over normalized inputs `xn` [t, d]
     /// — the single site both `attn` and `capture_qk` compute them from.
     fn qkv_proj(&self, layer: &Layer, xn: &Tensor) -> (Tensor, Tensor, Tensor) {
-        (
-            matmul_transb(xn, &layer.wq),
-            matmul_transb(xn, &layer.wk),
-            matmul_transb(xn, &layer.wv),
-        )
+        (layer.wq.matmul(xn), layer.wk.matmul(xn), layer.wv.matmul(xn))
     }
 
     /// Causal multi-head attention mix + output projection. `q` holds
@@ -266,7 +266,7 @@ impl Transformer {
                 }
             }
         }
-        matmul_transb(&ctx, &layer.wo)
+        layer.wo.matmul(&ctx)
     }
 
     fn attn(&self, layer: &Layer, xn: &Tensor, ov: &AttnOverride) -> Tensor {
@@ -275,8 +275,8 @@ impl Transformer {
     }
 
     fn mlp(&self, layer: &Layer, xn: &Tensor) -> (Tensor, Tensor) {
-        let gate = matmul_transb(xn, &layer.w_gate);
-        let up = matmul_transb(xn, &layer.w_up);
+        let gate = layer.w_gate.matmul(xn);
+        let up = layer.w_up.matmul(xn);
         let mut mid = Tensor::zeros(&[xn.rows(), self.cfg.d_ff]);
         for i in 0..xn.rows() {
             let g = gate.row(i);
@@ -286,7 +286,7 @@ impl Transformer {
                 m[j] = silu(g[j]) * u[j];
             }
         }
-        let out = matmul_transb(&mid, &layer.w_down);
+        let out = layer.w_down.matmul(&mid);
         (out, mid)
     }
 
@@ -315,7 +315,7 @@ impl Transformer {
     /// Full forward: tokens -> logits [t, vocab].
     pub fn forward(&self, tokens: &[u8], ov: &AttnOverride) -> Tensor {
         let xf = self.norm(&self.hidden(tokens, ov), &self.ln_f);
-        matmul_transb(&xf, &self.head)
+        self.head.matmul(&xf)
     }
 
     /// Logits at the last position only: projects a single hidden row
@@ -326,7 +326,8 @@ impl Transformer {
         let last = x.row(x.rows() - 1);
         let mut xf = vec![0.0f32; last.len()];
         rmsnorm(last, &self.ln_f, &mut xf);
-        matvec_transb(&xf, &self.head)
+        let mut scratch = Vec::new();
+        self.head.matvec(&xf, &mut scratch)
     }
 
     /// Greedy next token.
@@ -426,13 +427,14 @@ impl Transformer {
         }
         cache.advance(t_new);
         let xf = self.norm(&x, &self.ln_f);
-        matmul_transb(&xf, &self.head)
+        self.head.matmul(&xf)
     }
 
     /// One incremental decode step: process `token` at position
     /// `cache.len()` and return next-token logits. Scalar fast path for
     /// t=1 — matvec kernels throughout, no `[t, vocab]` materialization,
-    /// O(cache.len()·d + d²) per layer.
+    /// O(cache.len()·d + d²) per layer. Packed weights route through the
+    /// LUT GEMV kernels here, so decode reads packed bytes, not f32.
     pub fn decode_step(&self, cache: &mut KvCache, token: u8) -> Vec<f32> {
         let pos = cache.len();
         let d = self.cfg.d_model;
@@ -445,11 +447,12 @@ impl Transformer {
         let prow = self.pos.row(pos);
         let mut x: Vec<f32> = (0..d).map(|j| e[j] + prow[j]).collect();
         let mut xn = vec![0.0f32; d];
+        let mut scratch = Vec::new();
         for (li, layer) in self.layers.iter().enumerate() {
             rmsnorm(&x, &layer.ln1, &mut xn);
-            let q = matvec_transb(&xn, &layer.wq);
-            let k = matvec_transb(&xn, &layer.wk);
-            let v = matvec_transb(&xn, &layer.wv);
+            let q = layer.wq.matvec(&xn, &mut scratch);
+            let k = layer.wk.matvec(&xn, &mut scratch);
+            let v = layer.wv.matvec(&xn, &mut scratch);
             cache.append_layer(li, &k, &v);
             let lk = cache.layer(li);
             let limit = pos + 1;
@@ -473,19 +476,19 @@ impl Transformer {
                     }
                 }
             }
-            let a = matvec_transb(&ctx, &layer.wo);
+            let a = layer.wo.matvec(&ctx, &mut scratch);
             add_inplace(&mut x, &a);
             rmsnorm(&x, &layer.ln2, &mut xn);
-            let gate = matvec_transb(&xn, &layer.w_gate);
-            let up = matvec_transb(&xn, &layer.w_up);
+            let gate = layer.w_gate.matvec(&xn, &mut scratch);
+            let up = layer.w_up.matvec(&xn, &mut scratch);
             let mid: Vec<f32> = gate.iter().zip(&up).map(|(&g, &u)| silu(g) * u).collect();
-            let m = matvec_transb(&mid, &layer.w_down);
+            let m = layer.w_down.matvec(&mid, &mut scratch);
             add_inplace(&mut x, &m);
         }
         cache.advance(1);
         let mut xf = vec![0.0f32; d];
         rmsnorm(&x, &self.ln_f, &mut xf);
-        matvec_transb(&xf, &self.head)
+        self.head.matvec(&xf, &mut scratch)
     }
 
     /// Total linear-weight parameter count (size accounting).
@@ -501,6 +504,87 @@ impl Transformer {
                 + l.w_down.numel();
         }
         n
+    }
+
+    // ------------------------------------------------------------------
+    // packed execution (quantized serving)
+    // ------------------------------------------------------------------
+
+    /// Every linear weight with its canonical name (`layer{i}.wq` …
+    /// `layer{i}.w_down`, then `head`) — the namespace pattern selectors
+    /// and the packed artifact format address weights by.
+    pub fn named_weights(&self) -> Vec<(String, &PackedLinear)> {
+        let mut out = Vec::new();
+        for (i, l) in self.layers.iter().enumerate() {
+            out.push((format!("layer{i}.wq"), &l.wq));
+            out.push((format!("layer{i}.wk"), &l.wk));
+            out.push((format!("layer{i}.wv"), &l.wv));
+            out.push((format!("layer{i}.wo"), &l.wo));
+            out.push((format!("layer{i}.w_gate"), &l.w_gate));
+            out.push((format!("layer{i}.w_up"), &l.w_up));
+            out.push((format!("layer{i}.w_down"), &l.w_down));
+        }
+        out.push(("head".to_string(), &self.head));
+        out
+    }
+
+    /// Mutable variant of [`Transformer::named_weights`], same order.
+    pub fn named_weights_mut(&mut self) -> Vec<(String, &mut PackedLinear)> {
+        let mut out = Vec::new();
+        for (i, l) in self.layers.iter_mut().enumerate() {
+            out.push((format!("layer{i}.wq"), &mut l.wq));
+            out.push((format!("layer{i}.wk"), &mut l.wk));
+            out.push((format!("layer{i}.wv"), &mut l.wv));
+            out.push((format!("layer{i}.wo"), &mut l.wo));
+            out.push((format!("layer{i}.w_gate"), &mut l.w_gate));
+            out.push((format!("layer{i}.w_up"), &mut l.w_up));
+            out.push((format!("layer{i}.w_down"), &mut l.w_down));
+        }
+        out.push(("head".to_string(), &mut self.head));
+        out
+    }
+
+    /// Pattern-based per-layer packing: quantize + pack every f32 linear
+    /// whose name matches `sel` into `fmt` storage (`group` is the int4
+    /// group size). Mixed precision falls out of calling this repeatedly
+    /// with disjoint selectors. Returns the number of weights packed;
+    /// re-packing an already-packed weight is an error (requantizing
+    /// quantized data silently compounds error).
+    pub fn pack_weights(&mut self, sel: &Selector, fmt: PackFormat, group: usize) -> Result<usize> {
+        let mut count = 0;
+        for (name, w) in self.named_weights_mut() {
+            if !sel.matches(&name) {
+                continue;
+            }
+            if w.is_packed() {
+                bail!("weight {name} is already {}-packed", w.format().name());
+            }
+            let packed = PackedLinear::from_tensor(w.f32(), fmt, group)
+                .with_context(|| format!("packing weight {name}"))?;
+            *w = packed;
+            count += 1;
+        }
+        Ok(count)
+    }
+
+    /// A dense-f32 twin of this model: every packed linear replaced by its
+    /// exact dequantized image — the reference model the bit-identity
+    /// contract compares packed serving against.
+    pub fn dequantized(&self) -> Transformer {
+        let mut m = self.clone();
+        for (_, w) in m.named_weights_mut() {
+            if w.is_packed() {
+                let deq = w.dequantize();
+                *w = PackedLinear::F32(deq);
+            }
+        }
+        m
+    }
+
+    /// Bytes the linear weights occupy in their current storage formats —
+    /// the honest numerator of the packed size ratio.
+    pub fn stored_weight_bytes(&self) -> usize {
+        self.named_weights().iter().map(|(_, w)| w.stored_bytes()).sum()
     }
 }
 
@@ -601,6 +685,43 @@ mod tests {
             assert_eq!(&step[..], full.row(i), "decode step at {i}");
         }
         assert_eq!(cache.len(), toks.len());
+    }
+
+    #[test]
+    fn packed_forward_bit_identical_to_dequantized() {
+        let toks = [1u8, 5, 9, 60, 2];
+        for fmt in [
+            PackFormat::Int4,
+            PackFormat::TwoBit,
+            PackFormat::Ternary167,
+            PackFormat::Sherry125,
+        ] {
+            let mut m = model();
+            let packed = m.pack_weights(&Selector::all(), fmt, 16).unwrap();
+            assert_eq!(packed, m.cfg.n_layers * 7 + 1);
+            let deq = m.dequantized();
+            assert!(m.stored_weight_bytes() < deq.stored_weight_bytes());
+            let a = m.forward(&toks, &AttnOverride::None);
+            let b = deq.forward(&toks, &AttnOverride::None);
+            assert_eq!(a.data, b.data, "{} prefill path drifted", fmt.name());
+        }
+    }
+
+    #[test]
+    fn pack_weights_respects_selector_and_rejects_repack() {
+        let mut m = model();
+        let sel = Selector::new(&["w_gate".into()], &[]).unwrap();
+        let packed = m.pack_weights(&sel, PackFormat::TwoBit, 0).unwrap();
+        assert_eq!(packed, m.cfg.n_layers);
+        assert!(m.layers[0].w_gate.is_packed());
+        assert!(!m.layers[0].wq.is_packed());
+        assert!(!m.head.is_packed());
+        // packing the remainder with a different format = mixed precision
+        let rest = Selector::new(&[], &["w_gate".into()]).unwrap();
+        m.pack_weights(&rest, PackFormat::Int4, 16).unwrap();
+        assert!(m.layers[0].wq.is_packed());
+        // second pass over an already-packed weight fails loudly
+        assert!(m.pack_weights(&sel, PackFormat::Int4, 16).is_err());
     }
 
     #[test]

@@ -135,6 +135,18 @@ impl<'a> BitReader<'a> {
         BitReader { data, pos: 0, acc: 0, nbits: 0 }
     }
 
+    /// Reader positioned at an arbitrary bit offset — lets per-row
+    /// dequantization seek into the 5-bit-field streams of the 1.67-bit
+    /// and Sherry codecs, whose rows are not byte-aligned.
+    fn at_bit(data: &'a [u8], bit: usize) -> Self {
+        let mut r = BitReader { data, pos: bit / 8, acc: 0, nbits: 0 };
+        let rem = (bit % 8) as u32;
+        if rem > 0 {
+            r.read(rem);
+        }
+        r
+    }
+
     fn read(&mut self, bits: u32) -> u32 {
         while self.nbits < bits {
             let b = if self.pos < self.data.len() { self.data[self.pos] } else { 0 };
@@ -164,7 +176,35 @@ pub enum PackFormat {
     Sherry125,
 }
 
+/// Group size the int4 packers default to, matching
+/// [`crate::quant::AffineQuantizer::int4_group32`].
+pub const INT4_DEFAULT_GROUP: usize = 32;
+
 impl PackFormat {
+    /// Parse the config-file spelling of a format.
+    pub fn parse(s: &str) -> Option<PackFormat> {
+        match s {
+            "f32" => Some(PackFormat::F32),
+            "f16" => Some(PackFormat::F16),
+            "int4" => Some(PackFormat::Int4),
+            "2bit" => Some(PackFormat::TwoBit),
+            "ternary167" => Some(PackFormat::Ternary167),
+            "sherry125" => Some(PackFormat::Sherry125),
+            _ => None,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            PackFormat::F32 => "f32",
+            PackFormat::F16 => "f16",
+            PackFormat::Int4 => "int4",
+            PackFormat::TwoBit => "2bit",
+            PackFormat::Ternary167 => "ternary167",
+            PackFormat::Sherry125 => "sherry125",
+        }
+    }
+
     pub fn bits_per_weight(&self) -> f64 {
         match self {
             PackFormat::F32 => 32.0,
@@ -176,11 +216,16 @@ impl PackFormat {
         }
     }
 
-    /// bytes for an [n, k] weight matrix incl. per-row scale overhead
+    /// bytes for an [n, k] weight matrix incl. scale overhead: the ternary
+    /// family stores one f32 alpha per row, while int4 stores one f32 scale
+    /// per `INT4_DEFAULT_GROUP` weights (`n * k/32` scales, not `n`) —
+    /// charging int4 a flat `n * 4` would flatter its size_ratio ~9x at
+    /// serving widths.
     pub fn matrix_bytes(&self, n: usize, k: usize) -> usize {
         let w = (self.bits_per_weight() * (n * k) as f64 / 8.0).ceil() as usize;
         let scales = match self {
             PackFormat::F32 | PackFormat::F16 => 0,
+            PackFormat::Int4 => n * k.div_ceil(INT4_DEFAULT_GROUP) * 4,
             _ => n * 4,
         };
         w + scales
@@ -188,6 +233,7 @@ impl PackFormat {
 }
 
 /// A ternary matrix packed at 2 bits/weight (BitNet I2_S analogue).
+#[derive(Clone, Debug)]
 pub struct Packed2Bit {
     pub n: usize,
     pub k: usize,
@@ -198,7 +244,26 @@ pub struct Packed2Bit {
 impl Packed2Bit {
     pub fn from_codes(codes: &[u8], alphas: &[f32], n: usize, k: usize) -> Self {
         assert_eq!(codes.len(), n * k);
+        assert!(k % 4 == 0, "2-bit rows pack 4 codes/byte: k={k} not divisible by 4");
+        assert_eq!(alphas.len(), n, "one alpha per output row");
         Packed2Bit { n, k, bytes: pack_2bit(codes), alphas: alphas.to_vec() }
+    }
+
+    /// Dequantize one row into `out` — bit-identical to
+    /// `TernaryQuantizer::dequantize_codes` on the same codes, so fused
+    /// packed kernels and the dequantized-f32 model agree exactly.
+    pub fn dequant_row(&self, row: usize, out: &mut [f32]) {
+        assert_eq!(out.len(), self.k);
+        let bpr = self.k / 4;
+        let a = self.alphas[row];
+        let bytes = &self.bytes[row * bpr..(row + 1) * bpr];
+        for (bi, &b) in bytes.iter().enumerate() {
+            let o = &mut out[bi * 4..bi * 4 + 4];
+            o[0] = ((b & 3) as f32 - 1.0) * a;
+            o[1] = (((b >> 2) & 3) as f32 - 1.0) * a;
+            o[2] = (((b >> 4) & 3) as f32 - 1.0) * a;
+            o[3] = (((b >> 6) & 3) as f32 - 1.0) * a;
+        }
     }
 
     /// y = W x with inline 2-bit unpack (4 weights per byte).
@@ -266,9 +331,59 @@ impl Packed2Bit {
             y[row] = (s0 + s1) * self.alphas[row];
         }
     }
+
+    /// Half-byte LUT GEMV — the decode-path kernel. Per 4-weight segment,
+    /// precompute the 16 possible contributions of each code *pair* (low
+    /// and high half-byte separately): 32 floats per segment instead of
+    /// `gemv_lut`'s 256, so the tables stay cache-resident at serving
+    /// widths and the build cost is negligible. The row loop is then one
+    /// byte load + two L1 table loads + two adds per 4 weights.
+    pub fn gemv_fast(&self, x: &[f32], y: &mut [f32], lut: &mut Vec<f32>) {
+        assert_eq!(x.len(), self.k);
+        assert_eq!(y.len(), self.n);
+        let segs = self.k / 4;
+        lut.clear();
+        lut.resize(segs * 32, 0.0);
+        for seg in 0..segs {
+            let xb = &x[seg * 4..seg * 4 + 4];
+            let t = &mut lut[seg * 32..seg * 32 + 32];
+            for c in 0..16usize {
+                let w0 = (c & 3) as f32 - 1.0;
+                let w1 = ((c >> 2) & 3) as f32 - 1.0;
+                t[c] = w0 * xb[0] + w1 * xb[1];
+                t[16 + c] = w0 * xb[2] + w1 * xb[3];
+            }
+        }
+        for row in 0..self.n {
+            let bytes = &self.bytes[row * segs..(row + 1) * segs];
+            // four accumulator chains: a single s += chain is fadd-latency
+            // bound (~4 cycles/byte), which would lose to the f32 path
+            let (mut s0, mut s1, mut s2, mut s3) = (0.0f32, 0.0f32, 0.0f32, 0.0f32);
+            let mut pairs = bytes.chunks_exact(2);
+            let mut i = 0;
+            for pair in &mut pairs {
+                let (b0, b1) = (pair[0], pair[1]);
+                let base0 = i * 32;
+                let base1 = base0 + 32;
+                s0 += lut[base0 + (b0 & 15) as usize];
+                s1 += lut[base0 + 16 + (b0 >> 4) as usize];
+                s2 += lut[base1 + (b1 & 15) as usize];
+                s3 += lut[base1 + 16 + (b1 >> 4) as usize];
+                i += 2;
+            }
+            for &b in pairs.remainder() {
+                let base = i * 32;
+                s0 += lut[base + (b & 15) as usize];
+                s1 += lut[base + 16 + (b >> 4) as usize];
+                i += 1;
+            }
+            y[row] = ((s0 + s1) + (s2 + s3)) * self.alphas[row];
+        }
+    }
 }
 
 /// Ternary matrix packed base-3, 3 codes per 5 bits (1.67-bit strategy).
+#[derive(Clone, Debug)]
 pub struct PackedTernary167 {
     pub n: usize,
     pub k: usize,
@@ -279,7 +394,13 @@ pub struct PackedTernary167 {
 impl PackedTernary167 {
     pub fn from_codes(codes: &[u8], alphas: &[f32], n: usize, k: usize) -> Self {
         assert_eq!(codes.len(), n * k);
-        assert!(k % 3 == 0 || k % 24 == 0 || k % 3 != 0, "row-padded below");
+        assert_eq!(alphas.len(), n, "one alpha per output row");
+        // any k is fine (rows are padded to a multiple of 3 below), but the
+        // base-3 packer silently aliases out-of-range digits — reject them
+        assert!(
+            codes.iter().all(|&c| c <= 2),
+            "ternary codes must be 0..=2 (got a value > 2)"
+        );
         // pad each row to a multiple of 3 with deadzone codes
         let k_pad = k.div_ceil(3) * 3;
         let mut padded = Vec::with_capacity(n * k_pad);
@@ -324,9 +445,32 @@ impl PackedTernary167 {
             y[row] = acc * self.alphas[row];
         }
     }
+
+    /// Dequantize one row — bit-identical to
+    /// `TernaryQuantizer::dequantize_codes` on the same codes. Rows are
+    /// 5-bit-field streams (`k_pad/3` groups each), so the reader seeks to
+    /// the row's bit offset rather than a byte boundary.
+    pub fn dequant_row(&self, row: usize, out: &mut [f32]) {
+        assert_eq!(out.len(), self.k);
+        let k_pad = self.k.div_ceil(3) * 3;
+        let groups_per_row = k_pad / 3;
+        let mut r = BitReader::at_bit(&self.bytes, row * groups_per_row * 5);
+        let a = self.alphas[row];
+        for g in 0..groups_per_row {
+            let v = r.read(5);
+            let base = g * 3;
+            let digits = [v % 3, (v / 3) % 3, (v / 9) % 3];
+            for (t, &d) in digits.iter().enumerate() {
+                if base + t < self.k {
+                    out[base + t] = (d as f32 - 1.0) * a;
+                }
+            }
+        }
+    }
 }
 
 /// Sherry matrix: 5-bit block codes, 4 weights per code (1.25-bit).
+#[derive(Clone, Debug)]
 pub struct PackedSherry {
     pub n: usize,
     pub k: usize,
@@ -336,8 +480,27 @@ pub struct PackedSherry {
 
 impl PackedSherry {
     pub fn from_codes(block_codes: &[u8], alphas: &[f32], n: usize, k: usize) -> Self {
+        assert!(k % 4 == 0, "sherry packs 4-weight blocks: k={k} not divisible by 4");
         assert_eq!(block_codes.len(), n * k / 4);
+        assert_eq!(alphas.len(), n, "one alpha per output row");
         PackedSherry { n, k, bytes: pack_sherry(block_codes), alphas: alphas.to_vec() }
+    }
+
+    /// Dequantize one row — bit-identical to `Sherry::dequantize_codes`
+    /// on the same block codes (bit-offset seek: rows are 5-bit streams).
+    pub fn dequant_row(&self, row: usize, out: &mut [f32]) {
+        assert_eq!(out.len(), self.k);
+        let lut = sherry_lut();
+        let blocks_per_row = self.k / 4;
+        let mut r = BitReader::at_bit(&self.bytes, row * blocks_per_row * 5);
+        let a = self.alphas[row];
+        for b in 0..blocks_per_row {
+            let vals = &lut[r.read(5) as usize];
+            let o = &mut out[b * 4..b * 4 + 4];
+            for lane in 0..4 {
+                o[lane] = vals[lane] * a;
+            }
+        }
     }
 
     /// y = W x — one 5-bit read expands to an aligned 4-lane group via a
@@ -380,6 +543,7 @@ pub fn gemv_f32(w: &[f32], n: usize, k: usize, x: &[f32], y: &mut [f32]) {
 
 /// int4 group-wise packed GEMV (2 codes per byte) — the Q4_K_M analogue
 /// for the Figure 2 edge comparison.
+#[derive(Clone, Debug)]
 pub struct PackedInt4 {
     pub n: usize,
     pub k: usize,
@@ -391,11 +555,31 @@ pub struct PackedInt4 {
 impl PackedInt4 {
     pub fn from_codes(codes: &[u8], scales: &[f32], n: usize, k: usize, group: usize) -> Self {
         assert_eq!(codes.len(), n * k);
+        assert!(group > 0 && group % 2 == 0, "int4 group {group} must be even and non-zero");
+        assert!(k % group == 0, "k={k} not divisible by group {group}");
+        assert_eq!(scales.len(), n * (k / group), "one scale per group");
         PackedInt4 { n, k, group, bytes: pack_nibbles(codes), scales: scales.to_vec() }
+    }
+
+    /// Dequantize one row into `out` — bit-identical to
+    /// `AffineQuantizer::dequantize_codes` on the same codes/scales.
+    pub fn dequant_row(&self, row: usize, out: &mut [f32]) {
+        assert_eq!(out.len(), self.k);
+        let bpr = self.k / 2;
+        let groups_per_row = self.k / self.group;
+        let bytes = &self.bytes[row * bpr..(row + 1) * bpr];
+        for (bi, &b) in bytes.iter().enumerate() {
+            let j = bi * 2;
+            // group % 2 == 0, so both nibbles of a byte share one scale
+            let s = self.scales[row * groups_per_row + j / self.group];
+            out[j] = ((b & 0xF) as f32 - 8.0) * s;
+            out[j + 1] = ((b >> 4) as f32 - 8.0) * s;
+        }
     }
 
     pub fn gemv(&self, x: &[f32], y: &mut [f32]) {
         assert_eq!(x.len(), self.k);
+        assert_eq!(y.len(), self.n);
         let bpr = self.k / 2;
         let groups_per_row = self.k / self.group;
         for row in 0..self.n {
@@ -448,6 +632,62 @@ impl PackedInt4 {
                     gacc += lut[(lo + bi) * 256 + bytes[lo + bi] as usize];
                 }
                 acc += gacc * s;
+            }
+            y[row] = acc;
+        }
+    }
+
+    /// Half-byte LUT GEMV — the decode-path kernel (see
+    /// `Packed2Bit::gemv_fast`). Per byte position, two 16-entry tables
+    /// hold `(code - 8) * x` for the even and odd nibble; the row loop is
+    /// one byte load + two table loads + two adds per 2 weights, with
+    /// group scales applied on group subtotals.
+    pub fn gemv_fast(&self, x: &[f32], y: &mut [f32], lut: &mut Vec<f32>) {
+        assert_eq!(x.len(), self.k);
+        assert_eq!(y.len(), self.n);
+        let bpr = self.k / 2;
+        lut.clear();
+        lut.resize(bpr * 32, 0.0);
+        for pos in 0..bpr {
+            let (x0, x1) = (x[pos * 2], x[pos * 2 + 1]);
+            let t = &mut lut[pos * 32..pos * 32 + 32];
+            for c in 0..16usize {
+                let w = c as f32 - 8.0;
+                t[c] = w * x0;
+                t[16 + c] = w * x1;
+            }
+        }
+        let groups_per_row = self.k / self.group;
+        let bytes_per_group = self.group / 2;
+        for row in 0..self.n {
+            let bytes = &self.bytes[row * bpr..(row + 1) * bpr];
+            let mut acc = 0.0f32;
+            for g in 0..groups_per_row {
+                let s = self.scales[row * groups_per_row + g];
+                let lo = g * bytes_per_group;
+                // four accumulator chains per group (see Packed2Bit): a
+                // single += chain would be fadd-latency bound
+                let (mut g0, mut g1, mut g2, mut g3) = (0.0f32, 0.0f32, 0.0f32, 0.0f32);
+                let chunk = &bytes[lo..lo + bytes_per_group];
+                let mut pairs = chunk.chunks_exact(2);
+                let mut bi = lo;
+                for pair in &mut pairs {
+                    let (b0, b1) = (pair[0], pair[1]);
+                    let base0 = bi * 32;
+                    let base1 = base0 + 32;
+                    g0 += lut[base0 + (b0 & 15) as usize];
+                    g1 += lut[base0 + 16 + (b0 >> 4) as usize];
+                    g2 += lut[base1 + (b1 & 15) as usize];
+                    g3 += lut[base1 + 16 + (b1 >> 4) as usize];
+                    bi += 2;
+                }
+                for &b in pairs.remainder() {
+                    let base = bi * 32;
+                    g0 += lut[base + (b & 15) as usize];
+                    g1 += lut[base + 16 + (b >> 4) as usize];
+                    bi += 1;
+                }
+                acc += ((g0 + g1) + (g2 + g3)) * s;
             }
             y[row] = acc;
         }
@@ -625,5 +865,167 @@ mod tests {
         let w = rng.normal_vec(4 * 32, 1.0);
         let (codes, _) = Seq2Quantizer::new(32).quantize_codes(&w, 4, 32);
         assert_eq!(unpack_2bit(&pack_2bit(&codes)), codes);
+    }
+
+    #[test]
+    fn int4_matrix_bytes_counts_group_scales() {
+        // 8x64 int4: 8*64/2 = 256 payload bytes + 8 rows * 2 groups * 4B
+        assert_eq!(PackFormat::Int4.matrix_bytes(8, 64), 256 + 8 * 2 * 4);
+        // the old flat per-row accounting would have claimed 256 + 32
+        assert!(PackFormat::Int4.matrix_bytes(8, 64) > 256 + 8 * 4);
+    }
+
+    #[test]
+    fn ternary167_handles_k_not_divisible_by_3() {
+        // regression: the constructor used to carry a tautological guard
+        // instead of exercising the row-padding path
+        testing::check(6, |rng| {
+            let (n, k) = (8, 10); // k % 3 == 1 -> rows pad to 12 codes
+            let w = rng.normal_vec(n * k, 1.0);
+            let (codes, alphas) = TernaryQuantizer::default().quantize_codes(&w, n, k);
+            let deq = TernaryQuantizer::dequantize_codes(&codes, &alphas, n, k);
+            let packed = PackedTernary167::from_codes(&codes, &alphas, n, k);
+            let x = rng.normal_vec(k, 1.0);
+            let mut dense = vec![0.0; n];
+            gemv_f32(&deq, n, k, &x, &mut dense);
+            let mut y = vec![0.0; n];
+            packed.gemv(&x, &mut y);
+            testing::assert_allclose(&y, &dense, 1e-4, 1e-4);
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "ternary codes must be 0..=2")]
+    fn ternary167_rejects_out_of_range_codes() {
+        PackedTernary167::from_codes(&[0, 1, 3], &[1.0], 1, 3);
+    }
+
+    #[test]
+    #[should_panic(expected = "not divisible by 4")]
+    fn packed_2bit_rejects_unaligned_k() {
+        Packed2Bit::from_codes(&[1u8; 2 * 6], &[1.0; 2], 2, 6);
+    }
+
+    #[test]
+    #[should_panic(expected = "not divisible by 4")]
+    fn packed_sherry_rejects_unaligned_k() {
+        PackedSherry::from_codes(&[0u8; 3], &[1.0; 2], 2, 6);
+    }
+
+    #[test]
+    #[should_panic(expected = "not divisible by group")]
+    fn packed_int4_rejects_unaligned_group() {
+        PackedInt4::from_codes(&[8u8; 2 * 48], &[1.0; 2], 2, 48, 32);
+    }
+
+    #[test]
+    #[should_panic(expected = "must be even")]
+    fn packed_int4_rejects_odd_group() {
+        PackedInt4::from_codes(&[8u8; 2 * 9], &[1.0; 6], 2, 9, 3);
+    }
+
+    #[test]
+    #[should_panic(expected = "assertion")]
+    fn packed_int4_gemv_rejects_short_y() {
+        let q = crate::quant::AffineQuantizer::int4_group32();
+        let mut rng = Rng::new(3);
+        let w = rng.normal_vec(4 * 32, 1.0);
+        let (codes, scales) = q.quantize_codes(&w, 4, 32);
+        let packed = PackedInt4::from_codes(&codes, &scales, 4, 32, 32);
+        let x = vec![0.0; 32];
+        let mut y = vec![0.0; 3]; // one row short
+        packed.gemv(&x, &mut y);
+    }
+
+    #[test]
+    fn dequant_rows_match_quantizer_dequant_bitwise() {
+        // the row providers behind the fused prefill kernel must agree
+        // *bitwise* with each quantizer's dequantize_codes — this is the
+        // packed-serving == dequantized-f32-serving correctness anchor
+        testing::check(4, |rng| {
+            let (n, k) = (6, 64);
+            let w = rng.normal_vec(n * k, 1.0);
+            let mut out = vec![0.0f32; k];
+
+            let (tc, ta) = TernaryQuantizer::default().quantize_codes(&w, n, k);
+            let tdeq = TernaryQuantizer::dequantize_codes(&tc, &ta, n, k);
+            let p2 = Packed2Bit::from_codes(&tc, &ta, n, k);
+            let p167 = PackedTernary167::from_codes(&tc, &ta, n, k);
+            for row in 0..n {
+                p2.dequant_row(row, &mut out);
+                assert_eq!(out, tdeq[row * k..(row + 1) * k], "2bit row {row}");
+                p167.dequant_row(row, &mut out);
+                assert_eq!(out, tdeq[row * k..(row + 1) * k], "ternary167 row {row}");
+            }
+
+            let q = crate::quant::AffineQuantizer::int4_group32();
+            let (ic, is) = q.quantize_codes(&w, n, k);
+            let ideq = q.dequantize_codes(&ic, &is, n, k);
+            let p4 = PackedInt4::from_codes(&ic, &is, n, k, 32);
+            for row in 0..n {
+                p4.dequant_row(row, &mut out);
+                assert_eq!(out, ideq[row * k..(row + 1) * k], "int4 row {row}");
+            }
+
+            let (sc, sa) = Sherry::quantize_codes(&w, n, k);
+            let sdeq = Sherry::dequantize_codes(&sc, &sa, n, k);
+            let ps = PackedSherry::from_codes(&sc, &sa, n, k);
+            for row in 0..n {
+                ps.dequant_row(row, &mut out);
+                assert_eq!(out, sdeq[row * k..(row + 1) * k], "sherry row {row}");
+            }
+        });
+    }
+
+    #[test]
+    fn ternary167_dequant_row_seeks_unaligned_rows() {
+        // k=10 -> 4 groups * 5 bits = 20 bits per row: every other row
+        // starts mid-byte, exercising the bit-offset reader seek
+        let mut rng = Rng::new(11);
+        let (n, k) = (5, 10);
+        let w = rng.normal_vec(n * k, 1.0);
+        let (codes, alphas) = TernaryQuantizer::default().quantize_codes(&w, n, k);
+        let deq = TernaryQuantizer::dequantize_codes(&codes, &alphas, n, k);
+        let packed = PackedTernary167::from_codes(&codes, &alphas, n, k);
+        let mut out = vec![0.0f32; k];
+        for row in 0..n {
+            packed.dequant_row(row, &mut out);
+            assert_eq!(out, deq[row * k..(row + 1) * k], "row {row}");
+        }
+    }
+
+    #[test]
+    fn gemv_fast_2bit_matches_baseline() {
+        testing::check(6, |rng| {
+            let (n, k) = (16, 64);
+            let w = rng.normal_vec(n * k, 1.0);
+            let (codes, alphas) = TernaryQuantizer::default().quantize_codes(&w, n, k);
+            let packed = Packed2Bit::from_codes(&codes, &alphas, n, k);
+            let x = rng.normal_vec(k, 1.0);
+            let mut base = vec![0.0; n];
+            packed.gemv(&x, &mut base);
+            let mut lut = Vec::new();
+            let mut fast = vec![0.0; n];
+            packed.gemv_fast(&x, &mut fast, &mut lut);
+            testing::assert_allclose(&fast, &base, 1e-4, 1e-4);
+        });
+    }
+
+    #[test]
+    fn gemv_fast_int4_matches_baseline() {
+        testing::check(6, |rng| {
+            let (n, k, g) = (8, 64, 32);
+            let w = rng.normal_vec(n * k, 1.0);
+            let q = crate::quant::AffineQuantizer::int4_group32();
+            let (codes, scales) = q.quantize_codes(&w, n, k);
+            let packed = PackedInt4::from_codes(&codes, &scales, n, k, g);
+            let x = rng.normal_vec(k, 1.0);
+            let mut base = vec![0.0; n];
+            packed.gemv(&x, &mut base);
+            let mut lut = Vec::new();
+            let mut fast = vec![0.0; n];
+            packed.gemv_fast(&x, &mut fast, &mut lut);
+            testing::assert_allclose(&fast, &base, 1e-4, 1e-4);
+        });
     }
 }

@@ -1,6 +1,14 @@
 //! Artifact registry: names -> compiled executables, compiled lazily and
 //! cached. The "one compiled executable per model variant" policy of the
 //! runtime (DESIGN.md §2).
+//!
+//! This registry covers the *compiled HLO* artifact family
+//! (`<name>.hlo.txt`). The quantized-serving path has a second, weight-
+//! level artifact family with its own contract: `crate::models::
+//! packed_store` writes `packed_meta.json` + `packed_weights.bin` from an
+//! `export-packed` pipeline stage, and the `packed-artifact` model
+//! factory serves them bit-exactly without an HLO build. The two families
+//! are deliberately disjoint on disk, so one artifacts dir can hold both.
 
 use anyhow::{Context, Result};
 use std::collections::BTreeMap;

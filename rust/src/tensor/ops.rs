@@ -52,6 +52,45 @@ pub fn matvec_transb(x: &[f32], w: &Tensor) -> Vec<f32> {
     (0..n).map(|j| dot(x, w.row(j))).collect()
 }
 
+/// y = x @ w.T where the `[N, K]` weight rows are produced on demand by
+/// `row_of(j, buf)` — the fused-dequant prefill kernel for packed weights.
+/// Each row is materialized ONCE into an L1-resident scratch and shared by
+/// every activation row, so a packed matrix streams its packed bytes once
+/// per matmul instead of dequantizing per activation row. Accumulation
+/// runs through the same [`dot4`]/[`dot`] order as [`matmul_transb`], so
+/// output is bit-identical to `matmul_transb(x, dequantized_w)`.
+pub fn matmul_transb_rows(
+    x: &Tensor,
+    n: usize,
+    k: usize,
+    mut row_of: impl FnMut(usize, &mut [f32]),
+) -> Tensor {
+    let (m, xk) = (x.rows(), x.cols());
+    assert_eq!(xk, k, "inner-dim mismatch {xk} vs {k}");
+    let mut out = Tensor::zeros(&[m, n]);
+    let mut wrow = vec![0.0f32; k];
+    let blocks = m / 4;
+    for j in 0..n {
+        row_of(j, &mut wrow);
+        for ib in 0..blocks {
+            let i = ib * 4;
+            let x0 = &x.data[i * k..(i + 1) * k];
+            let x1 = &x.data[(i + 1) * k..(i + 2) * k];
+            let x2 = &x.data[(i + 2) * k..(i + 3) * k];
+            let x3 = &x.data[(i + 3) * k..(i + 4) * k];
+            let [y0, y1, y2, y3] = dot4(x0, x1, x2, x3, &wrow);
+            out.data[i * n + j] = y0;
+            out.data[(i + 1) * n + j] = y1;
+            out.data[(i + 2) * n + j] = y2;
+            out.data[(i + 3) * n + j] = y3;
+        }
+        for i in blocks * 4..m {
+            out.data[i * n + j] = dot(x.row(i), &wrow);
+        }
+    }
+    out
+}
+
 /// Unrolled dot product (4-wide) — the scalar hot loop of the repo.
 #[inline]
 pub fn dot(a: &[f32], b: &[f32]) -> f32 {
@@ -227,6 +266,22 @@ mod tests {
             for (lane, row) in rows.iter().enumerate() {
                 assert_eq!(ys[lane], dot(row, &b), "len={len} lane={lane}");
             }
+        }
+    }
+
+    #[test]
+    fn matmul_rows_bit_identical_to_matmul() {
+        // the row-provider kernel (fed here by plain f32 row copies) must
+        // reproduce matmul_transb bitwise — the packed-prefill anchor
+        let mut rng = crate::util::Rng::new(21);
+        for (m, k, n) in [(1, 8, 5), (4, 16, 9), (6, 13, 3), (9, 32, 17)] {
+            let x = Tensor::randn(&[m, k], 1.0, &mut rng);
+            let w = Tensor::randn(&[n, k], 1.0, &mut rng);
+            let direct = matmul_transb(&x, &w);
+            let via_rows = matmul_transb_rows(&x, n, k, |j, buf| {
+                buf.copy_from_slice(w.row(j));
+            });
+            assert_eq!(direct.data, via_rows.data, "m={m} k={k} n={n}");
         }
     }
 

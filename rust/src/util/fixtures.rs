@@ -97,14 +97,14 @@ pub fn fixture_transformer(spec: &FixtureSpec) -> Transformer {
         let w = spec.noise * 0.4;
         layers.push(Layer {
             ln1: vec![1.0; d],
-            wq: Tensor::randn(&[d, d], w, &mut rng),
-            wk: Tensor::randn(&[d, d], w, &mut rng),
-            wv: Tensor::randn(&[d, d], w, &mut rng),
-            wo: Tensor::randn(&[d, d], w, &mut rng),
+            wq: Tensor::randn(&[d, d], w, &mut rng).into(),
+            wk: Tensor::randn(&[d, d], w, &mut rng).into(),
+            wv: Tensor::randn(&[d, d], w, &mut rng).into(),
+            wo: Tensor::randn(&[d, d], w, &mut rng).into(),
             ln2: vec![1.0; d],
-            w_gate: Tensor::randn(&[spec.d_ff, d], w, &mut rng),
-            w_up: Tensor::randn(&[spec.d_ff, d], w, &mut rng),
-            w_down: Tensor::randn(&[d, spec.d_ff], w, &mut rng),
+            w_gate: Tensor::randn(&[spec.d_ff, d], w, &mut rng).into(),
+            w_up: Tensor::randn(&[spec.d_ff, d], w, &mut rng).into(),
+            w_down: Tensor::randn(&[d, spec.d_ff], w, &mut rng).into(),
         });
     }
 
@@ -134,7 +134,7 @@ pub fn fixture_transformer(spec: &FixtureSpec) -> Transformer {
         pos,
         layers,
         ln_f: vec![1.0; d],
-        head,
+        head: head.into(),
     }
 }
 
@@ -201,10 +201,10 @@ mod tests {
     fn fixture_is_deterministic_and_seed_sensitive() {
         let a = fixture_target(9);
         let b = fixture_target(9);
-        assert_eq!(a.head.data, b.head.data);
-        assert_eq!(a.layers[0].wq.data, b.layers[0].wq.data);
+        assert_eq!(a.head.f32().data, b.head.f32().data);
+        assert_eq!(a.layers[0].wq.f32().data, b.layers[0].wq.f32().data);
         let c = fixture_target(10);
-        assert_ne!(a.head.data, c.head.data);
+        assert_ne!(a.head.f32().data, c.head.f32().data);
     }
 
     #[test]

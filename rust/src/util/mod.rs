@@ -6,12 +6,14 @@
 //! comfy-table) are hand-rolled here. See DESIGN.md §8.
 
 pub mod fixtures;
+pub mod pattern;
 pub mod rng;
 pub mod stats;
 pub mod table;
 pub mod testing;
 pub mod timer;
 
+pub use pattern::{Pattern, Selector};
 pub use rng::Rng;
 pub use stats::Summary;
 pub use table::Table;

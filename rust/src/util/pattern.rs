@@ -1,0 +1,362 @@
+//! Pattern-based layer selection — the DynamicDiT-style include/exclude
+//! API for per-layer compression: each pattern is either a plain
+//! substring or a regex (auto-detected by the presence of regex
+//! metacharacters, so one list can mix both spellings, e.g.
+//! `["w_gate", r"layer\d+\.wq"]`).
+//!
+//! The regex dialect is deliberately small (no crates.io deps): literals,
+//! `.`, `*`, `+`, `?`, `^`/`$` anchors, `[...]` classes (ranges and
+//! negation), `\d`/`\w`/`\s`, escapes, and top-level alternation `|`.
+//! Groups are rejected loudly rather than mis-matched silently. Matching
+//! uses search semantics: an unanchored pattern matches anywhere in the
+//! layer name, like `re.search`.
+
+use anyhow::{bail, Context, Result};
+
+/// One include/exclude pattern over layer names.
+#[derive(Clone, Debug)]
+pub struct Pattern {
+    raw: String,
+    kind: Kind,
+}
+
+#[derive(Clone, Debug)]
+enum Kind {
+    Substring,
+    /// alternation of node sequences (`a|b|c`)
+    Regex(Vec<Vec<Node>>),
+}
+
+#[derive(Clone, Debug)]
+enum Node {
+    Start,
+    End,
+    Lit(char),
+    Any,
+    /// inclusive ranges + negation flag
+    Class(Vec<(char, char)>, bool),
+    Star(Box<Node>),
+    Plus(Box<Node>),
+    Opt(Box<Node>),
+}
+
+impl Pattern {
+    pub fn new(raw: &str) -> Result<Pattern> {
+        if raw.is_empty() {
+            bail!("empty layer pattern");
+        }
+        let kind = if raw.chars().any(|c| r"^$.*+?[]\|()".contains(c)) {
+            Kind::Regex(parse_alternation(raw)?)
+        } else {
+            Kind::Substring
+        };
+        Ok(Pattern { raw: raw.to_string(), kind })
+    }
+
+    pub fn as_str(&self) -> &str {
+        &self.raw
+    }
+
+    pub fn matches(&self, name: &str) -> bool {
+        match &self.kind {
+            Kind::Substring => name.contains(&self.raw),
+            Kind::Regex(alts) => {
+                let text: Vec<char> = name.chars().collect();
+                alts.iter()
+                    .any(|seq| (0..=text.len()).any(|i| match_here(seq, &text, i)))
+            }
+        }
+    }
+}
+
+/// Include/exclude filter over weight names: a name is selected when it
+/// matches any include pattern (an empty include list selects everything)
+/// and no exclude pattern.
+#[derive(Clone, Debug, Default)]
+pub struct Selector {
+    pub include: Vec<Pattern>,
+    pub exclude: Vec<Pattern>,
+}
+
+impl Selector {
+    pub fn new(include: &[String], exclude: &[String]) -> Result<Selector> {
+        let compile = |ps: &[String]| -> Result<Vec<Pattern>> {
+            ps.iter()
+                .map(|p| Pattern::new(p).with_context(|| format!("pattern `{p}`")))
+                .collect()
+        };
+        Ok(Selector { include: compile(include)?, exclude: compile(exclude)? })
+    }
+
+    /// The match-everything selector.
+    pub fn all() -> Selector {
+        Selector::default()
+    }
+
+    pub fn matches(&self, name: &str) -> bool {
+        let included =
+            self.include.is_empty() || self.include.iter().any(|p| p.matches(name));
+        included && !self.exclude.iter().any(|p| p.matches(name))
+    }
+}
+
+fn parse_alternation(pat: &str) -> Result<Vec<Vec<Node>>> {
+    // no groups, so every `|` is top-level
+    pat.split('|').map(|seq| parse_sequence(seq, pat)).collect()
+}
+
+fn parse_sequence(seq: &str, pat: &str) -> Result<Vec<Node>> {
+    let mut out: Vec<Node> = Vec::new();
+    let mut chars = seq.chars().peekable();
+    while let Some(c) = chars.next() {
+        let node = match c {
+            '^' => Node::Start,
+            '$' => Node::End,
+            '.' => Node::Any,
+            '(' | ')' => bail!("regex groups are not supported in layer patterns: `{pat}`"),
+            '[' => parse_class(&mut chars, pat)?,
+            '\\' => escape_node(
+                chars.next().with_context(|| format!("dangling `\\` in `{pat}`"))?,
+                pat,
+            )?,
+            '*' | '+' | '?' => {
+                let prev = out.pop().filter(is_char_node).with_context(|| {
+                    format!("quantifier `{c}` without a preceding atom in `{pat}`")
+                })?;
+                let b = Box::new(prev);
+                match c {
+                    '*' => Node::Star(b),
+                    '+' => Node::Plus(b),
+                    _ => Node::Opt(b),
+                }
+            }
+            lit => Node::Lit(lit),
+        };
+        out.push(node);
+    }
+    Ok(out)
+}
+
+fn escape_node(e: char, pat: &str) -> Result<Node> {
+    Ok(match e {
+        'd' => Node::Class(vec![('0', '9')], false),
+        'w' => Node::Class(vec![('a', 'z'), ('A', 'Z'), ('0', '9'), ('_', '_')], false),
+        's' => Node::Class(vec![(' ', ' '), ('\t', '\t')], false),
+        '.' | '\\' | '*' | '+' | '?' | '[' | ']' | '^' | '$' | '|' | '(' | ')' | '-' => {
+            Node::Lit(e)
+        }
+        other => bail!("unsupported escape `\\{other}` in `{pat}`"),
+    })
+}
+
+fn parse_class(
+    chars: &mut std::iter::Peekable<std::str::Chars<'_>>,
+    pat: &str,
+) -> Result<Node> {
+    let mut ranges: Vec<(char, char)> = Vec::new();
+    let mut negated = false;
+    if chars.peek() == Some(&'^') {
+        chars.next();
+        negated = true;
+    }
+    loop {
+        let c = match chars.next() {
+            None => bail!("unterminated `[...]` class in `{pat}`"),
+            Some(']') => break,
+            Some(c) => c,
+        };
+        let lo = if c == '\\' {
+            let e = chars.next().with_context(|| format!("dangling `\\` in `{pat}`"))?;
+            match escape_node(e, pat)? {
+                Node::Lit(l) => l,
+                Node::Class(mut rs, false) => {
+                    // \d / \w / \s inside a class contribute their ranges
+                    ranges.append(&mut rs);
+                    continue;
+                }
+                _ => bail!("unsupported escape `\\{e}` in class in `{pat}`"),
+            }
+        } else {
+            c
+        };
+        if chars.peek() == Some(&'-') {
+            chars.next();
+            match chars.peek() {
+                Some(&']') | None => {
+                    // trailing `-` is a literal
+                    ranges.push((lo, lo));
+                    ranges.push(('-', '-'));
+                }
+                Some(_) => {
+                    let hi = chars.next().unwrap();
+                    if hi < lo {
+                        bail!("inverted range `{lo}-{hi}` in `{pat}`");
+                    }
+                    ranges.push((lo, hi));
+                }
+            }
+        } else {
+            ranges.push((lo, lo));
+        }
+    }
+    Ok(Node::Class(ranges, negated))
+}
+
+fn is_char_node(n: &Node) -> bool {
+    matches!(n, Node::Lit(_) | Node::Any | Node::Class(..))
+}
+
+fn char_match(n: &Node, c: char) -> bool {
+    match n {
+        Node::Lit(l) => *l == c,
+        Node::Any => true,
+        Node::Class(ranges, neg) => {
+            ranges.iter().any(|&(lo, hi)| lo <= c && c <= hi) != *neg
+        }
+        _ => false,
+    }
+}
+
+/// Backtracking matcher: does `nodes` match `text` starting at `i`?
+fn match_here(nodes: &[Node], text: &[char], i: usize) -> bool {
+    let Some(node) = nodes.first() else {
+        return true;
+    };
+    let rest = &nodes[1..];
+    match node {
+        Node::Start => i == 0 && match_here(rest, text, i),
+        Node::End => i == text.len() && match_here(rest, text, i),
+        Node::Star(a) => {
+            let mut j = i;
+            while j < text.len() && char_match(a, text[j]) {
+                j += 1;
+            }
+            // greedy, then back off
+            loop {
+                if match_here(rest, text, j) {
+                    return true;
+                }
+                if j == i {
+                    return false;
+                }
+                j -= 1;
+            }
+        }
+        Node::Plus(a) => {
+            if i >= text.len() || !char_match(a, text[i]) {
+                return false;
+            }
+            let floor = i + 1;
+            let mut j = floor;
+            while j < text.len() && char_match(a, text[j]) {
+                j += 1;
+            }
+            loop {
+                if match_here(rest, text, j) {
+                    return true;
+                }
+                if j == floor {
+                    return false;
+                }
+                j -= 1;
+            }
+        }
+        Node::Opt(a) => {
+            (i < text.len() && char_match(a, text[i]) && match_here(rest, text, i + 1))
+                || match_here(rest, text, i)
+        }
+        single => {
+            i < text.len() && char_match(single, text[i]) && match_here(rest, text, i + 1)
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn pat(s: &str) -> Pattern {
+        Pattern::new(s).unwrap()
+    }
+
+    #[test]
+    fn substring_patterns_match_anywhere() {
+        assert!(pat("wq").matches("layer3.wq"));
+        assert!(pat("layer0").matches("layer0.w_gate"));
+        assert!(!pat("head").matches("layer0.wq"));
+    }
+
+    #[test]
+    fn regex_digits_and_anchors() {
+        let p = pat(r"layer\d+\.wq");
+        assert!(p.matches("layer0.wq"));
+        assert!(p.matches("layer12.wq"));
+        assert!(!p.matches("layer.wq"));
+        let anchored = pat("^head$");
+        assert!(anchored.matches("head"));
+        assert!(!anchored.matches("layer0.head"));
+        assert!(!anchored.matches("heads"));
+    }
+
+    #[test]
+    fn regex_alternation_and_classes() {
+        let p = pat("w[qk]$");
+        assert!(p.matches("layer1.wq"));
+        assert!(p.matches("layer1.wk"));
+        assert!(!p.matches("layer1.wv"));
+        let alt = pat("wq|w_gate");
+        assert!(alt.matches("layer0.wq"));
+        assert!(alt.matches("layer1.w_gate"));
+        assert!(!alt.matches("layer1.wo"));
+        let neg = pat("w[^qk]$");
+        assert!(neg.matches("layer1.wv"));
+        assert!(!neg.matches("layer1.wq"));
+    }
+
+    #[test]
+    fn regex_star_plus_opt() {
+        assert!(pat("la.*wq").matches("layer9.wq"));
+        assert!(pat("^w_?gate").matches("w_gate"));
+        assert!(pat("^w_?gate").matches("wgate"));
+        assert!(!pat("x+").matches("layer0.wq"));
+        // `*` may match zero chars
+        assert!(pat("^ab*c").matches("ac"));
+    }
+
+    #[test]
+    fn groups_and_bad_escapes_fail_loudly() {
+        assert!(Pattern::new("(wq|wk)").is_err());
+        assert!(Pattern::new(r"\y").is_err());
+        assert!(Pattern::new("[abc").is_err());
+        assert!(Pattern::new("*wq").is_err());
+        assert!(Pattern::new("").is_err());
+    }
+
+    #[test]
+    fn selector_include_exclude_semantics() {
+        let all = Selector::all();
+        assert!(all.matches("layer0.wq"));
+        assert!(all.matches("head"));
+
+        let s = Selector::new(
+            &["wq".into(), r"layer\d+\.w_gate".into()],
+            &["layer1".into()],
+        )
+        .unwrap();
+        assert!(s.matches("layer0.wq"));
+        assert!(s.matches("layer2.w_gate"));
+        assert!(!s.matches("layer1.wq"), "exclude wins over include");
+        assert!(!s.matches("layer0.wo"), "not included");
+
+        // empty include = everything (minus excludes)
+        let only_excl = Selector::new(&[], &["head".into()]).unwrap();
+        assert!(only_excl.matches("layer0.wq"));
+        assert!(!only_excl.matches("head"));
+    }
+
+    #[test]
+    fn selector_rejects_bad_patterns() {
+        assert!(Selector::new(&["(bad".into()], &[]).is_err());
+        assert!(Selector::new(&[], &["[oops".into()]).is_err());
+    }
+}

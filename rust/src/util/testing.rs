@@ -11,9 +11,11 @@
 //! heterogeneous fixture traces and asserting the cross-path equivalence
 //! / exactly-once contracts in one place instead of three.
 
+use super::pattern::Selector;
 use super::rng::Rng;
 use crate::data::TokenRequest;
 use crate::models::Transformer;
+use crate::quant::packing::PackFormat;
 use crate::server::{GreedyExecutor, ServeReport, StepExecutor};
 
 /// Run `prop` for `cases` deterministic seeds. Panics with the failing seed
@@ -78,6 +80,21 @@ pub fn retry_timing<T>(attempts: usize, mut f: impl FnMut() -> Result<T, String>
         }
     }
     unreachable!("retry_timing returns or panics inside the loop");
+}
+
+/// Build the packed-vs-dense twin pair the quantized-serving equivalence
+/// tests compare: a fixture model with every linear weight packed as
+/// `fmt`, and its [`Transformer::dequantized`] f32 twin holding exactly
+/// the values the packed codes decode to. Any divergence between serving
+/// the two is a packed-kernel bug, not quantization error.
+pub fn packed_twins(fmt: PackFormat, group: usize, seed: u64) -> (Transformer, Transformer) {
+    let mut packed = super::fixtures::fixture_target(seed);
+    let n = packed
+        .pack_weights(&Selector::all(), fmt, group)
+        .expect("fixture dims admit every pack format");
+    assert!(n > 0, "fixture has linear weights to pack");
+    let dense = packed.dequantized();
+    (packed, dense)
 }
 
 /// Projected peak KV bytes the scheduler reserves for one greedy request

@@ -1,0 +1,214 @@
+//! Quantized serving equivalence — the packed execution path's
+//! correctness anchor: serving a packed model must be indistinguishable
+//! from serving the dequantized-f32 model holding exactly the values the
+//! packed codes decode to. Prefill/forward are compared bitwise (the
+//! fused-dequant matmul preserves f32 accumulation order); decode and the
+//! continuous-batching scheduler are compared at token level, which is
+//! bit-identity at the ServeReport contract (outputs are token bytes).
+//!
+//! Also exercises the compress→export→serve artifact contract end to end:
+//! the shipped `configs/pipeline_packed_serve_fixture.yaml` pipeline runs
+//! hermetically, and the artifact it writes serves bit-identically both
+//! through `packed_store::load_packed` and the `packed-artifact` model
+//! factory.
+
+use angelslim::config::SlimConfig;
+use angelslim::coordinator::{CompressEngine, ModelFactory};
+use angelslim::models::{packed_store, AttnOverride, PackedLinear, Transformer};
+use angelslim::quant::packing::PackFormat;
+use angelslim::server::{ServeCfg, ServingEngine};
+use angelslim::tensor::ops::argmax;
+use angelslim::util::fixtures::{fixture_corpus, FixtureSpec};
+use angelslim::util::testing::{
+    assert_outputs_match, assert_serving_contracts, fixture_requests, packed_twins,
+};
+
+const FORMATS: [PackFormat; 4] = [
+    PackFormat::Int4,
+    PackFormat::TwoBit,
+    PackFormat::Ternary167,
+    PackFormat::Sherry125,
+];
+
+#[test]
+fn packed_forward_and_prefill_bit_identical_to_dequantized_twin() {
+    let spec = FixtureSpec::default();
+    let toks = fixture_corpus(&spec, 24, 17);
+    for fmt in FORMATS {
+        let (packed, dense) = packed_twins(fmt, 16, 9);
+        let name = fmt.name();
+
+        let lp = packed.forward(&toks, &AttnOverride::None);
+        let ld = dense.forward(&toks, &AttnOverride::None);
+        assert_eq!(lp.data, ld.data, "{name}: forward logits drifted bitwise");
+
+        let mut cp = packed.new_cache();
+        let mut cd = dense.new_cache();
+        let rp = packed.prefill(&mut cp, &toks);
+        let rd = dense.prefill(&mut cd, &toks);
+        assert_eq!(rp.data, rd.data, "{name}: prefill logits drifted bitwise");
+    }
+}
+
+#[test]
+fn packed_greedy_decode_token_identical_through_kv_cache() {
+    let spec = FixtureSpec::default();
+    let prompt = fixture_corpus(&spec, 8, 23);
+    for fmt in FORMATS {
+        let (packed, dense) = packed_twins(fmt, 16, 4);
+        let name = fmt.name();
+
+        let generate = |m: &Transformer| -> Vec<u8> {
+            let mut cache = m.new_cache();
+            let rows = m.prefill(&mut cache, &prompt);
+            let mut last = rows.row(rows.rows() - 1).to_vec();
+            let mut out = Vec::new();
+            for _ in 0..24 {
+                let next = argmax(&last) as u8;
+                out.push(next);
+                last = m.decode_step(&mut cache, next);
+            }
+            out
+        };
+        assert_eq!(
+            generate(&packed),
+            generate(&dense),
+            "{name}: packed decode_step diverged from the dequantized twin"
+        );
+    }
+}
+
+#[test]
+fn packed_scheduler_serving_bit_identical_to_dequantized_twin() {
+    let spec = FixtureSpec::default();
+    let corpus = fixture_corpus(&spec, 2_048, 31);
+    for fmt in FORMATS {
+        let (packed, dense) = packed_twins(fmt, 16, 6);
+        let name = fmt.name();
+        let reqs = || fixture_requests(&corpus, 6, 10);
+
+        let dense_report =
+            ServingEngine::serve::<Transformer, _>(reqs(), &dense, None, 0).unwrap();
+        let packed_report = ServingEngine::serve_scheduled::<Transformer, _>(
+            reqs(),
+            &packed,
+            None,
+            &ServeCfg::continuous(3),
+            0,
+        )
+        .unwrap();
+        assert_serving_contracts(&packed_report, 6, 0);
+        assert_outputs_match(
+            &dense_report,
+            &packed_report,
+            &format!("{name}: packed continuous vs dense sequential"),
+        );
+    }
+}
+
+/// The full compress→export→serve loop on the shipped pipeline config:
+/// run the mixed-precision pack pipeline hermetically, reload the
+/// exported artifact (both directly and through the `packed-artifact`
+/// model factory), and demand token-identical serving everywhere.
+#[test]
+fn exported_packed_artifact_serves_bit_identically() {
+    let path = "configs/pipeline_packed_serve_fixture.yaml";
+    let engine = CompressEngine::from_file(path).unwrap();
+    let save_path = engine.cfg.global.save_path.clone();
+    let _ = std::fs::remove_dir_all(&save_path);
+    let (report, ctx) = engine.run_with_context().unwrap();
+
+    assert_eq!(report.stages.len(), 3, "{report:?}");
+    // stage ratios charge still-f32 layers honestly, so the first pack
+    // stage (attention+head int4, MLP still f32) shrinks but stays well
+    // above the final mixed-precision ratio the second stage reaches
+    let (s0, s1) = (&report.stages[0], &report.stages[1]);
+    assert_eq!(s0.kind, "quantization", "{s0:?}");
+    assert_eq!(s1.kind, "quantization", "{s1:?}");
+    assert!(s0.size_ratio < 1.0, "int4 stage must shrink storage: {s0:?}");
+    assert!(s1.size_ratio < s0.size_ratio, "second pack stage shrinks further: {s1:?}");
+    assert!(s1.size_ratio < 0.2, "mixed int4+2bit lands far below f32: {s1:?}");
+    assert!(report.overall_size_ratio() < 0.2, "{report:?}");
+    assert!(
+        report.stages[2].notes.iter().any(|n| n.contains("packed artifact")),
+        "{report:?}"
+    );
+
+    let compressed = ctx.into_model().expect("pipeline surrenders the packed model");
+    // the shipped config is mixed precision: int4 attention, 2bit MLP
+    for (weight, want) in [
+        ("layer0.wq", PackFormat::Int4),
+        ("head", PackFormat::Int4),
+        ("layer0.w_gate", PackFormat::TwoBit),
+        ("layer1.w_down", PackFormat::TwoBit),
+    ] {
+        let fmt = compressed
+            .named_weights()
+            .into_iter()
+            .find(|(n, _)| n == weight)
+            .map(|(_, w)| w.format())
+            .unwrap();
+        assert_eq!(fmt, want, "{weight}");
+    }
+
+    let loaded = packed_store::load_packed(&save_path).unwrap();
+    let dense = compressed.dequantized();
+    let spec = FixtureSpec::default();
+    let corpus = fixture_corpus(&spec, 2_048, 41);
+    let reqs = || fixture_requests(&corpus, 6, 10);
+
+    let dense_report = ServingEngine::serve::<Transformer, _>(reqs(), &dense, None, 0).unwrap();
+    let loaded_report = ServingEngine::serve_scheduled::<Transformer, _>(
+        reqs(),
+        &loaded,
+        None,
+        &ServeCfg::continuous(4),
+        0,
+    )
+    .unwrap();
+    assert_serving_contracts(&loaded_report, 6, 0);
+    assert_outputs_match(&dense_report, &loaded_report, "exported artifact vs dequantized f32");
+
+    // the same artifact through the serve-side model factory
+    let mut cfg = SlimConfig::from_file(path).unwrap();
+    cfg.model.name = "packed-artifact".into();
+    cfg.model.artifacts_dir = save_path.clone();
+    let via_factory = ModelFactory::load(&cfg).unwrap();
+    let factory_report =
+        ServingEngine::serve::<Transformer, _>(reqs(), &via_factory, None, 0).unwrap();
+    assert_outputs_match(&dense_report, &factory_report, "factory-loaded artifact vs f32");
+}
+
+/// Repacking guard: a second pack stage whose selector overlaps an
+/// already-packed weight must fail loudly instead of quantizing twice.
+#[test]
+fn overlapping_pack_stages_fail_loudly() {
+    let src = "global:\n  save_path: target/test-output/packed_overlap\n\
+               model:\n  name: tiny-fixture\n\
+               pipeline:\n  - pass: pack\n    format: int4\n    group_size: 16\n\
+               \x20 - pass: pack\n    format: 2bit\n    include: [w_gate]\n\
+               dataset:\n  kind: fixture\n  num_samples: 8\n  seq_len: 40\n";
+    let engine = CompressEngine::new(SlimConfig::from_str(src).unwrap()).unwrap();
+    let err = engine.run().unwrap_err();
+    let msg = format!("{err:#}");
+    assert!(msg.contains("already") && msg.contains("packed"), "{msg}");
+}
+
+/// `PackedLinear` storage accounting feeds the stage size_ratio: packing
+/// must report honestly smaller stored bytes per format.
+#[test]
+fn packed_twins_shrink_stored_bytes_per_format() {
+    for fmt in FORMATS {
+        let (packed, dense) = packed_twins(fmt, 16, 2);
+        assert!(
+            packed.stored_weight_bytes() < dense.stored_weight_bytes() / 4,
+            "{}: {} vs {}",
+            fmt.name(),
+            packed.stored_weight_bytes(),
+            dense.stored_weight_bytes()
+        );
+        // and the enum reports the format it holds
+        assert!(packed.named_weights().iter().all(|(_, w)| w.format() == fmt));
+        assert!(matches!(dense.head, PackedLinear::F32(_)));
+    }
+}
