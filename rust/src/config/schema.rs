@@ -14,7 +14,7 @@
 
 use super::yaml::{parse, Yaml};
 use crate::coordinator::{PassKind, PassRegistry};
-use crate::server::{AdmissionPolicy, ServeCfg};
+use crate::server::{AdmissionPolicy, CrashPoint, FaultPlan, ServeCfg};
 use anyhow::{bail, Context, Result};
 
 #[derive(Clone, Debug, PartialEq)]
@@ -230,18 +230,7 @@ impl SlimConfig {
                     .unwrap_or_else(|| vec!["perplexity".to_string()]),
                 enabled: eval.bool_or("enabled", true),
             },
-            serve: ServeCfg {
-                policy: AdmissionPolicy::parse(&serve.str_or("policy", "continuous"))?,
-                max_in_flight: non_negative(
-                    serve.i64_or("max_in_flight", 8),
-                    "serve.max_in_flight",
-                )?,
-                kv_budget_bytes: non_negative(
-                    serve.i64_or("kv_budget_bytes", 0),
-                    "serve.kv_budget_bytes",
-                )?,
-                workers: non_negative(serve.i64_or("workers", 1), "serve.workers")?,
-            },
+            serve: serve_from_yaml(&serve)?,
         };
         cfg.validate()?;
         Ok(cfg)
@@ -326,8 +315,128 @@ impl SlimConfig {
                 self.serve.workers
             );
         }
+        if let Some(d) = self.serve.deadline_ms {
+            if d.is_nan() || d <= 0.0 {
+                bail!(
+                    "serve.deadline_ms must be > 0 (virtual-clock milliseconds \
+                     from arrival), got {d}; omit the key for no deadline"
+                );
+            }
+        }
+        if self.serve.retry_backoff_ms.is_nan() || self.serve.retry_backoff_ms < 0.0 {
+            bail!(
+                "serve.retry_backoff_ms must be >= 0, got {}",
+                self.serve.retry_backoff_ms
+            );
+        }
+        if let Some(plan) = &self.serve.fault {
+            plan.validate(self.serve.workers)
+                .context("serve.fault: invalid fault plan")?;
+        }
         Ok(())
     }
+}
+
+/// Parse the `serve:` section — scheduler knobs plus the fault-tolerance
+/// surface (`deadline_ms`, `max_retries`, `retry_backoff_ms`, nested
+/// `fault:` block). Retry knobs without a `fault:` block are dead config
+/// (nothing injects faults in a plain run) and are rejected loudly.
+fn serve_from_yaml(serve: &Yaml) -> Result<ServeCfg> {
+    let fault = fault_from_yaml(serve)?;
+    if fault.is_none() {
+        for knob in ["max_retries", "retry_backoff_ms"] {
+            if serve.get(knob).is_some() {
+                bail!(
+                    "serve.{knob} is set but there is no `serve.fault:` block; \
+                     retries only apply under fault injection — remove the knob \
+                     or add a fault block"
+                );
+            }
+        }
+    }
+    let deadline_ms = match serve.get("deadline_ms") {
+        None => None,
+        Some(v) => Some(v.as_f64().with_context(|| {
+            format!("serve: deadline_ms must be a number, got `{v}`")
+        })?),
+    };
+    Ok(ServeCfg {
+        policy: AdmissionPolicy::parse(&serve.str_or("policy", "continuous"))?,
+        max_in_flight: non_negative(serve.i64_or("max_in_flight", 8), "serve.max_in_flight")?,
+        kv_budget_bytes: non_negative(
+            serve.i64_or("kv_budget_bytes", 0),
+            "serve.kv_budget_bytes",
+        )?,
+        workers: non_negative(serve.i64_or("workers", 1), "serve.workers")?,
+        deadline_ms,
+        max_retries: match stage_i64(serve, "max_retries", "serve")? {
+            Some(v) => non_negative(v, "serve.max_retries")?,
+            None => 0,
+        },
+        retry_backoff_ms: stage_f64(serve, "retry_backoff_ms", "serve")?.unwrap_or(1.0),
+        fault,
+    })
+}
+
+/// The knobs a `serve.fault:` block may carry — anything else (an unknown
+/// fault kind, a typo) is a loud error, never silently ignored chaos.
+const FAULT_KEYS: &[&str] = &[
+    "seed",
+    "step_error_rate",
+    "nan_rate",
+    "stall_rate",
+    "stall_ms",
+    "crash_worker",
+    "crash_at_ms",
+];
+
+fn fault_from_yaml(serve: &Yaml) -> Result<Option<FaultPlan>> {
+    let fault = match serve.get("fault") {
+        None => return Ok(None),
+        Some(f) => f,
+    };
+    match fault {
+        Yaml::Map(m) => {
+            if let Some(unknown) = m.keys().find(|k| !FAULT_KEYS.contains(&k.as_str())) {
+                bail!(
+                    "serve.fault: unknown fault knob `{unknown}` \
+                     (allowed: {FAULT_KEYS:?})"
+                );
+            }
+        }
+        other => bail!("serve.fault must be a map of fault knobs, got `{other}`"),
+    }
+    let scope = "serve.fault";
+    let mut plan = FaultPlan::default();
+    if let Some(v) = stage_i64(fault, "seed", scope)? {
+        plan.seed = non_negative(v, "serve.fault.seed")? as u64;
+    }
+    if let Some(v) = stage_f64(fault, "step_error_rate", scope)? {
+        plan.step_error_rate = v;
+    }
+    if let Some(v) = stage_f64(fault, "nan_rate", scope)? {
+        plan.nan_rate = v;
+    }
+    if let Some(v) = stage_f64(fault, "stall_rate", scope)? {
+        plan.stall_rate = v;
+    }
+    if let Some(v) = stage_f64(fault, "stall_ms", scope)? {
+        plan.stall_ms = v;
+    }
+    let crash_worker = stage_i64(fault, "crash_worker", scope)?;
+    let crash_at_ms = stage_f64(fault, "crash_at_ms", scope)?;
+    match (crash_worker, crash_at_ms) {
+        (None, None) => {}
+        (Some(w), Some(at_ms)) => plan.crashes.push(CrashPoint {
+            worker: non_negative(w, "serve.fault.crash_worker")?,
+            at_ms,
+        }),
+        _ => bail!(
+            "serve.fault: crash_worker and crash_at_ms must be set together \
+             (a crash needs both a target worker and a virtual time)"
+        ),
+    }
+    Ok(Some(plan))
 }
 
 /// The per-stage override keys a `pipeline:` entry may carry. A key
@@ -717,6 +826,68 @@ serve:
     // zero-worker and budget-splits-to-zero rejections are covered at the
     // integration level in tests/test_configs.rs (which also exercises the
     // executor-aware ensure_requests_fit guard)
+
+    fn serve_cfg(serve_yaml: &str) -> Result<SlimConfig> {
+        SlimConfig::from_str(&format!(
+            "model:\n  name: m\ncompression:\n  method: quantization\nserve:\n{serve_yaml}"
+        ))
+    }
+
+    #[test]
+    fn serve_fault_block_parses_into_a_plan() {
+        let c = serve_cfg(
+            "  workers: 2\n  deadline_ms: 40\n  max_retries: 3\n  retry_backoff_ms: 2.5\n\
+             \x20 fault:\n    seed: 11\n    step_error_rate: 0.1\n    nan_rate: 0.05\n\
+             \x20   stall_rate: 0.2\n    stall_ms: 4\n    crash_worker: 1\n    crash_at_ms: 9.5\n",
+        )
+        .unwrap();
+        assert_eq!(c.serve.deadline_ms, Some(40.0));
+        assert_eq!(c.serve.max_retries, 3);
+        assert!((c.serve.retry_backoff_ms - 2.5).abs() < 1e-12);
+        let plan = c.serve.fault.expect("fault block parsed");
+        assert_eq!(plan.seed, 11);
+        assert!((plan.step_error_rate - 0.1).abs() < 1e-12);
+        assert!((plan.nan_rate - 0.05).abs() < 1e-12);
+        assert_eq!(plan.crashes, vec![CrashPoint { worker: 1, at_ms: 9.5 }]);
+        // no fault block → no plan, retry defaults
+        let d = serve_cfg("  workers: 2\n").unwrap();
+        assert!(d.serve.fault.is_none());
+        assert_eq!(d.serve.max_retries, 0);
+        assert_eq!(d.serve.deadline_ms, None);
+    }
+
+    #[test]
+    fn serve_rejects_misconfigured_fault_tolerance() {
+        for (bad, why) in [
+            ("  deadline_ms: 0\n", "zero deadline"),
+            ("  deadline_ms: -5\n", "negative deadline"),
+            ("  deadline_ms: soon\n", "non-numeric deadline"),
+            ("  max_retries: 2\n", "retries without a fault block"),
+            ("  retry_backoff_ms: 1\n", "backoff without a fault block"),
+            (
+                "  fault:\n    seed: 1\n  retry_backoff_ms: -1\n",
+                "negative backoff",
+            ),
+            ("  fault:\n    flux_capacitor: 0.5\n", "unknown fault knob"),
+            ("  fault:\n    step_error_rate: 1.5\n", "rate above 1"),
+            ("  fault:\n    nan_rate: -0.1\n", "negative rate"),
+            ("  fault:\n    stall_ms: -2\n", "negative stall"),
+            ("  fault:\n    crash_worker: 0\n", "crash_worker without crash_at_ms"),
+            ("  fault:\n    crash_at_ms: 5\n", "crash_at_ms without crash_worker"),
+            (
+                "  workers: 2\n  fault:\n    crash_worker: 2\n    crash_at_ms: 5\n",
+                "crash target out of range",
+            ),
+            ("  fault: chaos\n", "scalar fault block"),
+        ] {
+            assert!(serve_cfg(bad).is_err(), "{why} must fail loudly: {bad:?}");
+        }
+        // a valid crash pair on an in-range worker parses
+        assert!(serve_cfg(
+            "  workers: 2\n  fault:\n    crash_worker: 1\n    crash_at_ms: 5\n"
+        )
+        .is_ok());
+    }
 
     #[test]
     fn rejects_unknown_method() {

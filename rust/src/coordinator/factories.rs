@@ -256,6 +256,44 @@ mod tests {
         assert!(format!("{err:#}").contains("export-packed"), "{err:#}");
     }
 
+    /// The `packed-artifact` serve factory surfaces artifact corruption
+    /// as a structured error (never a panic): truncation and bit flips in
+    /// `packed_weights.bin` both fail the stored checksum.
+    #[test]
+    fn packed_artifact_factory_rejects_corrupt_artifacts() {
+        use crate::models::packed_store::{self, WEIGHTS_FILE};
+        use crate::quant::packing::PackFormat;
+        use crate::util::Selector;
+
+        let mut m = crate::util::fixtures::fixture_target(13);
+        m.pack_weights(&Selector::all(), PackFormat::TwoBit, 0).unwrap();
+        let dir = std::env::temp_dir().join("angelslim_factory_packed_corrupt");
+        let _ = std::fs::remove_dir_all(&dir);
+        let dir = dir.to_string_lossy().into_owned();
+        packed_store::save_packed(&m, &dir).unwrap();
+
+        let mut c = cfg("quantization", "int8");
+        c.model.name = "packed-artifact".into();
+        c.model.artifacts_dir = dir.clone();
+        assert!(ModelFactory::load(&c).is_ok(), "pristine artifact serves");
+
+        let bin = format!("{dir}/{WEIGHTS_FILE}");
+        let orig = std::fs::read(&bin).unwrap();
+
+        std::fs::write(&bin, &orig[..orig.len() - 5]).unwrap();
+        let err = format!("{:#}", ModelFactory::load(&c).unwrap_err());
+        assert!(err.contains("corrupt"), "truncated: {err}");
+
+        let mut flipped = orig.clone();
+        let mid = flipped.len() / 2;
+        flipped[mid] ^= 0x01;
+        std::fs::write(&bin, &flipped).unwrap();
+        let err = format!("{:#}", ModelFactory::load(&c).unwrap_err());
+        assert!(err.contains("corrupt"), "bit flip: {err}");
+
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
     #[test]
     fn fixture_factories_are_hermetic() {
         // no artifacts/ on disk needed for the fixture model + corpus

@@ -209,7 +209,22 @@ fn print_serve_report(title: &str, report: &angelslim::server::ServeReport) {
     t.row_strs(&["TTFT p99 (ms)", &f2(report.ttft_summary().p99)]);
     t.row_strs(&["latency p90 (ms)", &f2(report.latency_summary().p90)]);
     t.row_strs(&["peak KV bytes", &report.peak_kv_bytes.to_string()]);
+    // fault-tolerance accounting, only when something actually went wrong
+    // (fault-free output stays byte-identical to the pre-fault CLI)
+    let counts = report.outcome_counts();
+    let faulted = counts.failed + counts.deadline_exceeded + counts.shed;
+    if faulted > 0 || !report.crashed_workers.is_empty() {
+        t.row_strs(&["goodput (completed)", &report.goodput().to_string()]);
+        t.row_strs(&["failed", &counts.failed.to_string()]);
+        t.row_strs(&["deadline exceeded", &counts.deadline_exceeded.to_string()]);
+        t.row_strs(&["shed", &counts.shed.to_string()]);
+        t.row_strs(&["retried requests", &report.retried().to_string()]);
+        t.row_strs(&["crashed workers", &report.crashed_workers.len().to_string()]);
+    }
     t.print();
+    for (w, why) in &report.crashed_workers {
+        println!("  worker {w} crashed: {why}");
+    }
 }
 
 fn cmd_eval_quant() -> Result<()> {

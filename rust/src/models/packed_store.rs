@@ -31,6 +31,19 @@ use super::{Transformer, TransformerCfg};
 pub const META_FILE: &str = "packed_meta.json";
 pub const WEIGHTS_FILE: &str = "packed_weights.bin";
 
+/// FNV-1a 64 over the weights buffer — a cheap, dependency-free integrity
+/// check. The digest is stored in `packed_meta.json` and re-verified on
+/// load, so a truncated or bit-flipped `packed_weights.bin` fails loudly
+/// instead of decoding into silently-wrong weights.
+fn fnv1a64(bytes: &[u8]) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
 fn push_f32s(buf: &mut Vec<u8>, vals: &[f32]) {
     buf.extend_from_slice(&(vals.len() as u64).to_le_bytes());
     for v in vals {
@@ -72,21 +85,35 @@ struct Reader<'a> {
 
 impl<'a> Reader<'a> {
     fn take(&mut self, n: usize) -> Result<&'a [u8]> {
-        if self.pos + n > self.buf.len() {
-            bail!(
+        match self.pos.checked_add(n) {
+            Some(end) if end <= self.buf.len() => {
+                let s = &self.buf[self.pos..end];
+                self.pos = end;
+                Ok(s)
+            }
+            _ => bail!(
                 "packed weights truncated: need {n} bytes at offset {}, file has {}",
                 self.pos,
                 self.buf.len()
-            );
+            ),
         }
-        let s = &self.buf[self.pos..self.pos + n];
-        self.pos += n;
-        Ok(s)
     }
 
     fn read_len(&mut self) -> Result<usize> {
         let b = self.take(8)?;
-        Ok(u64::from_le_bytes(b.try_into().unwrap()) as usize)
+        let n = u64::from_le_bytes(b.try_into().unwrap());
+        // a length prefix can never legitimately exceed what's left of the
+        // file; bounding it here keeps a corrupt prefix from driving huge
+        // (or overflowing) downstream allocations
+        let remaining = (self.buf.len() - self.pos) as u64;
+        if n > remaining {
+            bail!(
+                "packed weights: section length {n} at offset {} exceeds the \
+                 {remaining} bytes left in the file (corrupt length prefix?)",
+                self.pos - 8
+            );
+        }
+        Ok(n as usize)
     }
 
     fn read_f32s(&mut self, expect: usize) -> Result<Vec<f32>> {
@@ -140,7 +167,8 @@ pub fn save_packed(model: &Transformer, dir: &str) -> Result<usize> {
     }
 
     let meta = format!(
-        "{{\"kind\":\"packed-model\",\"cfg\":{{\"vocab\":{},\"d_model\":{},\"n_layers\":{},\"n_heads\":{},\"d_ff\":{},\"max_t\":{}}},\"weights\":[{}]}}",
+        "{{\"kind\":\"packed-model\",\"checksum\":\"{:016x}\",\"cfg\":{{\"vocab\":{},\"d_model\":{},\"n_layers\":{},\"n_heads\":{},\"d_ff\":{},\"max_t\":{}}},\"weights\":[{}]}}",
+        fnv1a64(&buf),
         cfg.vocab,
         cfg.d_model,
         cfg.n_layers,
@@ -241,6 +269,19 @@ pub fn load_packed(dir: &str) -> Result<Transformer> {
 
     let bin_path = format!("{dir}/{WEIGHTS_FILE}");
     let raw = std::fs::read(&bin_path).with_context(|| format!("reading {bin_path}"))?;
+    let want = meta
+        .get("checksum")
+        .and_then(Json::as_str)
+        .with_context(|| {
+            format!("{meta_path}: missing checksum — re-export the artifact")
+        })?;
+    let got = format!("{:016x}", fnv1a64(&raw));
+    if got != want {
+        bail!(
+            "{bin_path}: checksum {got} does not match {meta_path}'s {want} — \
+             the artifact is corrupt (truncated or bit-flipped?)"
+        );
+    }
     let mut r = Reader { buf: &raw, pos: 0 };
     let d = cfg.d_model;
     let embed = Tensor::from_vec(&[cfg.vocab, d], r.read_f32s(cfg.vocab * d)?);
@@ -408,6 +449,76 @@ mod tests {
         raw.truncate(raw.len() - 9);
         std::fs::write(&bin, &raw).unwrap();
         assert!(load_packed(&dir).is_err());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    /// Corruption matrix: truncation mid-record, trailing garbage, and a
+    /// single bit flip must all be `Err` (never a panic, never silently
+    /// wrong weights) and name the artifact as corrupt.
+    #[test]
+    fn load_rejects_truncation_garbage_and_bit_flips() {
+        let mut m = fixture_target(8);
+        m.pack_weights(&Selector::all(), PackFormat::Int4, 16).unwrap();
+        let dir = tmp_dir("chaos");
+        save_packed(&m, &dir).unwrap();
+        let bin = format!("{dir}/{WEIGHTS_FILE}");
+        let orig = std::fs::read(&bin).unwrap();
+
+        // truncation mid-record: cut inside the weight sections
+        std::fs::write(&bin, &orig[..orig.len() / 2]).unwrap();
+        let err = format!("{:#}", load_packed(&dir).unwrap_err());
+        assert!(err.contains("corrupt"), "truncation: {err}");
+
+        // trailing garbage after the last weight
+        let mut fat = orig.clone();
+        fat.extend_from_slice(&[0xAB; 7]);
+        std::fs::write(&bin, &fat).unwrap();
+        let err = format!("{:#}", load_packed(&dir).unwrap_err());
+        assert!(err.contains("corrupt"), "trailing garbage: {err}");
+
+        // one flipped bit deep in the payload — structurally still
+        // parseable, so only the checksum can catch it
+        let mut flipped = orig.clone();
+        let mid = flipped.len() / 3;
+        flipped[mid] ^= 0x10;
+        std::fs::write(&bin, &flipped).unwrap();
+        let err = format!("{:#}", load_packed(&dir).unwrap_err());
+        assert!(err.contains("corrupt"), "bit flip: {err}");
+
+        // restoring the original bytes loads cleanly again
+        std::fs::write(&bin, &orig).unwrap();
+        assert!(load_packed(&dir).is_ok());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    /// A shape edit in `packed_meta.json` (mismatched meta) must be a
+    /// structured error even though the weights file itself is intact.
+    #[test]
+    fn load_rejects_meta_shape_edit_and_missing_checksum() {
+        let m = fixture_target(2);
+        let dir = tmp_dir("meta_edit");
+        save_packed(&m, &dir).unwrap();
+        let meta_path = format!("{dir}/{META_FILE}");
+        let meta = std::fs::read_to_string(&meta_path).unwrap();
+
+        // edit one weight entry's row count
+        let needle = format!("\"n\":{}", m.cfg.d_ff);
+        let tampered = meta.replacen(&needle, "\"n\":4096", 1);
+        assert_ne!(tampered, meta, "fixture has a d_ff-row weight to tamper");
+        std::fs::write(&meta_path, &tampered).unwrap();
+        let err = format!("{:#}", load_packed(&dir).unwrap_err());
+        assert!(err.contains("cfg implies"), "shape edit: {err}");
+
+        // strip the checksum field: pre-checksum artifacts are rejected
+        // with guidance instead of skipping verification
+        let stripped = meta.replacen("\"checksum\"", "\"checksum_gone\"", 1);
+        assert_ne!(stripped, meta);
+        std::fs::write(&meta_path, &stripped).unwrap();
+        let err = format!("{:#}", load_packed(&dir).unwrap_err());
+        assert!(err.contains("missing checksum"), "{err}");
+
+        std::fs::write(&meta_path, &meta).unwrap();
+        assert!(load_packed(&dir).is_ok());
         let _ = std::fs::remove_dir_all(&dir);
     }
 }

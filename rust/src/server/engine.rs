@@ -15,6 +15,46 @@ use super::scheduler::{
     GreedyExecutor, PjrtBatchExecutor, Scheduler, ServeCfg, SpecExecutor, WorkerPool,
 };
 
+/// Terminal outcome of one submitted request. Every request the pool
+/// accepts ends in exactly one of these (the exactly-once accounting
+/// property, enforced by the scheduler and chaos-tested in
+/// `tests/test_fault_props.rs`).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum RequestOutcome {
+    /// decoded to completion; `output` is the full generation
+    Completed,
+    /// a step fault (or worker crash) consumed every retry attempt
+    Failed {
+        /// the final attempt's error, carrying request id + worker index
+        error: String,
+    },
+    /// cancelled past its deadline on the virtual clock; `output` keeps
+    /// whatever was decoded before cancellation
+    DeadlineExceeded,
+    /// never ran to a verdict: every worker was dead when its turn came
+    Shed,
+}
+
+impl RequestOutcome {
+    pub fn name(&self) -> &'static str {
+        match self {
+            RequestOutcome::Completed => "completed",
+            RequestOutcome::Failed { .. } => "failed",
+            RequestOutcome::DeadlineExceeded => "deadline_exceeded",
+            RequestOutcome::Shed => "shed",
+        }
+    }
+}
+
+/// Per-outcome tallies over one report (see [`ServeReport::outcome_counts`]).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct OutcomeCounts {
+    pub completed: usize,
+    pub failed: usize,
+    pub deadline_exceeded: usize,
+    pub shed: usize,
+}
+
 #[derive(Clone, Debug)]
 pub struct CompletedRequest {
     pub id: u64,
@@ -24,11 +64,22 @@ pub struct CompletedRequest {
     /// completion time measured from *arrival*
     pub total_ms: f64,
     pub generated: usize,
+    /// how this request ended (always `Completed` on fault-free runs)
+    pub outcome: RequestOutcome,
+    /// execution attempts consumed (1 on fault-free runs; 0 for requests
+    /// cancelled or shed before their first admission)
+    pub attempts: usize,
+}
+
+impl CompletedRequest {
+    pub fn is_completed(&self) -> bool {
+        self.outcome == RequestOutcome::Completed
+    }
 }
 
 #[derive(Clone, Debug)]
 pub struct ServeReport {
-    /// completed requests, ordered by id
+    /// every submitted request with its terminal outcome, ordered by id
     pub completed: Vec<CompletedRequest>,
     pub wall_s: f64,
     /// end of the last decode round on the virtual timeline (max worker
@@ -51,6 +102,9 @@ pub struct ServeReport {
     /// entry stays within that worker's `ServeCfg::per_worker_budgets`
     /// share (property-tested in `tests/test_sharded_props.rs`)
     pub worker_peak_kv_bytes: Vec<usize>,
+    /// workers lost during the run as `(worker index, crash message)`;
+    /// empty on fault-free runs
+    pub crashed_workers: Vec<(usize, String)>,
 }
 
 impl ServeReport {
@@ -90,12 +144,54 @@ impl ServeReport {
         }
     }
 
-    pub fn ttft_summary(&self) -> Summary {
-        Summary::of(&self.completed.iter().map(|c| c.ttft_ms).collect::<Vec<_>>())
+    /// Requests that decoded to completion — the number a fault-tolerant
+    /// pool is graded on (`bench_faults` gates on it).
+    pub fn goodput(&self) -> usize {
+        self.completed.iter().filter(|c| c.is_completed()).count()
     }
 
+    /// Per-outcome tallies across every submitted request.
+    pub fn outcome_counts(&self) -> OutcomeCounts {
+        let mut counts = OutcomeCounts::default();
+        for c in &self.completed {
+            match c.outcome {
+                RequestOutcome::Completed => counts.completed += 1,
+                RequestOutcome::Failed { .. } => counts.failed += 1,
+                RequestOutcome::DeadlineExceeded => counts.deadline_exceeded += 1,
+                RequestOutcome::Shed => counts.shed += 1,
+            }
+        }
+        counts
+    }
+
+    /// Requests that consumed more than one execution attempt.
+    pub fn retried(&self) -> usize {
+        self.completed.iter().filter(|c| c.attempts > 1).count()
+    }
+
+    /// TTFT over requests that completed (failed/cancelled requests would
+    /// skew the latency picture with eviction times).
+    pub fn ttft_summary(&self) -> Summary {
+        Summary::of(
+            &self
+                .completed
+                .iter()
+                .filter(|c| c.is_completed())
+                .map(|c| c.ttft_ms)
+                .collect::<Vec<_>>(),
+        )
+    }
+
+    /// Total latency over requests that completed.
     pub fn latency_summary(&self) -> Summary {
-        Summary::of(&self.completed.iter().map(|c| c.total_ms).collect::<Vec<_>>())
+        Summary::of(
+            &self
+                .completed
+                .iter()
+                .filter(|c| c.is_completed())
+                .map(|c| c.total_ms)
+                .collect::<Vec<_>>(),
+        )
     }
 }
 
@@ -181,6 +277,7 @@ mod tests {
                 prompt: vec![1, 2, 3],
                 max_new_tokens: 10,
                 arrival_ms: i as f64 * 2.0,
+                deadline_ms: None,
             })
             .collect()
     }
@@ -194,6 +291,12 @@ mod tests {
         assert!(report.completed.iter().all(|c| c.generated == 10));
         assert!(report.tps() > 0.0);
         assert_eq!(report.mean_al, 1.0);
+        assert_eq!(report.goodput(), 6);
+        assert_eq!(report.retried(), 0);
+        assert!(report.crashed_workers.is_empty());
+        let counts = report.outcome_counts();
+        assert_eq!(counts.completed, 6);
+        assert_eq!(counts.failed + counts.deadline_exceeded + counts.shed, 0);
     }
 
     #[test]

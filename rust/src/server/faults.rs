@@ -1,0 +1,458 @@
+//! Deterministic fault injection for the serving pool.
+//!
+//! [`FaultInjector`] wraps any [`StepExecutor`] and, driven by a seeded
+//! [`FaultPlan`], emits per-request step errors, NaN/poisoned logits,
+//! worker stalls (virtual-clock inflation), and whole-worker crashes at
+//! chosen virtual times. Per-request draws are keyed on
+//! `(plan seed, request id, attempt, round)` — *not* on the shared
+//! decode RNG or wall time — so a given request faults at the same point
+//! of the same attempt for every worker count and admission
+//! interleaving, which is what makes the chaos property tests
+//! (`tests/test_fault_props.rs`) reproducible, and retried attempts see
+//! fresh draws so bounded retry actually recovers.
+//!
+//! The injector is engaged by [`ServeCfg::fault`]: `WorkerPool::run`
+//! wraps every worker's executor when a plan is present, and builds the
+//! bare executor otherwise — a fault-free config runs byte-identical to
+//! the pre-injection scheduler.
+//!
+//! [`ServeCfg::fault`]: super::scheduler::ServeCfg
+
+use super::scheduler::{StepEvent, StepExecutor, StepFault};
+use crate::data::TokenRequest;
+use crate::util::Rng;
+use anyhow::{bail, Result};
+use std::collections::HashMap;
+use std::fmt;
+
+/// Kill one worker the first time its clock reaches `at_ms`.
+#[derive(Clone, Debug, PartialEq)]
+pub struct CrashPoint {
+    pub worker: usize,
+    /// virtual time (ms) at/after which the worker's next round crashes
+    pub at_ms: f64,
+}
+
+/// A reproducible chaos profile — the `serve.fault:` YAML block.
+///
+/// Rates are per live request per round, in `[0, 1]`. All fields default
+/// to "no fault", so `FaultPlan::default()` is a valid no-op plan and
+/// each knob can be enabled independently.
+#[derive(Clone, Debug, PartialEq)]
+pub struct FaultPlan {
+    /// seed for every injection draw (independent of the decode seed)
+    pub seed: u64,
+    /// probability a request's round is replaced by a step error
+    pub step_error_rate: f64,
+    /// probability a request's round is replaced by poisoned (NaN) logits
+    pub nan_rate: f64,
+    /// probability a worker's round additionally stalls by `stall_ms`
+    pub stall_rate: f64,
+    /// virtual milliseconds added to the worker clock per stall
+    pub stall_ms: f64,
+    /// scheduled whole-worker crashes
+    pub crashes: Vec<CrashPoint>,
+}
+
+impl Default for FaultPlan {
+    fn default() -> Self {
+        FaultPlan {
+            seed: 0,
+            step_error_rate: 0.0,
+            nan_rate: 0.0,
+            stall_rate: 0.0,
+            stall_ms: 0.0,
+            crashes: Vec::new(),
+        }
+    }
+}
+
+impl FaultPlan {
+    pub fn seeded(mut self, seed: u64) -> Self {
+        self.seed = seed;
+        self
+    }
+
+    pub fn with_step_errors(mut self, rate: f64) -> Self {
+        self.step_error_rate = rate;
+        self
+    }
+
+    pub fn with_nan(mut self, rate: f64) -> Self {
+        self.nan_rate = rate;
+        self
+    }
+
+    pub fn with_stalls(mut self, rate: f64, stall_ms: f64) -> Self {
+        self.stall_rate = rate;
+        self.stall_ms = stall_ms;
+        self
+    }
+
+    pub fn with_crash(mut self, worker: usize, at_ms: f64) -> Self {
+        self.crashes.push(CrashPoint { worker, at_ms });
+        self
+    }
+
+    /// True when the plan injects nothing (all rates zero, no crashes).
+    pub fn is_noop(&self) -> bool {
+        self.step_error_rate == 0.0
+            && self.nan_rate == 0.0
+            && self.stall_rate == 0.0
+            && self.crashes.is_empty()
+    }
+
+    /// Reject malformed plans loudly: rates outside `[0, 1]`, negative
+    /// stall/crash times, or a crash aimed at a worker the pool does not
+    /// have (`workers` is the pool size).
+    pub fn validate(&self, workers: usize) -> Result<()> {
+        for (name, rate) in [
+            ("step_error_rate", self.step_error_rate),
+            ("nan_rate", self.nan_rate),
+            ("stall_rate", self.stall_rate),
+        ] {
+            if rate.is_nan() || !(0.0..=1.0).contains(&rate) {
+                bail!("fault.{name} must be a probability in [0, 1], got {rate}");
+            }
+        }
+        if self.stall_ms.is_nan() || self.stall_ms < 0.0 {
+            bail!("fault.stall_ms must be >= 0, got {}", self.stall_ms);
+        }
+        for c in &self.crashes {
+            if c.worker >= workers {
+                bail!(
+                    "fault.crash_worker {} is out of range for a pool of {workers} \
+                     worker(s)",
+                    c.worker
+                );
+            }
+            if c.at_ms.is_nan() || c.at_ms < 0.0 {
+                bail!("fault.crash_at_ms must be >= 0, got {}", c.at_ms);
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Typed error for an injected whole-worker crash, so the pool (and the
+/// crash log in `ServeReport::crashed_workers`) can tell scheduled chaos
+/// from a real executor failure.
+#[derive(Clone, Debug)]
+pub struct WorkerCrash {
+    pub worker: usize,
+    /// worker clock when the crash fired
+    pub at_ms: f64,
+}
+
+impl fmt::Display for WorkerCrash {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(
+            f,
+            "injected crash of worker {} at virtual t={:.3} ms",
+            self.worker, self.at_ms
+        )
+    }
+}
+
+impl std::error::Error for WorkerCrash {}
+
+/// A [`StepExecutor`] wrapper that injects the faults of a [`FaultPlan`].
+///
+/// Healthy events coming out of the inner executor are deterministically
+/// replaced with [`StepFault`]s; pure-retirement events (no compute this
+/// round) are never faulted. Crash checks run before the inner round so a
+/// scheduled crash loses the round's work, like a real one.
+pub struct FaultInjector<E: StepExecutor> {
+    inner: E,
+    plan: FaultPlan,
+    worker: usize,
+    /// worker-local stream for stall draws (worker-level, not per-request)
+    stall_rng: Rng,
+    /// per-request admission count = the attempt currently executing
+    admits: HashMap<u64, usize>,
+    /// rounds stepped in the current attempt, per live request
+    rounds: HashMap<u64, u64>,
+    pending_stall_ms: f64,
+    crashed: bool,
+}
+
+impl<E: StepExecutor> FaultInjector<E> {
+    pub fn new(inner: E, plan: FaultPlan, worker: usize) -> Self {
+        let stall_rng = Rng::new(
+            plan.seed ^ 0xFA17_5EED ^ (worker as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15),
+        );
+        FaultInjector {
+            inner,
+            plan,
+            worker,
+            stall_rng,
+            admits: HashMap::new(),
+            rounds: HashMap::new(),
+            pending_stall_ms: 0.0,
+            crashed: false,
+        }
+    }
+
+    /// Deterministic uniform draw for one (request, attempt, round, fault
+    /// kind) tuple — independent of worker count and interleaving.
+    fn draw(&self, id: u64, attempt: usize, round: u64, salt: u64) -> f64 {
+        let mut h = self.plan.seed ^ 0x5EED_FA17;
+        h ^= id.wrapping_mul(0x9E37_79B9_7F4A_7C15);
+        h ^= (attempt as u64).wrapping_mul(0xD1B5_4A32_D192_ED03);
+        h ^= round.wrapping_mul(0x8CB9_2BA7_2F3D_8DD7);
+        h ^= salt.wrapping_mul(0xA24B_AED4_963E_E407);
+        Rng::new(h).f64()
+    }
+}
+
+impl<E: StepExecutor> StepExecutor for FaultInjector<E> {
+    fn projected_bytes(&self, req: &TokenRequest) -> usize {
+        self.inner.projected_bytes(req)
+    }
+
+    fn note_attempt(&mut self, id: u64, attempt: usize) {
+        // keyed draws depend on the attempt number; the pool announces it
+        // before every (re-)admission so a retry picked up by a *different*
+        // worker still sees fresh draws instead of replaying attempt 1
+        self.admits.insert(id, attempt);
+        self.inner.note_attempt(id, attempt);
+    }
+
+    fn admit(&mut self, req: &TokenRequest) -> Result<()> {
+        // default to attempt 1 for direct (non-pool) users that never
+        // call note_attempt; a prior note_attempt wins
+        self.admits.entry(req.id).or_insert(1);
+        self.rounds.insert(req.id, 0);
+        self.inner.admit(req)
+    }
+
+    fn step_round(&mut self, rng: &mut Rng, now_ms: f64) -> Result<Vec<StepEvent>> {
+        if !self.crashed
+            && self
+                .plan
+                .crashes
+                .iter()
+                .any(|c| c.worker == self.worker && now_ms >= c.at_ms)
+        {
+            self.crashed = true;
+            return Err(anyhow::Error::new(WorkerCrash {
+                worker: self.worker,
+                at_ms: now_ms,
+            }));
+        }
+        if self.plan.stall_rate > 0.0 && self.stall_rng.f64() < self.plan.stall_rate {
+            self.pending_stall_ms += self.plan.stall_ms;
+        }
+        let mut events = self.inner.step_round(rng, now_ms)?;
+        for ev in &mut events {
+            // never fault an already-faulted event or a pure-retirement
+            // event (steps == 0 means no compute ran for it this round)
+            if ev.fault.is_some() || ev.steps == 0 {
+                continue;
+            }
+            let attempt = self.admits.get(&ev.id).copied().unwrap_or(1);
+            let round = {
+                let r = self.rounds.entry(ev.id).or_insert(0);
+                let current = *r;
+                *r += 1;
+                current
+            };
+            if self.plan.step_error_rate > 0.0
+                && self.draw(ev.id, attempt, round, 1) < self.plan.step_error_rate
+            {
+                *ev = StepEvent::faulted(
+                    ev.id,
+                    StepFault::Error(format!(
+                        "injected step fault (request {}, attempt {attempt}, \
+                         round {round})",
+                        ev.id
+                    )),
+                );
+            } else if self.plan.nan_rate > 0.0
+                && self.draw(ev.id, attempt, round, 2) < self.plan.nan_rate
+            {
+                *ev = StepEvent::faulted(ev.id, StepFault::NanLogits);
+            }
+        }
+        Ok(events)
+    }
+
+    fn retire(&mut self, id: u64) {
+        self.rounds.remove(&id);
+        self.inner.retire(id);
+    }
+
+    fn live_bytes(&self) -> usize {
+        self.inner.live_bytes()
+    }
+
+    fn slot_cap(&self) -> Option<usize> {
+        self.inner.slot_cap()
+    }
+
+    fn take_stall_ms(&mut self) -> f64 {
+        let s = self.pending_stall_ms + self.inner.take_stall_ms();
+        self.pending_stall_ms = 0.0;
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Minimal inner executor: every live request decodes one token per
+    /// round for `max_new_tokens` rounds.
+    struct Inner {
+        live: Vec<(u64, usize)>,
+    }
+
+    impl StepExecutor for Inner {
+        fn projected_bytes(&self, _req: &TokenRequest) -> usize {
+            1
+        }
+
+        fn admit(&mut self, req: &TokenRequest) -> Result<()> {
+            self.live.push((req.id, req.max_new_tokens.max(1)));
+            Ok(())
+        }
+
+        fn step_round(&mut self, _rng: &mut Rng, _now_ms: f64) -> Result<Vec<StepEvent>> {
+            let mut events = Vec::new();
+            for (id, left) in &mut self.live {
+                *left -= 1;
+                events.push(StepEvent {
+                    id: *id,
+                    tokens: vec![9],
+                    steps: 1,
+                    proposed: 0,
+                    accepted: 0,
+                    finished: *left == 0,
+                    fault: None,
+                });
+            }
+            Ok(events)
+        }
+
+        fn retire(&mut self, id: u64) {
+            self.live.retain(|(i, _)| *i != id);
+        }
+
+        fn live_bytes(&self) -> usize {
+            self.live.len()
+        }
+    }
+
+    fn req(id: u64, max_new: usize) -> TokenRequest {
+        TokenRequest {
+            id,
+            prompt: vec![1, 2],
+            max_new_tokens: max_new,
+            arrival_ms: 0.0,
+            deadline_ms: None,
+        }
+    }
+
+    fn run_rounds(inj: &mut FaultInjector<Inner>, rounds: usize) -> Vec<Vec<StepEvent>> {
+        let mut rng = Rng::new(0);
+        (0..rounds)
+            .map(|r| inj.step_round(&mut rng, r as f64).unwrap())
+            .collect()
+    }
+
+    #[test]
+    fn noop_plan_passes_events_through_unchanged() {
+        let mut inj = FaultInjector::new(Inner { live: Vec::new() }, FaultPlan::default(), 0);
+        assert!(inj.plan.is_noop());
+        inj.admit(&req(1, 3)).unwrap();
+        let rounds = run_rounds(&mut inj, 3);
+        assert!(rounds
+            .iter()
+            .flatten()
+            .all(|ev| ev.fault.is_none() && ev.tokens == vec![9]));
+        assert_eq!(inj.take_stall_ms(), 0.0);
+    }
+
+    #[test]
+    fn injection_is_deterministic_per_request_attempt_round() {
+        let plan = FaultPlan::default().seeded(11).with_step_errors(0.4).with_nan(0.2);
+        let trace = |worker: usize| {
+            let mut inj = FaultInjector::new(Inner { live: Vec::new() }, plan.clone(), worker);
+            for id in 0..6 {
+                inj.admit(&req(id, 4)).unwrap();
+            }
+            run_rounds(&mut inj, 4)
+                .into_iter()
+                .flatten()
+                .map(|ev| (ev.id, ev.fault))
+                .collect::<Vec<_>>()
+        };
+        // same plan → identical faults, regardless of which worker hosts
+        // the request (the draw is keyed on request, not worker)
+        assert_eq!(trace(0), trace(0));
+        assert_eq!(trace(0), trace(3));
+        // and a busy plan actually injects something at these rates
+        assert!(trace(0).iter().any(|(_, f)| f.is_some()));
+    }
+
+    #[test]
+    fn retried_attempt_draws_fresh_faults() {
+        let plan = FaultPlan::default().seeded(5).with_step_errors(0.9999);
+        let mut inj = FaultInjector::new(Inner { live: Vec::new() }, plan, 0);
+        inj.admit(&req(7, 2)).unwrap();
+        let first = run_rounds(&mut inj, 1).pop().unwrap().pop().unwrap();
+        assert!(first.fault.is_some(), "0.9999 rate faults round 0");
+        // the scheduler retires, announces the new attempt, and re-admits;
+        // the second attempt's round 0 uses a different draw than the
+        // first attempt's round 0
+        inj.retire(7);
+        inj.note_attempt(7, 2);
+        inj.admit(&req(7, 2)).unwrap();
+        let mut rng = Rng::new(0);
+        let second = inj.step_round(&mut rng, 1.0).unwrap().pop().unwrap();
+        // both may fault at this rate — the property is that the draws
+        // differ, which we can only observe through the attempt label
+        if let Some(StepFault::Error(msg)) = &second.fault {
+            assert!(msg.contains("attempt 2"), "fresh attempt label: {msg}");
+        }
+    }
+
+    #[test]
+    fn scheduled_crash_fires_at_virtual_time_once() {
+        let plan = FaultPlan::default().with_crash(2, 50.0);
+        let mut inj = FaultInjector::new(Inner { live: Vec::new() }, plan, 2);
+        inj.admit(&req(1, 10)).unwrap();
+        let mut rng = Rng::new(0);
+        assert!(inj.step_round(&mut rng, 49.9).is_ok(), "before the crash point");
+        let err = inj.step_round(&mut rng, 50.0).unwrap_err();
+        let crash = err.downcast_ref::<WorkerCrash>().expect("typed crash error");
+        assert_eq!(crash.worker, 2);
+        // other workers never see this crash point
+        let plan2 = FaultPlan::default().with_crash(2, 50.0);
+        let mut other = FaultInjector::new(Inner { live: Vec::new() }, plan2, 0);
+        other.admit(&req(1, 2)).unwrap();
+        assert!(other.step_round(&mut rng, 99.0).is_ok());
+    }
+
+    #[test]
+    fn stalls_accumulate_and_drain() {
+        let plan = FaultPlan::default().with_stalls(1.0, 7.5);
+        let mut inj = FaultInjector::new(Inner { live: Vec::new() }, plan, 0);
+        inj.admit(&req(1, 3)).unwrap();
+        let mut rng = Rng::new(0);
+        inj.step_round(&mut rng, 0.0).unwrap();
+        assert_eq!(inj.take_stall_ms(), 7.5, "rate 1.0 stalls every round");
+        assert_eq!(inj.take_stall_ms(), 0.0, "drained once per round");
+    }
+
+    #[test]
+    fn validate_rejects_malformed_plans() {
+        assert!(FaultPlan::default().validate(1).is_ok());
+        assert!(FaultPlan::default().with_step_errors(1.5).validate(1).is_err());
+        assert!(FaultPlan::default().with_nan(-0.1).validate(1).is_err());
+        assert!(FaultPlan::default().with_stalls(0.5, -1.0).validate(1).is_err());
+        assert!(FaultPlan::default().with_crash(2, 10.0).validate(2).is_err());
+        assert!(FaultPlan::default().with_crash(1, 10.0).validate(2).is_ok());
+        assert!(FaultPlan::default().with_crash(0, -5.0).validate(1).is_err());
+    }
+}

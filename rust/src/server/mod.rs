@@ -5,12 +5,23 @@
 //! path; sequential, static batching, and single-worker serving are
 //! degenerate configurations. TTFT / latency / throughput metrics share
 //! one virtual-clock time model across worker counts.
+//!
+//! The pool is fault-tolerant: per-request step faults are contained
+//! (bounded retry with virtual-time backoff), worker crashes re-admit
+//! the lost live set to survivors, deadlines cancel overdue requests,
+//! and every submitted request ends in exactly one terminal
+//! [`RequestOutcome`]. `server/faults.rs` provides the deterministic
+//! [`FaultInjector`] chaos harness behind `ServeCfg::fault`.
 
 pub mod engine;
+pub mod faults;
 pub mod scheduler;
 
-pub use engine::{CompletedRequest, ServeReport, ServingEngine};
+pub use engine::{
+    CompletedRequest, OutcomeCounts, RequestOutcome, ServeReport, ServingEngine,
+};
+pub use faults::{CrashPoint, FaultInjector, FaultPlan, WorkerCrash};
 pub use scheduler::{
     AdmissionPolicy, GreedyExecutor, PjrtBatchExecutor, ReqState, Scheduler, ServeCfg,
-    SpecExecutor, StepEvent, StepExecutor, WorkerPool,
+    SpecExecutor, StepEvent, StepExecutor, StepFault, WorkerPool,
 };

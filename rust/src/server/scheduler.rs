@@ -40,7 +40,26 @@
 //! admission interleaving (property-tested in
 //! `tests/test_sharded_props.rs`).
 //!
+//! Fault tolerance: a per-request problem during a round comes back as a
+//! [`StepFault`] on that request's [`StepEvent`] — the pool retires the
+//! request (freeing its KV reservation immediately), re-admits it to the
+//! shared queue with exponential virtual-time backoff while attempts
+//! remain, and otherwise records a `Failed` outcome; no other request is
+//! disturbed. An `Err` from [`StepExecutor::step_round`] means the whole
+//! worker is lost: it is marked dead, its live set is requeued (or
+//! failed, out of attempts), and the surviving workers absorb the load
+//! through the existing work-stealing admission. Requests may carry
+//! deadlines ([`TokenRequest::deadline_ms`] / [`ServeCfg::deadline_ms`]);
+//! the pool cancels past-deadline requests between rounds on the virtual
+//! clock and evicts their KV. Every submitted request ends in exactly one
+//! terminal [`RequestOutcome`], and requests that never fault keep
+//! bit-identical outputs versus a fault-free run. Deterministic chaos is
+//! injected by wrapping every executor in a [`FaultInjector`] when
+//! [`ServeCfg::fault`] is set (see `server/faults.rs`).
+//!
 //! [`KvCache`]: crate::models::KvCache
+//! [`RequestOutcome`]: super::engine::RequestOutcome
+//! [`FaultInjector`]: super::faults::FaultInjector
 
 use crate::data::TokenRequest;
 use crate::models::Sampler;
@@ -52,7 +71,8 @@ use anyhow::{bail, Result};
 use std::collections::VecDeque;
 use std::time::Instant;
 
-use super::engine::{CompletedRequest, ServeReport};
+use super::engine::{CompletedRequest, RequestOutcome, ServeReport};
+use super::faults::{FaultInjector, FaultPlan, WorkerCrash};
 
 /// When the scheduler may move a request from Queued to Prefill.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -111,6 +131,25 @@ pub struct ServeCfg {
     /// admission). 1 = the classic single-worker scheduler; 0 is invalid
     /// and rejected at config validation.
     pub workers: usize,
+    /// Pool-wide default completion deadline in milliseconds from arrival
+    /// on the virtual clock, applied to requests without their own
+    /// [`TokenRequest::deadline_ms`]. Past-deadline requests are cancelled
+    /// between rounds (outcome `DeadlineExceeded`, KV evicted, partial
+    /// output kept). `None` = no deadline; a non-positive value is
+    /// rejected loudly at validation and at [`WorkerPool::run`].
+    pub deadline_ms: Option<f64>,
+    /// How many times a faulted request may re-enter the shared queue
+    /// before its outcome becomes `Failed`. 0 = fail on the first fault;
+    /// a request consumes at most `max_retries + 1` execution attempts.
+    pub max_retries: usize,
+    /// Base virtual-time backoff before a retry becomes admissible again:
+    /// the k-th failed attempt re-queues the request no earlier than
+    /// `failure time + retry_backoff_ms * 2^(k-1)`. Must be >= 0.
+    pub retry_backoff_ms: f64,
+    /// Deterministic fault-injection plan (chaos tests, resilience
+    /// benches). `None` = no injection; the serve loop is byte-identical
+    /// to the pre-fault-tolerance scheduler for fault-free runs.
+    pub fault: Option<FaultPlan>,
 }
 
 impl Default for ServeCfg {
@@ -120,6 +159,10 @@ impl Default for ServeCfg {
             max_in_flight: 8,
             kv_budget_bytes: 0,
             workers: 1,
+            deadline_ms: None,
+            max_retries: 0,
+            retry_backoff_ms: 1.0,
+            fault: None,
         }
     }
 }
@@ -148,6 +191,30 @@ impl ServeCfg {
 
     pub fn with_workers(mut self, workers: usize) -> Self {
         self.workers = workers;
+        self
+    }
+
+    /// Pool-wide default deadline (ms from arrival, virtual clock).
+    pub fn with_deadline(mut self, deadline_ms: f64) -> Self {
+        self.deadline_ms = Some(deadline_ms);
+        self
+    }
+
+    /// Allow `max_retries` re-admissions per faulted request.
+    pub fn with_retries(mut self, max_retries: usize) -> Self {
+        self.max_retries = max_retries;
+        self
+    }
+
+    /// Base virtual-time retry backoff in milliseconds.
+    pub fn with_backoff(mut self, retry_backoff_ms: f64) -> Self {
+        self.retry_backoff_ms = retry_backoff_ms;
+        self
+    }
+
+    /// Inject deterministic faults via a [`FaultInjector`] on every worker.
+    pub fn with_faults(mut self, plan: FaultPlan) -> Self {
+        self.fault = Some(plan);
         self
     }
 
@@ -218,6 +285,27 @@ pub enum ReqState {
     Finished,
 }
 
+/// A request-level fault raised during one decode round. The pool contains
+/// it to that request: KV evicted, bounded retry, `Failed` outcome when
+/// attempts run out — the rest of the batch is untouched.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum StepFault {
+    /// the request's decode step failed (model error or injected fault)
+    Error(String),
+    /// non-finite logits detected on the decode path — a poisoned request
+    /// must not commit garbage tokens
+    NanLogits,
+}
+
+impl StepFault {
+    pub fn describe(&self) -> String {
+        match self {
+            StepFault::Error(e) => e.clone(),
+            StepFault::NanLogits => "non-finite logits on the decode path".to_string(),
+        }
+    }
+}
+
 /// What one request did during one decode round.
 #[derive(Clone, Debug)]
 pub struct StepEvent {
@@ -231,6 +319,24 @@ pub struct StepEvent {
     /// speculative tokens accepted this round
     pub accepted: usize,
     pub finished: bool,
+    /// request-level fault this round; when set, the other fields are
+    /// ignored and the scheduler fails/retries this request only
+    pub fault: Option<StepFault>,
+}
+
+impl StepEvent {
+    /// Event reporting a contained per-request fault.
+    pub fn faulted(id: u64, fault: StepFault) -> Self {
+        StepEvent {
+            id,
+            tokens: Vec::new(),
+            steps: 0,
+            proposed: 0,
+            accepted: 0,
+            finished: false,
+            fault: Some(fault),
+        }
+    }
 }
 
 /// Pluggable compute for one decode round over the live set. The scheduler
@@ -243,9 +349,17 @@ pub trait StepExecutor {
     /// Allocate per-request decode state. The request's first round (its
     /// Prefill step) runs at the next `step_round`.
     fn admit(&mut self, req: &TokenRequest) -> Result<()>;
-    /// Advance every admitted request one decode round, returning one
-    /// event per live request.
-    fn step_round(&mut self, rng: &mut Rng) -> Result<Vec<StepEvent>>;
+    /// The 1-based execution attempt the next `admit` of `id` represents,
+    /// announced by the pool just before re-admission. Default: ignored.
+    /// The fault injector keys its deterministic draws on it, so a retry
+    /// sees fresh draws no matter which worker re-admits the request.
+    fn note_attempt(&mut self, _id: u64, _attempt: usize) {}
+    /// Advance every admitted request one decode round at virtual time
+    /// `now_ms`, returning one event per live request. A per-request
+    /// problem must come back as a [`StepFault`] on that request's event
+    /// (the pool contains it); an `Err` means the whole worker is lost —
+    /// the pool marks it dead and re-admits its live set elsewhere.
+    fn step_round(&mut self, rng: &mut Rng, now_ms: f64) -> Result<Vec<StepEvent>>;
     /// Drop a finished request's state, freeing its KV bytes.
     fn retire(&mut self, id: u64);
     /// Resident KV bytes across live sessions (observability + the budget
@@ -256,15 +370,47 @@ pub trait StepExecutor {
     fn slot_cap(&self) -> Option<usize> {
         None
     }
+    /// Virtual milliseconds of stall observed/injected during the last
+    /// round, drained once per round by the pool and added to the
+    /// worker's clock (clock inflation). Default: no stall.
+    fn take_stall_ms(&mut self) -> f64 {
+        0.0
+    }
 }
 
 struct LiveReq {
-    id: u64,
-    arrival_ms: f64,
+    /// the original request, kept whole so a faulted attempt can re-enter
+    /// the shared queue unchanged
+    req: TokenRequest,
     state: ReqState,
     output: Vec<u8>,
     first_token_ms: Option<f64>,
     reserved_bytes: usize,
+    /// 1-based execution attempt this admission represents
+    attempts: usize,
+    /// absolute virtual-time deadline (arrival + effective deadline_ms)
+    deadline_abs: Option<f64>,
+}
+
+/// One shared-queue entry: a request plus its retry bookkeeping.
+struct QueuedReq {
+    req: TokenRequest,
+    /// attempt number the next admission will be (1 = first try)
+    attempt: usize,
+    /// earliest virtual time this entry may be admitted: the arrival for
+    /// fresh requests, failure time + exponential backoff for retries
+    ready_ms: f64,
+}
+
+/// Absolute virtual-time deadline for `req` under `cfg`: the per-request
+/// override wins, else the pool-wide default; measured from arrival.
+fn deadline_abs_of(req: &TokenRequest, cfg: &ServeCfg) -> Option<f64> {
+    req.deadline_ms.or(cfg.deadline_ms).map(|d| req.arrival_ms + d)
+}
+
+/// Exponential virtual-time backoff before attempt `failed_attempt + 1`.
+fn retry_backoff(cfg: &ServeCfg, failed_attempt: usize) -> f64 {
+    cfg.retry_backoff_ms * 2f64.powi(failed_attempt.saturating_sub(1).min(60) as i32)
 }
 
 /// Single-worker serve loop — the degenerate [`WorkerPool`] of one worker,
@@ -319,6 +465,9 @@ struct PoolWorker<E: StepExecutor> {
     /// (admission / round / retirement) — lets the pool sample the total
     /// concurrent residency without re-summing every executor each round
     cached_live_bytes: usize,
+    /// a crashed worker stays dead for the rest of the run: it takes no
+    /// rounds and steals no admissions; its live set was requeued/failed
+    dead: bool,
 }
 
 /// What the pool does next: run a decode round on a busy worker, or let
@@ -336,14 +485,51 @@ pub struct WorkerPool;
 
 impl WorkerPool {
     /// `make_executor(worker_index)` is called once per worker; executors
-    /// typically share one immutable model reference.
+    /// typically share one immutable model reference. When `cfg.fault` is
+    /// set, every worker's executor is wrapped in a [`FaultInjector`]
+    /// seeded from the plan, so chaos runs reproduce deterministically.
     pub fn run<E: StepExecutor, F: FnMut(usize) -> E>(
+        requests: Vec<TokenRequest>,
+        mut make_executor: F,
+        cfg: &ServeCfg,
+        seed: u64,
+    ) -> Result<ServeReport> {
+        match cfg.fault.clone() {
+            Some(plan) => {
+                plan.validate(cfg.workers.max(1))?;
+                Self::run_inner(
+                    requests,
+                    move |w| FaultInjector::new(make_executor(w), plan.clone(), w),
+                    cfg,
+                    seed,
+                )
+            }
+            None => Self::run_inner(requests, make_executor, cfg, seed),
+        }
+    }
+
+    fn run_inner<E: StepExecutor, F: FnMut(usize) -> E>(
         mut requests: Vec<TokenRequest>,
         mut make_executor: F,
         cfg: &ServeCfg,
         seed: u64,
     ) -> Result<ServeReport> {
         let n_workers = cfg.workers.max(1);
+        if let Some(d) = cfg.deadline_ms {
+            if d.is_nan() || d <= 0.0 {
+                bail!(
+                    "serve.deadline_ms must be > 0 when set, got {d}; \
+                     drop the knob for no deadline"
+                );
+            }
+        }
+        if cfg.retry_backoff_ms.is_nan() || cfg.retry_backoff_ms < 0.0 {
+            bail!(
+                "serve.retry_backoff_ms must be a non-negative number, got {}",
+                cfg.retry_backoff_ms
+            );
+        }
+        let max_attempts = cfg.max_retries.saturating_add(1);
         if cfg.kv_budget_bytes > 0 && cfg.kv_budget_bytes < n_workers {
             // enforced here as well as at config validation: a split that
             // leaves any worker a zero share would make that worker
@@ -378,6 +564,7 @@ impl WorkerPool {
                     max_in_flight,
                     peak_kv_bytes: 0,
                     cached_live_bytes: 0,
+                    dead: false,
                 }
             })
             .collect();
@@ -386,8 +573,12 @@ impl WorkerPool {
         let t0 = Instant::now();
         // stable sort: FIFO among simultaneous arrivals
         requests.sort_by(|a, b| a.arrival_ms.total_cmp(&b.arrival_ms));
-        let mut queue: VecDeque<TokenRequest> = requests.into();
+        let mut queue: VecDeque<QueuedReq> = requests
+            .into_iter()
+            .map(|req| QueuedReq { ready_ms: req.arrival_ms, attempt: 1, req })
+            .collect();
         let mut completed: Vec<CompletedRequest> = Vec::new();
+        let mut crashed_workers: Vec<(usize, String)> = Vec::new();
         let mut total_tokens = 0usize;
         let mut al_num = 0.0f64;
         let mut al_den = 0.0f64;
@@ -398,6 +589,25 @@ impl WorkerPool {
         let mut pool_live_bytes = 0usize;
 
         loop {
+            // ── no worker left alive: shed the remaining queue ───────
+            // Even total failure returns a report with every request
+            // accounted for, rather than an Err that drops the trace.
+            if !queue.is_empty() && workers.iter().all(|w| w.dead) {
+                let now = workers.iter().map(|w| w.clock_ms).fold(0.0f64, f64::max);
+                for q in queue.drain(..) {
+                    let wait = (now - q.req.arrival_ms).max(0.0);
+                    completed.push(CompletedRequest {
+                        id: q.req.id,
+                        generated: 0,
+                        ttft_ms: wait,
+                        total_ms: wait,
+                        output: Vec::new(),
+                        outcome: RequestOutcome::Shed,
+                        attempts: q.attempt - 1,
+                    });
+                }
+                break;
+            }
             // ── earliest next event across workers ───────────────────
             // A busy worker can run a round at its current clock; the
             // designated stealer can admit the queue head at
@@ -406,7 +616,7 @@ impl WorkerPool {
             // (the single-worker loop's admit-then-step order).
             let mut best_busy: Option<usize> = None;
             for (i, w) in workers.iter().enumerate() {
-                if w.live.is_empty() {
+                if w.dead || w.live.is_empty() {
                     continue;
                 }
                 let earlier = match best_busy {
@@ -435,21 +645,48 @@ impl WorkerPool {
             match act {
                 // ── work-stealing admission of the queue head ────────
                 PoolAct::Admit(s) => {
+                    // deadline guard: a head that would start at or past
+                    // its deadline is cancelled instead of admitted, so no
+                    // KV or compute is spent on a lost cause
+                    let expired_head = queue.front().map_or(false, |q| {
+                        let start = workers[s].clock_ms.max(q.ready_ms);
+                        deadline_abs_of(&q.req, cfg).map_or(false, |d| start >= d)
+                    });
+                    if expired_head {
+                        if let Some(q) = queue.pop_front() {
+                            let now = workers[s].clock_ms.max(q.ready_ms);
+                            let wait = (now - q.req.arrival_ms).max(0.0);
+                            completed.push(CompletedRequest {
+                                id: q.req.id,
+                                generated: 0,
+                                ttft_ms: wait,
+                                total_ms: wait,
+                                output: Vec::new(),
+                                outcome: RequestOutcome::DeadlineExceeded,
+                                attempts: q.attempt - 1,
+                            });
+                        }
+                        continue;
+                    }
                     match cfg.policy {
                         AdmissionPolicy::Static => {
-                            Self::admit_static_chunk(&mut workers[s], &mut queue)?
+                            Self::admit_static_chunk(&mut workers[s], &mut queue, cfg)?
                         }
                         _ => {
                             let w = &mut workers[s];
-                            let req =
-                                queue.pop_front().expect("stealer needs a queue head");
+                            let Some(q) = queue.pop_front() else {
+                                bail!(
+                                    "scheduler invariant broken: worker {s} designated \
+                                     stealer with an empty queue"
+                                );
+                            };
                             // empty-round jump, multi-worker aware: only the
-                            // stealer advances, straight to the arrival it is
-                            // about to seat, in O(1)
-                            if req.arrival_ms > w.clock_ms {
-                                w.clock_ms = req.arrival_ms;
+                            // stealer advances, straight to the ready time it
+                            // is about to seat, in O(1)
+                            if q.ready_ms > w.clock_ms {
+                                w.clock_ms = q.ready_ms;
                             }
-                            Self::admit_one(w, req)?;
+                            Self::admit_one(w, q, cfg)?;
                         }
                     }
                     let w = &mut workers[s];
@@ -460,12 +697,65 @@ impl WorkerPool {
 
                 // ── one measured decode round on one worker ──────────
                 PoolAct::Round(b) => {
-                    let events = {
+                    let stepped = {
                         let w = &mut workers[b];
                         let round_t0 = Instant::now();
-                        let events = w.executor.step_round(&mut w.rng)?;
-                        w.clock_ms += round_t0.elapsed().as_secs_f64() * 1e3;
-                        events
+                        let result = w.executor.step_round(&mut w.rng, w.clock_ms);
+                        // stall injection/observation inflates the clock on
+                        // top of the measured compute
+                        w.clock_ms += round_t0.elapsed().as_secs_f64() * 1e3
+                            + w.executor.take_stall_ms();
+                        result
+                    };
+                    let events = match stepped {
+                        Ok(events) => events,
+                        Err(err) => {
+                            // ── whole-worker crash, contained at the pool:
+                            // the worker is dead for the rest of the run;
+                            // its live set re-enters the shared queue (with
+                            // backoff) or fails, and survivors absorb it
+                            // through normal work-stealing admission.
+                            let w = &mut workers[b];
+                            w.dead = true;
+                            let msg = match err.downcast_ref::<WorkerCrash>() {
+                                Some(c) => c.to_string(),
+                                None => format!("{err:#}"),
+                            };
+                            crashed_workers.push((b, msg.clone()));
+                            pool_live_bytes -= w.cached_live_bytes;
+                            w.cached_live_bytes = 0;
+                            w.reserved_bytes = 0;
+                            let now = w.clock_ms;
+                            for l in std::mem::take(&mut w.live) {
+                                w.executor.retire(l.req.id);
+                                if l.attempts < max_attempts {
+                                    let backoff = retry_backoff(cfg, l.attempts);
+                                    queue.push_back(QueuedReq {
+                                        ready_ms: now + backoff,
+                                        attempt: l.attempts + 1,
+                                        req: l.req,
+                                    });
+                                } else {
+                                    completed.push(CompletedRequest {
+                                        id: l.req.id,
+                                        generated: 0,
+                                        ttft_ms: (l.first_token_ms.unwrap_or(now)
+                                            - l.req.arrival_ms)
+                                            .max(0.0),
+                                        total_ms: (now - l.req.arrival_ms).max(0.0),
+                                        output: Vec::new(),
+                                        outcome: RequestOutcome::Failed {
+                                            error: format!(
+                                                "request {} lost: worker {b} crashed: {msg}",
+                                                l.req.id
+                                            ),
+                                        },
+                                        attempts: l.attempts,
+                                    });
+                                }
+                            }
+                            continue;
+                        }
                     };
                     let w = &mut workers[b];
                     // pool-wide concurrent residency, sampled post-round /
@@ -480,11 +770,47 @@ impl WorkerPool {
                     // retire finished, book metrics on this worker's clock
                     let now = w.clock_ms;
                     for ev in events {
-                        let idx = w
-                            .live
-                            .iter()
-                            .position(|l| l.id == ev.id)
-                            .expect("step event for a request that was never admitted");
+                        let Some(idx) = w.live.iter().position(|l| l.req.id == ev.id)
+                        else {
+                            bail!(
+                                "scheduler invariant broken on worker {b}: step event \
+                                 for request {} that was never admitted there",
+                                ev.id
+                            );
+                        };
+                        // ── contained per-request fault: evict, retry/fail ──
+                        if let Some(fault) = ev.fault {
+                            let l = w.live.swap_remove(idx);
+                            w.executor.retire(l.req.id);
+                            w.reserved_bytes -= l.reserved_bytes;
+                            if l.attempts < max_attempts {
+                                let backoff = retry_backoff(cfg, l.attempts);
+                                queue.push_back(QueuedReq {
+                                    ready_ms: now + backoff,
+                                    attempt: l.attempts + 1,
+                                    req: l.req,
+                                });
+                            } else {
+                                completed.push(CompletedRequest {
+                                    id: l.req.id,
+                                    generated: 0,
+                                    ttft_ms: (l.first_token_ms.unwrap_or(now)
+                                        - l.req.arrival_ms)
+                                        .max(0.0),
+                                    total_ms: (now - l.req.arrival_ms).max(0.0),
+                                    output: Vec::new(),
+                                    outcome: RequestOutcome::Failed {
+                                        error: format!(
+                                            "request {} on worker {b}: {}",
+                                            l.req.id,
+                                            fault.describe()
+                                        ),
+                                    },
+                                    attempts: l.attempts,
+                                });
+                            }
+                            continue;
+                        }
                         {
                             let l = &mut w.live[idx];
                             debug_assert!(
@@ -506,16 +832,46 @@ impl WorkerPool {
                         }
                         if ev.finished {
                             let l = w.live.swap_remove(idx);
-                            w.executor.retire(l.id);
+                            w.executor.retire(l.req.id);
                             w.reserved_bytes -= l.reserved_bytes;
                             completed.push(CompletedRequest {
-                                id: l.id,
+                                id: l.req.id,
                                 generated: l.output.len(),
-                                ttft_ms: l.first_token_ms.unwrap_or(now) - l.arrival_ms,
-                                total_ms: now - l.arrival_ms,
+                                ttft_ms: l.first_token_ms.unwrap_or(now)
+                                    - l.req.arrival_ms,
+                                total_ms: now - l.req.arrival_ms,
                                 output: l.output,
+                                outcome: RequestOutcome::Completed,
+                                attempts: l.attempts,
                             });
                         }
+                    }
+                    // ── deadline sweep between rounds on this worker's
+                    // clock: cancel past-deadline requests, keep partial
+                    // output, evict KV immediately ──
+                    let mut i = 0;
+                    while i < w.live.len() {
+                        let expired = w.live[i]
+                            .deadline_abs
+                            .map_or(false, |d| w.clock_ms >= d);
+                        if !expired {
+                            i += 1;
+                            continue;
+                        }
+                        let l = w.live.swap_remove(i);
+                        w.executor.retire(l.req.id);
+                        w.reserved_bytes -= l.reserved_bytes;
+                        completed.push(CompletedRequest {
+                            id: l.req.id,
+                            generated: l.output.len(),
+                            ttft_ms: (l.first_token_ms.unwrap_or(w.clock_ms)
+                                - l.req.arrival_ms)
+                                .max(0.0),
+                            total_ms: (w.clock_ms - l.req.arrival_ms).max(0.0),
+                            output: l.output,
+                            outcome: RequestOutcome::DeadlineExceeded,
+                            attempts: l.attempts,
+                        });
                     }
                     // refresh the cache post-retirement so the next
                     // sample sees the freed bytes
@@ -528,11 +884,21 @@ impl WorkerPool {
 
         if completed.len() != n_submitted {
             bail!(
-                "scheduler invariant broken: {} of {n_submitted} requests completed",
+                "scheduler invariant broken: {} of {n_submitted} requests reached a \
+                 terminal outcome",
                 completed.len()
             );
         }
         completed.sort_by_key(|c| c.id);
+        for pair in completed.windows(2) {
+            if pair[0].id == pair[1].id {
+                bail!(
+                    "scheduler invariant broken: request {} has more than one \
+                     terminal outcome",
+                    pair[0].id
+                );
+            }
+        }
         let makespan_ms = workers
             .iter()
             .map(|w| w.clock_ms)
@@ -547,6 +913,7 @@ impl WorkerPool {
             accepted,
             peak_kv_bytes,
             worker_peak_kv_bytes: workers.iter().map(|w| w.peak_kv_bytes).collect(),
+            crashed_workers,
         })
     }
 
@@ -562,18 +929,21 @@ impl WorkerPool {
     /// first), so no deferred assignment could start the head sooner.
     fn pick_stealer<E: StepExecutor>(
         workers: &[PoolWorker<E>],
-        head: Option<&TokenRequest>,
+        head: Option<&QueuedReq>,
         policy: AdmissionPolicy,
     ) -> Option<(usize, f64)> {
         let head = head?;
         // oversized-request safety valve, pool edition: a head that fits
-        // no worker's budget share can only ever run alone, so it becomes
-        // admissible exactly on idle workers
-        let fits_nowhere = workers.iter().all(|w| {
-            w.budget != 0 && w.executor.projected_bytes(head) > w.budget
+        // no surviving worker's budget share can only ever run alone, so
+        // it becomes admissible exactly on idle workers
+        let fits_nowhere = workers.iter().filter(|w| !w.dead).all(|w| {
+            w.budget != 0 && w.executor.projected_bytes(&head.req) > w.budget
         });
         let mut best: Option<(usize, f64, usize)> = None;
         for (i, w) in workers.iter().enumerate() {
+            if w.dead {
+                continue;
+            }
             let has_room = match policy {
                 // a static chunk only forms on a drained worker
                 AdmissionPolicy::Static => w.live.is_empty(),
@@ -584,7 +954,7 @@ impl WorkerPool {
                         w.live.is_empty()
                     } else {
                         w.budget == 0
-                            || w.reserved_bytes + w.executor.projected_bytes(head)
+                            || w.reserved_bytes + w.executor.projected_bytes(&head.req)
                                 <= w.budget
                     }
                 }
@@ -592,7 +962,7 @@ impl WorkerPool {
             if !has_room {
                 continue;
             }
-            let start = w.clock_ms.max(head.arrival_ms);
+            let start = w.clock_ms.max(head.ready_ms);
             let better = match best {
                 None => true,
                 Some((_, bs, bl)) => {
@@ -607,17 +977,24 @@ impl WorkerPool {
     }
 
     /// Admit one request to `w`, reserving its projected peak KV bytes.
-    fn admit_one<E: StepExecutor>(w: &mut PoolWorker<E>, req: TokenRequest) -> Result<()> {
-        let need = w.executor.projected_bytes(&req);
-        w.executor.admit(&req)?;
+    fn admit_one<E: StepExecutor>(
+        w: &mut PoolWorker<E>,
+        q: QueuedReq,
+        cfg: &ServeCfg,
+    ) -> Result<()> {
+        let need = w.executor.projected_bytes(&q.req);
+        w.executor.note_attempt(q.req.id, q.attempt);
+        w.executor.admit(&q.req)?;
         w.reserved_bytes += need;
+        let deadline_abs = deadline_abs_of(&q.req, cfg);
         w.live.push(LiveReq {
-            id: req.id,
-            arrival_ms: req.arrival_ms,
             state: ReqState::Prefill,
             output: Vec::new(),
             first_token_ms: None,
             reserved_bytes: need,
+            attempts: q.attempt,
+            deadline_abs,
+            req: q.req,
         });
         Ok(())
     }
@@ -629,12 +1006,13 @@ impl WorkerPool {
     /// for arrivals the budget could never seat.
     fn admit_static_chunk<E: StepExecutor>(
         w: &mut PoolWorker<E>,
-        queue: &mut VecDeque<TokenRequest>,
+        queue: &mut VecDeque<QueuedReq>,
+        cfg: &ServeCfg,
     ) -> Result<()> {
         let mut k = 0usize;
         let mut sum = 0usize;
-        for r in queue.iter().take(w.max_in_flight) {
-            let need = w.executor.projected_bytes(r);
+        for q in queue.iter().take(w.max_in_flight) {
+            let need = w.executor.projected_bytes(&q.req);
             let fits = w.budget == 0
                 || sum + need <= w.budget
                 || (k == 0 && need > w.budget);
@@ -644,17 +1022,19 @@ impl WorkerPool {
             sum += need;
             k += 1;
         }
-        let chunk_arrival = queue
+        let chunk_ready = queue
             .iter()
             .take(k)
-            .map(|r| r.arrival_ms)
+            .map(|q| q.ready_ms)
             .fold(f64::NEG_INFINITY, f64::max);
-        if chunk_arrival > w.clock_ms {
-            w.clock_ms = chunk_arrival;
+        if chunk_ready > w.clock_ms {
+            w.clock_ms = chunk_ready;
         }
         for _ in 0..k {
-            let req = queue.pop_front().expect("chunk counted from the queue");
-            Self::admit_one(w, req)?;
+            let Some(q) = queue.pop_front() else {
+                bail!("scheduler invariant broken: static chunk outran the queue");
+            };
+            Self::admit_one(w, q, cfg)?;
         }
         Ok(())
     }
@@ -721,7 +1101,7 @@ impl<T: SessionModel> StepExecutor for GreedyExecutor<'_, T> {
         Ok(())
     }
 
-    fn step_round(&mut self, rng: &mut Rng) -> Result<Vec<StepEvent>> {
+    fn step_round(&mut self, rng: &mut Rng, _now_ms: f64) -> Result<Vec<StepEvent>> {
         let model = self.model;
         let mut events = Vec::with_capacity(self.slots.len());
         for slot in &mut self.slots {
@@ -733,16 +1113,46 @@ impl<T: SessionModel> StepExecutor for GreedyExecutor<'_, T> {
                     proposed: 0,
                     accepted: 0,
                     finished: true,
+                    fault: None,
                 });
                 continue;
             }
-            // Prefill state: the first round feeds the whole prompt
+            // Prefill state: the first round feeds the whole prompt.
+            // Per-slot errors are contained as request-level faults — one
+            // poisoned request must not take down the batch.
             if slot.last.is_none() {
-                slot.last = slot.sess.extend(model, &slot.prompt)?.pop();
+                match slot.sess.extend(model, &slot.prompt) {
+                    Ok(mut rows) => slot.last = rows.pop(),
+                    Err(e) => {
+                        events.push(StepEvent::faulted(
+                            slot.id,
+                            StepFault::Error(format!(
+                                "request {}: prompt prefill failed: {e:#}",
+                                slot.id
+                            )),
+                        ));
+                        continue;
+                    }
+                }
             }
-            let next = {
-                let row = slot.last.as_ref().expect("non-empty prompt yields a logits row");
-                self.sampler.sample(row, rng)
+            let next = match slot.last.as_ref() {
+                Some(row) if row.iter().all(|x| x.is_finite()) => {
+                    self.sampler.sample(row, rng)
+                }
+                Some(_) => {
+                    events.push(StepEvent::faulted(slot.id, StepFault::NanLogits));
+                    continue;
+                }
+                None => {
+                    events.push(StepEvent::faulted(
+                        slot.id,
+                        StepFault::Error(format!(
+                            "request {}: prefill produced no logits row",
+                            slot.id
+                        )),
+                    ));
+                    continue;
+                }
             };
             slot.remaining -= 1;
             let finished = slot.remaining == 0;
@@ -750,7 +1160,31 @@ impl<T: SessionModel> StepExecutor for GreedyExecutor<'_, T> {
             slot.last = if finished {
                 None
             } else {
-                Some(slot.sess.extend(model, &[next])?.pop().unwrap())
+                match slot.sess.extend(model, &[next]) {
+                    Ok(mut rows) => match rows.pop() {
+                        Some(row) => Some(row),
+                        None => {
+                            events.push(StepEvent::faulted(
+                                slot.id,
+                                StepFault::Error(format!(
+                                    "request {}: decode step produced no logits row",
+                                    slot.id
+                                )),
+                            ));
+                            continue;
+                        }
+                    },
+                    Err(e) => {
+                        events.push(StepEvent::faulted(
+                            slot.id,
+                            StepFault::Error(format!(
+                                "request {}: decode step failed: {e:#}",
+                                slot.id
+                            )),
+                        ));
+                        continue;
+                    }
+                }
             };
             events.push(StepEvent {
                 id: slot.id,
@@ -759,6 +1193,7 @@ impl<T: SessionModel> StepExecutor for GreedyExecutor<'_, T> {
                 proposed: 0,
                 accepted: 0,
                 finished,
+                fault: None,
             });
         }
         Ok(events)
@@ -838,7 +1273,7 @@ impl<D: SessionModel, T: SessionModel> StepExecutor for SpecExecutor<'_, D, T> {
         Ok(())
     }
 
-    fn step_round(&mut self, rng: &mut Rng) -> Result<Vec<StepEvent>> {
+    fn step_round(&mut self, rng: &mut Rng, _now_ms: f64) -> Result<Vec<StepEvent>> {
         let draft = self.draft;
         let target = self.target;
         let gamma = self.gamma;
@@ -859,13 +1294,15 @@ impl<D: SessionModel, T: SessionModel> StepExecutor for SpecExecutor<'_, D, T> {
                     proposed: 0,
                     accepted: 0,
                     finished: true,
+                    fault: None,
                 });
                 continue;
             }
             // one shared verify step: draft catch-up + γ proposals, single
             // target pass, greedy acceptance + bonus, rollback — the same
-            // function SpecDecoder::generate runs per iteration
-            let (tokens, proposed, accepted) = spec_verify_step(
+            // function SpecDecoder::generate runs per iteration. A verify
+            // error is contained to this request, not the whole batch.
+            let step = spec_verify_step(
                 draft,
                 target,
                 &mut slot.dsess,
@@ -876,7 +1313,20 @@ impl<D: SessionModel, T: SessionModel> StepExecutor for SpecExecutor<'_, D, T> {
                 limit,
                 &self.sampler,
                 rng,
-            )?;
+            );
+            let (tokens, proposed, accepted) = match step {
+                Ok(v) => v,
+                Err(e) => {
+                    events.push(StepEvent::faulted(
+                        slot.id,
+                        StepFault::Error(format!(
+                            "request {}: speculative verify step failed: {e:#}",
+                            slot.id
+                        )),
+                    ));
+                    continue;
+                }
+            };
             slot.generated += tokens.len();
 
             let finished = slot.generated >= slot.budget || slot.seq.len() >= limit;
@@ -887,6 +1337,7 @@ impl<D: SessionModel, T: SessionModel> StepExecutor for SpecExecutor<'_, D, T> {
                 proposed,
                 accepted,
                 finished,
+                fault: None,
             });
         }
         Ok(events)
@@ -940,7 +1391,7 @@ impl StepExecutor for PjrtBatchExecutor<'_> {
         Ok(())
     }
 
-    fn step_round(&mut self, _rng: &mut Rng) -> Result<Vec<StepEvent>> {
+    fn step_round(&mut self, _rng: &mut Rng, _now_ms: f64) -> Result<Vec<StepEvent>> {
         let (b, seq_t, vocab) = (self.exe.batch, self.exe.seq_t, self.exe.vocab);
         // pack the live set into the batch (free rows stay zero)
         let mut tokens = vec![0i32; b * seq_t];
@@ -949,6 +1400,8 @@ impl StepExecutor for PjrtBatchExecutor<'_> {
                 tokens[ri * seq_t + i] = t as i32;
             }
         }
+        // a failed joint forward loses every row at once — that is a
+        // worker-level crash, so propagate it and let the pool requeue
         let logits = self.exe.run(&tokens)?;
         let mut events = Vec::with_capacity(self.slots.len());
         for (ri, slot) in self.slots.iter_mut().enumerate() {
@@ -963,12 +1416,18 @@ impl StepExecutor for PjrtBatchExecutor<'_> {
                     proposed: 0,
                     accepted: 0,
                     finished: true,
+                    fault: None,
                 });
                 continue;
             }
             let pos = slot.seq.len() - 1;
             let off = ri * seq_t * vocab + pos * vocab;
-            let next = argmax(&logits[off..off + vocab]) as u8;
+            let row = &logits[off..off + vocab];
+            if !row.iter().all(|x| x.is_finite()) {
+                events.push(StepEvent::faulted(slot.id, StepFault::NanLogits));
+                continue;
+            }
+            let next = argmax(row) as u8;
             slot.seq.push(next);
             let finished = slot.seq.len() >= seq_t
                 || slot.seq.len() - slot.prompt_len >= slot.max_new;
@@ -979,6 +1438,7 @@ impl StepExecutor for PjrtBatchExecutor<'_> {
                 proposed: 0,
                 accepted: 0,
                 finished,
+                fault: None,
             });
         }
         Ok(events)
@@ -1009,6 +1469,7 @@ mod tests {
                 prompt: vec![1, 2, 3],
                 max_new_tokens: max_new,
                 arrival_ms: i as f64 * gap_ms,
+                deadline_ms: None,
             })
             .collect()
     }
@@ -1094,7 +1555,7 @@ mod tests {
             Ok(())
         }
 
-        fn step_round(&mut self, _rng: &mut Rng) -> Result<Vec<StepEvent>> {
+        fn step_round(&mut self, _rng: &mut Rng, _now_ms: f64) -> Result<Vec<StepEvent>> {
             let mut events = Vec::new();
             for (id, left) in &mut self.live {
                 *left -= 1;
@@ -1105,6 +1566,7 @@ mod tests {
                     proposed: 0,
                     accepted: 0,
                     finished: *left == 0,
+                    fault: None,
                 });
             }
             Ok(events)
@@ -1336,5 +1798,328 @@ mod tests {
         assert_eq!(AdmissionPolicy::parse("sequential").unwrap(), AdmissionPolicy::Sequential);
         assert!(AdmissionPolicy::parse("magic").is_err());
         assert_eq!(AdmissionPolicy::Continuous.name(), "continuous");
+    }
+
+    // ── fault tolerance ──────────────────────────────────────────────
+
+    use std::collections::HashMap;
+
+    /// FakeExec variant that faults `victim`'s first execution attempt.
+    struct FlakyExec {
+        victim: u64,
+        admits: HashMap<u64, usize>,
+        live: Vec<(u64, usize)>,
+    }
+
+    impl FlakyExec {
+        fn new(victim: u64) -> Self {
+            FlakyExec { victim, admits: HashMap::new(), live: Vec::new() }
+        }
+    }
+
+    impl StepExecutor for FlakyExec {
+        fn projected_bytes(&self, _req: &TokenRequest) -> usize {
+            1
+        }
+
+        fn admit(&mut self, req: &TokenRequest) -> Result<()> {
+            *self.admits.entry(req.id).or_insert(0) += 1;
+            self.live.push((req.id, req.max_new_tokens.max(1)));
+            Ok(())
+        }
+
+        fn step_round(&mut self, _rng: &mut Rng, _now_ms: f64) -> Result<Vec<StepEvent>> {
+            let mut events = Vec::new();
+            for (id, left) in &mut self.live {
+                if *id == self.victim && self.admits.get(id) == Some(&1) {
+                    events.push(StepEvent::faulted(
+                        *id,
+                        StepFault::Error("flaky step".into()),
+                    ));
+                    continue;
+                }
+                *left -= 1;
+                events.push(StepEvent {
+                    id: *id,
+                    tokens: vec![7],
+                    steps: 1,
+                    proposed: 0,
+                    accepted: 0,
+                    finished: *left == 0,
+                    fault: None,
+                });
+            }
+            Ok(events)
+        }
+
+        fn retire(&mut self, id: u64) {
+            self.live.retain(|(i, _)| *i != id);
+        }
+
+        fn live_bytes(&self) -> usize {
+            self.live.len()
+        }
+    }
+
+    /// FakeExec variant whose every round fails (a dead worker).
+    struct CrashExec {
+        crash: bool,
+        live: Vec<(u64, usize)>,
+    }
+
+    impl StepExecutor for CrashExec {
+        fn projected_bytes(&self, _req: &TokenRequest) -> usize {
+            1
+        }
+
+        fn admit(&mut self, req: &TokenRequest) -> Result<()> {
+            self.live.push((req.id, req.max_new_tokens.max(1)));
+            Ok(())
+        }
+
+        fn step_round(&mut self, _rng: &mut Rng, _now_ms: f64) -> Result<Vec<StepEvent>> {
+            if self.crash {
+                bail!("induced worker crash");
+            }
+            let mut events = Vec::new();
+            for (id, left) in &mut self.live {
+                *left -= 1;
+                events.push(StepEvent {
+                    id: *id,
+                    tokens: vec![7],
+                    steps: 1,
+                    proposed: 0,
+                    accepted: 0,
+                    finished: *left == 0,
+                    fault: None,
+                });
+            }
+            Ok(events)
+        }
+
+        fn retire(&mut self, id: u64) {
+            self.live.retain(|(i, _)| *i != id);
+        }
+
+        fn live_bytes(&self) -> usize {
+            self.live.len()
+        }
+    }
+
+    /// FakeExec variant that stalls the worker clock by a fixed virtual
+    /// time every round (deterministic clock inflation).
+    struct StallExec {
+        stall_ms: f64,
+        pending: f64,
+        live: Vec<(u64, usize)>,
+    }
+
+    impl StepExecutor for StallExec {
+        fn projected_bytes(&self, _req: &TokenRequest) -> usize {
+            1
+        }
+
+        fn admit(&mut self, req: &TokenRequest) -> Result<()> {
+            self.live.push((req.id, req.max_new_tokens.max(1)));
+            Ok(())
+        }
+
+        fn step_round(&mut self, _rng: &mut Rng, _now_ms: f64) -> Result<Vec<StepEvent>> {
+            self.pending += self.stall_ms;
+            let mut events = Vec::new();
+            for (id, left) in &mut self.live {
+                *left -= 1;
+                events.push(StepEvent {
+                    id: *id,
+                    tokens: vec![7],
+                    steps: 1,
+                    proposed: 0,
+                    accepted: 0,
+                    finished: *left == 0,
+                    fault: None,
+                });
+            }
+            Ok(events)
+        }
+
+        fn retire(&mut self, id: u64) {
+            self.live.retain(|(i, _)| *i != id);
+        }
+
+        fn live_bytes(&self) -> usize {
+            self.live.len()
+        }
+
+        fn take_stall_ms(&mut self) -> f64 {
+            let s = self.pending;
+            self.pending = 0.0;
+            s
+        }
+    }
+
+    #[test]
+    fn fault_free_run_reports_all_completed_first_attempt() {
+        let exec = FakeExec { bytes_per_req: 1, live: Vec::new() };
+        let report = Scheduler::run(reqs(5, 1.0, 3), exec, &ServeCfg::continuous(4), 0).unwrap();
+        assert_eq!(report.goodput(), 5);
+        assert!(report.crashed_workers.is_empty());
+        for c in &report.completed {
+            assert_eq!(c.outcome, RequestOutcome::Completed);
+            assert_eq!(c.attempts, 1);
+        }
+    }
+
+    #[test]
+    fn faulted_request_retries_and_completes() {
+        let cfg = ServeCfg::continuous(4).with_retries(1).with_backoff(0.5);
+        let report = Scheduler::run(reqs(4, 0.0, 3), FlakyExec::new(2), &cfg, 0).unwrap();
+        assert_eq!(report.goodput(), 4, "retry must recover the flaky request");
+        let victim = &report.completed[2];
+        assert_eq!(victim.id, 2);
+        assert_eq!(victim.outcome, RequestOutcome::Completed);
+        assert_eq!(victim.attempts, 2, "one fault, one successful retry");
+        assert_eq!(victim.generated, 3, "retried output is a full fresh decode");
+        for c in report.completed.iter().filter(|c| c.id != 2) {
+            assert_eq!(c.attempts, 1, "fault containment must not touch request {}", c.id);
+        }
+    }
+
+    #[test]
+    fn fault_without_retry_budget_fails_only_that_request() {
+        let cfg = ServeCfg::continuous(4); // max_retries = 0
+        let report = Scheduler::run(reqs(4, 0.0, 3), FlakyExec::new(1), &cfg, 0).unwrap();
+        assert_eq!(report.completed.len(), 4, "every request gets a terminal outcome");
+        assert_eq!(report.goodput(), 3);
+        let failed = &report.completed[1];
+        assert_eq!(failed.id, 1);
+        assert_eq!(failed.attempts, 1);
+        match &failed.outcome {
+            RequestOutcome::Failed { error } => {
+                assert!(error.contains("request 1"), "error names the request: {error}");
+                assert!(error.contains("flaky step"), "error keeps the cause: {error}");
+            }
+            other => panic!("expected Failed, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn crashed_worker_requeues_to_survivors() {
+        let cfg = ServeCfg::continuous(2).with_workers(2).with_retries(2).with_backoff(0.0);
+        let report = WorkerPool::run(
+            reqs(6, 0.0, 3),
+            |w| CrashExec { crash: w == 1, live: Vec::new() },
+            &cfg,
+            0,
+        )
+        .unwrap();
+        assert_eq!(report.goodput(), 6, "survivors must absorb the crashed worker's load");
+        assert_eq!(report.crashed_workers.len(), 1);
+        assert_eq!(report.crashed_workers[0].0, 1);
+        assert!(
+            report.completed.iter().any(|c| c.attempts > 1),
+            "worker 1 admitted something before crashing, so retries must show"
+        );
+    }
+
+    #[test]
+    fn all_workers_crashed_still_returns_full_accounting() {
+        let cfg = ServeCfg::continuous(2); // one worker, no retries
+        let report = Scheduler::run(
+            reqs(4, 0.0, 3),
+            CrashExec { crash: true, live: Vec::new() },
+            &cfg,
+            0,
+        )
+        .unwrap();
+        assert_eq!(report.completed.len(), 4, "total failure still accounts for every request");
+        assert_eq!(report.goodput(), 0);
+        let counts = report.outcome_counts();
+        assert_eq!(counts.failed, 2, "the two admitted requests fail with the worker");
+        assert_eq!(counts.shed, 2, "the queued remainder is shed");
+        assert_eq!(report.crashed_workers.len(), 1);
+    }
+
+    #[test]
+    fn expired_queued_request_is_cancelled_before_admission() {
+        // per-request deadline of 0 ms can never be met: it must be
+        // cancelled at admission time without spending KV or compute
+        let mut requests = reqs(3, 0.0, 3);
+        requests[1].deadline_ms = Some(0.0);
+        let exec = FakeExec { bytes_per_req: 1, live: Vec::new() };
+        let report = Scheduler::run(requests, exec, &ServeCfg::continuous(1), 0).unwrap();
+        assert_eq!(report.completed.len(), 3);
+        let cancelled = &report.completed[1];
+        assert_eq!(cancelled.outcome, RequestOutcome::DeadlineExceeded);
+        assert_eq!(cancelled.generated, 0);
+        assert_eq!(cancelled.attempts, 0, "never admitted");
+        assert_eq!(report.goodput(), 2);
+    }
+
+    #[test]
+    fn stall_inflates_clock_and_deadline_cancels_midflight() {
+        // 10 ms of injected stall per round against a 15 ms deadline: the
+        // request decodes one round, then the sweep cancels it with its
+        // partial output kept and its KV reservation released
+        let mut requests = reqs(1, 0.0, 8);
+        requests[0].deadline_ms = Some(15.0);
+        let exec = StallExec { stall_ms: 10.0, pending: 0.0, live: Vec::new() };
+        let report = Scheduler::run(requests, exec, &ServeCfg::continuous(1), 0).unwrap();
+        let c = &report.completed[0];
+        assert_eq!(c.outcome, RequestOutcome::DeadlineExceeded);
+        assert!(
+            c.generated >= 1 && c.generated < 8,
+            "partial output kept on cancellation, got {}",
+            c.generated
+        );
+        assert!(c.total_ms >= 15.0, "cancelled on the inflated clock: {}", c.total_ms);
+        assert!(report.makespan_ms >= 20.0, "stall inflates the worker clock");
+    }
+
+    #[test]
+    fn pool_deadline_default_applies_to_all_requests() {
+        let cfg = ServeCfg::continuous(1).with_deadline(f64::MIN_POSITIVE);
+        let exec = StallExec { stall_ms: 5.0, pending: 0.0, live: Vec::new() };
+        // head admitted at start == arrival (not yet past the tiny
+        // deadline), then swept after its first stalled round
+        let report = Scheduler::run(reqs(2, 0.0, 4), exec, &cfg, 0).unwrap();
+        assert_eq!(report.completed.len(), 2);
+        assert!(report
+            .completed
+            .iter()
+            .all(|c| c.outcome == RequestOutcome::DeadlineExceeded));
+    }
+
+    #[test]
+    fn pool_rejects_nonpositive_deadline_and_negative_backoff() {
+        let mk = || FakeExec { bytes_per_req: 1, live: Vec::new() };
+        let bad_deadline = ServeCfg { deadline_ms: Some(0.0), ..ServeCfg::continuous(2) };
+        assert!(Scheduler::run(reqs(1, 0.0, 2), mk(), &bad_deadline, 0).is_err());
+        let bad_backoff = ServeCfg::continuous(2).with_backoff(-1.0);
+        assert!(Scheduler::run(reqs(1, 0.0, 2), mk(), &bad_backoff, 0).is_err());
+    }
+
+    #[test]
+    fn injected_faults_via_cfg_reach_terminal_outcomes() {
+        // cfg.fault wraps every worker's executor in a FaultInjector; a
+        // high error rate with retries still ends in full accounting
+        let plan = FaultPlan::default().with_step_errors(0.5);
+        let cfg = ServeCfg::continuous(2)
+            .with_workers(2)
+            .with_retries(4)
+            .with_backoff(0.1)
+            .with_faults(plan);
+        let report = WorkerPool::run(
+            reqs(8, 0.0, 3),
+            |_| FakeExec { bytes_per_req: 1, live: Vec::new() },
+            &cfg,
+            7,
+        )
+        .unwrap();
+        assert_eq!(report.completed.len(), 8);
+        let counts = report.outcome_counts();
+        assert_eq!(
+            counts.completed + counts.failed + counts.deadline_exceeded + counts.shed,
+            8
+        );
     }
 }

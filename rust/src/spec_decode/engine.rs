@@ -282,15 +282,21 @@ pub fn spec_verify_step<D: SessionModel, T: SessionModel>(
     // draft proposes up to `room` tokens, one cached decode step each
     // (the catch-up covers tokens committed last round)
     let mut proposal = Vec::with_capacity(room);
-    let mut dlast = dsess
-        .extend(draft, &seq[dsess.len()..])?
-        .pop()
-        .expect("draft catch-up covers at least one token");
+    let mut dlast = dsess.extend(draft, &seq[dsess.len()..])?.pop().ok_or_else(|| {
+        anyhow::anyhow!(
+            "speculative verify: draft catch-up returned no logits (draft cache \
+             at {} of a {}-token sequence)",
+            dsess.len(),
+            seq.len()
+        )
+    })?;
     for i in 0..room {
         let tok = sampler.sample(&dlast, rng);
         proposal.push(tok);
         if i + 1 < room {
-            dlast = dsess.extend(draft, &[tok])?.pop().unwrap();
+            dlast = dsess.extend(draft, &[tok])?.pop().ok_or_else(|| {
+                anyhow::anyhow!("speculative verify: draft step {i} returned no logits")
+            })?;
         }
     }
 
@@ -299,6 +305,15 @@ pub fn spec_verify_step<D: SessionModel, T: SessionModel>(
     let mut feed: Vec<u8> = seq[tsess.len()..].to_vec();
     feed.extend_from_slice(&proposal);
     let rows = tsess.extend(target, &feed)?;
+    if rows.len() < room + 1 {
+        anyhow::bail!(
+            "speculative verify: target pass returned {} logit rows for a \
+             {}-token feed, need at least {}",
+            rows.len(),
+            feed.len(),
+            room + 1
+        );
+    }
     let tl = &rows[rows.len() - (room + 1)..];
 
     let mut n_acc = 0;

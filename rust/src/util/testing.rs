@@ -55,6 +55,7 @@ pub fn fixture_requests(corpus: &[u8], n: usize, max_new: usize) -> Vec<TokenReq
             prompt: corpus[i * 17..i * 17 + 8].to_vec(),
             max_new_tokens: if i % 2 == 0 { max_new } else { max_new / 3 + 1 },
             arrival_ms: i as f64 * 0.5,
+            deadline_ms: None,
         })
         .collect()
 }
@@ -131,29 +132,74 @@ pub fn assert_outputs_match(a: &ServeReport, b: &ServeReport, context: &str) {
     }
 }
 
-/// Assert the universal serving contracts on one report: each of the `n`
-/// submitted requests completed exactly once (no duplicates, no drops),
-/// every TTFT lies in `[0, total]`, and — when `budget > 0` — peak live
-/// KV bytes stayed within the admission budget.
+/// Assert the universal serving contracts on a **fault-free** report:
+/// each of the `n` submitted requests completed exactly once on its first
+/// attempt (no duplicates, no drops, no stray outcomes), every TTFT lies
+/// in `[0, total]`, and — when `budget > 0` — peak live KV bytes stayed
+/// within the admission budget. Chaos runs, where non-`Completed`
+/// outcomes are expected, use [`assert_terminal_outcomes`] instead.
 #[track_caller]
 pub fn assert_serving_contracts(r: &ServeReport, n: usize, budget: usize) {
-    assert_eq!(r.completed.len(), n, "every submitted request completes");
+    assert_terminal_outcomes(r, n, budget);
+    assert_eq!(r.goodput(), n, "a fault-free run completes every request");
+    assert!(
+        r.crashed_workers.is_empty(),
+        "a fault-free run crashes no worker: {:?}",
+        r.crashed_workers
+    );
+    for c in &r.completed {
+        assert_eq!(
+            c.attempts, 1,
+            "request {}: fault-free serving is single-attempt",
+            c.id
+        );
+    }
+}
+
+/// Assert the exactly-once fault-tolerance contract on any report, chaos
+/// runs included: every one of the `n` submitted requests holds exactly
+/// one terminal outcome (ids strictly increasing — no duplicates, no
+/// drops), outcome bookkeeping is self-consistent, TTFTs lie in
+/// `[0, total]`, and — when `budget > 0` — pool-wide peak live KV stayed
+/// within the admission budget (faulted reservations must be released,
+/// so injection never excuses an overshoot).
+#[track_caller]
+pub fn assert_terminal_outcomes(r: &ServeReport, n: usize, budget: usize) {
+    assert_eq!(
+        r.completed.len(),
+        n,
+        "every submitted request reaches a terminal outcome"
+    );
     for w in r.completed.windows(2) {
         assert!(
             w[0].id < w[1].id,
-            "completed ids must be strictly increasing (duplicate id {}?)",
+            "terminal ids must be strictly increasing (duplicate id {}?)",
             w[1].id
         );
     }
+    let counts = r.outcome_counts();
+    assert_eq!(
+        counts.completed + counts.failed + counts.deadline_exceeded + counts.shed,
+        n,
+        "outcome counts must partition the request set"
+    );
+    assert_eq!(counts.completed, r.goodput(), "goodput counts Completed outcomes");
     for c in &r.completed {
         assert!(c.ttft_ms >= 0.0, "request {}: ttft measured from arrival", c.id);
         assert!(
             c.ttft_ms <= c.total_ms + 1e-9,
-            "request {}: ttft {} after completion {}",
+            "request {}: ttft {} after terminal time {}",
             c.id,
             c.ttft_ms,
             c.total_ms
         );
+        if c.is_completed() {
+            assert!(
+                c.attempts >= 1,
+                "request {}: a completed request ran at least once",
+                c.id
+            );
+        }
     }
     if budget > 0 {
         assert!(

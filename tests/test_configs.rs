@@ -157,6 +157,53 @@ fn serve_rejects_unknown_policy_strings() {
 }
 
 #[test]
+fn fault_fixture_parses_into_a_full_chaos_profile() {
+    let cfg = SlimConfig::from_file("configs/serve_faults_fixture.yaml").unwrap();
+    assert_eq!(cfg.serve.workers, 2);
+    assert_eq!(cfg.serve.deadline_ms, Some(50_000.0));
+    assert_eq!(cfg.serve.max_retries, 3);
+    assert!((cfg.serve.retry_backoff_ms - 0.5).abs() < 1e-12);
+    let plan = cfg.serve.fault.as_ref().expect("fixture ships a fault block");
+    assert_eq!(plan.seed, 7);
+    assert!(plan.step_error_rate > 0.0 && plan.nan_rate > 0.0);
+    assert_eq!(plan.crashes.len(), 1);
+    assert_eq!(plan.crashes[0].worker, 1);
+    assert!(!plan.is_noop());
+}
+
+#[test]
+fn serve_rejects_misconfigured_fault_tolerance() {
+    // a zero/negative deadline would cancel every request at admission
+    assert!(with_serve("  deadline_ms: 0\n").is_err(), "deadline_ms: 0 must be loud");
+    assert!(with_serve("  deadline_ms: -10\n").is_err(), "negative deadline must be loud");
+    // negative backoff would schedule retries into the past
+    assert!(
+        with_serve("  fault:\n    seed: 1\n  retry_backoff_ms: -1\n").is_err(),
+        "negative retry_backoff_ms must be loud"
+    );
+    // retry knobs without a fault block are dead config
+    assert!(
+        with_serve("  max_retries: 2\n").is_err(),
+        "max_retries without a fault block must be rejected"
+    );
+    // an unknown fault kind must not be silently ignored chaos
+    assert!(
+        with_serve("  fault:\n    cosmic_rays: 0.5\n").is_err(),
+        "unknown fault knob must be rejected"
+    );
+    // rates are probabilities; crashes need both halves of the pair
+    assert!(with_serve("  fault:\n    step_error_rate: 2.0\n").is_err());
+    assert!(with_serve("  fault:\n    crash_worker: 0\n").is_err());
+    // and the valid spelling of all of the above parses
+    assert!(with_serve(
+        "  workers: 2\n  deadline_ms: 100\n  max_retries: 1\n\
+         \x20 fault:\n    seed: 3\n    step_error_rate: 0.1\n\
+         \x20   crash_worker: 1\n    crash_at_ms: 5\n"
+    )
+    .is_ok());
+}
+
+#[test]
 fn serve_rejects_budget_below_the_smallest_request() {
     // config-level: a total budget that splits to zero per worker
     assert!(
@@ -175,6 +222,7 @@ fn serve_rejects_budget_below_the_smallest_request() {
         prompt: vec![1, 2, 3, 4],
         max_new_tokens: 8,
         arrival_ms: 0.0,
+        deadline_ms: None,
     }];
     let need = exec.projected_bytes(&requests[0]);
     assert!(need > 0, "fixture requests project real KV bytes");

@@ -1,0 +1,307 @@
+//! Chaos property tests for the fault-tolerant serving pool: under
+//! deterministic injection (step errors, poisoned logits, stalls, worker
+//! crashes) every submitted request must still reach exactly one terminal
+//! outcome, completed outputs must stay bit-identical to sequential
+//! decoding (containment and retry never corrupt a decode), the KV
+//! admission budget must hold with faulted reservations released, and the
+//! same seed must reproduce the same report. The per-(request, attempt,
+//! round) keyed draws in `server::faults` make the injected fault set
+//! independent of worker count, which the cross-worker matrix pins down.
+
+use angelslim::data::TokenRequest;
+use angelslim::models::Transformer;
+use angelslim::server::{FaultPlan, RequestOutcome, ServeCfg, ServeReport, ServingEngine};
+use angelslim::util::fixtures::{fixture_corpus, fixture_target, FixtureSpec};
+use angelslim::util::testing::{
+    assert_outputs_match, assert_serving_contracts, assert_terminal_outcomes, check,
+    fixture_requests, projected_greedy_bytes as projected_greedy,
+};
+use angelslim::util::Rng;
+
+fn run(
+    reqs: Vec<TokenRequest>,
+    target: &Transformer,
+    cfg: &ServeCfg,
+) -> ServeReport {
+    ServingEngine::serve_scheduled::<Transformer, _>(reqs, target, None, cfg, 0).unwrap()
+}
+
+/// A `fault: None` config must reproduce the pre-injection scheduler
+/// byte-for-byte, and a no-op plan (all rates zero) must change nothing
+/// observable either: same outputs, same single-attempt accounting.
+#[test]
+fn disabled_and_noop_injection_reproduce_the_baseline() {
+    let spec = FixtureSpec::default();
+    let corpus = fixture_corpus(&spec, 2_048, 13);
+    let target = fixture_target(5);
+    let reqs = || fixture_requests(&corpus, 8, 12);
+
+    let baseline = run(reqs(), &target, &ServeCfg::continuous(4));
+    assert_serving_contracts(&baseline, 8, 0);
+    let noop = run(
+        reqs(),
+        &target,
+        &ServeCfg::continuous(4).with_faults(FaultPlan::default()),
+    );
+    assert_serving_contracts(&noop, 8, 0);
+    assert_outputs_match(&baseline, &noop, "no-op plan vs no injector");
+}
+
+/// The injected fault set is keyed per (request, attempt, round), so the
+/// terminal outcome, attempt count, and output of every request are
+/// identical at 1, 2, and 4 workers — and every request that completes
+/// (first try or after retries) decodes bit-identically to sequential.
+#[test]
+fn chaos_outcomes_are_identical_across_worker_counts() {
+    let spec = FixtureSpec::default();
+    let corpus = fixture_corpus(&spec, 2_048, 17);
+    let target = fixture_target(5);
+    let n = 9;
+    let reqs = || fixture_requests(&corpus, n, 12);
+    let sequential = ServingEngine::serve::<Transformer, _>(reqs(), &target, None, 0).unwrap();
+    let plan = FaultPlan::default().seeded(23).with_step_errors(0.08).with_nan(0.04);
+
+    let reports: Vec<ServeReport> = [1usize, 2, 4]
+        .iter()
+        .map(|&w| {
+            let cfg = ServeCfg::continuous(4)
+                .with_workers(w)
+                .with_retries(2)
+                .with_backoff(0.25)
+                .with_faults(plan.clone());
+            let r = run(reqs(), &target, &cfg);
+            assert_terminal_outcomes(&r, n, 0);
+            r
+        })
+        .collect();
+
+    // at these rates with 2 retries some request must actually retry,
+    // or the test isn't exercising containment at all
+    assert!(
+        reports[0].retried() > 0,
+        "chaos profile injected nothing; raise the rates"
+    );
+
+    for (w, r) in [2usize, 4].iter().zip(&reports[1..]) {
+        for (a, b) in reports[0].completed.iter().zip(&r.completed) {
+            assert_eq!(a.id, b.id, "workers={w}: id sets diverged");
+            assert_eq!(a.outcome, b.outcome, "workers={w}: request {} outcome", a.id);
+            assert_eq!(a.attempts, b.attempts, "workers={w}: request {} attempts", a.id);
+            assert_eq!(a.output, b.output, "workers={w}: request {} output", a.id);
+            assert_eq!(a.generated, b.generated, "workers={w}: request {} tokens", a.id);
+        }
+    }
+
+    // containment/retry never corrupts a completed decode
+    for r in &reports {
+        for c in r.completed.iter().filter(|c| c.is_completed()) {
+            let s = sequential.completed.iter().find(|s| s.id == c.id).unwrap();
+            assert_eq!(c.output, s.output, "request {} drifted from sequential", c.id);
+        }
+    }
+}
+
+/// Same plan + same seed → the same report, field for field. Chaos is
+/// reproducible, which is what makes failing seeds debuggable. The plan
+/// sticks to per-request keyed faults (step errors, poisoned logits) —
+/// stall and crash *firing rounds* depend on wall-measured round times,
+/// so they are exercised by the dedicated tests above/below instead.
+#[test]
+fn chaos_runs_are_reproducible() {
+    let spec = FixtureSpec::default();
+    let corpus = fixture_corpus(&spec, 2_048, 29);
+    let target = fixture_target(3);
+    let reqs = || fixture_requests(&corpus, 8, 10);
+    let cfg = ServeCfg::continuous(3)
+        .with_workers(2)
+        .with_retries(1)
+        .with_backoff(0.5)
+        .with_faults(
+            FaultPlan::default()
+                .seeded(41)
+                .with_step_errors(0.1)
+                .with_nan(0.05),
+        );
+    let a = run(reqs(), &target, &cfg);
+    let b = run(reqs(), &target, &cfg);
+    assert_terminal_outcomes(&a, 8, 0);
+    assert_eq!(a.completed.len(), b.completed.len());
+    for (x, y) in a.completed.iter().zip(&b.completed) {
+        assert_eq!(x.id, y.id);
+        assert_eq!(x.outcome, y.outcome, "request {}", x.id);
+        assert_eq!(x.attempts, y.attempts, "request {}", x.id);
+        assert_eq!(x.output, y.output, "request {}", x.id);
+    }
+    assert_eq!(a.outcome_counts(), b.outcome_counts());
+    assert_eq!(a.crashed_workers, b.crashed_workers);
+}
+
+/// A worker crash mid-run: its live requests re-enter the shared queue
+/// and finish on the survivor (exactly-once, correct outputs), and the
+/// crash is logged in the report.
+#[test]
+fn crashed_worker_requests_complete_on_survivors() {
+    let spec = FixtureSpec::default();
+    let corpus = fixture_corpus(&spec, 2_048, 7);
+    let target = fixture_target(5);
+    let n = 8;
+    let reqs = || fixture_requests(&corpus, n, 12);
+    let sequential = ServingEngine::serve::<Transformer, _>(reqs(), &target, None, 0).unwrap();
+    let cfg = ServeCfg::continuous(4)
+        .with_workers(2)
+        .with_retries(3)
+        .with_backoff(0.1)
+        .with_faults(FaultPlan::default().with_crash(1, 0.0));
+    let r = run(reqs(), &target, &cfg);
+    assert_terminal_outcomes(&r, n, 0);
+    assert_eq!(r.goodput(), n, "survivor absorbs the crashed worker's load");
+    assert_eq!(r.crashed_workers.len(), 1);
+    assert_eq!(r.crashed_workers[0].0, 1, "worker 1 was the crash target");
+    assert_outputs_match(&sequential, &r, "crash+re-admission vs sequential");
+}
+
+/// Every worker crashes with work still queued: the pool still returns
+/// full accounting — each live request Failed (retries exhausted against
+/// dead workers) or the queue Shed — with zero panics.
+#[test]
+fn total_worker_loss_still_accounts_for_every_request() {
+    let spec = FixtureSpec::default();
+    let corpus = fixture_corpus(&spec, 2_048, 19);
+    let target = fixture_target(5);
+    let n = 10;
+    let cfg = ServeCfg::continuous(2)
+        .with_workers(2)
+        .with_faults(FaultPlan::default().with_crash(0, 0.0).with_crash(1, 0.0));
+    let r = run(fixture_requests(&corpus, n, 12), &target, &cfg);
+    assert_terminal_outcomes(&r, n, 0);
+    assert_eq!(r.goodput(), 0, "nothing can complete with every worker dead");
+    assert_eq!(r.crashed_workers.len(), 2);
+    let counts = r.outcome_counts();
+    assert_eq!(counts.failed + counts.shed, n);
+    assert!(counts.shed > 0, "queued requests shed when the pool dies");
+}
+
+/// KV accounting under injection: faulted and cancelled reservations are
+/// released, so pool-wide peak live KV stays within the admission budget
+/// even while requests fault and retry.
+#[test]
+fn budget_holds_with_faulted_reservations_released() {
+    let spec = FixtureSpec::default();
+    let corpus = fixture_corpus(&spec, 2_048, 23);
+    let target = fixture_target(5);
+    let n = 9;
+    let reqs = fixture_requests(&corpus, n, 12);
+    let worst = reqs.iter().map(|r| projected_greedy(&target, r)).max().unwrap();
+    let budget = 2 * (2 * worst + 64); // ~2 concurrent requests per worker
+    let cfg = ServeCfg::continuous(8)
+        .with_workers(2)
+        .with_budget(budget)
+        .with_retries(2)
+        .with_backoff(0.1)
+        .with_faults(FaultPlan::default().seeded(3).with_step_errors(0.15).with_nan(0.05));
+    let r = run(reqs, &target, &cfg);
+    assert_terminal_outcomes(&r, n, budget);
+    assert!(r.peak_kv_bytes > 0, "fixture sessions hold real KV bytes");
+}
+
+/// Deadlines on the virtual clock: with every round stalled far past a
+/// tight deadline, each request is cancelled — mid-flight with its
+/// partial output kept, or before admission ever runs — never completed,
+/// never dropped.
+#[test]
+fn stalls_push_every_request_past_its_deadline() {
+    let spec = FixtureSpec::default();
+    let corpus = fixture_corpus(&spec, 2_048, 31);
+    let target = fixture_target(5);
+    let n = 6;
+    let cfg = ServeCfg::continuous(4)
+        .with_workers(2)
+        .with_deadline(1.0)
+        .with_faults(FaultPlan::default().with_stalls(1.0, 50.0));
+    let r = run(fixture_requests(&corpus, n, 12), &target, &cfg);
+    assert_terminal_outcomes(&r, n, 0);
+    let counts = r.outcome_counts();
+    assert_eq!(counts.deadline_exceeded, n, "50ms stalls bust a 1ms deadline");
+    assert!(
+        r.completed.iter().any(|c| c.generated > 0),
+        "mid-flight cancellation keeps partial output"
+    );
+    assert!(
+        r.completed.iter().any(|c| c.attempts == 0),
+        "late arrivals are cancelled before admission"
+    );
+}
+
+/// A per-request deadline overrides the pool default: the request with
+/// its own generous deadline survives a pool default that cancels the
+/// rest.
+#[test]
+fn per_request_deadline_overrides_pool_default() {
+    let spec = FixtureSpec::default();
+    let corpus = fixture_corpus(&spec, 2_048, 37);
+    let target = fixture_target(5);
+    let mut reqs = fixture_requests(&corpus, 4, 8);
+    reqs[0].deadline_ms = Some(1e9);
+    let cfg = ServeCfg::continuous(4)
+        .with_deadline(1.0)
+        .with_faults(FaultPlan::default().with_stalls(1.0, 50.0));
+    let r = run(reqs, &target, &cfg);
+    assert_terminal_outcomes(&r, 4, 0);
+    let first = r.completed.iter().find(|c| c.id == 0).unwrap();
+    assert_eq!(first.outcome, RequestOutcome::Completed, "own deadline wins");
+    for c in r.completed.iter().filter(|c| c.id != 0) {
+        assert_eq!(c.outcome, RequestOutcome::DeadlineExceeded, "request {}", c.id);
+    }
+}
+
+/// Randomized chaos sweep: random traces, budgets, worker counts, and
+/// fault profiles — exactly-once terminal outcomes, budget compliance,
+/// and completed-output correctness must hold for every seed.
+#[test]
+fn randomized_chaos_upholds_terminal_contracts() {
+    let spec = FixtureSpec::default();
+    let corpus = fixture_corpus(&spec, 4_096, 41);
+    let target = fixture_target(7);
+    check(6, |rng: &mut Rng| {
+        let n = 4 + rng.below(6);
+        let mut t = 0.0f64;
+        let reqs: Vec<TokenRequest> = (0..n)
+            .map(|i| {
+                t += rng.f64() * 2.0;
+                let start = rng.below(corpus.len() - 12);
+                TokenRequest {
+                    id: i as u64,
+                    prompt: corpus[start..start + 4 + rng.below(8)].to_vec(),
+                    max_new_tokens: 1 + rng.below(10),
+                    arrival_ms: t,
+                    deadline_ms: None,
+                }
+            })
+            .collect();
+        let sequential =
+            ServingEngine::serve::<Transformer, _>(reqs.clone(), &target, None, 0).unwrap();
+        let workers = 1 + rng.below(3);
+        let worst = reqs.iter().map(|r| projected_greedy(&target, r)).max().unwrap();
+        let budget = workers * worst * (1 + rng.below(3));
+        let mut plan = FaultPlan::default()
+            .seeded(rng.below(1_000_000) as u64)
+            .with_step_errors(rng.f64() * 0.2)
+            .with_nan(rng.f64() * 0.1)
+            .with_stalls(rng.f64() * 0.3, rng.f64() * 2.0);
+        if rng.below(2) == 1 && workers > 1 {
+            plan = plan.with_crash(rng.below(workers), rng.f64() * 3.0);
+        }
+        let cfg = ServeCfg::continuous(1 + rng.below(5))
+            .with_workers(workers)
+            .with_budget(budget)
+            .with_retries(rng.below(4))
+            .with_backoff(0.1 + rng.f64())
+            .with_faults(plan);
+        let r = run(reqs, &target, &cfg);
+        assert_terminal_outcomes(&r, n, budget);
+        for c in r.completed.iter().filter(|c| c.is_completed()) {
+            let s = sequential.completed.iter().find(|s| s.id == c.id).unwrap();
+            assert_eq!(c.output, s.output, "request {} drifted from sequential", c.id);
+        }
+    });
+}

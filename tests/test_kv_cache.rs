@@ -210,6 +210,7 @@ fn serve_batched_kv_matches_sequential() {
                 prompt: corpus[i * 31..i * 31 + 8].to_vec(),
                 max_new_tokens: 12,
                 arrival_ms: i as f64,
+                deadline_ms: None,
             })
             .collect()
     };

@@ -159,6 +159,7 @@ fn randomized_traces_uphold_serving_contracts() {
                     prompt: corpus[start..start + 4 + rng.below(8)].to_vec(),
                     max_new_tokens: 1 + rng.below(10),
                     arrival_ms: t,
+                    deadline_ms: None,
                 }
             })
             .collect();
