@@ -21,7 +21,9 @@ use angelslim::models::Transformer;
 use angelslim::server::{ServeCfg, ServingEngine};
 use angelslim::util::fixtures::{fixture_corpus, fixture_target, FixtureSpec};
 use angelslim::util::table::{f2, Table};
-use angelslim::util::testing::{assert_outputs_match, assert_serving_contracts, retry_timing};
+use angelslim::util::testing::{
+    assert_outputs_match, assert_serving_contracts, assert_terminal_outcomes, retry_timing,
+};
 
 const MAX_BATCH: usize = 4;
 const SHORT_NEW: usize = 4;
@@ -92,14 +94,53 @@ fn main() {
     // shared contract assertions
     assert_serving_contracts(&budgeted, n, budget);
 
+    // paged run at the SAME budget: free-block admission needs only each
+    // prompt's pages up front, so it must sustain strictly more live
+    // requests per round than projected-peak reservation — while staying
+    // bit-identical per request (preemption restarts recompute greedily)
+    let paged = ServingEngine::serve_paged(
+        trace(&corpus, bursts, per_burst),
+        &model,
+        None,
+        &ServeCfg::continuous(MAX_BATCH)
+            .with_budget(budget)
+            .with_block_tokens(8),
+        0,
+    )
+    .expect("paged serve");
+    // preemption may consume extra attempts, so assert the exactly-once
+    // terminal contract rather than the single-attempt fault-free one
+    assert_terminal_outcomes(&paged, n, budget);
+    assert_eq!(paged.goodput(), n, "paged serving completes every request");
+    assert_outputs_match(&budgeted, &paged, "paged vs contiguous at equal budget");
+    assert!(
+        paged.mean_in_flight > budgeted.mean_in_flight,
+        "paged free-block admission must sustain more in-flight than \
+         projected-peak reservation at the same budget: paged {:.3} vs \
+         contiguous {:.3}",
+        paged.mean_in_flight,
+        budgeted.mean_in_flight
+    );
+
+    let kv_util = |r: &angelslim::server::ServeReport| r.peak_kv_bytes as f64 / budget as f64;
+
     let mut table = Table::new(
         "continuous vs static batching (fixture model, bursty trace)",
-        &["policy", "tok/s", "TTFT mean ms", "TTFT p50 ms", "TTFT p99 ms", "peak KV KiB"],
+        &[
+            "policy",
+            "tok/s",
+            "TTFT mean ms",
+            "TTFT p50 ms",
+            "TTFT p99 ms",
+            "peak KV KiB",
+            "mean in-flight",
+        ],
     );
     for (name, r, ttft) in [
         ("static", &stat, &stat_ttft),
         ("continuous", &cont, &cont_ttft),
         ("cont+budget", &budgeted, &budgeted.ttft_summary()),
+        ("paged+budget", &paged, &paged.ttft_summary()),
     ] {
         table.row_strs(&[
             name,
@@ -108,6 +149,7 @@ fn main() {
             &f2(ttft.p50),
             &f2(ttft.p99),
             &format!("{:.1}", r.peak_kv_bytes as f64 / 1024.0),
+            &f2(r.mean_in_flight),
         ]);
     }
     table.print();
@@ -118,7 +160,12 @@ fn main() {
          \"static_ttft_mean_ms\":{:.3},\"cont_ttft_mean_ms\":{:.3},\
          \"static_ttft_p50_ms\":{:.3},\"cont_ttft_p50_ms\":{:.3},\
          \"static_ttft_p99_ms\":{:.3},\"cont_ttft_p99_ms\":{:.3},\
-         \"budget_bytes\":{budget},\"budget_peak_kv_bytes\":{},\"quick\":{quick}}}",
+         \"budget_bytes\":{budget},\"budget_peak_kv_bytes\":{},\
+         \"budget_kv_util\":{:.4},\"budget_mean_in_flight\":{:.3},\
+         \"budget_peak_in_flight\":{},\
+         \"paged_peak_kv_bytes\":{},\"paged_kv_util\":{:.4},\
+         \"paged_mean_in_flight\":{:.3},\"paged_peak_in_flight\":{},\
+         \"quick\":{quick}}}",
         stat.tps(),
         cont.tps(),
         stat_ttft.mean,
@@ -128,9 +175,18 @@ fn main() {
         stat_ttft.p99,
         cont_ttft.p99,
         budgeted.peak_kv_bytes,
+        kv_util(&budgeted),
+        budgeted.mean_in_flight,
+        budgeted.peak_in_flight,
+        paged.peak_kv_bytes,
+        kv_util(&paged),
+        paged.mean_in_flight,
+        paged.peak_in_flight,
     );
     println!(
-        "shape: outputs bit-identical across policies; continuous mean TTFT \
-         strictly below static at equal max-batch; budgeted peak KV within budget."
+        "shape: outputs bit-identical across policies (paged included); continuous \
+         mean TTFT strictly below static at equal max-batch; budgeted peak KV \
+         within budget; paged mean in-flight strictly above projected-peak \
+         admission at the same budget."
     );
 }

@@ -113,12 +113,16 @@ fn main() {
         let ttft = r.ttft_summary();
         format!(
             "\"tps\":{:.2},\"ttft_mean_ms\":{:.3},\"ttft_p50_ms\":{:.3},\"ttft_p99_ms\":{:.3},\
-             \"makespan_ms\":{:.3}",
+             \"makespan_ms\":{:.3},\"peak_kv_bytes\":{},\
+             \"mean_in_flight\":{:.3},\"peak_in_flight\":{}",
             r.virtual_tps(),
             ttft.mean,
             ttft.p50,
             ttft.p99,
             r.makespan_ms,
+            r.peak_kv_bytes,
+            r.mean_in_flight,
+            r.peak_in_flight,
         )
     };
     println!(

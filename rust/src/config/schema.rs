@@ -315,6 +315,12 @@ impl SlimConfig {
                 self.serve.workers
             );
         }
+        if self.serve.kv_block_tokens == Some(0) {
+            bail!(
+                "serve.kv_block_tokens must be >= 1 (tokens per KV page); \
+                 omit the key for contiguous KV serving"
+            );
+        }
         if let Some(d) = self.serve.deadline_ms {
             if d.is_nan() || d <= 0.0 {
                 bail!(
@@ -360,6 +366,21 @@ fn serve_from_yaml(serve: &Yaml) -> Result<ServeCfg> {
             format!("serve: deadline_ms must be a number, got `{v}`")
         })?),
     };
+    let kv_block_tokens = match serve.get("kv_block_tokens") {
+        None => None,
+        Some(v) => {
+            let n = v.as_i64().with_context(|| {
+                format!("serve: kv_block_tokens must be an integer, got `{v}`")
+            })?;
+            if n < 1 {
+                bail!(
+                    "serve.kv_block_tokens must be >= 1 (tokens per KV page), \
+                     got {n}; omit the key for contiguous KV serving"
+                );
+            }
+            Some(n as usize)
+        }
+    };
     Ok(ServeCfg {
         policy: AdmissionPolicy::parse(&serve.str_or("policy", "continuous"))?,
         max_in_flight: non_negative(serve.i64_or("max_in_flight", 8), "serve.max_in_flight")?,
@@ -368,6 +389,7 @@ fn serve_from_yaml(serve: &Yaml) -> Result<ServeCfg> {
             "serve.kv_budget_bytes",
         )?,
         workers: non_negative(serve.i64_or("workers", 1), "serve.workers")?,
+        kv_block_tokens,
         deadline_ms,
         max_retries: match stage_i64(serve, "max_retries", "serve")? {
             Some(v) => non_negative(v, "serve.max_retries")?,
@@ -826,6 +848,21 @@ serve:
     // zero-worker and budget-splits-to-zero rejections are covered at the
     // integration level in tests/test_configs.rs (which also exercises the
     // executor-aware ensure_requests_fit guard)
+
+    #[test]
+    fn serve_kv_block_tokens_parses_and_rejects_nonsense() {
+        let c = serve_cfg("  kv_block_tokens: 16\n").unwrap();
+        assert_eq!(c.serve.kv_block_tokens, Some(16));
+        let d = serve_cfg("  workers: 2\n").unwrap();
+        assert_eq!(d.serve.kv_block_tokens, None, "absent key stays contiguous");
+        for (bad, why) in [
+            ("  kv_block_tokens: 0\n", "zero page size"),
+            ("  kv_block_tokens: -4\n", "negative page size"),
+            ("  kv_block_tokens: huge\n", "non-numeric page size"),
+        ] {
+            assert!(serve_cfg(bad).is_err(), "{why} must fail loudly: {bad:?}");
+        }
+    }
 
     fn serve_cfg(serve_yaml: &str) -> Result<SlimConfig> {
         SlimConfig::from_str(&format!(

@@ -17,7 +17,9 @@ use angelslim::data::RequestGen;
 use angelslim::eval;
 use angelslim::models::Transformer;
 use angelslim::runtime::ArtifactRegistry;
-use angelslim::server::{GreedyExecutor, ServingEngine, SpecExecutor};
+use angelslim::server::{
+    GreedyExecutor, PagedGreedyExecutor, PagedSpecExecutor, ServingEngine, SpecExecutor,
+};
 use angelslim::util::table::{f2, Table};
 use anyhow::Result;
 
@@ -159,38 +161,62 @@ fn cmd_serve_config(path: &str, n: usize) -> Result<()> {
     gen.max_new_tokens = 24;
     let requests = gen.take(n);
     println!(
-        "serving {n} requests | policy={} workers={} max_in_flight={} kv_budget_bytes={}",
+        "serving {n} requests | policy={} workers={} max_in_flight={} kv_budget_bytes={}{}",
         serve_cfg.policy.name(),
         serve_cfg.workers,
         serve_cfg.max_in_flight,
-        serve_cfg.kv_budget_bytes
+        serve_cfg.kv_budget_bytes,
+        match serve_cfg.kv_block_tokens {
+            Some(bt) => format!(" kv_block_tokens={bt}"),
+            None => String::new(),
+        }
     );
     let gamma = cfg.compression.num_speculative_tokens.max(1);
     // loud misconfiguration guard: a budget share no request fits would
-    // silently collapse the pool onto the oversized-request safety valve
-    match &draft {
-        Some(d) => {
+    // silently collapse the pool onto the oversized-request safety valve.
+    // The guard executor must match the serving path: paged admission only
+    // needs the prompt's pages, not the projected peak.
+    match (&draft, serve_cfg.kv_block_tokens) {
+        (Some(d), Some(bt)) => serve_cfg
+            .ensure_requests_fit(&PagedSpecExecutor::new(d, &target, gamma, bt, 0), &requests)?,
+        (None, Some(bt)) => serve_cfg
+            .ensure_requests_fit(&PagedGreedyExecutor::new(&target, bt, 0), &requests)?,
+        (Some(d), None) => {
             serve_cfg.ensure_requests_fit(&SpecExecutor::new(d, &target, gamma), &requests)?
         }
-        None => serve_cfg.ensure_requests_fit(&GreedyExecutor::new(&target), &requests)?,
+        (None, None) => serve_cfg.ensure_requests_fit(&GreedyExecutor::new(&target), &requests)?,
     }
-    let report = match &draft {
-        Some(d) => ServingEngine::serve_scheduled(
+    let report = if serve_cfg.kv_block_tokens.is_some() {
+        ServingEngine::serve_paged(
             requests,
             &target,
-            Some((d, gamma)),
+            draft.as_ref().map(|d| (d, gamma)),
             &serve_cfg,
             cfg.global.seed,
-        )?,
-        None => ServingEngine::serve_scheduled::<Transformer, _>(
-            requests,
-            &target,
-            None,
-            &serve_cfg,
-            cfg.global.seed,
-        )?,
+        )?
+    } else {
+        match &draft {
+            Some(d) => ServingEngine::serve_scheduled(
+                requests,
+                &target,
+                Some((d, gamma)),
+                &serve_cfg,
+                cfg.global.seed,
+            )?,
+            None => ServingEngine::serve_scheduled::<Transformer, _>(
+                requests,
+                &target,
+                None,
+                &serve_cfg,
+                cfg.global.seed,
+            )?,
+        }
     };
-    print_serve_report(&format!("serve ({} scheduler)", serve_cfg.policy.name()), &report);
+    let title = match serve_cfg.kv_block_tokens {
+        Some(_) => format!("serve ({} scheduler, paged KV)", serve_cfg.policy.name()),
+        None => format!("serve ({} scheduler)", serve_cfg.policy.name()),
+    };
+    print_serve_report(&title, &report);
     Ok(())
 }
 
@@ -209,6 +235,8 @@ fn print_serve_report(title: &str, report: &angelslim::server::ServeReport) {
     t.row_strs(&["TTFT p99 (ms)", &f2(report.ttft_summary().p99)]);
     t.row_strs(&["latency p90 (ms)", &f2(report.latency_summary().p90)]);
     t.row_strs(&["peak KV bytes", &report.peak_kv_bytes.to_string()]);
+    t.row_strs(&["peak in-flight", &report.peak_in_flight.to_string()]);
+    t.row_strs(&["mean in-flight", &f2(report.mean_in_flight)]);
     // fault-tolerance accounting, only when something actually went wrong
     // (fault-free output stays byte-identical to the pre-fault CLI)
     let counts = report.outcome_counts();

@@ -117,6 +117,20 @@ impl KvCache {
         debug_assert_eq!(k_rows.len(), v_rows.len());
         debug_assert_eq!(k_rows.len() % self.d_model, 0);
         let l = &mut self.layers[li];
+        // Grow by the exact deficit: `extend_from_slice` alone doubles the
+        // buffer when it outgrows `new_bounded`'s reservation, silently
+        // allocating far past the admission budget while `bytes()` keeps
+        // reporting only resident rows. `reserve_exact` keeps the real
+        // allocation tied to what was admitted.
+        let deficit = |buf: &Vec<f32>, add: usize| (buf.len() + add).saturating_sub(buf.capacity());
+        let dk = deficit(&l.k, k_rows.len());
+        if dk > 0 {
+            l.k.reserve_exact(dk);
+        }
+        let dv = deficit(&l.v, v_rows.len());
+        if dv > 0 {
+            l.v.reserve_exact(dv);
+        }
         l.k.extend_from_slice(k_rows);
         l.v.extend_from_slice(v_rows);
     }
@@ -161,6 +175,28 @@ mod tests {
         // the cap clamps to max_t
         let big = KvCache::new_bounded(&cfg(), 1000);
         assert!(big.layer(0).k.capacity() >= 48 * 32);
+    }
+
+    #[test]
+    fn growth_past_the_reservation_stays_exact() {
+        // a bounded cache that outgrows its reservation must not let Vec
+        // doubling balloon the real allocation past the admitted bytes
+        let mut c = KvCache::new_bounded(&cfg(), 4);
+        let row = vec![0.25f32; 32];
+        for t in 0..12 {
+            for li in 0..2 {
+                c.append_layer(li, &row, &row);
+            }
+            c.advance(1);
+            if t >= 4 {
+                for li in 0..2 {
+                    let l = c.layer(li);
+                    assert_eq!(l.k.capacity(), l.k.len(), "k grew non-exactly at t={t}");
+                    assert_eq!(l.v.capacity(), l.v.len(), "v grew non-exactly at t={t}");
+                }
+            }
+        }
+        assert_eq!(c.len(), 12);
     }
 
     #[test]

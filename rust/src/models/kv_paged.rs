@@ -1,0 +1,946 @@
+//! Paged KV cache: block-granular allocation with copy-on-write prefix
+//! sharing — the vLLM-style memory manager behind `serve --paged`.
+//!
+//! A [`BlockPool`] owns fixed-size pages ("blocks") of `block_tokens`
+//! K/V rows per layer; a [`PagedKvCache`] maps a session's logical token
+//! positions onto a block table. Identical prompt prefixes hash to the
+//! same sealed blocks (chain-hashed per block, verified token-exact on
+//! lookup), so a shared system prompt is materialized once and refcounted
+//! instead of once per request. Writes into a shared or sealed page fork
+//! it first (copy-on-write), and `truncate` releases whole pages, so
+//! spec-decode rollback returns memory to the pool immediately.
+//!
+//! Sharing is **storage-only**: attention still computes the full
+//! residual stream for every position, and `append_layer` simply skips
+//! writing rows the attached prefix already holds. Because the model is
+//! deterministic, those rows are bit-identical to what a fresh session
+//! would have written — which is what makes the paged serving path
+//! bit-exact against the contiguous [`super::KvCache`] twin.
+
+use std::cell::RefCell;
+use std::collections::{HashMap, VecDeque};
+use std::fmt;
+use std::rc::Rc;
+
+/// Error returned when a bounded pool cannot supply the blocks an append
+/// needs. The serving executors turn this into preemption (evict the
+/// lowest-progress session) rather than a request failure.
+///
+/// The vendored `anyhow` shim carries messages, not payloads, so the
+/// executors recognize this condition by the [`POOL_EXHAUSTED_PREFIX`]
+/// marker via [`is_pool_exhausted`] instead of downcasting.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct PoolExhausted {
+    /// Blocks the failed append needed (fresh + copy-on-write forks).
+    pub needed_blocks: usize,
+    /// Blocks the pool could still hand out when the append failed.
+    pub free_blocks: usize,
+}
+
+/// Marker prefix of [`PoolExhausted`]'s display form; stable because the
+/// scheduler-side preemption logic matches on it.
+pub const POOL_EXHAUSTED_PREFIX: &str = "kv pool exhausted";
+
+impl fmt::Display for PoolExhausted {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(
+            f,
+            "{POOL_EXHAUSTED_PREFIX}: need {} block(s), {} free",
+            self.needed_blocks, self.free_blocks
+        )
+    }
+}
+
+impl std::error::Error for PoolExhausted {}
+
+/// True when `err`'s context chain bottoms out in a [`PoolExhausted`]
+/// (the vendored `anyhow` has no downcasting, so this matches the
+/// stable message marker).
+pub fn is_pool_exhausted(err: &anyhow::Error) -> bool {
+    err.chain().any(|e| e.to_string().starts_with(POOL_EXHAUSTED_PREFIX))
+}
+
+/// Chain hash of one block's tokens given the parent block's chain hash:
+/// FNV-1a-64 seeded with the parent, so equal hashes imply (modulo the
+/// token-exact verification in [`BlockPool::lookup`]) equal full
+/// prefixes, not just equal chunks.
+pub fn chain_hash(parent: u64, chunk: &[u8]) -> u64 {
+    let mut h = 0xcbf2_9ce4_8422_2325u64 ^ parent.wrapping_mul(0x100_0000_01b3);
+    for &t in chunk {
+        h ^= t as u64;
+        h = h.wrapping_mul(0x100_0000_01b3);
+    }
+    h
+}
+
+/// Chain-hash seed for a block with no parent (prefix starts at position 0).
+pub const ROOT_HASH: u64 = 0x9E37_79B9_7F4A_7C15;
+
+/// One page: `block_tokens` K and V rows for every layer, laid out
+/// `(layer * block_tokens + slot) * d_model`. Rows never span blocks, so
+/// an attention read of one position is one contiguous `d_model` slice.
+struct Block {
+    k: Vec<f32>,
+    v: Vec<f32>,
+}
+
+/// Identity of a sealed (immutable, shareable) block: the chain hash,
+/// the parent block in the chain, and the exact tokens this block
+/// covers. Lookup verifies all three, so a hash collision can never
+/// alias two different prefixes.
+struct SealMeta {
+    hash: u64,
+    parent: Option<usize>,
+    tokens: Vec<u8>,
+}
+
+/// Fixed-page block allocator with refcounts, a sealed-prefix index for
+/// copy-on-write sharing, and honest byte accounting (`allocated_bytes`
+/// counts every page the pool has ever grown to, not just resident rows).
+pub struct BlockPool {
+    n_layers: usize,
+    d_model: usize,
+    block_tokens: usize,
+    /// Hard page cap; 0 = unbounded (library use outside serving).
+    max_blocks: usize,
+    blocks: Vec<Block>,
+    refcount: Vec<u32>,
+    sealed: Vec<Option<SealMeta>>,
+    /// Generation stamp per block; bumped whenever a block's identity
+    /// dies (freed or reclaimed) so stale `evictable` entries are inert.
+    stamp: Vec<u64>,
+    /// Unsealed blocks with refcount 0 — immediately reusable (LIFO).
+    free: Vec<usize>,
+    /// chain hash -> sealed block holding that prefix chunk.
+    index: HashMap<u64, usize>,
+    /// Sealed blocks with refcount 0: kept as prefix cache, reclaimed
+    /// FIFO under pressure. Entries are (block, stamp-at-push); stale
+    /// entries are skipped on pop.
+    evictable: VecDeque<(usize, u64)>,
+    /// Count of sealed refcount-0 blocks (live `evictable` entries).
+    cached_free: usize,
+}
+
+impl BlockPool {
+    /// Unbounded pool (grows on demand; no admission pressure).
+    pub fn new(n_layers: usize, d_model: usize, block_tokens: usize) -> Self {
+        assert!(block_tokens > 0, "block_tokens must be >= 1");
+        assert!(n_layers > 0 && d_model > 0, "degenerate pool shape");
+        BlockPool {
+            n_layers,
+            d_model,
+            block_tokens,
+            max_blocks: 0,
+            blocks: Vec::new(),
+            refcount: Vec::new(),
+            sealed: Vec::new(),
+            stamp: Vec::new(),
+            free: Vec::new(),
+            index: HashMap::new(),
+            evictable: VecDeque::new(),
+            cached_free: 0,
+        }
+    }
+
+    /// Pool capped at `budget_bytes` (at least one block so any request
+    /// can make progress).
+    pub fn new_bounded(
+        n_layers: usize,
+        d_model: usize,
+        block_tokens: usize,
+        budget_bytes: usize,
+    ) -> Self {
+        let mut p = BlockPool::new(n_layers, d_model, block_tokens);
+        p.max_blocks = (budget_bytes / p.block_bytes()).max(1);
+        p
+    }
+
+    pub fn block_tokens(&self) -> usize {
+        self.block_tokens
+    }
+
+    pub fn n_layers(&self) -> usize {
+        self.n_layers
+    }
+
+    pub fn d_model(&self) -> usize {
+        self.d_model
+    }
+
+    /// Bytes of one page: K and V rows for all layers.
+    pub fn block_bytes(&self) -> usize {
+        self.n_layers * 2 * self.block_tokens * self.d_model * std::mem::size_of::<f32>()
+    }
+
+    /// Page cap (0 = unbounded).
+    pub fn max_blocks(&self) -> usize {
+        self.max_blocks
+    }
+
+    /// Total pages the pool has grown to (free, cached, and in use).
+    pub fn total_blocks(&self) -> usize {
+        self.blocks.len()
+    }
+
+    /// Honest footprint: every allocated page, whether resident rows
+    /// fill it or not. This is what the scheduler's KV accounting sees.
+    pub fn allocated_bytes(&self) -> usize {
+        self.blocks.len() * self.block_bytes()
+    }
+
+    /// Pages currently referenced by at least one session.
+    pub fn in_use_blocks(&self) -> usize {
+        self.blocks.len() - self.free.len() - self.cached_free
+    }
+
+    /// Sealed refcount-0 pages retained as prefix cache.
+    pub fn cached_blocks(&self) -> usize {
+        self.cached_free
+    }
+
+    /// Sealed (shareable) pages, any refcount.
+    pub fn sealed_blocks(&self) -> usize {
+        self.sealed.iter().filter(|s| s.is_some()).count()
+    }
+
+    /// Pages an allocation could obtain right now: the free list, the
+    /// reclaimable prefix cache, and ungrown headroom under `max_blocks`.
+    /// Unbounded pools report a saturating "effectively infinite" count.
+    pub fn free_blocks(&self) -> usize {
+        let headroom = if self.max_blocks == 0 {
+            usize::MAX / 4
+        } else {
+            self.max_blocks.saturating_sub(self.blocks.len())
+        };
+        self.free.len() + self.cached_free + headroom
+    }
+
+    /// Current refcount of `b`.
+    pub fn refcount(&self, b: usize) -> u32 {
+        self.refcount[b]
+    }
+
+    /// Whether `b` is sealed (immutable/shareable).
+    pub fn is_sealed(&self, b: usize) -> bool {
+        self.sealed[b].is_some()
+    }
+
+    /// K row of (`b`, layer `li`, slot) — one `d_model`-wide slice.
+    pub fn k_row(&self, b: usize, li: usize, slot: usize) -> &[f32] {
+        let off = (li * self.block_tokens + slot) * self.d_model;
+        &self.blocks[b].k[off..off + self.d_model]
+    }
+
+    /// V row of (`b`, layer `li`, slot).
+    pub fn v_row(&self, b: usize, li: usize, slot: usize) -> &[f32] {
+        let off = (li * self.block_tokens + slot) * self.d_model;
+        &self.blocks[b].v[off..off + self.d_model]
+    }
+
+    fn k_row_mut(&mut self, b: usize, li: usize, slot: usize) -> &mut [f32] {
+        let off = (li * self.block_tokens + slot) * self.d_model;
+        &mut self.blocks[b].k[off..off + self.d_model]
+    }
+
+    fn v_row_mut(&mut self, b: usize, li: usize, slot: usize) -> &mut [f32] {
+        let off = (li * self.block_tokens + slot) * self.d_model;
+        &mut self.blocks[b].v[off..off + self.d_model]
+    }
+
+    /// Hand out one page with refcount 1. Order: free list, then grow
+    /// (under the cap, or unconditionally when `force` — the overcommit
+    /// valve that keeps an already-running session live), then reclaim
+    /// from the prefix cache.
+    pub fn alloc(&mut self, force: bool) -> Result<usize, PoolExhausted> {
+        if let Some(b) = self.free.pop() {
+            debug_assert_eq!(self.refcount[b], 0);
+            debug_assert!(self.sealed[b].is_none());
+            self.refcount[b] = 1;
+            return Ok(b);
+        }
+        if self.max_blocks == 0 || self.blocks.len() < self.max_blocks || force {
+            let n = self.n_layers * self.block_tokens * self.d_model;
+            self.blocks.push(Block { k: vec![0.0; n], v: vec![0.0; n] });
+            self.refcount.push(1);
+            self.sealed.push(None);
+            self.stamp.push(0);
+            return Ok(self.blocks.len() - 1);
+        }
+        if let Some(b) = self.reclaim_one() {
+            self.refcount[b] = 1;
+            return Ok(b);
+        }
+        Err(PoolExhausted { needed_blocks: 1, free_blocks: 0 })
+    }
+
+    /// Pop the oldest still-valid prefix-cache entry, unseal it, and
+    /// return it for reuse. Stale entries (stamp mismatch, re-attached,
+    /// already recycled) are discarded.
+    fn reclaim_one(&mut self) -> Option<usize> {
+        while let Some((b, s)) = self.evictable.pop_front() {
+            if self.stamp[b] != s || self.refcount[b] != 0 || self.sealed[b].is_none() {
+                continue;
+            }
+            self.unseal(b);
+            self.stamp[b] += 1;
+            self.cached_free -= 1;
+            return Some(b);
+        }
+        None
+    }
+
+    /// Drop one reference. At zero, sealed pages move to the prefix
+    /// cache (still attachable); unsealed pages go straight to the free
+    /// list.
+    pub fn unref(&mut self, b: usize) {
+        debug_assert!(self.refcount[b] > 0, "unref of free block {b}");
+        self.refcount[b] -= 1;
+        if self.refcount[b] == 0 {
+            if self.sealed[b].is_some() {
+                self.cached_free += 1;
+                self.evictable.push_back((b, self.stamp[b]));
+            } else {
+                self.stamp[b] += 1;
+                self.free.push(b);
+            }
+        }
+    }
+
+    /// Add a reference to a sealed block found via [`Self::lookup`]
+    /// (prefix attach). Revives prefix-cache entries.
+    pub fn bump(&mut self, b: usize) {
+        if self.refcount[b] == 0 {
+            debug_assert!(self.sealed[b].is_some(), "bump of unsealed free block {b}");
+            self.cached_free -= 1;
+        }
+        self.refcount[b] += 1;
+    }
+
+    /// Seal `b` as holding `chunk` at chain position (`hash`, `parent`).
+    /// Idempotent; first sealer of a hash wins the index slot.
+    pub fn seal(&mut self, b: usize, hash: u64, parent: Option<usize>, chunk: &[u8]) {
+        debug_assert_eq!(chunk.len(), self.block_tokens, "seal of a partial block");
+        if self.sealed[b].is_some() {
+            return;
+        }
+        self.sealed[b] = Some(SealMeta { hash, parent, tokens: chunk.to_vec() });
+        self.index.entry(hash).or_insert(b);
+    }
+
+    /// Remove `b`'s seal (making it writable again) and drop its index
+    /// entry if it owns one.
+    pub fn unseal(&mut self, b: usize) {
+        if let Some(meta) = self.sealed[b].take() {
+            if self.index.get(&meta.hash) == Some(&b) {
+                self.index.remove(&meta.hash);
+            }
+        }
+    }
+
+    /// Find the sealed block holding exactly `chunk` at chain position
+    /// (`hash`, `parent`). Token-exact + parent-exact verification makes
+    /// a match imply full-prefix equality, so the page contents are valid
+    /// for the caller's sequence by model determinism.
+    pub fn lookup(&self, hash: u64, parent: Option<usize>, chunk: &[u8]) -> Option<usize> {
+        let b = *self.index.get(&hash)?;
+        match &self.sealed[b] {
+            Some(m) if m.hash == hash && m.parent == parent && m.tokens == chunk => Some(b),
+            _ => None,
+        }
+    }
+
+    /// Copy the first `slots` rows of every layer (K and V) from block
+    /// `src` into block `dst` — the copy-on-write fork.
+    fn copy_slots(&mut self, src: usize, dst: usize, slots: usize) {
+        if slots == 0 || src == dst {
+            return;
+        }
+        let (bt, dm, layers) = (self.block_tokens, self.d_model, self.n_layers);
+        let (s, d) = if src < dst {
+            let (a, b) = self.blocks.split_at_mut(dst);
+            (&a[src], &mut b[0])
+        } else {
+            let (a, b) = self.blocks.split_at_mut(src);
+            (&b[0], &mut a[dst])
+        };
+        for li in 0..layers {
+            let at = li * bt * dm;
+            let n = slots * dm;
+            d.k[at..at + n].copy_from_slice(&s.k[at..at + n]);
+            d.v[at..at + n].copy_from_slice(&s.v[at..at + n]);
+        }
+    }
+
+    /// Pool-level invariant check (tests): refcounts, free list, and
+    /// prefix cache partition the page set consistently.
+    pub fn check_invariants(&self) {
+        assert_eq!(self.refcount.len(), self.blocks.len());
+        assert_eq!(self.sealed.len(), self.blocks.len());
+        let free_set: std::collections::HashSet<usize> = self.free.iter().copied().collect();
+        assert_eq!(free_set.len(), self.free.len(), "free list has duplicates");
+        for &b in &self.free {
+            assert_eq!(self.refcount[b], 0, "free block {b} has refs");
+            assert!(self.sealed[b].is_none(), "free block {b} is sealed");
+        }
+        let cached = self
+            .refcount
+            .iter()
+            .zip(&self.sealed)
+            .filter(|(&rc, s)| rc == 0 && s.is_some())
+            .count();
+        assert_eq!(cached, self.cached_free, "cached_free count drifted");
+        for (&h, &b) in &self.index {
+            let m = self.sealed[b].as_ref().expect("index points at unsealed block");
+            assert_eq!(m.hash, h, "index hash mismatch");
+        }
+        if self.max_blocks > 0 {
+            // overcommit may have grown past the cap; accounting still
+            // has to cover every page
+            assert_eq!(
+                self.in_use_blocks() + self.free.len() + self.cached_free,
+                self.blocks.len()
+            );
+        }
+    }
+}
+
+/// A session's view of the pool: logical token positions mapped onto a
+/// block table. The cache mirrors the contiguous [`super::KvCache`]
+/// protocol — `append_layer` per layer, then `advance` — plus the paged
+/// extras: `attach_prefix`/`seal_prefix` for sharing, `prepare_append`
+/// for fallible page allocation, `truncate` that returns whole pages.
+pub struct PagedKvCache {
+    pool: Rc<RefCell<BlockPool>>,
+    table: Vec<usize>,
+    len: usize,
+    /// Positions `0..materialized` are held by attached shared pages;
+    /// `append_layer` skips writing them (storage-only sharing).
+    materialized: usize,
+    /// When set, allocation failures grow the pool past its cap instead
+    /// of erroring — the scheduler's last-resort liveness valve.
+    overcommit: bool,
+}
+
+impl PagedKvCache {
+    pub fn new(pool: Rc<RefCell<BlockPool>>) -> Self {
+        PagedKvCache { pool, table: Vec::new(), len: 0, materialized: 0, overcommit: false }
+    }
+
+    /// Resident token positions.
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// Shared handle to the backing pool (attention reads borrow it).
+    pub fn pool(&self) -> &Rc<RefCell<BlockPool>> {
+        &self.pool
+    }
+
+    /// The block table: `table()[pos / block_tokens]` holds position `pos`.
+    pub fn table(&self) -> &[usize] {
+        &self.table
+    }
+
+    /// Watermark below which rows live in attached shared pages.
+    pub fn materialized(&self) -> usize {
+        self.materialized
+    }
+
+    pub fn n_layers(&self) -> usize {
+        self.pool.borrow().n_layers
+    }
+
+    pub fn d_model(&self) -> usize {
+        self.pool.borrow().d_model
+    }
+
+    pub fn block_tokens(&self) -> usize {
+        self.pool.borrow().block_tokens
+    }
+
+    /// Enable/disable the past-cap allocation valve.
+    pub fn set_overcommit(&mut self, on: bool) {
+        self.overcommit = on;
+    }
+
+    /// Attach as many sealed full-block prefixes of `tokens` as the pool
+    /// already holds (first extend only; no-op on a non-empty cache).
+    /// Returns the number of positions attached. Attached rows are
+    /// refcounted, never rewritten, and skipped by `append_layer`.
+    pub fn attach_prefix(&mut self, tokens: &[u8]) -> usize {
+        if self.len != 0 || !self.table.is_empty() {
+            return 0;
+        }
+        let mut pool = self.pool.borrow_mut();
+        let bt = pool.block_tokens;
+        let mut parent_hash = ROOT_HASH;
+        let mut parent_block: Option<usize> = None;
+        let mut matched = 0usize;
+        for chunk in tokens.chunks_exact(bt) {
+            let h = chain_hash(parent_hash, chunk);
+            match pool.lookup(h, parent_block, chunk) {
+                Some(b) => {
+                    pool.bump(b);
+                    self.table.push(b);
+                    parent_hash = h;
+                    parent_block = Some(b);
+                    matched += bt;
+                }
+                None => break,
+            }
+        }
+        self.materialized = matched;
+        matched
+    }
+
+    /// Seal every full block covered by `tokens` (and resident rows) so
+    /// later sessions with the same prefix can attach it. Idempotent.
+    pub fn seal_prefix(&mut self, tokens: &[u8]) {
+        let mut pool = self.pool.borrow_mut();
+        let bt = pool.block_tokens;
+        let full = (tokens.len().min(self.len)) / bt;
+        let mut parent_hash = ROOT_HASH;
+        let mut parent_block: Option<usize> = None;
+        for (i, chunk) in tokens.chunks_exact(bt).take(full).enumerate() {
+            let h = chain_hash(parent_hash, chunk);
+            let b = self.table[i];
+            pool.seal(b, h, parent_block, chunk);
+            parent_hash = h;
+            parent_block = Some(b);
+        }
+    }
+
+    /// Make the table cover `len + t_new` positions, forking a shared or
+    /// sealed final page copy-on-write if the first write lands mid-page.
+    /// Atomic: on failure nothing is allocated or changed, so the caller
+    /// can retry after the scheduler frees pages.
+    pub fn prepare_append(&mut self, t_new: usize) -> Result<(), PoolExhausted> {
+        if t_new == 0 {
+            return Ok(());
+        }
+        let mut pool = self.pool.borrow_mut();
+        let bt = pool.block_tokens;
+        let write_from = self.len.max(self.materialized);
+        let target_blocks = (self.len + t_new).div_ceil(bt);
+        let fresh_needed = target_blocks.saturating_sub(self.table.len());
+
+        // Copy-on-write: only the page containing the first written row
+        // can be shared (every later written page is freshly allocated
+        // below), and only a mid-page write can land in it.
+        let mut fork_at: Option<usize> = None;
+        if write_from % bt != 0 && write_from < self.len + t_new {
+            let bi = write_from / bt;
+            let b = self.table[bi];
+            if pool.refcount(b) > 1 {
+                fork_at = Some(bi);
+            } else if pool.is_sealed(b) {
+                // private but sealed (e.g. rollback into a sealed page):
+                // reclaim it for writing in place
+                pool.unseal(b);
+            }
+        }
+
+        let total_needed = fresh_needed + usize::from(fork_at.is_some());
+        let mut got: Vec<usize> = Vec::with_capacity(total_needed);
+        for _ in 0..total_needed {
+            match pool.alloc(self.overcommit) {
+                Ok(b) => got.push(b),
+                Err(_) => {
+                    let free_now = pool.free.len() + pool.cached_free;
+                    for b in got {
+                        pool.unref(b);
+                    }
+                    return Err(PoolExhausted {
+                        needed_blocks: total_needed,
+                        free_blocks: free_now,
+                    });
+                }
+            }
+        }
+
+        if let Some(bi) = fork_at {
+            let dst = got.pop().expect("fork block was allocated");
+            let src = self.table[bi];
+            pool.copy_slots(src, dst, write_from % bt);
+            pool.unref(src);
+            self.table[bi] = dst;
+        }
+        self.table.extend(got);
+        Ok(())
+    }
+
+    /// Write the new K/V rows of layer `li` at positions `len..len +
+    /// rows` into their pages, skipping rows the attached prefix already
+    /// materializes. Requires a successful [`Self::prepare_append`].
+    pub fn append_layer(&mut self, li: usize, k_rows: &[f32], v_rows: &[f32]) {
+        let mut pool = self.pool.borrow_mut();
+        let d = pool.d_model;
+        let bt = pool.block_tokens;
+        debug_assert_eq!(k_rows.len(), v_rows.len());
+        debug_assert_eq!(k_rows.len() % d, 0);
+        for (i, (krow, vrow)) in
+            k_rows.chunks_exact(d).zip(v_rows.chunks_exact(d)).enumerate()
+        {
+            let pos = self.len + i;
+            if pos < self.materialized {
+                continue;
+            }
+            let b = self.table[pos / bt];
+            pool.k_row_mut(b, li, pos % bt).copy_from_slice(krow);
+            pool.v_row_mut(b, li, pos % bt).copy_from_slice(vrow);
+        }
+    }
+
+    /// Commit `t_new` appended positions (mirrors `KvCache::advance`).
+    pub fn advance(&mut self, t_new: usize) {
+        self.len += t_new;
+        debug_assert!(self.table.len() * self.pool.borrow().block_tokens >= self.len);
+    }
+
+    /// Keep the first `keep` positions, releasing every no-longer-needed
+    /// page back to the pool immediately (spec-decode rollback is the
+    /// hot caller). Shared pages just drop a reference.
+    pub fn truncate(&mut self, keep: usize) {
+        if keep >= self.len {
+            return;
+        }
+        let mut pool = self.pool.borrow_mut();
+        let keep_blocks = keep.div_ceil(pool.block_tokens);
+        while self.table.len() > keep_blocks {
+            let b = self.table.pop().expect("table len checked");
+            pool.unref(b);
+        }
+        self.len = keep;
+        // rows past `keep` will be rewritten for the *new* sequence, so
+        // the shared-prefix watermark must not cover them anymore
+        self.materialized = self.materialized.min(keep);
+    }
+
+    /// Release everything.
+    pub fn clear(&mut self) {
+        let mut pool = self.pool.borrow_mut();
+        for b in self.table.drain(..) {
+            pool.unref(b);
+        }
+        self.len = 0;
+        self.materialized = 0;
+    }
+
+    /// Logical resident bytes of this session (same formula as the
+    /// contiguous cache); the pool's `allocated_bytes` is the honest
+    /// page-granular footprint.
+    pub fn bytes(&self) -> usize {
+        let p = self.pool.borrow();
+        self.len * p.n_layers * 2 * p.d_model * std::mem::size_of::<f32>()
+    }
+}
+
+impl Drop for PagedKvCache {
+    fn drop(&mut self) {
+        // try_borrow_mut: a panic mid-borrow must not double-panic here
+        if let Ok(mut pool) = self.pool.try_borrow_mut() {
+            for b in self.table.drain(..) {
+                pool.unref(b);
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn pool(max_blocks: usize) -> Rc<RefCell<BlockPool>> {
+        let mut p = BlockPool::new(2, 4, 4);
+        p.max_blocks = max_blocks;
+        Rc::new(RefCell::new(p))
+    }
+
+    /// Fill positions `from..to` of every layer with rows of `base + pos`.
+    fn append_rows(c: &mut PagedKvCache, from: usize, to: usize, base: f32) {
+        let d = c.d_model();
+        let t = to - from;
+        c.prepare_append(t).expect("prepare");
+        for li in 0..c.n_layers() {
+            let mut k = Vec::with_capacity(t * d);
+            let mut v = Vec::with_capacity(t * d);
+            for pos in from..to {
+                k.extend(vec![base + pos as f32; d]);
+                v.extend(vec![-(base + pos as f32); d]);
+            }
+            c.append_layer(li, &k, &v);
+        }
+        c.advance(t);
+    }
+
+    #[test]
+    fn alloc_free_roundtrip_reuses_pages() {
+        let p = pool(0);
+        let (a, b) = {
+            let mut p = p.borrow_mut();
+            (p.alloc(false).unwrap(), p.alloc(false).unwrap())
+        };
+        assert_ne!(a, b);
+        let mut pm = p.borrow_mut();
+        pm.unref(b);
+        pm.unref(a);
+        assert_eq!(pm.in_use_blocks(), 0);
+        // LIFO free list: last freed is first reused, no new growth
+        assert_eq!(pm.alloc(false).unwrap(), a);
+        assert_eq!(pm.alloc(false).unwrap(), b);
+        assert_eq!(pm.total_blocks(), 2);
+        pm.check_invariants();
+    }
+
+    #[test]
+    fn bounded_pool_exhausts_then_force_grows() {
+        let p = pool(2);
+        let mut pm = p.borrow_mut();
+        let _a = pm.alloc(false).unwrap();
+        let _b = pm.alloc(false).unwrap();
+        let err = pm.alloc(false).unwrap_err();
+        assert_eq!(err.free_blocks, 0);
+        assert!(err.to_string().starts_with(POOL_EXHAUSTED_PREFIX));
+        // overcommit valve grows past the cap and accounting follows
+        let c = pm.alloc(true).unwrap();
+        assert_eq!(pm.total_blocks(), 3);
+        assert_eq!(pm.allocated_bytes(), 3 * pm.block_bytes());
+        pm.unref(c);
+        pm.check_invariants();
+    }
+
+    #[test]
+    fn seal_attach_shares_pages_and_refcounts() {
+        let p = pool(0);
+        let toks: Vec<u8> = (0..8).collect();
+        let mut a = PagedKvCache::new(Rc::clone(&p));
+        assert_eq!(a.attach_prefix(&toks), 0);
+        append_rows(&mut a, 0, 8, 100.0);
+        a.seal_prefix(&toks);
+        assert_eq!(p.borrow().sealed_blocks(), 2);
+
+        let mut b = PagedKvCache::new(Rc::clone(&p));
+        assert_eq!(b.attach_prefix(&toks), 8);
+        assert_eq!(b.table(), a.table());
+        {
+            let pm = p.borrow();
+            assert_eq!(pm.refcount(a.table()[0]), 2);
+            assert_eq!(pm.total_blocks(), 2, "no new pages for the shared prefix");
+        }
+        // b's shared rows read back a's bytes
+        assert_eq!(p.borrow().k_row(b.table()[1], 0, 3)[0], 107.0);
+
+        // divergent prefix attaches only the common chunk
+        let mut other = toks.clone();
+        other[6] = 99;
+        let mut c = PagedKvCache::new(Rc::clone(&p));
+        assert_eq!(c.attach_prefix(&other), 4);
+        drop(c);
+        drop(b);
+        drop(a);
+        let pm = p.borrow();
+        assert_eq!(pm.in_use_blocks(), 0);
+        assert_eq!(pm.cached_blocks(), 2, "sealed pages stay cached after release");
+        pm.check_invariants();
+    }
+
+    #[test]
+    fn cow_fork_preserves_shared_bytes() {
+        let p = pool(0);
+        let toks: Vec<u8> = (0..8).collect();
+        let mut a = PagedKvCache::new(Rc::clone(&p));
+        append_rows(&mut a, 0, 8, 100.0);
+        a.seal_prefix(&toks);
+
+        let mut b = PagedKvCache::new(Rc::clone(&p));
+        b.attach_prefix(&toks);
+        // roll b back mid-page and append divergent rows: the sealed,
+        // shared page must fork, leaving a's copy untouched
+        b.truncate(6);
+        assert_eq!(b.len(), 6);
+        let shared = b.table()[1];
+        append_rows(&mut b, 6, 8, 500.0);
+        assert_ne!(b.table()[1], shared, "write into a shared page must fork");
+        let pm = p.borrow();
+        // a's original page: untouched
+        assert_eq!(pm.k_row(shared, 0, 2)[0], 106.0);
+        assert_eq!(pm.k_row(shared, 1, 3)[0], 107.0);
+        // b's fork: copied prefix rows + new divergent rows
+        assert_eq!(pm.k_row(b.table()[1], 0, 0)[0], 104.0);
+        assert_eq!(pm.k_row(b.table()[1], 0, 1)[0], 105.0);
+        assert_eq!(pm.k_row(b.table()[1], 0, 2)[0], 506.0);
+        assert_eq!(pm.refcount(shared), 1);
+        pm.check_invariants();
+    }
+
+    #[test]
+    fn private_sealed_page_unseals_in_place_on_rollback_write() {
+        let p = pool(0);
+        let toks: Vec<u8> = (0..8).collect();
+        let mut a = PagedKvCache::new(Rc::clone(&p));
+        append_rows(&mut a, 0, 8, 100.0);
+        a.seal_prefix(&toks);
+        assert_eq!(p.borrow().sealed_blocks(), 2);
+        // nobody shares the page, so rollback + rewrite reuses it
+        a.truncate(6);
+        let page = a.table()[1];
+        append_rows(&mut a, 6, 8, 500.0);
+        assert_eq!(a.table()[1], page, "rc==1 sealed page is unsealed in place");
+        let pm = p.borrow();
+        assert!(!pm.is_sealed(page));
+        assert_eq!(pm.sealed_blocks(), 1);
+        assert_eq!(pm.k_row(page, 0, 2)[0], 506.0);
+        pm.check_invariants();
+    }
+
+    #[test]
+    fn truncate_returns_whole_pages_immediately() {
+        let p = pool(4);
+        let mut a = PagedKvCache::new(Rc::clone(&p));
+        append_rows(&mut a, 0, 16, 0.0);
+        assert_eq!(p.borrow().in_use_blocks(), 4);
+        assert_eq!(p.borrow().free_blocks(), 0);
+        a.truncate(5);
+        {
+            let pm = p.borrow();
+            assert_eq!(pm.in_use_blocks(), 2);
+            assert_eq!(pm.free_blocks(), 2, "released pages are reusable at once");
+        }
+        // rollback to a page boundary keeps exactly ceil(keep/bt) pages
+        a.truncate(4);
+        assert_eq!(p.borrow().in_use_blocks(), 1);
+        append_rows(&mut a, 4, 12, 9.0);
+        assert_eq!(p.borrow().in_use_blocks(), 3);
+        p.borrow().check_invariants();
+    }
+
+    #[test]
+    fn prepare_append_failure_is_atomic() {
+        let p = pool(2);
+        let mut a = PagedKvCache::new(Rc::clone(&p));
+        append_rows(&mut a, 0, 8, 0.0); // both pages in use
+        let mut b = PagedKvCache::new(Rc::clone(&p));
+        let err = b.prepare_append(5).unwrap_err();
+        assert_eq!(err.needed_blocks, 2);
+        assert_eq!(err.free_blocks, 0);
+        assert_eq!(b.table().len(), 0, "failed prepare must not leak pages");
+        assert_eq!(p.borrow().in_use_blocks(), 2);
+        // freeing the victim makes the same prepare succeed
+        a.clear();
+        b.prepare_append(5).unwrap();
+        assert_eq!(b.table().len(), 2);
+        p.borrow().check_invariants();
+    }
+
+    #[test]
+    fn pressure_reclaims_cached_prefix_pages() {
+        let p = pool(2);
+        let toks: Vec<u8> = (0..8).collect();
+        let mut a = PagedKvCache::new(Rc::clone(&p));
+        append_rows(&mut a, 0, 8, 1.0);
+        a.seal_prefix(&toks);
+        drop(a); // both pages now cached (sealed, rc 0)
+        assert_eq!(p.borrow().cached_blocks(), 2);
+        assert_eq!(p.borrow().free_blocks(), 2);
+        // a new unrelated session must be able to take those pages
+        let mut b = PagedKvCache::new(Rc::clone(&p));
+        append_rows(&mut b, 0, 8, 7.0);
+        let pm = p.borrow();
+        assert_eq!(pm.total_blocks(), 2, "reclaimed, not grown");
+        assert_eq!(pm.cached_blocks(), 0);
+        assert_eq!(pm.sealed_blocks(), 0, "reclaimed pages lost their seal");
+        pm.check_invariants();
+    }
+
+    #[test]
+    fn attach_revives_cached_pages_before_reclaim() {
+        let p = pool(2);
+        let toks: Vec<u8> = (0..8).collect();
+        let mut a = PagedKvCache::new(Rc::clone(&p));
+        append_rows(&mut a, 0, 8, 1.0);
+        a.seal_prefix(&toks);
+        drop(a);
+        let mut b = PagedKvCache::new(Rc::clone(&p));
+        assert_eq!(b.attach_prefix(&toks), 8, "cached pages still attachable");
+        assert_eq!(p.borrow().cached_blocks(), 0);
+        assert_eq!(p.borrow().in_use_blocks(), 2);
+        b.clear();
+        p.borrow().check_invariants();
+    }
+
+    #[test]
+    fn is_pool_exhausted_matches_through_context_chain() {
+        fn inner() -> anyhow::Result<()> {
+            Err(PoolExhausted { needed_blocks: 3, free_blocks: 1 })?;
+            Ok(())
+        }
+        use anyhow::Context as _;
+        let err = inner().context("request 7: decode step failed").unwrap_err();
+        assert!(is_pool_exhausted(&err));
+        assert!(!is_pool_exhausted(&anyhow::anyhow!("some other failure")));
+    }
+
+    #[test]
+    fn randomized_alloc_free_refcount_balance() {
+        // deterministic LCG driving a mixed alloc/attach/truncate load
+        let mut state = 0x1234_5678_9abc_def0u64;
+        let mut rnd = move |m: usize| {
+            state = state.wrapping_mul(6364136223846793005).wrapping_add(1442695040888963407);
+            ((state >> 33) as usize) % m
+        };
+        let p = pool(6);
+        let prompts: Vec<Vec<u8>> =
+            (0..4).map(|s| (0..12).map(|i| (s * 40 + i) as u8).collect()).collect();
+        let mut live: Vec<(PagedKvCache, Vec<u8>)> = Vec::new();
+        for step in 0..400 {
+            match rnd(4) {
+                0 => {
+                    let toks = prompts[rnd(prompts.len())].clone();
+                    let mut c = PagedKvCache::new(Rc::clone(&p));
+                    let got = c.attach_prefix(&toks);
+                    let need = toks.len() - got;
+                    if c.prepare_append(need).is_ok() {
+                        for li in 0..c.n_layers() {
+                            let rows = vec![step as f32; need * c.d_model()];
+                            c.append_layer(li, &rows, &rows);
+                        }
+                        c.advance(need);
+                        c.seal_prefix(&toks);
+                        live.push((c, toks));
+                    }
+                }
+                1 if !live.is_empty() => {
+                    let i = rnd(live.len());
+                    live.swap_remove(i);
+                }
+                2 if !live.is_empty() => {
+                    let i = rnd(live.len());
+                    let keep = rnd(live[i].0.len() + 1);
+                    live[i].0.truncate(keep);
+                }
+                _ if !live.is_empty() => {
+                    let i = rnd(live.len());
+                    let t = 1 + rnd(3);
+                    let c = &mut live[i].0;
+                    if c.prepare_append(t).is_ok() {
+                        for li in 0..c.n_layers() {
+                            let rows = vec![-(step as f32); t * c.d_model()];
+                            c.append_layer(li, &rows, &rows);
+                        }
+                        c.advance(t);
+                    }
+                }
+                _ => {}
+            }
+            p.borrow().check_invariants();
+        }
+        live.clear();
+        let pm = p.borrow();
+        assert_eq!(pm.in_use_blocks(), 0, "all refs returned");
+        pm.check_invariants();
+    }
+}

@@ -5,6 +5,7 @@
 //! hot path.
 
 pub mod kv_cache;
+pub mod kv_paged;
 pub mod packed;
 pub mod packed_store;
 pub mod sampler;
@@ -12,6 +13,7 @@ pub mod transformer;
 pub mod weights;
 
 pub use kv_cache::{KvCache, LayerKv};
+pub use kv_paged::{is_pool_exhausted, BlockPool, PagedKvCache, PoolExhausted};
 pub use packed::PackedLinear;
 pub use sampler::Sampler;
 pub use transformer::{AttnOverride, Transformer, TransformerCfg};

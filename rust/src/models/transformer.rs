@@ -23,7 +23,11 @@ use crate::tensor::Tensor;
 use crate::util::Selector;
 use anyhow::{bail, Context, Result};
 
+use std::cell::RefCell;
+use std::rc::Rc;
+
 use super::kv_cache::KvCache;
+use super::kv_paged::{BlockPool, PagedKvCache};
 use super::packed::PackedLinear;
 use super::weights::WeightStore;
 
@@ -491,6 +495,202 @@ impl Transformer {
         self.head.matvec(&xf, &mut scratch)
     }
 
+    // ------------------------------------------------------------------
+    // paged decoding (block-table KV sessions)
+    // ------------------------------------------------------------------
+
+    /// Fresh unbounded [`BlockPool`] shaped for this model.
+    pub fn new_block_pool(&self, block_tokens: usize) -> Rc<RefCell<BlockPool>> {
+        Rc::new(RefCell::new(BlockPool::new(
+            self.cfg.n_layers,
+            self.cfg.d_model,
+            block_tokens,
+        )))
+    }
+
+    /// Fresh [`BlockPool`] capped at `budget_bytes` of pages.
+    pub fn new_block_pool_bounded(
+        &self,
+        block_tokens: usize,
+        budget_bytes: usize,
+    ) -> Rc<RefCell<BlockPool>> {
+        Rc::new(RefCell::new(BlockPool::new_bounded(
+            self.cfg.n_layers,
+            self.cfg.d_model,
+            block_tokens,
+            budget_bytes,
+        )))
+    }
+
+    /// Fresh empty paged session drawing pages from `pool` (which must
+    /// match this model's shape).
+    pub fn new_paged_cache(&self, pool: &Rc<RefCell<BlockPool>>) -> PagedKvCache {
+        {
+            let p = pool.borrow();
+            assert_eq!(p.n_layers(), self.cfg.n_layers, "pool/model layer mismatch");
+            assert_eq!(p.d_model(), self.cfg.d_model, "pool/model width mismatch");
+        }
+        PagedKvCache::new(Rc::clone(pool))
+    }
+
+    /// Causal attention over a paged cache's block table — the same
+    /// score/softmax/accumulate order as [`Self::attn_mix`], reading each
+    /// K/V row through the table instead of a flat buffer, so outputs are
+    /// bit-identical to the contiguous path.
+    fn attn_mix_paged(
+        &self,
+        layer: &Layer,
+        q: &Tensor,
+        cache: &PagedKvCache,
+        li: usize,
+        start: usize,
+    ) -> Tensor {
+        let t_new = q.rows();
+        let d = self.cfg.d_model;
+        let h = self.cfg.n_heads;
+        let dh = d / h;
+        let scale = 1.0 / (dh as f32).sqrt();
+        let pool = cache.pool().borrow();
+        let bt = pool.block_tokens();
+        let table = cache.table();
+        let mut ctx = Tensor::zeros(&[t_new, d]);
+        let mut scores = vec![0.0f32; start + t_new];
+        for head in 0..h {
+            let off = head * dh;
+            for qi in 0..t_new {
+                let qrow = &q.row(qi)[off..off + dh];
+                let limit = start + qi + 1;
+                for ki in 0..limit {
+                    let krow = pool.k_row(table[ki / bt], li, ki % bt);
+                    scores[ki] = dot(qrow, &krow[off..off + dh]) * scale;
+                }
+                softmax_inplace(&mut scores[..limit]);
+                let crow = ctx.row_mut(qi);
+                for ki in 0..limit {
+                    let p = scores[ki];
+                    if p == 0.0 {
+                        continue;
+                    }
+                    let vrow = &pool.v_row(table[ki / bt], li, ki % bt)[off..off + dh];
+                    for j in 0..dh {
+                        crow[off + j] += p * vrow[j];
+                    }
+                }
+            }
+        }
+        layer.wo.matmul(&ctx)
+    }
+
+    /// [`Self::prefill`] against a paged session: identical computation,
+    /// with page allocation as the only fallible step (`Err` carries
+    /// [`super::kv_paged::PoolExhausted`] and leaves the cache unchanged,
+    /// so the serving scheduler can preempt and retry). Rows already
+    /// materialized by an attached shared prefix are recomputed but not
+    /// rewritten.
+    pub fn prefill_paged(&self, cache: &mut PagedKvCache, tokens: &[u8]) -> Result<Tensor> {
+        let start = cache.len();
+        let t_new = tokens.len();
+        let d = self.cfg.d_model;
+        assert_eq!(cache.n_layers(), self.cfg.n_layers, "cache/model layer mismatch");
+        assert_eq!(cache.d_model(), d, "cache/model width mismatch");
+        assert!(
+            start + t_new <= self.cfg.max_t,
+            "session len {} > max_t {}",
+            start + t_new,
+            self.cfg.max_t
+        );
+        if t_new == 0 {
+            return Ok(Tensor::zeros(&[0, self.cfg.vocab]));
+        }
+        cache.prepare_append(t_new)?;
+        let mut x = Tensor::zeros(&[t_new, d]);
+        for (i, &tok) in tokens.iter().enumerate() {
+            let e = self.embed.row(tok as usize);
+            let p = self.pos.row(start + i);
+            let row = x.row_mut(i);
+            for j in 0..d {
+                row[j] = e[j] + p[j];
+            }
+        }
+        for (li, layer) in self.layers.iter().enumerate() {
+            let xn = self.norm(&x, &layer.ln1);
+            let (q, k, v) = self.qkv_proj(layer, &xn);
+            cache.append_layer(li, &k.data, &v.data);
+            let a = self.attn_mix_paged(layer, &q, cache, li, start);
+            add_inplace(&mut x.data, &a.data);
+            let xn = self.norm(&x, &layer.ln2);
+            let (m, _) = self.mlp(layer, &xn);
+            add_inplace(&mut x.data, &m.data);
+        }
+        cache.advance(t_new);
+        let xf = self.norm(&x, &self.ln_f);
+        Ok(self.head.matmul(&xf))
+    }
+
+    /// [`Self::decode_step`] against a paged session — same scalar
+    /// matvec path, block-table reads, fallible only at page allocation.
+    pub fn decode_step_paged(&self, cache: &mut PagedKvCache, token: u8) -> Result<Vec<f32>> {
+        let pos = cache.len();
+        let d = self.cfg.d_model;
+        let h = self.cfg.n_heads;
+        let dh = d / h;
+        let scale = 1.0 / (dh as f32).sqrt();
+        assert_eq!(cache.n_layers(), self.cfg.n_layers, "cache/model layer mismatch");
+        assert!(pos < self.cfg.max_t, "session len {} > max_t {}", pos + 1, self.cfg.max_t);
+        cache.prepare_append(1)?;
+        let e = self.embed.row(token as usize);
+        let prow = self.pos.row(pos);
+        let mut x: Vec<f32> = (0..d).map(|j| e[j] + prow[j]).collect();
+        let mut xn = vec![0.0f32; d];
+        let mut scratch = Vec::new();
+        for (li, layer) in self.layers.iter().enumerate() {
+            rmsnorm(&x, &layer.ln1, &mut xn);
+            let q = layer.wq.matvec(&xn, &mut scratch);
+            let k = layer.wk.matvec(&xn, &mut scratch);
+            let v = layer.wv.matvec(&xn, &mut scratch);
+            cache.append_layer(li, &k, &v);
+            let limit = pos + 1;
+            let mut ctx = vec![0.0f32; d];
+            let mut scores = vec![0.0f32; limit];
+            {
+                let pool = cache.pool().borrow();
+                let bt = pool.block_tokens();
+                let table = cache.table();
+                for head in 0..h {
+                    let off = head * dh;
+                    let qrow = &q[off..off + dh];
+                    for ki in 0..limit {
+                        let krow = pool.k_row(table[ki / bt], li, ki % bt);
+                        scores[ki] = dot(qrow, &krow[off..off + dh]) * scale;
+                    }
+                    softmax_inplace(&mut scores);
+                    for ki in 0..limit {
+                        let p = scores[ki];
+                        if p == 0.0 {
+                            continue;
+                        }
+                        let vrow = &pool.v_row(table[ki / bt], li, ki % bt)[off..off + dh];
+                        for j in 0..dh {
+                            ctx[off + j] += p * vrow[j];
+                        }
+                    }
+                }
+            }
+            let a = layer.wo.matvec(&ctx, &mut scratch);
+            add_inplace(&mut x, &a);
+            rmsnorm(&x, &layer.ln2, &mut xn);
+            let gate = layer.w_gate.matvec(&xn, &mut scratch);
+            let up = layer.w_up.matvec(&xn, &mut scratch);
+            let mid: Vec<f32> = gate.iter().zip(&up).map(|(&g, &u)| silu(g) * u).collect();
+            let m = layer.w_down.matvec(&mid, &mut scratch);
+            add_inplace(&mut x, &m);
+        }
+        cache.advance(1);
+        let mut xf = vec![0.0f32; d];
+        rmsnorm(&x, &self.ln_f, &mut xf);
+        Ok(self.head.matvec(&xf, &mut scratch))
+    }
+
     /// Total linear-weight parameter count (size accounting).
     pub fn linear_params(&self) -> usize {
         let mut n = self.head.numel();
@@ -685,6 +885,98 @@ mod tests {
             assert_eq!(&step[..], full.row(i), "decode step at {i}");
         }
         assert_eq!(cache.len(), toks.len());
+    }
+
+    #[test]
+    fn paged_prefill_then_decode_matches_contiguous_bitwise() {
+        let m = model();
+        let toks = [1u8, 5, 9, 60, 2, 17, 33, 4, 250, 7];
+        // block size 3 forces rows to straddle page boundaries
+        let pool = m.new_block_pool(3);
+        let mut paged = m.new_paged_cache(&pool);
+        let mut flat = m.new_cache();
+        let pre_p = m.prefill_paged(&mut paged, &toks[..7]).unwrap();
+        let pre_f = m.prefill(&mut flat, &toks[..7]);
+        assert_eq!(pre_p.data, pre_f.data, "paged prefill drifted");
+        for &tok in &toks[7..] {
+            let a = m.decode_step_paged(&mut paged, tok).unwrap();
+            let b = m.decode_step(&mut flat, tok);
+            assert_eq!(a, b, "paged decode step drifted");
+        }
+        assert_eq!(paged.len(), toks.len());
+        assert_eq!(paged.table().len(), toks.len().div_ceil(3));
+    }
+
+    #[test]
+    fn paged_shared_prefix_is_bitwise_equal_and_saves_pages() {
+        let m = model();
+        let prompt = [9u8, 8, 7, 6, 5, 4, 3, 2];
+        let pool = m.new_block_pool(4);
+        // first session materializes the prompt and seals it
+        let mut a = m.new_paged_cache(&pool);
+        assert_eq!(a.attach_prefix(&prompt), 0);
+        let ra = m.prefill_paged(&mut a, &prompt).unwrap();
+        a.seal_prefix(&prompt);
+        let pages_after_one = pool.borrow().total_blocks();
+        // second session attaches the sealed pages instead of allocating
+        let mut b = m.new_paged_cache(&pool);
+        assert_eq!(b.attach_prefix(&prompt), prompt.len());
+        let rb = m.prefill_paged(&mut b, &prompt).unwrap();
+        assert_eq!(ra.data, rb.data, "shared-prefix prefill drifted");
+        assert_eq!(
+            pool.borrow().total_blocks(),
+            pages_after_one,
+            "second session must not materialize new prompt pages"
+        );
+        // divergent decode after the shared prompt stays bit-identical
+        let mut flat = m.new_cache();
+        m.prefill(&mut flat, &prompt);
+        let pa = m.decode_step_paged(&mut a, 11).unwrap();
+        let pb = m.decode_step_paged(&mut b, 77).unwrap();
+        assert_eq!(pa, m.decode_step(&mut flat, 11));
+        flat.truncate(prompt.len());
+        assert_eq!(pb, m.decode_step(&mut flat, 77));
+    }
+
+    #[test]
+    fn paged_rollback_then_redecode_matches_contiguous() {
+        // the spec-decode shape: prefill, speculate, roll back mid-page,
+        // decode a different token — pages must fork/unseal, not corrupt
+        let m = model();
+        let toks = [3u8, 1, 4, 1, 5, 9, 2, 6];
+        let pool = m.new_block_pool(4);
+        let mut paged = m.new_paged_cache(&pool);
+        m.prefill_paged(&mut paged, &toks).unwrap();
+        paged.seal_prefix(&toks);
+        paged.truncate(6);
+        let mut flat = m.new_cache();
+        m.prefill(&mut flat, &toks[..6]);
+        let a = m.decode_step_paged(&mut paged, 200).unwrap();
+        let b = m.decode_step(&mut flat, 200);
+        assert_eq!(a, b, "post-rollback paged decode drifted");
+    }
+
+    #[test]
+    fn paged_pool_exhaustion_fails_cleanly_and_recovers() {
+        let m = model();
+        let bt = 4;
+        let pool = m.new_block_pool_bounded(bt, {
+            // room for exactly two pages
+            let bb = m.cfg.n_layers * 2 * bt * m.cfg.d_model * 4;
+            2 * bb
+        });
+        let mut a = m.new_paged_cache(&pool);
+        m.prefill_paged(&mut a, &[1, 2, 3, 4, 5, 6, 7, 8]).unwrap();
+        let mut b = m.new_paged_cache(&pool);
+        let err = m.prefill_paged(&mut b, &[9, 9, 9]).unwrap_err();
+        assert!(crate::models::is_pool_exhausted(&err), "unexpected error: {err:#}");
+        assert!(b.is_empty(), "failed prefill must leave the session empty");
+        // freeing the hog lets the same prefill succeed, bit-identically
+        a.clear();
+        let rows = m.prefill_paged(&mut b, &[9, 9, 9]).unwrap();
+        let mut flat = m.new_cache();
+        let want = m.prefill(&mut flat, &[9, 9, 9]);
+        assert_eq!(rows.data, want.data);
     }
 
     #[test]

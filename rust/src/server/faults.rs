@@ -210,6 +210,14 @@ impl<E: StepExecutor> StepExecutor for FaultInjector<E> {
         self.inner.projected_bytes(req)
     }
 
+    fn admission_bytes(&self, req: &TokenRequest) -> usize {
+        self.inner.admission_bytes(req)
+    }
+
+    fn free_capacity_bytes(&self) -> Option<usize> {
+        self.inner.free_capacity_bytes()
+    }
+
     fn note_attempt(&mut self, id: u64, attempt: usize) {
         // keyed draws depend on the attempt number; the pool announces it
         // before every (re-)admission so a retry picked up by a *different*

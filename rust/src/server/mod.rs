@@ -15,12 +15,14 @@
 
 pub mod engine;
 pub mod faults;
+pub mod paged_exec;
 pub mod scheduler;
 
 pub use engine::{
     CompletedRequest, OutcomeCounts, RequestOutcome, ServeReport, ServingEngine,
 };
 pub use faults::{CrashPoint, FaultInjector, FaultPlan, WorkerCrash};
+pub use paged_exec::{PagedGreedyExecutor, PagedModel, PagedSession, PagedSpecExecutor};
 pub use scheduler::{
     AdmissionPolicy, GreedyExecutor, PjrtBatchExecutor, ReqState, Scheduler, ServeCfg,
     SpecExecutor, StepEvent, StepExecutor, StepFault, WorkerPool,

@@ -1,0 +1,799 @@
+//! Paged-KV step executors: block-granular serving over a shared
+//! [`BlockPool`] (vLLM-style PagedAttention, arxiv 2309.06180).
+//!
+//! Where [`GreedyExecutor`] / [`SpecExecutor`] back each request with a
+//! contiguous [`KvCache`] sized to its projected peak, the executors here
+//! draw fixed `block_tokens` pages from one per-worker pool on demand:
+//! admission needs only the *prompt's* pages (the scheduler reads
+//! [`StepExecutor::free_capacity_bytes`] instead of reserving projected
+//! peaks), decode grabs one page at a time, and identical prompt prefixes
+//! attach to the same sealed pages copy-on-write, so a shared system
+//! prompt is resident once per worker instead of once per request.
+//!
+//! Block exhaustion mid-round is handled inside `step_round`: the
+//! executor preempts the live request with the least progress (its pages
+//! free immediately, the scheduler requeues it through the retry FIFO on
+//! a [`StepFault::Preempted`] event) and retries the blocked slot; when
+//! no victim remains the slot finishes on the pool's overcommit valve
+//! rather than deadlocking. Outputs stay bit-identical to the contiguous
+//! executors for every worker count: preemption restarts a request from
+//! scratch exactly like the existing fault-retry path, and the paged
+//! attention kernels read the same rows in the same order.
+//!
+//! [`GreedyExecutor`]: super::scheduler::GreedyExecutor
+//! [`SpecExecutor`]: super::scheduler::SpecExecutor
+//! [`KvCache`]: crate::models::KvCache
+
+use crate::data::TokenRequest;
+use crate::models::{is_pool_exhausted, BlockPool, PagedKvCache, Sampler, Transformer};
+use crate::spec_decode::{spec_verify_step, DecodeSession, LogitsModel, SessionModel};
+use crate::util::Rng;
+use anyhow::Result;
+use std::cell::RefCell;
+use std::rc::Rc;
+
+use super::scheduler::{StepEvent, StepExecutor, StepFault};
+
+/// A transformer plus the block pool its paged sessions draw from —
+/// the [`SessionModel`] whose sessions are [`PagedSession`]s.
+pub struct PagedModel<'a> {
+    model: &'a Transformer,
+    pool: Rc<RefCell<BlockPool>>,
+}
+
+impl<'a> PagedModel<'a> {
+    /// Pair `model` with an unbounded pool (`budget_bytes` = 0) or one
+    /// capped at `budget_bytes` of pages.
+    pub fn new(model: &'a Transformer, block_tokens: usize, budget_bytes: usize) -> Self {
+        let pool = if budget_bytes == 0 {
+            model.new_block_pool(block_tokens)
+        } else {
+            model.new_block_pool_bounded(block_tokens, budget_bytes)
+        };
+        PagedModel { model, pool }
+    }
+
+    pub fn pool(&self) -> &Rc<RefCell<BlockPool>> {
+        &self.pool
+    }
+
+    pub fn transformer(&self) -> &'a Transformer {
+        self.model
+    }
+}
+
+impl LogitsModel for PagedModel<'_> {
+    fn seq_logits(&self, tokens: &[u8]) -> Result<Vec<Vec<f32>>> {
+        self.model.seq_logits(tokens)
+    }
+
+    fn max_t(&self) -> usize {
+        self.model.cfg.max_t
+    }
+
+    fn kv_bytes_per_token(&self) -> usize {
+        self.model.cfg.kv_bytes_per_token()
+    }
+}
+
+impl<'a> SessionModel for PagedModel<'a> {
+    type Session = PagedSession;
+
+    fn new_session(&self) -> PagedSession {
+        PagedSession { cache: self.model.new_paged_cache(&self.pool) }
+    }
+    // new_session_bounded: the default (ignore the hint) is right here —
+    // paged sessions hold exactly the pages they use, never a peak-sized
+    // reservation, so there is nothing to bound per session.
+}
+
+/// Block-table decode session: the paged twin of `KvSession`. The first
+/// multi-token extend attaches any sealed pages matching the prompt's
+/// prefix (copy-on-write sharing) and seals its own full pages for later
+/// arrivals; rollback returns whole pages to the pool immediately.
+pub struct PagedSession {
+    cache: PagedKvCache,
+}
+
+impl PagedSession {
+    /// Let appends grow the pool past its cap (the no-victim-left escape
+    /// hatch of the preemption policy).
+    pub fn set_overcommit(&mut self, on: bool) {
+        self.cache.set_overcommit(on);
+    }
+
+    pub fn cache(&self) -> &PagedKvCache {
+        &self.cache
+    }
+}
+
+impl<'a> DecodeSession<PagedModel<'a>> for PagedSession {
+    fn extend(&mut self, model: &PagedModel<'a>, tokens: &[u8]) -> Result<Vec<Vec<f32>>> {
+        match tokens.len() {
+            0 => Ok(Vec::new()),
+            1 => Ok(vec![model.model.decode_step_paged(&mut self.cache, tokens[0])?]),
+            _ => {
+                let first = self.cache.is_empty();
+                if first {
+                    self.cache.attach_prefix(tokens);
+                }
+                let rows = model.model.prefill_paged(&mut self.cache, tokens)?;
+                if first {
+                    self.cache.seal_prefix(tokens);
+                }
+                Ok((0..rows.rows()).map(|i| rows.row(i).to_vec()).collect())
+            }
+        }
+    }
+
+    fn len(&self) -> usize {
+        self.cache.len()
+    }
+
+    fn rollback(&mut self, keep: usize) {
+        self.cache.truncate(keep);
+    }
+    // kv_bytes stays 0: residency is page-granular and pool-owned, so the
+    // executors report it via `live_bytes` = pool.allocated_bytes()
+    // (shared pages counted once, not once per session).
+}
+
+// ─────────────────────────────────────────────────────────────────────
+// Victim selection, shared by both paged executors
+// ─────────────────────────────────────────────────────────────────────
+
+/// Index of the preemption victim among `(id, generated, preempted)`
+/// candidates: lowest progress first (least work lost), youngest (highest
+/// index) on ties — skipping the blocked slot itself, already-preempted
+/// slots, and any slot with a terminal (finished/faulted) event this
+/// round, whose retirement the scheduler has already been promised.
+fn pick_victim(
+    slots: &[(u64, usize, bool)],
+    self_id: u64,
+    events: &[StepEvent],
+) -> Option<usize> {
+    let mut best: Option<(usize, usize)> = None;
+    for (i, &(id, generated, preempted)) in slots.iter().enumerate() {
+        if id == self_id || preempted {
+            continue;
+        }
+        if events.iter().any(|e| e.id == id && (e.finished || e.fault.is_some())) {
+            continue;
+        }
+        let better = match best {
+            None => true,
+            Some((_, bg)) => generated <= bg,
+        };
+        if better {
+            best = Some((i, generated));
+        }
+    }
+    best.map(|(i, _)| i)
+}
+
+// ─────────────────────────────────────────────────────────────────────
+// PagedGreedyExecutor
+// ─────────────────────────────────────────────────────────────────────
+
+struct PagedGreedySlot {
+    id: u64,
+    prompt: Vec<u8>,
+    sess: PagedSession,
+    /// tokens still to generate; 0 at admission finishes empty
+    remaining: usize,
+    /// tokens committed so far — the preemption progress metric
+    generated: usize,
+    last: Option<Vec<f32>>,
+    /// a Preempted event for this slot is already in flight; it takes no
+    /// further rounds and its retirement is imminent
+    preempted: bool,
+}
+
+/// Greedy decoding over paged sessions — output bit-identical to
+/// [`GreedyExecutor`](super::scheduler::GreedyExecutor) per request, with
+/// page-granular admission and exhaustion-driven preemption.
+pub struct PagedGreedyExecutor<'a> {
+    model: PagedModel<'a>,
+    sampler: Sampler,
+    slots: Vec<PagedGreedySlot>,
+}
+
+impl<'a> PagedGreedyExecutor<'a> {
+    pub fn new(model: &'a Transformer, block_tokens: usize, budget_bytes: usize) -> Self {
+        PagedGreedyExecutor {
+            model: PagedModel::new(model, block_tokens, budget_bytes),
+            sampler: Sampler::Greedy,
+            slots: Vec::new(),
+        }
+    }
+
+    pub fn pool(&self) -> &Rc<RefCell<BlockPool>> {
+        self.model.pool()
+    }
+
+    /// One slot's decode round, restartable after pool exhaustion: every
+    /// state commit happens only after the allocation it depends on
+    /// succeeded, so a retry recomputes the identical token. `Err` is
+    /// raised *only* for pool exhaustion; model failures come back as
+    /// fault events with the same messages as the contiguous executor.
+    fn slot_step(
+        model: &PagedModel<'a>,
+        sampler: &Sampler,
+        slot: &mut PagedGreedySlot,
+        rng: &mut Rng,
+    ) -> Result<StepEvent> {
+        if slot.remaining == 0 {
+            return Ok(StepEvent {
+                id: slot.id,
+                tokens: Vec::new(),
+                steps: 0,
+                proposed: 0,
+                accepted: 0,
+                finished: true,
+                fault: None,
+            });
+        }
+        if slot.last.is_none() {
+            match slot.sess.extend(model, &slot.prompt) {
+                Ok(mut rows) => slot.last = rows.pop(),
+                Err(e) if is_pool_exhausted(&e) => return Err(e),
+                Err(e) => {
+                    return Ok(StepEvent::faulted(
+                        slot.id,
+                        StepFault::Error(format!(
+                            "request {}: prompt prefill failed: {e:#}",
+                            slot.id
+                        )),
+                    ))
+                }
+            }
+        }
+        let next = match slot.last.as_ref() {
+            Some(row) if row.iter().all(|x| x.is_finite()) => sampler.sample(row, rng),
+            Some(_) => return Ok(StepEvent::faulted(slot.id, StepFault::NanLogits)),
+            None => {
+                return Ok(StepEvent::faulted(
+                    slot.id,
+                    StepFault::Error(format!(
+                        "request {}: prefill produced no logits row",
+                        slot.id
+                    )),
+                ))
+            }
+        };
+        // like the contiguous executor, the final token is never fed back
+        let finished = slot.remaining == 1;
+        if finished {
+            slot.last = None;
+        } else {
+            match slot.sess.extend(model, &[next]) {
+                Ok(mut rows) => match rows.pop() {
+                    Some(row) => slot.last = Some(row),
+                    None => {
+                        return Ok(StepEvent::faulted(
+                            slot.id,
+                            StepFault::Error(format!(
+                                "request {}: decode step produced no logits row",
+                                slot.id
+                            )),
+                        ))
+                    }
+                },
+                Err(e) if is_pool_exhausted(&e) => return Err(e),
+                Err(e) => {
+                    return Ok(StepEvent::faulted(
+                        slot.id,
+                        StepFault::Error(format!(
+                            "request {}: decode step failed: {e:#}",
+                            slot.id
+                        )),
+                    ))
+                }
+            }
+        }
+        slot.remaining -= 1;
+        slot.generated += 1;
+        Ok(StepEvent {
+            id: slot.id,
+            tokens: vec![next],
+            steps: 1,
+            proposed: 0,
+            accepted: 0,
+            finished,
+            fault: None,
+        })
+    }
+}
+
+impl StepExecutor for PagedGreedyExecutor<'_> {
+    fn projected_bytes(&self, req: &TokenRequest) -> usize {
+        // page-rounded projected peak: reporting + the unbudgeted case
+        let peak_t = req
+            .prompt
+            .len()
+            .saturating_add(req.max_new_tokens)
+            .min(self.model.max_t());
+        let pool = self.model.pool.borrow();
+        peak_t.div_ceil(pool.block_tokens()) * pool.block_bytes()
+    }
+
+    fn admission_bytes(&self, req: &TokenRequest) -> usize {
+        // free-block admission: a request needs only its prompt's pages
+        // to start; decode growth is claimed one page at a time
+        let pool = self.model.pool.borrow();
+        req.prompt.len().div_ceil(pool.block_tokens()) * pool.block_bytes()
+    }
+
+    fn free_capacity_bytes(&self) -> Option<usize> {
+        let pool = self.model.pool.borrow();
+        // pages that admitted-but-not-yet-prefilled slots are still owed
+        let pending: usize = self
+            .slots
+            .iter()
+            .filter(|s| !s.preempted && s.last.is_none() && s.remaining > 0)
+            .map(|s| s.prompt.len().div_ceil(pool.block_tokens()))
+            .sum();
+        Some(
+            pool.free_blocks()
+                .saturating_sub(pending)
+                .saturating_mul(pool.block_bytes()),
+        )
+    }
+
+    fn admit(&mut self, req: &TokenRequest) -> Result<()> {
+        let budget = if req.prompt.is_empty() {
+            0
+        } else {
+            req.max_new_tokens
+                .min(self.model.max_t().saturating_sub(req.prompt.len()))
+        };
+        self.slots.push(PagedGreedySlot {
+            id: req.id,
+            prompt: req.prompt.clone(),
+            sess: self.model.new_session(),
+            remaining: budget,
+            generated: 0,
+            last: None,
+            preempted: false,
+        });
+        Ok(())
+    }
+
+    fn step_round(&mut self, rng: &mut Rng, _now_ms: f64) -> Result<Vec<StepEvent>> {
+        let mut events: Vec<StepEvent> = Vec::with_capacity(self.slots.len());
+        for si in 0..self.slots.len() {
+            if self.slots[si].preempted {
+                continue;
+            }
+            loop {
+                match Self::slot_step(&self.model, &self.sampler, &mut self.slots[si], rng) {
+                    Ok(ev) => {
+                        events.push(ev);
+                        break;
+                    }
+                    // pool exhausted: preempt the lowest-progress live
+                    // slot (pages freed now, scheduler requeues it) and
+                    // retry; no victim left → overcommit rather than
+                    // deadlock
+                    Err(_) => {
+                        let meta: Vec<(u64, usize, bool)> = self
+                            .slots
+                            .iter()
+                            .map(|s| (s.id, s.generated, s.preempted))
+                            .collect();
+                        match pick_victim(&meta, self.slots[si].id, &events) {
+                            Some(vi) => {
+                                let fresh = self.model.new_session();
+                                let v = &mut self.slots[vi];
+                                v.preempted = true;
+                                v.sess = fresh; // old cache drops → pages free
+                                v.last = None;
+                                events.push(StepEvent::faulted(v.id, StepFault::Preempted));
+                            }
+                            None => self.slots[si].sess.set_overcommit(true),
+                        }
+                    }
+                }
+            }
+        }
+        Ok(events)
+    }
+
+    fn retire(&mut self, id: u64) {
+        self.slots.retain(|s| s.id != id);
+    }
+
+    fn live_bytes(&self) -> usize {
+        // honest page-granular residency: shared pages count once
+        self.model.pool.borrow().allocated_bytes()
+    }
+}
+
+// ─────────────────────────────────────────────────────────────────────
+// PagedSpecExecutor
+// ─────────────────────────────────────────────────────────────────────
+
+struct PagedSpecSlot {
+    id: u64,
+    seq: Vec<u8>,
+    budget: usize,
+    generated: usize,
+    dsess: PagedSession,
+    tsess: PagedSession,
+    /// at least one verify step has committed (its prompt pages are held)
+    started: bool,
+    preempted: bool,
+}
+
+/// Speculative draft+target decoding over paged sessions — output
+/// bit-identical to [`SpecExecutor`](super::scheduler::SpecExecutor) per
+/// request. Draft and target keep *separate* pools (their K/V rows have
+/// different shapes and values, so cross-model sharing is meaningless);
+/// the worker's byte budget splits between them in proportion to each
+/// model's per-token KV cost.
+pub struct PagedSpecExecutor<'a> {
+    draft: PagedModel<'a>,
+    target: PagedModel<'a>,
+    gamma: usize,
+    sampler: Sampler,
+    slots: Vec<PagedSpecSlot>,
+}
+
+impl<'a> PagedSpecExecutor<'a> {
+    pub fn new(
+        draft: &'a Transformer,
+        target: &'a Transformer,
+        gamma: usize,
+        block_tokens: usize,
+        budget_bytes: usize,
+    ) -> Self {
+        let (d_share, t_share) = if budget_bytes == 0 {
+            (0, 0)
+        } else {
+            let d_bpt = draft.cfg.kv_bytes_per_token().max(1);
+            let t_bpt = target.cfg.kv_bytes_per_token().max(1);
+            let d_share = budget_bytes * d_bpt / (d_bpt + t_bpt);
+            (d_share.max(1), budget_bytes.saturating_sub(d_share).max(1))
+        };
+        PagedSpecExecutor {
+            draft: PagedModel::new(draft, block_tokens, d_share),
+            target: PagedModel::new(target, block_tokens, t_share),
+            gamma,
+            sampler: Sampler::Greedy,
+            slots: Vec::new(),
+        }
+    }
+
+    fn limit(&self) -> usize {
+        self.target.max_t().min(self.draft.max_t())
+    }
+
+    fn combined_block_bytes(&self) -> usize {
+        self.draft.pool.borrow().block_bytes() + self.target.pool.borrow().block_bytes()
+    }
+
+    /// One verify step for one slot, restartable after pool exhaustion:
+    /// `spec_verify_step` mutates `seq` only after its last fallible
+    /// extend, and on exhaustion both sessions roll back to the committed
+    /// prefix (pages freed), so a retry recomputes identical tokens.
+    #[allow(clippy::too_many_arguments)]
+    fn slot_step(
+        draft: &PagedModel<'a>,
+        target: &PagedModel<'a>,
+        gamma: usize,
+        limit: usize,
+        sampler: &Sampler,
+        slot: &mut PagedSpecSlot,
+        rng: &mut Rng,
+    ) -> Result<StepEvent> {
+        let room = limit
+            .saturating_sub(slot.seq.len())
+            .min(gamma)
+            .min(slot.budget.saturating_sub(slot.generated));
+        if room == 0 {
+            return Ok(StepEvent {
+                id: slot.id,
+                tokens: Vec::new(),
+                steps: 0,
+                proposed: 0,
+                accepted: 0,
+                finished: true,
+                fault: None,
+            });
+        }
+        let step = spec_verify_step(
+            draft,
+            target,
+            &mut slot.dsess,
+            &mut slot.tsess,
+            &mut slot.seq,
+            room,
+            slot.budget - slot.generated,
+            limit,
+            sampler,
+            rng,
+        );
+        let (tokens, proposed, accepted) = match step {
+            Ok(v) => v,
+            Err(e) if is_pool_exhausted(&e) => {
+                // partially-extended sessions would desync the next
+                // catch-up: rewind both to the committed prefix (whole
+                // pages return to the pools) before the retry
+                let keep = slot.seq.len().saturating_sub(1);
+                slot.dsess.rollback(keep);
+                slot.tsess.rollback(keep);
+                return Err(e);
+            }
+            Err(e) => {
+                return Ok(StepEvent::faulted(
+                    slot.id,
+                    StepFault::Error(format!(
+                        "request {}: speculative verify step failed: {e:#}",
+                        slot.id
+                    )),
+                ))
+            }
+        };
+        slot.generated += tokens.len();
+        slot.started = true;
+        let finished = slot.generated >= slot.budget || slot.seq.len() >= limit;
+        Ok(StepEvent {
+            id: slot.id,
+            tokens,
+            steps: 1,
+            proposed,
+            accepted,
+            finished,
+            fault: None,
+        })
+    }
+}
+
+impl StepExecutor for PagedSpecExecutor<'_> {
+    fn projected_bytes(&self, req: &TokenRequest) -> usize {
+        let peak_t = req
+            .prompt
+            .len()
+            .saturating_add(req.max_new_tokens)
+            .min(self.limit());
+        let bt = self.target.pool.borrow().block_tokens();
+        peak_t.div_ceil(bt) * self.combined_block_bytes()
+    }
+
+    fn admission_bytes(&self, req: &TokenRequest) -> usize {
+        let bt = self.target.pool.borrow().block_tokens();
+        req.prompt.len().div_ceil(bt) * self.combined_block_bytes()
+    }
+
+    fn free_capacity_bytes(&self) -> Option<usize> {
+        // a slot needs matching pages in *both* pools, so capacity is the
+        // scarcer pool's free pages, priced at the combined page cost
+        let bt = self.target.pool.borrow().block_tokens();
+        let pending: usize = self
+            .slots
+            .iter()
+            .filter(|s| !s.preempted && !s.started)
+            .map(|s| s.seq.len().div_ceil(bt))
+            .sum();
+        let free = self
+            .draft
+            .pool
+            .borrow()
+            .free_blocks()
+            .min(self.target.pool.borrow().free_blocks());
+        Some(
+            free.saturating_sub(pending)
+                .saturating_mul(self.combined_block_bytes()),
+        )
+    }
+
+    fn admit(&mut self, req: &TokenRequest) -> Result<()> {
+        let budget = if req.prompt.is_empty() {
+            0
+        } else {
+            req.max_new_tokens
+                .min(self.limit().saturating_sub(req.prompt.len()))
+        };
+        self.slots.push(PagedSpecSlot {
+            id: req.id,
+            seq: req.prompt.clone(),
+            budget,
+            generated: 0,
+            dsess: self.draft.new_session(),
+            tsess: self.target.new_session(),
+            started: false,
+            preempted: false,
+        });
+        Ok(())
+    }
+
+    fn step_round(&mut self, rng: &mut Rng, _now_ms: f64) -> Result<Vec<StepEvent>> {
+        let gamma = self.gamma;
+        let limit = self.limit();
+        let mut events: Vec<StepEvent> = Vec::with_capacity(self.slots.len());
+        for si in 0..self.slots.len() {
+            if self.slots[si].preempted {
+                continue;
+            }
+            loop {
+                match Self::slot_step(
+                    &self.draft,
+                    &self.target,
+                    gamma,
+                    limit,
+                    &self.sampler,
+                    &mut self.slots[si],
+                    rng,
+                ) {
+                    Ok(ev) => {
+                        events.push(ev);
+                        break;
+                    }
+                    Err(_) => {
+                        let meta: Vec<(u64, usize, bool)> = self
+                            .slots
+                            .iter()
+                            .map(|s| (s.id, s.generated, s.preempted))
+                            .collect();
+                        match pick_victim(&meta, self.slots[si].id, &events) {
+                            Some(vi) => {
+                                let fresh_d = self.draft.new_session();
+                                let fresh_t = self.target.new_session();
+                                let v = &mut self.slots[vi];
+                                v.preempted = true;
+                                v.dsess = fresh_d;
+                                v.tsess = fresh_t;
+                                events.push(StepEvent::faulted(v.id, StepFault::Preempted));
+                            }
+                            None => {
+                                let s = &mut self.slots[si];
+                                s.dsess.set_overcommit(true);
+                                s.tsess.set_overcommit(true);
+                            }
+                        }
+                    }
+                }
+            }
+        }
+        Ok(events)
+    }
+
+    fn retire(&mut self, id: u64) {
+        self.slots.retain(|s| s.id != id);
+    }
+
+    fn live_bytes(&self) -> usize {
+        self.draft.pool.borrow().allocated_bytes()
+            + self.target.pool.borrow().allocated_bytes()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::server::engine::RequestOutcome;
+    use crate::server::scheduler::{GreedyExecutor, Scheduler, ServeCfg, SpecExecutor};
+    use crate::util::fixtures::{fixture_draft, fixture_target};
+    use crate::util::testing::assert_outputs_match;
+
+    fn reqs(n: usize, max_new: usize) -> Vec<TokenRequest> {
+        (0..n)
+            .map(|i| TokenRequest {
+                id: i as u64,
+                prompt: vec![10 + i as u8, 20, 30, 40, 50],
+                max_new_tokens: max_new,
+                arrival_ms: i as f64,
+                deadline_ms: None,
+            })
+            .collect()
+    }
+
+    #[test]
+    fn paged_greedy_matches_contiguous_unbudgeted() {
+        let model = fixture_target(3);
+        let flat = Scheduler::run(
+            reqs(5, 8),
+            GreedyExecutor::new(&model),
+            &ServeCfg::continuous(3),
+            0,
+        )
+        .unwrap();
+        let paged = Scheduler::run(
+            reqs(5, 8),
+            PagedGreedyExecutor::new(&model, 4, 0),
+            &ServeCfg::continuous(3),
+            0,
+        )
+        .unwrap();
+        assert_outputs_match(&flat, &paged, "paged greedy vs contiguous");
+    }
+
+    #[test]
+    fn paged_spec_matches_contiguous_unbudgeted() {
+        let draft = fixture_draft(3);
+        let target = fixture_target(3);
+        let flat = Scheduler::run(
+            reqs(4, 10),
+            SpecExecutor::new(&draft, &target, 3),
+            &ServeCfg::continuous(2),
+            0,
+        )
+        .unwrap();
+        let paged = Scheduler::run(
+            reqs(4, 10),
+            PagedSpecExecutor::new(&draft, &target, 3, 4, 0),
+            &ServeCfg::continuous(2),
+            0,
+        )
+        .unwrap();
+        assert_outputs_match(&flat, &paged, "paged spec vs contiguous");
+    }
+
+    #[test]
+    fn preemption_under_tight_pool_still_completes_every_request() {
+        let model = fixture_target(3);
+        // room for ~3 pages of 4 tokens: several 5-token prompts decoding
+        // 12 tokens each must collide and preempt
+        let block_bytes = model.cfg.n_layers * 2 * 4 * model.cfg.d_model * 4;
+        let budget = 3 * block_bytes;
+        let cfg = ServeCfg::continuous(4).with_budget(budget).with_retries(8);
+        let report = Scheduler::run(
+            reqs(4, 12),
+            PagedGreedyExecutor::new(&model, 4, budget),
+            &cfg,
+            0,
+        )
+        .unwrap();
+        assert_eq!(report.completed.len(), 4);
+        for c in &report.completed {
+            assert_eq!(
+                c.outcome,
+                RequestOutcome::Completed,
+                "request {} under preemption: {:?}",
+                c.id,
+                c.outcome
+            );
+        }
+        // ...and the outputs still match an untight contiguous run
+        let flat = Scheduler::run(
+            reqs(4, 12),
+            GreedyExecutor::new(&model),
+            &ServeCfg::continuous(4),
+            0,
+        )
+        .unwrap();
+        assert_outputs_match(&flat, &report, "preempted paged vs contiguous");
+    }
+
+    #[test]
+    fn shared_prompts_share_pages_in_one_round() {
+        let model = fixture_target(3);
+        let mut requests = reqs(4, 2);
+        for r in &mut requests {
+            r.prompt = vec![9; 8]; // identical 8-token prompt, 2 pages at bt=4
+            r.arrival_ms = 0.0;
+        }
+        let mut exec = PagedGreedyExecutor::new(&model, 4, 0);
+        for r in &requests {
+            exec.admit(r).unwrap();
+        }
+        let mut rng = Rng::new(0);
+        exec.step_round(&mut rng, 0.0).unwrap();
+        let pool = exec.pool().borrow();
+        // 4 sessions × (2 prompt pages + 1 decode page), but the 2 prompt
+        // pages are shared: 2 + 4 × 1 pages resident, not 12
+        assert_eq!(pool.in_use_blocks(), 6, "prompt pages must be shared");
+    }
+
+    #[test]
+    fn free_capacity_accounts_admitted_but_unprefilled_prompts() {
+        let model = fixture_target(3);
+        let block_bytes = model.cfg.n_layers * 2 * 4 * model.cfg.d_model * 4;
+        let mut exec = PagedGreedyExecutor::new(&model, 4, 10 * block_bytes);
+        assert_eq!(exec.free_capacity_bytes(), Some(10 * block_bytes));
+        // a 5-token prompt owes 2 pages before its first round runs
+        exec.admit(&reqs(1, 4)[0]).unwrap();
+        assert_eq!(exec.free_capacity_bytes(), Some(8 * block_bytes));
+        assert_eq!(exec.admission_bytes(&reqs(1, 4)[0]), 2 * block_bytes);
+    }
+}

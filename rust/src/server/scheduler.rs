@@ -150,6 +150,10 @@ pub struct ServeCfg {
     /// benches). `None` = no injection; the serve loop is byte-identical
     /// to the pre-fault-tolerance scheduler for fault-free runs.
     pub fault: Option<FaultPlan>,
+    /// Page size (tokens per KV block) for the paged serving path. `Some`
+    /// routes `serve:` configs through the paged executors with this
+    /// block size; `None` keeps the contiguous per-request caches.
+    pub kv_block_tokens: Option<usize>,
 }
 
 impl Default for ServeCfg {
@@ -163,6 +167,7 @@ impl Default for ServeCfg {
             max_retries: 0,
             retry_backoff_ms: 1.0,
             fault: None,
+            kv_block_tokens: None,
         }
     }
 }
@@ -218,6 +223,12 @@ impl ServeCfg {
         self
     }
 
+    /// Serve from paged KV with `block_tokens`-token pages.
+    pub fn with_block_tokens(mut self, block_tokens: usize) -> Self {
+        self.kv_block_tokens = Some(block_tokens);
+        self
+    }
+
     /// Each worker's KV-budget share: `kv_budget_bytes` split evenly, the
     /// remainder spread over the first workers, so shares always sum to
     /// the configured total. A nonzero total smaller than the worker
@@ -248,16 +259,19 @@ impl ServeCfg {
             return Ok(());
         }
         let share = self.per_worker_budgets().into_iter().max().unwrap_or(0);
+        // admission_bytes is what the scheduler actually gates on: the
+        // projected peak for reservation-based executors, only the prompt
+        // pages for the paged free-block ones
         let min_need = requests
             .iter()
-            .map(|r| executor.projected_bytes(r))
+            .map(|r| executor.admission_bytes(r))
             .min()
             .unwrap_or(0);
         if min_need > share {
             bail!(
                 "serve.kv_budget_bytes = {} splits to {share} bytes per worker \
-                 ({} workers), smaller than the smallest request's projected \
-                 peak KV of {min_need} bytes; every request would need the \
+                 ({} workers), smaller than the smallest request's admission \
+                 KV need of {min_need} bytes; every request would need the \
                  oversized-request safety valve — raise the budget or reduce \
                  workers",
                 self.kv_budget_bytes,
@@ -295,6 +309,10 @@ pub enum StepFault {
     /// non-finite logits detected on the decode path — a poisoned request
     /// must not commit garbage tokens
     NanLogits,
+    /// evicted by a paged executor to free KV pages for another live
+    /// request — a scheduling decision, not a failure: the pool requeues
+    /// it immediately without burning a retry attempt
+    Preempted,
 }
 
 impl StepFault {
@@ -302,6 +320,7 @@ impl StepFault {
         match self {
             StepFault::Error(e) => e.clone(),
             StepFault::NanLogits => "non-finite logits on the decode path".to_string(),
+            StepFault::Preempted => "preempted to free KV pages".to_string(),
         }
     }
 }
@@ -346,6 +365,21 @@ pub trait StepExecutor {
     /// Projected peak KV bytes `req` will hold while in flight — the
     /// amount admission control reserves against the budget.
     fn projected_bytes(&self, req: &TokenRequest) -> usize;
+    /// Bytes admission control requires free to *start* `req`. Defaults
+    /// to the full projected peak (reservation-based admission); paged
+    /// executors override it with just the prompt's pages, since decode
+    /// growth is claimed page-by-page.
+    fn admission_bytes(&self, req: &TokenRequest) -> usize {
+        self.projected_bytes(req)
+    }
+    /// Bytes the executor can actually hand out right now, when it runs
+    /// its own allocator: `Some(free)` switches the scheduler to
+    /// free-block admission (compare `admission_bytes` against this live
+    /// value, reserve nothing); `None` keeps the classic
+    /// reserve-the-projected-peak accounting.
+    fn free_capacity_bytes(&self) -> Option<usize> {
+        None
+    }
     /// Allocate per-request decode state. The request's first round (its
     /// Prefill step) runs at the next `step_round`.
     fn admit(&mut self, req: &TokenRequest) -> Result<()>;
@@ -587,6 +621,12 @@ impl WorkerPool {
         let mut peak_kv_bytes = 0usize;
         // running sum of every worker's cached_live_bytes
         let mut pool_live_bytes = 0usize;
+        // concurrency sampled once per decode round (and maxed at every
+        // admission), pool-wide: the utilization numbers the paged
+        // executors are meant to move
+        let mut rounds = 0usize;
+        let mut in_flight_sum = 0usize;
+        let mut peak_in_flight = 0usize;
 
         loop {
             // ── no worker left alive: shed the remaining queue ───────
@@ -693,10 +733,16 @@ impl WorkerPool {
                     let now_bytes = w.executor.live_bytes();
                     pool_live_bytes = pool_live_bytes - w.cached_live_bytes + now_bytes;
                     w.cached_live_bytes = now_bytes;
+                    peak_in_flight =
+                        peak_in_flight.max(workers.iter().map(|w| w.live.len()).sum());
                 }
 
                 // ── one measured decode round on one worker ──────────
                 PoolAct::Round(b) => {
+                    let live_now: usize = workers.iter().map(|w| w.live.len()).sum();
+                    rounds += 1;
+                    in_flight_sum += live_now;
+                    peak_in_flight = peak_in_flight.max(live_now);
                     let stepped = {
                         let w = &mut workers[b];
                         let round_t0 = Instant::now();
@@ -783,6 +829,20 @@ impl WorkerPool {
                             let l = w.live.swap_remove(idx);
                             w.executor.retire(l.req.id);
                             w.reserved_bytes -= l.reserved_bytes;
+                            // a preemption (paged executor freeing pages
+                            // for another live request) is a scheduling
+                            // decision, not a failure: requeue with no
+                            // backoff and never convert it to `Failed`.
+                            // The attempt number still advances so the
+                            // fault injector keys fresh draws.
+                            if fault == StepFault::Preempted {
+                                queue.push_back(QueuedReq {
+                                    ready_ms: now,
+                                    attempt: l.attempts + 1,
+                                    req: l.req,
+                                });
+                                continue;
+                            }
                             if l.attempts < max_attempts {
                                 let backoff = retry_backoff(cfg, l.attempts);
                                 queue.push_back(QueuedReq {
@@ -914,6 +974,12 @@ impl WorkerPool {
             peak_kv_bytes,
             worker_peak_kv_bytes: workers.iter().map(|w| w.peak_kv_bytes).collect(),
             crashed_workers,
+            peak_in_flight,
+            mean_in_flight: if rounds == 0 {
+                0.0
+            } else {
+                in_flight_sum as f64 / rounds as f64
+            },
         })
     }
 
@@ -937,7 +1003,7 @@ impl WorkerPool {
         // no surviving worker's budget share can only ever run alone, so
         // it becomes admissible exactly on idle workers
         let fits_nowhere = workers.iter().filter(|w| !w.dead).all(|w| {
-            w.budget != 0 && w.executor.projected_bytes(&head.req) > w.budget
+            w.budget != 0 && w.executor.admission_bytes(&head.req) > w.budget
         });
         let mut best: Option<(usize, f64, usize)> = None;
         for (i, w) in workers.iter().enumerate() {
@@ -952,10 +1018,21 @@ impl WorkerPool {
                         false
                     } else if fits_nowhere {
                         w.live.is_empty()
+                    } else if w.budget == 0 {
+                        true
                     } else {
-                        w.budget == 0
-                            || w.reserved_bytes + w.executor.projected_bytes(&head.req)
-                                <= w.budget
+                        match w.executor.free_capacity_bytes() {
+                            // free-block admission: gate on the pages the
+                            // pool can hand out *now*, not a reservation
+                            Some(free) => {
+                                w.executor.admission_bytes(&head.req) <= free
+                            }
+                            None => {
+                                w.reserved_bytes
+                                    + w.executor.admission_bytes(&head.req)
+                                    <= w.budget
+                            }
+                        }
                     }
                 }
             };
@@ -976,13 +1053,19 @@ impl WorkerPool {
         best.map(|(i, s, _)| (i, s))
     }
 
-    /// Admit one request to `w`, reserving its projected peak KV bytes.
+    /// Admit one request to `w`. Reservation-based executors reserve the
+    /// request's admission bytes against the worker share; free-block
+    /// executors reserve nothing — their pool is the live source of truth.
     fn admit_one<E: StepExecutor>(
         w: &mut PoolWorker<E>,
         q: QueuedReq,
         cfg: &ServeCfg,
     ) -> Result<()> {
-        let need = w.executor.projected_bytes(&q.req);
+        let need = if w.executor.free_capacity_bytes().is_some() {
+            0
+        } else {
+            w.executor.admission_bytes(&q.req)
+        };
         w.executor.note_attempt(q.req.id, q.attempt);
         w.executor.admit(&q.req)?;
         w.reserved_bytes += need;
@@ -1012,7 +1095,7 @@ impl WorkerPool {
         let mut k = 0usize;
         let mut sum = 0usize;
         for q in queue.iter().take(w.max_in_flight) {
-            let need = w.executor.projected_bytes(&q.req);
+            let need = w.executor.admission_bytes(&q.req);
             let fits = w.budget == 0
                 || sum + need <= w.budget
                 || (k == 0 && need > w.budget);

@@ -8,7 +8,7 @@
 use angelslim::config::SlimConfig;
 use angelslim::coordinator::{PassRegistry, SlimFactory};
 use angelslim::data::TokenRequest;
-use angelslim::server::{GreedyExecutor, ServeCfg, StepExecutor};
+use angelslim::server::{GreedyExecutor, PagedGreedyExecutor, ServeCfg, StepExecutor};
 use angelslim::util::fixtures::fixture_target;
 
 /// Minimal valid config with an arbitrary `serve:` section appended.
@@ -201,6 +201,69 @@ fn serve_rejects_misconfigured_fault_tolerance() {
          \x20   crash_worker: 1\n    crash_at_ms: 5\n"
     )
     .is_ok());
+}
+
+#[test]
+fn paged_fixture_parses_and_selects_the_paged_path() {
+    let cfg = SlimConfig::from_file("configs/serve_paged_fixture.yaml").unwrap();
+    assert_eq!(cfg.serve.kv_block_tokens, Some(8));
+    assert_eq!(cfg.serve.workers, 2);
+    assert!(cfg.serve.per_worker_budgets().iter().all(|&b| b > 0));
+    // contiguous fixtures keep the key absent (contiguous path)
+    let sharded = SlimConfig::from_file("configs/serve_sharded_fixture.yaml").unwrap();
+    assert_eq!(sharded.serve.kv_block_tokens, None);
+}
+
+#[test]
+fn serve_rejects_invalid_kv_block_tokens() {
+    assert!(
+        with_serve("  kv_block_tokens: 0\n").is_err(),
+        "kv_block_tokens: 0 must be a loud error, not a zero-sized page"
+    );
+    assert!(
+        with_serve("  kv_block_tokens: -8\n").is_err(),
+        "negative kv_block_tokens must not wrap to usize"
+    );
+    assert!(
+        with_serve("  kv_block_tokens: many\n").is_err(),
+        "non-numeric kv_block_tokens must be rejected"
+    );
+    assert_eq!(
+        with_serve("  kv_block_tokens: 16\n").unwrap().serve.kv_block_tokens,
+        Some(16)
+    );
+}
+
+#[test]
+fn paged_admission_needs_only_prompt_pages() {
+    // the startup guard prices paged admission at the prompt's pages,
+    // not the projected peak — a budget too small for the contiguous
+    // path can still be valid for the paged one
+    let target = fixture_target(5);
+    let flat = GreedyExecutor::new(&target);
+    let paged = PagedGreedyExecutor::new(&target, 4, 0);
+    let requests = vec![TokenRequest {
+        id: 0,
+        prompt: vec![1, 2, 3, 4],
+        max_new_tokens: 16,
+        arrival_ms: 0.0,
+        deadline_ms: None,
+    }];
+    let peak_need = flat.projected_bytes(&requests[0]);
+    let prompt_need = paged.admission_bytes(&requests[0]);
+    assert!(
+        prompt_need < peak_need,
+        "prompt pages ({prompt_need}) must undercut projected peak ({peak_need})"
+    );
+    let cfg = ServeCfg::continuous(4).with_budget(prompt_need);
+    assert!(
+        cfg.ensure_requests_fit(&flat, &requests).is_err(),
+        "too small for projected-peak admission"
+    );
+    assert!(
+        cfg.ensure_requests_fit(&paged, &requests).is_ok(),
+        "but enough for free-block admission"
+    );
 }
 
 #[test]

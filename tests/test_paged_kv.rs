@@ -1,0 +1,359 @@
+//! Property tests for the paged KV cache and the paged serving path:
+//! pool invariants must hold under randomized session op sequences
+//! (append / truncate / clear / prefix attach+seal, with exhaustion and
+//! prefix-cache reclaim in play), and paged serving — greedy and
+//! speculative, at 1/2/4 workers, fault-free and under seeded chaos —
+//! must decode bit-identically to the contiguous executors while
+//! materializing shared prompt prefixes once per worker instead of once
+//! per request.
+
+use std::cell::RefCell;
+use std::rc::Rc;
+
+use angelslim::data::TokenRequest;
+use angelslim::models::{BlockPool, PagedKvCache, Transformer};
+use angelslim::server::{FaultPlan, ServeCfg, ServeReport, ServingEngine};
+use angelslim::util::fixtures::{fixture_draft, fixture_target};
+use angelslim::util::testing::{assert_outputs_match, assert_terminal_outcomes, check};
+use angelslim::util::Rng;
+
+const WORKER_COUNTS: [usize; 3] = [1, 2, 4];
+
+/// Shared-prefix trace: every request carries the same `prompt_len`-token
+/// prompt (a planted-rule walk, so greedy decoding is meaningful). All
+/// requests arrive together so concurrency is pinned by `max_in_flight`,
+/// not by how fast the fixture model happens to decode a round — the
+/// residency assertions below need the prompts live at the same time.
+fn shared_prefix_reqs(n: usize, prompt_len: usize, max_new: usize) -> Vec<TokenRequest> {
+    let prompt: Vec<u8> = (0..prompt_len).map(|i| ((i * 5) % 32) as u8).collect();
+    (0..n)
+        .map(|i| TokenRequest {
+            id: i as u64,
+            prompt: prompt.clone(),
+            max_new_tokens: max_new,
+            arrival_ms: 0.0,
+            deadline_ms: None,
+        })
+        .collect()
+}
+
+/// Mixed trace with distinct prompts and heterogeneous lengths.
+fn mixed_reqs(n: usize, max_new: usize) -> Vec<TokenRequest> {
+    (0..n)
+        .map(|i| TokenRequest {
+            id: i as u64,
+            prompt: (0..6 + i % 3).map(|j| ((i * 7 + j * 3) % 32) as u8).collect(),
+            max_new_tokens: if i % 2 == 0 { max_new } else { max_new / 3 + 1 },
+            arrival_ms: i as f64 * 0.5,
+            deadline_ms: None,
+        })
+        .collect()
+}
+
+// ─────────────────────────────────────────────────────────────────────
+// Pool-level properties
+// ─────────────────────────────────────────────────────────────────────
+
+/// Randomized op sequences over several sessions on one bounded pool:
+/// after every operation the pool's refcount / free-list / prefix-cache
+/// partition must stay consistent, failed appends must be atomic (the
+/// mirror sequence and cache length never diverge), and dropping every
+/// session must return every page to free or the prefix cache.
+#[test]
+fn pool_invariants_hold_under_random_op_sequences() {
+    check(24, |rng: &mut Rng| {
+        let bt = 4usize;
+        let pool = Rc::new(RefCell::new(BlockPool::new_bounded(
+            2,
+            8,
+            bt,
+            12 * 2 * 2 * bt * 8 * 4, // 12 pages
+        )));
+        let mut caches: Vec<PagedKvCache> =
+            (0..3).map(|_| PagedKvCache::new(Rc::clone(&pool))).collect();
+        let mut mirrors: Vec<Vec<u8>> = vec![Vec::new(); caches.len()];
+
+        for _ in 0..80 {
+            let ci = rng.below(caches.len());
+            match rng.below(5) {
+                // append 1..=6 tokens (prefill or decode-sized)
+                0 | 1 => {
+                    let k = 1 + rng.below(6);
+                    let tokens: Vec<u8> = (0..k).map(|_| rng.below(32) as u8).collect();
+                    match caches[ci].prepare_append(k) {
+                        Ok(()) => {
+                            caches[ci].advance(k);
+                            mirrors[ci].extend_from_slice(&tokens);
+                        }
+                        Err(e) => {
+                            // atomic failure: nothing grew
+                            assert!(e.needed_blocks > 0);
+                            assert_eq!(caches[ci].len(), mirrors[ci].len());
+                        }
+                    }
+                }
+                // truncate to a random prefix (whole pages released)
+                2 => {
+                    let keep = rng.below(mirrors[ci].len() + 1);
+                    caches[ci].truncate(keep);
+                    mirrors[ci].truncate(keep);
+                }
+                // seal the full pages so other sessions can attach them
+                3 => {
+                    let seq = mirrors[ci].clone();
+                    caches[ci].seal_prefix(&seq);
+                }
+                // restart the session from a donor's sealed prefix
+                _ => {
+                    caches[ci].clear();
+                    mirrors[ci].clear();
+                    let donor = mirrors[(ci + 1) % mirrors.len()].clone();
+                    if !donor.is_empty() {
+                        let matched = caches[ci].attach_prefix(&donor);
+                        assert!(matched % bt == 0, "attach matches whole pages only");
+                        assert!(matched <= donor.len());
+                        match caches[ci].prepare_append(donor.len()) {
+                            Ok(()) => {
+                                caches[ci].advance(donor.len());
+                                mirrors[ci] = donor;
+                            }
+                            Err(_) => {
+                                caches[ci].clear();
+                            }
+                        }
+                    }
+                }
+            }
+            assert_eq!(caches[ci].len(), mirrors[ci].len(), "cache/mirror drifted");
+            pool.borrow().check_invariants();
+        }
+
+        drop(caches);
+        let p = pool.borrow();
+        p.check_invariants();
+        assert_eq!(
+            p.in_use_blocks(),
+            0,
+            "dropped sessions must release every page (cached prefixes excluded)"
+        );
+        assert!(p.total_blocks() <= 12 || p.max_blocks() == 0, "cap respected");
+    });
+}
+
+/// Two sessions over the same sealed prompt share pages; diverging past
+/// the prefix forks copy-on-write and never rewrites the shared rows.
+#[test]
+fn attach_then_diverge_forks_instead_of_corrupting_the_shared_page() {
+    let bt = 4usize;
+    let pool = Rc::new(RefCell::new(BlockPool::new(2, 8, bt)));
+    let prompt: Vec<u8> = (0..6).map(|i| i as u8).collect(); // 1 full + 1 partial page
+
+    let mut a = PagedKvCache::new(Rc::clone(&pool));
+    assert_eq!(a.attach_prefix(&prompt), 0, "nothing sealed yet");
+    a.prepare_append(prompt.len()).unwrap();
+    a.advance(prompt.len());
+    a.seal_prefix(&prompt);
+
+    let mut b = PagedKvCache::new(Rc::clone(&pool));
+    assert_eq!(b.attach_prefix(&prompt), bt, "full page attaches, partial does not");
+    b.prepare_append(prompt.len()).unwrap();
+    b.advance(prompt.len());
+    assert_eq!(b.table()[0], a.table()[0], "first page shared");
+    assert_ne!(b.table()[1], a.table()[1], "partial page is private");
+    assert_eq!(pool.borrow().refcount(a.table()[0]), 2);
+
+    // rolling back *into* the shared page and diverging must fork it
+    // copy-on-write: b gets a private copy of the first two rows while
+    // a's view and the sealed index entry stay untouched
+    b.truncate(2);
+    assert_eq!(pool.borrow().refcount(a.table()[0]), 2, "rollback into a page keeps the ref");
+    b.prepare_append(1).unwrap();
+    b.advance(1);
+    assert_ne!(b.table()[0], a.table()[0], "mid-page divergence forked the shared page");
+    assert_eq!(pool.borrow().refcount(a.table()[0]), 1, "b dropped its shared ref");
+    assert!(pool.borrow().is_sealed(a.table()[0]), "shared page stays sealed for reuse");
+    assert_eq!(a.len(), 6);
+    assert_eq!(b.len(), 3);
+    pool.borrow().check_invariants();
+}
+
+// ─────────────────────────────────────────────────────────────────────
+// Serving equivalence: paged vs contiguous
+// ─────────────────────────────────────────────────────────────────────
+
+fn flat_greedy(reqs: Vec<TokenRequest>, model: &Transformer, cfg: &ServeCfg) -> ServeReport {
+    ServingEngine::serve_scheduled::<Transformer, _>(reqs, model, None, cfg, 0).unwrap()
+}
+
+/// Greedy paged serving is bit-identical to contiguous serving at every
+/// worker count, on a mixed trace and on a fully-shared-prefix trace.
+#[test]
+fn paged_greedy_matches_contiguous_at_every_worker_count() {
+    let model = fixture_target(3);
+    for &w in &WORKER_COUNTS {
+        let cfg = ServeCfg::continuous(4).with_workers(w);
+        let paged_cfg = cfg.clone().with_block_tokens(4);
+        for (name, reqs, n) in [
+            ("mixed", mixed_reqs(9, 10), 9),
+            ("shared-prefix", shared_prefix_reqs(6, 8, 6), 6),
+        ] {
+            let flat = flat_greedy(reqs.clone(), &model, &cfg);
+            let paged =
+                ServingEngine::serve_paged(reqs, &model, None, &paged_cfg, 0).unwrap();
+            assert_terminal_outcomes(&paged, n, 0);
+            assert_outputs_match(
+                &flat,
+                &paged,
+                &format!("paged greedy vs contiguous ({name}, workers={w})"),
+            );
+        }
+    }
+}
+
+/// Speculative paged serving (draft + target, separate pools) matches the
+/// contiguous speculative executor at every worker count.
+#[test]
+fn paged_spec_matches_contiguous_at_every_worker_count() {
+    let draft = fixture_draft(3);
+    let target = fixture_target(3);
+    for &w in &WORKER_COUNTS {
+        let cfg = ServeCfg::continuous(3).with_workers(w);
+        let reqs = || shared_prefix_reqs(6, 8, 10);
+        let flat = ServingEngine::serve_scheduled(
+            reqs(),
+            &target,
+            Some((&draft, 3)),
+            &cfg,
+            0,
+        )
+        .unwrap();
+        let paged = ServingEngine::serve_paged(
+            reqs(),
+            &target,
+            Some((&draft, 3)),
+            &cfg.clone().with_block_tokens(4),
+            0,
+        )
+        .unwrap();
+        assert_outputs_match(&flat, &paged, &format!("paged spec vs contiguous, workers={w}"));
+        assert!(paged.mean_al > 1.0, "speculation still accepts proposals");
+    }
+}
+
+/// A shared-prefix trace materializes the prompt's pages once per worker:
+/// paged peak resident KV stays strictly below N x the prompt's KV bytes,
+/// while the contiguous path pays the full per-request copy.
+#[test]
+fn shared_prefix_trace_is_resident_once_not_once_per_request() {
+    let model = fixture_target(3);
+    let n = 6;
+    let prompt_len = 16; // two full 8-token pages, shared across all N
+    let reqs = || shared_prefix_reqs(n, prompt_len, 2);
+    let cfg = ServeCfg::continuous(4);
+    let flat = flat_greedy(reqs(), &model, &cfg);
+    let paged = ServingEngine::serve_paged(
+        reqs(),
+        &model,
+        None,
+        &cfg.clone().with_block_tokens(8),
+        0,
+    )
+    .unwrap();
+    assert_outputs_match(&flat, &paged, "shared-prefix paged vs contiguous");
+
+    let n_prompt_bytes = n * prompt_len * model.cfg.kv_bytes_per_token();
+    assert!(
+        paged.peak_kv_bytes < n_prompt_bytes,
+        "shared prompts must be resident once: paged peak {} >= {} (= {n} x prompt)",
+        paged.peak_kv_bytes,
+        n_prompt_bytes
+    );
+    assert!(
+        paged.peak_kv_bytes < flat.peak_kv_bytes,
+        "paged peak {} must undercut contiguous peak {}",
+        paged.peak_kv_bytes,
+        flat.peak_kv_bytes
+    );
+}
+
+/// Same seed, same trace → field-identical paged reports (preemption and
+/// prefix sharing are deterministic).
+#[test]
+fn paged_serving_is_reproducible() {
+    let model = fixture_target(5);
+    let block_bytes = 4 * model.cfg.kv_bytes_per_token();
+    let cfg = ServeCfg::continuous(4)
+        .with_budget(5 * block_bytes)
+        .with_block_tokens(4);
+    let run = || {
+        ServingEngine::serve_paged(mixed_reqs(6, 10), &model, None, &cfg, 0).unwrap()
+    };
+    let (a, b) = (run(), run());
+    assert_outputs_match(&a, &b, "paged determinism");
+    for (x, y) in a.completed.iter().zip(&b.completed) {
+        assert_eq!(x.outcome, y.outcome, "request {} outcome drifted", x.id);
+        assert_eq!(x.attempts, y.attempts, "request {} attempts drifted", x.id);
+    }
+    assert_eq!(a.peak_kv_bytes, b.peak_kv_bytes);
+}
+
+/// Preemption under a page-starved pool re-queues work instead of
+/// failing it, and every completed output still matches the contiguous
+/// run — restart-from-scratch recomputes the identical greedy decode.
+#[test]
+fn preemption_under_page_pressure_keeps_outputs_bit_identical() {
+    let model = fixture_target(3);
+    let block_bytes = 4 * model.cfg.kv_bytes_per_token();
+    // the longest request peaks at 5 pages (fits alone, so the overcommit
+    // valve never fires), but two concurrent longs need 10 — preemption
+    // territory
+    let budget = 6 * block_bytes;
+    let reqs = || mixed_reqs(5, 12);
+    let flat = flat_greedy(reqs(), &model, &ServeCfg::continuous(4));
+    let paged = ServingEngine::serve_paged(
+        reqs(),
+        &model,
+        None,
+        &ServeCfg::continuous(4).with_budget(budget).with_block_tokens(4),
+        0,
+    )
+    .unwrap();
+    assert_terminal_outcomes(&paged, 5, budget);
+    assert_eq!(paged.goodput(), 5, "preemption must never strand a request");
+    assert_outputs_match(&flat, &paged, "preempted paged vs unbudgeted contiguous");
+}
+
+/// Seeded chaos (step errors + poisoned logits) on the paged path: every
+/// request still reaches exactly one terminal outcome, and every request
+/// that completes decodes bit-identically to fault-free sequential —
+/// containment plus paged restart never corrupt a decode.
+#[test]
+fn chaos_on_the_paged_path_contains_faults_without_corrupting_outputs() {
+    let model = fixture_target(5);
+    let n = 8;
+    let reqs = || mixed_reqs(n, 10);
+    let sequential =
+        ServingEngine::serve::<Transformer, _>(reqs(), &model, None, 0).unwrap();
+
+    let block_bytes = 4 * model.cfg.kv_bytes_per_token();
+    let plan = FaultPlan::default().seeded(31).with_step_errors(0.05).with_nan(0.03);
+    for &w in &[1usize, 2] {
+        let cfg = ServeCfg::continuous(4)
+            .with_workers(w)
+            .with_budget(w * 6 * block_bytes)
+            .with_block_tokens(4)
+            .with_retries(8)
+            .with_backoff(0.25)
+            .with_faults(plan.clone());
+        let r = ServingEngine::serve_paged(reqs(), &model, None, &cfg, 0).unwrap();
+        assert_terminal_outcomes(&r, n, 0);
+        for c in r.completed.iter().filter(|c| c.is_completed()) {
+            let s = sequential.completed.iter().find(|s| s.id == c.id).unwrap();
+            assert_eq!(
+                c.output, s.output,
+                "workers={w}: request {} drifted from sequential under chaos",
+                c.id
+            );
+        }
+    }
+}

@@ -11,6 +11,7 @@
 //! repo, so switching back to the crates.io crate is a Cargo.toml-only
 //! change.
 
+use std::any::Any;
 use std::fmt;
 
 /// A context-chained error value. Like `anyhow::Error`, this type does
@@ -20,26 +21,54 @@ use std::fmt;
 pub struct Error {
     msg: String,
     source: Option<Box<Error>>,
+    /// the original typed error, kept so `downcast_ref` works through
+    /// `?` conversions and `.context(..)` wrapping like real `anyhow`
+    payload: Option<Box<dyn Any + Send + Sync>>,
 }
 
 /// `anyhow::Result<T>` — `Result` with a defaulted error type.
 pub type Result<T, E = Error> = std::result::Result<T, E>;
 
 impl Error {
+    /// Construct an error from a typed `std::error::Error`, keeping the
+    /// value itself recoverable through [`Error::downcast_ref`].
+    pub fn new<E>(e: E) -> Self
+    where
+        E: std::error::Error + Send + Sync + 'static,
+    {
+        let msg = e.to_string();
+        let source = e.source().map(|s| Box::new(Error::from_std(s)));
+        Error { msg, source, payload: Some(Box::new(e)) }
+    }
+
     /// Construct an error from a displayable message.
     pub fn msg<M: fmt::Display>(message: M) -> Self {
-        Error { msg: message.to_string(), source: None }
+        Error { msg: message.to_string(), source: None, payload: None }
     }
 
     /// Wrap this error with an outer context message.
     pub fn context<C: fmt::Display>(self, context: C) -> Self {
-        Error { msg: context.to_string(), source: Some(Box::new(self)) }
+        Error { msg: context.to_string(), source: Some(Box::new(self)), payload: None }
+    }
+
+    /// The typed error this chain was built from, if any node still
+    /// carries one of type `E` (outermost match wins, like `anyhow`).
+    pub fn downcast_ref<E: 'static>(&self) -> Option<&E> {
+        let mut cur = Some(self);
+        while let Some(e) = cur {
+            if let Some(p) = e.payload.as_deref().and_then(|p| p.downcast_ref::<E>()) {
+                return Some(p);
+            }
+            cur = e.source.as_deref();
+        }
+        None
     }
 
     fn from_std(e: &(dyn std::error::Error + 'static)) -> Self {
         Error {
             msg: e.to_string(),
             source: e.source().map(|s| Box::new(Error::from_std(s))),
+            payload: None,
         }
     }
 
@@ -109,7 +138,7 @@ where
     E: std::error::Error + Send + Sync + 'static,
 {
     fn from(e: E) -> Self {
-        Error::from_std(&e)
+        Error::new(e)
     }
 }
 
@@ -266,6 +295,22 @@ mod tests {
         assert_eq!(b(11).unwrap_err().to_string(), "x too big: 11");
         assert!(b(3).unwrap_err().to_string().contains("condition failed"));
         assert_eq!(b(5).unwrap_err().to_string(), "five is right out");
+    }
+
+    #[test]
+    fn downcast_ref_recovers_typed_errors_through_context() {
+        let e = Error::new(Leaf);
+        assert!(e.downcast_ref::<Leaf>().is_some());
+        // `?` conversion keeps the payload
+        fn inner() -> Result<()> {
+            Err(Leaf)?;
+            Ok(())
+        }
+        let e = inner().unwrap_err().context("while loading");
+        assert!(e.downcast_ref::<Leaf>().is_some(), "payload survives context");
+        assert!(e.downcast_ref::<std::io::Error>().is_none());
+        // message-only errors carry no payload
+        assert!(Error::msg("plain").downcast_ref::<Leaf>().is_none());
     }
 
     #[test]
