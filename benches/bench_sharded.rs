@@ -3,12 +3,19 @@
 //! hermetic fixture model — no artifacts required, so it runs on a clean
 //! checkout and in CI smoke mode.
 //!
-//! Throughput is reported on the **virtual clock** (`virtual_tps`: total
-//! tokens over the schedule makespan). The pool executes workers' decode
-//! rounds one at a time and models them as parallel replicas on the
-//! shared virtual timeline — the same time model TTFT uses — so the
-//! virtual number is the one that scales with `workers`, while real wall
-//! time (`tps`) measures the simulation itself and stays flat.
+//! Throughput is reported twice:
+//!
+//! - **virtual clock** (`virtual_tps`: total tokens over the schedule
+//!   makespan) from the single-thread twin — the pool executes workers'
+//!   decode rounds one at a time and models them as parallel replicas on
+//!   the shared virtual timeline, so this number scales with `workers`
+//!   on any machine;
+//! - **wall clock** (`tps`: total tokens over real elapsed seconds) from
+//!   the OS-thread pool (`serve.threads`) at 1/2/4 threads — the number
+//!   that only real cores can move. The ≥1.5x scaling gate at 4 threads
+//!   is asserted only when the machine has ≥4 cores (median-of-N with
+//!   bounded retries); on smaller machines the numbers are still
+//!   reported and the outputs still checked against the twin.
 //!
 //! Prints a human table plus one machine-readable JSON line (prefix
 //! `BENCH_JSON `) so the perf trajectory gains a sharded-throughput
@@ -18,13 +25,16 @@
 //!     cargo bench --bench bench_sharded -- --quick # CI smoke mode
 //!
 //! Expected shape: per-request outputs bit-identical across worker
-//! counts; ≥ 1.5x virtual tokens/sec at 4 workers vs 1 (asserted);
-//! p50/p99 TTFT no worse as workers grow.
+//! counts AND across virtual/threaded modes; ≥ 1.5x virtual tokens/sec
+//! at 4 workers vs 1 (asserted); ≥ 1.5x wall tokens/sec at 4 threads
+//! (asserted on ≥4-core machines); p50/p99 TTFT no worse as workers
+//! grow.
 
 use angelslim::data::RequestGen;
 use angelslim::models::Transformer;
 use angelslim::server::{ServeCfg, ServeReport, ServingEngine};
 use angelslim::util::fixtures::{fixture_corpus, fixture_target, FixtureSpec};
+use angelslim::util::median_of;
 use angelslim::util::table::{f2, Table};
 use angelslim::util::testing::{assert_outputs_match, assert_serving_contracts, retry_timing};
 
@@ -42,16 +52,45 @@ fn trace(corpus: &[u8], bursts: usize, per_burst: usize) -> Vec<angelslim::data:
     gen.take_bursty(bursts, per_burst, 0.05, SHORT_NEW, LONG_NEW)
 }
 
-fn run(corpus: &[u8], bursts: usize, per_burst: usize, workers: usize) -> ServeReport {
+fn run(
+    corpus: &[u8],
+    bursts: usize,
+    per_burst: usize,
+    workers: usize,
+    threads: bool,
+) -> ServeReport {
     let model = fixture_target(3);
     ServingEngine::serve_scheduled::<Transformer, _>(
         trace(corpus, bursts, per_burst),
         &model,
         None,
-        &ServeCfg::continuous(MAX_IN_FLIGHT).with_workers(workers),
+        &ServeCfg::continuous(MAX_IN_FLIGHT)
+            .with_workers(workers)
+            .with_threads(threads),
         0,
     )
     .expect("sharded serve")
+}
+
+/// Wall-clock tokens/sec of the OS-thread pool at each worker count:
+/// median-of-3 runs per count (one noisy draw on a loaded machine must
+/// not decide the scaling gate), keeping the last report for the
+/// output-identity checks.
+fn measure_wall(corpus: &[u8], bursts: usize, per_burst: usize) -> (Vec<f64>, Vec<ServeReport>) {
+    let mut tps = Vec::new();
+    let mut reports = Vec::new();
+    for &w in &WORKER_COUNTS {
+        let mut last = None;
+        let t = median_of(3, || {
+            let r = run(corpus, bursts, per_burst, w, true);
+            let t = r.tps();
+            last = Some(r);
+            t
+        });
+        tps.push(t);
+        reports.push(last.expect("median_of runs the closure at least once"));
+    }
+    (tps, reports)
 }
 
 fn main() {
@@ -66,7 +105,7 @@ fn main() {
     let reports: Vec<ServeReport> = retry_timing(5, || {
         let reports: Vec<ServeReport> = WORKER_COUNTS
             .iter()
-            .map(|&w| run(&corpus, bursts, per_burst, w))
+            .map(|&w| run(&corpus, bursts, per_burst, w, false))
             .collect();
         for (r, &w) in reports.iter().zip(&WORKER_COUNTS) {
             assert_serving_contracts(r, n, 0);
@@ -85,22 +124,63 @@ fn main() {
     });
     let speedup = reports[2].virtual_tps() / reports[0].virtual_tps().max(1e-12);
 
+    // ── wall-clock section: the same pool on real OS threads ─────────
+    let cores = std::thread::available_parallelism()
+        .map(|p| p.get())
+        .unwrap_or(1);
+    let gate_wall = cores >= 4;
+    let (wall_tps, wall_reports) = if gate_wall {
+        retry_timing(5, || {
+            let (tps, reps) = measure_wall(&corpus, bursts, per_burst);
+            let s = tps[2] / tps[0].max(1e-12);
+            if s >= MIN_SPEEDUP_W4 {
+                Ok((tps, reps))
+            } else {
+                Err(format!(
+                    "4 OS threads must deliver >= {MIN_SPEEDUP_W4}x wall-clock \
+                     tokens/sec over 1 on a >=4-core machine (got {s:.2}x on \
+                     {cores} cores)"
+                ))
+            }
+        })
+    } else {
+        eprintln!(
+            "SKIP: wall-clock scaling gate needs >= 4 cores, machine has {cores}; \
+             reporting threaded numbers without asserting the speedup"
+        );
+        measure_wall(&corpus, bursts, per_burst)
+    };
+    // correctness is never hardware-gated: threaded outputs and terminal
+    // outcomes must match the virtual-clock twin on any machine
+    for (r, &w) in wall_reports.iter().zip(&WORKER_COUNTS) {
+        assert_serving_contracts(r, n, 0);
+        assert_eq!(r.workers(), w);
+        assert_outputs_match(
+            &reports[0],
+            r,
+            &format!("threads={w} vs single-thread twin"),
+        );
+    }
+    let wall_speedup = wall_tps[2] / wall_tps[0].max(1e-12);
+
     let mut table = Table::new(
         "sharded serving: work-stealing pool (fixture model, bursty trace)",
         &[
             "workers",
             "tok/s (virtual)",
+            "tok/s (wall, threaded)",
             "TTFT mean ms",
             "TTFT p50 ms",
             "TTFT p99 ms",
             "makespan ms",
         ],
     );
-    for (r, &w) in reports.iter().zip(&WORKER_COUNTS) {
+    for (i, (r, &w)) in reports.iter().zip(&WORKER_COUNTS).enumerate() {
         let ttft = r.ttft_summary();
         table.row_strs(&[
             &w.to_string(),
             &f2(r.virtual_tps()),
+            &f2(wall_tps[i]),
             &f2(ttft.mean),
             &f2(ttft.p50),
             &f2(ttft.p99),
@@ -129,14 +209,22 @@ fn main() {
         "BENCH_JSON {{\"bench\":\"sharded_serve\",\"n_requests\":{n},\
          \"max_in_flight\":{MAX_IN_FLIGHT},\
          \"w1\":{{{}}},\"w2\":{{{}}},\"w4\":{{{}}},\
-         \"speedup_w4_vs_w1\":{speedup:.3},\"quick\":{quick}}}",
+         \"speedup_w4_vs_w1\":{speedup:.3},\
+         \"wall\":{{\"t1_tps\":{:.2},\"t2_tps\":{:.2},\"t4_tps\":{:.2},\
+         \"speedup_t4_vs_t1\":{wall_speedup:.3},\"cores\":{cores},\
+         \"gated\":{gate_wall}}},\"quick\":{quick}}}",
         j(&reports[0]),
         j(&reports[1]),
         j(&reports[2]),
+        wall_tps[0],
+        wall_tps[1],
+        wall_tps[2],
     );
     println!(
-        "shape: outputs bit-identical across 1/2/4 workers; virtual tokens/sec \
-         scales with workers (>= {MIN_SPEEDUP_W4}x at 4); TTFT percentiles shrink \
-         as the shared queue drains in parallel."
+        "shape: outputs bit-identical across 1/2/4 workers and across \
+         virtual/threaded modes; virtual tokens/sec scales with workers \
+         (>= {MIN_SPEEDUP_W4}x at 4); wall tokens/sec scales with OS threads \
+         (>= {MIN_SPEEDUP_W4}x at 4 on >= 4-core machines); TTFT percentiles \
+         shrink as the shared queue drains in parallel."
     );
 }

@@ -25,7 +25,7 @@ fn main() -> anyhow::Result<()> {
 
     println!("serving {n_requests} requests, vanilla decoding...");
     let vanilla = ServingEngine::serve::<
-        std::rc::Rc<angelslim::runtime::ModelExecutable>,
+        std::sync::Arc<angelslim::runtime::ModelExecutable>,
         _,
     >(make_requests(), &target, None, 0)?;
 

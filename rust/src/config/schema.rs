@@ -335,6 +335,13 @@ impl SlimConfig {
                 self.serve.retry_backoff_ms
             );
         }
+        if !self.serve.max_backoff_ms.is_finite() || self.serve.max_backoff_ms < 0.0 {
+            bail!(
+                "serve.max_backoff_ms must be a finite number >= 0, got {}; \
+                 the cap keeps exponential retry backoff admissible",
+                self.serve.max_backoff_ms
+            );
+        }
         if let Some(plan) = &self.serve.fault {
             plan.validate(self.serve.workers)
                 .context("serve.fault: invalid fault plan")?;
@@ -350,7 +357,7 @@ impl SlimConfig {
 fn serve_from_yaml(serve: &Yaml) -> Result<ServeCfg> {
     let fault = fault_from_yaml(serve)?;
     if fault.is_none() {
-        for knob in ["max_retries", "retry_backoff_ms"] {
+        for knob in ["max_retries", "retry_backoff_ms", "max_backoff_ms"] {
             if serve.get(knob).is_some() {
                 bail!(
                     "serve.{knob} is set but there is no `serve.fault:` block; \
@@ -381,6 +388,12 @@ fn serve_from_yaml(serve: &Yaml) -> Result<ServeCfg> {
             Some(n as usize)
         }
     };
+    let threads = match serve.get("threads") {
+        None => false,
+        Some(v) => v
+            .as_bool()
+            .with_context(|| format!("serve: threads must be a boolean, got `{v}`"))?,
+    };
     Ok(ServeCfg {
         policy: AdmissionPolicy::parse(&serve.str_or("policy", "continuous"))?,
         max_in_flight: non_negative(serve.i64_or("max_in_flight", 8), "serve.max_in_flight")?,
@@ -390,12 +403,14 @@ fn serve_from_yaml(serve: &Yaml) -> Result<ServeCfg> {
         )?,
         workers: non_negative(serve.i64_or("workers", 1), "serve.workers")?,
         kv_block_tokens,
+        threads,
         deadline_ms,
         max_retries: match stage_i64(serve, "max_retries", "serve")? {
             Some(v) => non_negative(v, "serve.max_retries")?,
             None => 0,
         },
         retry_backoff_ms: stage_f64(serve, "retry_backoff_ms", "serve")?.unwrap_or(1.0),
+        max_backoff_ms: stage_f64(serve, "max_backoff_ms", "serve")?.unwrap_or(60_000.0),
         fault,
     })
 }

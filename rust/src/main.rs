@@ -137,7 +137,7 @@ fn cmd_serve(spec: bool, n: usize) -> Result<()> {
         let draft = reg.model("model_draft_fp32_b1")?;
         ServingEngine::serve(requests, &target, Some((&draft, 3)), 0)?
     } else {
-        ServingEngine::serve::<std::rc::Rc<angelslim::runtime::ModelExecutable>, _>(
+        ServingEngine::serve::<std::sync::Arc<angelslim::runtime::ModelExecutable>, _>(
             requests, &target, None, 0,
         )?
     };
@@ -161,7 +161,8 @@ fn cmd_serve_config(path: &str, n: usize) -> Result<()> {
     gen.max_new_tokens = 24;
     let requests = gen.take(n);
     println!(
-        "serving {n} requests | policy={} workers={} max_in_flight={} kv_budget_bytes={}{}",
+        "serving {n} requests | policy={} workers={} max_in_flight={} kv_budget_bytes={}{} \
+         mode={}",
         serve_cfg.policy.name(),
         serve_cfg.workers,
         serve_cfg.max_in_flight,
@@ -169,6 +170,11 @@ fn cmd_serve_config(path: &str, n: usize) -> Result<()> {
         match serve_cfg.kv_block_tokens {
             Some(bt) => format!(" kv_block_tokens={bt}"),
             None => String::new(),
+        },
+        if serve_cfg.threads {
+            "os-threads"
+        } else {
+            "virtual-clock"
         }
     );
     let gamma = cfg.compression.num_speculative_tokens.max(1);

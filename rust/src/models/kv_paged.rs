@@ -17,10 +17,9 @@
 //! would have written — which is what makes the paged serving path
 //! bit-exact against the contiguous [`super::KvCache`] twin.
 
-use std::cell::RefCell;
 use std::collections::{HashMap, VecDeque};
 use std::fmt;
-use std::rc::Rc;
+use std::sync::{Arc, Mutex};
 
 /// Error returned when a bounded pool cannot supply the blocks an append
 /// needs. The serving executors turn this into preemption (evict the
@@ -410,7 +409,7 @@ impl BlockPool {
 /// extras: `attach_prefix`/`seal_prefix` for sharing, `prepare_append`
 /// for fallible page allocation, `truncate` that returns whole pages.
 pub struct PagedKvCache {
-    pool: Rc<RefCell<BlockPool>>,
+    pool: Arc<Mutex<BlockPool>>,
     table: Vec<usize>,
     len: usize,
     /// Positions `0..materialized` are held by attached shared pages;
@@ -422,7 +421,7 @@ pub struct PagedKvCache {
 }
 
 impl PagedKvCache {
-    pub fn new(pool: Rc<RefCell<BlockPool>>) -> Self {
+    pub fn new(pool: Arc<Mutex<BlockPool>>) -> Self {
         PagedKvCache { pool, table: Vec::new(), len: 0, materialized: 0, overcommit: false }
     }
 
@@ -436,7 +435,7 @@ impl PagedKvCache {
     }
 
     /// Shared handle to the backing pool (attention reads borrow it).
-    pub fn pool(&self) -> &Rc<RefCell<BlockPool>> {
+    pub fn pool(&self) -> &Arc<Mutex<BlockPool>> {
         &self.pool
     }
 
@@ -451,15 +450,15 @@ impl PagedKvCache {
     }
 
     pub fn n_layers(&self) -> usize {
-        self.pool.borrow().n_layers
+        self.pool.lock().unwrap().n_layers
     }
 
     pub fn d_model(&self) -> usize {
-        self.pool.borrow().d_model
+        self.pool.lock().unwrap().d_model
     }
 
     pub fn block_tokens(&self) -> usize {
-        self.pool.borrow().block_tokens
+        self.pool.lock().unwrap().block_tokens
     }
 
     /// Enable/disable the past-cap allocation valve.
@@ -475,7 +474,7 @@ impl PagedKvCache {
         if self.len != 0 || !self.table.is_empty() {
             return 0;
         }
-        let mut pool = self.pool.borrow_mut();
+        let mut pool = self.pool.lock().unwrap();
         let bt = pool.block_tokens;
         let mut parent_hash = ROOT_HASH;
         let mut parent_block: Option<usize> = None;
@@ -500,7 +499,7 @@ impl PagedKvCache {
     /// Seal every full block covered by `tokens` (and resident rows) so
     /// later sessions with the same prefix can attach it. Idempotent.
     pub fn seal_prefix(&mut self, tokens: &[u8]) {
-        let mut pool = self.pool.borrow_mut();
+        let mut pool = self.pool.lock().unwrap();
         let bt = pool.block_tokens;
         let full = (tokens.len().min(self.len)) / bt;
         let mut parent_hash = ROOT_HASH;
@@ -522,7 +521,7 @@ impl PagedKvCache {
         if t_new == 0 {
             return Ok(());
         }
-        let mut pool = self.pool.borrow_mut();
+        let mut pool = self.pool.lock().unwrap();
         let bt = pool.block_tokens;
         let write_from = self.len.max(self.materialized);
         let target_blocks = (self.len + t_new).div_ceil(bt);
@@ -577,7 +576,7 @@ impl PagedKvCache {
     /// rows` into their pages, skipping rows the attached prefix already
     /// materializes. Requires a successful [`Self::prepare_append`].
     pub fn append_layer(&mut self, li: usize, k_rows: &[f32], v_rows: &[f32]) {
-        let mut pool = self.pool.borrow_mut();
+        let mut pool = self.pool.lock().unwrap();
         let d = pool.d_model;
         let bt = pool.block_tokens;
         debug_assert_eq!(k_rows.len(), v_rows.len());
@@ -598,7 +597,7 @@ impl PagedKvCache {
     /// Commit `t_new` appended positions (mirrors `KvCache::advance`).
     pub fn advance(&mut self, t_new: usize) {
         self.len += t_new;
-        debug_assert!(self.table.len() * self.pool.borrow().block_tokens >= self.len);
+        debug_assert!(self.table.len() * self.pool.lock().unwrap().block_tokens >= self.len);
     }
 
     /// Keep the first `keep` positions, releasing every no-longer-needed
@@ -608,7 +607,7 @@ impl PagedKvCache {
         if keep >= self.len {
             return;
         }
-        let mut pool = self.pool.borrow_mut();
+        let mut pool = self.pool.lock().unwrap();
         let keep_blocks = keep.div_ceil(pool.block_tokens);
         while self.table.len() > keep_blocks {
             let b = self.table.pop().expect("table len checked");
@@ -622,7 +621,7 @@ impl PagedKvCache {
 
     /// Release everything.
     pub fn clear(&mut self) {
-        let mut pool = self.pool.borrow_mut();
+        let mut pool = self.pool.lock().unwrap();
         for b in self.table.drain(..) {
             pool.unref(b);
         }
@@ -634,15 +633,16 @@ impl PagedKvCache {
     /// contiguous cache); the pool's `allocated_bytes` is the honest
     /// page-granular footprint.
     pub fn bytes(&self) -> usize {
-        let p = self.pool.borrow();
+        let p = self.pool.lock().unwrap();
         self.len * p.n_layers * 2 * p.d_model * std::mem::size_of::<f32>()
     }
 }
 
 impl Drop for PagedKvCache {
     fn drop(&mut self) {
-        // try_borrow_mut: a panic mid-borrow must not double-panic here
-        if let Ok(mut pool) = self.pool.try_borrow_mut() {
+        // a peer thread panicking with the lock held poisons it; a drop
+        // during unwind must not double-panic, so skip cleanup on poison
+        if let Ok(mut pool) = self.pool.lock() {
             for b in self.table.drain(..) {
                 pool.unref(b);
             }
@@ -654,10 +654,10 @@ impl Drop for PagedKvCache {
 mod tests {
     use super::*;
 
-    fn pool(max_blocks: usize) -> Rc<RefCell<BlockPool>> {
+    fn pool(max_blocks: usize) -> Arc<Mutex<BlockPool>> {
         let mut p = BlockPool::new(2, 4, 4);
         p.max_blocks = max_blocks;
-        Rc::new(RefCell::new(p))
+        Arc::new(Mutex::new(p))
     }
 
     /// Fill positions `from..to` of every layer with rows of `base + pos`.
@@ -681,11 +681,11 @@ mod tests {
     fn alloc_free_roundtrip_reuses_pages() {
         let p = pool(0);
         let (a, b) = {
-            let mut p = p.borrow_mut();
+            let mut p = p.lock().unwrap();
             (p.alloc(false).unwrap(), p.alloc(false).unwrap())
         };
         assert_ne!(a, b);
-        let mut pm = p.borrow_mut();
+        let mut pm = p.lock().unwrap();
         pm.unref(b);
         pm.unref(a);
         assert_eq!(pm.in_use_blocks(), 0);
@@ -699,7 +699,7 @@ mod tests {
     #[test]
     fn bounded_pool_exhausts_then_force_grows() {
         let p = pool(2);
-        let mut pm = p.borrow_mut();
+        let mut pm = p.lock().unwrap();
         let _a = pm.alloc(false).unwrap();
         let _b = pm.alloc(false).unwrap();
         let err = pm.alloc(false).unwrap_err();
@@ -717,32 +717,32 @@ mod tests {
     fn seal_attach_shares_pages_and_refcounts() {
         let p = pool(0);
         let toks: Vec<u8> = (0..8).collect();
-        let mut a = PagedKvCache::new(Rc::clone(&p));
+        let mut a = PagedKvCache::new(Arc::clone(&p));
         assert_eq!(a.attach_prefix(&toks), 0);
         append_rows(&mut a, 0, 8, 100.0);
         a.seal_prefix(&toks);
-        assert_eq!(p.borrow().sealed_blocks(), 2);
+        assert_eq!(p.lock().unwrap().sealed_blocks(), 2);
 
-        let mut b = PagedKvCache::new(Rc::clone(&p));
+        let mut b = PagedKvCache::new(Arc::clone(&p));
         assert_eq!(b.attach_prefix(&toks), 8);
         assert_eq!(b.table(), a.table());
         {
-            let pm = p.borrow();
+            let pm = p.lock().unwrap();
             assert_eq!(pm.refcount(a.table()[0]), 2);
             assert_eq!(pm.total_blocks(), 2, "no new pages for the shared prefix");
         }
         // b's shared rows read back a's bytes
-        assert_eq!(p.borrow().k_row(b.table()[1], 0, 3)[0], 107.0);
+        assert_eq!(p.lock().unwrap().k_row(b.table()[1], 0, 3)[0], 107.0);
 
         // divergent prefix attaches only the common chunk
         let mut other = toks.clone();
         other[6] = 99;
-        let mut c = PagedKvCache::new(Rc::clone(&p));
+        let mut c = PagedKvCache::new(Arc::clone(&p));
         assert_eq!(c.attach_prefix(&other), 4);
         drop(c);
         drop(b);
         drop(a);
-        let pm = p.borrow();
+        let pm = p.lock().unwrap();
         assert_eq!(pm.in_use_blocks(), 0);
         assert_eq!(pm.cached_blocks(), 2, "sealed pages stay cached after release");
         pm.check_invariants();
@@ -752,11 +752,11 @@ mod tests {
     fn cow_fork_preserves_shared_bytes() {
         let p = pool(0);
         let toks: Vec<u8> = (0..8).collect();
-        let mut a = PagedKvCache::new(Rc::clone(&p));
+        let mut a = PagedKvCache::new(Arc::clone(&p));
         append_rows(&mut a, 0, 8, 100.0);
         a.seal_prefix(&toks);
 
-        let mut b = PagedKvCache::new(Rc::clone(&p));
+        let mut b = PagedKvCache::new(Arc::clone(&p));
         b.attach_prefix(&toks);
         // roll b back mid-page and append divergent rows: the sealed,
         // shared page must fork, leaving a's copy untouched
@@ -765,7 +765,7 @@ mod tests {
         let shared = b.table()[1];
         append_rows(&mut b, 6, 8, 500.0);
         assert_ne!(b.table()[1], shared, "write into a shared page must fork");
-        let pm = p.borrow();
+        let pm = p.lock().unwrap();
         // a's original page: untouched
         assert_eq!(pm.k_row(shared, 0, 2)[0], 106.0);
         assert_eq!(pm.k_row(shared, 1, 3)[0], 107.0);
@@ -781,16 +781,16 @@ mod tests {
     fn private_sealed_page_unseals_in_place_on_rollback_write() {
         let p = pool(0);
         let toks: Vec<u8> = (0..8).collect();
-        let mut a = PagedKvCache::new(Rc::clone(&p));
+        let mut a = PagedKvCache::new(Arc::clone(&p));
         append_rows(&mut a, 0, 8, 100.0);
         a.seal_prefix(&toks);
-        assert_eq!(p.borrow().sealed_blocks(), 2);
+        assert_eq!(p.lock().unwrap().sealed_blocks(), 2);
         // nobody shares the page, so rollback + rewrite reuses it
         a.truncate(6);
         let page = a.table()[1];
         append_rows(&mut a, 6, 8, 500.0);
         assert_eq!(a.table()[1], page, "rc==1 sealed page is unsealed in place");
-        let pm = p.borrow();
+        let pm = p.lock().unwrap();
         assert!(!pm.is_sealed(page));
         assert_eq!(pm.sealed_blocks(), 1);
         assert_eq!(pm.k_row(page, 0, 2)[0], 506.0);
@@ -800,56 +800,56 @@ mod tests {
     #[test]
     fn truncate_returns_whole_pages_immediately() {
         let p = pool(4);
-        let mut a = PagedKvCache::new(Rc::clone(&p));
+        let mut a = PagedKvCache::new(Arc::clone(&p));
         append_rows(&mut a, 0, 16, 0.0);
-        assert_eq!(p.borrow().in_use_blocks(), 4);
-        assert_eq!(p.borrow().free_blocks(), 0);
+        assert_eq!(p.lock().unwrap().in_use_blocks(), 4);
+        assert_eq!(p.lock().unwrap().free_blocks(), 0);
         a.truncate(5);
         {
-            let pm = p.borrow();
+            let pm = p.lock().unwrap();
             assert_eq!(pm.in_use_blocks(), 2);
             assert_eq!(pm.free_blocks(), 2, "released pages are reusable at once");
         }
         // rollback to a page boundary keeps exactly ceil(keep/bt) pages
         a.truncate(4);
-        assert_eq!(p.borrow().in_use_blocks(), 1);
+        assert_eq!(p.lock().unwrap().in_use_blocks(), 1);
         append_rows(&mut a, 4, 12, 9.0);
-        assert_eq!(p.borrow().in_use_blocks(), 3);
-        p.borrow().check_invariants();
+        assert_eq!(p.lock().unwrap().in_use_blocks(), 3);
+        p.lock().unwrap().check_invariants();
     }
 
     #[test]
     fn prepare_append_failure_is_atomic() {
         let p = pool(2);
-        let mut a = PagedKvCache::new(Rc::clone(&p));
+        let mut a = PagedKvCache::new(Arc::clone(&p));
         append_rows(&mut a, 0, 8, 0.0); // both pages in use
-        let mut b = PagedKvCache::new(Rc::clone(&p));
+        let mut b = PagedKvCache::new(Arc::clone(&p));
         let err = b.prepare_append(5).unwrap_err();
         assert_eq!(err.needed_blocks, 2);
         assert_eq!(err.free_blocks, 0);
         assert_eq!(b.table().len(), 0, "failed prepare must not leak pages");
-        assert_eq!(p.borrow().in_use_blocks(), 2);
+        assert_eq!(p.lock().unwrap().in_use_blocks(), 2);
         // freeing the victim makes the same prepare succeed
         a.clear();
         b.prepare_append(5).unwrap();
         assert_eq!(b.table().len(), 2);
-        p.borrow().check_invariants();
+        p.lock().unwrap().check_invariants();
     }
 
     #[test]
     fn pressure_reclaims_cached_prefix_pages() {
         let p = pool(2);
         let toks: Vec<u8> = (0..8).collect();
-        let mut a = PagedKvCache::new(Rc::clone(&p));
+        let mut a = PagedKvCache::new(Arc::clone(&p));
         append_rows(&mut a, 0, 8, 1.0);
         a.seal_prefix(&toks);
         drop(a); // both pages now cached (sealed, rc 0)
-        assert_eq!(p.borrow().cached_blocks(), 2);
-        assert_eq!(p.borrow().free_blocks(), 2);
+        assert_eq!(p.lock().unwrap().cached_blocks(), 2);
+        assert_eq!(p.lock().unwrap().free_blocks(), 2);
         // a new unrelated session must be able to take those pages
-        let mut b = PagedKvCache::new(Rc::clone(&p));
+        let mut b = PagedKvCache::new(Arc::clone(&p));
         append_rows(&mut b, 0, 8, 7.0);
-        let pm = p.borrow();
+        let pm = p.lock().unwrap();
         assert_eq!(pm.total_blocks(), 2, "reclaimed, not grown");
         assert_eq!(pm.cached_blocks(), 0);
         assert_eq!(pm.sealed_blocks(), 0, "reclaimed pages lost their seal");
@@ -860,16 +860,16 @@ mod tests {
     fn attach_revives_cached_pages_before_reclaim() {
         let p = pool(2);
         let toks: Vec<u8> = (0..8).collect();
-        let mut a = PagedKvCache::new(Rc::clone(&p));
+        let mut a = PagedKvCache::new(Arc::clone(&p));
         append_rows(&mut a, 0, 8, 1.0);
         a.seal_prefix(&toks);
         drop(a);
-        let mut b = PagedKvCache::new(Rc::clone(&p));
+        let mut b = PagedKvCache::new(Arc::clone(&p));
         assert_eq!(b.attach_prefix(&toks), 8, "cached pages still attachable");
-        assert_eq!(p.borrow().cached_blocks(), 0);
-        assert_eq!(p.borrow().in_use_blocks(), 2);
+        assert_eq!(p.lock().unwrap().cached_blocks(), 0);
+        assert_eq!(p.lock().unwrap().in_use_blocks(), 2);
         b.clear();
-        p.borrow().check_invariants();
+        p.lock().unwrap().check_invariants();
     }
 
     #[test]
@@ -900,7 +900,7 @@ mod tests {
             match rnd(4) {
                 0 => {
                     let toks = prompts[rnd(prompts.len())].clone();
-                    let mut c = PagedKvCache::new(Rc::clone(&p));
+                    let mut c = PagedKvCache::new(Arc::clone(&p));
                     let got = c.attach_prefix(&toks);
                     let need = toks.len() - got;
                     if c.prepare_append(need).is_ok() {
@@ -936,10 +936,10 @@ mod tests {
                 }
                 _ => {}
             }
-            p.borrow().check_invariants();
+            p.lock().unwrap().check_invariants();
         }
         live.clear();
-        let pm = p.borrow();
+        let pm = p.lock().unwrap();
         assert_eq!(pm.in_use_blocks(), 0, "all refs returned");
         pm.check_invariants();
     }

@@ -13,7 +13,9 @@ pub mod transformer;
 pub mod weights;
 
 pub use kv_cache::{KvCache, LayerKv};
-pub use kv_paged::{is_pool_exhausted, BlockPool, PagedKvCache, PoolExhausted};
+pub use kv_paged::{
+    is_pool_exhausted, BlockPool, PagedKvCache, PoolExhausted, POOL_EXHAUSTED_PREFIX,
+};
 pub use packed::PackedLinear;
 pub use sampler::Sampler;
 pub use transformer::{AttnOverride, Transformer, TransformerCfg};

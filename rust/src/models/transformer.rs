@@ -23,8 +23,7 @@ use crate::tensor::Tensor;
 use crate::util::Selector;
 use anyhow::{bail, Context, Result};
 
-use std::cell::RefCell;
-use std::rc::Rc;
+use std::sync::{Arc, Mutex};
 
 use super::kv_cache::KvCache;
 use super::kv_paged::{BlockPool, PagedKvCache};
@@ -500,8 +499,8 @@ impl Transformer {
     // ------------------------------------------------------------------
 
     /// Fresh unbounded [`BlockPool`] shaped for this model.
-    pub fn new_block_pool(&self, block_tokens: usize) -> Rc<RefCell<BlockPool>> {
-        Rc::new(RefCell::new(BlockPool::new(
+    pub fn new_block_pool(&self, block_tokens: usize) -> Arc<Mutex<BlockPool>> {
+        Arc::new(Mutex::new(BlockPool::new(
             self.cfg.n_layers,
             self.cfg.d_model,
             block_tokens,
@@ -513,8 +512,8 @@ impl Transformer {
         &self,
         block_tokens: usize,
         budget_bytes: usize,
-    ) -> Rc<RefCell<BlockPool>> {
-        Rc::new(RefCell::new(BlockPool::new_bounded(
+    ) -> Arc<Mutex<BlockPool>> {
+        Arc::new(Mutex::new(BlockPool::new_bounded(
             self.cfg.n_layers,
             self.cfg.d_model,
             block_tokens,
@@ -524,13 +523,13 @@ impl Transformer {
 
     /// Fresh empty paged session drawing pages from `pool` (which must
     /// match this model's shape).
-    pub fn new_paged_cache(&self, pool: &Rc<RefCell<BlockPool>>) -> PagedKvCache {
+    pub fn new_paged_cache(&self, pool: &Arc<Mutex<BlockPool>>) -> PagedKvCache {
         {
-            let p = pool.borrow();
+            let p = pool.lock().unwrap();
             assert_eq!(p.n_layers(), self.cfg.n_layers, "pool/model layer mismatch");
             assert_eq!(p.d_model(), self.cfg.d_model, "pool/model width mismatch");
         }
-        PagedKvCache::new(Rc::clone(pool))
+        PagedKvCache::new(Arc::clone(pool))
     }
 
     /// Causal attention over a paged cache's block table — the same
@@ -550,7 +549,7 @@ impl Transformer {
         let h = self.cfg.n_heads;
         let dh = d / h;
         let scale = 1.0 / (dh as f32).sqrt();
-        let pool = cache.pool().borrow();
+        let pool = cache.pool().lock().unwrap();
         let bt = pool.block_tokens();
         let table = cache.table();
         let mut ctx = Tensor::zeros(&[t_new, d]);
@@ -653,7 +652,7 @@ impl Transformer {
             let mut ctx = vec![0.0f32; d];
             let mut scores = vec![0.0f32; limit];
             {
-                let pool = cache.pool().borrow();
+                let pool = cache.pool().lock().unwrap();
                 let bt = pool.block_tokens();
                 let table = cache.table();
                 for head in 0..h {
@@ -917,14 +916,14 @@ mod tests {
         assert_eq!(a.attach_prefix(&prompt), 0);
         let ra = m.prefill_paged(&mut a, &prompt).unwrap();
         a.seal_prefix(&prompt);
-        let pages_after_one = pool.borrow().total_blocks();
+        let pages_after_one = pool.lock().unwrap().total_blocks();
         // second session attaches the sealed pages instead of allocating
         let mut b = m.new_paged_cache(&pool);
         assert_eq!(b.attach_prefix(&prompt), prompt.len());
         let rb = m.prefill_paged(&mut b, &prompt).unwrap();
         assert_eq!(ra.data, rb.data, "shared-prefix prefill drifted");
         assert_eq!(
-            pool.borrow().total_blocks(),
+            pool.lock().unwrap().total_blocks(),
             pages_after_one,
             "second session must not materialize new prompt pages"
         );

@@ -34,7 +34,7 @@ pub struct ArtifactRegistry {
     pub dir: String,
     pub seq_t: usize,
     pub vocab: usize,
-    cache: BTreeMap<String, std::rc::Rc<ModelExecutable>>,
+    cache: BTreeMap<String, std::sync::Arc<ModelExecutable>>,
 }
 
 impl ArtifactRegistry {
@@ -58,7 +58,7 @@ impl ArtifactRegistry {
     }
 
     /// Get (compiling + caching on first use) a model executable by name.
-    pub fn model(&mut self, name: &str) -> Result<std::rc::Rc<ModelExecutable>> {
+    pub fn model(&mut self, name: &str) -> Result<std::sync::Arc<ModelExecutable>> {
         if let Some(exe) = self.cache.get(name) {
             return Ok(exe.clone());
         }
@@ -76,7 +76,7 @@ impl ArtifactRegistry {
             self.vocab,
         )
         .with_context(|| format!("loading {name}"))?;
-        let rc = std::rc::Rc::new(exe);
+        let rc = std::sync::Arc::new(exe);
         self.cache.insert(name.to_string(), rc.clone());
         Ok(rc)
     }

@@ -29,8 +29,7 @@ use crate::models::{is_pool_exhausted, BlockPool, PagedKvCache, Sampler, Transfo
 use crate::spec_decode::{spec_verify_step, DecodeSession, LogitsModel, SessionModel};
 use crate::util::Rng;
 use anyhow::Result;
-use std::cell::RefCell;
-use std::rc::Rc;
+use std::sync::{Arc, Mutex};
 
 use super::scheduler::{StepEvent, StepExecutor, StepFault};
 
@@ -38,7 +37,7 @@ use super::scheduler::{StepEvent, StepExecutor, StepFault};
 /// the [`SessionModel`] whose sessions are [`PagedSession`]s.
 pub struct PagedModel<'a> {
     model: &'a Transformer,
-    pool: Rc<RefCell<BlockPool>>,
+    pool: Arc<Mutex<BlockPool>>,
 }
 
 impl<'a> PagedModel<'a> {
@@ -53,7 +52,7 @@ impl<'a> PagedModel<'a> {
         PagedModel { model, pool }
     }
 
-    pub fn pool(&self) -> &Rc<RefCell<BlockPool>> {
+    pub fn pool(&self) -> &Arc<Mutex<BlockPool>> {
         &self.pool
     }
 
@@ -207,7 +206,7 @@ impl<'a> PagedGreedyExecutor<'a> {
         }
     }
 
-    pub fn pool(&self) -> &Rc<RefCell<BlockPool>> {
+    pub fn pool(&self) -> &Arc<Mutex<BlockPool>> {
         self.model.pool()
     }
 
@@ -313,19 +312,19 @@ impl StepExecutor for PagedGreedyExecutor<'_> {
             .len()
             .saturating_add(req.max_new_tokens)
             .min(self.model.max_t());
-        let pool = self.model.pool.borrow();
+        let pool = self.model.pool.lock().unwrap();
         peak_t.div_ceil(pool.block_tokens()) * pool.block_bytes()
     }
 
     fn admission_bytes(&self, req: &TokenRequest) -> usize {
         // free-block admission: a request needs only its prompt's pages
         // to start; decode growth is claimed one page at a time
-        let pool = self.model.pool.borrow();
+        let pool = self.model.pool.lock().unwrap();
         req.prompt.len().div_ceil(pool.block_tokens()) * pool.block_bytes()
     }
 
     fn free_capacity_bytes(&self) -> Option<usize> {
-        let pool = self.model.pool.borrow();
+        let pool = self.model.pool.lock().unwrap();
         // pages that admitted-but-not-yet-prefilled slots are still owed
         let pending: usize = self
             .slots
@@ -405,7 +404,7 @@ impl StepExecutor for PagedGreedyExecutor<'_> {
 
     fn live_bytes(&self) -> usize {
         // honest page-granular residency: shared pages count once
-        self.model.pool.borrow().allocated_bytes()
+        self.model.pool.lock().unwrap().allocated_bytes()
     }
 }
 
@@ -469,7 +468,7 @@ impl<'a> PagedSpecExecutor<'a> {
     }
 
     fn combined_block_bytes(&self) -> usize {
-        self.draft.pool.borrow().block_bytes() + self.target.pool.borrow().block_bytes()
+        self.draft.pool.lock().unwrap().block_bytes() + self.target.pool.lock().unwrap().block_bytes()
     }
 
     /// One verify step for one slot, restartable after pool exhaustion:
@@ -556,19 +555,19 @@ impl StepExecutor for PagedSpecExecutor<'_> {
             .len()
             .saturating_add(req.max_new_tokens)
             .min(self.limit());
-        let bt = self.target.pool.borrow().block_tokens();
+        let bt = self.target.pool.lock().unwrap().block_tokens();
         peak_t.div_ceil(bt) * self.combined_block_bytes()
     }
 
     fn admission_bytes(&self, req: &TokenRequest) -> usize {
-        let bt = self.target.pool.borrow().block_tokens();
+        let bt = self.target.pool.lock().unwrap().block_tokens();
         req.prompt.len().div_ceil(bt) * self.combined_block_bytes()
     }
 
     fn free_capacity_bytes(&self) -> Option<usize> {
         // a slot needs matching pages in *both* pools, so capacity is the
         // scarcer pool's free pages, priced at the combined page cost
-        let bt = self.target.pool.borrow().block_tokens();
+        let bt = self.target.pool.lock().unwrap().block_tokens();
         let pending: usize = self
             .slots
             .iter()
@@ -578,9 +577,9 @@ impl StepExecutor for PagedSpecExecutor<'_> {
         let free = self
             .draft
             .pool
-            .borrow()
+            .lock().unwrap()
             .free_blocks()
-            .min(self.target.pool.borrow().free_blocks());
+            .min(self.target.pool.lock().unwrap().free_blocks());
         Some(
             free.saturating_sub(pending)
                 .saturating_mul(self.combined_block_bytes()),
@@ -663,8 +662,8 @@ impl StepExecutor for PagedSpecExecutor<'_> {
     }
 
     fn live_bytes(&self) -> usize {
-        self.draft.pool.borrow().allocated_bytes()
-            + self.target.pool.borrow().allocated_bytes()
+        self.draft.pool.lock().unwrap().allocated_bytes()
+            + self.target.pool.lock().unwrap().allocated_bytes()
     }
 }
 
@@ -779,7 +778,7 @@ mod tests {
         }
         let mut rng = Rng::new(0);
         exec.step_round(&mut rng, 0.0).unwrap();
-        let pool = exec.pool().borrow();
+        let pool = exec.pool().lock().unwrap();
         // 4 sessions × (2 prompt pages + 1 decode page), but the 2 prompt
         // pages are shared: 2 + 4 × 1 pages resident, not 12
         assert_eq!(pool.in_use_blocks(), 6, "prompt pages must be shared");

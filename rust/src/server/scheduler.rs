@@ -62,14 +62,15 @@
 //! [`FaultInjector`]: super::faults::FaultInjector
 
 use crate::data::TokenRequest;
-use crate::models::Sampler;
+use crate::models::{Sampler, POOL_EXHAUSTED_PREFIX};
 use crate::runtime::ModelExecutable;
 use crate::spec_decode::{spec_verify_step, DecodeSession, SessionModel};
 use crate::tensor::ops::argmax;
 use crate::util::Rng;
-use anyhow::{bail, Result};
-use std::collections::VecDeque;
-use std::time::Instant;
+use anyhow::{anyhow, bail, Result};
+use std::collections::{HashMap, VecDeque};
+use std::sync::{Condvar, Mutex};
+use std::time::{Duration, Instant};
 
 use super::engine::{CompletedRequest, RequestOutcome, ServeReport};
 use super::faults::{FaultInjector, FaultPlan, WorkerCrash};
@@ -146,6 +147,11 @@ pub struct ServeCfg {
     /// the k-th failed attempt re-queues the request no earlier than
     /// `failure time + retry_backoff_ms * 2^(k-1)`. Must be >= 0.
     pub retry_backoff_ms: f64,
+    /// Ceiling on the computed exponential backoff (ms). Without a cap,
+    /// high attempt counts push `ready_ms` astronomically far into the
+    /// virtual future and a retried request silently never re-admits.
+    /// Must be >= 0 and finite.
+    pub max_backoff_ms: f64,
     /// Deterministic fault-injection plan (chaos tests, resilience
     /// benches). `None` = no injection; the serve loop is byte-identical
     /// to the pre-fault-tolerance scheduler for fault-free runs.
@@ -154,6 +160,13 @@ pub struct ServeCfg {
     /// routes `serve:` configs through the paged executors with this
     /// block size; `None` keeps the contiguous per-request caches.
     pub kv_block_tokens: Option<usize>,
+    /// Run pool workers on real OS threads (`true`) instead of the
+    /// single-thread virtual-clock loop (`false`, the default). The two
+    /// modes produce identical per-request outputs and terminal outcome
+    /// kinds — only wall-clock timing fields differ (see the README's
+    /// determinism contract). Threaded mode is what `bench_sharded`'s
+    /// wall-clock scaling numbers measure.
+    pub threads: bool,
 }
 
 impl Default for ServeCfg {
@@ -166,8 +179,10 @@ impl Default for ServeCfg {
             deadline_ms: None,
             max_retries: 0,
             retry_backoff_ms: 1.0,
+            max_backoff_ms: 60_000.0,
             fault: None,
             kv_block_tokens: None,
+            threads: false,
         }
     }
 }
@@ -214,6 +229,19 @@ impl ServeCfg {
     /// Base virtual-time retry backoff in milliseconds.
     pub fn with_backoff(mut self, retry_backoff_ms: f64) -> Self {
         self.retry_backoff_ms = retry_backoff_ms;
+        self
+    }
+
+    /// Ceiling on the computed exponential retry backoff (ms).
+    pub fn with_max_backoff(mut self, max_backoff_ms: f64) -> Self {
+        self.max_backoff_ms = max_backoff_ms;
+        self
+    }
+
+    /// Run pool workers on real OS threads (`false` = the bit-exactness
+    /// single-thread virtual-clock twin).
+    pub fn with_threads(mut self, threads: bool) -> Self {
+        self.threads = threads;
         self
     }
 
@@ -442,9 +470,77 @@ fn deadline_abs_of(req: &TokenRequest, cfg: &ServeCfg) -> Option<f64> {
     req.deadline_ms.or(cfg.deadline_ms).map(|d| req.arrival_ms + d)
 }
 
-/// Exponential virtual-time backoff before attempt `failed_attempt + 1`.
+/// Exponential virtual-time backoff before attempt `failed_attempt + 1`,
+/// clamped to `cfg.max_backoff_ms`. The clamp is what keeps high attempt
+/// counts finite: without it `backoff_ms * 2^60` pushes a retry's
+/// `ready_ms` so far into the virtual future that the request silently
+/// never re-admits (regression-tested in `backoff_stays_finite_and_capped`).
 fn retry_backoff(cfg: &ServeCfg, failed_attempt: usize) -> f64 {
-    cfg.retry_backoff_ms * 2f64.powi(failed_attempt.saturating_sub(1).min(60) as i32)
+    let raw = cfg.retry_backoff_ms * 2f64.powi(failed_attempt.saturating_sub(1).min(60) as i32);
+    raw.min(cfg.max_backoff_ms)
+}
+
+/// A preemption is deliberately not a failure (it never counts against
+/// `max_retries`), which opens a livelock: a paged request whose decode
+/// growth can never fit the bounded block pool is preempted and requeued
+/// forever. The pool counts *consecutive* preemptions of each request
+/// with no pool-wide completion in between; past this many cycles the
+/// request fails loudly with the `PoolExhausted` context instead of
+/// spinning. Healthy preemption churn resets the counter at every
+/// completion, so tight-but-feasible schedules (e.g.
+/// `preemption_under_tight_pool_still_completes_every_request`) never
+/// trip it, while a genuine never-fits request trips it within a bounded
+/// number of rounds.
+const MAX_NO_PROGRESS_PREEMPT_CYCLES: usize = 64;
+
+/// Terminal-outcome and throughput bookkeeping shared verbatim by the
+/// single-thread virtual-clock twin and the threaded pool (where it
+/// lives inside the shared mutex), so both modes classify every event
+/// identically — the heart of the cross-mode determinism contract.
+#[derive(Default)]
+struct PoolLedger {
+    completed: Vec<CompletedRequest>,
+    total_tokens: usize,
+    al_num: f64,
+    al_den: f64,
+    proposed: usize,
+    accepted: usize,
+    /// per request id: (`completed.len()` at its last preemption,
+    /// consecutive preemptions since without any pool-wide completion) —
+    /// the no-progress detector behind [`MAX_NO_PROGRESS_PREEMPT_CYCLES`]
+    preempt_cycles: HashMap<u64, (usize, usize)>,
+}
+
+/// Everything the threaded pool shares behind its mutex: the FIFO queue,
+/// the outcome ledger, and the pool-wide bookkeeping the twin keeps as
+/// `run_inner` locals. Workers take the lock to admit and to apply round
+/// events; decode rounds themselves run with the lock released.
+struct ThreadShared {
+    queue: VecDeque<QueuedReq>,
+    ledger: PoolLedger,
+    crashed_workers: Vec<(usize, String)>,
+    /// per-worker live-set sizes — in-flight sampling + termination test
+    live_counts: Vec<usize>,
+    /// per-worker `executor.live_bytes()` as of its last state change
+    cached_live_bytes: Vec<usize>,
+    /// per-worker virtual clocks (timing fields + all-dead shedding)
+    clocks: Vec<f64>,
+    /// per-worker peak resident KV bytes
+    worker_peaks: Vec<usize>,
+    /// running sum of `cached_live_bytes`
+    pool_live_bytes: usize,
+    peak_kv_bytes: usize,
+    rounds: usize,
+    in_flight_sum: usize,
+    peak_in_flight: usize,
+    /// workers not yet crashed; the last one to die sheds the queue
+    alive: usize,
+    /// consecutive all-idle wakeups with an unadmitted head — the
+    /// loud-hang safety valve
+    idle_spins: usize,
+    done: bool,
+    /// first scheduler invariant error; aborts the run
+    fatal: Option<anyhow::Error>,
 }
 
 /// Single-worker serve loop — the degenerate [`WorkerPool`] of one worker,
@@ -457,7 +553,7 @@ impl Scheduler {
     /// staff one worker, so `cfg.workers > 1` is a loud error here (no
     /// silent single-worker fallback); sharded callers go through
     /// [`WorkerPool::run`] with an executor factory.
-    pub fn run<E: StepExecutor>(
+    pub fn run<E: StepExecutor + Send>(
         requests: Vec<TokenRequest>,
         executor: E,
         cfg: &ServeCfg,
@@ -522,7 +618,10 @@ impl WorkerPool {
     /// typically share one immutable model reference. When `cfg.fault` is
     /// set, every worker's executor is wrapped in a [`FaultInjector`]
     /// seeded from the plan, so chaos runs reproduce deterministically.
-    pub fn run<E: StepExecutor, F: FnMut(usize) -> E>(
+    /// `cfg.threads` picks between the single-thread virtual-clock twin
+    /// and the OS-thread pool; both produce identical per-request outputs
+    /// and terminal outcome kinds.
+    pub fn run<E: StepExecutor + Send, F: FnMut(usize) -> E>(
         requests: Vec<TokenRequest>,
         mut make_executor: F,
         cfg: &ServeCfg,
@@ -531,13 +630,14 @@ impl WorkerPool {
         match cfg.fault.clone() {
             Some(plan) => {
                 plan.validate(cfg.workers.max(1))?;
-                Self::run_inner(
-                    requests,
-                    move |w| FaultInjector::new(make_executor(w), plan.clone(), w),
-                    cfg,
-                    seed,
-                )
+                let wrapped = move |w| FaultInjector::new(make_executor(w), plan.clone(), w);
+                if cfg.threads {
+                    Self::run_threaded(requests, wrapped, cfg, seed)
+                } else {
+                    Self::run_inner(requests, wrapped, cfg, seed)
+                }
             }
+            None if cfg.threads => Self::run_threaded(requests, make_executor, cfg, seed),
             None => Self::run_inner(requests, make_executor, cfg, seed),
         }
     }
@@ -548,60 +648,9 @@ impl WorkerPool {
         cfg: &ServeCfg,
         seed: u64,
     ) -> Result<ServeReport> {
-        let n_workers = cfg.workers.max(1);
-        if let Some(d) = cfg.deadline_ms {
-            if d.is_nan() || d <= 0.0 {
-                bail!(
-                    "serve.deadline_ms must be > 0 when set, got {d}; \
-                     drop the knob for no deadline"
-                );
-            }
-        }
-        if cfg.retry_backoff_ms.is_nan() || cfg.retry_backoff_ms < 0.0 {
-            bail!(
-                "serve.retry_backoff_ms must be a non-negative number, got {}",
-                cfg.retry_backoff_ms
-            );
-        }
+        Self::validate_cfg(cfg)?;
         let max_attempts = cfg.max_retries.saturating_add(1);
-        if cfg.kv_budget_bytes > 0 && cfg.kv_budget_bytes < n_workers {
-            // enforced here as well as at config validation: a split that
-            // leaves any worker a zero share would make that worker
-            // silently unlimited and the pool's resident KV could exceed
-            // the configured total
-            bail!(
-                "kv_budget_bytes = {} splits to zero across {n_workers} workers; \
-                 raise the budget, reduce workers, or set 0 for unlimited",
-                cfg.kv_budget_bytes
-            );
-        }
-        let budgets = cfg.per_worker_budgets();
-        let mut workers: Vec<PoolWorker<E>> = (0..n_workers)
-            .map(|w| {
-                let executor = make_executor(w);
-                let mut max_in_flight = match cfg.policy {
-                    AdmissionPolicy::Sequential => 1,
-                    _ => cfg.max_in_flight.max(1),
-                };
-                if let Some(cap) = executor.slot_cap() {
-                    max_in_flight = max_in_flight.min(cap.max(1));
-                }
-                PoolWorker {
-                    executor,
-                    // worker 0 keeps the bare seed, so a one-worker pool is
-                    // bit-identical to the historical single scheduler
-                    rng: Rng::new(seed ^ (w as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15)),
-                    clock_ms: 0.0,
-                    live: Vec::new(),
-                    reserved_bytes: 0,
-                    budget: budgets[w],
-                    max_in_flight,
-                    peak_kv_bytes: 0,
-                    cached_live_bytes: 0,
-                    dead: false,
-                }
-            })
-            .collect();
+        let mut workers = Self::build_workers(&mut make_executor, cfg, seed);
 
         let n_submitted = requests.len();
         let t0 = Instant::now();
@@ -611,13 +660,8 @@ impl WorkerPool {
             .into_iter()
             .map(|req| QueuedReq { ready_ms: req.arrival_ms, attempt: 1, req })
             .collect();
-        let mut completed: Vec<CompletedRequest> = Vec::new();
+        let mut ledger = PoolLedger::default();
         let mut crashed_workers: Vec<(usize, String)> = Vec::new();
-        let mut total_tokens = 0usize;
-        let mut al_num = 0.0f64;
-        let mut al_den = 0.0f64;
-        let mut proposed = 0usize;
-        let mut accepted = 0usize;
         let mut peak_kv_bytes = 0usize;
         // running sum of every worker's cached_live_bytes
         let mut pool_live_bytes = 0usize;
@@ -634,18 +678,7 @@ impl WorkerPool {
             // accounted for, rather than an Err that drops the trace.
             if !queue.is_empty() && workers.iter().all(|w| w.dead) {
                 let now = workers.iter().map(|w| w.clock_ms).fold(0.0f64, f64::max);
-                for q in queue.drain(..) {
-                    let wait = (now - q.req.arrival_ms).max(0.0);
-                    completed.push(CompletedRequest {
-                        id: q.req.id,
-                        generated: 0,
-                        ttft_ms: wait,
-                        total_ms: wait,
-                        output: Vec::new(),
-                        outcome: RequestOutcome::Shed,
-                        attempts: q.attempt - 1,
-                    });
-                }
+                Self::shed_queue(&mut queue, now, &mut ledger);
                 break;
             }
             // ── earliest next event across workers ───────────────────
@@ -696,7 +729,7 @@ impl WorkerPool {
                         if let Some(q) = queue.pop_front() {
                             let now = workers[s].clock_ms.max(q.ready_ms);
                             let wait = (now - q.req.arrival_ms).max(0.0);
-                            completed.push(CompletedRequest {
+                            ledger.completed.push(CompletedRequest {
                                 id: q.req.id,
                                 generated: 0,
                                 ttft_ms: wait,
@@ -762,44 +795,18 @@ impl WorkerPool {
                             // backoff) or fails, and survivors absorb it
                             // through normal work-stealing admission.
                             let w = &mut workers[b];
-                            w.dead = true;
-                            let msg = match err.downcast_ref::<WorkerCrash>() {
-                                Some(c) => c.to_string(),
-                                None => format!("{err:#}"),
-                            };
-                            crashed_workers.push((b, msg.clone()));
                             pool_live_bytes -= w.cached_live_bytes;
                             w.cached_live_bytes = 0;
-                            w.reserved_bytes = 0;
-                            let now = w.clock_ms;
-                            for l in std::mem::take(&mut w.live) {
-                                w.executor.retire(l.req.id);
-                                if l.attempts < max_attempts {
-                                    let backoff = retry_backoff(cfg, l.attempts);
-                                    queue.push_back(QueuedReq {
-                                        ready_ms: now + backoff,
-                                        attempt: l.attempts + 1,
-                                        req: l.req,
-                                    });
-                                } else {
-                                    completed.push(CompletedRequest {
-                                        id: l.req.id,
-                                        generated: 0,
-                                        ttft_ms: (l.first_token_ms.unwrap_or(now)
-                                            - l.req.arrival_ms)
-                                            .max(0.0),
-                                        total_ms: (now - l.req.arrival_ms).max(0.0),
-                                        output: Vec::new(),
-                                        outcome: RequestOutcome::Failed {
-                                            error: format!(
-                                                "request {} lost: worker {b} crashed: {msg}",
-                                                l.req.id
-                                            ),
-                                        },
-                                        attempts: l.attempts,
-                                    });
-                                }
-                            }
+                            let msg = Self::contain_crash(
+                                b,
+                                w,
+                                err,
+                                &mut queue,
+                                &mut ledger,
+                                cfg,
+                                max_attempts,
+                            );
+                            crashed_workers.push((b, msg));
                             continue;
                         }
                     };
@@ -814,125 +821,15 @@ impl WorkerPool {
                     w.peak_kv_bytes = w.peak_kv_bytes.max(round_bytes);
 
                     // retire finished, book metrics on this worker's clock
-                    let now = w.clock_ms;
-                    for ev in events {
-                        let Some(idx) = w.live.iter().position(|l| l.req.id == ev.id)
-                        else {
-                            bail!(
-                                "scheduler invariant broken on worker {b}: step event \
-                                 for request {} that was never admitted there",
-                                ev.id
-                            );
-                        };
-                        // ── contained per-request fault: evict, retry/fail ──
-                        if let Some(fault) = ev.fault {
-                            let l = w.live.swap_remove(idx);
-                            w.executor.retire(l.req.id);
-                            w.reserved_bytes -= l.reserved_bytes;
-                            // a preemption (paged executor freeing pages
-                            // for another live request) is a scheduling
-                            // decision, not a failure: requeue with no
-                            // backoff and never convert it to `Failed`.
-                            // The attempt number still advances so the
-                            // fault injector keys fresh draws.
-                            if fault == StepFault::Preempted {
-                                queue.push_back(QueuedReq {
-                                    ready_ms: now,
-                                    attempt: l.attempts + 1,
-                                    req: l.req,
-                                });
-                                continue;
-                            }
-                            if l.attempts < max_attempts {
-                                let backoff = retry_backoff(cfg, l.attempts);
-                                queue.push_back(QueuedReq {
-                                    ready_ms: now + backoff,
-                                    attempt: l.attempts + 1,
-                                    req: l.req,
-                                });
-                            } else {
-                                completed.push(CompletedRequest {
-                                    id: l.req.id,
-                                    generated: 0,
-                                    ttft_ms: (l.first_token_ms.unwrap_or(now)
-                                        - l.req.arrival_ms)
-                                        .max(0.0),
-                                    total_ms: (now - l.req.arrival_ms).max(0.0),
-                                    output: Vec::new(),
-                                    outcome: RequestOutcome::Failed {
-                                        error: format!(
-                                            "request {} on worker {b}: {}",
-                                            l.req.id,
-                                            fault.describe()
-                                        ),
-                                    },
-                                    attempts: l.attempts,
-                                });
-                            }
-                            continue;
-                        }
-                        {
-                            let l = &mut w.live[idx];
-                            debug_assert!(
-                                matches!(l.state, ReqState::Prefill | ReqState::Decoding),
-                                "step event for a request outside Prefill/Decoding"
-                            );
-                            if !ev.tokens.is_empty() {
-                                if l.first_token_ms.is_none() {
-                                    l.first_token_ms = Some(now);
-                                }
-                                l.state = ReqState::Decoding;
-                            }
-                            total_tokens += ev.tokens.len();
-                            al_num += ev.tokens.len() as f64;
-                            al_den += ev.steps as f64;
-                            proposed += ev.proposed;
-                            accepted += ev.accepted;
-                            l.output.extend_from_slice(&ev.tokens);
-                        }
-                        if ev.finished {
-                            let l = w.live.swap_remove(idx);
-                            w.executor.retire(l.req.id);
-                            w.reserved_bytes -= l.reserved_bytes;
-                            completed.push(CompletedRequest {
-                                id: l.req.id,
-                                generated: l.output.len(),
-                                ttft_ms: l.first_token_ms.unwrap_or(now)
-                                    - l.req.arrival_ms,
-                                total_ms: now - l.req.arrival_ms,
-                                output: l.output,
-                                outcome: RequestOutcome::Completed,
-                                attempts: l.attempts,
-                            });
-                        }
-                    }
-                    // ── deadline sweep between rounds on this worker's
-                    // clock: cancel past-deadline requests, keep partial
-                    // output, evict KV immediately ──
-                    let mut i = 0;
-                    while i < w.live.len() {
-                        let expired = w.live[i]
-                            .deadline_abs
-                            .map_or(false, |d| w.clock_ms >= d);
-                        if !expired {
-                            i += 1;
-                            continue;
-                        }
-                        let l = w.live.swap_remove(i);
-                        w.executor.retire(l.req.id);
-                        w.reserved_bytes -= l.reserved_bytes;
-                        completed.push(CompletedRequest {
-                            id: l.req.id,
-                            generated: l.output.len(),
-                            ttft_ms: (l.first_token_ms.unwrap_or(w.clock_ms)
-                                - l.req.arrival_ms)
-                                .max(0.0),
-                            total_ms: (w.clock_ms - l.req.arrival_ms).max(0.0),
-                            output: l.output,
-                            outcome: RequestOutcome::DeadlineExceeded,
-                            attempts: l.attempts,
-                        });
-                    }
+                    Self::apply_round_events(
+                        b,
+                        w,
+                        events,
+                        &mut queue,
+                        &mut ledger,
+                        cfg,
+                        max_attempts,
+                    )?;
                     // refresh the cache post-retirement so the next
                     // sample sees the freed bytes
                     let now_bytes = w.executor.live_bytes();
@@ -942,6 +839,351 @@ impl WorkerPool {
             }
         }
 
+        let completed = Self::finalize_completed(ledger.completed, n_submitted)?;
+        let makespan_ms = workers
+            .iter()
+            .map(|w| w.clock_ms)
+            .fold(0.0f64, f64::max);
+        Ok(ServeReport {
+            completed,
+            wall_s: t0.elapsed().as_secs_f64(),
+            makespan_ms,
+            total_tokens: ledger.total_tokens,
+            mean_al: if ledger.al_den == 0.0 {
+                0.0
+            } else {
+                ledger.al_num / ledger.al_den
+            },
+            proposed: ledger.proposed,
+            accepted: ledger.accepted,
+            peak_kv_bytes,
+            worker_peak_kv_bytes: workers.iter().map(|w| w.peak_kv_bytes).collect(),
+            crashed_workers,
+            peak_in_flight,
+            mean_in_flight: if rounds == 0 {
+                0.0
+            } else {
+                in_flight_sum as f64 / rounds as f64
+            },
+        })
+    }
+
+    /// Config validation shared by both pool modes.
+    fn validate_cfg(cfg: &ServeCfg) -> Result<()> {
+        let n_workers = cfg.workers.max(1);
+        if let Some(d) = cfg.deadline_ms {
+            if d.is_nan() || d <= 0.0 {
+                bail!(
+                    "serve.deadline_ms must be > 0 when set, got {d}; \
+                     drop the knob for no deadline"
+                );
+            }
+        }
+        if cfg.retry_backoff_ms.is_nan() || cfg.retry_backoff_ms < 0.0 {
+            bail!(
+                "serve.retry_backoff_ms must be a non-negative number, got {}",
+                cfg.retry_backoff_ms
+            );
+        }
+        if !cfg.max_backoff_ms.is_finite() || cfg.max_backoff_ms < 0.0 {
+            bail!(
+                "serve.max_backoff_ms must be a finite non-negative number, got {} \
+                 (the cap is what keeps exponential retry backoff admissible)",
+                cfg.max_backoff_ms
+            );
+        }
+        if cfg.kv_budget_bytes > 0 && cfg.kv_budget_bytes < n_workers {
+            // enforced here as well as at config validation: a split that
+            // leaves any worker a zero share would make that worker
+            // silently unlimited and the pool's resident KV could exceed
+            // the configured total
+            bail!(
+                "kv_budget_bytes = {} splits to zero across {n_workers} workers; \
+                 raise the budget, reduce workers, or set 0 for unlimited",
+                cfg.kv_budget_bytes
+            );
+        }
+        Ok(())
+    }
+
+    /// Staff the pool: one executor, RNG stream, KV-budget share, and
+    /// clock per worker — identical staffing in both pool modes.
+    fn build_workers<E: StepExecutor, F: FnMut(usize) -> E>(
+        make_executor: &mut F,
+        cfg: &ServeCfg,
+        seed: u64,
+    ) -> Vec<PoolWorker<E>> {
+        let n_workers = cfg.workers.max(1);
+        let budgets = cfg.per_worker_budgets();
+        (0..n_workers)
+            .map(|w| {
+                let executor = make_executor(w);
+                let mut max_in_flight = match cfg.policy {
+                    AdmissionPolicy::Sequential => 1,
+                    _ => cfg.max_in_flight.max(1),
+                };
+                if let Some(cap) = executor.slot_cap() {
+                    max_in_flight = max_in_flight.min(cap.max(1));
+                }
+                PoolWorker {
+                    executor,
+                    // worker 0 keeps the bare seed, so a one-worker pool is
+                    // bit-identical to the historical single scheduler
+                    rng: Rng::new(seed ^ (w as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15)),
+                    clock_ms: 0.0,
+                    live: Vec::new(),
+                    reserved_bytes: 0,
+                    budget: budgets[w],
+                    max_in_flight,
+                    peak_kv_bytes: 0,
+                    cached_live_bytes: 0,
+                    dead: false,
+                }
+            })
+            .collect()
+    }
+
+    /// Apply one round's events to worker `b`, then run its between-round
+    /// deadline sweep. This is the pool's entire per-request outcome
+    /// logic, shared verbatim between the single-thread twin and the
+    /// threaded pool (which calls it under the shared lock): fault
+    /// containment, retry backoff, preemption-livelock detection,
+    /// retirement, and deadline cancellation classify identically in both
+    /// modes.
+    fn apply_round_events<E: StepExecutor>(
+        b: usize,
+        w: &mut PoolWorker<E>,
+        events: Vec<StepEvent>,
+        queue: &mut VecDeque<QueuedReq>,
+        ledger: &mut PoolLedger,
+        cfg: &ServeCfg,
+        max_attempts: usize,
+    ) -> Result<()> {
+        let now = w.clock_ms;
+        for ev in events {
+            let Some(idx) = w.live.iter().position(|l| l.req.id == ev.id) else {
+                bail!(
+                    "scheduler invariant broken on worker {b}: step event \
+                     for request {} that was never admitted there",
+                    ev.id
+                );
+            };
+            // ── contained per-request fault: evict, retry/fail ──
+            if let Some(fault) = ev.fault {
+                let l = w.live.swap_remove(idx);
+                w.executor.retire(l.req.id);
+                w.reserved_bytes -= l.reserved_bytes;
+                // a preemption (paged executor freeing pages
+                // for another live request) is a scheduling
+                // decision, not a failure: requeue with no
+                // backoff and never convert it to `Failed`.
+                // The attempt number still advances so the
+                // fault injector keys fresh draws.
+                if fault == StepFault::Preempted {
+                    // ── no-progress cycle detector: preemptions never
+                    // count against max_retries, so a request whose KV
+                    // growth can never fit must be failed here or it
+                    // would requeue forever ──
+                    let done_now = ledger.completed.len();
+                    let cell = ledger
+                        .preempt_cycles
+                        .entry(l.req.id)
+                        .or_insert((done_now, 0));
+                    if cell.0 == done_now {
+                        cell.1 += 1;
+                    } else {
+                        *cell = (done_now, 1);
+                    }
+                    if cell.1 > MAX_NO_PROGRESS_PREEMPT_CYCLES {
+                        let cycles = cell.1;
+                        ledger.completed.push(CompletedRequest {
+                            id: l.req.id,
+                            generated: 0,
+                            ttft_ms: (l.first_token_ms.unwrap_or(now) - l.req.arrival_ms)
+                                .max(0.0),
+                            total_ms: (now - l.req.arrival_ms).max(0.0),
+                            output: Vec::new(),
+                            outcome: RequestOutcome::Failed {
+                                error: format!(
+                                    "request {} preempted {cycles} consecutive times \
+                                     with no pool-wide completion — {}: its decode \
+                                     growth cannot fit the block pool; raise \
+                                     kv_budget_bytes or lower max_new_tokens",
+                                    l.req.id, POOL_EXHAUSTED_PREFIX
+                                ),
+                            },
+                            attempts: l.attempts,
+                        });
+                        continue;
+                    }
+                    queue.push_back(QueuedReq {
+                        ready_ms: now,
+                        attempt: l.attempts + 1,
+                        req: l.req,
+                    });
+                    continue;
+                }
+                if l.attempts < max_attempts {
+                    let backoff = retry_backoff(cfg, l.attempts);
+                    queue.push_back(QueuedReq {
+                        ready_ms: now + backoff,
+                        attempt: l.attempts + 1,
+                        req: l.req,
+                    });
+                } else {
+                    ledger.completed.push(CompletedRequest {
+                        id: l.req.id,
+                        generated: 0,
+                        ttft_ms: (l.first_token_ms.unwrap_or(now) - l.req.arrival_ms)
+                            .max(0.0),
+                        total_ms: (now - l.req.arrival_ms).max(0.0),
+                        output: Vec::new(),
+                        outcome: RequestOutcome::Failed {
+                            error: format!(
+                                "request {} on worker {b}: {}",
+                                l.req.id,
+                                fault.describe()
+                            ),
+                        },
+                        attempts: l.attempts,
+                    });
+                }
+                continue;
+            }
+            {
+                let l = &mut w.live[idx];
+                debug_assert!(
+                    matches!(l.state, ReqState::Prefill | ReqState::Decoding),
+                    "step event for a request outside Prefill/Decoding"
+                );
+                if !ev.tokens.is_empty() {
+                    if l.first_token_ms.is_none() {
+                        l.first_token_ms = Some(now);
+                    }
+                    l.state = ReqState::Decoding;
+                }
+                ledger.total_tokens += ev.tokens.len();
+                ledger.al_num += ev.tokens.len() as f64;
+                ledger.al_den += ev.steps as f64;
+                ledger.proposed += ev.proposed;
+                ledger.accepted += ev.accepted;
+                l.output.extend_from_slice(&ev.tokens);
+            }
+            if ev.finished {
+                let l = w.live.swap_remove(idx);
+                w.executor.retire(l.req.id);
+                w.reserved_bytes -= l.reserved_bytes;
+                ledger.completed.push(CompletedRequest {
+                    id: l.req.id,
+                    generated: l.output.len(),
+                    ttft_ms: l.first_token_ms.unwrap_or(now) - l.req.arrival_ms,
+                    total_ms: now - l.req.arrival_ms,
+                    output: l.output,
+                    outcome: RequestOutcome::Completed,
+                    attempts: l.attempts,
+                });
+            }
+        }
+        // ── deadline sweep between rounds on this worker's
+        // clock: cancel past-deadline requests, keep partial
+        // output, evict KV immediately ──
+        let mut i = 0;
+        while i < w.live.len() {
+            let expired = w.live[i].deadline_abs.map_or(false, |d| w.clock_ms >= d);
+            if !expired {
+                i += 1;
+                continue;
+            }
+            let l = w.live.swap_remove(i);
+            w.executor.retire(l.req.id);
+            w.reserved_bytes -= l.reserved_bytes;
+            ledger.completed.push(CompletedRequest {
+                id: l.req.id,
+                generated: l.output.len(),
+                ttft_ms: (l.first_token_ms.unwrap_or(w.clock_ms) - l.req.arrival_ms)
+                    .max(0.0),
+                total_ms: (w.clock_ms - l.req.arrival_ms).max(0.0),
+                output: l.output,
+                outcome: RequestOutcome::DeadlineExceeded,
+                attempts: l.attempts,
+            });
+        }
+        Ok(())
+    }
+
+    /// Whole-worker crash containment, shared by both modes: mark the
+    /// worker dead, requeue its live set with backoff (or fail requests
+    /// out of attempts), and return the crash message for the report.
+    /// Pool residency bookkeeping (`pool_live_bytes`) is the caller's
+    /// job, since it lives in different places per mode.
+    fn contain_crash<E: StepExecutor>(
+        b: usize,
+        w: &mut PoolWorker<E>,
+        err: anyhow::Error,
+        queue: &mut VecDeque<QueuedReq>,
+        ledger: &mut PoolLedger,
+        cfg: &ServeCfg,
+        max_attempts: usize,
+    ) -> String {
+        w.dead = true;
+        let msg = match err.downcast_ref::<WorkerCrash>() {
+            Some(c) => c.to_string(),
+            None => format!("{err:#}"),
+        };
+        w.reserved_bytes = 0;
+        let now = w.clock_ms;
+        for l in std::mem::take(&mut w.live) {
+            w.executor.retire(l.req.id);
+            if l.attempts < max_attempts {
+                let backoff = retry_backoff(cfg, l.attempts);
+                queue.push_back(QueuedReq {
+                    ready_ms: now + backoff,
+                    attempt: l.attempts + 1,
+                    req: l.req,
+                });
+            } else {
+                ledger.completed.push(CompletedRequest {
+                    id: l.req.id,
+                    generated: 0,
+                    ttft_ms: (l.first_token_ms.unwrap_or(now) - l.req.arrival_ms).max(0.0),
+                    total_ms: (now - l.req.arrival_ms).max(0.0),
+                    output: Vec::new(),
+                    outcome: RequestOutcome::Failed {
+                        error: format!(
+                            "request {} lost: worker {b} crashed: {msg}",
+                            l.req.id
+                        ),
+                    },
+                    attempts: l.attempts,
+                });
+            }
+        }
+        msg
+    }
+
+    /// Account every still-queued request as `Shed` at time `now` — the
+    /// all-workers-dead drain, shared by both modes so even total failure
+    /// returns a report with every request accounted for.
+    fn shed_queue(queue: &mut VecDeque<QueuedReq>, now: f64, ledger: &mut PoolLedger) {
+        for q in queue.drain(..) {
+            let wait = (now - q.req.arrival_ms).max(0.0);
+            ledger.completed.push(CompletedRequest {
+                id: q.req.id,
+                generated: 0,
+                ttft_ms: wait,
+                total_ms: wait,
+                output: Vec::new(),
+                outcome: RequestOutcome::Shed,
+                attempts: q.attempt - 1,
+            });
+        }
+    }
+
+    /// Exactly-once invariants + stable id order, shared by both modes.
+    fn finalize_completed(
+        mut completed: Vec<CompletedRequest>,
+        n_submitted: usize,
+    ) -> Result<Vec<CompletedRequest>> {
         if completed.len() != n_submitted {
             bail!(
                 "scheduler invariant broken: {} of {n_submitted} requests reached a \
@@ -959,28 +1201,356 @@ impl WorkerPool {
                 );
             }
         }
-        let makespan_ms = workers
-            .iter()
-            .map(|w| w.clock_ms)
-            .fold(0.0f64, f64::max);
+        Ok(completed)
+    }
+
+    /// Threaded-mode room check for the queue head on one worker — the
+    /// per-worker body of [`Self::pick_stealer`]'s `has_room`. The
+    /// oversized valve is per-share here: a head larger than this
+    /// worker's budget share only seats alone. In the twin the valve
+    /// engages when the head fits *no* worker; shares are split evenly,
+    /// so the two conditions coincide (modulo the ±1-byte remainder
+    /// spread), and per-share is the conservative direction — it never
+    /// admits a head the twin's valve would have held back.
+    fn has_room<E: StepExecutor>(
+        w: &PoolWorker<E>,
+        head: &QueuedReq,
+        policy: AdmissionPolicy,
+    ) -> bool {
+        if w.dead {
+            return false;
+        }
+        match policy {
+            // a static chunk only forms on a drained worker
+            AdmissionPolicy::Static => w.live.is_empty(),
+            _ => {
+                if w.live.len() >= w.max_in_flight {
+                    false
+                } else if w.budget != 0
+                    && w.executor.admission_bytes(&head.req) > w.budget
+                {
+                    w.live.is_empty()
+                } else if w.budget == 0 {
+                    true
+                } else {
+                    match w.executor.free_capacity_bytes() {
+                        // free-block admission: gate on the pages the
+                        // pool can hand out *now*, not a reservation
+                        Some(free) => w.executor.admission_bytes(&head.req) <= free,
+                        None => {
+                            w.reserved_bytes + w.executor.admission_bytes(&head.req)
+                                <= w.budget
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    /// The OS-thread pool: the same shared-FIFO scheduler run on real
+    /// threads, one per worker. The queue, outcome ledger, and pool-wide
+    /// bookkeeping live behind one mutex+condvar; decode rounds run with
+    /// the lock released, and every admission/outcome decision goes
+    /// through the exact handlers the single-thread twin uses, so
+    /// per-request outputs and terminal outcome kinds are identical
+    /// across modes — only the timing fields measure real parallel wall
+    /// clock here instead of the virtual interleaving.
+    fn run_threaded<E, F>(
+        mut requests: Vec<TokenRequest>,
+        mut make_executor: F,
+        cfg: &ServeCfg,
+        seed: u64,
+    ) -> Result<ServeReport>
+    where
+        E: StepExecutor + Send,
+        F: FnMut(usize) -> E,
+    {
+        Self::validate_cfg(cfg)?;
+        let n_workers = cfg.workers.max(1);
+        let max_attempts = cfg.max_retries.saturating_add(1);
+        let workers = Self::build_workers(&mut make_executor, cfg, seed);
+
+        let n_submitted = requests.len();
+        let t0 = Instant::now();
+        // stable sort: FIFO among simultaneous arrivals
+        requests.sort_by(|a, b| a.arrival_ms.total_cmp(&b.arrival_ms));
+        let queue: VecDeque<QueuedReq> = requests
+            .into_iter()
+            .map(|req| QueuedReq { ready_ms: req.arrival_ms, attempt: 1, req })
+            .collect();
+        let sync = (
+            Mutex::new(ThreadShared {
+                queue,
+                ledger: PoolLedger::default(),
+                crashed_workers: Vec::new(),
+                live_counts: vec![0; n_workers],
+                cached_live_bytes: vec![0; n_workers],
+                clocks: vec![0.0; n_workers],
+                worker_peaks: vec![0; n_workers],
+                pool_live_bytes: 0,
+                peak_kv_bytes: 0,
+                rounds: 0,
+                in_flight_sum: 0,
+                peak_in_flight: 0,
+                alive: n_workers,
+                idle_spins: 0,
+                done: false,
+                fatal: None,
+            }),
+            Condvar::new(),
+        );
+
+        std::thread::scope(|s| {
+            for (i, w) in workers.into_iter().enumerate() {
+                let sync = &sync;
+                s.spawn(move || Self::worker_thread(i, w, sync, cfg, max_attempts));
+            }
+        });
+
+        let shared = match sync.0.into_inner() {
+            Ok(sh) => sh,
+            Err(poisoned) => poisoned.into_inner(),
+        };
+        if let Some(err) = shared.fatal {
+            return Err(err);
+        }
+        let completed = Self::finalize_completed(shared.ledger.completed, n_submitted)?;
+        let makespan_ms = shared.clocks.iter().copied().fold(0.0f64, f64::max);
         Ok(ServeReport {
             completed,
             wall_s: t0.elapsed().as_secs_f64(),
             makespan_ms,
-            total_tokens,
-            mean_al: if al_den == 0.0 { 0.0 } else { al_num / al_den },
-            proposed,
-            accepted,
-            peak_kv_bytes,
-            worker_peak_kv_bytes: workers.iter().map(|w| w.peak_kv_bytes).collect(),
-            crashed_workers,
-            peak_in_flight,
-            mean_in_flight: if rounds == 0 {
+            total_tokens: shared.ledger.total_tokens,
+            mean_al: if shared.ledger.al_den == 0.0 {
                 0.0
             } else {
-                in_flight_sum as f64 / rounds as f64
+                shared.ledger.al_num / shared.ledger.al_den
+            },
+            proposed: shared.ledger.proposed,
+            accepted: shared.ledger.accepted,
+            peak_kv_bytes: shared.peak_kv_bytes,
+            worker_peak_kv_bytes: shared.worker_peaks,
+            crashed_workers: shared.crashed_workers,
+            peak_in_flight: shared.peak_in_flight,
+            mean_in_flight: if shared.rounds == 0 {
+                0.0
+            } else {
+                shared.in_flight_sum as f64 / shared.rounds as f64
             },
         })
+    }
+
+    /// One pool worker's thread body. Mirrors the twin's loop shape:
+    /// admit from the shared FIFO (strict head-only order, this worker's
+    /// room rules, deadline guard on the head), run one decode round with
+    /// the lock released, apply the round's events under the lock through
+    /// the shared handlers. A crash kills only this thread: its live set
+    /// is requeued/failed by [`Self::contain_crash`] and survivors absorb
+    /// the load; the last dying worker sheds the remaining queue.
+    fn worker_thread<E: StepExecutor>(
+        i: usize,
+        mut w: PoolWorker<E>,
+        sync: &(Mutex<ThreadShared>, Condvar),
+        cfg: &ServeCfg,
+        max_attempts: usize,
+    ) {
+        let (lock, cv) = sync;
+        let mut guard = match lock.lock() {
+            // a poisoned lock means a peer thread panicked; the scope
+            // propagates that panic, so just stand down
+            Ok(g) => g,
+            Err(_) => return,
+        };
+        loop {
+            if guard.done || guard.fatal.is_some() {
+                cv.notify_all();
+                return;
+            }
+            // ── admission: strict FIFO from the shared queue ─────────
+            loop {
+                // deadline guard: a head that would start at or past its
+                // deadline is cancelled instead of admitted (twin rule)
+                let expired = guard.queue.front().map_or(false, |q| {
+                    let start = w.clock_ms.max(q.ready_ms);
+                    deadline_abs_of(&q.req, cfg).map_or(false, |d| start >= d)
+                });
+                if expired {
+                    if let Some(q) = guard.queue.pop_front() {
+                        let now = w.clock_ms.max(q.ready_ms);
+                        let wait = (now - q.req.arrival_ms).max(0.0);
+                        guard.ledger.completed.push(CompletedRequest {
+                            id: q.req.id,
+                            generated: 0,
+                            ttft_ms: wait,
+                            total_ms: wait,
+                            output: Vec::new(),
+                            outcome: RequestOutcome::DeadlineExceeded,
+                            attempts: q.attempt - 1,
+                        });
+                        guard.idle_spins = 0;
+                    }
+                    continue;
+                }
+                let admissible = match guard.queue.front() {
+                    None => false,
+                    Some(head) => Self::has_room(&w, head, cfg.policy),
+                };
+                if !admissible {
+                    break;
+                }
+                match cfg.policy {
+                    AdmissionPolicy::Static => {
+                        if let Err(e) =
+                            Self::admit_static_chunk(&mut w, &mut guard.queue, cfg)
+                        {
+                            guard.fatal = Some(e);
+                            guard.done = true;
+                            cv.notify_all();
+                            return;
+                        }
+                    }
+                    _ => {
+                        let Some(q) = guard.queue.pop_front() else { break };
+                        // idle/earliest-start jump, straight to the ready
+                        // time this worker is about to seat
+                        if q.ready_ms > w.clock_ms {
+                            w.clock_ms = q.ready_ms;
+                        }
+                        if let Err(e) = Self::admit_one(&mut w, q, cfg) {
+                            guard.fatal = Some(e);
+                            guard.done = true;
+                            cv.notify_all();
+                            return;
+                        }
+                    }
+                }
+                guard.idle_spins = 0;
+                let now_bytes = w.executor.live_bytes();
+                guard.pool_live_bytes =
+                    guard.pool_live_bytes - guard.cached_live_bytes[i] + now_bytes;
+                guard.cached_live_bytes[i] = now_bytes;
+                guard.live_counts[i] = w.live.len();
+                guard.clocks[i] = w.clock_ms;
+                let live_now: usize = guard.live_counts.iter().sum();
+                guard.peak_in_flight = guard.peak_in_flight.max(live_now);
+                if matches!(cfg.policy, AdmissionPolicy::Static) {
+                    break; // one chunk per drained worker, as in the twin
+                }
+            }
+
+            if !w.live.is_empty() {
+                // ── one decode round, lock released ──────────────────
+                guard.rounds += 1;
+                let live_now: usize = guard.live_counts.iter().sum();
+                guard.in_flight_sum += live_now;
+                guard.peak_in_flight = guard.peak_in_flight.max(live_now);
+                drop(guard);
+                let round_t0 = Instant::now();
+                let stepped = w.executor.step_round(&mut w.rng, w.clock_ms);
+                // stall injection/observation inflates the clock on top
+                // of the measured compute
+                w.clock_ms +=
+                    round_t0.elapsed().as_secs_f64() * 1e3 + w.executor.take_stall_ms();
+                guard = match lock.lock() {
+                    Ok(g) => g,
+                    Err(_) => return,
+                };
+                guard.clocks[i] = w.clock_ms;
+                match stepped {
+                    Ok(events) => {
+                        // pool-wide concurrent residency, sampled
+                        // post-round / pre-retirement
+                        let round_bytes = w.executor.live_bytes();
+                        let others = guard.pool_live_bytes - guard.cached_live_bytes[i];
+                        guard.peak_kv_bytes = guard.peak_kv_bytes.max(others + round_bytes);
+                        w.peak_kv_bytes = w.peak_kv_bytes.max(round_bytes);
+                        guard.worker_peaks[i] = w.peak_kv_bytes;
+                        let sh = &mut *guard;
+                        if let Err(e) = Self::apply_round_events(
+                            i,
+                            &mut w,
+                            events,
+                            &mut sh.queue,
+                            &mut sh.ledger,
+                            cfg,
+                            max_attempts,
+                        ) {
+                            sh.fatal = Some(e);
+                            sh.done = true;
+                            cv.notify_all();
+                            return;
+                        }
+                        let now_bytes = w.executor.live_bytes();
+                        guard.pool_live_bytes =
+                            guard.pool_live_bytes - guard.cached_live_bytes[i] + now_bytes;
+                        guard.cached_live_bytes[i] = now_bytes;
+                        guard.live_counts[i] = w.live.len();
+                        guard.idle_spins = 0;
+                        // wake idle peers: retirements may have freed
+                        // room, requeues may have repopulated the head
+                        cv.notify_all();
+                    }
+                    Err(err) => {
+                        // ── whole-worker crash = this thread dies ────
+                        guard.pool_live_bytes -= guard.cached_live_bytes[i];
+                        guard.cached_live_bytes[i] = 0;
+                        guard.live_counts[i] = 0;
+                        let sh = &mut *guard;
+                        let msg = Self::contain_crash(
+                            i,
+                            &mut w,
+                            err,
+                            &mut sh.queue,
+                            &mut sh.ledger,
+                            cfg,
+                            max_attempts,
+                        );
+                        sh.crashed_workers.push((i, msg));
+                        sh.alive -= 1;
+                        if sh.alive == 0 && !sh.queue.is_empty() {
+                            // last worker standing just died: shed what's
+                            // left so every request stays accounted for
+                            let now = sh.clocks.iter().copied().fold(0.0f64, f64::max);
+                            Self::shed_queue(&mut sh.queue, now, &mut sh.ledger);
+                        }
+                        cv.notify_all();
+                        return;
+                    }
+                }
+                continue;
+            }
+
+            // ── idle: terminate, or wait for work / peer progress ────
+            let live_total: usize = guard.live_counts.iter().sum();
+            if guard.queue.is_empty() && live_total == 0 {
+                guard.done = true;
+                cv.notify_all();
+                return;
+            }
+            if live_total == 0 && !guard.queue.is_empty() {
+                // every worker idle yet nobody admitted the head: spin a
+                // bounded number of times so an impossible head becomes a
+                // loud invariant error, not a silent hang (the twin's
+                // equivalent ends in its terminal-outcome-count bail)
+                guard.idle_spins += 1;
+                if guard.idle_spins > 50_000 {
+                    guard.fatal = Some(anyhow!(
+                        "threaded pool stuck: no worker can admit the queue head \
+                         ({} queued, {} of {} workers alive)",
+                        guard.queue.len(),
+                        guard.alive,
+                        guard.live_counts.len()
+                    ));
+                    guard.done = true;
+                    cv.notify_all();
+                    return;
+                }
+            }
+            guard = match cv.wait_timeout(guard, Duration::from_millis(1)) {
+                Ok((g, _)) => g,
+                Err(_) => return,
+            };
+        }
     }
 
     /// The worker that should admit the queue head, and when it could
@@ -2204,5 +2774,215 @@ mod tests {
             counts.completed + counts.failed + counts.deadline_exceeded + counts.shed,
             8
         );
+    }
+
+    #[test]
+    fn backoff_stays_finite_and_capped() {
+        // regression: retry_backoff used to compute backoff * 2^(attempt-1)
+        // unclamped, so a deep retry ladder pushed ready_ms to infinity
+        // and the request silently never re-admitted
+        let cfg = ServeCfg::continuous(2).with_backoff(1.0);
+        for attempt in [1usize, 10, 61, 80, 1_000, 1 << 20, usize::MAX] {
+            let b = retry_backoff(&cfg, attempt);
+            assert!(b.is_finite(), "attempt {attempt} overflowed to {b}");
+            assert!(b >= 0.0, "attempt {attempt} went negative: {b}");
+            assert!(
+                b <= cfg.max_backoff_ms,
+                "attempt {attempt} escaped the clamp: {b} > {}",
+                cfg.max_backoff_ms
+            );
+        }
+        // plain doubling below the cap is untouched
+        assert_eq!(retry_backoff(&cfg, 1), 1.0);
+        assert_eq!(retry_backoff(&cfg, 3), 4.0);
+        // a tight explicit cap wins as soon as doubling crosses it
+        let tight = ServeCfg::continuous(2).with_backoff(100.0).with_max_backoff(150.0);
+        assert_eq!(retry_backoff(&tight, 1), 100.0);
+        assert_eq!(retry_backoff(&tight, 5), 150.0);
+    }
+
+    /// Faults every step of request `victim` until `faults_left` runs
+    /// out, then decodes it normally — drives the retry ladder deep
+    /// enough that an unclamped exponential backoff would overflow.
+    struct DeepFlakyExec {
+        victim: u64,
+        faults_left: usize,
+        live: Vec<(u64, usize)>,
+    }
+
+    impl StepExecutor for DeepFlakyExec {
+        fn projected_bytes(&self, _req: &TokenRequest) -> usize {
+            1
+        }
+
+        fn admit(&mut self, req: &TokenRequest) -> Result<()> {
+            self.live.push((req.id, req.max_new_tokens.max(1)));
+            Ok(())
+        }
+
+        fn step_round(&mut self, _rng: &mut Rng, _now_ms: f64) -> Result<Vec<StepEvent>> {
+            let mut events = Vec::new();
+            for (id, left) in &mut self.live {
+                if *id == self.victim && self.faults_left > 0 {
+                    self.faults_left -= 1;
+                    events.push(StepEvent::faulted(
+                        *id,
+                        StepFault::Error("deep flake".into()),
+                    ));
+                    continue;
+                }
+                *left -= 1;
+                events.push(StepEvent {
+                    id: *id,
+                    tokens: vec![7],
+                    steps: 1,
+                    proposed: 0,
+                    accepted: 0,
+                    finished: *left == 0,
+                    fault: None,
+                });
+            }
+            Ok(events)
+        }
+
+        fn retire(&mut self, id: u64) {
+            self.live.retain(|(i, _)| *i != id);
+        }
+
+        fn live_bytes(&self) -> usize {
+            self.live.len()
+        }
+    }
+
+    #[test]
+    fn deep_retry_ladder_recovers_within_finite_virtual_time() {
+        // 80 consecutive faults: without the max_backoff_ms clamp the
+        // final retry's ready_ms would sit at 1.0 * 2^79 ms ≈ 6e23 —
+        // the request would never re-admit. With the clamp every wait
+        // is <= max_backoff_ms and the 81st attempt completes.
+        let cfg = ServeCfg::continuous(2).with_retries(80).with_backoff(1.0);
+        let exec = DeepFlakyExec { victim: 0, faults_left: 80, live: Vec::new() };
+        let report = Scheduler::run(reqs(2, 0.0, 3), exec, &cfg, 0).unwrap();
+        assert_eq!(report.goodput(), 2, "both requests must complete");
+        let victim = report.completed.iter().find(|c| c.id == 0).unwrap();
+        assert_eq!(victim.attempts, 81, "80 faults then one clean attempt");
+        assert!(report.makespan_ms.is_finite(), "{}", report.makespan_ms);
+        assert!(
+            report.makespan_ms <= 81.0 * cfg.max_backoff_ms,
+            "capped backoff bounds the total wait: {}",
+            report.makespan_ms
+        );
+    }
+
+    /// Paged-executor stand-in whose victim request cannot fit the pool:
+    /// every round it preempts the victim (first `preempts_left` times)
+    /// while the other requests decode normally.
+    struct NeverFitsExec {
+        victim: u64,
+        preempts_left: usize,
+        live: Vec<(u64, usize)>,
+    }
+
+    impl StepExecutor for NeverFitsExec {
+        fn projected_bytes(&self, _req: &TokenRequest) -> usize {
+            1
+        }
+
+        fn admit(&mut self, req: &TokenRequest) -> Result<()> {
+            self.live.push((req.id, req.max_new_tokens.max(1)));
+            Ok(())
+        }
+
+        fn step_round(&mut self, _rng: &mut Rng, _now_ms: f64) -> Result<Vec<StepEvent>> {
+            let mut events = Vec::new();
+            for (id, left) in &mut self.live {
+                if *id == self.victim && self.preempts_left > 0 {
+                    self.preempts_left -= 1;
+                    events.push(StepEvent::faulted(*id, StepFault::Preempted));
+                    continue;
+                }
+                *left -= 1;
+                events.push(StepEvent {
+                    id: *id,
+                    tokens: vec![9],
+                    steps: 1,
+                    proposed: 0,
+                    accepted: 0,
+                    finished: *left == 0,
+                    fault: None,
+                });
+            }
+            Ok(events)
+        }
+
+        fn retire(&mut self, id: u64) {
+            self.live.retain(|(i, _)| *i != id);
+        }
+
+        fn live_bytes(&self) -> usize {
+            self.live.len()
+        }
+    }
+
+    #[test]
+    fn never_fitting_request_fails_loudly_instead_of_livelocking() {
+        // preemptions never count against max_retries, so before the
+        // no-progress detector this schedule spun forever: the victim is
+        // preempted and requeued every round once its peers have drained
+        let exec = NeverFitsExec { victim: 1, preempts_left: usize::MAX, live: Vec::new() };
+        let report =
+            Scheduler::run(reqs(3, 0.0, 3), exec, &ServeCfg::continuous(2), 0).unwrap();
+        assert_eq!(report.completed.len(), 3, "every request gets one terminal outcome");
+        assert_eq!(report.goodput(), 2);
+        let victim = report.completed.iter().find(|c| c.id == 1).unwrap();
+        match &victim.outcome {
+            RequestOutcome::Failed { error } => {
+                assert!(
+                    error.contains(POOL_EXHAUSTED_PREFIX),
+                    "failure must carry the pool-exhausted context: {error}"
+                );
+                assert!(
+                    error.contains("preempted"),
+                    "failure must name the preemption cycle: {error}"
+                );
+            }
+            other => panic!("expected Failed, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn never_fitting_request_fails_loudly_in_threaded_mode_too() {
+        // the detector lives in apply_round_events, shared by both modes:
+        // the OS-thread pool must classify the livelock identically
+        let exec = NeverFitsExec { victim: 1, preempts_left: usize::MAX, live: Vec::new() };
+        let cfg = ServeCfg::continuous(2).with_threads(true);
+        let report = Scheduler::run(reqs(3, 0.0, 3), exec, &cfg, 0).unwrap();
+        assert_eq!(report.completed.len(), 3);
+        assert_eq!(report.goodput(), 2);
+        let victim = report.completed.iter().find(|c| c.id == 1).unwrap();
+        match &victim.outcome {
+            RequestOutcome::Failed { error } => {
+                assert!(error.contains(POOL_EXHAUSTED_PREFIX), "{error}");
+            }
+            other => panic!("expected Failed, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn bounded_preemption_churn_is_not_flagged_as_livelock() {
+        // property at the detector's boundary: exactly the threshold
+        // count of consecutive no-progress preemptions, then the pool
+        // frees up — feasible churn must never be converted to Failed
+        let exec = NeverFitsExec {
+            victim: 0,
+            preempts_left: MAX_NO_PROGRESS_PREEMPT_CYCLES,
+            live: Vec::new(),
+        };
+        let report =
+            Scheduler::run(reqs(2, 0.0, 3), exec, &ServeCfg::continuous(2), 0).unwrap();
+        assert_eq!(report.goodput(), 2, "threshold-grazing churn still completes");
+        let victim = report.completed.iter().find(|c| c.id == 0).unwrap();
+        assert_eq!(victim.outcome, RequestOutcome::Completed);
+        assert_eq!(victim.generated, 3, "retried decode is a full fresh pass");
     }
 }

@@ -15,7 +15,7 @@ use crate::runtime::ModelExecutable;
 use crate::tensor::ops::argmax;
 use crate::util::Rng;
 use anyhow::Result;
-use std::rc::Rc;
+use std::sync::Arc;
 
 /// Anything that can produce per-position logits for a token sequence.
 /// Implemented by the PJRT executables (serving path) and the pure-Rust
@@ -33,7 +33,7 @@ pub trait LogitsModel {
     }
 }
 
-impl LogitsModel for Rc<ModelExecutable> {
+impl LogitsModel for Arc<ModelExecutable> {
     fn seq_logits(&self, tokens: &[u8]) -> Result<Vec<Vec<f32>>> {
         self.run_padded(tokens)
     }
@@ -81,8 +81,12 @@ pub trait DecodeSession<M: ?Sized> {
 }
 
 /// Models that decode incrementally through per-request sessions.
-pub trait SessionModel: LogitsModel + Sized {
-    type Session: DecodeSession<Self>;
+///
+/// `Sync` on the model and `Send` on its sessions are what let the
+/// serving executors move onto real OS threads (`serve.threads`): every
+/// worker borrows the same immutable model while owning its sessions.
+pub trait SessionModel: LogitsModel + Sized + Sync {
+    type Session: DecodeSession<Self> + Send;
     fn new_session(&self) -> Self::Session;
     /// Session expected to hold at most `cap_t` tokens — an admission-time
     /// sizing hint so serving sessions allocate only their projected peak
@@ -171,7 +175,7 @@ impl SessionModel for Transformer {
     }
 }
 
-impl SessionModel for Rc<ModelExecutable> {
+impl SessionModel for Arc<ModelExecutable> {
     type Session = ReplaySession;
 
     fn new_session(&self) -> ReplaySession {

@@ -17,4 +17,4 @@ pub use pattern::{Pattern, Selector};
 pub use rng::Rng;
 pub use stats::Summary;
 pub use table::Table;
-pub use timer::{bench, BenchResult, Timer};
+pub use timer::{bench, median_of, BenchResult, Timer};

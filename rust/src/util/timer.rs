@@ -45,6 +45,19 @@ impl BenchResult {
     }
 }
 
+/// Median of `samples` draws of `f()` — the shared building block for
+/// wall-clock perf gates (`bench_decode_kv`'s packed≥f32 gate,
+/// `bench_sharded`'s threaded-scaling gate). A single noisy draw on a
+/// loaded CI machine flips a comparison; the median of a small odd count
+/// doesn't. Callers wrap this in `testing::retry_timing` for bounded
+/// retries on top.
+pub fn median_of<F: FnMut() -> f64>(samples: usize, mut f: F) -> f64 {
+    let n = samples.max(1);
+    let mut xs: Vec<f64> = (0..n).map(|_| f()).collect();
+    xs.sort_by(|a, b| a.total_cmp(b));
+    xs[n / 2]
+}
+
 /// Run `f` `iters` times after `warmup` untimed runs; report median/mean/min.
 pub fn bench<F: FnMut()>(name: &str, warmup: usize, iters: usize, mut f: F) -> BenchResult {
     for _ in 0..warmup {
@@ -80,6 +93,15 @@ mod tests {
         assert_eq!(r.iters, 5);
         assert!(r.median_s >= 0.0);
         assert!(r.min_s <= r.median_s);
+    }
+
+    #[test]
+    fn median_of_is_order_insensitive() {
+        let mut vals = [5.0, 1.0, 9.0, 3.0, 7.0].into_iter();
+        let m = median_of(5, || vals.next().unwrap());
+        assert_eq!(m, 5.0);
+        let m1 = median_of(1, || 42.0);
+        assert_eq!(m1, 42.0);
     }
 
     #[test]

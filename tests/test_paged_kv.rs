@@ -7,8 +7,7 @@
 //! materializing shared prompt prefixes once per worker instead of once
 //! per request.
 
-use std::cell::RefCell;
-use std::rc::Rc;
+use std::sync::{Arc, Mutex};
 
 use angelslim::data::TokenRequest;
 use angelslim::models::{BlockPool, PagedKvCache, Transformer};
@@ -63,14 +62,14 @@ fn mixed_reqs(n: usize, max_new: usize) -> Vec<TokenRequest> {
 fn pool_invariants_hold_under_random_op_sequences() {
     check(24, |rng: &mut Rng| {
         let bt = 4usize;
-        let pool = Rc::new(RefCell::new(BlockPool::new_bounded(
+        let pool = Arc::new(Mutex::new(BlockPool::new_bounded(
             2,
             8,
             bt,
             12 * 2 * 2 * bt * 8 * 4, // 12 pages
         )));
         let mut caches: Vec<PagedKvCache> =
-            (0..3).map(|_| PagedKvCache::new(Rc::clone(&pool))).collect();
+            (0..3).map(|_| PagedKvCache::new(Arc::clone(&pool))).collect();
         let mut mirrors: Vec<Vec<u8>> = vec![Vec::new(); caches.len()];
 
         for _ in 0..80 {
@@ -125,11 +124,11 @@ fn pool_invariants_hold_under_random_op_sequences() {
                 }
             }
             assert_eq!(caches[ci].len(), mirrors[ci].len(), "cache/mirror drifted");
-            pool.borrow().check_invariants();
+            pool.lock().unwrap().check_invariants();
         }
 
         drop(caches);
-        let p = pool.borrow();
+        let p = pool.lock().unwrap();
         p.check_invariants();
         assert_eq!(
             p.in_use_blocks(),
@@ -145,36 +144,36 @@ fn pool_invariants_hold_under_random_op_sequences() {
 #[test]
 fn attach_then_diverge_forks_instead_of_corrupting_the_shared_page() {
     let bt = 4usize;
-    let pool = Rc::new(RefCell::new(BlockPool::new(2, 8, bt)));
+    let pool = Arc::new(Mutex::new(BlockPool::new(2, 8, bt)));
     let prompt: Vec<u8> = (0..6).map(|i| i as u8).collect(); // 1 full + 1 partial page
 
-    let mut a = PagedKvCache::new(Rc::clone(&pool));
+    let mut a = PagedKvCache::new(Arc::clone(&pool));
     assert_eq!(a.attach_prefix(&prompt), 0, "nothing sealed yet");
     a.prepare_append(prompt.len()).unwrap();
     a.advance(prompt.len());
     a.seal_prefix(&prompt);
 
-    let mut b = PagedKvCache::new(Rc::clone(&pool));
+    let mut b = PagedKvCache::new(Arc::clone(&pool));
     assert_eq!(b.attach_prefix(&prompt), bt, "full page attaches, partial does not");
     b.prepare_append(prompt.len()).unwrap();
     b.advance(prompt.len());
     assert_eq!(b.table()[0], a.table()[0], "first page shared");
     assert_ne!(b.table()[1], a.table()[1], "partial page is private");
-    assert_eq!(pool.borrow().refcount(a.table()[0]), 2);
+    assert_eq!(pool.lock().unwrap().refcount(a.table()[0]), 2);
 
     // rolling back *into* the shared page and diverging must fork it
     // copy-on-write: b gets a private copy of the first two rows while
     // a's view and the sealed index entry stay untouched
     b.truncate(2);
-    assert_eq!(pool.borrow().refcount(a.table()[0]), 2, "rollback into a page keeps the ref");
+    assert_eq!(pool.lock().unwrap().refcount(a.table()[0]), 2, "rollback into a page keeps the ref");
     b.prepare_append(1).unwrap();
     b.advance(1);
     assert_ne!(b.table()[0], a.table()[0], "mid-page divergence forked the shared page");
-    assert_eq!(pool.borrow().refcount(a.table()[0]), 1, "b dropped its shared ref");
-    assert!(pool.borrow().is_sealed(a.table()[0]), "shared page stays sealed for reuse");
+    assert_eq!(pool.lock().unwrap().refcount(a.table()[0]), 1, "b dropped its shared ref");
+    assert!(pool.lock().unwrap().is_sealed(a.table()[0]), "shared page stays sealed for reuse");
     assert_eq!(a.len(), 6);
     assert_eq!(b.len(), 3);
-    pool.borrow().check_invariants();
+    pool.lock().unwrap().check_invariants();
 }
 
 // ─────────────────────────────────────────────────────────────────────
