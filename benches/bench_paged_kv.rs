@@ -53,6 +53,7 @@ fn shared_prefix_trace(n: usize) -> Vec<TokenRequest> {
             max_new_tokens: SHARED_NEW,
             arrival_ms: 0.0,
             deadline_ms: None,
+            class: Default::default(),
         })
         .collect()
 }

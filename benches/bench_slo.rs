@@ -1,0 +1,183 @@
+//! SLO-aware serving benchmark: class-priority admission + admission-time
+//! compression routing vs the class-blind FIFO pool on the same seeded
+//! mixed-class bursty trace (interactive / long-context / multimodal /
+//! batch) over the hermetic fixture model — no artifacts required, so it
+//! runs on a clean checkout and in CI smoke mode.
+//!
+//! The class-aware pool seats the highest-priority queued request next
+//! (strict FIFO within a class, aging bound so batch never starves),
+//! routes long-context prefills through the STeM sparse-attention path,
+//! and token-prunes multimodal prompts before KV admission. The
+//! class-blind pool is the same `WorkerPool` with `classes` unset —
+//! byte-identical to the historical FIFO scheduler.
+//!
+//! Prints a human table plus one machine-readable JSON line (prefix
+//! `BENCH_JSON `) so the perf trajectory gains an SLO series next to
+//! `bench_sharded` / `bench_faults`.
+//!
+//!     cargo bench --bench bench_slo            # full run
+//!     cargo bench --bench bench_slo -- --quick # CI smoke mode
+//!
+//! Expected shape: equal goodput (every request completes in both
+//! modes), strictly lower interactive p99 TTFT under the class-aware
+//! pool (asserted under retry_timing), sparse prefills > 0 and pruned
+//! prompt tokens > 0 only in the class-aware run, and interactive /
+//! batch outputs bit-identical across modes (their prompts and decode
+//! path are untouched by the routing).
+
+use angelslim::data::{RequestGen, TokenRequest};
+use angelslim::models::Transformer;
+use angelslim::server::{ClassPolicy, RequestClass, ServeCfg, ServeReport, ServingEngine};
+use angelslim::util::fixtures::{fixture_corpus, fixture_target, FixtureSpec};
+use angelslim::util::table::{f2, Table};
+use angelslim::util::testing::retry_timing;
+use angelslim::util::Summary;
+
+const WORKERS: usize = 2;
+const MAX_IN_FLIGHT: usize = 2; // per worker: keeps the shared queue deep
+// long prompts stay below the fixture's max_t (48) so decode room is
+// never zero — a request with no decode budget finishes empty without
+// ever prefilling, which would undercount sparse routing
+const LONG_PROMPT: usize = 32;
+const MM_VISUAL: usize = 12;
+const MM_AUDIO: usize = 8;
+
+fn trace(corpus: &[u8], bursts: usize, per_burst: usize) -> Vec<TokenRequest> {
+    let mut gen = RequestGen::new(corpus.to_vec(), 42);
+    gen.prompt_len = 8;
+    gen.max_new_tokens = 8;
+    // bursts land nearly simultaneously so admission order — not arrival
+    // order — decides who waits behind the long-context prefills
+    gen.take_mixed_classes(bursts, per_burst, 0.05, LONG_PROMPT, MM_VISUAL, MM_AUDIO)
+}
+
+fn run(corpus: &[u8], bursts: usize, per_burst: usize, aware: bool) -> ServeReport {
+    let model = fixture_target(3);
+    let mut cfg = ServeCfg::continuous(MAX_IN_FLIGHT).with_workers(WORKERS);
+    if aware {
+        cfg = cfg.with_classes(ClassPolicy::default());
+    }
+    ServingEngine::serve_scheduled::<Transformer, _>(
+        trace(corpus, bursts, per_burst),
+        &model,
+        None,
+        &cfg,
+        0,
+    )
+    .expect("slo serve")
+}
+
+/// TTFT summary of one class's completed requests.
+fn class_ttft(r: &ServeReport, name: &str) -> Summary {
+    Summary::of(
+        &r.completed
+            .iter()
+            .filter(|c| c.class.name() == name && c.is_completed())
+            .map(|c| c.ttft_ms)
+            .collect::<Vec<_>>(),
+    )
+}
+
+fn main() {
+    let quick = std::env::args().any(|a| a == "--quick");
+    let (bursts, per_burst) = if quick { (3, 10) } else { (6, 10) };
+    let n = bursts * per_burst;
+
+    let spec = FixtureSpec::default();
+    let corpus = fixture_corpus(&spec, 8_192, 9);
+
+    // retry_timing: the virtual clock charges measured wall time per
+    // round, so declare a regression only after several skewed runs
+    let (blind, aware) = retry_timing(5, || {
+        let blind = run(&corpus, bursts, per_burst, false);
+        let aware = run(&corpus, bursts, per_burst, true);
+
+        // equal goodput: no faults, no deadlines — both modes must
+        // complete the entire trace
+        assert_eq!(blind.goodput(), n, "class-blind pool must complete the trace");
+        assert_eq!(aware.goodput(), n, "class-aware pool must complete the trace");
+
+        // compression routing fires only under the class policy
+        assert_eq!(blind.sparse_prefills, 0, "no sparse routing without classes");
+        assert_eq!(blind.pruned_prompt_tokens, 0, "no pruning without classes");
+        assert!(aware.sparse_prefills > 0, "LongContext must prefill sparse");
+        assert!(aware.pruned_prompt_tokens > 0, "Multimodal must be pruned");
+
+        // interactive/batch prompts and decode are untouched by the
+        // routing, so their outputs are bit-identical across modes
+        for (b, a) in blind.completed.iter().zip(&aware.completed) {
+            assert_eq!(b.id, a.id, "reports are ordered by id");
+            if matches!(b.class, RequestClass::Interactive | RequestClass::Batch) {
+                assert_eq!(
+                    b.output, a.output,
+                    "request {} ({}) output must not depend on scheduling",
+                    b.id,
+                    b.class.name()
+                );
+            }
+        }
+
+        let bp99 = class_ttft(&blind, "interactive").p99;
+        let ap99 = class_ttft(&aware, "interactive").p99;
+        if ap99 < bp99 {
+            Ok((blind, aware))
+        } else {
+            Err(format!(
+                "class-aware admission must strictly beat class-blind FIFO on \
+                 interactive p99 TTFT at equal goodput (aware {ap99:.3} ms vs \
+                 blind {bp99:.3} ms)"
+            ))
+        }
+    });
+
+    let mut table = Table::new(
+        "SLO-aware serving: class-aware vs class-blind FIFO (fixture model, mixed-class bursty trace)",
+        &["class", "blind TTFT p50", "blind TTFT p99", "aware TTFT p50", "aware TTFT p99"],
+    );
+    for name in RequestClass::NAMES {
+        let b = class_ttft(&blind, name);
+        let a = class_ttft(&aware, name);
+        table.row_strs(&[name, &f2(b.p50), &f2(b.p99), &f2(a.p50), &f2(a.p99)]);
+    }
+    table.print();
+    println!(
+        "routing: {} sparse prefills, {} multimodal prompt tokens pruned \
+         (class-aware run only)",
+        aware.sparse_prefills, aware.pruned_prompt_tokens
+    );
+
+    let j = |r: &ServeReport| {
+        let i = class_ttft(r, "interactive");
+        let b = class_ttft(r, "batch");
+        format!(
+            "\"goodput\":{},\"tps\":{:.2},\"makespan_ms\":{:.3},\
+             \"interactive_ttft_p50_ms\":{:.3},\"interactive_ttft_p99_ms\":{:.3},\
+             \"batch_ttft_p99_ms\":{:.3},\
+             \"sparse_prefills\":{},\"pruned_prompt_tokens\":{}",
+            r.goodput(),
+            r.virtual_tps(),
+            r.makespan_ms,
+            i.p50,
+            i.p99,
+            b.p99,
+            r.sparse_prefills,
+            r.pruned_prompt_tokens,
+        )
+    };
+    let improvement = class_ttft(&blind, "interactive").p99
+        / class_ttft(&aware, "interactive").p99.max(1e-12);
+    println!(
+        "BENCH_JSON {{\"bench\":\"slo_serve\",\"n_requests\":{n},\
+         \"workers\":{WORKERS},\"max_in_flight\":{MAX_IN_FLIGHT},\
+         \"blind\":{{{}}},\"aware\":{{{}}},\
+         \"interactive_p99_speedup\":{improvement:.3},\"quick\":{quick}}}",
+        j(&blind),
+        j(&aware),
+    );
+    println!(
+        "shape: equal goodput in both modes; interactive p99 TTFT strictly \
+         lower under class-aware admission; sparse prefills and multimodal \
+         pruning fire only under the class policy; interactive/batch outputs \
+         bit-identical across modes."
+    );
+}

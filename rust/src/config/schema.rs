@@ -14,7 +14,7 @@
 
 use super::yaml::{parse, Yaml};
 use crate::coordinator::{PassKind, PassRegistry};
-use crate::server::{AdmissionPolicy, CrashPoint, FaultPlan, ServeCfg};
+use crate::server::{AdmissionPolicy, ClassPolicy, CrashPoint, FaultPlan, ServeCfg};
 use anyhow::{bail, Context, Result};
 
 #[derive(Clone, Debug, PartialEq)]
@@ -346,6 +346,11 @@ impl SlimConfig {
             plan.validate(self.serve.workers)
                 .context("serve.fault: invalid fault plan")?;
         }
+        if let Some(policy) = &self.serve.classes {
+            policy
+                .validate()
+                .context("serve.classes: invalid class policy")?;
+        }
         Ok(())
     }
 }
@@ -356,6 +361,7 @@ impl SlimConfig {
 /// (nothing injects faults in a plain run) and are rejected loudly.
 fn serve_from_yaml(serve: &Yaml) -> Result<ServeCfg> {
     let fault = fault_from_yaml(serve)?;
+    let classes = classes_from_yaml(serve)?;
     if fault.is_none() {
         for knob in ["max_retries", "retry_backoff_ms", "max_backoff_ms"] {
             if serve.get(knob).is_some() {
@@ -412,6 +418,7 @@ fn serve_from_yaml(serve: &Yaml) -> Result<ServeCfg> {
         retry_backoff_ms: stage_f64(serve, "retry_backoff_ms", "serve")?.unwrap_or(1.0),
         max_backoff_ms: stage_f64(serve, "max_backoff_ms", "serve")?.unwrap_or(60_000.0),
         fault,
+        classes,
     })
 }
 
@@ -474,6 +481,104 @@ fn fault_from_yaml(serve: &Yaml) -> Result<Option<FaultPlan>> {
         ),
     }
     Ok(Some(plan))
+}
+
+/// The knobs a `serve.classes:` block may carry — the four class names
+/// plus the aging/routing knobs. Anything else (a typo like
+/// `intractive:`) is a loud error, never a silently ignored SLO.
+const CLASS_KEYS: &[&str] = &[
+    "interactive",
+    "long_context",
+    "multimodal",
+    "batch",
+    "aging_ms",
+    "sparse_block",
+    "sparse_budget",
+    "multimodal_retain",
+];
+
+/// The knobs one class entry may carry.
+const CLASS_SLO_KEYS: &[&str] = &["ttft_slo_ms", "latency_slo_ms", "deadline_ms", "priority"];
+
+/// Parse the nested `serve.classes:` block into a [`ClassPolicy`]. Every
+/// knob defaults from [`ClassPolicy::default`], so a bare `classes: {}` or
+/// a partial block (only the classes you want to re-tune) is valid; the
+/// assembled policy is range-checked by `ClassPolicy::validate` in
+/// [`SlimConfig::validate`].
+fn classes_from_yaml(serve: &Yaml) -> Result<Option<ClassPolicy>> {
+    let classes = match serve.get("classes") {
+        None => return Ok(None),
+        Some(c) => c,
+    };
+    match classes {
+        Yaml::Map(m) => {
+            if let Some(unknown) = m.keys().find(|k| !CLASS_KEYS.contains(&k.as_str())) {
+                bail!(
+                    "serve.classes: unknown knob `{unknown}` \
+                     (allowed: {CLASS_KEYS:?})"
+                );
+            }
+        }
+        // a bare `classes:` key enables the default policy
+        Yaml::Null => return Ok(Some(ClassPolicy::default())),
+        other => bail!("serve.classes must be a map of class knobs, got `{other}`"),
+    }
+    let scope = "serve.classes";
+    let mut policy = ClassPolicy::default();
+    if let Some(v) = stage_f64(classes, "aging_ms", scope)? {
+        policy.aging_ms = v;
+    }
+    if let Some(v) = stage_i64(classes, "sparse_block", scope)? {
+        policy.sparse_block = non_negative(v, "serve.classes.sparse_block")?;
+    }
+    if let Some(v) = stage_f64(classes, "sparse_budget", scope)? {
+        policy.sparse_budget = v;
+    }
+    if let Some(v) = stage_f64(classes, "multimodal_retain", scope)? {
+        policy.multimodal_retain = v;
+    }
+    for (name, slo) in [
+        ("interactive", &mut policy.interactive),
+        ("long_context", &mut policy.long_context),
+        ("multimodal", &mut policy.multimodal),
+        ("batch", &mut policy.batch),
+    ] {
+        let entry = match classes.get(name) {
+            None => continue,
+            Some(e) => e,
+        };
+        match entry {
+            Yaml::Map(m) => {
+                if let Some(unknown) =
+                    m.keys().find(|k| !CLASS_SLO_KEYS.contains(&k.as_str()))
+                {
+                    bail!(
+                        "serve.classes.{name}: unknown knob `{unknown}` \
+                         (allowed: {CLASS_SLO_KEYS:?})"
+                    );
+                }
+            }
+            other => bail!(
+                "serve.classes.{name} must be a map of SLO knobs, got `{other}`"
+            ),
+        }
+        let scope = format!("serve.classes.{name}");
+        if let Some(v) = stage_f64(entry, "ttft_slo_ms", &scope)? {
+            slo.ttft_slo_ms = v;
+        }
+        if let Some(v) = stage_f64(entry, "latency_slo_ms", &scope)? {
+            slo.latency_slo_ms = v;
+        }
+        if let Some(v) = stage_f64(entry, "deadline_ms", &scope)? {
+            slo.deadline_ms = Some(v);
+        }
+        if let Some(v) = stage_i64(entry, "priority", &scope)? {
+            slo.priority = u8::try_from(v).map_err(|_| {
+                anyhow::anyhow!("{scope}.priority must be in 0..=255, got {v}")
+            })?;
+        }
+    }
+    Ok(Some(policy))
 }
 
 /// The per-stage override keys a `pipeline:` entry may carry. A key
@@ -939,6 +1044,69 @@ serve:
             "  workers: 2\n  fault:\n    crash_worker: 1\n    crash_at_ms: 5\n"
         )
         .is_ok());
+    }
+
+    #[test]
+    fn serve_classes_block_parses_into_a_policy() {
+        let c = serve_cfg(
+            "  classes:\n    aging_ms: 250\n    sparse_block: 8\n    sparse_budget: 0.25\n\
+             \x20   multimodal_retain: 0.75\n    interactive:\n      ttft_slo_ms: 20\n\
+             \x20     latency_slo_ms: 200\n      priority: 5\n    batch:\n\
+             \x20     deadline_ms: 9000\n",
+        )
+        .unwrap();
+        let p = c.serve.classes.expect("classes block parsed");
+        assert!((p.aging_ms - 250.0).abs() < 1e-12);
+        assert_eq!(p.sparse_block, 8);
+        assert!((p.sparse_budget - 0.25).abs() < 1e-12);
+        assert!((p.multimodal_retain - 0.75).abs() < 1e-12);
+        assert!((p.interactive.ttft_slo_ms - 20.0).abs() < 1e-12);
+        assert!((p.interactive.latency_slo_ms - 200.0).abs() < 1e-12);
+        assert_eq!(p.interactive.priority, 5);
+        assert_eq!(p.batch.deadline_ms, Some(9000.0));
+        // untouched classes keep the documented defaults
+        let d = crate::server::ClassPolicy::default();
+        assert_eq!(p.long_context, d.long_context);
+        assert_eq!(p.multimodal, d.multimodal);
+        // no classes block → no policy (class-blind FIFO)
+        assert!(serve_cfg("  workers: 2\n").unwrap().serve.classes.is_none());
+        // a bare `classes:` key enables the default policy
+        let e = serve_cfg("  classes:\n").unwrap();
+        assert_eq!(e.serve.classes, Some(d));
+    }
+
+    #[test]
+    fn serve_classes_rejects_misconfiguration() {
+        for (bad, why) in [
+            ("  classes:\n    intractive:\n      priority: 1\n", "typo'd class name"),
+            (
+                "  classes:\n    interactive:\n      ttft_slo: 5\n",
+                "typo'd SLO knob",
+            ),
+            ("  classes: fast\n", "scalar classes block"),
+            ("  classes:\n    interactive: fast\n", "scalar class entry"),
+            (
+                "  classes:\n    interactive:\n      priority: 300\n",
+                "priority above 255",
+            ),
+            (
+                "  classes:\n    interactive:\n      ttft_slo_ms: 0\n",
+                "zero TTFT SLO",
+            ),
+            (
+                "  classes:\n    batch:\n      deadline_ms: -1\n",
+                "negative class deadline",
+            ),
+            ("  classes:\n    aging_ms: -5\n", "negative aging bound"),
+            ("  classes:\n    sparse_block: 0\n", "zero sparse block"),
+            ("  classes:\n    sparse_budget: 1.5\n", "sparse budget above 1"),
+            (
+                "  classes:\n    multimodal_retain: 0\n",
+                "zero multimodal retain",
+            ),
+        ] {
+            assert!(serve_cfg(bad).is_err(), "{why} must fail loudly: {bad:?}");
+        }
     }
 
     #[test]

@@ -18,7 +18,8 @@ use angelslim::eval;
 use angelslim::models::Transformer;
 use angelslim::runtime::ArtifactRegistry;
 use angelslim::server::{
-    GreedyExecutor, PagedGreedyExecutor, PagedSpecExecutor, ServingEngine, SpecExecutor,
+    ClassPolicy, GreedyExecutor, PagedGreedyExecutor, PagedSpecExecutor, ServingEngine,
+    SpecExecutor,
 };
 use angelslim::util::table::{f2, Table};
 use anyhow::Result;
@@ -144,6 +145,7 @@ fn cmd_serve(spec: bool, n: usize) -> Result<()> {
     print_serve_report(
         if spec { "serve (Eagle3-style speculative)" } else { "serve (vanilla)" },
         &report,
+        None,
     );
     Ok(())
 }
@@ -159,9 +161,19 @@ fn cmd_serve_config(path: &str, n: usize) -> Result<()> {
     let mut gen = RequestGen::new(datasets.eval, cfg.global.seed ^ 0x5E7E);
     gen.prompt_len = 8;
     gen.max_new_tokens = 24;
-    let requests = gen.take(n);
+    // With a class policy configured, serve a mixed-class trace so the
+    // SLO-aware path (priority admission, sparse prefill, admission-time
+    // pruning) is actually exercised; otherwise the historical untagged
+    // stream keeps the CLI output byte-stable.
+    let requests = if serve_cfg.classes.is_some() {
+        let mut reqs = gen.take_mixed_classes(n.div_ceil(5), 5, 20.0, 24, 8, 4);
+        reqs.truncate(n);
+        reqs
+    } else {
+        gen.take(n)
+    };
     println!(
-        "serving {n} requests | policy={} workers={} max_in_flight={} kv_budget_bytes={}{} \
+        "serving {n} requests | policy={} workers={} max_in_flight={} kv_budget_bytes={}{}{} \
          mode={}",
         serve_cfg.policy.name(),
         serve_cfg.workers,
@@ -170,6 +182,11 @@ fn cmd_serve_config(path: &str, n: usize) -> Result<()> {
         match serve_cfg.kv_block_tokens {
             Some(bt) => format!(" kv_block_tokens={bt}"),
             None => String::new(),
+        },
+        if serve_cfg.classes.is_some() {
+            " classes=slo-aware"
+        } else {
+            ""
         },
         if serve_cfg.threads {
             "os-threads"
@@ -222,11 +239,15 @@ fn cmd_serve_config(path: &str, n: usize) -> Result<()> {
         Some(_) => format!("serve ({} scheduler, paged KV)", serve_cfg.policy.name()),
         None => format!("serve ({} scheduler)", serve_cfg.policy.name()),
     };
-    print_serve_report(&title, &report);
+    print_serve_report(&title, &report, serve_cfg.classes.as_ref());
     Ok(())
 }
 
-fn print_serve_report(title: &str, report: &angelslim::server::ServeReport) {
+fn print_serve_report(
+    title: &str,
+    report: &angelslim::server::ServeReport,
+    classes: Option<&ClassPolicy>,
+) {
     let mut t = Table::new(title, &["metric", "value"]);
     t.row_strs(&["requests", &report.completed.len().to_string()]);
     t.row_strs(&["tokens", &report.total_tokens.to_string()]);
@@ -258,6 +279,37 @@ fn print_serve_report(title: &str, report: &angelslim::server::ServeReport) {
     t.print();
     for (w, why) in &report.crashed_workers {
         println!("  worker {w} crashed: {why}");
+    }
+    // per-class SLO rows, only when a `serve.classes:` policy is
+    // configured (class-blind runs keep the historical output verbatim)
+    if let Some(policy) = classes {
+        let mut ct = Table::new(
+            "per-class SLO attainment",
+            &["class", "done", "failed", "ddl", "shed", "ttft p50", "ttft p99", "ttft SLO", "lat SLO"],
+        );
+        for s in report.class_breakdown(policy) {
+            if s.total() == 0 {
+                continue;
+            }
+            ct.row_strs(&[
+                s.name,
+                &s.counts.completed.to_string(),
+                &s.counts.failed.to_string(),
+                &s.counts.deadline_exceeded.to_string(),
+                &s.counts.shed.to_string(),
+                &f2(s.ttft.p50),
+                &f2(s.ttft.p99),
+                &format!("{:.0}%", s.ttft_attainment() * 100.0),
+                &format!("{:.0}%", s.latency_attainment() * 100.0),
+            ]);
+        }
+        ct.print();
+        if report.pruned_prompt_tokens > 0 {
+            println!("  multimodal admission pruning dropped {} prompt tokens", report.pruned_prompt_tokens);
+        }
+        if report.sparse_prefills > 0 {
+            println!("  long-context sparse prefills: {}", report.sparse_prefills);
+        }
     }
 }
 

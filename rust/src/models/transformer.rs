@@ -433,6 +433,62 @@ impl Transformer {
         self.head.matmul(&xf)
     }
 
+    /// [`Transformer::prefill`] through the STeM sparse-attention route:
+    /// per layer, a [`stem`](crate::sparse_attn::stem) block mask is
+    /// built from that layer's fresh Q/K/V and injected as an
+    /// [`AttnOverride::Mask`], so masked query/key pairs skip their dot
+    /// products entirely — genuine prefill-compute savings at `budget`
+    /// density. The mask spans the whole sequence, so this route is only
+    /// valid on a cold cache; a warm cache falls back to dense
+    /// [`Transformer::prefill`]. Decode is untouched either way.
+    pub fn prefill_sparse(
+        &self,
+        cache: &mut KvCache,
+        tokens: &[u8],
+        block: usize,
+        budget: f64,
+    ) -> Tensor {
+        use crate::sparse_attn::{stem, StemCfg};
+        let start = cache.len();
+        if start != 0 || tokens.len() < 2 {
+            return self.prefill(cache, tokens);
+        }
+        let t_new = tokens.len();
+        let d = self.cfg.d_model;
+        assert_eq!(cache.n_layers(), self.cfg.n_layers, "cache/model layer mismatch");
+        assert_eq!(cache.d_model(), d, "cache/model width mismatch");
+        assert!(
+            t_new <= self.cfg.max_t,
+            "session len {t_new} > max_t {}",
+            self.cfg.max_t
+        );
+        let stem_cfg = StemCfg::default();
+        let mut x = Tensor::zeros(&[t_new, d]);
+        for (i, &tok) in tokens.iter().enumerate() {
+            let e = self.embed.row(tok as usize);
+            let p = self.pos.row(i);
+            let row = x.row_mut(i);
+            for j in 0..d {
+                row[j] = e[j] + p[j];
+            }
+        }
+        for (li, layer) in self.layers.iter().enumerate() {
+            let xn = self.norm(&x, &layer.ln1);
+            let (q, k, v) = self.qkv_proj(layer, &xn);
+            cache.append_layer(li, &k.data, &v.data);
+            let lk = cache.layer(li);
+            let mask = stem(&q, &k, &v, block, budget, &stem_cfg).to_token_mask();
+            let a = self.attn_mix(layer, &q, &lk.k, &lk.v, 0, &AttnOverride::Mask(mask));
+            add_inplace(&mut x.data, &a.data);
+            let xn = self.norm(&x, &layer.ln2);
+            let (m, _) = self.mlp(layer, &xn);
+            add_inplace(&mut x.data, &m.data);
+        }
+        cache.advance(t_new);
+        let xf = self.norm(&x, &self.ln_f);
+        self.head.matmul(&xf)
+    }
+
     /// One incremental decode step: process `token` at position
     /// `cache.len()` and return next-token logits. Scalar fast path for
     /// t=1 — matvec kernels throughout, no `[t, vocab]` materialization,

@@ -1,0 +1,326 @@
+//! Workload classes for SLO-aware serving.
+//!
+//! Production traffic is a mix of interactive chat, long-context
+//! prefill, multimodal, and offline batch requests, each with its own
+//! latency objective. A [`RequestClass`] tag rides on every
+//! [`TokenRequest`](crate::data::TokenRequest); a [`ClassPolicy`]
+//! (from `serve.classes:`) gives each class an SLO + priority and
+//! drives three scheduler behaviors:
+//!
+//! - **class-priority admission** over the shared FIFO (strict FIFO
+//!   within a class, an aging bound so Batch can never starve);
+//! - **admission-time compression routing**: LongContext prompts
+//!   prefill through the STeM-masked sparse-attention path, and
+//!   Multimodal prompts are pruned (IDPruner for the visual segment,
+//!   Samp for the audio segment) *before* KV admission so the pool is
+//!   charged for the pruned prompt;
+//! - **priority-aware preemption**: on KV pressure, victims are chosen
+//!   by (priority, progress) instead of progress alone.
+//!
+//! With `serve.classes:` absent everything here is inert and the pool
+//! behaves exactly as before.
+
+use crate::token_prune::audio::Samp;
+use crate::token_prune::visual::IdPruner;
+use crate::token_prune::{PruneContext, Pruner, Reducer};
+
+/// Workload class carried on every request. [`Default`] is
+/// `Interactive`, so untagged traffic keeps today's behavior.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum RequestClass {
+    /// Interactive chat: short prompts, tight TTFT.
+    Interactive,
+    /// Long-context prefill: routed through the STeM sparse-attention
+    /// prefill path when a [`ClassPolicy`] is configured.
+    LongContext,
+    /// Multimodal: the leading `visual_tokens` prompt bytes are a visual
+    /// segment and the next `audio_tokens` an audio segment; both are
+    /// token-pruned at admission when a [`ClassPolicy`] is configured.
+    Multimodal { visual_tokens: usize, audio_tokens: usize },
+    /// Offline batch: lowest priority, protected from starvation by the
+    /// policy's aging bound.
+    Batch,
+}
+
+impl Default for RequestClass {
+    fn default() -> Self {
+        RequestClass::Interactive
+    }
+}
+
+impl RequestClass {
+    /// Stable grouping key (multimodal token counts are per-request
+    /// payload, not identity).
+    pub fn name(&self) -> &'static str {
+        match self {
+            RequestClass::Interactive => "interactive",
+            RequestClass::LongContext => "long_context",
+            RequestClass::Multimodal { .. } => "multimodal",
+            RequestClass::Batch => "batch",
+        }
+    }
+
+    /// All class names, in report order.
+    pub const NAMES: [&'static str; 4] =
+        ["interactive", "long_context", "multimodal", "batch"];
+}
+
+/// Per-class service-level objective + scheduling priority.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ClassSlo {
+    /// Time-to-first-token objective (virtual-clock ms).
+    pub ttft_slo_ms: f64,
+    /// End-to-end latency objective (virtual-clock ms).
+    pub latency_slo_ms: f64,
+    /// Per-class default deadline. Precedence: per-request
+    /// `deadline_ms` > this > pool-wide `serve.deadline_ms`.
+    pub deadline_ms: Option<f64>,
+    /// Admission priority; higher wins the next admission slot.
+    pub priority: u8,
+}
+
+impl ClassSlo {
+    pub fn new(ttft_slo_ms: f64, latency_slo_ms: f64, priority: u8) -> Self {
+        ClassSlo { ttft_slo_ms, latency_slo_ms, deadline_ms: None, priority }
+    }
+}
+
+/// The `serve.classes:` policy: per-class SLOs plus the knobs for the
+/// aging bound and the admission-time compression routing.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ClassPolicy {
+    pub interactive: ClassSlo,
+    pub long_context: ClassSlo,
+    pub multimodal: ClassSlo,
+    pub batch: ClassSlo,
+    /// Starvation bound: a queued request that has waited this long
+    /// (virtual-clock ms since arrival) competes at the maximum
+    /// priority, so low-priority classes always eventually run.
+    pub aging_ms: f64,
+    /// STeM block size for the LongContext sparse-prefill route.
+    pub sparse_block: usize,
+    /// Fraction of causal key blocks each query block keeps in the
+    /// LongContext sparse-prefill route.
+    pub sparse_budget: f64,
+    /// Fraction of each multimodal segment retained by admission-time
+    /// token pruning.
+    pub multimodal_retain: f64,
+}
+
+impl Default for ClassPolicy {
+    fn default() -> Self {
+        ClassPolicy {
+            interactive: ClassSlo::new(50.0, 500.0, 3),
+            long_context: ClassSlo::new(500.0, 5_000.0, 1),
+            multimodal: ClassSlo::new(200.0, 2_000.0, 2),
+            batch: ClassSlo::new(10_000.0, 60_000.0, 0),
+            aging_ms: 500.0,
+            sparse_block: 16,
+            sparse_budget: 0.5,
+            multimodal_retain: 0.5,
+        }
+    }
+}
+
+impl ClassPolicy {
+    pub fn slo_of(&self, class: &RequestClass) -> &ClassSlo {
+        match class {
+            RequestClass::Interactive => &self.interactive,
+            RequestClass::LongContext => &self.long_context,
+            RequestClass::Multimodal { .. } => &self.multimodal,
+            RequestClass::Batch => &self.batch,
+        }
+    }
+
+    pub fn slo_of_name(&self, name: &str) -> &ClassSlo {
+        match name {
+            "interactive" => &self.interactive,
+            "long_context" => &self.long_context,
+            "multimodal" => &self.multimodal,
+            "batch" => &self.batch,
+            other => panic!("unknown request class {other:?}"),
+        }
+    }
+
+    pub fn priority_of(&self, class: &RequestClass) -> u8 {
+        self.slo_of(class).priority
+    }
+
+    /// The priority an aged-out request competes at.
+    pub fn max_priority(&self) -> u8 {
+        [&self.interactive, &self.long_context, &self.multimodal, &self.batch]
+            .iter()
+            .map(|s| s.priority)
+            .max()
+            .unwrap()
+    }
+
+    pub fn validate(&self) -> anyhow::Result<()> {
+        for (name, slo) in [
+            ("interactive", &self.interactive),
+            ("long_context", &self.long_context),
+            ("multimodal", &self.multimodal),
+            ("batch", &self.batch),
+        ] {
+            anyhow::ensure!(
+                slo.ttft_slo_ms > 0.0 && slo.latency_slo_ms > 0.0,
+                "serve.classes.{name}: SLOs must be > 0"
+            );
+            if let Some(d) = slo.deadline_ms {
+                anyhow::ensure!(d > 0.0, "serve.classes.{name}.deadline_ms must be > 0");
+            }
+        }
+        anyhow::ensure!(
+            self.aging_ms >= 0.0 && self.aging_ms.is_finite(),
+            "serve.classes.aging_ms must be finite and >= 0"
+        );
+        anyhow::ensure!(self.sparse_block > 0, "serve.classes.sparse_block must be > 0");
+        anyhow::ensure!(
+            self.sparse_budget > 0.0 && self.sparse_budget <= 1.0,
+            "serve.classes.sparse_budget must be in (0, 1]"
+        );
+        anyhow::ensure!(
+            self.multimodal_retain > 0.0 && self.multimodal_retain <= 1.0,
+            "serve.classes.multimodal_retain must be in (0, 1]"
+        );
+        Ok(())
+    }
+}
+
+// ─────────────────────────────────────────────────────────────────────
+// Admission-time multimodal prompt pruning
+// ─────────────────────────────────────────────────────────────────────
+
+/// Deterministic per-token feature for admission-time pruning: a tiny
+/// embedding of (token byte, position) so similarity structure follows
+/// the token content, with a positional ramp so order still matters.
+fn token_feature(b: u8, pos: usize) -> Vec<f32> {
+    let x = b as f32 / 255.0;
+    vec![
+        (x * std::f32::consts::TAU).sin(),
+        (x * std::f32::consts::TAU).cos(),
+        ((b % 17) as f32) / 16.0,
+        pos as f32 * 0.01,
+    ]
+}
+
+/// Deterministic per-token importance (always non-empty: the Samp
+/// reducer indexes it directly).
+fn token_importance(seg: &[u8]) -> Vec<f32> {
+    seg.iter().map(|&b| 0.05 + ((b % 31) as f32) / 31.0).collect()
+}
+
+/// Prune a multimodal prompt at admission: the leading `visual_tokens`
+/// bytes go through IDPruner, the next `audio_tokens` through Samp's
+/// merge-then-prune, and the text tail is kept verbatim. Each segment
+/// retains `ceil(len * retain)` tokens (at least 1). Returns the pruned
+/// prompt and the number of tokens dropped.
+pub fn prune_multimodal_prompt(
+    prompt: &[u8],
+    visual_tokens: usize,
+    audio_tokens: usize,
+    retain: f64,
+) -> (Vec<u8>, usize) {
+    let vis_n = visual_tokens.min(prompt.len());
+    let aud_n = audio_tokens.min(prompt.len() - vis_n);
+    let (vis, rest) = prompt.split_at(vis_n);
+    let (aud, text) = rest.split_at(aud_n);
+
+    let keep_n = |n: usize| (((n as f64) * retain).ceil() as usize).clamp(1, n.max(1));
+
+    let mut out = Vec::with_capacity(prompt.len());
+    if !vis.is_empty() {
+        let feats: Vec<Vec<f32>> =
+            vis.iter().enumerate().map(|(i, &b)| token_feature(b, i)).collect();
+        let imp = token_importance(vis);
+        let ctx = PruneContext { features: &feats, importance: &imp, retain: keep_n(vis.len()) };
+        for i in IdPruner::default().apply(&ctx) {
+            out.push(vis[i]);
+        }
+    }
+    if !aud.is_empty() {
+        let feats: Vec<Vec<f32>> =
+            aud.iter().enumerate().map(|(i, &b)| token_feature(b, i)).collect();
+        let imp = token_importance(aud);
+        let ctx = PruneContext { features: &feats, importance: &imp, retain: keep_n(aud.len()) };
+        let mut reduced = Samp::default().reduce(&ctx);
+        reduced.truncate(keep_n(aud.len()));
+        for r in reduced {
+            out.push(aud[r.first_pos]);
+        }
+    }
+    out.extend_from_slice(text);
+    let pruned = prompt.len() - out.len();
+    (out, pruned)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_policy_orders_priorities() {
+        let p = ClassPolicy::default();
+        assert!(p.interactive.priority > p.multimodal.priority);
+        assert!(p.multimodal.priority > p.long_context.priority);
+        assert!(p.long_context.priority > p.batch.priority);
+        assert_eq!(p.max_priority(), p.interactive.priority);
+        p.validate().unwrap();
+    }
+
+    #[test]
+    fn slo_lookup_matches_class() {
+        let p = ClassPolicy::default();
+        assert_eq!(
+            p.slo_of(&RequestClass::Multimodal { visual_tokens: 4, audio_tokens: 0 }),
+            &p.multimodal
+        );
+        assert_eq!(p.slo_of(&RequestClass::Batch), &p.batch);
+        for n in RequestClass::NAMES {
+            let _ = p.slo_of_name(n);
+        }
+    }
+
+    #[test]
+    fn validate_rejects_bad_knobs() {
+        let mut p = ClassPolicy::default();
+        p.sparse_budget = 0.0;
+        assert!(p.validate().is_err());
+        let mut p = ClassPolicy::default();
+        p.multimodal_retain = 1.5;
+        assert!(p.validate().is_err());
+        let mut p = ClassPolicy::default();
+        p.interactive.ttft_slo_ms = 0.0;
+        assert!(p.validate().is_err());
+        let mut p = ClassPolicy::default();
+        p.aging_ms = f64::NAN;
+        assert!(p.validate().is_err());
+    }
+
+    #[test]
+    fn multimodal_prune_keeps_text_tail_and_is_deterministic() {
+        let prompt: Vec<u8> = (0..64u8).map(|i| i.wrapping_mul(37)).collect();
+        let (a, dropped_a) = prune_multimodal_prompt(&prompt, 24, 16, 0.5);
+        let (b, dropped_b) = prune_multimodal_prompt(&prompt, 24, 16, 0.5);
+        assert_eq!(a, b, "admission pruning must be deterministic");
+        assert_eq!(dropped_a, dropped_b);
+        assert!(dropped_a > 0, "a 0.5 retain must drop tokens");
+        assert_eq!(a.len() + dropped_a, prompt.len());
+        // the text tail (last 24 bytes) survives verbatim
+        assert!(a.ends_with(&prompt[40..]));
+        // pruned segments keep at least the retain fraction's worth
+        assert!(a.len() >= 24 + 12 + 8);
+    }
+
+    #[test]
+    fn multimodal_prune_clamps_oversized_segments() {
+        let prompt = vec![7u8; 10];
+        let (out, dropped) = prune_multimodal_prompt(&prompt, 100, 100, 0.5);
+        assert_eq!(out.len() + dropped, 10);
+        assert!(!out.is_empty());
+        // retain 1.0 is the identity on the visual path
+        let (all, d) = prune_multimodal_prompt(&prompt, 10, 0, 1.0);
+        assert_eq!(all, prompt);
+        assert_eq!(d, 0);
+    }
+}

@@ -11,6 +11,7 @@ use crate::spec_decode::SessionModel;
 use crate::util::Summary;
 use anyhow::Result;
 
+use super::classes::{ClassPolicy, RequestClass};
 use super::paged_exec::{PagedGreedyExecutor, PagedSpecExecutor};
 use super::scheduler::{
     GreedyExecutor, PjrtBatchExecutor, Scheduler, ServeCfg, SpecExecutor, WorkerPool,
@@ -70,6 +71,9 @@ pub struct CompletedRequest {
     /// execution attempts consumed (1 on fault-free runs; 0 for requests
     /// cancelled or shed before their first admission)
     pub attempts: usize,
+    /// workload class the request carried (drives the per-class rows in
+    /// [`ServeReport::class_breakdown`])
+    pub class: RequestClass,
 }
 
 impl CompletedRequest {
@@ -113,6 +117,63 @@ pub struct ServeReport {
     /// batch-occupancy number paged admission is graded on in
     /// `bench_continuous`
     pub mean_in_flight: f64,
+    /// prompt tokens dropped by admission-time multimodal pruning (0
+    /// without a class policy): the KV bytes the pool never charged
+    pub pruned_prompt_tokens: usize,
+    /// prompt prefills routed through the sparse-attention path
+    /// (LongContext class under a class policy)
+    pub sparse_prefills: usize,
+    /// request ids in admission order (re-admissions repeat the id).
+    /// Deterministic on the virtual-clock twin; under `threads: true` it
+    /// records the actual interleaving
+    pub admitted_order: Vec<u64>,
+}
+
+/// Per-class slice of a [`ServeReport`]: outcome tallies, latency
+/// summaries over completed requests, and SLO attainment against a
+/// [`ClassPolicy`].
+#[derive(Clone, Debug)]
+pub struct ClassStats {
+    /// [`RequestClass::name`] this row aggregates
+    pub name: &'static str,
+    pub counts: OutcomeCounts,
+    /// TTFT over completed requests of this class
+    pub ttft: Summary,
+    /// total latency over completed requests of this class
+    pub latency: Summary,
+    /// completed requests whose TTFT met the class `ttft_slo_ms`
+    pub ttft_attained: usize,
+    /// completed requests whose total latency met the class `latency_slo_ms`
+    pub latency_attained: usize,
+}
+
+impl ClassStats {
+    /// Requests this row covers (every terminal outcome).
+    pub fn total(&self) -> usize {
+        self.counts.completed
+            + self.counts.failed
+            + self.counts.deadline_exceeded
+            + self.counts.shed
+    }
+
+    /// Fraction of completed requests meeting the TTFT SLO (1.0 when the
+    /// class completed nothing — vacuous attainment).
+    pub fn ttft_attainment(&self) -> f64 {
+        if self.counts.completed == 0 {
+            1.0
+        } else {
+            self.ttft_attained as f64 / self.counts.completed as f64
+        }
+    }
+
+    /// Fraction of completed requests meeting the latency SLO.
+    pub fn latency_attainment(&self) -> f64 {
+        if self.counts.completed == 0 {
+            1.0
+        } else {
+            self.latency_attained as f64 / self.counts.completed as f64
+        }
+    }
 }
 
 impl ServeReport {
@@ -201,6 +262,50 @@ impl ServeReport {
                 .collect::<Vec<_>>(),
         )
     }
+
+    /// Per-class outcome tallies, latency summaries, and SLO attainment
+    /// under `policy`, one row per [`RequestClass::NAMES`] entry in that
+    /// order (classes with no traffic report zero counts).
+    pub fn class_breakdown(&self, policy: &ClassPolicy) -> Vec<ClassStats> {
+        RequestClass::NAMES
+            .iter()
+            .map(|&name| {
+                let slo = policy.slo_of_name(name);
+                let mut counts = OutcomeCounts::default();
+                let mut ttfts = Vec::new();
+                let mut lats = Vec::new();
+                let (mut ttft_ok, mut lat_ok) = (0usize, 0usize);
+                for c in self.completed.iter().filter(|c| c.class.name() == name) {
+                    match c.outcome {
+                        RequestOutcome::Completed => counts.completed += 1,
+                        RequestOutcome::Failed { .. } => counts.failed += 1,
+                        RequestOutcome::DeadlineExceeded => {
+                            counts.deadline_exceeded += 1
+                        }
+                        RequestOutcome::Shed => counts.shed += 1,
+                    }
+                    if c.is_completed() {
+                        ttfts.push(c.ttft_ms);
+                        lats.push(c.total_ms);
+                        if c.ttft_ms <= slo.ttft_slo_ms {
+                            ttft_ok += 1;
+                        }
+                        if c.total_ms <= slo.latency_slo_ms {
+                            lat_ok += 1;
+                        }
+                    }
+                }
+                ClassStats {
+                    name,
+                    counts,
+                    ttft: Summary::of(&ttfts),
+                    latency: Summary::of(&lats),
+                    ttft_attained: ttft_ok,
+                    latency_attained: lat_ok,
+                }
+            })
+            .collect()
+    }
 }
 
 pub struct ServingEngine;
@@ -235,7 +340,12 @@ impl ServingEngine {
             Some((d, gamma)) => {
                 WorkerPool::run(requests, |_| SpecExecutor::new(d, target, gamma), cfg, seed)
             }
-            None => WorkerPool::run(requests, |_| GreedyExecutor::new(target), cfg, seed),
+            None => WorkerPool::run(
+                requests,
+                |_| GreedyExecutor::new(target).with_class_policy(cfg.classes.clone()),
+                cfg,
+                seed,
+            ),
         }
     }
 
@@ -259,13 +369,19 @@ impl ServingEngine {
         match draft {
             Some((d, gamma)) => WorkerPool::run(
                 requests,
-                |w| PagedSpecExecutor::new(d, target, gamma, bt, budgets[w]),
+                |w| {
+                    PagedSpecExecutor::new(d, target, gamma, bt, budgets[w])
+                        .with_class_policy(cfg.classes.clone())
+                },
                 cfg,
                 seed,
             ),
             None => WorkerPool::run(
                 requests,
-                |w| PagedGreedyExecutor::new(target, bt, budgets[w]),
+                |w| {
+                    PagedGreedyExecutor::new(target, bt, budgets[w])
+                        .with_class_policy(cfg.classes.clone())
+                },
                 cfg,
                 seed,
             ),
@@ -319,6 +435,7 @@ mod tests {
                 max_new_tokens: 10,
                 arrival_ms: i as f64 * 2.0,
                 deadline_ms: None,
+                class: Default::default(),
             })
             .collect()
     }

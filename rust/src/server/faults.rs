@@ -303,6 +303,10 @@ impl<E: StepExecutor> StepExecutor for FaultInjector<E> {
         self.pending_stall_ms = 0.0;
         s
     }
+
+    fn sparse_prefills(&self) -> usize {
+        self.inner.sparse_prefills()
+    }
 }
 
 #[cfg(test)]
@@ -358,6 +362,7 @@ mod tests {
             max_new_tokens: max_new,
             arrival_ms: 0.0,
             deadline_ms: None,
+            class: Default::default(),
         }
     }
 

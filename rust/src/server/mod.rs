@@ -13,13 +13,15 @@
 //! [`RequestOutcome`]. `server/faults.rs` provides the deterministic
 //! [`FaultInjector`] chaos harness behind `ServeCfg::fault`.
 
+pub mod classes;
 pub mod engine;
 pub mod faults;
 pub mod paged_exec;
 pub mod scheduler;
 
+pub use classes::{prune_multimodal_prompt, ClassPolicy, ClassSlo, RequestClass};
 pub use engine::{
-    CompletedRequest, OutcomeCounts, RequestOutcome, ServeReport, ServingEngine,
+    ClassStats, CompletedRequest, OutcomeCounts, RequestOutcome, ServeReport, ServingEngine,
 };
 pub use faults::{CrashPoint, FaultInjector, FaultPlan, WorkerCrash};
 pub use paged_exec::{PagedGreedyExecutor, PagedModel, PagedSession, PagedSpecExecutor};

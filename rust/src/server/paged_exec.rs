@@ -31,6 +31,7 @@ use crate::util::Rng;
 use anyhow::Result;
 use std::sync::{Arc, Mutex};
 
+use super::classes::ClassPolicy;
 use super::scheduler::{StepEvent, StepExecutor, StepFault};
 
 /// A transformer plus the block pool its paged sessions draw from —
@@ -141,18 +142,21 @@ impl<'a> DecodeSession<PagedModel<'a>> for PagedSession {
 // Victim selection, shared by both paged executors
 // ─────────────────────────────────────────────────────────────────────
 
-/// Index of the preemption victim among `(id, generated, preempted)`
-/// candidates: lowest progress first (least work lost), youngest (highest
-/// index) on ties — skipping the blocked slot itself, already-preempted
+/// Index of the preemption victim among `(id, priority, generated,
+/// preempted)` candidates: lowest class priority first (SLO-aware — a
+/// Batch request is evicted before an Interactive one; without a class
+/// policy every priority is 0 and the tie-break below decides alone),
+/// then lowest progress (least work lost), youngest (highest index) on
+/// full ties — skipping the blocked slot itself, already-preempted
 /// slots, and any slot with a terminal (finished/faulted) event this
 /// round, whose retirement the scheduler has already been promised.
 fn pick_victim(
-    slots: &[(u64, usize, bool)],
+    slots: &[(u64, u8, usize, bool)],
     self_id: u64,
     events: &[StepEvent],
 ) -> Option<usize> {
-    let mut best: Option<(usize, usize)> = None;
-    for (i, &(id, generated, preempted)) in slots.iter().enumerate() {
+    let mut best: Option<(usize, u8, usize)> = None;
+    for (i, &(id, priority, generated, preempted)) in slots.iter().enumerate() {
         if id == self_id || preempted {
             continue;
         }
@@ -161,13 +165,13 @@ fn pick_victim(
         }
         let better = match best {
             None => true,
-            Some((_, bg)) => generated <= bg,
+            Some((_, bp, bg)) => (priority, generated) <= (bp, bg),
         };
         if better {
-            best = Some((i, generated));
+            best = Some((i, priority, generated));
         }
     }
-    best.map(|(i, _)| i)
+    best.map(|(i, _, _)| i)
 }
 
 // ─────────────────────────────────────────────────────────────────────
@@ -186,6 +190,8 @@ struct PagedGreedySlot {
     /// a Preempted event for this slot is already in flight; it takes no
     /// further rounds and its retirement is imminent
     preempted: bool,
+    /// class priority (0 without a class policy) — the leading victim key
+    priority: u8,
 }
 
 /// Greedy decoding over paged sessions — output bit-identical to
@@ -195,6 +201,8 @@ pub struct PagedGreedyExecutor<'a> {
     model: PagedModel<'a>,
     sampler: Sampler,
     slots: Vec<PagedGreedySlot>,
+    /// class policy: preemption victims ordered by (priority, progress)
+    classes: Option<ClassPolicy>,
 }
 
 impl<'a> PagedGreedyExecutor<'a> {
@@ -203,7 +211,14 @@ impl<'a> PagedGreedyExecutor<'a> {
             model: PagedModel::new(model, block_tokens, budget_bytes),
             sampler: Sampler::Greedy,
             slots: Vec::new(),
+            classes: None,
         }
+    }
+
+    /// Enable SLO-aware victim selection (no-op when `None`).
+    pub fn with_class_policy(mut self, classes: Option<ClassPolicy>) -> Self {
+        self.classes = classes;
+        self
     }
 
     pub fn pool(&self) -> &Arc<Mutex<BlockPool>> {
@@ -354,6 +369,10 @@ impl StepExecutor for PagedGreedyExecutor<'_> {
             generated: 0,
             last: None,
             preempted: false,
+            priority: self
+                .classes
+                .as_ref()
+                .map_or(0, |p| p.priority_of(&req.class)),
         });
         Ok(())
     }
@@ -375,10 +394,10 @@ impl StepExecutor for PagedGreedyExecutor<'_> {
                     // retry; no victim left → overcommit rather than
                     // deadlock
                     Err(_) => {
-                        let meta: Vec<(u64, usize, bool)> = self
+                        let meta: Vec<(u64, u8, usize, bool)> = self
                             .slots
                             .iter()
-                            .map(|s| (s.id, s.generated, s.preempted))
+                            .map(|s| (s.id, s.priority, s.generated, s.preempted))
                             .collect();
                         match pick_victim(&meta, self.slots[si].id, &events) {
                             Some(vi) => {
@@ -422,6 +441,8 @@ struct PagedSpecSlot {
     /// at least one verify step has committed (its prompt pages are held)
     started: bool,
     preempted: bool,
+    /// class priority (0 without a class policy) — the leading victim key
+    priority: u8,
 }
 
 /// Speculative draft+target decoding over paged sessions — output
@@ -436,6 +457,8 @@ pub struct PagedSpecExecutor<'a> {
     gamma: usize,
     sampler: Sampler,
     slots: Vec<PagedSpecSlot>,
+    /// class policy: preemption victims ordered by (priority, progress)
+    classes: Option<ClassPolicy>,
 }
 
 impl<'a> PagedSpecExecutor<'a> {
@@ -460,7 +483,14 @@ impl<'a> PagedSpecExecutor<'a> {
             gamma,
             sampler: Sampler::Greedy,
             slots: Vec::new(),
+            classes: None,
         }
+    }
+
+    /// Enable SLO-aware victim selection (no-op when `None`).
+    pub fn with_class_policy(mut self, classes: Option<ClassPolicy>) -> Self {
+        self.classes = classes;
+        self
     }
 
     fn limit(&self) -> usize {
@@ -602,6 +632,10 @@ impl StepExecutor for PagedSpecExecutor<'_> {
             tsess: self.target.new_session(),
             started: false,
             preempted: false,
+            priority: self
+                .classes
+                .as_ref()
+                .map_or(0, |p| p.priority_of(&req.class)),
         });
         Ok(())
     }
@@ -629,10 +663,10 @@ impl StepExecutor for PagedSpecExecutor<'_> {
                         break;
                     }
                     Err(_) => {
-                        let meta: Vec<(u64, usize, bool)> = self
+                        let meta: Vec<(u64, u8, usize, bool)> = self
                             .slots
                             .iter()
-                            .map(|s| (s.id, s.generated, s.preempted))
+                            .map(|s| (s.id, s.priority, s.generated, s.preempted))
                             .collect();
                         match pick_victim(&meta, self.slots[si].id, &events) {
                             Some(vi) => {
@@ -683,6 +717,7 @@ mod tests {
                 max_new_tokens: max_new,
                 arrival_ms: i as f64,
                 deadline_ms: None,
+                class: Default::default(),
             })
             .collect()
     }

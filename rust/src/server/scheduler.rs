@@ -57,6 +57,17 @@
 //! injected by wrapping every executor in a [`FaultInjector`] when
 //! [`ServeCfg::fault`] is set (see `server/faults.rs`).
 //!
+//! SLO-aware serving: when [`ServeCfg::classes`] is set, the queue is no
+//! longer strictly FIFO — the entry with the highest effective class
+//! priority is seated next (FIFO within a class, and an entry that has
+//! waited past the policy's `aging_ms` competes at the maximum priority,
+//! so Batch can never starve). Admission also routes compression by
+//! class: LongContext prompts prefill through the STeM sparse-attention
+//! path, and Multimodal prompts are token-pruned before they ever reach
+//! the queue, so KV admission bytes are charged for the pruned prompt.
+//! Without `classes` every queue decision is byte-identical to the
+//! class-blind scheduler.
+//!
 //! [`KvCache`]: crate::models::KvCache
 //! [`RequestOutcome`]: super::engine::RequestOutcome
 //! [`FaultInjector`]: super::faults::FaultInjector
@@ -72,6 +83,7 @@ use std::collections::{HashMap, VecDeque};
 use std::sync::{Condvar, Mutex};
 use std::time::{Duration, Instant};
 
+use super::classes::{prune_multimodal_prompt, ClassPolicy, RequestClass};
 use super::engine::{CompletedRequest, RequestOutcome, ServeReport};
 use super::faults::{FaultInjector, FaultPlan, WorkerCrash};
 
@@ -133,10 +145,12 @@ pub struct ServeCfg {
     /// and rejected at config validation.
     pub workers: usize,
     /// Pool-wide default completion deadline in milliseconds from arrival
-    /// on the virtual clock, applied to requests without their own
-    /// [`TokenRequest::deadline_ms`]. Past-deadline requests are cancelled
-    /// between rounds (outcome `DeadlineExceeded`, KV evicted, partial
-    /// output kept). `None` = no deadline; a non-positive value is
+    /// on the virtual clock. Precedence (most specific wins): a request's
+    /// own [`TokenRequest::deadline_ms`] > the per-class
+    /// [`ClassSlo::deadline_ms`](super::ClassSlo) default (when `classes`
+    /// is configured) > this pool-wide value. Past-deadline requests are
+    /// cancelled between rounds (outcome `DeadlineExceeded`, KV evicted,
+    /// partial output kept). `None` = no deadline; a non-positive value is
     /// rejected loudly at validation and at [`WorkerPool::run`].
     pub deadline_ms: Option<f64>,
     /// How many times a faulted request may re-enter the shared queue
@@ -167,6 +181,14 @@ pub struct ServeCfg {
     /// determinism contract). Threaded mode is what `bench_sharded`'s
     /// wall-clock scaling numbers measure.
     pub threads: bool,
+    /// SLO-aware serving policy (`serve.classes:`): per-class SLOs +
+    /// priorities drive class-priority admission over the shared queue
+    /// (with an aging/starvation bound), per-class default deadlines,
+    /// priority-aware preemption, and admission-time compression routing
+    /// (LongContext → STeM sparse prefill, Multimodal → token-pruned
+    /// prompts). `None` = class-blind FIFO, byte-identical to the
+    /// pre-class scheduler.
+    pub classes: Option<ClassPolicy>,
 }
 
 impl Default for ServeCfg {
@@ -183,6 +205,7 @@ impl Default for ServeCfg {
             fault: None,
             kv_block_tokens: None,
             threads: false,
+            classes: None,
         }
     }
 }
@@ -254,6 +277,12 @@ impl ServeCfg {
     /// Serve from paged KV with `block_tokens`-token pages.
     pub fn with_block_tokens(mut self, block_tokens: usize) -> Self {
         self.kv_block_tokens = Some(block_tokens);
+        self
+    }
+
+    /// Enable SLO-aware serving under `policy` (see [`ClassPolicy`]).
+    pub fn with_classes(mut self, policy: ClassPolicy) -> Self {
+        self.classes = Some(policy);
         self
     }
 
@@ -438,6 +467,12 @@ pub trait StepExecutor {
     fn take_stall_ms(&mut self) -> f64 {
         0.0
     }
+    /// Cumulative count of prompt prefills this executor routed through
+    /// the sparse-attention path (class-based compression routing).
+    /// Default: executors without a sparse route report 0.
+    fn sparse_prefills(&self) -> usize {
+        0
+    }
 }
 
 struct LiveReq {
@@ -464,10 +499,42 @@ struct QueuedReq {
     ready_ms: f64,
 }
 
-/// Absolute virtual-time deadline for `req` under `cfg`: the per-request
-/// override wins, else the pool-wide default; measured from arrival.
+/// Absolute virtual-time deadline for `req` under `cfg`. Precedence,
+/// most specific wins: the per-request override, then the per-class
+/// default (when `serve.classes:` is configured), then the pool-wide
+/// `serve.deadline_ms`; measured from arrival.
 fn deadline_abs_of(req: &TokenRequest, cfg: &ServeCfg) -> Option<f64> {
-    req.deadline_ms.or(cfg.deadline_ms).map(|d| req.arrival_ms + d)
+    req.deadline_ms
+        .or_else(|| {
+            cfg.classes
+                .as_ref()
+                .and_then(|p| p.slo_of(&req.class).deadline_ms)
+        })
+        .or(cfg.deadline_ms)
+        .map(|d| req.arrival_ms + d)
+}
+
+/// Index into `queue` of the entry admission should seat next. Without a
+/// class policy this is always 0 — strict FIFO, byte-identical to the
+/// class-blind scheduler. With one, the entry with the highest effective
+/// priority wins and ties keep queue order (strict FIFO within a class);
+/// an entry that has waited at least `aging_ms` since its arrival (as of
+/// `now_ms`, or its own ready time if later) competes at the pool's
+/// maximum priority, which bounds starvation of low-priority classes.
+fn pick_queued(queue: &VecDeque<QueuedReq>, cfg: &ServeCfg, now_ms: f64) -> usize {
+    let Some(pol) = cfg.classes.as_ref() else { return 0 };
+    let pmax = pol.max_priority();
+    let mut best = 0usize;
+    let mut best_p = -1i32;
+    for (i, q) in queue.iter().enumerate() {
+        let waited = now_ms.max(q.ready_ms) - q.req.arrival_ms;
+        let p = if waited >= pol.aging_ms { pmax } else { pol.priority_of(&q.req.class) };
+        if i32::from(p) > best_p {
+            best_p = i32::from(p);
+            best = i;
+        }
+    }
+    best
 }
 
 /// Exponential virtual-time backoff before attempt `failed_attempt + 1`,
@@ -509,6 +576,10 @@ struct PoolLedger {
     /// consecutive preemptions since without any pool-wide completion) —
     /// the no-progress detector behind [`MAX_NO_PROGRESS_PREEMPT_CYCLES`]
     preempt_cycles: HashMap<u64, (usize, usize)>,
+    /// request ids in the order admission seated them (re-admissions
+    /// repeat the id). Deterministic in the virtual-clock twin; in the
+    /// threaded pool it reflects the actual thread interleaving.
+    admitted_order: Vec<u64>,
 }
 
 /// Everything the threaded pool shares behind its mutex: the FIFO queue,
@@ -527,6 +598,9 @@ struct ThreadShared {
     clocks: Vec<f64>,
     /// per-worker peak resident KV bytes
     worker_peaks: Vec<usize>,
+    /// per-worker cumulative `executor.sparse_prefills()` as of its last
+    /// state change — summed into the report at pool teardown
+    sparse_prefills: Vec<usize>,
     /// running sum of `cached_live_bytes`
     pool_live_bytes: usize,
     peak_kv_bytes: usize,
@@ -622,23 +696,46 @@ impl WorkerPool {
     /// and the OS-thread pool; both produce identical per-request outputs
     /// and terminal outcome kinds.
     pub fn run<E: StepExecutor + Send, F: FnMut(usize) -> E>(
-        requests: Vec<TokenRequest>,
+        mut requests: Vec<TokenRequest>,
         mut make_executor: F,
         cfg: &ServeCfg,
         seed: u64,
     ) -> Result<ServeReport> {
+        Self::validate_cfg(cfg)?;
+        // ── admission-time compression routing: Multimodal prompts are
+        // token-pruned (IDPruner for the visual segment, SAMP for the
+        // audio segment) before they ever reach the queue, so every
+        // downstream byte count — projected, admission, live KV — is
+        // charged for the pruned prompt, not the raw one.
+        let mut pruned_prompt_tokens = 0usize;
+        if let Some(pol) = &cfg.classes {
+            for r in requests.iter_mut() {
+                if let RequestClass::Multimodal { visual_tokens, audio_tokens } = r.class {
+                    let (kept, dropped) = prune_multimodal_prompt(
+                        &r.prompt,
+                        visual_tokens,
+                        audio_tokens,
+                        pol.multimodal_retain,
+                    );
+                    r.prompt = kept;
+                    pruned_prompt_tokens += dropped;
+                }
+            }
+        }
         match cfg.fault.clone() {
             Some(plan) => {
                 plan.validate(cfg.workers.max(1))?;
                 let wrapped = move |w| FaultInjector::new(make_executor(w), plan.clone(), w);
                 if cfg.threads {
-                    Self::run_threaded(requests, wrapped, cfg, seed)
+                    Self::run_threaded(requests, wrapped, cfg, seed, pruned_prompt_tokens)
                 } else {
-                    Self::run_inner(requests, wrapped, cfg, seed)
+                    Self::run_inner(requests, wrapped, cfg, seed, pruned_prompt_tokens)
                 }
             }
-            None if cfg.threads => Self::run_threaded(requests, make_executor, cfg, seed),
-            None => Self::run_inner(requests, make_executor, cfg, seed),
+            None if cfg.threads => {
+                Self::run_threaded(requests, make_executor, cfg, seed, pruned_prompt_tokens)
+            }
+            None => Self::run_inner(requests, make_executor, cfg, seed, pruned_prompt_tokens),
         }
     }
 
@@ -647,6 +744,7 @@ impl WorkerPool {
         mut make_executor: F,
         cfg: &ServeCfg,
         seed: u64,
+        pruned_prompt_tokens: usize,
     ) -> Result<ServeReport> {
         Self::validate_cfg(cfg)?;
         let max_attempts = cfg.max_retries.saturating_add(1);
@@ -700,7 +798,24 @@ impl WorkerPool {
                     best_busy = Some(i);
                 }
             }
-            let stealer = Self::pick_stealer(&workers, queue.front(), cfg.policy);
+            // ── class-priority admission: with a class policy, the entry
+            // admission seats next is the highest effective priority, not
+            // the FIFO head. Aging is judged against the pool's frontier
+            // (the earliest clock any surviving worker could steal at).
+            // Static batching keeps FIFO chunks — class selection would
+            // tear the chunk apart.
+            let head_idx = match cfg.policy {
+                AdmissionPolicy::Static => 0,
+                _ => {
+                    let now_floor = workers
+                        .iter()
+                        .filter(|w| !w.dead)
+                        .map(|w| w.clock_ms)
+                        .fold(f64::INFINITY, f64::min);
+                    pick_queued(&queue, cfg, now_floor)
+                }
+            };
+            let stealer = Self::pick_stealer(&workers, queue.get(head_idx), cfg.policy);
 
             let act = match (best_busy, stealer) {
                 (None, None) => break, // queue drained, every worker idle
@@ -721,12 +836,12 @@ impl WorkerPool {
                     // deadline guard: a head that would start at or past
                     // its deadline is cancelled instead of admitted, so no
                     // KV or compute is spent on a lost cause
-                    let expired_head = queue.front().map_or(false, |q| {
+                    let expired_head = queue.get(head_idx).map_or(false, |q| {
                         let start = workers[s].clock_ms.max(q.ready_ms);
                         deadline_abs_of(&q.req, cfg).map_or(false, |d| start >= d)
                     });
                     if expired_head {
-                        if let Some(q) = queue.pop_front() {
+                        if let Some(q) = queue.remove(head_idx) {
                             let now = workers[s].clock_ms.max(q.ready_ms);
                             let wait = (now - q.req.arrival_ms).max(0.0);
                             ledger.completed.push(CompletedRequest {
@@ -737,17 +852,21 @@ impl WorkerPool {
                                 output: Vec::new(),
                                 outcome: RequestOutcome::DeadlineExceeded,
                                 attempts: q.attempt - 1,
+                                class: q.req.class,
                             });
                         }
                         continue;
                     }
                     match cfg.policy {
-                        AdmissionPolicy::Static => {
-                            Self::admit_static_chunk(&mut workers[s], &mut queue, cfg)?
-                        }
+                        AdmissionPolicy::Static => Self::admit_static_chunk(
+                            &mut workers[s],
+                            &mut queue,
+                            cfg,
+                            &mut ledger,
+                        )?,
                         _ => {
                             let w = &mut workers[s];
-                            let Some(q) = queue.pop_front() else {
+                            let Some(q) = queue.remove(head_idx) else {
                                 bail!(
                                     "scheduler invariant broken: worker {s} designated \
                                      stealer with an empty queue"
@@ -759,6 +878,7 @@ impl WorkerPool {
                             if q.ready_ms > w.clock_ms {
                                 w.clock_ms = q.ready_ms;
                             }
+                            ledger.admitted_order.push(q.req.id);
                             Self::admit_one(w, q, cfg)?;
                         }
                     }
@@ -865,12 +985,18 @@ impl WorkerPool {
             } else {
                 in_flight_sum as f64 / rounds as f64
             },
+            pruned_prompt_tokens,
+            sparse_prefills: workers.iter().map(|w| w.executor.sparse_prefills()).sum(),
+            admitted_order: ledger.admitted_order,
         })
     }
 
     /// Config validation shared by both pool modes.
     fn validate_cfg(cfg: &ServeCfg) -> Result<()> {
         let n_workers = cfg.workers.max(1);
+        if let Some(policy) = &cfg.classes {
+            policy.validate()?;
+        }
         if let Some(d) = cfg.deadline_ms {
             if d.is_nan() || d <= 0.0 {
                 bail!(
@@ -1013,6 +1139,7 @@ impl WorkerPool {
                                 ),
                             },
                             attempts: l.attempts,
+                            class: l.req.class,
                         });
                         continue;
                     }
@@ -1046,6 +1173,7 @@ impl WorkerPool {
                             ),
                         },
                         attempts: l.attempts,
+                        class: l.req.class,
                     });
                 }
                 continue;
@@ -1081,6 +1209,7 @@ impl WorkerPool {
                     output: l.output,
                     outcome: RequestOutcome::Completed,
                     attempts: l.attempts,
+                    class: l.req.class,
                 });
             }
         }
@@ -1106,6 +1235,7 @@ impl WorkerPool {
                 output: l.output,
                 outcome: RequestOutcome::DeadlineExceeded,
                 attempts: l.attempts,
+                class: l.req.class,
             });
         }
         Ok(())
@@ -1155,6 +1285,7 @@ impl WorkerPool {
                         ),
                     },
                     attempts: l.attempts,
+                    class: l.req.class,
                 });
             }
         }
@@ -1175,6 +1306,7 @@ impl WorkerPool {
                 output: Vec::new(),
                 outcome: RequestOutcome::Shed,
                 attempts: q.attempt - 1,
+                class: q.req.class,
             });
         }
     }
@@ -1260,6 +1392,7 @@ impl WorkerPool {
         mut make_executor: F,
         cfg: &ServeCfg,
         seed: u64,
+        pruned_prompt_tokens: usize,
     ) -> Result<ServeReport>
     where
         E: StepExecutor + Send,
@@ -1287,6 +1420,7 @@ impl WorkerPool {
                 cached_live_bytes: vec![0; n_workers],
                 clocks: vec![0.0; n_workers],
                 worker_peaks: vec![0; n_workers],
+                sparse_prefills: vec![0; n_workers],
                 pool_live_bytes: 0,
                 peak_kv_bytes: 0,
                 rounds: 0,
@@ -1337,6 +1471,9 @@ impl WorkerPool {
             } else {
                 shared.in_flight_sum as f64 / shared.rounds as f64
             },
+            pruned_prompt_tokens,
+            sparse_prefills: shared.sparse_prefills.iter().sum(),
+            admitted_order: shared.ledger.admitted_order,
         })
     }
 
@@ -1366,16 +1503,22 @@ impl WorkerPool {
                 cv.notify_all();
                 return;
             }
-            // ── admission: strict FIFO from the shared queue ─────────
+            // ── admission from the shared queue: strict FIFO without a
+            // class policy, class-priority selection with one (aging
+            // judged on this worker's clock) ──────────────────────────
             loop {
+                let head_idx = match cfg.policy {
+                    AdmissionPolicy::Static => 0,
+                    _ => pick_queued(&guard.queue, cfg, w.clock_ms),
+                };
                 // deadline guard: a head that would start at or past its
                 // deadline is cancelled instead of admitted (twin rule)
-                let expired = guard.queue.front().map_or(false, |q| {
+                let expired = guard.queue.get(head_idx).map_or(false, |q| {
                     let start = w.clock_ms.max(q.ready_ms);
                     deadline_abs_of(&q.req, cfg).map_or(false, |d| start >= d)
                 });
                 if expired {
-                    if let Some(q) = guard.queue.pop_front() {
+                    if let Some(q) = guard.queue.remove(head_idx) {
                         let now = w.clock_ms.max(q.ready_ms);
                         let wait = (now - q.req.arrival_ms).max(0.0);
                         guard.ledger.completed.push(CompletedRequest {
@@ -1386,12 +1529,13 @@ impl WorkerPool {
                             output: Vec::new(),
                             outcome: RequestOutcome::DeadlineExceeded,
                             attempts: q.attempt - 1,
+                            class: q.req.class,
                         });
                         guard.idle_spins = 0;
                     }
                     continue;
                 }
-                let admissible = match guard.queue.front() {
+                let admissible = match guard.queue.get(head_idx) {
                     None => false,
                     Some(head) => Self::has_room(&w, head, cfg.policy),
                 };
@@ -1400,9 +1544,13 @@ impl WorkerPool {
                 }
                 match cfg.policy {
                     AdmissionPolicy::Static => {
-                        if let Err(e) =
-                            Self::admit_static_chunk(&mut w, &mut guard.queue, cfg)
-                        {
+                        let sh = &mut *guard;
+                        if let Err(e) = Self::admit_static_chunk(
+                            &mut w,
+                            &mut sh.queue,
+                            cfg,
+                            &mut sh.ledger,
+                        ) {
                             guard.fatal = Some(e);
                             guard.done = true;
                             cv.notify_all();
@@ -1410,12 +1558,13 @@ impl WorkerPool {
                         }
                     }
                     _ => {
-                        let Some(q) = guard.queue.pop_front() else { break };
+                        let Some(q) = guard.queue.remove(head_idx) else { break };
                         // idle/earliest-start jump, straight to the ready
                         // time this worker is about to seat
                         if q.ready_ms > w.clock_ms {
                             w.clock_ms = q.ready_ms;
                         }
+                        guard.ledger.admitted_order.push(q.req.id);
                         if let Err(e) = Self::admit_one(&mut w, q, cfg) {
                             guard.fatal = Some(e);
                             guard.done = true;
@@ -1485,6 +1634,7 @@ impl WorkerPool {
                             guard.pool_live_bytes - guard.cached_live_bytes[i] + now_bytes;
                         guard.cached_live_bytes[i] = now_bytes;
                         guard.live_counts[i] = w.live.len();
+                        guard.sparse_prefills[i] = w.executor.sparse_prefills();
                         guard.idle_spins = 0;
                         // wake idle peers: retirements may have freed
                         // room, requeues may have repopulated the head
@@ -1495,6 +1645,7 @@ impl WorkerPool {
                         guard.pool_live_bytes -= guard.cached_live_bytes[i];
                         guard.cached_live_bytes[i] = 0;
                         guard.live_counts[i] = 0;
+                        guard.sparse_prefills[i] = w.executor.sparse_prefills();
                         let sh = &mut *guard;
                         let msg = Self::contain_crash(
                             i,
@@ -1661,6 +1812,7 @@ impl WorkerPool {
         w: &mut PoolWorker<E>,
         queue: &mut VecDeque<QueuedReq>,
         cfg: &ServeCfg,
+        ledger: &mut PoolLedger,
     ) -> Result<()> {
         let mut k = 0usize;
         let mut sum = 0usize;
@@ -1687,6 +1839,7 @@ impl WorkerPool {
             let Some(q) = queue.pop_front() else {
                 bail!("scheduler invariant broken: static chunk outran the queue");
             };
+            ledger.admitted_order.push(q.req.id);
             Self::admit_one(w, q, cfg)?;
         }
         Ok(())
@@ -1705,6 +1858,9 @@ struct GreedySlot<T: SessionModel> {
     /// never start (empty prompt / no context room) and finishes empty
     remaining: usize,
     last: Option<Vec<f32>>,
+    /// route the prompt prefill through the sparse-attention path
+    /// (LongContext class under a class policy); decode is untouched
+    sparse: bool,
 }
 
 /// Greedy KV-session decoding: per request, one prompt prefill then one
@@ -1714,11 +1870,27 @@ pub struct GreedyExecutor<'a, T: SessionModel> {
     model: &'a T,
     sampler: Sampler,
     slots: Vec<GreedySlot<T>>,
+    /// class policy for admission-time compression routing: LongContext
+    /// prompts prefill through the STeM-masked sparse path
+    classes: Option<ClassPolicy>,
+    sparse_prefills: usize,
 }
 
 impl<'a, T: SessionModel> GreedyExecutor<'a, T> {
     pub fn new(model: &'a T) -> Self {
-        GreedyExecutor { model, sampler: Sampler::Greedy, slots: Vec::new() }
+        GreedyExecutor {
+            model,
+            sampler: Sampler::Greedy,
+            slots: Vec::new(),
+            classes: None,
+            sparse_prefills: 0,
+        }
+    }
+
+    /// Enable class-based compression routing (no-op when `None`).
+    pub fn with_class_policy(mut self, classes: Option<ClassPolicy>) -> Self {
+        self.classes = classes;
+        self
     }
 
     /// Most tokens this request's session can come to hold.
@@ -1750,6 +1922,9 @@ impl<T: SessionModel> StepExecutor for GreedyExecutor<'_, T> {
             sess: self.model.new_session_bounded(self.peak_tokens(req)),
             remaining: budget,
             last: None,
+            sparse: self.classes.is_some()
+                && matches!(req.class, RequestClass::LongContext)
+                && req.prompt.len() > 1,
         });
         Ok(())
     }
@@ -1770,11 +1945,26 @@ impl<T: SessionModel> StepExecutor for GreedyExecutor<'_, T> {
                 });
                 continue;
             }
-            // Prefill state: the first round feeds the whole prompt.
-            // Per-slot errors are contained as request-level faults — one
-            // poisoned request must not take down the batch.
+            // Prefill state: the first round feeds the whole prompt —
+            // through the STeM-masked sparse path for LongContext slots
+            // whose session supports it (prefill-compute savings; decode
+            // stays dense). Per-slot errors are contained as
+            // request-level faults — one poisoned request must not take
+            // down the batch.
             if slot.last.is_none() {
-                match slot.sess.extend(model, &slot.prompt) {
+                let fed = if slot.sparse && slot.sess.sparse_prefill_capable() {
+                    let pol = self.classes.as_ref().expect("sparse slot implies a policy");
+                    self.sparse_prefills += 1;
+                    slot.sess.extend_sparse(
+                        model,
+                        &slot.prompt,
+                        pol.sparse_block,
+                        pol.sparse_budget,
+                    )
+                } else {
+                    slot.sess.extend(model, &slot.prompt)
+                };
+                match fed {
                     Ok(mut rows) => slot.last = rows.pop(),
                     Err(e) => {
                         events.push(StepEvent::faulted(
@@ -1858,6 +2048,10 @@ impl<T: SessionModel> StepExecutor for GreedyExecutor<'_, T> {
 
     fn live_bytes(&self) -> usize {
         self.slots.iter().map(|s| s.sess.kv_bytes()).sum()
+    }
+
+    fn sparse_prefills(&self) -> usize {
+        self.sparse_prefills
     }
 }
 
@@ -2123,6 +2317,7 @@ mod tests {
                 max_new_tokens: max_new,
                 arrival_ms: i as f64 * gap_ms,
                 deadline_ms: None,
+                class: Default::default(),
             })
             .collect()
     }

@@ -78,6 +78,25 @@ pub trait DecodeSession<M: ?Sized> {
     fn kv_bytes(&self) -> usize {
         0
     }
+    /// Feed `tokens` through the sparse-attention prefill route when the
+    /// session supports it (the serving scheduler's LongContext
+    /// compression routing). `block` and `budget` are the STeM mask
+    /// knobs. Default: plain dense `extend` — sessions without a sparse
+    /// path stay correct, just uncompressed.
+    fn extend_sparse(
+        &mut self,
+        model: &M,
+        tokens: &[u8],
+        _block: usize,
+        _budget: f64,
+    ) -> Result<Vec<Vec<f32>>> {
+        self.extend(model, tokens)
+    }
+    /// Whether `extend_sparse` actually routes through a sparse kernel
+    /// (lets the scheduler count genuine sparse prefills, not fallbacks).
+    fn sparse_prefill_capable(&self) -> bool {
+        false
+    }
 }
 
 /// Models that decode incrementally through per-request sessions.
@@ -160,6 +179,28 @@ impl DecodeSession<Transformer> for KvSession {
 
     fn kv_bytes(&self) -> usize {
         self.cache.bytes()
+    }
+
+    fn extend_sparse(
+        &mut self,
+        model: &Transformer,
+        tokens: &[u8],
+        block: usize,
+        budget: f64,
+    ) -> Result<Vec<Vec<f32>>> {
+        // The STeM mask spans the whole sequence, so only a cold-cache
+        // multi-token prefill takes the sparse route; warm extensions
+        // (speculative verify, decode) stay dense.
+        if self.cache.len() == 0 && tokens.len() > 1 {
+            let rows = model.prefill_sparse(&mut self.cache, tokens, block, budget);
+            Ok((0..rows.rows()).map(|i| rows.row(i).to_vec()).collect())
+        } else {
+            self.extend(model, tokens)
+        }
+    }
+
+    fn sparse_prefill_capable(&self) -> bool {
+        true
     }
 }
 

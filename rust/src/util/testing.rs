@@ -56,6 +56,7 @@ pub fn fixture_requests(corpus: &[u8], n: usize, max_new: usize) -> Vec<TokenReq
             max_new_tokens: if i % 2 == 0 { max_new } else { max_new / 3 + 1 },
             arrival_ms: i as f64 * 0.5,
             deadline_ms: None,
+            class: Default::default(),
         })
         .collect()
 }

@@ -7,8 +7,11 @@
 
 use angelslim::config::SlimConfig;
 use angelslim::coordinator::{PassRegistry, SlimFactory};
-use angelslim::data::TokenRequest;
-use angelslim::server::{GreedyExecutor, PagedGreedyExecutor, ServeCfg, StepExecutor};
+use angelslim::data::{markov_corpus, RequestGen, TokenRequest};
+use angelslim::models::Transformer;
+use angelslim::server::{
+    GreedyExecutor, PagedGreedyExecutor, ServeCfg, ServingEngine, StepExecutor,
+};
 use angelslim::util::fixtures::fixture_target;
 
 /// Minimal valid config with an arbitrary `serve:` section appended.
@@ -215,6 +218,38 @@ fn paged_fixture_parses_and_selects_the_paged_path() {
 }
 
 #[test]
+fn slo_fixture_parses_and_serves_a_mixed_class_trace() {
+    let cfg = SlimConfig::from_file("configs/serve_slo_fixture.yaml").unwrap();
+    let policy = cfg.serve.classes.clone().expect("fixture ships a classes block");
+    assert!((policy.aging_ms - 250.0).abs() < 1e-12);
+    assert_eq!(policy.sparse_block, 8);
+    assert!((policy.multimodal_retain - 0.5).abs() < 1e-12);
+    assert_eq!(policy.interactive.priority, 3);
+    assert_eq!(policy.batch.priority, 0);
+    assert_eq!(policy.batch.deadline_ms, Some(120_000.0));
+    policy.validate().unwrap();
+
+    // end to end on the hermetic fixture: the classes block routes
+    // long-context prefills through the sparse path and prunes
+    // multimodal prompts before KV admission
+    let target = fixture_target(5);
+    let mut gen = RequestGen::new(markov_corpus(8192, 3), 13);
+    gen.prompt_len = 6;
+    gen.max_new_tokens = 8;
+    let requests = gen.take_mixed_classes(2, 5, 10.0, 24, 8, 4);
+    let report = ServingEngine::serve_scheduled::<Transformer, _>(
+        requests, &target, None, &cfg.serve, 13,
+    )
+    .unwrap();
+    assert_eq!(report.completed.len(), 10);
+    assert!(report.sparse_prefills > 0, "LongContext must route sparse");
+    assert!(report.pruned_prompt_tokens > 0, "Multimodal must be pruned");
+    let rows = report.class_breakdown(&policy);
+    assert_eq!(rows.len(), 4);
+    assert_eq!(rows.iter().map(|r| r.total()).sum::<usize>(), 10);
+}
+
+#[test]
 fn serve_rejects_invalid_kv_block_tokens() {
     assert!(
         with_serve("  kv_block_tokens: 0\n").is_err(),
@@ -248,6 +283,7 @@ fn paged_admission_needs_only_prompt_pages() {
         max_new_tokens: 16,
         arrival_ms: 0.0,
         deadline_ms: None,
+        class: Default::default(),
     }];
     let peak_need = flat.projected_bytes(&requests[0]);
     let prompt_need = paged.admission_bytes(&requests[0]);
@@ -286,6 +322,7 @@ fn serve_rejects_budget_below_the_smallest_request() {
         max_new_tokens: 8,
         arrival_ms: 0.0,
         deadline_ms: None,
+        class: Default::default(),
     }];
     let need = exec.projected_bytes(&requests[0]);
     assert!(need > 0, "fixture requests project real KV bytes");

@@ -275,6 +275,7 @@ fn randomized_chaos_upholds_terminal_contracts() {
                     max_new_tokens: 1 + rng.below(10),
                     arrival_ms: t,
                     deadline_ms: None,
+                    class: Default::default(),
                 }
             })
             .collect();

@@ -211,6 +211,7 @@ fn serve_batched_kv_matches_sequential() {
                 max_new_tokens: 12,
                 arrival_ms: i as f64,
                 deadline_ms: None,
+                class: Default::default(),
             })
             .collect()
     };

@@ -32,6 +32,7 @@ fn shared_prefix_reqs(n: usize, prompt_len: usize, max_new: usize) -> Vec<TokenR
             max_new_tokens: max_new,
             arrival_ms: 0.0,
             deadline_ms: None,
+            class: Default::default(),
         })
         .collect()
 }
@@ -45,6 +46,7 @@ fn mixed_reqs(n: usize, max_new: usize) -> Vec<TokenRequest> {
             max_new_tokens: if i % 2 == 0 { max_new } else { max_new / 3 + 1 },
             arrival_ms: i as f64 * 0.5,
             deadline_ms: None,
+            class: Default::default(),
         })
         .collect()
 }

@@ -160,6 +160,7 @@ fn randomized_traces_uphold_serving_contracts() {
                     max_new_tokens: 1 + rng.below(10),
                     arrival_ms: t,
                     deadline_ms: None,
+                    class: Default::default(),
                 }
             })
             .collect();

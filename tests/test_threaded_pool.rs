@@ -12,10 +12,11 @@
 //! claim, not a performance one, so nothing here is gated on core count
 //! (the ≥1.5x wall-clock scaling gate lives in `bench_sharded`).
 
-use angelslim::data::TokenRequest;
+use angelslim::data::{RequestGen, TokenRequest};
 use angelslim::models::Transformer;
 use angelslim::server::{
-    FaultPlan, RequestOutcome, ServeCfg, ServeReport, ServingEngine,
+    ClassPolicy, ClassSlo, FaultPlan, RequestClass, RequestOutcome, ServeCfg, ServeReport,
+    ServingEngine,
 };
 use angelslim::util::fixtures::{
     fixture_corpus, fixture_draft, fixture_target, FixtureSpec,
@@ -232,6 +233,218 @@ fn stalled_deadline_cancellations_match_twin() {
             );
         }
     }
+}
+
+/// A class policy whose SLO thresholds are astronomically loose, so the
+/// per-class attainment counters are timing-independent (every completed
+/// request attains both SLOs) and can be compared bit-for-bit across
+/// modes and thread counts.
+fn huge_slo_policy() -> ClassPolicy {
+    let mut p = ClassPolicy::default();
+    for slo in [
+        &mut p.interactive,
+        &mut p.long_context,
+        &mut p.multimodal,
+        &mut p.batch,
+    ] {
+        slo.ttft_slo_ms = 1e12;
+        slo.latency_slo_ms = 1e12;
+    }
+    p
+}
+
+/// Mixed-class chaos trace: the class subsystem composes with fault
+/// injection — per-class terminal outcome kinds, attempt counts, and SLO
+/// counters (under timing-independent thresholds) are bit-identical
+/// between the virtual-clock twin and the threaded pool at 1/2/4
+/// threads, and the compression routing fires identically in both modes.
+#[test]
+fn mixed_class_chaos_outcomes_and_slo_counters_match_twin() {
+    let spec = FixtureSpec::default();
+    let corpus = fixture_corpus(&spec, 8_192, 67);
+    let target = fixture_target(5);
+    let reqs = || {
+        let mut gen = RequestGen::new(corpus.clone(), 7);
+        gen.prompt_len = 6;
+        gen.max_new_tokens = 8;
+        gen.take_mixed_classes(2, 5, 1.0, 24, 8, 4)
+    };
+    let n = reqs().len();
+    let policy = huge_slo_policy();
+    let plan = FaultPlan::default().seeded(29).with_step_errors(0.08).with_nan(0.04);
+
+    for threads in THREAD_COUNTS {
+        let cfg = ServeCfg::continuous(2)
+            .with_workers(threads)
+            .with_retries(2)
+            .with_backoff(0.25)
+            .with_classes(policy.clone())
+            .with_faults(plan.clone());
+        let twin = run(reqs(), &target, &cfg.clone().with_threads(false));
+        let live = run(reqs(), &target, &cfg.with_threads(true));
+        assert_terminal_outcomes(&twin, n, 0);
+        assert_terminal_outcomes(&live, n, 0);
+        let context = format!("mixed-class chaos, {threads} threads");
+        assert_modes_agree(&twin, &live, &context);
+        for (a, b) in twin.completed.iter().zip(&live.completed) {
+            assert_eq!(a.class, b.class, "{context}: request {} class diverged", a.id);
+            assert_eq!(
+                a.attempts, b.attempts,
+                "{context}: request {} attempt count diverged",
+                a.id
+            );
+        }
+        // per-class SLO counters are part of the determinism contract
+        for (t, l) in twin
+            .class_breakdown(&policy)
+            .iter()
+            .zip(&live.class_breakdown(&policy))
+        {
+            assert_eq!(t.name, l.name);
+            assert_eq!(t.counts, l.counts, "{context}: class {} outcome counts", t.name);
+            assert_eq!(
+                t.ttft_attained, l.ttft_attained,
+                "{context}: class {} TTFT attainment",
+                t.name
+            );
+            assert_eq!(
+                t.latency_attained, l.latency_attained,
+                "{context}: class {} latency attainment",
+                t.name
+            );
+        }
+        // routing is schedule-independent: same sparse prefill count and
+        // the same pruned-token total in both modes
+        assert_eq!(twin.sparse_prefills, live.sparse_prefills, "{context}: sparse prefills");
+        assert_eq!(
+            twin.pruned_prompt_tokens, live.pruned_prompt_tokens,
+            "{context}: pruned prompt tokens"
+        );
+        assert!(twin.sparse_prefills > 0, "{context}: LongContext must route sparse");
+        assert!(twin.pruned_prompt_tokens > 0, "{context}: Multimodal must be pruned");
+    }
+}
+
+/// The aging bound is a hard starvation ceiling, pinned from both sides
+/// on the deterministic twin's admission log: with `aging_ms: 0` every
+/// queued request competes at max priority immediately, so admission
+/// degenerates to FIFO and the batch request (first arrival) seats
+/// first; with an astronomically large bound, priorities rule and the
+/// batch request seats after every interactive despite arriving first.
+#[test]
+fn aging_bound_prevents_and_pins_batch_starvation() {
+    let spec = FixtureSpec::default();
+    let corpus = fixture_corpus(&spec, 2_048, 71);
+    let target = fixture_target(5);
+    let reqs = || {
+        let mut v = vec![TokenRequest {
+            id: 0,
+            prompt: corpus[..6].to_vec(),
+            max_new_tokens: 4,
+            arrival_ms: 0.0,
+            deadline_ms: None,
+            class: RequestClass::Batch,
+        }];
+        for i in 1..=3u64 {
+            v.push(TokenRequest {
+                id: i,
+                prompt: corpus[6 * i as usize..6 * i as usize + 6].to_vec(),
+                max_new_tokens: 4,
+                arrival_ms: 0.0,
+                deadline_ms: None,
+                class: RequestClass::Interactive,
+            });
+        }
+        v
+    };
+
+    // one worker, one slot: admissions fully serialize, so the admission
+    // log is the priority order
+    let base = ServeCfg::continuous(1).with_workers(1);
+
+    let mut fifo_policy = huge_slo_policy();
+    fifo_policy.aging_ms = 0.0;
+    let fifo = run(reqs(), &target, &base.clone().with_classes(fifo_policy));
+    assert_eq!(
+        fifo.admitted_order,
+        vec![0, 1, 2, 3],
+        "aging_ms=0: everything competes at max priority, FIFO decides"
+    );
+
+    let mut strict_policy = huge_slo_policy();
+    strict_policy.aging_ms = 1e12;
+    let strict = run(reqs(), &target, &base.with_classes(strict_policy));
+    assert_eq!(
+        strict.admitted_order,
+        vec![1, 2, 3, 0],
+        "un-aged priorities must seat every interactive before batch"
+    );
+    assert_eq!(strict.goodput(), 4, "batch still completes — bounded, not starved");
+}
+
+/// Deadline precedence, pinned end to end: per-request `deadline_ms`
+/// beats the per-class default, which beats the pool-wide
+/// `serve.deadline_ms` (documented on `ServeCfg::deadline_ms`).
+#[test]
+fn deadline_precedence_request_beats_class_beats_pool() {
+    let spec = FixtureSpec::default();
+    let corpus = fixture_corpus(&spec, 2_048, 73);
+    let target = fixture_target(5);
+    let req = |id: u64, class: RequestClass, deadline_ms: Option<f64>| TokenRequest {
+        id,
+        prompt: corpus[id as usize * 7..id as usize * 7 + 6].to_vec(),
+        max_new_tokens: 4,
+        arrival_ms: 0.0,
+        deadline_ms,
+        class,
+    };
+    // every decode round stalls 50 virtual ms, so a sub-ms deadline
+    // always fires and a huge one never does
+    let stall = FaultPlan::default().with_stalls(1.0, 50.0);
+
+    // class default beats the pool-wide deadline: batch carries a huge
+    // class deadline, interactive has none and falls to the tiny pool one
+    let mut policy = huge_slo_policy();
+    policy.batch.deadline_ms = Some(1e9);
+    let r = run(
+        vec![
+            req(0, RequestClass::Batch, None),
+            req(1, RequestClass::Interactive, None),
+        ],
+        &target,
+        &ServeCfg::continuous(4)
+            .with_classes(policy)
+            .with_deadline(0.5)
+            .with_faults(stall.clone()),
+    );
+    assert_eq!(r.completed[0].outcome, RequestOutcome::Completed, "class > pool");
+    assert_eq!(
+        r.completed[1].outcome,
+        RequestOutcome::DeadlineExceeded,
+        "no class deadline -> pool-wide applies"
+    );
+
+    // per-request beats the class default: both batch, tiny class
+    // deadline, one request overrides it with a huge per-request one
+    let mut policy = huge_slo_policy();
+    policy.batch.deadline_ms = Some(0.5);
+    let r = run(
+        vec![
+            req(0, RequestClass::Batch, Some(1e9)),
+            req(1, RequestClass::Batch, None),
+        ],
+        &target,
+        &ServeCfg::continuous(4).with_classes(policy).with_faults(stall),
+    );
+    assert_eq!(r.completed[0].outcome, RequestOutcome::Completed, "request > class");
+    assert_eq!(
+        r.completed[1].outcome,
+        RequestOutcome::DeadlineExceeded,
+        "unset per-request deadline -> class default applies"
+    );
+
+    // sanity: ClassSlo::new leaves the class deadline unset by default
+    assert_eq!(ClassSlo::new(1.0, 2.0, 0).deadline_ms, None);
 }
 
 /// KV admission budgets hold in threaded mode: per-worker shares are
